@@ -1,0 +1,77 @@
+//! Ablations of AdaComp's design choices (DESIGN.md §5):
+//!
+//!   scale-factor  — the soft threshold H = residue + c*dW; paper studied
+//!                   c in 1.5..3.0 and picked 2.0 "for computational ease"
+//!   quantizer     — per-layer scale (paper) vs per-bin scale
+//!   topology      — ring vs parameter server (identical math, different
+//!                   bytes/latency profile)
+//!
+//!   cargo run --release --example ablation [-- --epochs 8]
+
+use adacomp::compress::Kind;
+use adacomp::harness::{report, Workload};
+use adacomp::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&[]);
+    let mut runs = Vec::new();
+
+    println!("== ablation: soft-threshold scale factor ==");
+    let mut t = report::Table::new(&["factor", "test-err %", "rate (paper)", "sent/elem"]);
+    for factor in [1.5f32, 2.0, 2.5, 3.0] {
+        let mut w = Workload::from_args(&args, "cifar_cnn")?;
+        w.cfg.compression.kind = Kind::AdaComp;
+        w.cfg.compression.scale_factor = factor;
+        w.cfg.run_name = format!("ablate-sf{factor}");
+        let rec = w.run()?;
+        let last = rec.epochs.last().unwrap();
+        t.row(vec![
+            format!("{factor}"),
+            format!("{:.2}", rec.final_test_error()),
+            format!("{:.0}x", rec.mean_rate_paper()),
+            format!("{:.5}", last.comp_all.sparsity()),
+        ]);
+        runs.push(rec);
+    }
+    t.print();
+
+    println!("\n== ablation: per-layer vs per-bin quantization scale ==");
+    let mut t = report::Table::new(&["quantizer", "test-err %", "rate (paper)"]);
+    for per_bin in [false, true] {
+        let mut w = Workload::from_args(&args, "cifar_cnn")?;
+        w.cfg.compression.kind = Kind::AdaComp;
+        w.cfg.compression.per_bin_scale = per_bin;
+        w.cfg.run_name = format!("ablate-q-{}", if per_bin { "bin" } else { "layer" });
+        let rec = w.run()?;
+        t.row(vec![
+            if per_bin { "per-bin max" } else { "per-layer mean|gmax| (paper)" }.into(),
+            format!("{:.2}", rec.final_test_error()),
+            format!("{:.0}x", rec.mean_rate_paper()),
+        ]);
+        runs.push(rec);
+    }
+    t.print();
+
+    println!("\n== ablation: topology (identical math, different wire profile) ==");
+    let mut t = report::Table::new(&["topology", "test-err %", "bytes up", "sim comm time"]);
+    for topo in ["ring", "ps"] {
+        let mut w = Workload::from_args(&args, "cifar_cnn")?;
+        w.cfg.compression.kind = Kind::AdaComp;
+        w.cfg.n_learners = 8;
+        w.cfg.batch_per_learner = 16;
+        w.cfg.topology = topo.into();
+        w.cfg.run_name = format!("ablate-topo-{topo}");
+        let rec = w.run()?;
+        t.row(vec![
+            topo.into(),
+            format!("{:.2}", rec.final_test_error()),
+            format!("{}", rec.fabric.bytes_up),
+            format!("{:.3}s", rec.fabric.sim_time_s),
+        ]);
+        runs.push(rec);
+    }
+    t.print();
+
+    report::save_runs("ablation", &runs)?;
+    Ok(())
+}

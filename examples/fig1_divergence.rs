@@ -1,0 +1,63 @@
+//! Fig 1 — why conv layers need a better scheme.
+//!
+//! Three CIFAR-CNN runs (paper Fig 1):
+//!   (a) no compression                                  -> baseline error
+//!   (b) FC compressed with Dryden top-0.3%, conv dense  -> modest degradation
+//!   (c) FC Dryden top-0.3% + conv 1-bit quantization    -> divergence
+//!
+//!   cargo run --release --example fig1_divergence [-- --epochs 20]
+
+use adacomp::compress::Kind;
+use adacomp::harness::{report, Workload};
+use adacomp::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&[]);
+    let mut runs = Vec::new();
+
+    let cases: &[(&str, Kind, Option<Kind>)] = &[
+        ("baseline (no compression)", Kind::None, None),
+        ("FC dryden 0.3%, conv dense", Kind::Dryden, Some(Kind::None)),
+        ("FC dryden 0.3% + conv 1-bit", Kind::Dryden, Some(Kind::OneBit)),
+    ];
+
+    for (name, fc_kind, conv_kind) in cases {
+        let mut w = Workload::from_args(&args, "cifar_cnn")?;
+        w.cfg.run_name = name.to_string();
+        w.cfg.compression.kind = *fc_kind;
+        w.cfg.compression.kind_conv = *conv_kind;
+        w.cfg.compression.topk_fraction = 0.003;
+        println!("== {name} ==");
+        let rec = w.run()?;
+        for e in &rec.epochs {
+            println!(
+                "  epoch {:>3}  loss {:>8.4}  test-err {:>6.2}%",
+                e.epoch, e.train_loss, e.test_error_pct
+            );
+        }
+        runs.push(rec);
+    }
+
+    println!("\nFig 1 summary (paper: 18% baseline, ~20% FC-only, divergence with conv 1-bit):");
+    let mut t = report::Table::new(&["configuration", "final test-err %", "diverged / degraded"]);
+    let base = runs[0].final_test_error();
+    for r in &runs {
+        let verdict = if r.diverged || !r.epochs.iter().all(|e| e.train_loss.is_finite()) {
+            "DIVERGED".to_string()
+        } else if r.final_test_error() > base + 10.0 {
+            "severely degraded".to_string()
+        } else if r.final_test_error() > base + 1.0 {
+            "modest degradation".to_string()
+        } else {
+            "ok".to_string()
+        };
+        t.row(vec![
+            r.name.clone(),
+            format!("{:.2}", r.final_test_error()),
+            verdict,
+        ]);
+    }
+    t.print();
+    report::save_runs("fig1_divergence", &runs)?;
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Fig 2 — convergence curves: baseline vs AdaComp at several learner
+//! counts, plus the paper's stress tests (extreme L_T).
+//!
+//!   cargo run --release --example fig2_convergence -- --model cifar_cnn --learner-counts 1,8
+//!   cargo run --release --example fig2_convergence -- --stress
+//!
+//! Stress test (paper Fig 2a/2b): CIFAR-CNN with L_T=500 everywhere;
+//! AlexNet with conv L_T=800 / FC L_T=8000.
+
+use adacomp::compress::Kind;
+use adacomp::harness::{report, Workload};
+use adacomp::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&["stress"]);
+    let model = args.str_or("model", "cifar_cnn");
+    let mut runs = Vec::new();
+
+    if args.flag("stress") {
+        // paper's "Stress test under Extreme Compression"
+        let cases: Vec<(String, usize, usize)> = if model == "alexnet_s" {
+            vec![("stress conv800/fc8000".into(), 800, 8000)]
+        } else {
+            vec![("stress L_T=500/500".into(), 500, 500)]
+        };
+        for (name, lt_conv, lt_fc) in cases {
+            let mut w = Workload::from_args(&args, &model)?;
+            w.cfg.run_name = format!("{model}-{name}");
+            w.cfg.compression.kind = Kind::AdaComp;
+            w.cfg.compression.lt_conv = lt_conv;
+            w.cfg.compression.lt_fc = lt_fc;
+            println!("== {} ==", w.cfg.run_name);
+            let rec = w.run()?;
+            print_curve(&rec);
+            runs.push(rec);
+        }
+    }
+
+    for learners in args.usize_list_or("learner-counts", &[1, 4, 8]) {
+        for kind in [Kind::None, Kind::AdaComp] {
+            let mut w = Workload::from_args(&args, &model)?;
+            let base_batch = adacomp::harness::defaults_for(&model).batch;
+            w.cfg.n_learners = learners;
+            w.cfg.batch_per_learner = (base_batch / learners).max(1);
+            w.cfg.compression.kind = kind;
+            w.cfg.run_name = format!("{model}-{}-{}L", kind.name(), learners);
+            println!("== {} ==", w.cfg.run_name);
+            let rec = w.run()?;
+            print_curve(&rec);
+            runs.push(rec);
+        }
+    }
+
+    println!("\nFig 2 series (epoch, test-err%) per run saved to results/fig2_convergence.*");
+    let mut t = report::Table::new(&["run", "final err%", "rate(paper)", "diverged"]);
+    for r in &runs {
+        t.row(vec![
+            r.name.clone(),
+            format!("{:.2}", r.final_test_error()),
+            format!("{:.0}x", r.mean_rate_paper()),
+            r.diverged.to_string(),
+        ]);
+    }
+    t.print();
+    report::save_runs("fig2_convergence", &runs)?;
+    Ok(())
+}
+
+fn print_curve(rec: &adacomp::metrics::RunRecord) {
+    let pts: Vec<String> = rec
+        .epochs
+        .iter()
+        .map(|e| format!("({}, {:.2})", e.epoch, e.test_error_pct))
+        .collect();
+    println!("  {}", pts.join(" "));
+}

@@ -1,0 +1,80 @@
+//! Fig 7 — compression rate vs (a) minibatch size and (b) learner count,
+//! AdaComp vs Dryden, CIFAR-CNN.
+//!
+//! (a) single learner, minibatch 128..2048: rate degrades with batch for
+//!     both, but AdaComp stays ~5-10x ahead of Dryden.
+//! (b) super-minibatch fixed at 128 split over 1..128 learners: more
+//!     learners -> smaller local batch -> higher AdaComp rate.
+//!
+//!   cargo run --release --example fig7_scaling -- --sweep mb
+//!   cargo run --release --example fig7_scaling -- --sweep learners
+//!   (default: both)
+
+use adacomp::compress::Kind;
+use adacomp::harness::{report, Workload};
+use adacomp::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&[]);
+    let sweep = args.str_or("sweep", "both");
+    let mut runs = Vec::new();
+
+    if sweep == "mb" || sweep == "both" {
+        println!("== Fig 7a: compression rate vs minibatch size (1 learner) ==");
+        let mut t = report::Table::new(&["minibatch", "adacomp rate", "dryden rate", "adacomp err%", "dryden err%"]);
+        for &mb in &args.usize_list_or("minibatches", &[128, 256, 512, 1024, 2048]) {
+            let mut rates = Vec::new();
+            let mut errs = Vec::new();
+            for kind in [Kind::AdaComp, Kind::Dryden] {
+                let mut w = Workload::from_args(&args, "cifar_cnn")?;
+                w.cfg.n_learners = 1;
+                w.cfg.batch_per_learner = mb;
+                // keep samples-per-epoch constant: fewer steps at larger mb
+                w.cfg.steps_per_epoch = (5120 / mb).max(1);
+                w.cfg.compression.kind = kind;
+                w.cfg.run_name = format!("fig7a-{}-mb{}", kind.name(), mb);
+                eprintln!("running {} ...", w.cfg.run_name);
+                let rec = w.run()?;
+                rates.push(rec.mean_rate_paper());
+                errs.push(rec.final_test_error());
+                runs.push(rec);
+            }
+            t.row(vec![
+                mb.to_string(),
+                format!("{:.0}x", rates[0]),
+                format!("{:.0}x", rates[1]),
+                format!("{:.2}", errs[0]),
+                format!("{:.2}", errs[1]),
+            ]);
+        }
+        t.print();
+        println!("paper shape: both degrade with minibatch; AdaComp ~5-10x better\n");
+    }
+
+    if sweep == "learners" || sweep == "both" {
+        println!("== Fig 7b: AdaComp rate vs learners (super-minibatch 128) ==");
+        let mut t = report::Table::new(&["learners", "batch/learner", "rate (paper)", "rate (wire)", "err%"]);
+        for &n in &args.usize_list_or("learner-counts", &[1, 2, 8, 32, 128]) {
+            let mut w = Workload::from_args(&args, "cifar_cnn")?;
+            w.cfg.n_learners = n;
+            w.cfg.batch_per_learner = (128 / n).max(1);
+            w.cfg.compression.kind = Kind::AdaComp;
+            w.cfg.run_name = format!("fig7b-{}L", n);
+            eprintln!("running {} ...", w.cfg.run_name);
+            let rec = w.run()?;
+            t.row(vec![
+                n.to_string(),
+                w.cfg.batch_per_learner.to_string(),
+                format!("{:.0}x", rec.mean_rate_paper()),
+                format!("{:.0}x", rec.mean_rate_wire()),
+                format!("{:.2}", rec.final_test_error()),
+            ]);
+            runs.push(rec);
+        }
+        t.print();
+        println!("paper shape: rate grows with learner count (smaller local batch = lower activity)");
+    }
+
+    report::save_runs("fig7_scaling", &runs)?;
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: train MNIST-DNN with and without AdaComp and compare — the
+//! 60-second tour of the public API.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Flags: --model, --epochs, --learners, --lt, ... (see `adacomp train --help`).
+
+use adacomp::compress::Kind;
+use adacomp::harness::{report, Workload};
+use adacomp::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&[]);
+    let mut runs = Vec::new();
+    for kind in [Kind::None, Kind::AdaComp] {
+        let mut w = Workload::from_args(&args, "mnist_dnn")?;
+        w.cfg.compression.kind = kind;
+        if args.get("learners").is_none() {
+            // 2 learners by default so the fabric has real traffic to report
+            w.cfg.n_learners = 2;
+            w.cfg.batch_per_learner = 50;
+        }
+        w.cfg.run_name = format!("quickstart-{}", kind.name());
+        println!("== {} ==", w.cfg.run_name);
+        let rec = w.run()?;
+        println!("{}", report::epoch_line(&rec));
+        runs.push(rec);
+    }
+
+    let mut t = report::Table::new(&[
+        "scheme",
+        "test-err %",
+        "rate (wire)",
+        "rate (paper)",
+        "bytes up",
+    ]);
+    for r in &runs {
+        t.row(vec![
+            r.scheme.clone(),
+            format!("{:.2}", r.final_test_error()),
+            format!("{:.1}x", r.mean_rate_wire()),
+            format!("{:.1}x", r.mean_rate_paper()),
+            format!("{}", r.fabric.bytes_up),
+        ]);
+    }
+    println!();
+    t.print();
+    let (j, c) = report::save_runs("quickstart", &runs)?;
+    println!("\nsaved {j} and {c}");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Table 2 — baseline vs AdaComp top-1 error across the model zoo.
+//!
+//! Paper settings: conv L_T=50, FC/LSTM L_T=500; same hyper-parameters as
+//! the uncompressed baseline; learner counts per model. Workloads are the
+//! scaled substitutes of DESIGN.md §Substitutions, so compare *deltas*
+//! (AdaComp - baseline), not absolute errors, against the paper.
+//!
+//!   cargo run --release --example table2_accuracy
+//!   cargo run --release --example table2_accuracy -- --models cifar_cnn,char_lstm --learners 4
+//!   cargo run --release --example table2_accuracy -- --epochs 30   # closer to paper scale
+
+use adacomp::compress::Kind;
+use adacomp::harness::{report, Workload};
+use adacomp::util::cli::{Args};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&[]);
+    // (model, learners) mirroring Table 2's "Learner number" row, scaled to
+    // what the batch variants support.
+    let default_plan: &[(&str, usize)] = &[
+        ("mnist_dnn", 4),
+        ("mnist_cnn", 4),
+        ("cifar_cnn", 8),
+        ("alexnet_s", 8),
+        ("resnet18_s", 4),
+        ("bn50_dnn_s", 8),
+        ("char_lstm", 2),
+    ];
+    let models: Vec<String> = match args.get("models") {
+        Some(list) => list.split(',').map(|s| s.to_string()).collect(),
+        None => default_plan.iter().map(|(m, _)| m.to_string()).collect(),
+    };
+
+    let mut t = report::Table::new(&[
+        "model",
+        "learners",
+        "baseline err%",
+        "adacomp err%",
+        "delta",
+        "conv rate",
+        "fc rate",
+        "diverged",
+    ]);
+    let mut all = Vec::new();
+    for model in &models {
+        let learners = args.usize_or(
+            "learners",
+            default_plan
+                .iter()
+                .find(|(m, _)| m == model)
+                .map(|(_, l)| *l)
+                .unwrap_or(2),
+        );
+        let mut errs = Vec::new();
+        let mut conv_rate = String::from("-");
+        let mut fc_rate = String::from("-");
+        let mut diverged = false;
+        for kind in [Kind::None, Kind::AdaComp] {
+            let mut w = Workload::from_args(&args, model)?;
+            w.cfg.n_learners = learners;
+            w.cfg.batch_per_learner =
+                (adacomp::harness::defaults_for(model).batch / learners).max(1);
+            w.cfg.compression.kind = kind;
+            w.cfg.run_name = format!("table2-{model}-{}-{}L", kind.name(), learners);
+            eprintln!("running {} ...", w.cfg.run_name);
+            let rec = w.run()?;
+            eprintln!("  {}", report::epoch_line(&rec));
+            errs.push(rec.final_test_error());
+            if kind == Kind::AdaComp {
+                let last = rec.epochs.last().unwrap();
+                if last.comp_conv.elements > 0 {
+                    conv_rate = format!("{:.0}x", last.comp_conv.rate_paper());
+                }
+                fc_rate = format!("{:.0}x", last.comp_fc.rate_paper());
+                diverged = rec.diverged;
+            }
+            all.push(rec);
+        }
+        t.row(vec![
+            model.clone(),
+            learners.to_string(),
+            format!("{:.2}", errs[0]),
+            format!("{:.2}", errs[1]),
+            format!("{:+.2}", errs[1] - errs[0]),
+            conv_rate,
+            fc_rate,
+            diverged.to_string(),
+        ]);
+    }
+    println!("\nTable 2 (scaled workloads — compare deltas and rates with the paper):");
+    t.print();
+    println!("paper: deltas within ~0.5%, conv ~40x, FC/LSTM ~200x");
+    report::save_runs("table2_accuracy", &all)?;
+    Ok(())
+}

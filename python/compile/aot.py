@@ -1,0 +1,233 @@
+"""AOT export: lower the L2 model zoo (and the L1 compression graph) to HLO
+text artifacts the rust runtime loads via PJRT.
+
+Per model this writes:
+  artifacts/<name>.step.hlo.txt   step(*params, x, y) -> (loss, *grads)
+  artifacts/<name>.eval.hlo.txt   eval(*params, x, y) -> (loss, ncorrect)
+  artifacts/<name>.init.bin       initial params, raw little-endian f32,
+                                  concatenated in manifest order
+plus once:
+  artifacts/manifest.json         model/param layout the rust side parses
+  artifacts/golden_adacomp.json   golden vectors: ref.py outputs on fixed
+                                  inputs; rust/tests cross-check bit-for-bit
+  artifacts/adacomp_n{N}_lt{L}.hlo.txt  standalone L1 compression graphs
+                                  (Pallas kernels lowered to HLO) for the
+                                  fused-on-accelerator example
+
+Interchange is HLO *text*: jax 0.8 serialized protos use 64-bit instruction
+ids that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+See /opt/xla-example/README.md and DESIGN.md §Interchange.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import adacomp as K
+from .kernels import ref
+
+# Standalone compression graphs exported for the fused-accelerator example:
+# (layer length, L_T) pairs covering the cifar_cnn layers at paper defaults.
+ADACOMP_EXPORTS = [(2400, 50), (25600, 50), (51200, 50), (10240, 500)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_variants(spec: M.ModelSpec) -> list:
+    """Batch sizes exported per model: the default and its halvings down to 1
+    (per-learner batch = super-batch / N under strong scaling), plus larger
+    super-batches for cifar_cnn (Fig 7a sweeps minibatch 128..2048)."""
+    sizes = set()
+    b = spec.batch
+    while b >= 1:
+        sizes.add(b)
+        b //= 2
+    if spec.name == "cifar_cnn":
+        sizes.update([256, 512, 1024, 2048])
+    return sorted(sizes)
+
+
+def export_model(spec: M.ModelSpec, outdir: str) -> dict:
+    """Lower step (per batch variant) + eval, write init bin, return the
+    manifest entry."""
+    p_specs = [spec_of(p.value.shape, jnp.float32) for p in spec.params]
+    x_dtype = jnp.float32 if spec.x_dtype == "f32" else jnp.int32
+
+    def step(*args):
+        return spec.step(list(args[: len(p_specs)]), args[-2], args[-1])
+
+    def evaluate(*args):
+        return spec.evaluate(list(args[: len(p_specs)]), args[-2], args[-1])
+
+    def specs_for(b):
+        x_spec = spec_of((b, *spec.x_shape), x_dtype)
+        y_shape = (b,) if spec.y_ndim == 1 else (b, spec.seq_len)
+        return x_spec, spec_of(y_shape, jnp.int32)
+
+    step_hlos = {}
+    for b in batch_variants(spec):
+        x_spec, y_spec = specs_for(b)
+        hlo = to_hlo_text(jax.jit(step).lower(*p_specs, x_spec, y_spec))
+        path = f"{spec.name}.step.b{b}.hlo.txt"
+        with open(os.path.join(outdir, path), "w") as f:
+            f.write(hlo)
+        step_hlos[str(b)] = path
+
+    x_spec, y_spec = specs_for(spec.batch)
+    y_shape = y_spec.shape
+    step_hlo = open(os.path.join(outdir, step_hlos[str(spec.batch)])).read()
+    eval_hlo = to_hlo_text(jax.jit(evaluate).lower(*p_specs, x_spec, y_spec))
+
+    step_path = step_hlos[str(spec.batch)]
+    eval_path = f"{spec.name}.eval.hlo.txt"
+    with open(os.path.join(outdir, eval_path), "w") as f:
+        f.write(eval_hlo)
+
+    init_path = f"{spec.name}.init.bin"
+    flat = np.concatenate([p.value.reshape(-1) for p in spec.params]).astype("<f4")
+    flat.tofile(os.path.join(outdir, init_path))
+
+    nparams = int(sum(p.value.size for p in spec.params))
+    print(
+        f"  {spec.name}: {len(spec.params)} tensors, {nparams} params, "
+        f"batch {spec.batch}, step hlo {len(step_hlo)//1024}KB"
+    )
+    return {
+        "name": spec.name,
+        "step_hlo": step_path,
+        "step_hlos": step_hlos,
+        "eval_hlo": eval_path,
+        "init_bin": init_path,
+        "batch": spec.batch,
+        "seq_len": spec.seq_len,
+        "x_shape": list((spec.batch, *spec.x_shape)),
+        "x_dtype": spec.x_dtype,
+        "y_shape": list(y_shape),
+        "num_classes": spec.num_classes,
+        "num_params": nparams,
+        "params": [
+            {
+                "name": p.name,
+                "shape": list(p.value.shape),
+                "kind": p.kind,
+                "lt": p.lt,
+            }
+            for p in spec.params
+        ],
+    }
+
+
+def export_adacomp_graphs(outdir: str) -> list:
+    """Lower the L1 Pallas compression (gq, residue) graphs to HLO."""
+    entries = []
+    for n, lt in ADACOMP_EXPORTS:
+
+        def compress(g, h, lt=lt):
+            gq, residue, _, _, scale = K.adacomp_compress(g, h, lt)
+            return (gq, residue, scale)
+
+        s = spec_of((n,), jnp.float32)
+        hlo = to_hlo_text(jax.jit(compress).lower(s, s))
+        path = f"adacomp_n{n}_lt{lt}.hlo.txt"
+        with open(os.path.join(outdir, path), "w") as f:
+            f.write(hlo)
+        entries.append({"n": n, "lt": lt, "hlo": path})
+        print(f"  adacomp n={n} lt={lt}: {len(hlo)//1024}KB")
+    return entries
+
+
+def export_golden(outdir: str) -> None:
+    """Golden vectors for the rust AdaComp implementation (bit-exact contract)."""
+    rng = np.random.default_rng(1234)
+    cases = []
+    for n, lt, gscale in [
+        (137, 10, 1.0),
+        (500, 50, 0.01),
+        (1024, 500, 3.0),  # single partial-ish bin regime
+        (50, 50, 1.0),  # exactly one bin
+        (49, 50, 1.0),  # single short bin
+        (300, 7, 0.5),  # lt does not divide n
+    ]:
+        g = (rng.standard_normal(n) * gscale).astype(np.float32)
+        dw = (rng.standard_normal(n) * gscale * 0.3).astype(np.float32)
+        # zero out a whole bin sometimes to exercise the gmax>0 guard
+        if n >= 2 * lt:
+            g[:lt] = 0.0
+            dw[:lt] = 0.0
+        h = g + dw
+        gq, residue, mask, gmax, scale = ref.adacomp_compress(
+            jnp.asarray(g), jnp.asarray(h), lt
+        )
+        cases.append(
+            {
+                "n": n,
+                "lt": lt,
+                "g": [float(v) for v in g],
+                "h": [float(v) for v in h],
+                "gq": [float(v) for v in np.asarray(gq)],
+                "residue": [float(v) for v in np.asarray(residue)],
+                "mask": [int(v) for v in np.asarray(mask)],
+                "gmax": [float(v) for v in np.asarray(gmax)],
+                "scale": float(scale),
+            }
+        )
+    with open(os.path.join(outdir, "golden_adacomp.json"), "w") as f:
+        json.dump({"cases": cases}, f)
+    print(f"  golden_adacomp.json: {len(cases)} cases")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="default",
+        help="comma list, or 'default' (fast set) or 'all' (adds bn50_dnn, resnet50_s)",
+    )
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+
+    names = {
+        "default": M.DEFAULT_EXPORT,
+        "all": list(M.BUILDERS),
+    }.get(args.models, [s for s in args.models.split(",") if s])
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"seed": args.seed, "models": {}}
+    print(f"exporting {len(names)} models to {args.out}")
+    for name in names:
+        spec = M.build(name, seed=args.seed)
+        manifest["models"][name] = export_model(spec, args.out)
+
+    manifest["adacomp_graphs"] = export_adacomp_graphs(args.out)
+    if not args.skip_golden:
+        export_golden(args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("manifest.json written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels + pure-jnp oracle for the AdaComp compression step."""
+
+from . import adacomp, ref  # noqa: F401

@@ -1,0 +1,115 @@
+"""L1 — Pallas kernels for the AdaComp compression hot-spot.
+
+The paper's computational argument is that compression must be *localized*
+(no global sort) and accelerator friendly. On TPU this maps to: lay the
+layer's flat residue out as a ``(num_bins, L_T)`` tile, reduce |G| along the
+lane (L_T) dimension inside VMEM for ``g_max``, then do one element-wise VPU
+pass for the soft-threshold compare + ternarize. One HBM->VMEM round trip,
+zero cross-bin traffic. See DESIGN.md §Hardware-Adaptation.
+
+Two kernels:
+  * ``binmax``   — per-bin max of |G|         (reduction, grid over bin rows)
+  * ``select``   — soft-threshold send mask   (elementwise, grid over bin rows)
+
+``adacomp_compress`` stitches them with the (tiny) global scale reduction in
+plain jnp; XLA fuses the ternarize/residue arithmetic around the kernels.
+Everything uses ``interpret=True`` so the lowering is plain HLO that the
+rust CPU PJRT client can execute (real-TPU Mosaic lowering is compile-only
+in this image; see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Rows of bins processed per grid step. 8 is the TPU sublane width for f32;
+# on the interpret path it only affects trace size, not numerics.
+DEFAULT_BLOCK_BINS = 8
+
+
+def _binmax_kernel(g_ref, out_ref):
+    """out[b] = max_j |g[b, j]| for each bin row b in the block."""
+    out_ref[...] = jnp.max(jnp.abs(g_ref[...]), axis=1)
+
+
+def _select_kernel(g_ref, h_ref, gmax_ref, mask_ref):
+    """mask[b, j] = (|h[b, j]| >= gmax[b]) & (gmax[b] > 0), as 0/1 f32-dtype."""
+    gmax = gmax_ref[...][:, None]
+    sel = (jnp.abs(h_ref[...]) >= gmax) & (gmax > 0)
+    mask_ref[...] = sel.astype(mask_ref.dtype)
+
+
+def _pick_block(nbins: int, want: int) -> int:
+    """Largest divisor of nbins that is <= want (grid must tile exactly)."""
+    bb = min(want, nbins)
+    while nbins % bb:
+        bb -= 1
+    return bb
+
+
+def bin_max(g2: jnp.ndarray, *, block_bins: int = DEFAULT_BLOCK_BINS) -> jnp.ndarray:
+    """Per-bin max |G| via Pallas. ``g2`` is (nbins, L_T); returns (nbins,)."""
+    nbins, lt = g2.shape
+    bb = _pick_block(nbins, block_bins)
+    return pl.pallas_call(
+        _binmax_kernel,
+        grid=(nbins // bb,),
+        in_specs=[pl.BlockSpec((bb, lt), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nbins,), g2.dtype),
+        interpret=True,
+    )(g2)
+
+
+def select_mask(
+    g2: jnp.ndarray,
+    h2: jnp.ndarray,
+    gmax: jnp.ndarray,
+    *,
+    block_bins: int = DEFAULT_BLOCK_BINS,
+) -> jnp.ndarray:
+    """Soft-threshold send mask via Pallas. Returns (nbins, L_T) in g2.dtype (0/1)."""
+    nbins, lt = g2.shape
+    bb = _pick_block(nbins, block_bins)
+    return pl.pallas_call(
+        _select_kernel,
+        grid=(nbins // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, lt), lambda i: (i, 0)),
+            pl.BlockSpec((bb, lt), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb, lt), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbins, lt), g2.dtype),
+        interpret=True,
+    )(g2, h2, gmax)
+
+
+@functools.partial(jax.jit, static_argnames=("lt", "block_bins"))
+def adacomp_compress(
+    g: jnp.ndarray,
+    h: jnp.ndarray,
+    lt: int,
+    *,
+    block_bins: int = DEFAULT_BLOCK_BINS,
+):
+    """Full AdaComp step on one flat layer — Pallas edition of ``ref.adacomp_compress``.
+
+    Returns (gq, residue, mask, gmax, scale); see ref.py for semantics.
+    """
+    n = g.shape[0]
+    g2 = ref.pad_to_bins(g, lt)
+    h2 = ref.pad_to_bins(h, lt)
+    gmax = bin_max(g2, block_bins=block_bins)
+    scale = jnp.mean(jnp.abs(gmax))
+    mask2 = select_mask(g2, h2, gmax, block_bins=block_bins)
+    mask = mask2.reshape(-1)[:n]
+    gq = mask * jnp.sign(g) * scale
+    residue = g - gq
+    return gq, residue, mask.astype(bool), gmax, scale

@@ -1,0 +1,86 @@
+"""Pure-jnp oracle for the AdaComp compression step (paper Algorithm 2).
+
+This module is the *correctness ground truth* for
+  - the Pallas kernels in ``kernels/adacomp.py`` (pytest compares them), and
+  - the rust hot-path implementation in ``rust/src/compress/adacomp.rs``
+    (cross-checked through golden vectors emitted by ``aot.py --golden``).
+
+Semantics (paper, Algorithm 2, with our one documented deviation):
+
+  G      = residue + dW
+  H      = G + dW                      # soft threshold: residue + 2*dW
+  bins   : G split into bins of length L_T (last bin zero-padded)
+  gmax_i = max_j |G| over bin i
+  scale  = mean_i |gmax_i|             # one scale per layer
+  sent   = { j : |H_j| >= gmax(bin(j)) and gmax(bin(j)) > 0 }
+  Gq_j   = sign(G_j) * scale           for j in sent, else 0
+  residue'_j = G_j - Gq_j
+
+Deviation: the ``gmax > 0`` conjunct. The paper's literal predicate
+``|H| >= gmax`` selects *every* element of an all-zero bin (0 >= 0); the
+transmitted values would all be zero, inflating traffic with no information.
+All three implementations (ref / pallas / rust) share this guard so they stay
+bit-identical.
+
+Note the paper compares |H| against the max of |G| (not of |H|): an element
+that *was* the bin max of G may fail the test if the latest dW opposes its
+residue. Bins may therefore send zero elements. This is intentional.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pad_to_bins(g: jnp.ndarray, lt: int) -> jnp.ndarray:
+    """Zero-pad flat ``g`` to a multiple of ``lt`` and reshape to (bins, lt)."""
+    n = g.shape[0]
+    nbins = -(-n // lt)  # ceil div
+    pad = nbins * lt - n
+    if pad:
+        g = jnp.concatenate([g, jnp.zeros((pad,), dtype=g.dtype)])
+    return g.reshape(nbins, lt)
+
+
+def bin_max(g: jnp.ndarray, lt: int) -> jnp.ndarray:
+    """Per-bin max of |G|. ``g`` flat; returns (nbins,)."""
+    return jnp.max(jnp.abs(pad_to_bins(g, lt)), axis=1)
+
+
+def layer_scale(gmax: jnp.ndarray) -> jnp.ndarray:
+    """Single quantization scale for the layer: mean of the |gmax| vector."""
+    return jnp.mean(jnp.abs(gmax))
+
+
+def select_mask(g: jnp.ndarray, h: jnp.ndarray, lt: int) -> jnp.ndarray:
+    """Boolean send-mask, flat, same length as ``g`` (padding stripped)."""
+    n = g.shape[0]
+    g2 = pad_to_bins(g, lt)
+    h2 = pad_to_bins(h, lt)
+    gmax = jnp.max(jnp.abs(g2), axis=1, keepdims=True)
+    mask = (jnp.abs(h2) >= gmax) & (gmax > 0)
+    return mask.reshape(-1)[:n]
+
+
+def adacomp_compress(g: jnp.ndarray, h: jnp.ndarray, lt: int):
+    """Full AdaComp compression step on one layer.
+
+    Args:
+      g: flat residue + dW            (what gets quantized / carried over)
+      h: flat residue + 2*dW          (what the soft threshold tests)
+      lt: bin length L_T (the paper's only new hyper-parameter)
+
+    Returns:
+      gq:      flat ternarized sent values (0 where not sent)
+      residue: flat new residual gradient  (g - gq)
+      mask:    flat bool send-mask
+      gmax:    (nbins,) per-bin max |G|
+      scale:   scalar layer quantization scale
+    """
+    n = g.shape[0]
+    gmax = bin_max(g, lt)
+    scale = layer_scale(gmax)
+    mask = select_mask(g, h, lt)
+    gq = jnp.where(mask, jnp.sign(g) * scale, jnp.zeros_like(g))
+    residue = g - gq
+    return gq[:n], residue[:n], mask, gmax, scale

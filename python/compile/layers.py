@@ -1,0 +1,128 @@
+"""L2 building blocks: initializers and layer primitives in pure jnp/lax.
+
+Every model in ``model.py`` is expressed over a flat *list* of parameter
+arrays (manifest order) so the AOT-exported HLO has the calling convention
+
+    step(*params, x, y) -> (loss, *grads)
+
+that the rust runtime (rust/src/runtime/step.rs) expects. No pytrees cross
+the interchange boundary.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Initializers (numpy so init bins are bit-reproducible across jax versions)
+# ---------------------------------------------------------------------------
+
+
+def he_conv(rng: np.random.Generator, kh, kw, cin, cout):
+    """He-normal init for an HWIO conv kernel."""
+    std = math.sqrt(2.0 / (kh * kw * cin))
+    return (rng.standard_normal((kh, kw, cin, cout)) * std).astype(np.float32)
+
+
+def he_fc(rng: np.random.Generator, fan_in, fan_out, gain=2.0):
+    std = math.sqrt(gain / fan_in)
+    return (rng.standard_normal((fan_in, fan_out)) * std).astype(np.float32)
+
+
+def zeros(*shape):
+    return np.zeros(shape, dtype=np.float32)
+
+
+def lstm_init(rng: np.random.Generator, in_dim, hidden):
+    """Wx (in,4H), Wh (H,4H), b (4H) with forget-gate bias 1."""
+    wx = he_fc(rng, in_dim, 4 * hidden, gain=1.0)
+    wh = he_fc(rng, hidden, 4 * hidden, gain=1.0)
+    b = np.zeros((4 * hidden,), dtype=np.float32)
+    b[hidden : 2 * hidden] = 1.0  # forget gate
+    return wx, wh, b
+
+
+# ---------------------------------------------------------------------------
+# Forward primitives
+# ---------------------------------------------------------------------------
+
+DN_NHWC = ("NHWC", "HWIO", "NHWC")
+
+
+def conv2d(x, w, stride=1, padding="SAME"):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), padding, dimension_numbers=DN_NHWC
+    )
+
+
+def maxpool2(x):
+    """2x2 max pool, stride 2, NHWC."""
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def avgpool_global(x):
+    """Global average pool NHWC -> NC."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def lstm_layer(x, wx, wh, b):
+    """x: (B, T, in) -> (B, T, H). Scan over time with (h, c) carry."""
+    hidden = wh.shape[0]
+    bsz = x.shape[0]
+
+    def cell(carry, xt):
+        h, c = carry
+        z = xt @ wx + h @ wh + b
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    init = (
+        jnp.zeros((bsz, hidden), x.dtype),
+        jnp.zeros((bsz, hidden), x.dtype),
+    )
+    _, hs = lax.scan(cell, init, jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return gamma * (x - mu) * lax.rsqrt(var + eps) + beta
+
+
+def causal_attention(x, wq, wk, wv, wo, nheads):
+    """Multi-head causal self-attention; x (B,T,D)."""
+    b, t, d = x.shape
+    hd = d // nheads
+
+    def split(z):
+        return z.reshape(b, t, nheads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(x @ wq), split(x @ wk), split(x @ wv)
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(hd)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(causal, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ wo
+
+
+def softmax_xent(logits, labels):
+    """Mean cross-entropy; logits (..., C), labels (...) int32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def ncorrect(logits, labels):
+    """Top-1 correct count as f32 (crosses the HLO boundary as f32)."""
+    return jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

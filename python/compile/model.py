@@ -1,0 +1,413 @@
+"""L2 — the model zoo used by the paper's evaluation, in JAX.
+
+Each entry mirrors a row of the paper's Table 1 (scaled where the paper's
+dataset is a hardware gate — see DESIGN.md §Substitutions):
+
+  mnist_cnn    2 conv (5x5) + 2 FC + 10-softmax           (paper MNIST-CNN)
+  mnist_dnn    784-300-100-10 MLP                         (paper MNIST-DNN, "not shown")
+  cifar_cnn    3 conv (5x5) + 1 FC + 10-softmax, ~90k par (paper CIFAR10-CNN, Caffe-like)
+  alexnet_s    5 conv + 3 FC, 100-way                     (scaled AlexNet surrogate)
+  resnet18_s   8 residual blocks, 16 conv + FC, 100-way   (scaled ResNet18 surrogate)
+  resnet50_s   bottleneck residual blocks + FC, 100-way   (scaled ResNet50 surrogate)
+  bn50_dnn     440-1024x4-5999 6-layer DNN                (paper BN50-DNN, exact shapes)
+  bn50_dnn_s   440-512x4-1500 scaled variant              (fast default for harnesses)
+  char_lstm    2 LSTM (67-512, 512-512) + FC 512-67       (paper Shakespeare LSTM, exact)
+  transformer  4-layer causal char transformer, d=256     (e2e driver; not in paper)
+
+A ``ModelSpec`` carries the numpy initial parameters (written to
+``artifacts/<name>.init.bin``), per-parameter layer kinds (conv / fc / lstm /
+embed -> default L_T 50 / 500 / 500 / 500 per the paper), and pure functions
+
+    forward(params, x)        -> logits
+    step(params, x, y)        -> (loss, grads)     [AOT-exported]
+    evaluate(params, x, y)    -> (loss, ncorrect)  [AOT-exported]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+
+VOCAB = 67  # paper's Shakespeare char vocabulary size
+
+LT_DEFAULT = {"conv": 50, "fc": 500, "lstm": 500, "embed": 500}
+
+
+@dataclasses.dataclass
+class Param:
+    name: str
+    value: np.ndarray
+    kind: str  # conv | fc | lstm | embed
+
+    @property
+    def lt(self) -> int:
+        return LT_DEFAULT[self.kind]
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    name: str
+    params: List[Param]
+    forward: Callable  # (list_of_arrays, x) -> logits
+    x_shape: Tuple[int, ...]  # without batch dim
+    x_dtype: str  # "f32" | "i32"
+    y_ndim: int  # 1 for image classif (B,), 2 for LM (B,T)
+    num_classes: int
+    batch: int
+    seq_len: int = 0  # LM only
+
+    def init_values(self) -> List[jnp.ndarray]:
+        return [jnp.asarray(p.value) for p in self.params]
+
+    # -- exported functions -------------------------------------------------
+    def loss_fn(self, params: Sequence[jnp.ndarray], x, y):
+        return L.softmax_xent(self.forward(list(params), x), y)
+
+    def step(self, params: Sequence[jnp.ndarray], x, y):
+        loss, grads = jax.value_and_grad(self.loss_fn)(list(params), x, y)
+        return (loss, *grads)
+
+    def evaluate(self, params: Sequence[jnp.ndarray], x, y):
+        logits = self.forward(list(params), x)
+        return (L.softmax_xent(logits, y), L.ncorrect(logits, y))
+
+
+# ---------------------------------------------------------------------------
+# CNNs
+# ---------------------------------------------------------------------------
+
+
+def build_mnist_dnn(rng: np.random.Generator) -> ModelSpec:
+    dims = [784, 300, 100, 10]
+    params = []
+    for i, (a, b) in enumerate(zip(dims, dims[1:])):
+        params.append(Param(f"fc{i+1}_w", L.he_fc(rng, a, b), "fc"))
+        params.append(Param(f"fc{i+1}_b", L.zeros(b), "fc"))
+
+    def forward(p, x):
+        h = x.reshape(x.shape[0], -1)
+        for i in range(0, len(p) - 2, 2):
+            h = jax.nn.relu(h @ p[i] + p[i + 1])
+        return h @ p[-2] + p[-1]
+
+    return ModelSpec("mnist_dnn", params, forward, (28, 28, 1), "f32", 1, 10, 100)
+
+
+def build_mnist_cnn(rng: np.random.Generator) -> ModelSpec:
+    params = [
+        Param("conv1_w", L.he_conv(rng, 5, 5, 1, 16), "conv"),
+        Param("conv1_b", L.zeros(16), "conv"),
+        Param("conv2_w", L.he_conv(rng, 5, 5, 16, 32), "conv"),
+        Param("conv2_b", L.zeros(32), "conv"),
+        Param("fc1_w", L.he_fc(rng, 7 * 7 * 32, 128), "fc"),
+        Param("fc1_b", L.zeros(128), "fc"),
+        Param("fc2_w", L.he_fc(rng, 128, 10), "fc"),
+        Param("fc2_b", L.zeros(10), "fc"),
+    ]
+
+    def forward(p, x):
+        h = L.maxpool2(jax.nn.relu(L.conv2d(x, p[0]) + p[1]))
+        h = L.maxpool2(jax.nn.relu(L.conv2d(h, p[2]) + p[3]))
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(h @ p[4] + p[5])
+        return h @ p[6] + p[7]
+
+    return ModelSpec("mnist_cnn", params, forward, (28, 28, 1), "f32", 1, 10, 100)
+
+
+def build_cifar_cnn(rng: np.random.Generator) -> ModelSpec:
+    """Caffe cifar10-quick-like: 3 conv (5x5) + 1 FC + 10-softmax, ~0.36MB."""
+    params = [
+        Param("conv1_w", L.he_conv(rng, 5, 5, 3, 32), "conv"),
+        Param("conv1_b", L.zeros(32), "conv"),
+        Param("conv2_w", L.he_conv(rng, 5, 5, 32, 32), "conv"),
+        Param("conv2_b", L.zeros(32), "conv"),
+        Param("conv3_w", L.he_conv(rng, 5, 5, 32, 64), "conv"),
+        Param("conv3_b", L.zeros(64), "conv"),
+        Param("fc_w", L.he_fc(rng, 4 * 4 * 64, 10), "fc"),
+        Param("fc_b", L.zeros(10), "fc"),
+    ]
+
+    def forward(p, x):
+        h = jax.nn.relu(L.maxpool2(L.conv2d(x, p[0]) + p[1]))  # pool-then-relu (Caffe quick)
+        h = L.maxpool2(jax.nn.relu(L.conv2d(h, p[2]) + p[3]))
+        h = L.maxpool2(jax.nn.relu(L.conv2d(h, p[4]) + p[5]))
+        h = h.reshape(h.shape[0], -1)
+        return h @ p[6] + p[7]
+
+    return ModelSpec("cifar_cnn", params, forward, (32, 32, 3), "f32", 1, 10, 128)
+
+
+def build_alexnet_s(rng: np.random.Generator) -> ModelSpec:
+    """Scaled AlexNet surrogate: 5 conv + 3 FC on 32x32 synthetic-ImageNet (100-way)."""
+    params = [
+        Param("conv1_w", L.he_conv(rng, 3, 3, 3, 48), "conv"),
+        Param("conv1_b", L.zeros(48), "conv"),
+        Param("conv2_w", L.he_conv(rng, 3, 3, 48, 96), "conv"),
+        Param("conv2_b", L.zeros(96), "conv"),
+        Param("conv3_w", L.he_conv(rng, 3, 3, 96, 96), "conv"),
+        Param("conv3_b", L.zeros(96), "conv"),
+        Param("conv4_w", L.he_conv(rng, 3, 3, 96, 64), "conv"),
+        Param("conv4_b", L.zeros(64), "conv"),
+        Param("conv5_w", L.he_conv(rng, 3, 3, 64, 64), "conv"),
+        Param("conv5_b", L.zeros(64), "conv"),
+        Param("fc1_w", L.he_fc(rng, 4 * 4 * 64, 512), "fc"),
+        Param("fc1_b", L.zeros(512), "fc"),
+        Param("fc2_w", L.he_fc(rng, 512, 256), "fc"),
+        Param("fc2_b", L.zeros(256), "fc"),
+        Param("fc3_w", L.he_fc(rng, 256, 100), "fc"),
+        Param("fc3_b", L.zeros(100), "fc"),
+    ]
+
+    def forward(p, x):
+        h = L.maxpool2(jax.nn.relu(L.conv2d(x, p[0]) + p[1]))  # 16
+        h = L.maxpool2(jax.nn.relu(L.conv2d(h, p[2]) + p[3]))  # 8
+        h = jax.nn.relu(L.conv2d(h, p[4]) + p[5])
+        h = jax.nn.relu(L.conv2d(h, p[6]) + p[7])
+        h = L.maxpool2(jax.nn.relu(L.conv2d(h, p[8]) + p[9]))  # 4
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(h @ p[10] + p[11])
+        h = jax.nn.relu(h @ p[12] + p[13])
+        return h @ p[14] + p[15]
+
+    return ModelSpec("alexnet_s", params, forward, (32, 32, 3), "f32", 1, 100, 64)
+
+
+def _res_block(rng, params, tag, cin, cout, stride):
+    """Plain (3x3, 3x3) residual block, norm-free with scaled init."""
+    params.append(Param(f"{tag}_c1_w", L.he_conv(rng, 3, 3, cin, cout), "conv"))
+    params.append(Param(f"{tag}_c1_b", L.zeros(cout), "conv"))
+    w2 = L.he_conv(rng, 3, 3, cout, cout) * 0.25  # damped second conv (fixup-style)
+    params.append(Param(f"{tag}_c2_w", w2, "conv"))
+    params.append(Param(f"{tag}_c2_b", L.zeros(cout), "conv"))
+    if stride != 1 or cin != cout:
+        params.append(Param(f"{tag}_sc_w", L.he_conv(rng, 1, 1, cin, cout), "conv"))
+    return stride != 1 or cin != cout
+
+
+def build_resnet18_s(rng: np.random.Generator) -> ModelSpec:
+    """8 plain residual blocks (16 conv) + FC — scaled ResNet18 surrogate."""
+    params = [
+        Param("stem_w", L.he_conv(rng, 3, 3, 3, 32), "conv"),
+        Param("stem_b", L.zeros(32), "conv"),
+    ]
+    plan = []  # (has_shortcut, stride)
+    cfg = [(32, 32, 1), (32, 32, 1), (32, 64, 2), (64, 64, 1),
+           (64, 128, 2), (128, 128, 1), (128, 128, 1), (128, 128, 1)]
+    for i, (cin, cout, s) in enumerate(cfg):
+        has_sc = _res_block(rng, params, f"b{i}", cin, cout, s)
+        plan.append((has_sc, s))
+    params.append(Param("fc_w", L.he_fc(rng, 128, 100), "fc"))
+    params.append(Param("fc_b", L.zeros(100), "fc"))
+
+    def forward(p, x):
+        h = jax.nn.relu(L.conv2d(x, p[0]) + p[1])
+        i = 2
+        for has_sc, s in plan:
+            y = jax.nn.relu(L.conv2d(h, p[i], stride=s) + p[i + 1])
+            y = L.conv2d(y, p[i + 2]) + p[i + 3]
+            i += 4
+            sc = h
+            if has_sc:
+                sc = L.conv2d(h, p[i], stride=s)
+                i += 1
+            h = jax.nn.relu(y + sc)
+        h = L.avgpool_global(h)
+        return h @ p[i] + p[i + 1]
+
+    return ModelSpec("resnet18_s", params, forward, (32, 32, 3), "f32", 1, 100, 32)
+
+
+def _bottleneck(rng, params, tag, cin, cmid, cout, stride):
+    params.append(Param(f"{tag}_c1_w", L.he_conv(rng, 1, 1, cin, cmid), "conv"))
+    params.append(Param(f"{tag}_c1_b", L.zeros(cmid), "conv"))
+    params.append(Param(f"{tag}_c2_w", L.he_conv(rng, 3, 3, cmid, cmid), "conv"))
+    params.append(Param(f"{tag}_c2_b", L.zeros(cmid), "conv"))
+    w3 = L.he_conv(rng, 1, 1, cmid, cout) * 0.25
+    params.append(Param(f"{tag}_c3_w", w3, "conv"))
+    params.append(Param(f"{tag}_c3_b", L.zeros(cout), "conv"))
+    if stride != 1 or cin != cout:
+        params.append(Param(f"{tag}_sc_w", L.he_conv(rng, 1, 1, cin, cout), "conv"))
+    return stride != 1 or cin != cout
+
+
+def build_resnet50_s(rng: np.random.Generator) -> ModelSpec:
+    """6 bottleneck blocks (18 conv) + FC — scaled ResNet50 surrogate."""
+    params = [
+        Param("stem_w", L.he_conv(rng, 3, 3, 3, 32), "conv"),
+        Param("stem_b", L.zeros(32), "conv"),
+    ]
+    cfg = [(32, 16, 64, 1), (64, 16, 64, 1), (64, 32, 128, 2),
+           (128, 32, 128, 1), (128, 64, 256, 2), (256, 64, 256, 1)]
+    plan = []
+    for i, (cin, cmid, cout, s) in enumerate(cfg):
+        has_sc = _bottleneck(rng, params, f"b{i}", cin, cmid, cout, s)
+        plan.append((has_sc, s))
+    params.append(Param("fc_w", L.he_fc(rng, 256, 100), "fc"))
+    params.append(Param("fc_b", L.zeros(100), "fc"))
+
+    def forward(p, x):
+        h = jax.nn.relu(L.conv2d(x, p[0]) + p[1])
+        i = 2
+        for has_sc, s in plan:
+            y = jax.nn.relu(L.conv2d(h, p[i], stride=s) + p[i + 1])
+            y = jax.nn.relu(L.conv2d(y, p[i + 2]) + p[i + 3])
+            y = L.conv2d(y, p[i + 4]) + p[i + 5]
+            i += 6
+            sc = h
+            if has_sc:
+                sc = L.conv2d(h, p[i], stride=s)
+                i += 1
+            h = jax.nn.relu(y + sc)
+        h = L.avgpool_global(h)
+        return h @ p[i] + p[i + 1]
+
+    return ModelSpec("resnet50_s", params, forward, (32, 32, 3), "f32", 1, 100, 32)
+
+
+# ---------------------------------------------------------------------------
+# DNN (speech) and LSTM / transformer (language)
+# ---------------------------------------------------------------------------
+
+
+def _build_dnn(name, rng, dims, batch) -> ModelSpec:
+    params = []
+    for i, (a, b) in enumerate(zip(dims, dims[1:])):
+        params.append(Param(f"fc{i+1}_w", L.he_fc(rng, a, b), "fc"))
+        params.append(Param(f"fc{i+1}_b", L.zeros(b), "fc"))
+
+    def forward(p, x):
+        h = x
+        for i in range(0, len(p) - 2, 2):
+            h = jax.nn.relu(h @ p[i] + p[i + 1])
+        return h @ p[-2] + p[-1]
+
+    return ModelSpec(name, params, forward, (dims[0],), "f32", 1, dims[-1], batch)
+
+
+def build_bn50_dnn(rng: np.random.Generator) -> ModelSpec:
+    """Paper-exact BN50 DNN: 440-1024x4-5999 (6 FC layers)."""
+    return _build_dnn("bn50_dnn", rng, [440, 1024, 1024, 1024, 1024, 1024, 5999], 256)
+
+
+def build_bn50_dnn_s(rng: np.random.Generator) -> ModelSpec:
+    """Scaled BN50 DNN for fast harnesses: 440-512x4-1500."""
+    return _build_dnn("bn50_dnn_s", rng, [440, 512, 512, 512, 512, 512, 1500], 128)
+
+
+def build_char_lstm(rng: np.random.Generator, seq_len: int = 50) -> ModelSpec:
+    """Karpathy char-rnn shape: 2 LSTM (67-512, 512-512) + FC 512-67."""
+    h1 = h2 = 512
+    wx1, wh1, b1 = L.lstm_init(rng, VOCAB, h1)
+    wx2, wh2, b2 = L.lstm_init(rng, h1, h2)
+    params = [
+        Param("lstm1_wx", wx1, "lstm"),
+        Param("lstm1_wh", wh1, "lstm"),
+        Param("lstm1_b", b1, "lstm"),
+        Param("lstm2_wx", wx2, "lstm"),
+        Param("lstm2_wh", wh2, "lstm"),
+        Param("lstm2_b", b2, "lstm"),
+        Param("fc_w", L.he_fc(rng, h2, VOCAB, gain=1.0), "fc"),
+        Param("fc_b", L.zeros(VOCAB), "fc"),
+    ]
+
+    def forward(p, x):
+        h = jax.nn.one_hot(x, VOCAB, dtype=jnp.float32)
+        h = L.lstm_layer(h, p[0], p[1], p[2])
+        h = L.lstm_layer(h, p[3], p[4], p[5])
+        return h @ p[6] + p[7]
+
+    return ModelSpec(
+        "char_lstm", params, forward, (seq_len,), "i32", 2, VOCAB, 10, seq_len
+    )
+
+
+def build_transformer(
+    rng: np.random.Generator,
+    d_model: int = 256,
+    nlayers: int = 4,
+    nheads: int = 4,
+    d_ff: int = 1024,
+    seq_len: int = 96,
+    batch: int = 4,
+    name: str = "transformer",
+) -> ModelSpec:
+    """Causal char transformer LM — the end-to-end driver model."""
+    params = [
+        Param("embed", L.he_fc(rng, VOCAB, d_model, gain=1.0), "embed"),
+        Param("pos", (rng.standard_normal((seq_len, d_model)) * 0.02).astype(np.float32), "embed"),
+    ]
+    for i in range(nlayers):
+        t = f"blk{i}"
+        params += [
+            Param(f"{t}_ln1_g", np.ones((d_model,), np.float32), "fc"),
+            Param(f"{t}_ln1_b", L.zeros(d_model), "fc"),
+            Param(f"{t}_wq", L.he_fc(rng, d_model, d_model, gain=1.0), "fc"),
+            Param(f"{t}_wk", L.he_fc(rng, d_model, d_model, gain=1.0), "fc"),
+            Param(f"{t}_wv", L.he_fc(rng, d_model, d_model, gain=1.0), "fc"),
+            Param(f"{t}_wo", L.he_fc(rng, d_model, d_model, gain=1.0) * 0.5, "fc"),
+            Param(f"{t}_ln2_g", np.ones((d_model,), np.float32), "fc"),
+            Param(f"{t}_ln2_b", L.zeros(d_model), "fc"),
+            Param(f"{t}_w1", L.he_fc(rng, d_model, d_ff), "fc"),
+            Param(f"{t}_b1", L.zeros(d_ff), "fc"),
+            Param(f"{t}_w2", L.he_fc(rng, d_ff, d_model, gain=1.0) * 0.5, "fc"),
+            Param(f"{t}_b2", L.zeros(d_model), "fc"),
+        ]
+    params += [
+        Param("lnf_g", np.ones((d_model,), np.float32), "fc"),
+        Param("lnf_b", L.zeros(d_model), "fc"),
+        Param("head_w", L.he_fc(rng, d_model, VOCAB, gain=1.0), "fc"),
+        Param("head_b", L.zeros(VOCAB), "fc"),
+    ]
+
+    def forward(p, x):
+        h = p[0][x] + p[1][None, : x.shape[1], :]
+        i = 2
+        for _ in range(nlayers):
+            ln1 = L.layer_norm(h, p[i], p[i + 1])
+            h = h + L.causal_attention(ln1, p[i + 2], p[i + 3], p[i + 4], p[i + 5], nheads)
+            ln2 = L.layer_norm(h, p[i + 6], p[i + 7])
+            h = h + jax.nn.relu(ln2 @ p[i + 8] + p[i + 9]) @ p[i + 10] + p[i + 11]
+            i += 12
+        h = L.layer_norm(h, p[i], p[i + 1])
+        return h @ p[i + 2] + p[i + 3]
+
+    return ModelSpec(name, params, forward, (seq_len,), "i32", 2, VOCAB, batch, seq_len)
+
+
+BUILDERS = {
+    "mnist_dnn": build_mnist_dnn,
+    "mnist_cnn": build_mnist_cnn,
+    "cifar_cnn": build_cifar_cnn,
+    "alexnet_s": build_alexnet_s,
+    "resnet18_s": build_resnet18_s,
+    "resnet50_s": build_resnet50_s,
+    "bn50_dnn": build_bn50_dnn,
+    "bn50_dnn_s": build_bn50_dnn_s,
+    "char_lstm": build_char_lstm,
+    "transformer": build_transformer,
+}
+
+# Models exported by default (`make artifacts`). bn50_dnn (full, 43MB) and
+# resnet50_s can be added with `python -m compile.aot --models all`.
+DEFAULT_EXPORT = [
+    "mnist_dnn",
+    "mnist_cnn",
+    "cifar_cnn",
+    "alexnet_s",
+    "resnet18_s",
+    "bn50_dnn_s",
+    "char_lstm",
+    "transformer",
+]
+
+
+def build(name: str, seed: int = 7) -> ModelSpec:
+    rng = np.random.default_rng(seed)
+    return BUILDERS[name](rng)

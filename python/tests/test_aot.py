@@ -1,0 +1,82 @@
+"""AOT pipeline tests: HLO export, init bins, manifest, golden vectors."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def outdir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    return str(d)
+
+
+def test_export_model_roundtrip(outdir):
+    spec = M.build("mnist_dnn")
+    entry = aot.export_model(spec, outdir)
+    # init bin holds exactly num_params little-endian f32
+    raw = np.fromfile(os.path.join(outdir, entry["init_bin"]), dtype="<f4")
+    assert raw.size == entry["num_params"]
+    flat = np.concatenate([p.value.reshape(-1) for p in spec.params])
+    np.testing.assert_array_equal(raw, flat.astype(np.float32))
+    # HLO text parses as an ENTRY computation with the right arity
+    hlo = open(os.path.join(outdir, entry["step_hlo"])).read()
+    assert "ENTRY" in hlo
+    # param tensors + x + y parameters appear
+    assert hlo.count("parameter(") >= len(spec.params) + 2
+    # manifest entry is self-consistent
+    assert entry["x_shape"][0] == spec.batch
+    assert [tuple(p["shape"]) for p in entry["params"]] == [
+        p.value.shape for p in spec.params
+    ]
+
+
+def test_export_golden_matches_ref(outdir):
+    aot.export_golden(outdir)
+    data = json.load(open(os.path.join(outdir, "golden_adacomp.json")))
+    assert len(data["cases"]) >= 5
+    for case in data["cases"]:
+        g = jnp.asarray(np.array(case["g"], np.float32))
+        h = jnp.asarray(np.array(case["h"], np.float32))
+        gq, residue, mask, gmax, scale = ref.adacomp_compress(g, h, case["lt"])
+        np.testing.assert_allclose(np.asarray(gq), case["gq"], rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(residue), case["residue"], rtol=1e-6, atol=1e-7)
+        assert [int(v) for v in np.asarray(mask)] == case["mask"]
+        np.testing.assert_allclose(float(scale), case["scale"], rtol=1e-6)
+
+
+def test_adacomp_graph_export_executes(outdir):
+    """The standalone L1 HLO graph must execute (via jax) and match ref."""
+
+    n, lt = 300, 50
+
+    def compress(g, h):
+        from compile.kernels import adacomp as K
+
+        gq, residue, _, _, scale = K.adacomp_compress(g, h, lt)
+        return (gq, residue, scale)
+
+    rng = np.random.default_rng(5)
+    g = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    h = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    got = jax.jit(compress)(g, h)
+    want = ref.adacomp_compress(g, h, lt)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]), rtol=1e-6)
+    np.testing.assert_allclose(float(got[2]), float(want[4]), rtol=1e-6)
+
+
+def test_manifest_default_set():
+    assert set(M.DEFAULT_EXPORT) <= set(M.BUILDERS)
+    # e2e driver + at least one model per paper family in the default set
+    assert "transformer" in M.DEFAULT_EXPORT
+    assert "cifar_cnn" in M.DEFAULT_EXPORT  # CNN
+    assert "bn50_dnn_s" in M.DEFAULT_EXPORT  # DNN
+    assert "char_lstm" in M.DEFAULT_EXPORT  # RNN

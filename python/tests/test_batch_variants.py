@@ -1,0 +1,29 @@
+"""Tests for the AOT batch-variant export plan."""
+
+from compile import aot, model as M
+
+
+def test_variants_include_default_and_one():
+    for name in M.DEFAULT_EXPORT:
+        spec = M.build(name)
+        v = aot.batch_variants(spec)
+        assert spec.batch in v
+        assert 1 in v
+        assert v == sorted(set(v))
+
+
+def test_cifar_extends_to_2048():
+    spec = M.build("cifar_cnn")
+    v = aot.batch_variants(spec)
+    for b in (256, 512, 1024, 2048):
+        assert b in v
+
+
+def test_halvings_cover_learner_splits():
+    # strong scaling: batch/2^k must exist down to 1 so N=2^k learners work
+    spec = M.build("cifar_cnn")
+    v = set(aot.batch_variants(spec))
+    b = spec.batch
+    while b >= 1:
+        assert b in v
+        b //= 2

@@ -1,0 +1,147 @@
+"""L1 correctness: Pallas AdaComp kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps layer lengths, bin sizes, dtypes and input scales; the
+fixed tests pin the algebraic invariants of Algorithm 2.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adacomp as K
+from compile.kernels import ref
+
+
+def make_inputs(n, scale=1.0, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    g = (rng.standard_normal(n) * scale).astype(dtype)
+    dw = (rng.standard_normal(n) * scale * 0.3).astype(dtype)
+    return jnp.asarray(g), jnp.asarray(g + dw)
+
+
+def assert_same(r, p):
+    names = ["gq", "residue", "mask", "gmax", "scale"]
+    for a, b, name in zip(r, p, names):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32),
+            np.asarray(b, np.float32),
+            rtol=1e-6,
+            atol=1e-7,
+            err_msg=name,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Pallas vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "n,lt",
+    [(50, 50), (49, 50), (1000, 50), (1037, 50), (10240, 500), (300, 7), (1, 1), (5, 500)],
+)
+def test_pallas_matches_ref(n, lt):
+    g, h = make_inputs(n, seed=n * 31 + lt)
+    assert_same(ref.adacomp_compress(g, h, lt), K.adacomp_compress(g, h, lt))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 4096),
+    lt=st.integers(1, 600),
+    scale=st.sampled_from([1e-4, 1e-2, 1.0, 100.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_matches_ref_hypothesis(n, lt, scale, seed):
+    g, h = make_inputs(n, scale=scale, seed=seed)
+    assert_same(ref.adacomp_compress(g, h, lt), K.adacomp_compress(g, h, lt))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(8, 1024), lt=st.integers(2, 64), seed=st.integers(0, 1000))
+def test_pallas_bf16(n, lt, seed):
+    g32, h32 = make_inputs(n, seed=seed)
+    g, h = g32.astype(jnp.bfloat16), h32.astype(jnp.bfloat16)
+    r = ref.adacomp_compress(g, h, lt)
+    p = K.adacomp_compress(g, h, lt)
+    for a, b in zip(r, p):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=1e-2, atol=1e-2
+        )
+
+
+@pytest.mark.parametrize("block_bins", [1, 2, 8, 32])
+def test_block_size_invariance(block_bins):
+    g, h = make_inputs(50 * 32, seed=3)
+    base = K.adacomp_compress(g, h, 50, block_bins=8)
+    other = K.adacomp_compress(g, h, 50, block_bins=block_bins)
+    assert_same(base, other)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 invariants (on the oracle; pallas equality extends them)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 2048), lt=st.integers(1, 512), seed=st.integers(0, 10**6))
+def test_invariants(n, lt, seed):
+    g, h = make_inputs(n, seed=seed)
+    gq, residue, mask, gmax, scale = ref.adacomp_compress(g, h, lt)
+    gq, residue, mask = np.asarray(gq), np.asarray(residue), np.asarray(mask)
+    gnp, hnp = np.asarray(g), np.asarray(h)
+
+    # Conservation: what is not sent stays in the residue.
+    np.testing.assert_allclose(gq + residue, gnp, rtol=1e-6, atol=1e-7)
+    # Sent values are exactly ternary: 0 or +/- scale.
+    sent = gq[mask]
+    if sent.size:
+        np.testing.assert_allclose(np.abs(sent), float(scale), rtol=1e-6)
+    assert np.all(gq[~mask] == 0.0)
+    # Selection predicate holds bin-wise.
+    nbins = -(-n // lt)
+    for b in range(nbins):
+        lo, hi = b * lt, min((b + 1) * lt, n)
+        gm = np.max(np.abs(gnp[lo:hi]))
+        want = (np.abs(hnp[lo:hi]) >= gm) & (gm > 0)
+        np.testing.assert_array_equal(mask[lo:hi], want)
+    # Scale is the mean of per-bin maxima.
+    gmax_np = np.asarray(gmax)
+    assert gmax_np.shape == (nbins,)
+    np.testing.assert_allclose(float(scale), np.mean(np.abs(gmax_np)), rtol=1e-6)
+
+
+def test_zero_bin_sends_nothing():
+    g = jnp.zeros((100,), jnp.float32)
+    h = jnp.zeros((100,), jnp.float32)
+    gq, residue, mask, gmax, scale = ref.adacomp_compress(g, h, 10)
+    assert int(np.sum(np.asarray(mask))) == 0
+    assert float(scale) == 0.0
+    p = K.adacomp_compress(g, h, 10)
+    assert int(np.sum(np.asarray(p[2]))) == 0
+
+
+def test_bin_max_not_always_sent():
+    """The paper tests |H| >= gmax(G): a max of G whose dW opposes it can be skipped."""
+    g = jnp.asarray(np.array([10.0, 1.0, 1.0, 1.0], np.float32))
+    dw = jnp.asarray(np.array([-6.0, 0.0, 0.0, 0.0], np.float32))
+    h = g + dw  # |h[0]| = 4 < gmax = 10
+    _, _, mask, _, _ = ref.adacomp_compress(g, h, 4)
+    assert not bool(mask[0])
+    assert int(np.sum(np.asarray(mask))) == 0  # nothing clears the max
+
+
+def test_self_adjusting_selection_counts():
+    """The soft threshold adapts: large dW relative to the residue (early
+    training) sends many elements; small dW (late training) sends few."""
+    n, lt = 5000, 50
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    dw_large = jnp.asarray((2.0 * rng.standard_normal(n)).astype(np.float32))
+    dw_small = jnp.asarray((0.001 * rng.standard_normal(n)).astype(np.float32))
+    sel_early = int(np.sum(np.asarray(ref.select_mask(g, g + dw_large, lt))))
+    sel_late = int(np.sum(np.asarray(ref.select_mask(g, g + dw_small, lt))))
+    assert sel_early > 5 * sel_late
+    # late-training selection degenerates to roughly the bin maxima
+    assert sel_late <= 2 * (n // lt)

@@ -1,0 +1,131 @@
+"""L2 correctness: model zoo shapes, gradient sanity, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+FAST = ["mnist_dnn", "mnist_cnn", "cifar_cnn", "bn50_dnn_s", "char_lstm", "transformer"]
+ALL = list(M.BUILDERS)
+
+
+def make_batch(spec, seed=0, batch=None):
+    rng = np.random.default_rng(seed)
+    b = batch or spec.batch
+    if spec.x_dtype == "f32":
+        x = rng.standard_normal((b, *spec.x_shape)).astype(np.float32)
+    else:
+        x = rng.integers(0, spec.num_classes, (b, *spec.x_shape)).astype(np.int32)
+    yshape = (b,) if spec.y_ndim == 1 else (b, spec.seq_len)
+    y = rng.integers(0, spec.num_classes, yshape).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_forward_shapes(name):
+    spec = M.build(name)
+    x, y = make_batch(spec, batch=2 if spec.x_dtype == "f32" else None)
+    params = spec.init_values()
+    logits = spec.forward(params, x)
+    assert logits.shape[-1] == spec.num_classes
+    assert logits.shape[0] == x.shape[0]
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", FAST)
+def test_step_grad_shapes(name):
+    spec = M.build(name)
+    x, y = make_batch(spec)
+    params = spec.init_values()
+    out = spec.step(params, x, y)
+    loss, grads = out[0], out[1:]
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    assert len(grads) == len(params)
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+
+@pytest.mark.parametrize("name", ["mnist_dnn", "cifar_cnn", "char_lstm", "transformer"])
+def test_loss_decreases_with_sgd(name):
+    """A few full-batch SGD steps on one batch must reduce the loss."""
+    spec = M.build(name)
+    x, y = make_batch(spec, seed=1)
+    params = spec.init_values()
+    step = jax.jit(lambda *a: spec.step(list(a[: len(params)]), a[-2], a[-1]))
+    lr = {"char_lstm": 1.0, "transformer": 0.1}.get(name, 0.05)
+    losses = []
+    for _ in range(8):
+        out = step(*params, x, y)
+        losses.append(float(out[0]))
+        params = [p - lr * g for p, g in zip(params, out[1:])]
+    assert losses[-1] < losses[0] * 0.98, losses
+
+
+@pytest.mark.parametrize("name", ["mnist_dnn", "cifar_cnn"])
+def test_numerical_gradient(name):
+    """Spot-check analytic grads against central differences."""
+    spec = M.build(name)
+    x, y = make_batch(spec, seed=2, batch=4)
+    params = spec.init_values()
+    out = spec.step(params, x, y)
+    grads = out[1:]
+    # check 5 random coordinates of the first weight tensor
+    rng = np.random.default_rng(0)
+    w = np.asarray(params[0])
+    eps = 1e-3
+    for _ in range(5):
+        idx = tuple(rng.integers(0, s) for s in w.shape)
+        wp, wm = w.copy(), w.copy()
+        wp[idx] += eps
+        wm[idx] -= eps
+        lp = float(spec.loss_fn([jnp.asarray(wp)] + params[1:], x, y))
+        lm = float(spec.loss_fn([jnp.asarray(wm)] + params[1:], x, y))
+        num = (lp - lm) / (2 * eps)
+        ana = float(np.asarray(grads[0])[idx])
+        assert abs(num - ana) < 5e-2 * max(1.0, abs(num)), (idx, num, ana)
+
+
+@pytest.mark.parametrize("name", FAST)
+def test_evaluate(name):
+    spec = M.build(name)
+    x, y = make_batch(spec, seed=3)
+    params = spec.init_values()
+    loss, ncorr = spec.evaluate(params, x, y)
+    total = y.size
+    assert 0 <= float(ncorr) <= total
+    assert np.isfinite(float(loss))
+
+
+def test_param_kinds_and_lt():
+    """Layer-kind tagging drives the paper's L_T defaults (conv 50, fc/lstm 500)."""
+    spec = M.build("cifar_cnn")
+    kinds = {p.name: p.kind for p in spec.params}
+    assert kinds["conv1_w"] == "conv" and kinds["fc_w"] == "fc"
+    assert M.LT_DEFAULT["conv"] == 50 and M.LT_DEFAULT["fc"] == 500
+    for p in spec.params:
+        assert p.lt == M.LT_DEFAULT[p.kind]
+
+
+def test_char_lstm_paper_shapes():
+    spec = M.build("char_lstm")
+    by = {p.name: p.value.shape for p in spec.params}
+    assert by["lstm1_wx"] == (67, 2048) and by["lstm1_wh"] == (512, 2048)
+    assert by["fc_w"] == (512, 67)
+
+
+def test_bn50_paper_shapes():
+    spec = M.build("bn50_dnn")
+    by = {p.name: p.value.shape for p in spec.params}
+    assert by["fc1_w"] == (440, 1024) and by["fc6_w"] == (1024, 5999)
+    assert spec.num_classes == 5999
+
+
+def test_deterministic_init():
+    a = M.build("cifar_cnn", seed=7)
+    b = M.build("cifar_cnn", seed=7)
+    for pa, pb in zip(a.params, b.params):
+        np.testing.assert_array_equal(pa.value, pb.value)

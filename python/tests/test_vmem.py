@@ -1,0 +1,28 @@
+"""Tests for the TPU resource estimator (compile.vmem)."""
+
+from compile import vmem
+
+
+def test_tiles_fit_vmem_at_paper_lt():
+    for lt in (50, 500):
+        r = vmem.kernel_report(1_048_576, lt, 8)
+        assert r["vmem_fits"]
+        assert r["vmem_utilization"] < 0.01  # huge headroom
+
+
+def test_memory_bound_regime():
+    r = vmem.kernel_report(16_777_216, 500, 8)
+    assert r["bound"] == "HBM-bandwidth"
+    # 8 f32 accesses/element of HBM traffic (2 passes + fused epilogue)
+    assert 30.0 <= r["hbm_bytes"] / r["n"] <= 34.0
+
+
+def test_roofline_scales_linearly():
+    a = vmem.kernel_report(1_000_000, 50, 8)
+    b = vmem.kernel_report(2_000_000, 50, 8)
+    assert 1.8 < b["roofline_us"] / a["roofline_us"] < 2.2
+
+
+def test_bins_cover_layer():
+    r = vmem.kernel_report(1037, 50, 8)
+    assert r["nbins"] == 21

@@ -1,0 +1,99 @@
+//! Topology benchmarks: ring vs parameter-server exchange over compressed
+//! packets, at several learner counts and sparsity levels — regenerates the
+//! bytes/time comparison in EXPERIMENTS.md §Perf and backs the Fig 7b
+//! communication story.
+//!
+//!   cargo bench --bench bench_exchange
+
+use adacomp::comm::{topology, Fabric, LinkModel};
+use adacomp::compress::{self, Config, Kind};
+use adacomp::models::{LayerKind, Layout};
+use adacomp::util::rng::Pcg32;
+use adacomp::util::timer::{fmt_ns, time_n, Stats};
+
+fn make_packets(
+    layout: &Layout,
+    n_learners: usize,
+    kind: Kind,
+    lt: usize,
+) -> Vec<Vec<compress::Packet>> {
+    (0..n_learners)
+        .map(|l| {
+            let cfg = Config {
+                lt_override: lt,
+                seed: l as u64,
+                ..Config::with_kind(kind)
+            };
+            let mut c = compress::build(&cfg, layout);
+            let mut rng = Pcg32::seeded(100 + l as u64);
+            (0..layout.num_layers())
+                .map(|li| {
+                    let dw = rng.normal_vec(layout.layers[li].len(), 0.1);
+                    c.pack_layer(li, &dw)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn main() {
+    // cifar_cnn-shaped model: 3 conv + fc
+    let layout = Layout::from_specs(&[
+        ("conv1", &[2400], LayerKind::Conv),
+        ("conv2", &[25600], LayerKind::Conv),
+        ("conv3", &[51200], LayerKind::Conv),
+        ("fc", &[10240], LayerKind::Fc),
+    ]);
+    let lens: Vec<usize> = layout.layers.iter().map(|l| l.len()).collect();
+
+    println!("# exchange: reduce wall time + simulated fabric cost (cifar_cnn-shaped, adacomp lt=50)");
+    println!(
+        "{:<6} {:>9} {:>12} {:>12} {:>14} {:>14} {:>12}",
+        "topo", "learners", "mean", "p95", "bytes/round", "sim-time", "dense-equiv"
+    );
+    for n_learners in [2usize, 8, 32] {
+        let packets = make_packets(&layout, n_learners, Kind::AdaComp, 50);
+        for topo_name in ["ring", "ps"] {
+            let mut topo = topology::build(topo_name).unwrap();
+            let mut fabric = Fabric::new(LinkModel::default());
+            let samples = time_n(
+                || {
+                    std::hint::black_box(topo.exchange(&packets, &lens, &mut fabric));
+                },
+                2,
+                50,
+            );
+            let s = Stats::from(&samples);
+            let rounds = fabric.stats.rounds as f64;
+            println!(
+                "{:<6} {:>9} {:>12} {:>12} {:>14.0} {:>12.3}ms {:>12}",
+                topo_name,
+                n_learners,
+                fmt_ns(s.mean_ns),
+                fmt_ns(s.p95_ns),
+                fabric.stats.bytes_up as f64 / rounds,
+                fabric.stats.sim_time_s / rounds * 1e3,
+                fabric.stats.dense_bytes_equiv / fabric.stats.rounds,
+            );
+        }
+    }
+
+    println!("\n# scheme wire cost per round (8 learners, ring)");
+    println!(
+        "{:<10} {:>14} {:>12} {:>14}",
+        "scheme", "bytes/round", "sim-time", "eff-rate"
+    );
+    for kind in [Kind::AdaComp, Kind::Dryden, Kind::OneBit, Kind::TernGrad, Kind::None] {
+        let packets = make_packets(&layout, 8, kind, 50);
+        let mut topo = topology::build("ring").unwrap();
+        let mut fabric = Fabric::new(LinkModel::default());
+        topo.exchange(&packets, &lens, &mut fabric);
+        println!(
+            "{:<10} {:>14} {:>10.3}ms {:>13.1}x",
+            kind.name(),
+            fabric.stats.bytes_up,
+            fabric.stats.sim_time_s * 1e3,
+            fabric.stats.effective_rate(),
+        );
+    }
+}

@@ -1,0 +1,155 @@
+//! Pack/unpack micro-benchmarks: the L3 hot path.
+//!
+//! For every compression scheme, measures pack throughput (elements/s and
+//! GB/s of gradient processed) across layer sizes and L_T values, plus the
+//! wire encode/decode cost for AdaComp packets. This regenerates the
+//! numbers in EXPERIMENTS.md §Perf.
+//!
+//!   cargo bench --bench bench_pack
+
+use adacomp::compress::{self, wire, Config, Kind};
+use adacomp::models::{LayerKind, Layout};
+use adacomp::util::rng::Pcg32;
+use adacomp::util::timer::{fmt_ns, time_n, Stats};
+
+fn bench_scheme(kind: Kind, n: usize, lt: usize, iters: usize) -> (Stats, usize) {
+    let layout = Layout::from_specs(&[("w", &[n], LayerKind::Conv)]);
+    let cfg = Config {
+        lt_override: lt,
+        ..Config::with_kind(kind)
+    };
+    let mut c = compress::build(&cfg, &layout);
+    let mut rng = Pcg32::seeded(42);
+    let dw = rng.normal_vec(n, 0.1);
+    // steady state: warm the residues so selection counts are realistic
+    let mut sent = 0usize;
+    let samples = time_n(
+        || {
+            let p = c.pack_layer(0, &dw);
+            sent = p.sent();
+            std::hint::black_box(&p);
+        },
+        3,
+        iters,
+    );
+    (Stats::from(&samples), sent)
+}
+
+fn main() {
+    println!("# pack() throughput (per layer call, steady-state residues)");
+    println!(
+        "{:<10} {:>9} {:>6} {:>12} {:>12} {:>10} {:>8}",
+        "scheme", "n", "L_T", "mean", "p95", "Melem/s", "GB/s"
+    );
+    for kind in [
+        Kind::AdaComp,
+        Kind::LocalSelect,
+        Kind::Dryden,
+        Kind::OneBit,
+        Kind::TernGrad,
+        Kind::Strom,
+        Kind::None,
+    ] {
+        for (n, lt) in [(25_600usize, 50usize), (1_048_576, 50), (1_048_576, 500)] {
+            let iters = if n > 500_000 { 30 } else { 200 };
+            let (s, _sent) = bench_scheme(kind, n, lt, iters);
+            let melems = s.throughput(n as f64) / 1e6;
+            let gbs = s.throughput(n as f64 * 4.0) / 1e9;
+            println!(
+                "{:<10} {:>9} {:>6} {:>12} {:>12} {:>10.1} {:>8.2}",
+                kind.name(),
+                n,
+                lt,
+                fmt_ns(s.mean_ns),
+                fmt_ns(s.p95_ns),
+                melems,
+                gbs
+            );
+        }
+    }
+
+    println!("\n# adacomp wire encode+decode");
+    println!(
+        "{:<12} {:>9} {:>6} {:>12} {:>12} {:>10}",
+        "op", "n", "L_T", "mean", "p95", "GB/s"
+    );
+    for (n, lt) in [(25_600usize, 50usize), (1_048_576, 500)] {
+        let layout = Layout::from_specs(&[("w", &[n], LayerKind::Conv)]);
+        let cfg = Config {
+            lt_override: lt,
+            ..Config::with_kind(Kind::AdaComp)
+        };
+        let mut c = compress::build(&cfg, &layout);
+        let mut rng = Pcg32::seeded(7);
+        let dw = rng.normal_vec(n, 0.1);
+        let p = c.pack_layer(0, &dw);
+        let scale = p.val.iter().find(|v| **v != 0.0).map(|v| v.abs()).unwrap_or(1.0);
+
+        let iters = if n > 500_000 { 50 } else { 300 };
+        let enc = time_n(
+            || {
+                std::hint::black_box(wire::encode_adacomp(0, n, lt, scale, &p.idx, &p.val));
+            },
+            3,
+            iters,
+        );
+        let s = Stats::from(&enc);
+        println!(
+            "{:<12} {:>9} {:>6} {:>12} {:>12} {:>10.2}",
+            "encode",
+            n,
+            lt,
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.p95_ns),
+            s.throughput(n as f64 * 4.0) / 1e9
+        );
+        let bytes = wire::encode_adacomp(0, n, lt, scale, &p.idx, &p.val);
+        let dec = time_n(
+            || {
+                std::hint::black_box(wire::decode(&bytes).unwrap());
+            },
+            3,
+            iters,
+        );
+        let s = Stats::from(&dec);
+        println!(
+            "{:<12} {:>9} {:>6} {:>12} {:>12} {:>10.2}",
+            "decode",
+            n,
+            lt,
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.p95_ns),
+            s.throughput(n as f64 * 4.0) / 1e9
+        );
+    }
+
+    println!("\n# ablation: soft-threshold scale factor (paper studied 1.5-3.0)");
+    println!("{:<8} {:>12} {:>14}", "factor", "mean", "sent/bin");
+    for factor in [1.5f32, 2.0, 2.5, 3.0] {
+        let n = 1_048_576;
+        let layout = Layout::from_specs(&[("w", &[n], LayerKind::Conv)]);
+        let cfg = Config {
+            lt_override: 50,
+            scale_factor: factor,
+            ..Config::with_kind(Kind::AdaComp)
+        };
+        let mut c = compress::build(&cfg, &layout);
+        let mut rng = Pcg32::seeded(9);
+        let dw = rng.normal_vec(n, 0.1);
+        let mut sent = 0usize;
+        let samples = time_n(
+            || {
+                sent = c.pack_layer(0, &dw).sent();
+            },
+            2,
+            20,
+        );
+        let s = Stats::from(&samples);
+        println!(
+            "{:<8} {:>12} {:>14.2}",
+            factor,
+            fmt_ns(s.mean_ns),
+            sent as f64 / (n / 50) as f64
+        );
+    }
+}

@@ -1,0 +1,112 @@
+//! End-to-end step benchmark: the full Algorithm-1 loop (PJRT fwd/bwd +
+//! pack + exchange + update) per model, with a pack/exchange/update time
+//! breakdown — shows where the paper's "compression must be much cheaper
+//! than backprop" constraint lands on this testbed.
+//!
+//! Requires artifacts (skips models that are missing).
+//!
+//!   cargo bench --bench bench_step
+
+use adacomp::comm::{topology, Fabric, LinkModel};
+use adacomp::compress::{self, Config, Kind};
+use adacomp::harness::{dataset_for, defaults_for};
+use adacomp::models::Manifest;
+use adacomp::runtime::pjrt::PjrtExecutor;
+use adacomp::runtime::{Batch, Executor};
+use adacomp::util::timer::{fmt_ns, Stats, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    let dir = adacomp::harness::default_artifacts_dir();
+    let manifest = match Manifest::load(dir) {
+        Ok(m) => m,
+        Err(_) => {
+            println!("artifacts missing — run `make artifacts` first; skipping bench_step");
+            return Ok(());
+        }
+    };
+
+    println!(
+        "{:<12} {:>9} {:>6} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "model", "params", "batch", "step(hlo)", "pack", "exchange", "update", "pack-%"
+    );
+    for model in ["mnist_dnn", "cifar_cnn", "bn50_dnn_s", "char_lstm", "transformer"] {
+        if manifest.model(model).is_err() {
+            continue;
+        }
+        let meta = manifest.model(model)?.clone();
+        let params = manifest.load_init(&meta)?;
+        let mut exe = PjrtExecutor::new(&manifest, model)?;
+        let d = defaults_for(model);
+        let ds = dataset_for(model, 1, 512.max(d.batch * 2), 128, meta.seq_len)?;
+        let bs = meta.batch;
+        let mut batch = if ds.int_input() {
+            Batch::i32(vec![0; bs * ds.x_elems()], vec![0; bs * ds.y_elems()], bs)
+        } else {
+            Batch::f32(vec![0.0; bs * ds.x_elems()], vec![0; bs * ds.y_elems()], bs)
+        };
+        let idx: Vec<usize> = (0..bs).collect();
+        if batch.x_i32.is_empty() {
+            ds.fill(adacomp::data::Split::Train, &idx, adacomp::data::XBuf::F32(&mut batch.x_f32), &mut batch.y);
+        } else {
+            ds.fill(adacomp::data::Split::Train, &idx, adacomp::data::XBuf::I32(&mut batch.x_i32), &mut batch.y);
+        }
+
+        let cfg = Config::with_kind(Kind::AdaComp);
+        let mut comp = compress::build(&cfg, &meta.layout);
+        let mut topo = topology::build("ring").unwrap();
+        let mut fabric = Fabric::new(LinkModel::default());
+        let lens: Vec<usize> = meta.layout.layers.iter().map(|l| l.len()).collect();
+        let mut opt = adacomp::optim::Sgd::new(params.len(), 0.9);
+        let mut p = params.clone();
+
+        let iters = 8usize;
+        let (mut t_step, mut t_pack, mut t_ex, mut t_up) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        // warmup (compile)
+        let _ = exe.step(&p, &batch)?;
+        for _ in 0..iters {
+            let sw = Stopwatch::start();
+            let out = exe.step(&p, &batch)?;
+            t_step.push((sw.secs() * 1e9) as u64);
+
+            let sw = Stopwatch::start();
+            let packets: Vec<compress::Packet> = (0..meta.layout.num_layers())
+                .map(|li| comp.pack_layer(li, meta.layout.view(li, &out.grads)))
+                .collect();
+            t_pack.push((sw.secs() * 1e9) as u64);
+
+            let sw = Stopwatch::start();
+            let per_learner = vec![packets; 2];
+            let red = topo.exchange(&per_learner, &lens, &mut fabric);
+            t_ex.push((sw.secs() * 1e9) as u64);
+
+            let sw = Stopwatch::start();
+            let mut g = vec![0.0f32; p.len()];
+            for (li, s) in red.sums.iter().enumerate() {
+                meta.layout.view_mut(li, &mut g).copy_from_slice(s);
+            }
+            use adacomp::optim::Optimizer;
+            opt.step(&mut p, &g, 0.01);
+            t_up.push((sw.secs() * 1e9) as u64);
+        }
+        let (ss, sp, se, su) = (
+            Stats::from(&t_step),
+            Stats::from(&t_pack),
+            Stats::from(&t_ex),
+            Stats::from(&t_up),
+        );
+        println!(
+            "{:<12} {:>9} {:>6} {:>12} {:>12} {:>12} {:>12} {:>9.1}%",
+            model,
+            meta.layout.total,
+            bs,
+            fmt_ns(ss.mean_ns),
+            fmt_ns(sp.mean_ns),
+            fmt_ns(se.mean_ns),
+            fmt_ns(su.mean_ns),
+            100.0 * sp.mean_ns / ss.mean_ns
+        );
+    }
+    println!("\npack-% = compression cost relative to fwd/bwd — the paper requires this to be small");
+    Ok(())
+}

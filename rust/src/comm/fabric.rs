@@ -1,0 +1,130 @@
+//! Simulated interconnect substrate.
+//!
+//! The paper's testbed is N learner nodes exchanging gradients peer-to-peer
+//! over MPI. Here learners live in one process (the paper's *claims* are
+//! about convergence and bytes-on-the-wire, both fully determined by the
+//! synchronous-SGD semantics — see DESIGN.md §Substitutions), and this
+//! module provides the honest accounting: every packet is charged its real
+//! wire-format bytes, and an analytic alpha-beta (latency + bandwidth) model
+//! turns byte counts into simulated exchange time so benches can compare
+//! topologies and compression rates in seconds, not just bytes.
+
+/// Link parameters for the alpha-beta cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// Per-message latency (alpha), seconds.
+    pub latency_s: f64,
+    /// Link bandwidth (1/beta), bytes per second.
+    pub bandwidth_bps: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        // 10 GbE-class: 25us latency, 1.25 GB/s
+        LinkModel {
+            latency_s: 25e-6,
+            bandwidth_bps: 1.25e9,
+        }
+    }
+}
+
+impl LinkModel {
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// Byte + time accounting for one training run.
+#[derive(Debug, Clone, Default)]
+pub struct FabricStats {
+    /// Total bytes every learner pushed into the fabric.
+    pub bytes_up: u64,
+    /// Total bytes delivered to learners.
+    pub bytes_down: u64,
+    /// Number of exchange rounds.
+    pub rounds: u64,
+    /// Simulated communication seconds (sum over rounds of the critical path).
+    pub sim_time_s: f64,
+    /// What the same rounds would have cost uncompressed (dense f32).
+    pub dense_bytes_equiv: u64,
+}
+
+impl FabricStats {
+    /// End-to-end compression rate actually achieved on the wire.
+    pub fn effective_rate(&self) -> f64 {
+        if self.bytes_up == 0 {
+            1.0
+        } else {
+            self.dense_bytes_equiv as f64 / self.bytes_up as f64
+        }
+    }
+}
+
+/// The fabric: link model + running stats.
+#[derive(Debug, Clone, Default)]
+pub struct Fabric {
+    pub link: LinkModel,
+    pub stats: FabricStats,
+}
+
+impl Fabric {
+    pub fn new(link: LinkModel) -> Fabric {
+        Fabric {
+            link,
+            stats: FabricStats::default(),
+        }
+    }
+
+    /// Record one exchange round.
+    ///
+    /// * `per_learner_up`: bytes each learner sent,
+    /// * `per_learner_down`: bytes each learner received,
+    /// * `critical_path_s`: the topology's computed round time,
+    /// * `dense_equiv`: what dense f32 would have sent in total.
+    pub fn record_round(
+        &mut self,
+        per_learner_up: &[usize],
+        per_learner_down: &[usize],
+        critical_path_s: f64,
+        dense_equiv: usize,
+    ) {
+        self.stats.bytes_up += per_learner_up.iter().map(|&b| b as u64).sum::<u64>();
+        self.stats.bytes_down += per_learner_down.iter().map(|&b| b as u64).sum::<u64>();
+        self.stats.rounds += 1;
+        self.stats.sim_time_s += critical_path_s;
+        self.stats.dense_bytes_equiv += dense_equiv as u64;
+    }
+
+    pub fn reset(&mut self) {
+        self.stats = FabricStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_model() {
+        let l = LinkModel {
+            latency_s: 1e-3,
+            bandwidth_bps: 1e6,
+        };
+        // 1ms latency + 1000 bytes at 1MB/s = 1ms -> 2ms
+        assert!((l.transfer_time(1000) - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut f = Fabric::new(LinkModel::default());
+        f.record_round(&[100, 100], &[200, 200], 0.5, 1600);
+        f.record_round(&[100, 100], &[200, 200], 0.5, 1600);
+        assert_eq!(f.stats.bytes_up, 400);
+        assert_eq!(f.stats.bytes_down, 800);
+        assert_eq!(f.stats.rounds, 2);
+        assert!((f.stats.sim_time_s - 1.0).abs() < 1e-12);
+        assert!((f.stats.effective_rate() - 8.0).abs() < 1e-12);
+        f.reset();
+        assert_eq!(f.stats.rounds, 0);
+    }
+}

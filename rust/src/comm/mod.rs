@@ -1,0 +1,7 @@
+//! Communication substrate: simulated fabric + exchange topologies.
+
+pub mod fabric;
+pub mod topology;
+
+pub use fabric::{Fabric, FabricStats, LinkModel};
+pub use topology::{ParamServer, Reduced, Ring, Topology};

@@ -1,0 +1,223 @@
+//! Exchange topologies over compressed gradient packets.
+//!
+//! Both topologies implement the same *semantics* — every learner ends the
+//! round holding the elementwise **sum** of all learners' packets (synchronous
+//! SGD with identical weights, as in the paper) — but charge the fabric
+//! differently:
+//!
+//! * `ParamServer`: learners push packets up (their wire bytes); the server
+//!   reduces and broadcasts the merged *sparse union* back down. Round time =
+//!   max(upload) + max(download) with the server's in/out links serialized
+//!   across learners (single-port model).
+//! * `Ring`: all-gather of compressed packets around the ring (the
+//!   paper-cited NCCL-style ring, Luehr'16). Each learner forwards every
+//!   other learner's packet once: N-1 hops, per-hop time = latency + max
+//!   chunk / bandwidth; all links run in parallel.
+//!
+//! Packets stay compressed end-to-end (this is the point of the paper:
+//! reduction of *sparse ternary* vectors), and the reduce is a dense
+//! accumulate into a reusable buffer.
+
+use super::fabric::Fabric;
+use crate::compress::Packet;
+
+/// The dense per-layer sum of every learner's packet.
+pub struct Reduced {
+    /// One dense buffer per layer, layer order.
+    pub sums: Vec<Vec<f32>>,
+}
+
+pub trait Topology: Send {
+    fn name(&self) -> &'static str;
+
+    /// One synchronous exchange round.
+    ///
+    /// `per_learner[l]` holds learner l's packets, one per layer, in layer
+    /// order. `layer_lens` gives each layer's dense length. Returns the
+    /// per-layer dense sums and records bytes/time on `fabric`.
+    fn exchange(
+        &mut self,
+        per_learner: &[Vec<Packet>],
+        layer_lens: &[usize],
+        fabric: &mut Fabric,
+    ) -> Reduced;
+}
+
+fn reduce_dense(per_learner: &[Vec<Packet>], layer_lens: &[usize]) -> Reduced {
+    let mut sums: Vec<Vec<f32>> = layer_lens.iter().map(|&n| vec![0.0; n]).collect();
+    for packets in per_learner {
+        assert_eq!(packets.len(), layer_lens.len(), "one packet per layer");
+        for p in packets {
+            p.add_into(&mut sums[p.layer]);
+        }
+    }
+    Reduced { sums }
+}
+
+fn dense_equiv(layer_lens: &[usize], n_learners: usize) -> usize {
+    4 * layer_lens.iter().sum::<usize>() * n_learners
+}
+
+/// Centralized parameter-server topology.
+pub struct ParamServer;
+
+impl Topology for ParamServer {
+    fn name(&self) -> &'static str {
+        "ps"
+    }
+
+    fn exchange(
+        &mut self,
+        per_learner: &[Vec<Packet>],
+        layer_lens: &[usize],
+        fabric: &mut Fabric,
+    ) -> Reduced {
+        let n = per_learner.len();
+        let up: Vec<usize> = per_learner
+            .iter()
+            .map(|ps| ps.iter().map(|p| p.wire_bytes).sum())
+            .collect();
+        // The merged update the server broadcasts: the union of sparse
+        // packets. Upper-bounded by the sum of packet payloads (duplicates
+        // merge); we charge the union size per layer.
+        let mut down_one = 0usize;
+        for layer in 0..layer_lens.len() {
+            let mut total_sent: usize = per_learner.iter().map(|ps| ps[layer].sent()).sum();
+            total_sent = total_sent.min(layer_lens[layer]);
+            // merged packet: sent elements as (index u32, value f32) + header
+            let dense_cost = 4 * layer_lens[layer];
+            down_one += (8 * total_sent + super::super::compress::wire::HEADER_BYTES).min(dense_cost + super::super::compress::wire::HEADER_BYTES);
+        }
+        let down = vec![down_one; n];
+
+        // Single-port server: uploads serialize into the server, downloads
+        // serialize out; learners' own links run in parallel.
+        let t_up: f64 = up.iter().map(|&b| fabric.link.transfer_time(b)).sum();
+        let t_down: f64 = down.iter().map(|&b| fabric.link.transfer_time(b)).sum();
+        fabric.record_round(&up, &down, t_up + t_down, dense_equiv(layer_lens, n));
+
+        reduce_dense(per_learner, layer_lens)
+    }
+}
+
+/// Ring all-gather of compressed packets.
+pub struct Ring;
+
+impl Topology for Ring {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn exchange(
+        &mut self,
+        per_learner: &[Vec<Packet>],
+        layer_lens: &[usize],
+        fabric: &mut Fabric,
+    ) -> Reduced {
+        let n = per_learner.len();
+        let own: Vec<usize> = per_learner
+            .iter()
+            .map(|ps| ps.iter().map(|p| p.wire_bytes).sum())
+            .collect();
+        // Every packet traverses n-1 hops: learner l transmits, per hop, the
+        // packet originated by (l - hop); all links are busy in parallel, so
+        // hop time = latency + max packet / bandwidth.
+        let mut up = vec![0usize; n];
+        let mut down = vec![0usize; n];
+        let mut time = 0.0f64;
+        if n > 1 {
+            for hop in 0..n - 1 {
+                let mut hop_max = 0usize;
+                for l in 0..n {
+                    let src = (l + n - hop) % n;
+                    up[l] += own[src];
+                    down[(l + 1) % n] += own[src];
+                    hop_max = hop_max.max(own[src]);
+                }
+                time += fabric.link.transfer_time(hop_max);
+            }
+        }
+        fabric.record_round(&up, &down, time, dense_equiv(layer_lens, n));
+        reduce_dense(per_learner, layer_lens)
+    }
+}
+
+/// Parse a topology by name.
+pub fn build(name: &str) -> Option<Box<dyn Topology>> {
+    match name {
+        "ps" | "param_server" => Some(Box::new(ParamServer)),
+        "ring" => Some(Box::new(Ring)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::fabric::LinkModel;
+
+    fn sparse(layer: usize, n: usize, idx: Vec<u32>, val: Vec<f32>) -> Packet {
+        let wire = 16 + 2 * idx.len();
+        Packet {
+            layer,
+            n,
+            idx,
+            val,
+            wire_bytes: wire,
+            paper_bits: 0,
+        }
+    }
+
+    fn learners() -> (Vec<Vec<Packet>>, Vec<usize>) {
+        let l0 = vec![sparse(0, 6, vec![0, 3], vec![1.0, -1.0])];
+        let l1 = vec![sparse(0, 6, vec![0, 5], vec![0.5, 2.0])];
+        (vec![l0, l1], vec![6])
+    }
+
+    #[test]
+    fn ps_and_ring_same_sums() {
+        let (pk, lens) = learners();
+        let mut f1 = Fabric::new(LinkModel::default());
+        let mut f2 = Fabric::new(LinkModel::default());
+        let a = ParamServer.exchange(&pk, &lens, &mut f1);
+        let b = Ring.exchange(&pk, &lens, &mut f2);
+        assert_eq!(a.sums, b.sums);
+        assert_eq!(a.sums[0], vec![1.5, 0.0, 0.0, -1.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn ring_bytes_scale_with_n_minus_1() {
+        let (pk, lens) = learners();
+        let mut f = Fabric::new(LinkModel::default());
+        Ring.exchange(&pk, &lens, &mut f);
+        // each learner's 20-byte packet travels n-1 = 1 hop
+        assert_eq!(f.stats.bytes_up, 40);
+        assert_eq!(f.stats.rounds, 1);
+    }
+
+    #[test]
+    fn ps_charges_upload_plus_broadcast() {
+        let (pk, lens) = learners();
+        let mut f = Fabric::new(LinkModel::default());
+        ParamServer.exchange(&pk, &lens, &mut f);
+        assert_eq!(f.stats.bytes_up, 40);
+        assert!(f.stats.bytes_down > 0);
+        assert!(f.stats.sim_time_s > 0.0);
+    }
+
+    #[test]
+    fn single_learner_ring_is_free() {
+        let pk = vec![vec![sparse(0, 4, vec![1], vec![1.0])]];
+        let mut f = Fabric::new(LinkModel::default());
+        let r = Ring.exchange(&pk, &[4], &mut f);
+        assert_eq!(f.stats.bytes_up, 0);
+        assert_eq!(r.sums[0], vec![0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn build_by_name() {
+        assert!(build("ps").is_some());
+        assert!(build("ring").is_some());
+        assert!(build("mesh").is_none());
+    }
+}

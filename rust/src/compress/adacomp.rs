@@ -1,0 +1,299 @@
+//! AdaComp — Adaptive Residual Gradient Compression (paper Algorithm 2).
+//!
+//! This is the L3 hot path: it runs per learner, per layer, per step. The
+//! implementation is two passes over the layer and one over the bins, with
+//! all scratch reused across calls (no per-step allocation in steady state):
+//!
+//!   pass 1 (fold+max): residue <- residue + dW (now holds G), track per-bin
+//!            max |G| into `gmax`
+//!   scale  = mean(|gmax|)                         (one pass over bins)
+//!   pass 2 (select): h = G + (c-1)*dW; where |h| >= gmax(bin) and
+//!            gmax > 0: emit (idx, sign(G)*scale), residue <- G - sent
+//!
+//! The soft-threshold scale factor c defaults to the paper's 2.0, making
+//! `h = G + dW = residue_prev + 2*dW` — "the sum of its previous residue
+//! plus the latest gradient multiplied by a scale-factor".
+//!
+//! Semantics are bit-identical to `python/compile/kernels/ref.py` (the
+//! golden-vector test in rust/tests/golden.rs enforces this), including the
+//! `gmax > 0` guard documented there.
+
+use super::{residue::ResidueStore, wire, Compressor, Config, Kind, Packet};
+use crate::models::Layout;
+
+pub struct AdaComp {
+    residues: ResidueStore,
+    /// Resolved L_T per layer.
+    lts: Vec<usize>,
+    /// h = G + (scale_factor - 1) * dW.
+    sf_minus_1: f32,
+    per_bin_scale: bool,
+    /// Scratch: per-bin maxima (reused across layers/steps).
+    gmax: Vec<f32>,
+    /// Scratch: output staging.
+    idx: Vec<u32>,
+    val: Vec<f32>,
+}
+
+impl AdaComp {
+    pub fn new(cfg: &Config, layout: &Layout) -> AdaComp {
+        AdaComp {
+            residues: ResidueStore::new(layout),
+            lts: layout.layers.iter().map(|l| cfg.lt_for(l.kind).max(1)).collect(),
+            sf_minus_1: cfg.scale_factor - 1.0,
+            per_bin_scale: cfg.per_bin_scale,
+            gmax: Vec::new(),
+            idx: Vec::new(),
+            val: Vec::new(),
+        }
+    }
+
+    pub fn lt(&self, layer: usize) -> usize {
+        self.lts[layer]
+    }
+}
+
+impl Compressor for AdaComp {
+    fn kind(&self) -> Kind {
+        Kind::AdaComp
+    }
+
+    fn pack_layer(&mut self, layer: usize, dw: &[f32]) -> Packet {
+        let lt = self.lts[layer];
+        let r = self.residues.layer_mut(layer);
+        let n = r.len();
+        assert_eq!(dw.len(), n, "layer {layer} gradient length mismatch");
+        let nbins = n.div_ceil(lt);
+
+        // Pass 1a: fold dW into the residue (now holds G). Straight-line
+        // slice zip — bounds-check free, autovectorizes.
+        for (ri, &di) in r.iter_mut().zip(dw.iter()) {
+            *ri += di;
+        }
+
+        // Pass 1b: per-bin max |G|. chunks() handles the ragged last bin.
+        self.gmax.clear();
+        self.gmax.reserve(nbins);
+        for bin in r.chunks(lt) {
+            // 4-lane unrolled abs-max: breaks the reduction dependency chain
+            // so LLVM vectorizes (plain fold(max) stays scalar).
+            let mut m = [0.0f32; 4];
+            let (quads, tail) = bin.split_at(bin.len() & !3);
+            for q in quads.chunks_exact(4) {
+                m[0] = m[0].max(q[0].abs());
+                m[1] = m[1].max(q[1].abs());
+                m[2] = m[2].max(q[2].abs());
+                m[3] = m[3].max(q[3].abs());
+            }
+            let mut mm = m[0].max(m[1]).max(m[2].max(m[3]));
+            for &x in tail {
+                mm = mm.max(x.abs());
+            }
+            self.gmax.push(mm);
+        }
+
+        // Layer quantization scale: mean of per-bin maxima (all >= 0).
+        let scale = self.gmax.iter().sum::<f32>() / nbins as f32;
+
+        // Pass 2: soft-threshold select + ternarize + residue update.
+        // Selection is sparse (a few per bin), so the loop is compare-heavy:
+        // keep the common path (no send) branch-minimal.
+        self.idx.clear();
+        self.val.clear();
+        let c1 = self.sf_minus_1;
+        for (b, (rb, db)) in r.chunks_mut(lt).zip(dw.chunks(lt)).enumerate() {
+            let gm = self.gmax[b];
+            if gm <= 0.0 {
+                continue; // all-zero bin: nothing informative to send
+            }
+            let q = if self.per_bin_scale { gm } else { scale };
+            let base = (b * lt) as u32;
+            for (j, (ri, &di)) in rb.iter_mut().zip(db.iter()).enumerate() {
+                let g = *ri;
+                // NB: not mul_add — without the fma target-feature that
+                // lowers to a libm call and costs 5x the whole loop.
+                let h = g + c1 * di;
+                if h.abs() >= gm {
+                    let sent = if g > 0.0 {
+                        q
+                    } else if g < 0.0 {
+                        -q
+                    } else {
+                        0.0
+                    };
+                    self.idx.push(base + j as u32);
+                    self.val.push(sent);
+                    *ri = g - sent;
+                }
+            }
+        }
+
+        let wire = wire::encode_adacomp(layer, n, lt, scale, &self.idx, &self.val);
+        let paper_bits = self.idx.len() * wire::slot_bits(lt) + 32;
+        Packet {
+            layer,
+            n,
+            // move the staging buffers out instead of cloning them; the next
+            // pack re-grows them once (amortized free, no memcpy per call)
+            idx: std::mem::take(&mut self.idx),
+            val: std::mem::take(&mut self.val),
+            wire_bytes: wire.len(),
+            paper_bits,
+        }
+    }
+
+    fn residue(&self, layer: usize) -> &[f32] {
+        self.residues.layer(layer)
+    }
+
+    fn reset(&mut self) {
+        self.residues.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{LayerKind, Layout};
+    use crate::util::rng::Pcg32;
+
+    fn layout_one(n: usize, kind: LayerKind) -> Layout {
+        Layout::from_specs(&[("w", &[n], kind)])
+    }
+
+    fn pack_once(n: usize, lt_override: usize, dw: &[f32]) -> (Packet, Vec<f32>) {
+        let layout = layout_one(n, LayerKind::Conv);
+        let cfg = Config {
+            lt_override,
+            ..Config::with_kind(Kind::AdaComp)
+        };
+        let mut c = AdaComp::new(&cfg, &layout);
+        let p = c.pack_layer(0, dw);
+        let res = c.residue(0).to_vec();
+        (p, res)
+    }
+
+    #[test]
+    fn conservation_first_step() {
+        // With zero initial residue: G = dW, and sent + residue == dW.
+        let mut rng = Pcg32::seeded(1);
+        let dw = rng.normal_vec(1000, 1.0);
+        let (p, res) = pack_once(1000, 10, &dw);
+        let mut recon = res.clone();
+        p.add_into(&mut recon);
+        for (a, b) in recon.iter().zip(dw.iter()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sent_values_are_ternary() {
+        let mut rng = Pcg32::seeded(2);
+        let dw = rng.normal_vec(500, 0.1);
+        let (p, _) = pack_once(500, 50, &dw);
+        assert!(!p.val.is_empty());
+        let scale = p.val.iter().find(|v| **v != 0.0).map(|v| v.abs()).unwrap();
+        for v in &p.val {
+            assert!(*v == 0.0 || (v.abs() - scale).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn indices_strictly_increasing() {
+        let mut rng = Pcg32::seeded(3);
+        let dw = rng.normal_vec(2048, 1.0);
+        let (p, _) = pack_once(2048, 64, &dw);
+        for w in p.idx.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn zero_layer_sends_nothing() {
+        let (p, res) = pack_once(100, 10, &vec![0.0; 100]);
+        assert_eq!(p.sent(), 0);
+        assert!(res.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn residue_accumulates_when_not_sent() {
+        // Tiny uniform dW: each bin sends only its max-ish entries; the rest
+        // accumulates. After two identical steps the unsent residues double.
+        let layout = layout_one(100, LayerKind::Conv);
+        let cfg = Config {
+            lt_override: 10,
+            ..Config::with_kind(Kind::AdaComp)
+        };
+        let mut c = AdaComp::new(&cfg, &layout);
+        let mut rng = Pcg32::seeded(4);
+        let dw = rng.normal_vec(100, 1.0);
+        let p1 = c.pack_layer(0, &dw);
+        let r1 = c.residue(0).to_vec();
+        let _ = p1;
+        let p2 = c.pack_layer(0, &dw);
+        // conservation across both steps: sum(sent) + residue == 2*dW
+        let mut total = c.residue(0).to_vec();
+        p2.add_into(&mut total);
+        let mut sent1 = vec![0.0; 100];
+        // p1 values were already removed from r1; reconstruct: r1 + p1 = dw
+        p1_check(&r1, &p1, &dw);
+        p1.add_into(&mut sent1);
+        for i in 0..100 {
+            let want = 2.0 * dw[i];
+            let got = total[i] + sent1[i];
+            assert!((want - got).abs() < 1e-4, "{i}: {want} vs {got}");
+        }
+    }
+
+    fn p1_check(r1: &[f32], p1: &Packet, dw: &[f32]) {
+        let mut recon = r1.to_vec();
+        p1.add_into(&mut recon);
+        for (a, b) in recon.iter().zip(dw.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_matches() {
+        let mut rng = Pcg32::seeded(5);
+        let dw = rng.normal_vec(777, 0.5);
+        let layout = layout_one(777, LayerKind::Conv);
+        let cfg = Config::with_kind(Kind::AdaComp); // lt 50 for conv
+        let mut c = AdaComp::new(&cfg, &layout);
+        let p = c.pack_layer(0, &dw);
+        let bytes = wire::encode_adacomp(0, p.n, 50, scale_of(&p), &p.idx, &p.val);
+        let q = wire::decode(&bytes).unwrap();
+        assert_eq!(p.idx, q.idx);
+        for (a, b) in p.val.iter().zip(q.val.iter()) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+
+    fn scale_of(p: &Packet) -> f32 {
+        p.val.iter().find(|v| **v != 0.0).map(|v| v.abs()).unwrap_or(0.0)
+    }
+
+    #[test]
+    fn soft_threshold_sends_more_than_ls_style_max() {
+        // With dW comparable to residue, AdaComp sends > 1 element per bin on
+        // average (the paper: "typically up to 5 per bin").
+        let mut rng = Pcg32::seeded(6);
+        let n = 10_000;
+        let dw = rng.normal_vec(n, 1.0);
+        let (p, _) = pack_once(n, 50, &dw);
+        let nbins = n / 50;
+        assert!(p.sent() > nbins, "sent {} <= bins {}", p.sent(), nbins);
+        assert!(p.sent() < n / 2);
+    }
+
+    #[test]
+    fn per_kind_lt_defaults() {
+        let layout = Layout::from_specs(&[
+            ("c", &[100], LayerKind::Conv),
+            ("f", &[1000], LayerKind::Fc),
+        ]);
+        let c = AdaComp::new(&Config::default(), &layout);
+        assert_eq!(c.lt(0), 50);
+        assert_eq!(c.lt(1), 500);
+    }
+}

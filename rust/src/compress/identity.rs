@@ -1,0 +1,66 @@
+//! No-compression baseline: transmits raw dense f32 gradients.
+
+use super::{residue::ResidueStore, Compressor, Kind, Packet};
+#[cfg(test)]
+use super::wire;
+use crate::models::Layout;
+
+pub struct Identity {
+    /// Zeros — identity never holds back gradient mass.
+    zeros: ResidueStore,
+}
+
+impl Identity {
+    pub fn new(layout: &Layout) -> Identity {
+        Identity {
+            zeros: ResidueStore::new(layout),
+        }
+    }
+}
+
+impl Compressor for Identity {
+    fn kind(&self) -> Kind {
+        Kind::None
+    }
+
+    fn pack_layer(&mut self, layer: usize, dw: &[f32]) -> Packet {
+        assert_eq!(self.zeros.layer(layer).len(), dw.len());
+        // wire size is analytic (header + 4 bytes/element, exactly what
+        // wire::encode_dense_f32 produces) — no need to materialize bytes
+        // on the hot path; the equality is pinned by the test below.
+        Packet::dense(layer, dw.to_vec())
+    }
+
+    fn residue(&self, layer: usize) -> &[f32] {
+        self.zeros.layer(layer)
+    }
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::test_layout;
+
+    #[test]
+    fn analytic_wire_size_matches_encoder() {
+        let layout = test_layout();
+        let mut c = Identity::new(&layout);
+        let dw = vec![0.25f32; 600];
+        let p = c.pack_layer(0, &dw);
+        assert_eq!(p.wire_bytes, wire::encode_dense_f32(0, &dw).len());
+    }
+
+    #[test]
+    fn passthrough() {
+        let layout = test_layout();
+        let mut c = Identity::new(&layout);
+        let dw = vec![1.5f32; 600];
+        let p = c.pack_layer(0, &dw);
+        assert!(p.is_dense());
+        assert_eq!(p.val, dw);
+        assert!((p.rate_wire() - 1.0).abs() < 0.01);
+        assert!(c.residue(0).iter().all(|&x| x == 0.0));
+    }
+}

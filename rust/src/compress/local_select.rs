@@ -1,0 +1,160 @@
+//! Local Selection (LS) — the paper's ablation of AdaComp (Fig 4/5/6):
+//! identical bin structure and ternary quantization, but *no soft threshold*.
+//! Each bin transmits exactly its max-|G| element. The paper shows this
+//! scheme's residual gradients explode at high compression rates because the
+//! fixed one-per-bin budget cannot adapt to layers/steps that need more.
+
+use super::{residue::ResidueStore, wire, Compressor, Config, Kind, Packet};
+use crate::models::Layout;
+
+pub struct LocalSelect {
+    residues: ResidueStore,
+    lts: Vec<usize>,
+    per_bin_scale: bool,
+    gmax: Vec<f32>,
+    arg: Vec<u32>,
+    idx: Vec<u32>,
+    val: Vec<f32>,
+}
+
+impl LocalSelect {
+    pub fn new(cfg: &Config, layout: &Layout) -> LocalSelect {
+        LocalSelect {
+            residues: ResidueStore::new(layout),
+            lts: layout.layers.iter().map(|l| cfg.lt_for(l.kind).max(1)).collect(),
+            per_bin_scale: cfg.per_bin_scale,
+            gmax: Vec::new(),
+            arg: Vec::new(),
+            idx: Vec::new(),
+            val: Vec::new(),
+        }
+    }
+}
+
+impl Compressor for LocalSelect {
+    fn kind(&self) -> Kind {
+        Kind::LocalSelect
+    }
+
+    fn pack_layer(&mut self, layer: usize, dw: &[f32]) -> Packet {
+        let lt = self.lts[layer];
+        let r = self.residues.layer_mut(layer);
+        let n = r.len();
+        assert_eq!(dw.len(), n);
+        let nbins = n.div_ceil(lt);
+
+        self.gmax.clear();
+        self.arg.clear();
+        for b in 0..nbins {
+            let lo = b * lt;
+            let hi = ((b + 1) * lt).min(n);
+            let mut m = 0.0f32;
+            let mut am = lo;
+            for i in lo..hi {
+                let g = r[i] + dw[i];
+                r[i] = g;
+                if g.abs() > m {
+                    m = g.abs();
+                    am = i;
+                }
+            }
+            self.gmax.push(m);
+            self.arg.push(am as u32);
+        }
+        let scale = self.gmax.iter().sum::<f32>() / nbins as f32;
+
+        self.idx.clear();
+        self.val.clear();
+        for b in 0..nbins {
+            let gm = self.gmax[b];
+            if gm <= 0.0 {
+                continue;
+            }
+            let i = self.arg[b] as usize;
+            let q = if self.per_bin_scale { gm } else { scale };
+            let sent = if r[i] > 0.0 { q } else { -q }; // |r[i]| = gm > 0
+            self.idx.push(i as u32);
+            self.val.push(sent);
+            r[i] -= sent;
+        }
+
+        let wire_bytes = wire::encode_adacomp(layer, n, lt, scale, &self.idx, &self.val).len();
+        Packet {
+            layer,
+            n,
+            idx: self.idx.clone(),
+            val: self.val.clone(),
+            wire_bytes,
+            paper_bits: self.idx.len() * wire::slot_bits(lt) + 32,
+        }
+    }
+
+    fn residue(&self, layer: usize) -> &[f32] {
+        self.residues.layer(layer)
+    }
+
+    fn reset(&mut self) {
+        self.residues.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{LayerKind, Layout};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn sends_exactly_one_per_nonzero_bin() {
+        let layout = Layout::from_specs(&[("w", &[1000], LayerKind::Conv)]);
+        let cfg = Config {
+            lt_override: 10,
+            ..Config::with_kind(Kind::LocalSelect)
+        };
+        let mut c = LocalSelect::new(&cfg, &layout);
+        let mut rng = Pcg32::seeded(1);
+        let dw = rng.normal_vec(1000, 1.0);
+        let p = c.pack_layer(0, &dw);
+        assert_eq!(p.sent(), 100); // one per bin
+    }
+
+    #[test]
+    fn conservation() {
+        let layout = Layout::from_specs(&[("w", &[512], LayerKind::Fc)]);
+        let cfg = Config {
+            lt_override: 64,
+            ..Config::with_kind(Kind::LocalSelect)
+        };
+        let mut c = LocalSelect::new(&cfg, &layout);
+        let mut rng = Pcg32::seeded(2);
+        let dw = rng.normal_vec(512, 0.3);
+        let p = c.pack_layer(0, &dw);
+        let mut recon = c.residue(0).to_vec();
+        p.add_into(&mut recon);
+        for (a, b) in recon.iter().zip(dw.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn residue_grows_without_adaptation() {
+        // Feed a gradient whose bins have many similar-magnitude elements:
+        // LS sends 1/bin so unsent mass accumulates linearly (the Fig 5
+        // mechanism, before the divergence feedback kicks in via training).
+        let layout = Layout::from_specs(&[("w", &[100], LayerKind::Conv)]);
+        let cfg = Config {
+            lt_override: 50,
+            ..Config::with_kind(Kind::LocalSelect)
+        };
+        let mut c = LocalSelect::new(&cfg, &layout);
+        let dw: Vec<f32> = (0..100).map(|i| 1.0 + 0.001 * i as f32).collect();
+        let mut prev = 0.0;
+        for _ in 0..10 {
+            c.pack_layer(0, &dw);
+            let norm: f32 = c.residue(0).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!(norm >= prev * 0.9);
+            prev = norm;
+        }
+        assert!(prev > 5.0, "residue norm should accumulate, got {prev}");
+    }
+}

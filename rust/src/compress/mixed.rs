@@ -1,0 +1,98 @@
+//! Per-layer-kind scheme mixing.
+//!
+//! The paper's Fig 1 experiment compresses the FC layer with Dryden top-0.3%
+//! while the conv layers are (a) left uncompressed or (b) compressed with
+//! 1-bit quantization — i.e. *different schemes per layer kind*. `Mixed`
+//! routes each layer to the compressor for its kind; each sub-compressor
+//! owns a full residue store but only ever touches its own layers.
+
+use super::{Compressor, Config, Kind, Packet};
+use crate::models::{LayerKind, Layout};
+
+pub struct Mixed {
+    conv: Box<dyn Compressor>,
+    other: Box<dyn Compressor>,
+    is_conv: Vec<bool>,
+}
+
+impl Mixed {
+    pub fn new(conv_cfg: &Config, other_cfg: &Config, layout: &Layout) -> Mixed {
+        Mixed {
+            conv: super::build_single(conv_cfg, layout),
+            other: super::build_single(other_cfg, layout),
+            is_conv: layout
+                .layers
+                .iter()
+                .map(|l| l.kind == LayerKind::Conv)
+                .collect(),
+        }
+    }
+}
+
+impl Compressor for Mixed {
+    fn kind(&self) -> Kind {
+        // reported scheme: the non-conv side (the paper names runs after the
+        // FC treatment, e.g. "Dryden 0.3% + conv 1-bit")
+        self.other.kind()
+    }
+
+    fn pack_layer(&mut self, layer: usize, dw: &[f32]) -> Packet {
+        if self.is_conv[layer] {
+            self.conv.pack_layer(layer, dw)
+        } else {
+            self.other.pack_layer(layer, dw)
+        }
+    }
+
+    fn residue(&self, layer: usize) -> &[f32] {
+        if self.is_conv[layer] {
+            self.conv.residue(layer)
+        } else {
+            self.other.residue(layer)
+        }
+    }
+
+    fn reset(&mut self) {
+        self.conv.reset();
+        self.other.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::test_layout;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn routes_by_kind() {
+        let layout = test_layout(); // layer 0 conv (600), layer 1 fc (1200)
+        let conv_cfg = Config::with_kind(Kind::None);
+        let fc_cfg = Config::with_kind(Kind::Dryden);
+        let mut m = Mixed::new(&conv_cfg, &fc_cfg, &layout);
+        let mut rng = Pcg32::seeded(1);
+        let dw0 = rng.normal_vec(600, 1.0);
+        let dw1 = rng.normal_vec(1200, 1.0);
+        let p0 = m.pack_layer(0, &dw0);
+        let p1 = m.pack_layer(1, &dw1);
+        assert!(p0.is_dense(), "conv side should be uncompressed");
+        assert!(!p1.is_dense(), "fc side should be sparse top-k");
+        assert_eq!(p1.sent(), (1200.0f64 * 0.003).round() as usize);
+    }
+
+    #[test]
+    fn residues_tracked_per_side() {
+        let layout = test_layout();
+        let mut m = Mixed::new(
+            &Config::with_kind(Kind::OneBit),
+            &Config::with_kind(Kind::Dryden),
+            &layout,
+        );
+        let mut rng = Pcg32::seeded(2);
+        let dw1 = rng.normal_vec(1200, 1.0);
+        m.pack_layer(1, &dw1);
+        // fc residue nonzero (top-k leaves most mass), conv residue untouched
+        assert!(m.residue(1).iter().any(|&x| x != 0.0));
+        assert!(m.residue(0).iter().all(|&x| x == 0.0));
+    }
+}

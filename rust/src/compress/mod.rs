@@ -1,0 +1,308 @@
+//! Gradient compression engines — the paper's contribution (AdaComp) plus
+//! every baseline its evaluation compares against.
+//!
+//! All residual-gradient schemes share the error-feedback skeleton from the
+//! paper's Background section: each learner keeps an *accumulated residual
+//! gradient* per parameter; each step folds the fresh gradient `dW` into the
+//! residue, transmits a compressed subset, and keeps the untransmitted mass
+//! locally:
+//!
+//! ```text
+//! G        = residue + dW
+//! sent     = select(G, ...)          // scheme-specific
+//! Gq       = quantize(G[sent])       // scheme-specific
+//! residue' = G - Gq  on sent, G elsewhere
+//! ```
+//!
+//! | scheme       | select                                  | quantize            |
+//! |--------------|------------------------------------------|---------------------|
+//! | `adacomp`    | per-bin soft threshold |H|>=max|G| (bin) | ternary, layer scale|
+//! | `ls`         | per-bin max only (ablation of adacomp)   | ternary, layer scale|
+//! | `dryden`     | global top-pi% of |G| (quickselect)      | 1-bit, +/- means    |
+//! | `onebit`     | everything (dense)                       | 1-bit, +/- means    |
+//! | `terngrad`   | stochastic (no residue — unbiased)       | ternary, max scale  |
+//! | `strom`      | fixed absolute threshold tau             | +/- tau             |
+//! | `none`       | everything                               | raw f32             |
+
+pub mod adacomp;
+pub mod dryden;
+pub mod identity;
+pub mod local_select;
+pub mod mixed;
+pub mod onebit;
+pub mod quantize;
+pub mod residue;
+pub mod strom;
+pub mod terngrad;
+pub mod wire;
+
+use crate::models::Layout;
+
+/// A compressed gradient for one layer, ready for exchange.
+///
+/// `idx`/`val` is the canonical in-memory form every topology understands;
+/// `wire` is the scheme's actual byte encoding (what the simulated fabric
+/// charges for, and what `wire::decode` round-trips in tests).
+#[derive(Debug, Clone)]
+pub struct Packet {
+    pub layer: usize,
+    /// Dense length of the layer.
+    pub n: usize,
+    /// Indices of transmitted elements (strictly increasing). Empty for
+    /// dense packets.
+    pub idx: Vec<u32>,
+    /// Transmitted values; for dense packets has length `n` and `idx` is empty.
+    pub val: Vec<f32>,
+    /// Scheme wire-format size in bytes (header + payload).
+    pub wire_bytes: usize,
+    /// The paper's idealized accounting (bits): 8 or 16 bits per sparse
+    /// element depending on L_T, 32 per dense f32, etc. Used for the
+    /// "Effective Compression Rate" the figures report.
+    pub paper_bits: usize,
+}
+
+impl Packet {
+    pub fn dense(layer: usize, val: Vec<f32>) -> Packet {
+        let n = val.len();
+        Packet {
+            layer,
+            n,
+            idx: Vec::new(),
+            val,
+            wire_bytes: 4 * n + wire::HEADER_BYTES,
+            paper_bits: 32 * n,
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        self.idx.is_empty() && self.val.len() == self.n
+    }
+
+    /// Number of transmitted elements.
+    pub fn sent(&self) -> usize {
+        if self.is_dense() {
+            self.n
+        } else {
+            self.idx.len()
+        }
+    }
+
+    /// Accumulate this packet into a dense buffer (the reduction primitive).
+    pub fn add_into(&self, acc: &mut [f32]) {
+        assert_eq!(acc.len(), self.n, "layer {} length mismatch", self.layer);
+        if self.is_dense() {
+            crate::tensor::ops::axpy(1.0, &self.val, acc);
+        } else {
+            for (&i, &v) in self.idx.iter().zip(self.val.iter()) {
+                acc[i as usize] += v;
+            }
+        }
+    }
+
+    /// Effective compression rate vs 32-bit floats, from real wire bytes.
+    pub fn rate_wire(&self) -> f64 {
+        4.0 * self.n as f64 / self.wire_bytes as f64
+    }
+
+    /// Effective compression rate under the paper's idealized accounting.
+    pub fn rate_paper(&self) -> f64 {
+        32.0 * self.n as f64 / self.paper_bits.max(1) as f64
+    }
+}
+
+/// A gradient compressor bound to a model layout. Stateful: owns the
+/// per-layer residual gradients (and any scheme-specific state).
+pub trait Compressor: Send {
+    fn kind(&self) -> Kind;
+
+    /// Fold `dw` into layer `layer`'s residue, select + quantize, and return
+    /// the packet to exchange. `dw` must have the layer's dense length.
+    fn pack_layer(&mut self, layer: usize, dw: &[f32]) -> Packet;
+
+    /// Residual gradient for metrics (Fig 5/6). Dense, layer length.
+    fn residue(&self, layer: usize) -> &[f32];
+
+    /// Drop all state (new training run).
+    fn reset(&mut self);
+}
+
+/// Scheme selector, CLI-parsable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    AdaComp,
+    LocalSelect,
+    Dryden,
+    OneBit,
+    TernGrad,
+    Strom,
+    None,
+}
+
+impl Kind {
+    pub fn parse(s: &str) -> Option<Kind> {
+        Some(match s {
+            "adacomp" => Kind::AdaComp,
+            "ls" | "local_select" => Kind::LocalSelect,
+            "dryden" | "topk" => Kind::Dryden,
+            "onebit" | "1bit" => Kind::OneBit,
+            "terngrad" => Kind::TernGrad,
+            "strom" | "threshold" => Kind::Strom,
+            "none" | "identity" => Kind::None,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kind::AdaComp => "adacomp",
+            Kind::LocalSelect => "ls",
+            Kind::Dryden => "dryden",
+            Kind::OneBit => "onebit",
+            Kind::TernGrad => "terngrad",
+            Kind::Strom => "strom",
+            Kind::None => "none",
+        }
+    }
+}
+
+/// Per-scheme knobs; unused fields are ignored by other schemes.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub kind: Kind,
+    /// AdaComp / LS: bin length for conv layers (paper default 50).
+    pub lt_conv: usize,
+    /// AdaComp / LS: bin length for fc/lstm/embed layers (paper default 500).
+    pub lt_fc: usize,
+    /// AdaComp: override L_T for *all* layers (Fig 4 sweeps this); 0 = per-kind.
+    pub lt_override: usize,
+    /// AdaComp: soft-threshold scale factor (paper studied 1.5-3.0, chose 2).
+    pub scale_factor: f32,
+    /// Dryden: fraction of elements sent (paper example: 0.003 = top 0.3%).
+    pub topk_fraction: f64,
+    /// Strom: absolute threshold tau.
+    pub strom_tau: f32,
+    /// TernGrad: rng seed (stochastic quantization).
+    pub seed: u64,
+    /// Quantize per-bin instead of per-layer (ablation; paper uses per-layer).
+    pub per_bin_scale: bool,
+    /// Override scheme for conv layers only (Fig 1 mixes schemes per kind);
+    /// `None` = use `kind` everywhere.
+    pub kind_conv: Option<Kind>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            kind: Kind::AdaComp,
+            lt_conv: 50,
+            lt_fc: 500,
+            lt_override: 0,
+            scale_factor: 2.0,
+            topk_fraction: 0.003,
+            strom_tau: 0.01,
+            seed: 0x5eed,
+            per_bin_scale: false,
+            kind_conv: None,
+        }
+    }
+}
+
+impl Config {
+    pub fn with_kind(kind: Kind) -> Config {
+        Config {
+            kind,
+            ..Default::default()
+        }
+    }
+
+    /// Effective L_T for a layer kind.
+    pub fn lt_for(&self, kind: crate::models::LayerKind) -> usize {
+        if self.lt_override > 0 {
+            return self.lt_override;
+        }
+        match kind {
+            crate::models::LayerKind::Conv => self.lt_conv,
+            _ => self.lt_fc,
+        }
+    }
+}
+
+/// Instantiate a compressor for a model layout, honoring a per-kind mix.
+pub fn build(cfg: &Config, layout: &Layout) -> Box<dyn Compressor> {
+    if let Some(conv_kind) = cfg.kind_conv {
+        if conv_kind != cfg.kind {
+            let conv_cfg = Config {
+                kind: conv_kind,
+                kind_conv: None,
+                ..cfg.clone()
+            };
+            let other_cfg = Config {
+                kind_conv: None,
+                ..cfg.clone()
+            };
+            return Box::new(mixed::Mixed::new(&conv_cfg, &other_cfg, layout));
+        }
+    }
+    build_single(cfg, layout)
+}
+
+/// Instantiate a single-scheme compressor (no mixing).
+pub(crate) fn build_single(cfg: &Config, layout: &Layout) -> Box<dyn Compressor> {
+    match cfg.kind {
+        Kind::AdaComp => Box::new(adacomp::AdaComp::new(cfg, layout)),
+        Kind::LocalSelect => Box::new(local_select::LocalSelect::new(cfg, layout)),
+        Kind::Dryden => Box::new(dryden::Dryden::new(cfg, layout)),
+        Kind::OneBit => Box::new(onebit::OneBit::new(layout)),
+        Kind::TernGrad => Box::new(terngrad::TernGrad::new(cfg, layout)),
+        Kind::Strom => Box::new(strom::Strom::new(cfg, layout)),
+        Kind::None => Box::new(identity::Identity::new(layout)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [
+            Kind::AdaComp,
+            Kind::LocalSelect,
+            Kind::Dryden,
+            Kind::OneBit,
+            Kind::TernGrad,
+            Kind::Strom,
+            Kind::None,
+        ] {
+            assert_eq!(Kind::parse(k.name()), Some(k));
+        }
+        assert_eq!(Kind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn packet_dense_roundtrip() {
+        let p = Packet::dense(0, vec![1.0, -2.0, 3.0]);
+        assert!(p.is_dense());
+        assert_eq!(p.sent(), 3);
+        let mut acc = vec![1.0, 1.0, 1.0];
+        p.add_into(&mut acc);
+        assert_eq!(acc, vec![2.0, -1.0, 4.0]);
+    }
+
+    #[test]
+    fn packet_sparse_add() {
+        let p = Packet {
+            layer: 0,
+            n: 5,
+            idx: vec![1, 4],
+            val: vec![2.0, -1.0],
+            wire_bytes: 10,
+            paper_bits: 16,
+        };
+        let mut acc = vec![0.0; 5];
+        p.add_into(&mut acc);
+        assert_eq!(acc, vec![0.0, 2.0, 0.0, 0.0, -1.0]);
+        assert!((p.rate_paper() - 10.0).abs() < 1e-9);
+        assert!((p.rate_wire() - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,127 @@
+//! Seide et al. 2014 — 1-bit SGD with error feedback.
+//!
+//! Every element of G = residue + dW is transmitted as one sign bit; the
+//! receiver reconstructs positives as the mean of the positive part and
+//! negatives as the mean of the negative part. Fixed 32x compression,
+//! originally for FC layers only — Fig 1 of the paper shows that applying it
+//! to conv layers (while FC is also compressed) diverges.
+
+use super::{quantize, residue::ResidueStore, wire, Compressor, Kind, Packet};
+use crate::models::Layout;
+
+pub struct OneBit {
+    residues: ResidueStore,
+    signs: Vec<bool>,
+    val: Vec<f32>,
+}
+
+impl OneBit {
+    pub fn new(layout: &Layout) -> OneBit {
+        OneBit {
+            residues: ResidueStore::new(layout),
+            signs: Vec::new(),
+            val: Vec::new(),
+        }
+    }
+}
+
+impl Compressor for OneBit {
+    fn kind(&self) -> Kind {
+        Kind::OneBit
+    }
+
+    fn pack_layer(&mut self, layer: usize, dw: &[f32]) -> Packet {
+        self.residues.fold(layer, dw);
+        let r = self.residues.layer_mut(layer);
+        let n = r.len();
+        let (pos, neg) = quantize::signed_means(r.iter().copied());
+
+        self.signs.clear();
+        self.val.clear();
+        for g in r.iter_mut() {
+            let isneg = *g < 0.0;
+            let sent = if isneg { neg } else { pos };
+            self.signs.push(isneg);
+            self.val.push(sent);
+            *g -= sent;
+        }
+
+        let wire_bytes = wire::encode_onebit(layer, &self.signs, pos, neg).len();
+        Packet {
+            layer,
+            n,
+            idx: Vec::new(),
+            val: self.val.clone(),
+            wire_bytes,
+            paper_bits: n + 64, // 1 bit per element + two reconstruction means
+        }
+    }
+
+    fn residue(&self, layer: usize) -> &[f32] {
+        self.residues.layer(layer)
+    }
+
+    fn reset(&mut self) {
+        self.residues.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{LayerKind, Layout};
+    use crate::util::rng::Pcg32;
+
+    fn make(n: usize) -> OneBit {
+        OneBit::new(&Layout::from_specs(&[("w", &[n], LayerKind::Fc)]))
+    }
+
+    #[test]
+    fn dense_packet_two_levels() {
+        let mut c = make(100);
+        let mut rng = Pcg32::seeded(1);
+        let dw = rng.normal_vec(100, 1.0);
+        let p = c.pack_layer(0, &dw);
+        assert!(p.is_dense());
+        let mut levels: Vec<f32> = p.val.clone();
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        levels.dedup();
+        assert_eq!(levels.len(), 2);
+        assert!(levels[0] < 0.0 && levels[1] > 0.0);
+    }
+
+    #[test]
+    fn conservation() {
+        let mut c = make(64);
+        let mut rng = Pcg32::seeded(2);
+        let dw = rng.normal_vec(64, 0.5);
+        let p = c.pack_layer(0, &dw);
+        let mut recon = c.residue(0).to_vec();
+        p.add_into(&mut recon);
+        for (a, b) in recon.iter().zip(dw.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn compression_is_about_32x() {
+        let mut c = make(8000);
+        let mut rng = Pcg32::seeded(3);
+        let dw = rng.normal_vec(8000, 1.0);
+        let p = c.pack_layer(0, &dw);
+        let rate = p.rate_wire();
+        assert!(rate > 28.0 && rate <= 32.0, "rate {rate}");
+    }
+
+    #[test]
+    fn mean_preserving_on_each_side() {
+        // sum of sent == sum of G on first step (pos/neg means preserve sums)
+        let mut c = make(256);
+        let mut rng = Pcg32::seeded(4);
+        let dw = rng.normal_vec(256, 1.0);
+        let p = c.pack_layer(0, &dw);
+        let sum_sent: f32 = p.val.iter().sum();
+        let sum_g: f32 = dw.iter().sum();
+        assert!((sum_sent - sum_g).abs() < 1e-3, "{sum_sent} vs {sum_g}");
+    }
+}

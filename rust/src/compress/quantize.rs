@@ -1,0 +1,105 @@
+//! Quantization codecs shared by the compression schemes.
+
+/// Ternary value code carried in the 2-bit slot field of the AdaComp wire
+/// format: 0, +scale, -scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tern {
+    Zero,
+    Pos,
+    Neg,
+}
+
+impl Tern {
+    #[inline]
+    pub fn of(x: f32) -> Tern {
+        if x > 0.0 {
+            Tern::Pos
+        } else if x < 0.0 {
+            Tern::Neg
+        } else {
+            Tern::Zero
+        }
+    }
+    #[inline]
+    pub fn code(self) -> u8 {
+        match self {
+            Tern::Zero => 0,
+            Tern::Pos => 1,
+            Tern::Neg => 2,
+        }
+    }
+    #[inline]
+    pub fn from_code(c: u8) -> Tern {
+        match c & 3 {
+            1 => Tern::Pos,
+            2 => Tern::Neg,
+            _ => Tern::Zero,
+        }
+    }
+    #[inline]
+    pub fn apply(self, scale: f32) -> f32 {
+        match self {
+            Tern::Zero => 0.0,
+            Tern::Pos => scale,
+            Tern::Neg => -scale,
+        }
+    }
+}
+
+/// sign(x) * scale with sign(0) = 0 (matches jnp.sign semantics in ref.py).
+#[inline]
+pub fn ternarize(x: f32, scale: f32) -> f32 {
+    Tern::of(x).apply(scale)
+}
+
+/// Means of the positive and negative parts of a slice (1-bit reconstruction
+/// values, Seide'14 / Dryden'16). Returns (pos_mean, neg_mean) with 0.0 when
+/// a side is empty.
+pub fn signed_means(xs: impl Iterator<Item = f32>) -> (f32, f32) {
+    let (mut ps, mut pn, mut ns, mut nn) = (0.0f64, 0usize, 0.0f64, 0usize);
+    for x in xs {
+        if x >= 0.0 {
+            ps += x as f64;
+            pn += 1;
+        } else {
+            ns += x as f64;
+            nn += 1;
+        }
+    }
+    (
+        if pn > 0 { (ps / pn as f64) as f32 } else { 0.0 },
+        if nn > 0 { (ns / nn as f64) as f32 } else { 0.0 },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tern_roundtrip() {
+        for t in [Tern::Zero, Tern::Pos, Tern::Neg] {
+            assert_eq!(Tern::from_code(t.code()), t);
+        }
+        assert_eq!(Tern::of(3.0), Tern::Pos);
+        assert_eq!(Tern::of(-0.1), Tern::Neg);
+        assert_eq!(Tern::of(0.0), Tern::Zero);
+    }
+
+    #[test]
+    fn ternarize_values() {
+        assert_eq!(ternarize(5.0, 0.5), 0.5);
+        assert_eq!(ternarize(-0.001, 0.5), -0.5);
+        assert_eq!(ternarize(0.0, 0.5), 0.0);
+    }
+
+    #[test]
+    fn means() {
+        let (p, n) = signed_means([1.0, 3.0, -2.0, -4.0].into_iter());
+        assert_eq!(p, 2.0);
+        assert_eq!(n, -3.0);
+        let (p, n) = signed_means([1.0, 2.0].into_iter());
+        assert_eq!(p, 1.5);
+        assert_eq!(n, 0.0);
+    }
+}

@@ -1,0 +1,71 @@
+//! Per-layer residual-gradient storage shared by the error-feedback schemes.
+
+use crate::models::Layout;
+
+/// Dense per-layer residue buffers.
+#[derive(Debug, Clone)]
+pub struct ResidueStore {
+    bufs: Vec<Vec<f32>>,
+}
+
+impl ResidueStore {
+    pub fn new(layout: &Layout) -> ResidueStore {
+        ResidueStore {
+            bufs: layout.layers.iter().map(|l| vec![0.0; l.len()]).collect(),
+        }
+    }
+
+    pub fn layer(&self, i: usize) -> &[f32] {
+        &self.bufs[i]
+    }
+
+    pub fn layer_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.bufs[i]
+    }
+
+    /// G = residue + dW, in place; the buffer then holds G.
+    pub fn fold(&mut self, i: usize, dw: &[f32]) {
+        let r = &mut self.bufs[i];
+        assert_eq!(r.len(), dw.len(), "layer {i} gradient length mismatch");
+        for (ri, &di) in r.iter_mut().zip(dw.iter()) {
+            *ri += di;
+        }
+    }
+
+    pub fn reset(&mut self) {
+        for b in self.bufs.iter_mut() {
+            b.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.bufs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::test_layout;
+
+    #[test]
+    fn fold_accumulates() {
+        let layout = test_layout();
+        let mut rs = ResidueStore::new(&layout);
+        let dw = vec![1.0f32; 600];
+        rs.fold(0, &dw);
+        rs.fold(0, &dw);
+        assert_eq!(rs.layer(0)[0], 2.0);
+        assert_eq!(rs.layer(1)[0], 0.0);
+        rs.reset();
+        assert_eq!(rs.layer(0)[0], 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_panics() {
+        let layout = test_layout();
+        let mut rs = ResidueStore::new(&layout);
+        rs.fold(0, &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,121 @@
+//! Strom 2015 — fixed absolute-threshold residual compression.
+//!
+//! Elements of G = residue + dW with |G| > tau are transmitted as +/- tau;
+//! the residue keeps G -/+ tau (only tau is subtracted, not the full value).
+//! The paper's critique: tau is a brittle global hyper-parameter ("these
+//! papers do not discuss techniques for determining an optimal threshold").
+
+use super::{residue::ResidueStore, wire, Compressor, Config, Kind, Packet};
+use crate::models::Layout;
+
+pub struct Strom {
+    residues: ResidueStore,
+    tau: f32,
+    idx: Vec<u32>,
+    val: Vec<f32>,
+}
+
+impl Strom {
+    pub fn new(cfg: &Config, layout: &Layout) -> Strom {
+        Strom {
+            residues: ResidueStore::new(layout),
+            tau: cfg.strom_tau,
+            idx: Vec::new(),
+            val: Vec::new(),
+        }
+    }
+}
+
+impl Compressor for Strom {
+    fn kind(&self) -> Kind {
+        Kind::Strom
+    }
+
+    fn pack_layer(&mut self, layer: usize, dw: &[f32]) -> Packet {
+        self.residues.fold(layer, dw);
+        let r = self.residues.layer_mut(layer);
+        let n = r.len();
+        let tau = self.tau;
+
+        self.idx.clear();
+        self.val.clear();
+        for (i, g) in r.iter_mut().enumerate() {
+            if *g > tau {
+                self.idx.push(i as u32);
+                self.val.push(tau);
+                *g -= tau;
+            } else if *g < -tau {
+                self.idx.push(i as u32);
+                self.val.push(-tau);
+                *g += tau;
+            }
+        }
+
+        let wire_bytes = {
+            let neg: Vec<bool> = self.val.iter().map(|v| *v < 0.0).collect();
+            wire::encode_sparse_sign(layer, n, tau, -tau, &self.idx, |j| neg[j]).len()
+        };
+        Packet {
+            layer,
+            n,
+            idx: self.idx.clone(),
+            val: self.val.clone(),
+            wire_bytes,
+            paper_bits: self.idx.len() * 32 + 32,
+        }
+    }
+
+    fn residue(&self, layer: usize) -> &[f32] {
+        self.residues.layer(layer)
+    }
+
+    fn reset(&mut self) {
+        self.residues.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{LayerKind, Layout};
+
+    fn make(n: usize, tau: f32) -> Strom {
+        let layout = Layout::from_specs(&[("w", &[n], LayerKind::Fc)]);
+        let cfg = Config {
+            strom_tau: tau,
+            ..Config::with_kind(Kind::Strom)
+        };
+        Strom::new(&cfg, &layout)
+    }
+
+    #[test]
+    fn only_above_threshold_sent() {
+        let mut c = make(5, 1.0);
+        let p = c.pack_layer(0, &[0.5, 1.5, -2.0, -0.9, 1.0]);
+        assert_eq!(p.idx, vec![1, 2]);
+        assert_eq!(p.val, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn residue_keeps_excess() {
+        let mut c = make(2, 1.0);
+        c.pack_layer(0, &[2.5, -3.0]);
+        assert!((c.residue(0)[0] - 1.5).abs() < 1e-6);
+        assert!((c.residue(0)[1] + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn repeated_steps_drain_residue() {
+        // large one-off gradient drains tau per step
+        let mut c = make(1, 1.0);
+        c.pack_layer(0, &[5.0]); // sends tau, residue 4.0
+        for _ in 0..3 {
+            let p = c.pack_layer(0, &[0.0]);
+            assert_eq!(p.sent(), 1);
+        }
+        // residue is now exactly tau; |G| > tau is strict, so nothing moves
+        let p = c.pack_layer(0, &[0.0]);
+        assert_eq!(p.sent(), 0);
+        assert!((c.residue(0)[0] - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,149 @@
+//! Wen et al. 2017 — TernGrad: stochastic ternary gradient quantization.
+//!
+//! No residue / error feedback: quantization is *unbiased* by construction.
+//! Each element of dW becomes sign(dW)*s_t with probability |dW|/s_t
+//! (s_t = max |dW| of the layer), else 0. Dense 2-bit wire format -> the
+//! 16x ceiling the paper cites ("without the use of sparsity, the
+//! compression rate in their approach is limited to 16x").
+
+use super::{quantize::Tern, residue::ResidueStore, wire, Compressor, Config, Kind, Packet};
+use crate::models::Layout;
+use crate::util::rng::Pcg32;
+
+pub struct TernGrad {
+    /// Kept only so `residue()` has something to return (always zeros):
+    /// TernGrad is residue-free.
+    zeros: ResidueStore,
+    rng: Pcg32,
+    codes: Vec<Tern>,
+    val: Vec<f32>,
+}
+
+impl TernGrad {
+    pub fn new(cfg: &Config, layout: &Layout) -> TernGrad {
+        TernGrad {
+            zeros: ResidueStore::new(layout),
+            rng: Pcg32::new(cfg.seed, 1313),
+            codes: Vec::new(),
+            val: Vec::new(),
+        }
+    }
+}
+
+impl Compressor for TernGrad {
+    fn kind(&self) -> Kind {
+        Kind::TernGrad
+    }
+
+    fn pack_layer(&mut self, layer: usize, dw: &[f32]) -> Packet {
+        let n = dw.len();
+        assert_eq!(self.zeros.layer(layer).len(), n);
+        let st = dw.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+
+        self.codes.clear();
+        self.val.clear();
+        if st > 0.0 {
+            let inv = 1.0 / st;
+            for &g in dw {
+                let p = g.abs() * inv;
+                let t = if self.rng.uniform() < p {
+                    if g > 0.0 {
+                        Tern::Pos
+                    } else {
+                        Tern::Neg
+                    }
+                } else {
+                    Tern::Zero
+                };
+                self.codes.push(t);
+                self.val.push(t.apply(st));
+            }
+        } else {
+            self.codes.resize(n, Tern::Zero);
+            self.val.resize(n, 0.0);
+        }
+
+        let wire_bytes =
+            wire::encode_ternary_dense(layer, n, st, self.codes.iter().copied()).len();
+        Packet {
+            layer,
+            n,
+            idx: Vec::new(),
+            val: self.val.clone(),
+            wire_bytes,
+            paper_bits: 2 * n + 32,
+        }
+    }
+
+    fn residue(&self, layer: usize) -> &[f32] {
+        self.zeros.layer(layer)
+    }
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{LayerKind, Layout};
+
+    fn make(n: usize, seed: u64) -> TernGrad {
+        let layout = Layout::from_specs(&[("w", &[n], LayerKind::Conv)]);
+        let cfg = Config {
+            seed,
+            ..Config::with_kind(Kind::TernGrad)
+        };
+        TernGrad::new(&cfg, &layout)
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        // average many independent quantizations of the same dW
+        let n = 64;
+        let dw: Vec<f32> = (0..n).map(|i| (i as f32 / n as f32) - 0.5).collect();
+        let mut acc = vec![0.0f64; n];
+        let trials = 3000;
+        for t in 0..trials {
+            let mut c = make(n, t as u64);
+            let p = c.pack_layer(0, &dw);
+            for (a, &v) in acc.iter_mut().zip(p.val.iter()) {
+                *a += v as f64;
+            }
+        }
+        for (i, a) in acc.iter().enumerate() {
+            let mean = *a / trials as f64;
+            assert!(
+                (mean - dw[i] as f64).abs() < 0.05,
+                "i={i} mean={mean} want={}",
+                dw[i]
+            );
+        }
+    }
+
+    #[test]
+    fn values_are_ternary_at_max_scale() {
+        let mut c = make(100, 7);
+        let dw: Vec<f32> = (0..100).map(|i| (i as f32) * 0.01 - 0.3).collect();
+        let p = c.pack_layer(0, &dw);
+        let st = dw.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        for v in &p.val {
+            assert!(*v == 0.0 || (v.abs() - st).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn compression_is_about_16x() {
+        let mut c = make(8192, 1);
+        let dw = vec![0.5; 8192];
+        let p = c.pack_layer(0, &dw);
+        let rate = p.rate_wire();
+        assert!(rate > 15.0 && rate <= 16.0, "rate {rate}");
+    }
+
+    #[test]
+    fn zero_gradient_sends_zeros() {
+        let mut c = make(10, 2);
+        let p = c.pack_layer(0, &[0.0; 10]);
+        assert!(p.val.iter().all(|&v| v == 0.0));
+    }
+}

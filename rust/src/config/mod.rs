@@ -1,0 +1,284 @@
+//! Experiment configuration files.
+//!
+//! A JSON spec fully describing a run (model, compression, topology,
+//! schedule, learners), loadable via `adacomp train --config exp.json` and
+//! saved next to results for provenance. Mirrors `train::TrainConfig` +
+//! `compress::Config`; unknown keys are rejected so typos fail loudly.
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::LinkModel;
+use crate::compress;
+use crate::optim::LrSchedule;
+use crate::train::TrainConfig;
+use crate::util::json::{self, Json};
+
+/// Parse a TrainConfig from a JSON experiment spec.
+pub fn from_json(v: &Json) -> Result<TrainConfig> {
+    let obj = v.as_obj().context("experiment spec must be an object")?;
+    const KNOWN: &[&str] = &[
+        "name", "model", "learners", "batch_per_learner", "epochs",
+        "steps_per_epoch", "lr", "lr_schedule", "optimizer", "momentum",
+        "topology", "seed", "clip_norm", "divergence_loss", "compression",
+        "link",
+    ];
+    for k in obj.keys() {
+        if !KNOWN.contains(&k.as_str()) {
+            bail!("unknown experiment key '{k}' (known: {KNOWN:?})");
+        }
+    }
+    let mut cfg = TrainConfig {
+        model_name: v
+            .get("model")
+            .as_str()
+            .context("'model' is required")?
+            .to_string(),
+        ..TrainConfig::default()
+    };
+    cfg.run_name = v
+        .get("name")
+        .as_str()
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| cfg.model_name.clone());
+    if let Some(n) = v.get("learners").as_usize() {
+        cfg.n_learners = n.max(1);
+    }
+    if let Some(b) = v.get("batch_per_learner").as_usize() {
+        cfg.batch_per_learner = b.max(1);
+    }
+    if let Some(e) = v.get("epochs").as_usize() {
+        cfg.epochs = e;
+    }
+    if let Some(s) = v.get("steps_per_epoch").as_usize() {
+        cfg.steps_per_epoch = s;
+    }
+    if let Some(o) = v.get("optimizer").as_str() {
+        cfg.optimizer = o.to_string();
+    }
+    if let Some(m) = v.get("momentum").as_f64() {
+        cfg.momentum = m as f32;
+    }
+    if let Some(t) = v.get("topology").as_str() {
+        cfg.topology = t.to_string();
+    }
+    if let Some(s) = v.get("seed").as_i64() {
+        cfg.seed = s as u64;
+    }
+    if let Some(c) = v.get("clip_norm").as_f64() {
+        cfg.clip_norm = c as f32;
+    }
+    if let Some(d) = v.get("divergence_loss").as_f64() {
+        cfg.divergence_loss = d;
+    }
+    if let Some(lr) = v.get("lr").as_f64() {
+        cfg.lr = LrSchedule::Constant(lr as f32);
+    }
+    if v.get("lr_schedule") != &Json::Null {
+        cfg.lr = lr_schedule_from(v.get("lr_schedule"))?;
+    }
+    if v.get("compression") != &Json::Null {
+        cfg.compression = compression_from(v.get("compression"))?;
+    }
+    if v.get("link") != &Json::Null {
+        cfg.link = LinkModel {
+            latency_s: v.get("link").get("latency_s").as_f64().unwrap_or(25e-6),
+            bandwidth_bps: v
+                .get("link")
+                .get("bandwidth_bps")
+                .as_f64()
+                .unwrap_or(1.25e9),
+        };
+    }
+    Ok(cfg)
+}
+
+fn lr_schedule_from(v: &Json) -> Result<LrSchedule> {
+    let kind = v.get("kind").as_str().context("lr_schedule.kind")?;
+    Ok(match kind {
+        "constant" => LrSchedule::Constant(
+            v.get("lr").as_f64().context("lr_schedule.lr")? as f32
+        ),
+        "step" => LrSchedule::StepDecay {
+            base: v.get("base").as_f64().context("base")? as f32,
+            gamma: v.get("gamma").as_f64().unwrap_or(0.1) as f32,
+            every_epochs: v.get("every_epochs").as_usize().unwrap_or(10),
+        },
+        "milestones" => LrSchedule::Milestones {
+            base: v.get("base").as_f64().context("base")? as f32,
+            points: v
+                .get("points")
+                .as_arr()
+                .context("points")?
+                .iter()
+                .map(|p| {
+                    Ok((
+                        p.get("epoch").as_usize().context("epoch")?,
+                        p.get("lr").as_f64().context("lr")? as f32,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        },
+        other => bail!("unknown lr schedule kind '{other}'"),
+    })
+}
+
+fn compression_from(v: &Json) -> Result<compress::Config> {
+    let mut c = compress::Config::default();
+    if let Some(s) = v.get("scheme").as_str() {
+        c.kind = compress::Kind::parse(s)
+            .with_context(|| format!("unknown scheme '{s}'"))?;
+    }
+    if let Some(s) = v.get("scheme_conv").as_str() {
+        c.kind_conv = Some(
+            compress::Kind::parse(s).with_context(|| format!("unknown scheme '{s}'"))?,
+        );
+    }
+    if let Some(x) = v.get("lt_conv").as_usize() {
+        c.lt_conv = x;
+    }
+    if let Some(x) = v.get("lt_fc").as_usize() {
+        c.lt_fc = x;
+    }
+    if let Some(x) = v.get("lt").as_usize() {
+        c.lt_override = x;
+    }
+    if let Some(x) = v.get("scale_factor").as_f64() {
+        c.scale_factor = x as f32;
+    }
+    if let Some(x) = v.get("topk_fraction").as_f64() {
+        c.topk_fraction = x;
+    }
+    if let Some(x) = v.get("strom_tau").as_f64() {
+        c.strom_tau = x as f32;
+    }
+    if let Some(b) = v.get("per_bin_scale").as_bool() {
+        c.per_bin_scale = b;
+    }
+    Ok(c)
+}
+
+/// Serialize a TrainConfig back to a JSON spec (provenance next to results).
+pub fn to_json(cfg: &TrainConfig) -> Json {
+    let lr = match &cfg.lr {
+        LrSchedule::Constant(v) => json::obj(vec![
+            ("kind", json::s("constant")),
+            ("lr", json::num(*v as f64)),
+        ]),
+        LrSchedule::StepDecay {
+            base,
+            gamma,
+            every_epochs,
+        } => json::obj(vec![
+            ("kind", json::s("step")),
+            ("base", json::num(*base as f64)),
+            ("gamma", json::num(*gamma as f64)),
+            ("every_epochs", json::num(*every_epochs as f64)),
+        ]),
+        LrSchedule::Milestones { base, points } => json::obj(vec![
+            ("kind", json::s("milestones")),
+            ("base", json::num(*base as f64)),
+            (
+                "points",
+                json::arr(
+                    points
+                        .iter()
+                        .map(|(e, l)| {
+                            json::obj(vec![
+                                ("epoch", json::num(*e as f64)),
+                                ("lr", json::num(*l as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    };
+    let comp = json::obj(vec![
+        ("scheme", json::s(cfg.compression.kind.name())),
+        ("lt_conv", json::num(cfg.compression.lt_conv as f64)),
+        ("lt_fc", json::num(cfg.compression.lt_fc as f64)),
+        ("lt", json::num(cfg.compression.lt_override as f64)),
+        ("scale_factor", json::num(cfg.compression.scale_factor as f64)),
+        ("topk_fraction", json::num(cfg.compression.topk_fraction)),
+        ("strom_tau", json::num(cfg.compression.strom_tau as f64)),
+        ("per_bin_scale", Json::Bool(cfg.compression.per_bin_scale)),
+    ]);
+    json::obj(vec![
+        ("name", json::s(&cfg.run_name)),
+        ("model", json::s(&cfg.model_name)),
+        ("learners", json::num(cfg.n_learners as f64)),
+        ("batch_per_learner", json::num(cfg.batch_per_learner as f64)),
+        ("epochs", json::num(cfg.epochs as f64)),
+        ("steps_per_epoch", json::num(cfg.steps_per_epoch as f64)),
+        ("optimizer", json::s(&cfg.optimizer)),
+        ("momentum", json::num(cfg.momentum as f64)),
+        ("topology", json::s(&cfg.topology)),
+        ("seed", json::num(cfg.seed as f64)),
+        ("clip_norm", json::num(cfg.clip_norm as f64)),
+        ("lr_schedule", lr),
+        ("compression", comp),
+    ])
+}
+
+/// Load from a file path.
+pub fn load(path: &str) -> Result<TrainConfig> {
+    let txt = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let v = Json::from_str_slice(&txt).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    from_json(&v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_roundtrip() {
+        let txt = r#"{
+            "name": "exp1", "model": "cifar_cnn", "learners": 8,
+            "batch_per_learner": 16, "epochs": 20, "optimizer": "adam",
+            "topology": "ps", "seed": 5, "clip_norm": 1.5,
+            "lr_schedule": {"kind": "milestones", "base": 0.02,
+                            "points": [{"epoch": 10, "lr": 0.004}]},
+            "compression": {"scheme": "adacomp", "lt_conv": 50, "lt_fc": 500,
+                            "scale_factor": 2.5, "per_bin_scale": true}
+        }"#;
+        let v = Json::from_str_slice(txt).unwrap();
+        let cfg = from_json(&v).unwrap();
+        assert_eq!(cfg.model_name, "cifar_cnn");
+        assert_eq!(cfg.n_learners, 8);
+        assert_eq!(cfg.optimizer, "adam");
+        assert_eq!(cfg.compression.scale_factor, 2.5);
+        assert!(cfg.compression.per_bin_scale);
+        assert!((cfg.lr.at(10) - 0.004).abs() < 1e-7);
+        // serialize and parse again
+        let back = from_json(&to_json(&cfg)).unwrap();
+        assert_eq!(back.n_learners, cfg.n_learners);
+        assert_eq!(back.compression.kind, cfg.compression.kind);
+        assert_eq!(back.clip_norm, cfg.clip_norm);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let v = Json::from_str_slice(r#"{"model": "m", "learnerz": 3}"#).unwrap();
+        let err = from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("learnerz"), "{err}");
+    }
+
+    #[test]
+    fn requires_model() {
+        let v = Json::from_str_slice(r#"{"learners": 3}"#).unwrap();
+        assert!(from_json(&v).is_err());
+    }
+
+    #[test]
+    fn mixed_scheme_spec() {
+        let v = Json::from_str_slice(
+            r#"{"model": "cifar_cnn",
+                "compression": {"scheme": "dryden", "scheme_conv": "onebit"}}"#,
+        )
+        .unwrap();
+        let cfg = from_json(&v).unwrap();
+        assert_eq!(cfg.compression.kind, compress::Kind::Dryden);
+        assert_eq!(cfg.compression.kind_conv, Some(compress::Kind::OneBit));
+    }
+}

@@ -1,0 +1,139 @@
+//! BN50-like synthetic speech frames: 440-dim fbank-context vectors,
+//! configurable state (class) count.
+//!
+//! The paper's BN50 is an internal IBM corpus: 16M frames of 40-dim fbank
+//! features with +/-5 frame context (440 dims) and 5999 CD-HMM state
+//! targets. We synthesize class-conditional smooth feature vectors: each
+//! state has a prototype (drawn once), and a frame is prototype + colored
+//! noise (temporally smooth across the context window, like real speech).
+
+use super::{sample_rng, Dataset, Split, XBuf};
+use crate::util::rng::Pcg32;
+
+const DIM: usize = 440;
+const BANDS: usize = 40; // 40 fbank bands x 11 context frames
+
+pub struct FbankLike {
+    seed: u64,
+    states: usize,
+    n_train: usize,
+    n_test: usize,
+    /// Per-state prototype, lazily seeded per state (not stored: states can
+    /// be 5999; 440*5999*4B = 10MB would be fine, but recompute keeps the
+    /// dataset allocation-free).
+    proto_scale: f32,
+}
+
+impl FbankLike {
+    pub fn new(seed: u64, states: usize, n_train: usize, n_test: usize) -> FbankLike {
+        FbankLike {
+            seed,
+            states,
+            n_train,
+            n_test,
+            proto_scale: 1.0,
+        }
+    }
+
+    fn prototype(&self, state: usize, out: &mut [f32]) {
+        let mut rng = Pcg32::new(self.seed.wrapping_add(state as u64 * 6007), 0xfba);
+        // smooth across bands: random walk, shared across context frames with
+        // a slow drift (speech-like temporal correlation)
+        let mut band = [0.0f32; BANDS];
+        let mut v = 0.0f32;
+        for b in band.iter_mut() {
+            v = 0.7 * v + 0.6 * rng.normal();
+            *b = v;
+        }
+        let drift = rng.range(-0.05, 0.05);
+        for ctx in 0..DIM / BANDS {
+            for b in 0..BANDS {
+                out[ctx * BANDS + b] =
+                    self.proto_scale * (band[b] + drift * ctx as f32);
+            }
+        }
+    }
+}
+
+impl Dataset for FbankLike {
+    fn name(&self) -> &'static str {
+        "fbank_like"
+    }
+    fn train_len(&self) -> usize {
+        self.n_train
+    }
+    fn test_len(&self) -> usize {
+        self.n_test
+    }
+    fn x_elems(&self) -> usize {
+        DIM
+    }
+    fn y_elems(&self) -> usize {
+        1
+    }
+    fn num_classes(&self) -> usize {
+        self.states
+    }
+
+    fn fill(&self, split: Split, indices: &[usize], x: XBuf, y: &mut [i32]) {
+        let xs = match x {
+            XBuf::F32(b) => b,
+            XBuf::I32(_) => panic!("fbank_like is an f32 dataset"),
+        };
+        assert_eq!(xs.len(), indices.len() * DIM);
+        let mut proto = vec![0.0f32; DIM];
+        for (b, &idx) in indices.iter().enumerate() {
+            let mut rng = sample_rng(self.seed, split, idx);
+            let state = idx % self.states;
+            self.prototype(state, &mut proto);
+            let out = &mut xs[b * DIM..(b + 1) * DIM];
+            // temporally smooth noise across the context axis
+            let mut n = [0.0f32; BANDS];
+            for band in n.iter_mut() {
+                *band = rng.normal();
+            }
+            for ctx in 0..DIM / BANDS {
+                for band in 0..BANDS {
+                    n[band] = 0.6 * n[band] + 0.8 * rng.normal();
+                    out[ctx * BANDS + band] = proto[ctx * BANDS + band] + 0.7 * n[band];
+                }
+            }
+            y[b] = state as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_labels() {
+        let d = FbankLike::new(1, 1500, 1000, 100);
+        let mut x = vec![0.0; 440 * 4];
+        let mut y = vec![0; 4];
+        d.fill(Split::Train, &[0, 1, 1500, 3001], XBuf::F32(&mut x), &mut y);
+        assert_eq!(y, vec![0, 1, 0, 1]);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn same_state_closer_than_different() {
+        let d = FbankLike::new(2, 50, 1000, 100);
+        let mut x = vec![0.0; 440 * 3];
+        let mut y = vec![0; 3];
+        // idx 0 and 50 share state 0; idx 1 is state 1
+        d.fill(Split::Train, &[0, 50, 1], XBuf::F32(&mut x), &mut y);
+        let d01: f32 = x[..440]
+            .iter()
+            .zip(&x[440..880])
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        let d02: f32 = x[..440]
+            .iter()
+            .zip(&x[880..])
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        assert!(d01 < d02, "same-state {d01} should be < cross-state {d02}");
+    }
+}

@@ -1,0 +1,210 @@
+//! Procedural MNIST-like digits: 28x28x1 grayscale, 10 classes.
+//!
+//! Each digit class is a fixed set of stroke segments on the unit square;
+//! samples rasterize the strokes with a per-sample random affine transform
+//! (rotation, scale, translation), stroke thickness jitter and pixel noise —
+//! structurally the same invariances real MNIST demands.
+
+use super::{sample_rng, Dataset, Split, XBuf};
+use crate::util::rng::Pcg32;
+
+const H: usize = 28;
+const W: usize = 28;
+
+/// Stroke templates per digit: (x0, y0, x1, y1) in [0,1]^2 (y down).
+fn strokes(digit: usize) -> &'static [(f32, f32, f32, f32)] {
+    match digit {
+        0 => &[
+            (0.3, 0.2, 0.7, 0.2),
+            (0.7, 0.2, 0.7, 0.8),
+            (0.7, 0.8, 0.3, 0.8),
+            (0.3, 0.8, 0.3, 0.2),
+        ],
+        1 => &[(0.5, 0.15, 0.5, 0.85), (0.35, 0.3, 0.5, 0.15)],
+        2 => &[
+            (0.3, 0.25, 0.7, 0.2),
+            (0.7, 0.2, 0.7, 0.5),
+            (0.7, 0.5, 0.3, 0.8),
+            (0.3, 0.8, 0.7, 0.8),
+        ],
+        3 => &[
+            (0.3, 0.2, 0.7, 0.2),
+            (0.7, 0.2, 0.7, 0.5),
+            (0.45, 0.5, 0.7, 0.5),
+            (0.7, 0.5, 0.7, 0.8),
+            (0.7, 0.8, 0.3, 0.8),
+        ],
+        4 => &[
+            (0.35, 0.2, 0.3, 0.55),
+            (0.3, 0.55, 0.75, 0.55),
+            (0.65, 0.2, 0.65, 0.85),
+        ],
+        5 => &[
+            (0.7, 0.2, 0.3, 0.2),
+            (0.3, 0.2, 0.3, 0.5),
+            (0.3, 0.5, 0.7, 0.5),
+            (0.7, 0.5, 0.7, 0.8),
+            (0.7, 0.8, 0.3, 0.8),
+        ],
+        6 => &[
+            (0.65, 0.2, 0.35, 0.35),
+            (0.35, 0.35, 0.3, 0.8),
+            (0.3, 0.8, 0.7, 0.8),
+            (0.7, 0.8, 0.7, 0.55),
+            (0.7, 0.55, 0.3, 0.55),
+        ],
+        7 => &[(0.3, 0.2, 0.7, 0.2), (0.7, 0.2, 0.45, 0.85)],
+        8 => &[
+            (0.3, 0.2, 0.7, 0.2),
+            (0.7, 0.2, 0.7, 0.8),
+            (0.7, 0.8, 0.3, 0.8),
+            (0.3, 0.8, 0.3, 0.2),
+            (0.3, 0.5, 0.7, 0.5),
+        ],
+        _ => &[
+            (0.7, 0.45, 0.3, 0.45),
+            (0.3, 0.45, 0.3, 0.2),
+            (0.3, 0.2, 0.7, 0.2),
+            (0.7, 0.2, 0.7, 0.85),
+        ],
+    }
+}
+
+pub struct MnistGen {
+    seed: u64,
+    n_train: usize,
+    n_test: usize,
+}
+
+impl MnistGen {
+    pub fn new(seed: u64, n_train: usize, n_test: usize) -> MnistGen {
+        MnistGen {
+            seed,
+            n_train,
+            n_test,
+        }
+    }
+
+    fn render(&self, rng: &mut Pcg32, digit: usize, out: &mut [f32]) {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let angle = rng.range(-0.26, 0.26); // ~±15°
+        let scale = rng.range(0.85, 1.15);
+        let tx = rng.range(-0.08, 0.08);
+        let ty = rng.range(-0.08, 0.08);
+        let thick = rng.range(0.045, 0.075);
+        let (sin, cos) = angle.sin_cos();
+        // transform stroke endpoints around center (0.5, 0.5)
+        let tf = |x: f32, y: f32| -> (f32, f32) {
+            let (cx, cy) = (x - 0.5, y - 0.5);
+            (
+                0.5 + scale * (cos * cx - sin * cy) + tx,
+                0.5 + scale * (sin * cx + cos * cy) + ty,
+            )
+        };
+        for &(x0, y0, x1, y1) in strokes(digit) {
+            let (ax, ay) = tf(x0, y0);
+            let (bx, by) = tf(x1, y1);
+            // rasterize by distance-to-segment
+            let (dx, dy) = (bx - ax, by - ay);
+            let len2 = (dx * dx + dy * dy).max(1e-8);
+            for i in 0..H {
+                let py = (i as f32 + 0.5) / H as f32;
+                for j in 0..W {
+                    let px = (j as f32 + 0.5) / W as f32;
+                    let t = (((px - ax) * dx + (py - ay) * dy) / len2).clamp(0.0, 1.0);
+                    let (qx, qy) = (ax + t * dx, ay + t * dy);
+                    let d = ((px - qx) * (px - qx) + (py - qy) * (py - qy)).sqrt();
+                    if d < thick {
+                        let v = 1.0 - (d / thick) * 0.5;
+                        let cell = &mut out[i * W + j];
+                        if v > *cell {
+                            *cell = v;
+                        }
+                    }
+                }
+            }
+        }
+        for v in out.iter_mut() {
+            *v = (*v + 0.05 * rng.normal()).clamp(0.0, 1.0);
+            // center to roughly zero-mean like standard MNIST preprocessing
+            *v -= 0.13;
+        }
+    }
+}
+
+impl Dataset for MnistGen {
+    fn name(&self) -> &'static str {
+        "mnist_gen"
+    }
+    fn train_len(&self) -> usize {
+        self.n_train
+    }
+    fn test_len(&self) -> usize {
+        self.n_test
+    }
+    fn x_elems(&self) -> usize {
+        H * W
+    }
+    fn y_elems(&self) -> usize {
+        1
+    }
+    fn num_classes(&self) -> usize {
+        10
+    }
+
+    fn fill(&self, split: Split, indices: &[usize], x: XBuf, y: &mut [i32]) {
+        let xs = match x {
+            XBuf::F32(b) => b,
+            XBuf::I32(_) => panic!("mnist_gen is an f32 dataset"),
+        };
+        assert_eq!(xs.len(), indices.len() * self.x_elems());
+        for (b, &idx) in indices.iter().enumerate() {
+            let mut rng = sample_rng(self.seed, split, idx);
+            let digit = idx % 10;
+            self.render(&mut rng, digit, &mut xs[b * self.x_elems()..(b + 1) * self.x_elems()]);
+            y[b] = digit as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nonempty_digits() {
+        let d = MnistGen::new(1, 100, 10);
+        let mut x = vec![0.0; 784 * 10];
+        let mut y = vec![0; 10];
+        d.fill(Split::Train, &(0..10).collect::<Vec<_>>(), XBuf::F32(&mut x), &mut y);
+        for b in 0..10 {
+            let img = &x[b * 784..(b + 1) * 784];
+            let ink: f32 = img.iter().map(|v| (v + 0.13).max(0.0)).sum();
+            assert!(ink > 10.0, "digit {b} empty: ink {ink}");
+            assert_eq!(y[b], b as i32);
+        }
+    }
+
+    #[test]
+    fn samples_vary_within_class() {
+        let d = MnistGen::new(1, 100, 10);
+        let mut x = vec![0.0; 784 * 2];
+        let mut y = vec![0; 2];
+        // indices 0 and 10 are both digit 0
+        d.fill(Split::Train, &[0, 10], XBuf::F32(&mut x), &mut y);
+        assert_eq!(y, vec![0, 0]);
+        let diff: f32 = x[..784]
+            .iter()
+            .zip(&x[784..])
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1.0, "augmentation should vary samples: {diff}");
+    }
+
+    #[test]
+    fn all_strokes_defined() {
+        for d in 0..10 {
+            assert!(!strokes(d).is_empty());
+        }
+    }
+}

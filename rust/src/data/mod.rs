@@ -1,0 +1,169 @@
+//! Dataset substrates.
+//!
+//! The paper's datasets are either gated (ImageNet 140GB, BN50 is an IBM
+//! internal speech corpus) or gratuitous to redistribute; each generator
+//! here is the closest synthetic equivalent that exercises the same code
+//! path — same tensor shapes, same class counts, deterministic, and
+//! *learnable* so convergence/divergence phenomena show (DESIGN.md
+//! §Substitutions has the full mapping).
+//!
+//! All datasets are procedural: a sample is a pure function of
+//! (dataset seed, split, index), so no storage, no I/O on the training
+//! path, and learner shards are trivially reproducible.
+
+pub mod cifar_like;
+pub mod fbank_like;
+pub mod mnist_gen;
+pub mod shakespeare;
+pub mod synth;
+
+use crate::util::rng::Pcg32;
+
+/// Train or held-out test split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+impl Split {
+    fn stream(&self) -> u64 {
+        match self {
+            Split::Train => 0x7121,
+            Split::Test => 0x7e57,
+        }
+    }
+}
+
+/// Batch destination: image/speech models take f32, char models take i32.
+pub enum XBuf<'a> {
+    F32(&'a mut [f32]),
+    I32(&'a mut [i32]),
+}
+
+/// A deterministic, procedurally generated dataset.
+pub trait Dataset: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn train_len(&self) -> usize;
+    fn test_len(&self) -> usize;
+    /// Per-sample x element count (e.g. 32*32*3).
+    fn x_elems(&self) -> usize;
+    /// Per-sample y element count (1 for classification, seq_len for LM).
+    fn y_elems(&self) -> usize;
+    fn num_classes(&self) -> usize;
+    fn int_input(&self) -> bool {
+        false
+    }
+
+    /// Write samples `indices` into `x`/`y` (batch-major).
+    fn fill(&self, split: Split, indices: &[usize], x: XBuf, y: &mut [i32]);
+}
+
+/// Per-sample RNG: pure function of (seed, split, index).
+pub(crate) fn sample_rng(seed: u64, split: Split, index: usize) -> Pcg32 {
+    Pcg32::new(seed ^ (index as u64).wrapping_mul(0x9e3779b97f4a7c15), split.stream())
+}
+
+/// Shard `train_len` samples across `n_learners`; learner `l` owns every
+/// n-th sample (interleaved, as in the paper's equal-shard data parallelism).
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub learner: usize,
+    pub n_learners: usize,
+    pub train_len: usize,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        let base = self.train_len / self.n_learners;
+        let extra = (self.train_len % self.n_learners > self.learner) as usize;
+        base + extra
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Global index of the shard's i-th sample.
+    pub fn global(&self, i: usize) -> usize {
+        i * self.n_learners + self.learner
+    }
+}
+
+/// Draw a batch of shard-local indices for one epoch-step (with-replacement
+/// sampling keeps every learner's batch size constant regardless of shard
+/// remainder, matching the paper's fixed per-learner minibatch).
+pub fn draw_batch(rng: &mut Pcg32, shard: &Shard, batch: usize) -> Vec<usize> {
+    (0..batch)
+        .map(|_| shard.global(rng.below(shard.len() as u32) as usize))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_partition_is_exact() {
+        for n in [1usize, 3, 8] {
+            let total: usize = (0..n)
+                .map(|l| {
+                    Shard {
+                        learner: l,
+                        n_learners: n,
+                        train_len: 1001,
+                    }
+                    .len()
+                })
+                .sum();
+            assert_eq!(total, 1001);
+        }
+    }
+
+    #[test]
+    fn shards_disjoint() {
+        let a = Shard {
+            learner: 0,
+            n_learners: 2,
+            train_len: 10,
+        };
+        let b = Shard {
+            learner: 1,
+            n_learners: 2,
+            train_len: 10,
+        };
+        let sa: Vec<usize> = (0..a.len()).map(|i| a.global(i)).collect();
+        let sb: Vec<usize> = (0..b.len()).map(|i| b.global(i)).collect();
+        for i in &sa {
+            assert!(!sb.contains(i));
+        }
+        assert_eq!(sa.len() + sb.len(), 10);
+    }
+
+    #[test]
+    fn sample_rng_deterministic_and_distinct() {
+        let a = sample_rng(1, Split::Train, 5).next_u32();
+        let b = sample_rng(1, Split::Train, 5).next_u32();
+        let c = sample_rng(1, Split::Train, 6).next_u32();
+        let d = sample_rng(1, Split::Test, 5).next_u32();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn draw_batch_in_range() {
+        let shard = Shard {
+            learner: 1,
+            n_learners: 4,
+            train_len: 100,
+        };
+        let mut rng = Pcg32::seeded(3);
+        let idx = draw_batch(&mut rng, &shard, 16);
+        assert_eq!(idx.len(), 16);
+        for i in idx {
+            assert!(i < 100);
+            assert_eq!(i % 4, 1);
+        }
+    }
+}

@@ -1,0 +1,351 @@
+//! Character-level Shakespeare corpus for the char-LSTM / transformer tasks.
+//!
+//! The paper uses Karpathy's tiny-shakespeare (50k lines, vocab 67). We
+//! cannot ship that file offline, so the corpus here is: a genuine embedded
+//! public-domain seed (sonnets + famous passages, ~4KB) expanded by an
+//! order-3 character Markov chain fit on the seed — preserving the seed's
+//! character statistics, vocabulary and local structure at arbitrary length
+//! (DESIGN.md §Substitutions). Deterministic given the seed value.
+//!
+//! Vocabulary is capped at `model::VOCAB` = 67 ids; characters beyond the
+//! cap map to id 0 (never happens with the embedded seed, which has < 60
+//! distinct characters).
+
+use std::collections::HashMap;
+
+use super::{Dataset, Split, XBuf};
+use crate::util::rng::Pcg32;
+
+pub const VOCAB: usize = 67;
+
+/// Genuine public-domain seed text (Shakespeare).
+const SEED_TEXT: &str = r#"Shall I compare thee to a summer's day?
+Thou art more lovely and more temperate:
+Rough winds do shake the darling buds of May,
+And summer's lease hath all too short a date:
+Sometime too hot the eye of heaven shines,
+And often is his gold complexion dimm'd;
+And every fair from fair sometime declines,
+By chance or nature's changing course untrimm'd;
+But thy eternal summer shall not fade
+Nor lose possession of that fair thou owest;
+Nor shall Death brag thou wander'st in his shade,
+When in eternal lines to time thou growest:
+So long as men can breathe or eyes can see,
+So long lives this and this gives life to thee.
+
+To be, or not to be, that is the question:
+Whether 'tis nobler in the mind to suffer
+The slings and arrows of outrageous fortune,
+Or to take arms against a sea of troubles
+And by opposing end them. To die: to sleep;
+No more; and by a sleep to say we end
+The heart-ache and the thousand natural shocks
+That flesh is heir to, 'tis a consummation
+Devoutly to be wish'd. To die, to sleep;
+To sleep: perchance to dream: ay, there's the rub;
+For in that sleep of death what dreams may come
+When we have shuffled off this mortal coil,
+Must give us pause: there's the respect
+That makes calamity of so long life;
+
+Friends, Romans, countrymen, lend me your ears;
+I come to bury Caesar, not to praise him.
+The evil that men do lives after them;
+The good is oft interred with their bones;
+So let it be with Caesar. The noble Brutus
+Hath told you Caesar was ambitious:
+If it were so, it was a grievous fault,
+And grievously hath Caesar answer'd it.
+
+All the world's a stage,
+And all the men and women merely players:
+They have their exits and their entrances;
+And one man in his time plays many parts,
+His acts being seven ages. At first the infant,
+Mewling and puking in the nurse's arms.
+And then the whining school-boy, with his satchel
+And shining morning face, creeping like snail
+Unwillingly to school.
+
+Now is the winter of our discontent
+Made glorious summer by this sun of York;
+And all the clouds that lour'd upon our house
+In the deep bosom of the ocean buried.
+Now are our brows bound with victorious wreaths;
+Our bruised arms hung up for monuments;
+Our stern alarums changed to merry meetings,
+Our dreadful marches to delightful measures.
+
+If music be the food of love, play on;
+Give me excess of it, that, surfeiting,
+The appetite may sicken, and so die.
+That strain again! it had a dying fall:
+O, it came o'er my ear like the sweet sound,
+That breathes upon a bank of violets,
+Stealing and giving odour!
+
+Tomorrow, and tomorrow, and tomorrow,
+Creeps in this petty pace from day to day
+To the last syllable of recorded time,
+And all our yesterdays have lighted fools
+The way to dusty death. Out, out, brief candle!
+Life's but a walking shadow, a poor player
+That struts and frets his hour upon the stage
+And then is heard no more: it is a tale
+Told by an idiot, full of sound and fury,
+Signifying nothing.
+
+O Romeo, Romeo! wherefore art thou Romeo?
+Deny thy father and refuse thy name;
+Or, if thou wilt not, be but sworn my love,
+And I'll no longer be a Capulet.
+'Tis but thy name that is my enemy;
+Thou art thyself, though not a Montague.
+What's Montague? it is nor hand, nor foot,
+Nor arm, nor face, nor any other part
+Belonging to a man. O, be some other name!
+What's in a name? that which we call a rose
+By any other name would smell as sweet.
+
+The quality of mercy is not strain'd,
+It droppeth as the gentle rain from heaven
+Upon the place beneath: it is twice blest;
+It blesseth him that gives and him that takes:
+'Tis mightiest in the mightiest: it becomes
+The throned monarch better than his crown;
+His sceptre shows the force of temporal power,
+The attribute to awe and majesty,
+Wherein doth sit the dread and fear of kings;
+But mercy is above this sceptred sway;
+It is enthroned in the hearts of kings,
+It is an attribute to God himself.
+"#;
+
+/// Character vocabulary built from the seed, id-stable across runs.
+pub struct CharVocab {
+    pub chars: Vec<char>,
+    map: HashMap<char, usize>,
+}
+
+impl CharVocab {
+    pub fn from_seed() -> CharVocab {
+        let mut chars: Vec<char> = SEED_TEXT
+            .chars()
+            .collect::<std::collections::BTreeSet<char>>()
+            .into_iter()
+            .collect();
+        chars.truncate(VOCAB);
+        let map = chars.iter().enumerate().map(|(i, &c)| (c, i)).collect();
+        CharVocab { chars, map }
+    }
+
+    pub fn id(&self, c: char) -> usize {
+        *self.map.get(&c).unwrap_or(&0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.chars.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chars.is_empty()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&i| *self.chars.get(i as usize).unwrap_or(&'?'))
+            .collect()
+    }
+}
+
+/// Order-3 Markov chain over seed characters.
+fn markov_expand(target_len: usize, seed: u64) -> Vec<u8> {
+    let bytes: Vec<u8> = SEED_TEXT.bytes().collect();
+    // context -> list of next bytes (weighted by multiplicity)
+    let mut table: HashMap<[u8; 3], Vec<u8>> = HashMap::new();
+    for w in bytes.windows(4) {
+        table
+            .entry([w[0], w[1], w[2]])
+            .or_default()
+            .push(w[3]);
+    }
+    let mut rng = Pcg32::new(seed, 0x5a5a);
+    let mut out = Vec::with_capacity(target_len);
+    out.extend_from_slice(&bytes[..3]);
+    while out.len() < target_len {
+        let ctx = [
+            out[out.len() - 3],
+            out[out.len() - 2],
+            out[out.len() - 1],
+        ];
+        match table.get(&ctx) {
+            Some(nexts) => {
+                let c = nexts[rng.below(nexts.len() as u32) as usize];
+                out.push(c);
+            }
+            None => {
+                // dead end (end of seed): restart from a random seed position
+                let p = rng.below((bytes.len() - 3) as u32) as usize;
+                out.extend_from_slice(&bytes[p..p + 3]);
+            }
+        }
+    }
+    out.truncate(target_len);
+    out
+}
+
+pub struct Shakespeare {
+    vocab: CharVocab,
+    /// Token ids of the expanded corpus.
+    corpus: Vec<u8>,
+    seq_len: usize,
+    n_train: usize,
+    n_test: usize,
+    /// Windows in [0, split_at) are train; [split_at, ..) test.
+    split_at: usize,
+    seed: u64,
+}
+
+impl Shakespeare {
+    pub fn new(seed: u64, corpus_len: usize, seq_len: usize, n_train: usize, n_test: usize) -> Shakespeare {
+        let vocab = CharVocab::from_seed();
+        let raw = markov_expand(corpus_len, seed);
+        let corpus: Vec<u8> = raw
+            .iter()
+            .map(|&b| vocab.id(b as char) as u8)
+            .collect();
+        let usable = corpus.len().saturating_sub(seq_len + 1);
+        let split_at = usable * 9 / 10;
+        Shakespeare {
+            vocab,
+            corpus,
+            seq_len,
+            n_train,
+            n_test,
+            split_at,
+            seed,
+        }
+    }
+
+    pub fn vocab(&self) -> &CharVocab {
+        &self.vocab
+    }
+
+    fn window_start(&self, split: Split, idx: usize) -> usize {
+        // hash the index into the split's region deterministically
+        let mut rng = super::sample_rng(self.seed, split, idx);
+        match split {
+            Split::Train => rng.below(self.split_at as u32) as usize,
+            Split::Test => {
+                let usable = self.corpus.len() - self.seq_len - 1;
+                self.split_at + rng.below((usable - self.split_at) as u32) as usize
+            }
+        }
+    }
+}
+
+impl Dataset for Shakespeare {
+    fn name(&self) -> &'static str {
+        "shakespeare"
+    }
+    fn train_len(&self) -> usize {
+        self.n_train
+    }
+    fn test_len(&self) -> usize {
+        self.n_test
+    }
+    fn x_elems(&self) -> usize {
+        self.seq_len
+    }
+    fn y_elems(&self) -> usize {
+        self.seq_len
+    }
+    fn num_classes(&self) -> usize {
+        VOCAB
+    }
+    fn int_input(&self) -> bool {
+        true
+    }
+
+    fn fill(&self, split: Split, indices: &[usize], x: XBuf, y: &mut [i32]) {
+        let xs = match x {
+            XBuf::I32(b) => b,
+            XBuf::F32(_) => panic!("shakespeare is an i32 (char-id) dataset"),
+        };
+        let t = self.seq_len;
+        assert_eq!(xs.len(), indices.len() * t);
+        assert_eq!(y.len(), indices.len() * t);
+        for (b, &idx) in indices.iter().enumerate() {
+            let s = self.window_start(split, idx);
+            for j in 0..t {
+                xs[b * t + j] = self.corpus[s + j] as i32;
+                y[b * t + j] = self.corpus[s + j + 1] as i32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_under_cap() {
+        let v = CharVocab::from_seed();
+        assert!(v.len() <= VOCAB);
+        assert!(v.len() > 30);
+        // roundtrip a char
+        let id = v.id('e');
+        assert_eq!(v.chars[id], 'e');
+    }
+
+    #[test]
+    fn markov_preserves_charset() {
+        let out = markov_expand(5000, 1);
+        assert_eq!(out.len(), 5000);
+        let seed_set: std::collections::HashSet<u8> = SEED_TEXT.bytes().collect();
+        for b in out {
+            assert!(seed_set.contains(&b));
+        }
+    }
+
+    #[test]
+    fn xy_shifted_by_one() {
+        let d = Shakespeare::new(1, 20_000, 16, 100, 10);
+        let mut x = vec![0; 16 * 2];
+        let mut y = vec![0; 16 * 2];
+        d.fill(Split::Train, &[0, 5], XBuf::I32(&mut x), &mut y);
+        // y[j] should be x[j+1] within a window
+        for b in 0..2 {
+            for j in 0..15 {
+                assert_eq!(y[b * 16 + j], x[b * 16 + j + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn ids_in_vocab_range() {
+        let d = Shakespeare::new(2, 10_000, 32, 100, 10);
+        let mut x = vec![0; 32];
+        let mut y = vec![0; 32];
+        d.fill(Split::Test, &[3], XBuf::I32(&mut x), &mut y);
+        for &v in x.iter().chain(y.iter()) {
+            assert!((0..VOCAB as i32).contains(&v));
+        }
+    }
+
+    #[test]
+    fn train_test_regions_disjoint() {
+        let d = Shakespeare::new(3, 50_000, 32, 1000, 100);
+        let max_train = (0..200)
+            .map(|i| d.window_start(Split::Train, i))
+            .max()
+            .unwrap();
+        let min_test = (0..200)
+            .map(|i| d.window_start(Split::Test, i))
+            .min()
+            .unwrap();
+        assert!(max_train < min_test);
+    }
+}

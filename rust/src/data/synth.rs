@@ -1,0 +1,101 @@
+//! Generic synthetic classification task: class-conditional gaussians in
+//! d dimensions. Used by unit/integration tests (fast, learnable by a small
+//! MLP) and as a teacher-student smoke workload.
+
+use super::{sample_rng, Dataset, Split, XBuf};
+use crate::util::rng::Pcg32;
+
+pub struct GaussianMixture {
+    seed: u64,
+    dim: usize,
+    classes: usize,
+    n_train: usize,
+    n_test: usize,
+    noise: f32,
+    /// Per-class means, [classes * dim].
+    means: Vec<f32>,
+}
+
+impl GaussianMixture {
+    pub fn new(seed: u64, dim: usize, classes: usize, n_train: usize, n_test: usize, noise: f32) -> Self {
+        let mut rng = Pcg32::new(seed, 0x6a05);
+        let means = rng.normal_vec(classes * dim, 1.0);
+        GaussianMixture {
+            seed,
+            dim,
+            classes,
+            n_train,
+            n_test,
+            noise,
+            means,
+        }
+    }
+}
+
+impl Dataset for GaussianMixture {
+    fn name(&self) -> &'static str {
+        "gaussian_mixture"
+    }
+    fn train_len(&self) -> usize {
+        self.n_train
+    }
+    fn test_len(&self) -> usize {
+        self.n_test
+    }
+    fn x_elems(&self) -> usize {
+        self.dim
+    }
+    fn y_elems(&self) -> usize {
+        1
+    }
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn fill(&self, split: Split, indices: &[usize], x: XBuf, y: &mut [i32]) {
+        let xs = match x {
+            XBuf::F32(b) => b,
+            XBuf::I32(_) => panic!("gaussian_mixture is an f32 dataset"),
+        };
+        for (b, &idx) in indices.iter().enumerate() {
+            let mut rng = sample_rng(self.seed, split, idx);
+            let cls = idx % self.classes;
+            let mean = &self.means[cls * self.dim..(cls + 1) * self.dim];
+            let out = &mut xs[b * self.dim..(b + 1) * self.dim];
+            for (o, &m) in out.iter_mut().zip(mean.iter()) {
+                *o = m + self.noise * rng.normal();
+            }
+            y[b] = cls as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_mean_classifies() {
+        let d = GaussianMixture::new(1, 16, 4, 100, 100, 0.5);
+        let idx: Vec<usize> = (0..40).collect();
+        let mut x = vec![0.0; 16 * 40];
+        let mut y = vec![0; 40];
+        d.fill(Split::Test, &idx, XBuf::F32(&mut x), &mut y);
+        let mut correct = 0;
+        for b in 0..40 {
+            let xb = &x[b * 16..(b + 1) * 16];
+            let mut best = (f32::INFINITY, 0usize);
+            for c in 0..4 {
+                let m = &d.means[c * 16..(c + 1) * 16];
+                let dist: f32 = xb.iter().zip(m).map(|(a, b)| (a - b) * (a - b)).sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 == y[b] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 38, "nearest-mean got {correct}/40");
+    }
+}

@@ -1,0 +1,317 @@
+//! Experiment harness shared by the CLI and the examples/ binaries.
+//!
+//! Maps each paper workload (Table 1 row) to its dataset substitute +
+//! exported model + scaled default hyper-parameters, and provides the
+//! run/report plumbing every figure harness uses. Workload sizes are scaled
+//! for a CPU testbed (paper: weeks of K40 time); every harness takes
+//! `--epochs/--train/--test` to run larger.
+
+pub mod report;
+
+use anyhow::{bail, Result};
+
+use crate::compress;
+use crate::data::{
+    cifar_like::CifarLike, fbank_like::FbankLike, mnist_gen::MnistGen,
+    shakespeare::Shakespeare, Dataset,
+};
+use crate::models::Manifest;
+use crate::optim::LrSchedule;
+use crate::runtime::pjrt::PjrtExecutor;
+use crate::train::TrainConfig;
+use crate::util::cli::Args;
+
+/// Scaled default workload per model (paper epochs in parentheses).
+pub struct Defaults {
+    pub train: usize,
+    pub test: usize,
+    pub epochs: usize,
+    pub lr: LrSchedule,
+    pub optimizer: &'static str,
+    pub momentum: f32,
+    pub batch: usize,
+    pub clip_norm: f32,
+}
+
+pub fn defaults_for(model: &str) -> Defaults {
+    match model {
+        // paper: batch 100, 100 epochs
+        "mnist_dnn" | "mnist_cnn" => Defaults {
+            train: 2000,
+            test: 500,
+            epochs: 5,
+            lr: LrSchedule::Constant(0.05),
+            optimizer: "sgd",
+            momentum: 0.9,
+            batch: 100,
+            clip_norm: 0.0,
+        },
+        // paper: batch 128, 140 epochs, Caffe quick lr policy.
+        // Scaled hard: this testbed exposes a single CPU core (see
+        // EXPERIMENTS.md §Testbed), so a paper-scale CIFAR run is ~days.
+        "cifar_cnn" => Defaults {
+            train: 2560,
+            test: 512,
+            epochs: 8,
+            lr: LrSchedule::Milestones {
+                base: 0.02,
+                points: vec![(6, 0.004)],
+            },
+            optimizer: "sgd",
+            momentum: 0.9,
+            batch: 128,
+            clip_norm: 0.0,
+        },
+        // paper: batch 256, 45 epochs (AlexNet/ImageNet)
+        "alexnet_s" => Defaults {
+            train: 1280,
+            test: 320,
+            epochs: 6,
+            lr: LrSchedule::Milestones {
+                base: 0.02,
+                points: vec![(4, 0.004)],
+            },
+            optimizer: "sgd",
+            momentum: 0.9,
+            batch: 64,
+            clip_norm: 0.0,
+        },
+        "resnet18_s" | "resnet50_s" => Defaults {
+            train: 1280,
+            test: 320,
+            epochs: 6,
+            lr: LrSchedule::Milestones {
+                base: 0.01,
+                points: vec![(4, 0.002)],
+            },
+            optimizer: "sgd",
+            momentum: 0.9,
+            batch: 32,
+            clip_norm: 1.0,
+        },
+        // paper: batch 256, 13 epochs
+        "bn50_dnn" | "bn50_dnn_s" => Defaults {
+            train: 6400,
+            test: 640,
+            epochs: 5,
+            lr: LrSchedule::Constant(0.05),
+            optimizer: "sgd",
+            momentum: 0.9,
+            batch: 128,
+            clip_norm: 0.0,
+        },
+        // paper: batch 10, 45 epochs (char-rnn)
+        "char_lstm" => Defaults {
+            train: 400,
+            test: 50,
+            epochs: 4,
+            lr: LrSchedule::Constant(2e-3),
+            optimizer: "adam",
+            momentum: 0.0,
+            batch: 10,
+            clip_norm: 5.0,
+        },
+        // e2e driver
+        "transformer" => Defaults {
+            train: 4096,
+            test: 64,
+            epochs: 6,
+            lr: LrSchedule::Constant(3e-4),
+            optimizer: "adam",
+            momentum: 0.0,
+            batch: 4,
+            clip_norm: 1.0,
+        },
+        _ => Defaults {
+            train: 2000,
+            test: 400,
+            epochs: 5,
+            lr: LrSchedule::Constant(0.05),
+            optimizer: "sgd",
+            momentum: 0.9,
+            batch: 32,
+            clip_norm: 0.0,
+        },
+    }
+}
+
+/// Instantiate the dataset substitute for a model (DESIGN.md §Substitutions).
+pub fn dataset_for(model: &str, seed: u64, train: usize, test: usize, seq_len: usize) -> Result<Box<dyn Dataset>> {
+    Ok(match model {
+        "mnist_dnn" | "mnist_cnn" => Box::new(MnistGen::new(seed, train, test)),
+        "cifar_cnn" => Box::new(CifarLike::cifar10(seed, train, test)),
+        "alexnet_s" | "resnet18_s" | "resnet50_s" => {
+            Box::new(CifarLike::imagenet100(seed, train, test))
+        }
+        "bn50_dnn" => Box::new(FbankLike::new(seed, 5999, train, test)),
+        "bn50_dnn_s" => Box::new(FbankLike::new(seed, 1500, train, test)),
+        "char_lstm" | "transformer" => Box::new(Shakespeare::new(
+            seed,
+            200_000,
+            seq_len,
+            train,
+            test,
+        )),
+        other => bail!("no dataset mapping for model '{other}'"),
+    })
+}
+
+/// A fully wired workload: dataset + executor + initial params + config.
+pub struct Workload {
+    pub manifest: Manifest,
+    pub model: String,
+    pub dataset: Box<dyn Dataset>,
+    pub init_params: Vec<f32>,
+    pub cfg: TrainConfig,
+}
+
+impl Workload {
+    /// Build from CLI args: common flags are --model --epochs --learners
+    /// --batch --train --test --scheme --lt --lt-conv --lt-fc --optimizer
+    /// --lr --topology --seed --artifacts.
+    pub fn from_args(args: &Args, default_model: &str) -> Result<Workload> {
+        let model = args.str_or("model", default_model);
+        let dir = args.str_or("artifacts", default_artifacts_dir());
+        let manifest = Manifest::load(&dir)?;
+        let meta = manifest.model(&model)?.clone();
+        let d = defaults_for(&model);
+
+        let train = args.usize_or("train", d.train);
+        let test = args.usize_or("test", d.test);
+        let seed = args.u64_or("seed", 17);
+        let dataset = dataset_for(&model, seed ^ 0xda7a, train, test, meta.seq_len)?;
+
+        let mut comp = compress::Config::default();
+        if let Some(s) = args.get("scheme") {
+            comp.kind = compress::Kind::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown scheme '{s}'"))?;
+        }
+        comp.lt_conv = args.usize_or("lt-conv", comp.lt_conv);
+        comp.lt_fc = args.usize_or("lt-fc", comp.lt_fc);
+        comp.lt_override = args.usize_or("lt", 0);
+        comp.topk_fraction = args.f32_or("topk", comp.topk_fraction as f32) as f64;
+        comp.strom_tau = args.f32_or("tau", comp.strom_tau);
+        if args.flag("per-bin-scale") {
+            comp.per_bin_scale = true;
+        }
+
+        let learners = args.usize_or("learners", 1);
+        let batch = args.usize_or("batch", d.batch / learners.max(1)).max(1);
+        let lr = match args.get("lr") {
+            Some(v) => LrSchedule::Constant(v.parse()?),
+            None => d.lr.clone(),
+        };
+
+        let cfg = TrainConfig {
+            run_name: args.str_or("name", &format!("{model}-{}", comp.kind.name())),
+            model_name: model.clone(),
+            n_learners: learners,
+            batch_per_learner: batch,
+            epochs: args.usize_or("epochs", d.epochs),
+            steps_per_epoch: args.usize_or("steps", 0),
+            lr,
+            optimizer: args.str_or("optimizer", d.optimizer),
+            momentum: args.f32_or("momentum", d.momentum),
+            compression: comp,
+            topology: args.str_or("topology", "ring"),
+            link: Default::default(),
+            seed,
+            divergence_loss: 50.0, // classification losses; way past any sane value
+            track_residue: true,
+            clip_norm: args.f32_or("clip", d.clip_norm),
+        };
+
+        let mut init_params = manifest.load_init(&meta)?;
+        // --resume CKPT: continue from a saved checkpoint (same model).
+        if let Some(ckpt_path) = args.get("resume") {
+            let ck = crate::train::checkpoint::Checkpoint::load(std::path::Path::new(ckpt_path))?;
+            if ck.model != model {
+                anyhow::bail!(
+                    "checkpoint {} is for model '{}', not '{}'",
+                    ckpt_path,
+                    ck.model,
+                    model
+                );
+            }
+            if ck.params.len() != init_params.len() {
+                anyhow::bail!("checkpoint param count mismatch");
+            }
+            init_params = ck.params;
+        }
+        Ok(Workload {
+            manifest,
+            model,
+            dataset,
+            init_params,
+            cfg,
+        })
+    }
+
+    pub fn executor(&self) -> Result<PjrtExecutor> {
+        PjrtExecutor::new(&self.manifest, &self.model)
+    }
+
+    /// Run training with the current config.
+    pub fn run(&self) -> Result<crate::metrics::RunRecord> {
+        Ok(self.run_full()?.0)
+    }
+
+    /// Run training, also returning the trained parameters (checkpointing).
+    pub fn run_full(&self) -> Result<(crate::metrics::RunRecord, Vec<f32>)> {
+        let mut exe = self.executor()?;
+        let layout = self.manifest.model(&self.model)?.layout.clone();
+        let mut engine = crate::train::Engine::new(&mut exe, self.dataset.as_ref(), &layout);
+        engine.run_full(&self.cfg, &self.init_params, None)
+    }
+
+    /// Run with a per-epoch hook (figure harnesses).
+    pub fn run_with_hook(
+        &self,
+        hook: &mut crate::train::engine::EpochHook<'_>,
+    ) -> Result<crate::metrics::RunRecord> {
+        let mut exe = self.executor()?;
+        let layout = self.manifest.model(&self.model)?.layout.clone();
+        let mut engine = crate::train::Engine::new(&mut exe, self.dataset.as_ref(), &layout);
+        engine.run_with_hook(&self.cfg, &self.init_params, Some(hook))
+    }
+}
+
+pub fn default_artifacts_dir() -> &'static str {
+    // examples run from the repo root via cargo; fall back to the manifest dir
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        "artifacts"
+    } else {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_cover_all_models() {
+        for m in [
+            "mnist_dnn",
+            "mnist_cnn",
+            "cifar_cnn",
+            "alexnet_s",
+            "resnet18_s",
+            "resnet50_s",
+            "bn50_dnn",
+            "bn50_dnn_s",
+            "char_lstm",
+            "transformer",
+        ] {
+            let d = defaults_for(m);
+            assert!(d.epochs > 0 && d.batch > 0);
+            let ds = dataset_for(m, 1, 100, 50, 32).unwrap();
+            assert_eq!(ds.train_len(), 100);
+        }
+    }
+
+    #[test]
+    fn unknown_model_dataset_errors() {
+        assert!(dataset_for("nope", 1, 10, 5, 0).is_err());
+    }
+}

@@ -1,0 +1,123 @@
+//! Terminal tables + results files for the figure/table harnesses.
+
+use std::path::Path;
+
+use crate::metrics::RunRecord;
+use crate::util::json::{self, Json};
+
+/// Fixed-width table printer (the harnesses print the same rows/series the
+/// paper's tables and figures report).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Write run records (JSON array + CSV) under results/.
+pub fn save_runs(tag: &str, runs: &[RunRecord]) -> std::io::Result<(String, String)> {
+    std::fs::create_dir_all("results")?;
+    let json_path = format!("results/{tag}.json");
+    let csv_path = format!("results/{tag}.csv");
+    let arr = json::arr(runs.iter().map(|r| r.to_json()).collect());
+    std::fs::write(&json_path, arr.to_string())?;
+    let mut csv = String::new();
+    for (i, r) in runs.iter().enumerate() {
+        let body = r.to_csv();
+        if i == 0 {
+            csv.push_str(&body);
+        } else {
+            // skip header
+            csv.push_str(body.split_once('\n').map(|x| x.1).unwrap_or(""));
+        }
+    }
+    std::fs::write(&csv_path, csv)?;
+    Ok((json_path, csv_path))
+}
+
+/// Load previously saved runs (ablation/plot tooling).
+pub fn load_runs(path: &Path) -> anyhow::Result<Json> {
+    let txt = std::fs::read_to_string(path)?;
+    Json::from_str_slice(&txt).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+/// One-line convergence summary for live output.
+pub fn epoch_line(r: &RunRecord) -> String {
+    let e = r.epochs.last().unwrap();
+    format!(
+        "[{}] epoch {:>3}  loss {:.4}  test-err {:5.2}%  rate(wire) {:7.1}x  rate(paper) {:7.1}x  rg95 {:.3e}",
+        r.name,
+        e.epoch,
+        e.train_loss,
+        e.test_error_pct,
+        e.comp_all.rate_wire(),
+        e.comp_all.rate_paper(),
+        e.rg_p95,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "err%"]);
+        t.row(vec!["cifar_cnn".into(), "18.4".into()]);
+        t.row(vec!["x".into(), "1".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("model"));
+        assert!(lines[2].starts_with("cifar_cnn"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

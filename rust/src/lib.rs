@@ -1,0 +1,31 @@
+//! AdaComp — Adaptive Residual Gradient Compression for data-parallel
+//! distributed training (Chen et al., AAAI 2018) — full-system reproduction.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!   L1: Pallas compression kernels (python/compile/kernels, AOT to HLO)
+//!   L2: JAX model zoo (python/compile/model.py, AOT to HLO)
+//!   L3: this crate — the distributed training coordinator: compression
+//!       engines, simulated multi-learner fabric, topologies, optimizers,
+//!       datasets, metrics, and the experiment harnesses that regenerate
+//!       every figure/table of the paper.
+//!
+//! Python never runs on the training path: `make artifacts` lowers L1+L2 to
+//! HLO text once; the rust binary loads them via PJRT (`runtime::pjrt`).
+
+pub mod comm;
+pub mod config;
+pub mod compress;
+pub mod data;
+pub mod harness;
+pub mod metrics;
+pub mod models;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+pub use compress::{Compressor, Packet};
+pub use models::{LayerKind, Layout, Manifest};
+pub use runtime::Executor;
+pub use train::{Engine, TrainConfig};

@@ -1,0 +1,266 @@
+//! adacomp — CLI for the AdaComp reproduction.
+//!
+//! Subcommands:
+//!   train      train any exported model with any compression scheme
+//!   inspect    print the artifacts manifest (models, layers, L_T defaults)
+//!   schemes    list compression schemes and their knobs
+//!
+//! Examples:
+//!   adacomp train --model cifar_cnn --scheme adacomp --learners 8
+//!   adacomp train --model char_lstm --scheme dryden --topk 0.003
+//!   adacomp inspect
+//!
+//! Every figure/table of the paper has a dedicated harness under examples/
+//! (cargo run --release --example fig4_robustness -- --help).
+
+use adacomp::harness::{report, Workload};
+use adacomp::models::Manifest;
+use adacomp::util::cli::Args;
+
+const FLAGS: &[&str] = &["per-bin-scale", "help", "quiet"];
+
+fn main() {
+    let args = Args::parse(FLAGS);
+    let cmd = args
+        .positional()
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    let code = match cmd {
+        "train" => cmd_train(&args),
+        "inspect" => cmd_inspect(&args),
+        "analyze" => cmd_analyze(&args),
+        "schemes" => cmd_schemes(),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let mut w = match Workload::from_args(args, "cifar_cnn") {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    // --config FILE: JSON experiment spec overrides the CLI-derived config
+    // (model must match an exported artifact; dataset comes from the model).
+    if let Some(path) = args.get("config") {
+        match adacomp::config::load(path) {
+            Ok(cfg) => {
+                if cfg.model_name != w.model {
+                    match Workload::from_args(args, &cfg.model_name.clone()) {
+                        Ok(w2) => w = w2,
+                        Err(e) => {
+                            eprintln!("error: {e:#}");
+                            return 1;
+                        }
+                    }
+                }
+                w.cfg = cfg;
+            }
+            Err(e) => {
+                eprintln!("error loading {path}: {e:#}");
+                return 1;
+            }
+        }
+    }
+    println!(
+        "training {} | scheme {} | {} learners x batch {} | {} epochs | topology {}",
+        w.model,
+        w.cfg.compression.kind.name(),
+        w.cfg.n_learners,
+        w.cfg.batch_per_learner,
+        w.cfg.epochs,
+        w.cfg.topology
+    );
+    match w.run_full() {
+        Ok((rec, final_params)) => {
+            // --save CKPT: persist trained weights (resume with --resume).
+            if let Some(path) = args.get("save") {
+                let ck = adacomp::train::checkpoint::Checkpoint {
+                    model: w.model.clone(),
+                    epoch: rec.epochs.len() as u32,
+                    params: final_params,
+                };
+                if let Err(e) = ck.save(std::path::Path::new(path)) {
+                    eprintln!("checkpoint save failed: {e:#}");
+                } else {
+                    println!("checkpoint saved to {path}");
+                }
+            }
+            for (i, _) in rec.epochs.iter().enumerate() {
+                let partial = adacomp::metrics::RunRecord {
+                    epochs: rec.epochs[..=i].to_vec(),
+                    ..rec.clone()
+                };
+                println!("{}", report::epoch_line(&partial));
+            }
+            println!(
+                "final: test-err {:.2}%  mean rate (wire) {:.1}x  (paper) {:.1}x  diverged: {}",
+                rec.final_test_error(),
+                rec.mean_rate_wire(),
+                rec.mean_rate_paper(),
+                rec.diverged
+            );
+            if let Ok((j, c)) = report::save_runs(&rec.name.clone(), &[rec]) {
+                println!("saved {j} / {c}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+// note: `--resume ckpt.bin` is handled inside Workload::from_args; saving
+// final weights requires running through the library API (examples/) since
+// RunRecord does not carry params — see train::checkpoint.
+
+fn cmd_inspect(args: &Args) -> i32 {
+    let dir = args.str_or("artifacts", adacomp::harness::default_artifacts_dir());
+    let m = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let mut t = report::Table::new(&["model", "params", "tensors", "batch", "classes", "conv-L_T", "fc-L_T"]);
+    for meta in &m.models {
+        let conv = meta
+            .layout
+            .layers
+            .iter()
+            .find(|l| l.kind == adacomp::LayerKind::Conv)
+            .map(|l| l.lt_default.to_string())
+            .unwrap_or_else(|| "-".into());
+        let fc = meta
+            .layout
+            .layers
+            .iter()
+            .find(|l| l.kind != adacomp::LayerKind::Conv)
+            .map(|l| l.lt_default.to_string())
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            meta.name.clone(),
+            meta.layout.total.to_string(),
+            meta.layout.num_layers().to_string(),
+            meta.batch.to_string(),
+            meta.num_classes.to_string(),
+            conv,
+            fc,
+        ]);
+    }
+    t.print();
+    0
+}
+
+/// One forward/backward/pack on a real batch: per-layer compression report.
+fn cmd_analyze(args: &Args) -> i32 {
+    use adacomp::compress;
+    use adacomp::runtime::Executor;
+    let w = match Workload::from_args(args, "cifar_cnn") {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let meta = w.manifest.model(&w.model).unwrap().clone();
+    let mut exe = match w.executor() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let mut comp = compress::build(&w.cfg.compression, &meta.layout);
+    // one representative batch
+    let bs = meta.batch;
+    let ds = &w.dataset;
+    let mut batch = if ds.int_input() {
+        adacomp::runtime::Batch::i32(vec![0; bs * ds.x_elems()], vec![0; bs * ds.y_elems()], bs)
+    } else {
+        adacomp::runtime::Batch::f32(vec![0.0; bs * ds.x_elems()], vec![0; bs * ds.y_elems()], bs)
+    };
+    let idx: Vec<usize> = (0..bs).collect();
+    if batch.x_i32.is_empty() {
+        ds.fill(adacomp::data::Split::Train, &idx, adacomp::data::XBuf::F32(&mut batch.x_f32), &mut batch.y);
+    } else {
+        ds.fill(adacomp::data::Split::Train, &idx, adacomp::data::XBuf::I32(&mut batch.x_i32), &mut batch.y);
+    }
+    let out = match exe.step(&w.init_params, &batch) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "model {} | scheme {} | first-step loss {:.4}",
+        w.model,
+        w.cfg.compression.kind.name(),
+        out.loss
+    );
+    let mut t = report::Table::new(&[
+        "layer", "kind", "elements", "L_T", "sent", "sparsity", "rate(wire)", "rate(paper)",
+    ]);
+    for (li, l) in meta.layout.layers.iter().enumerate() {
+        let p = comp.pack_layer(li, meta.layout.view(li, &out.grads));
+        t.row(vec![
+            l.name.clone(),
+            l.kind.name().into(),
+            l.len().to_string(),
+            w.cfg.compression.lt_for(l.kind).to_string(),
+            p.sent().to_string(),
+            format!("{:.4}", p.sent() as f64 / p.n as f64),
+            format!("{:.1}x", p.rate_wire()),
+            format!("{:.1}x", p.rate_paper()),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_schemes() -> i32 {
+    let mut t = report::Table::new(&["scheme", "selection", "quantization", "knobs"]);
+    for (s, sel, q, k) in [
+        ("adacomp", "per-bin soft threshold |H|>=max|G|", "ternary, layer scale", "--lt / --lt-conv / --lt-fc"),
+        ("ls", "per-bin max only (ablation)", "ternary, layer scale", "--lt"),
+        ("dryden", "global top-k% (quickselect)", "1-bit +/- means", "--topk"),
+        ("onebit", "dense (all elements)", "1-bit +/- means", ""),
+        ("terngrad", "stochastic, unbiased", "ternary, max scale", ""),
+        ("strom", "fixed |G| > tau", "+/- tau", "--tau"),
+        ("none", "dense", "f32", ""),
+    ] {
+        t.row(vec![s.into(), sel.into(), q.into(), k.into()]);
+    }
+    t.print();
+    0
+}
+
+fn print_help() {
+    println!(
+        "adacomp — AdaComp (AAAI'18) reproduction CLI
+
+USAGE:
+  adacomp train [--model M] [--scheme S] [--learners N] [--batch B]
+                [--epochs E] [--lt L] [--optimizer sgd|adam|rmsprop]
+                [--topology ring|ps] [--lr LR] [--seed S]
+  adacomp inspect [--artifacts DIR]
+  adacomp schemes
+
+Figure harnesses (one per paper figure/table) live in examples/:
+  cargo run --release --example quickstart
+  cargo run --release --example table2_accuracy
+  cargo run --release --example fig4_robustness -- --lts 50,500,2000
+  cargo run --release --example e2e_transformer"
+    );
+}

@@ -1,0 +1,154 @@
+//! Signed log-scale histogram for Fig 6 (residual-gradient distributions).
+//!
+//! The paper's Fig 6 plots RG histograms whose tails differ by *orders of
+//! magnitude* between LS and AdaComp, so linear bins are useless; we bin by
+//! sign x log2|x| with a configurable floor.
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// Smallest magnitude resolved; everything below lands in the zero bin.
+    pub floor: f32,
+    /// log2 range covered above the floor.
+    pub span: usize,
+    /// counts[0..span] = negative side (largest magnitude first),
+    /// counts[span] = zero bin, counts[span+1..] = positive side.
+    counts: Vec<u64>,
+}
+
+impl LogHistogram {
+    pub fn new(floor: f32, span: usize) -> LogHistogram {
+        LogHistogram {
+            floor,
+            span,
+            counts: vec![0; 2 * span + 1],
+        }
+    }
+
+    #[inline]
+    fn mag_bin(&self, x: f32) -> Option<usize> {
+        let m = x.abs();
+        if m < self.floor {
+            return None;
+        }
+        let b = ((m / self.floor).log2().floor() as isize).clamp(0, self.span as isize - 1);
+        Some(b as usize)
+    }
+
+    pub fn add(&mut self, x: f32) {
+        match self.mag_bin(x) {
+            None => self.counts[self.span] += 1,
+            Some(b) => {
+                if x < 0.0 {
+                    self.counts[self.span - 1 - b] += 1;
+                } else {
+                    self.counts[self.span + 1 + b] += 1;
+                }
+            }
+        }
+    }
+
+    pub fn add_all(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Largest |value| bucket edge that holds any mass — the "tail length"
+    /// the paper's Fig 6 contrasts (LS: +/-240K; AdaComp: tiny).
+    pub fn max_magnitude_edge(&self) -> f32 {
+        let mut best: isize = -1;
+        for b in 0..self.span {
+            if self.counts[self.span - 1 - b] > 0 || self.counts[self.span + 1 + b] > 0 {
+                best = best.max(b as isize);
+            }
+        }
+        if best < 0 {
+            0.0
+        } else {
+            self.floor * 2f32.powi(best as i32 + 1)
+        }
+    }
+
+    /// (bucket center, count) pairs for plotting; negative side first.
+    pub fn series(&self) -> Vec<(f32, u64)> {
+        let mut out = Vec::with_capacity(self.counts.len());
+        for b in (0..self.span).rev() {
+            let c = self.counts[self.span - 1 - b];
+            out.push((-(self.floor * 2f32.powi(b as i32)), c));
+        }
+        out.push((0.0, self.counts[self.span]));
+        for b in 0..self.span {
+            let c = self.counts[self.span + 1 + b];
+            out.push((self.floor * 2f32.powi(b as i32), c));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::arr(
+            self.series()
+                .into_iter()
+                .map(|(edge, count)| {
+                    json::obj(vec![
+                        ("edge", json::num(edge as f64)),
+                        ("count", json::num(count as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_bin() {
+        let mut h = LogHistogram::new(1e-3, 10);
+        h.add(0.0);
+        h.add(1e-4);
+        assert_eq!(h.total(), 2);
+        assert_eq!(h.max_magnitude_edge(), 0.0);
+    }
+
+    #[test]
+    fn sign_split() {
+        let mut h = LogHistogram::new(1.0, 4);
+        h.add(1.5); // bin 0 positive
+        h.add(-1.5); // bin 0 negative
+        h.add(5.0); // bin 2 positive
+        let s = h.series();
+        assert_eq!(s.len(), 9);
+        assert_eq!(h.total(), 3);
+        // negative 1.5 in center-left bucket
+        assert_eq!(s[3], (-1.0, 1));
+        assert_eq!(s[5], (1.0, 1));
+        assert_eq!(s[7], (4.0, 1));
+    }
+
+    #[test]
+    fn tail_edge_grows() {
+        let mut h = LogHistogram::new(1e-3, 40);
+        h.add(0.5);
+        let small = h.max_magnitude_edge();
+        h.add(240_000.0);
+        assert!(h.max_magnitude_edge() > small * 1e5);
+    }
+
+    #[test]
+    fn clamps_huge_values() {
+        let mut h = LogHistogram::new(1e-3, 8);
+        h.add(1e30);
+        assert_eq!(h.total(), 1);
+        // lands in the last bin
+        let s = h.series();
+        assert_eq!(s.last().unwrap().1, 1);
+    }
+}

@@ -1,0 +1,294 @@
+//! Training metrics: everything the paper's figures plot.
+//!
+//! * per-epoch convergence records (Fig 2/3, Table 2)
+//! * per-layer compression statistics (Fig 4/7, the ~40x/~200x headline)
+//! * percentile tracking of |dW| and |RG| (Fig 5)
+//! * residual-gradient histograms (Fig 6)
+
+pub mod histogram;
+pub mod percentile;
+
+pub use histogram::LogHistogram;
+pub use percentile::percentile;
+
+use crate::util::json::{self, Json};
+
+/// Per-layer compression accounting accumulated over an epoch.
+#[derive(Debug, Clone, Default)]
+pub struct CompStat {
+    pub elements: u64,
+    pub sent: u64,
+    pub wire_bytes: u64,
+    pub paper_bits: u64,
+}
+
+impl CompStat {
+    pub fn add(&mut self, p: &crate::compress::Packet) {
+        self.elements += p.n as u64;
+        self.sent += p.sent() as u64;
+        self.wire_bytes += p.wire_bytes as u64;
+        self.paper_bits += p.paper_bits as u64;
+    }
+
+    /// Effective compression rate vs dense f32, from real wire bytes.
+    pub fn rate_wire(&self) -> f64 {
+        if self.wire_bytes == 0 {
+            1.0
+        } else {
+            4.0 * self.elements as f64 / self.wire_bytes as f64
+        }
+    }
+
+    /// The paper's idealized accounting.
+    pub fn rate_paper(&self) -> f64 {
+        if self.paper_bits == 0 {
+            1.0
+        } else {
+            32.0 * self.elements as f64 / self.paper_bits as f64
+        }
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        if self.elements == 0 {
+            0.0
+        } else {
+            self.sent as f64 / self.elements as f64
+        }
+    }
+}
+
+/// One epoch's record.
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub test_error_pct: f64,
+    pub test_loss: f64,
+    pub lr: f32,
+    /// Aggregated over conv layers / over fc+lstm layers / over all.
+    pub comp_conv: CompStat,
+    pub comp_fc: CompStat,
+    pub comp_all: CompStat,
+    /// 95th percentile of |residual gradient| (largest over layers), Fig 5.
+    pub rg_p95: f32,
+    /// 95th percentile of |dW| (largest over layers), Fig 5.
+    pub dw_p95: f32,
+    pub wall_secs: f64,
+}
+
+/// Full run record: convergence curve + provenance.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub name: String,
+    pub model: String,
+    pub scheme: String,
+    pub learners: usize,
+    pub batch_per_learner: usize,
+    pub optimizer: String,
+    pub epochs: Vec<EpochRecord>,
+    pub diverged: bool,
+    pub fabric: crate::comm::FabricStats,
+}
+
+impl RunRecord {
+    pub fn final_test_error(&self) -> f64 {
+        self.epochs.last().map(|e| e.test_error_pct).unwrap_or(100.0)
+    }
+
+    /// Best (lowest) test error over the run — the paper reports final, but
+    /// best is useful for stress-test tables.
+    pub fn best_test_error(&self) -> f64 {
+        self.epochs
+            .iter()
+            .map(|e| e.test_error_pct)
+            .fold(100.0, f64::min)
+    }
+
+    /// Mean effective compression rate over the run (wire accounting).
+    pub fn mean_rate_wire(&self) -> f64 {
+        let (mut el, mut by) = (0u64, 0u64);
+        for e in &self.epochs {
+            el += e.comp_all.elements;
+            by += e.comp_all.wire_bytes;
+        }
+        if by == 0 {
+            1.0
+        } else {
+            4.0 * el as f64 / by as f64
+        }
+    }
+
+    pub fn mean_rate_paper(&self) -> f64 {
+        let (mut el, mut bits) = (0u64, 0u64);
+        for e in &self.epochs {
+            el += e.comp_all.elements;
+            bits += e.comp_all.paper_bits;
+        }
+        if bits == 0 {
+            1.0
+        } else {
+            32.0 * el as f64 / bits as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let comp = |c: &CompStat| {
+            json::obj(vec![
+                ("rate_wire", json::num(c.rate_wire())),
+                ("rate_paper", json::num(c.rate_paper())),
+                ("sparsity", json::num(c.sparsity())),
+            ])
+        };
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("model", json::s(&self.model)),
+            ("scheme", json::s(&self.scheme)),
+            ("learners", json::num(self.learners as f64)),
+            ("batch_per_learner", json::num(self.batch_per_learner as f64)),
+            ("optimizer", json::s(&self.optimizer)),
+            ("diverged", Json::Bool(self.diverged)),
+            ("final_test_error", json::num(self.final_test_error())),
+            ("mean_rate_wire", json::num(self.mean_rate_wire())),
+            ("mean_rate_paper", json::num(self.mean_rate_paper())),
+            (
+                "epochs",
+                json::arr(
+                    self.epochs
+                        .iter()
+                        .map(|e| {
+                            json::obj(vec![
+                                ("epoch", json::num(e.epoch as f64)),
+                                ("train_loss", json::num(e.train_loss)),
+                                ("test_error_pct", json::num(e.test_error_pct)),
+                                ("test_loss", json::num(e.test_loss)),
+                                ("lr", json::num(e.lr as f64)),
+                                ("rg_p95", json::num(e.rg_p95 as f64)),
+                                ("dw_p95", json::num(e.dw_p95 as f64)),
+                                ("comp_conv", comp(&e.comp_conv)),
+                                ("comp_fc", comp(&e.comp_fc)),
+                                ("comp_all", comp(&e.comp_all)),
+                                ("wall_secs", json::num(e.wall_secs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "fabric",
+                json::obj(vec![
+                    ("bytes_up", json::num(self.fabric.bytes_up as f64)),
+                    ("bytes_down", json::num(self.fabric.bytes_down as f64)),
+                    ("rounds", json::num(self.fabric.rounds as f64)),
+                    ("sim_time_s", json::num(self.fabric.sim_time_s)),
+                    ("effective_rate", json::num(self.fabric.effective_rate())),
+                ]),
+            ),
+        ])
+    }
+
+    /// Append a CSV row per epoch to a writer-friendly string.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "name,model,scheme,learners,epoch,train_loss,test_error_pct,rate_wire_all,rate_paper_all,rg_p95,dw_p95\n",
+        );
+        for e in &self.epochs {
+            out.push_str(&format!(
+                "{},{},{},{},{},{:.6},{:.3},{:.2},{:.2},{:.6e},{:.6e}\n",
+                self.name,
+                self.model,
+                self.scheme,
+                self.learners,
+                e.epoch,
+                e.train_loss,
+                e.test_error_pct,
+                e.comp_all.rate_wire(),
+                e.comp_all.rate_paper(),
+                e.rg_p95,
+                e.dw_p95,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Packet;
+
+    fn packet(n: usize, sent: usize) -> Packet {
+        Packet {
+            layer: 0,
+            n,
+            idx: (0..sent as u32).collect(),
+            val: vec![1.0; sent],
+            wire_bytes: sent + 16,
+            paper_bits: 8 * sent,
+        }
+    }
+
+    #[test]
+    fn compstat_rates() {
+        let mut c = CompStat::default();
+        c.add(&packet(1000, 10));
+        assert!((c.rate_wire() - 4000.0 / 26.0).abs() < 1e-9);
+        assert!((c.rate_paper() - 32000.0 / 80.0).abs() < 1e-9);
+        assert!((c.sparsity() - 0.01).abs() < 1e-12);
+    }
+
+    fn rec() -> RunRecord {
+        let mut comp = CompStat::default();
+        comp.add(&packet(100, 5));
+        RunRecord {
+            name: "t".into(),
+            model: "m".into(),
+            scheme: "adacomp".into(),
+            learners: 2,
+            batch_per_learner: 8,
+            optimizer: "sgd".into(),
+            epochs: vec![EpochRecord {
+                epoch: 0,
+                train_loss: 1.0,
+                test_error_pct: 20.0,
+                test_loss: 1.2,
+                lr: 0.1,
+                comp_conv: comp.clone(),
+                comp_fc: CompStat::default(),
+                comp_all: comp,
+                rg_p95: 0.5,
+                dw_p95: 0.1,
+                wall_secs: 1.0,
+            }],
+            diverged: false,
+            fabric: Default::default(),
+        }
+    }
+
+    #[test]
+    fn run_record_json_roundtrips() {
+        let r = rec();
+        let j = r.to_json().to_string();
+        let v = Json::from_str_slice(&j).unwrap();
+        assert_eq!(v.get("final_test_error").as_f64(), Some(20.0));
+        assert_eq!(v.get("epochs").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn csv_has_rows() {
+        let r = rec();
+        let csv = r.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.lines().nth(1).unwrap().starts_with("t,m,adacomp,2,0,"));
+    }
+
+    #[test]
+    fn final_and_best() {
+        let mut r = rec();
+        let mut e2 = r.epochs[0].clone();
+        e2.epoch = 1;
+        e2.test_error_pct = 30.0;
+        r.epochs.push(e2);
+        assert_eq!(r.final_test_error(), 30.0);
+        assert_eq!(r.best_test_error(), 20.0);
+    }
+}

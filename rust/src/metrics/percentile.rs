@@ -1,0 +1,80 @@
+//! Percentile estimation for Fig 5 (95th percentile of |dW| and |RG|).
+//!
+//! Exact selection via quickselect on a scratch copy — O(N) expected, no
+//! full sort (matching the paper's computational argument).
+
+/// p-th percentile (0..=100) of |values|. Returns 0 for empty input.
+pub fn percentile(values: &[f32], p: f64) -> f32 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut scratch: Vec<f32> = values.iter().map(|x| x.abs()).collect();
+    let rank = (((p / 100.0) * (scratch.len() - 1) as f64).round() as usize)
+        .min(scratch.len() - 1);
+    *order_stat(&mut scratch, rank)
+}
+
+/// k-th smallest (0-based) via iterative median-of-three quickselect.
+fn order_stat(s: &mut [f32], k: usize) -> &f32 {
+    let (mut lo, mut hi) = (0usize, s.len());
+    loop {
+        if hi - lo <= 1 {
+            return &s[lo];
+        }
+        let mid = lo + (hi - lo) / 2;
+        // median-of-three pivot
+        let (a, b, c) = (s[lo], s[mid], s[hi - 1]);
+        let pivot = a.max(b).min(a.min(b).max(c));
+        let (mut i, mut j, mut m) = (lo, lo, hi);
+        while j < m {
+            if s[j] < pivot {
+                s.swap(i, j);
+                i += 1;
+                j += 1;
+            } else if s[j] > pivot {
+                m -= 1;
+                s.swap(j, m);
+            } else {
+                j += 1;
+            }
+        }
+        if k < i {
+            hi = i;
+        } else if k < m {
+            return &s[k];
+        } else {
+            lo = m;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn matches_sort_based() {
+        let mut rng = Pcg32::seeded(1);
+        for n in [1usize, 2, 10, 1000, 4097] {
+            let xs = rng.normal_vec(n, 1.0);
+            for p in [0.0, 50.0, 95.0, 100.0] {
+                let got = percentile(&xs, p);
+                let mut sorted: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let rank = (((p / 100.0) * (n - 1) as f64).round() as usize).min(n - 1);
+                assert_eq!(got, sorted[rank], "n={n} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(percentile(&[], 95.0), 0.0);
+    }
+
+    #[test]
+    fn absolute_values() {
+        assert_eq!(percentile(&[-10.0, 1.0], 100.0), 10.0);
+    }
+}

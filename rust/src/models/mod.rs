@@ -1,0 +1,289 @@
+//! Model metadata: the coordinator's view of a model's parameter layout.
+//!
+//! Parsed from `artifacts/manifest.json` (written by `python -m compile.aot`),
+//! or constructed programmatically for tests and the native executor. The
+//! layout is what lets compression apply the paper's per-layer-kind L_T
+//! defaults (conv 50, fc/lstm 500) and lets the coordinator carve flat
+//! parameter/gradient buffers into layers.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Layer taxonomy from the paper (drives the L_T default).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Fc,
+    Lstm,
+    Embed,
+}
+
+impl LayerKind {
+    pub fn parse(s: &str) -> Result<LayerKind> {
+        Ok(match s {
+            "conv" => LayerKind::Conv,
+            "fc" => LayerKind::Fc,
+            "lstm" => LayerKind::Lstm,
+            "embed" => LayerKind::Embed,
+            other => bail!("unknown layer kind '{other}'"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerKind::Conv => "conv",
+            LayerKind::Fc => "fc",
+            LayerKind::Lstm => "lstm",
+            LayerKind::Embed => "embed",
+        }
+    }
+}
+
+/// One parameter tensor.
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: LayerKind,
+    /// Paper-default L_T recorded by the exporter (50 conv / 500 fc+lstm).
+    pub lt_default: usize,
+    /// Offset into the flat parameter vector.
+    pub offset: usize,
+}
+
+impl LayerInfo {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Ordered parameter layout of a model.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub layers: Vec<LayerInfo>,
+    pub total: usize,
+}
+
+impl Layout {
+    pub fn new(mut layers: Vec<LayerInfo>) -> Layout {
+        let mut off = 0;
+        for l in layers.iter_mut() {
+            l.offset = off;
+            off += l.len();
+        }
+        Layout {
+            layers,
+            total: off,
+        }
+    }
+
+    /// Build from (name, shape, kind) triples with paper L_T defaults.
+    pub fn from_specs(specs: &[(&str, &[usize], LayerKind)]) -> Layout {
+        Layout::new(
+            specs
+                .iter()
+                .map(|(name, shape, kind)| LayerInfo {
+                    name: name.to_string(),
+                    shape: shape.to_vec(),
+                    kind: *kind,
+                    lt_default: match kind {
+                        LayerKind::Conv => 50,
+                        _ => 500,
+                    },
+                    offset: 0,
+                })
+                .collect(),
+        )
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Slice layer `i` out of a flat buffer.
+    pub fn view<'a>(&self, i: usize, flat: &'a [f32]) -> &'a [f32] {
+        let l = &self.layers[i];
+        &flat[l.offset..l.offset + l.len()]
+    }
+
+    pub fn view_mut<'a>(&self, i: usize, flat: &'a mut [f32]) -> &'a mut [f32] {
+        let l = &self.layers[i];
+        &mut flat[l.offset..l.offset + l.len()]
+    }
+}
+
+/// Input/output signature of an exported model (from the manifest).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub layout: Layout,
+    pub step_hlo: String,
+    pub eval_hlo: String,
+    pub init_bin: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub x_shape: Vec<usize>,
+    pub x_is_int: bool,
+    pub y_shape: Vec<usize>,
+    pub num_classes: usize,
+}
+
+impl ModelMeta {
+    fn from_json(v: &Json) -> Result<ModelMeta> {
+        let name = v.get("name").as_str().context("model name")?.to_string();
+        let params = v.get("params").as_arr().context("params")?;
+        let mut layers = Vec::with_capacity(params.len());
+        for p in params {
+            layers.push(LayerInfo {
+                name: p.get("name").as_str().context("param name")?.to_string(),
+                shape: p.get("shape").usize_vec().context("param shape")?,
+                kind: LayerKind::parse(p.get("kind").as_str().context("param kind")?)?,
+                lt_default: p.get("lt").as_usize().context("param lt")?,
+                offset: 0,
+            });
+        }
+        Ok(ModelMeta {
+            name,
+            layout: Layout::new(layers),
+            step_hlo: v.get("step_hlo").as_str().context("step_hlo")?.to_string(),
+            eval_hlo: v.get("eval_hlo").as_str().context("eval_hlo")?.to_string(),
+            init_bin: v.get("init_bin").as_str().context("init_bin")?.to_string(),
+            batch: v.get("batch").as_usize().context("batch")?,
+            seq_len: v.get("seq_len").as_usize().unwrap_or(0),
+            x_shape: v.get("x_shape").usize_vec().context("x_shape")?,
+            x_is_int: v.get("x_dtype").as_str() == Some("i32"),
+            y_shape: v.get("y_shape").usize_vec().context("y_shape")?,
+            num_classes: v.get("num_classes").as_usize().context("num_classes")?,
+        })
+    }
+}
+
+/// The parsed artifacts manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: String,
+    pub models: Vec<ModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = Path::new(dir).join("manifest.json");
+        let txt = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let v = Json::from_str_slice(&txt).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let models_obj = v.get("models").as_obj().context("manifest.models")?;
+        let mut models = Vec::new();
+        for m in models_obj.values() {
+            models.push(ModelMeta::from_json(m)?);
+        }
+        Ok(Manifest {
+            dir: dir.to_string(),
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| {
+                format!(
+                    "model '{}' not in manifest (have: {})",
+                    name,
+                    self.models
+                        .iter()
+                        .map(|m| m.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// Load a model's initial flat parameter vector from its init bin.
+    pub fn load_init(&self, meta: &ModelMeta) -> Result<Vec<f32>> {
+        let path = Path::new(&self.dir).join(&meta.init_bin);
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != meta.layout.total * 4 {
+            bail!(
+                "{}: expected {} f32 ({} bytes), file has {} bytes",
+                meta.init_bin,
+                meta.layout.total,
+                meta.layout.total * 4,
+                bytes.len()
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// A small synthetic layout used across unit tests: one conv-ish layer and
+/// one fc-ish layer with paper-default L_T.
+pub fn test_layout() -> Layout {
+    Layout::from_specs(&[
+        ("conv_w", &[5, 5, 3, 8], LayerKind::Conv), // 600 elements
+        ("fc_w", &[40, 30], LayerKind::Fc),         // 1200 elements
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_offsets() {
+        let l = test_layout();
+        assert_eq!(l.num_layers(), 2);
+        assert_eq!(l.layers[0].len(), 600);
+        assert_eq!(l.layers[1].offset, 600);
+        assert_eq!(l.total, 1800);
+    }
+
+    #[test]
+    fn views() {
+        let l = test_layout();
+        let mut flat = vec![0.0f32; l.total];
+        l.view_mut(1, &mut flat)[0] = 7.0;
+        assert_eq!(flat[600], 7.0);
+        assert_eq!(l.view(1, &flat)[0], 7.0);
+    }
+
+    #[test]
+    fn lt_defaults() {
+        let l = test_layout();
+        assert_eq!(l.layers[0].lt_default, 50);
+        assert_eq!(l.layers[1].lt_default, 500);
+    }
+
+    #[test]
+    fn kind_parse() {
+        assert!(LayerKind::parse("conv").is_ok());
+        assert!(LayerKind::parse("nope").is_err());
+        assert_eq!(LayerKind::parse("lstm").unwrap().name(), "lstm");
+    }
+
+    #[test]
+    fn manifest_from_json_text() {
+        let txt = r#"{"models": {"m": {
+            "name": "m", "step_hlo": "m.step.hlo.txt", "eval_hlo": "m.eval.hlo.txt",
+            "init_bin": "m.init.bin", "batch": 4, "seq_len": 0,
+            "x_shape": [4, 8], "x_dtype": "f32", "y_shape": [4],
+            "num_classes": 3, "num_params": 27,
+            "params": [{"name": "w", "shape": [8, 3], "kind": "fc", "lt": 500},
+                       {"name": "b", "shape": [3], "kind": "fc", "lt": 500}]
+        }}}"#;
+        let v = Json::from_str_slice(txt).unwrap();
+        let m = ModelMeta::from_json(v.get("models").get("m")).unwrap();
+        assert_eq!(m.layout.total, 27);
+        assert_eq!(m.layout.layers[1].offset, 24);
+        assert!(!m.x_is_int);
+    }
+}

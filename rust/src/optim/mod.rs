@@ -1,0 +1,216 @@
+//! Optimizers applied at the central weight-update step (paper Algorithm 1:
+//! `Update(unpack(...))`). The paper evaluates SGD with momentum and Adam
+//! and argues AdaComp is optimizer-agnostic; RMSProp is included because the
+//! discussion section names it.
+
+pub mod schedule;
+
+pub use schedule::LrSchedule;
+
+/// Flat-parameter optimizer.
+pub trait Optimizer: Send {
+    fn name(&self) -> &'static str;
+    /// params -= update(grad); `grad` is the mean gradient across learners.
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32);
+    fn reset(&mut self);
+}
+
+/// SGD with classical momentum: v = mu*v + g; p -= lr*v.
+pub struct Sgd {
+    pub momentum: f32,
+    v: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(n: usize, momentum: f32) -> Sgd {
+        Sgd {
+            momentum,
+            v: vec![0.0; n],
+        }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.v.len());
+        let mu = self.momentum;
+        for ((p, &g), v) in params.iter_mut().zip(grad.iter()).zip(self.v.iter_mut()) {
+            *v = mu * *v + g;
+            *p -= lr * *v;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+/// Adam (Kingma & Ba 2014), bias-corrected.
+pub struct Adam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u32,
+}
+
+impl Adam {
+    pub fn new(n: usize) -> Adam {
+        Adam {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        assert_eq!(params.len(), grad.len());
+        self.t += 1;
+        let b1 = self.beta1;
+        let b2 = self.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let eps = self.eps;
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= lr * mhat / (vhat.sqrt() + eps);
+        }
+    }
+
+    fn reset(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.t = 0;
+    }
+}
+
+/// RMSProp (Hinton): s = rho*s + (1-rho)*g^2; p -= lr * g / sqrt(s + eps).
+pub struct RmsProp {
+    pub rho: f32,
+    pub eps: f32,
+    s: Vec<f32>,
+}
+
+impl RmsProp {
+    pub fn new(n: usize) -> RmsProp {
+        RmsProp {
+            rho: 0.9,
+            eps: 1e-8,
+            s: vec![0.0; n],
+        }
+    }
+}
+
+impl Optimizer for RmsProp {
+    fn name(&self) -> &'static str {
+        "rmsprop"
+    }
+
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        assert_eq!(params.len(), grad.len());
+        let rho = self.rho;
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.s[i] = rho * self.s[i] + (1.0 - rho) * g * g;
+            params[i] -= lr * g / (self.s[i] + self.eps).sqrt();
+        }
+    }
+
+    fn reset(&mut self) {
+        self.s.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+/// Build by name. `momentum` only applies to sgd.
+pub fn build(name: &str, n: usize, momentum: f32) -> Option<Box<dyn Optimizer>> {
+    match name {
+        "sgd" => Some(Box::new(Sgd::new(n, momentum))),
+        "adam" => Some(Box::new(Adam::new(n))),
+        "rmsprop" => Some(Box::new(RmsProp::new(n))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// All optimizers must descend a simple quadratic f(p) = 0.5*|p|^2.
+    fn descend(opt: &mut dyn Optimizer, lr: f32) -> f32 {
+        let mut p = vec![1.0f32, -2.0, 3.0];
+        for _ in 0..400 {
+            let g: Vec<f32> = p.clone(); // grad of 0.5|p|^2
+            opt.step(&mut p, &g, lr);
+        }
+        p.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    #[test]
+    fn sgd_descends() {
+        assert!(descend(&mut Sgd::new(3, 0.0), 0.1) < 1e-3);
+    }
+
+    #[test]
+    fn sgd_momentum_descends() {
+        assert!(descend(&mut Sgd::new(3, 0.9), 0.02) < 1e-2);
+    }
+
+    #[test]
+    fn adam_descends() {
+        assert!(descend(&mut Adam::new(3), 0.05) < 1e-2);
+    }
+
+    #[test]
+    fn rmsprop_descends() {
+        assert!(descend(&mut RmsProp::new(3), 0.05) < 0.1);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut o = Sgd::new(1, 0.9);
+        let mut p = vec![0.0f32];
+        o.step(&mut p, &[1.0], 1.0);
+        assert!((p[0] + 1.0).abs() < 1e-6); // v=1, p=-1
+        o.step(&mut p, &[1.0], 1.0);
+        assert!((p[0] + 2.9).abs() < 1e-6); // v=1.9
+        o.reset();
+        o.step(&mut p, &[0.0], 1.0);
+        assert!((p[0] + 2.9).abs() < 1e-6); // velocity cleared
+    }
+
+    #[test]
+    fn adam_bias_correction_first_step() {
+        // first step of adam moves by ~lr regardless of gradient scale
+        let mut o = Adam::new(1);
+        let mut p = vec![0.0f32];
+        o.step(&mut p, &[1e-4], 0.1);
+        assert!((p[0] + 0.1).abs() < 1e-3, "{}", p[0]);
+    }
+
+    #[test]
+    fn build_by_name() {
+        assert!(build("sgd", 2, 0.9).is_some());
+        assert!(build("adam", 2, 0.0).is_some());
+        assert!(build("rmsprop", 2, 0.0).is_some());
+        assert!(build("lamb", 2, 0.0).is_none());
+    }
+}

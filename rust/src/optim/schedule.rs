@@ -1,0 +1,77 @@
+//! Learning-rate schedules. The paper uses the baselines' unchanged
+//! hyper-parameters: step decay for the Caffe-style CNNs, constant for the
+//! small models.
+
+/// Piecewise-constant learning rate.
+#[derive(Debug, Clone)]
+pub enum LrSchedule {
+    Constant(f32),
+    /// lr * gamma^(epoch / step) — classic Caffe "step" policy.
+    StepDecay {
+        base: f32,
+        gamma: f32,
+        every_epochs: usize,
+    },
+    /// Explicit milestones: (epoch, lr); uses the last milestone <= epoch.
+    Milestones {
+        base: f32,
+        points: Vec<(usize, f32)>,
+    },
+}
+
+impl LrSchedule {
+    pub fn at(&self, epoch: usize) -> f32 {
+        match self {
+            LrSchedule::Constant(lr) => *lr,
+            LrSchedule::StepDecay {
+                base,
+                gamma,
+                every_epochs,
+            } => base * gamma.powi((epoch / every_epochs.max(&1).to_owned()) as i32),
+            LrSchedule::Milestones { base, points } => {
+                let mut lr = *base;
+                for (e, v) in points {
+                    if epoch >= *e {
+                        lr = *v;
+                    }
+                }
+                lr
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant() {
+        assert_eq!(LrSchedule::Constant(0.1).at(0), 0.1);
+        assert_eq!(LrSchedule::Constant(0.1).at(99), 0.1);
+    }
+
+    #[test]
+    fn step_decay() {
+        let s = LrSchedule::StepDecay {
+            base: 1.0,
+            gamma: 0.1,
+            every_epochs: 10,
+        };
+        assert_eq!(s.at(0), 1.0);
+        assert_eq!(s.at(9), 1.0);
+        assert!((s.at(10) - 0.1).abs() < 1e-7);
+        assert!((s.at(25) - 0.01).abs() < 1e-8);
+    }
+
+    #[test]
+    fn milestones() {
+        let s = LrSchedule::Milestones {
+            base: 0.1,
+            points: vec![(5, 0.01), (8, 0.001)],
+        };
+        assert_eq!(s.at(4), 0.1);
+        assert_eq!(s.at(5), 0.01);
+        assert_eq!(s.at(9), 0.001);
+    }
+}

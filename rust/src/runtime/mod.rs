@@ -1,0 +1,78 @@
+//! Model execution runtime.
+//!
+//! `Executor` is the coordinator's contract with the compute layer: given
+//! flat parameters and a batch, produce (loss, flat gradients). Two
+//! implementations:
+//!
+//! * `pjrt::PjrtExecutor` — the production path: loads the AOT-lowered HLO
+//!   text (L1 Pallas kernels + L2 JAX models) and runs it on the PJRT CPU
+//!   client via the `xla` crate. Python is never involved.
+//! * `native::NativeMlp` — a pure-rust reference executor for FC stacks,
+//!   used by hermetic tests (no artifacts needed) and as a cross-check of
+//!   the PJRT numerics.
+
+pub mod native;
+pub mod native_cnn;
+pub mod pjrt;
+
+use crate::data::XBuf;
+
+/// A training batch, already laid out to the executor's static shapes.
+pub struct Batch {
+    pub x_f32: Vec<f32>,
+    pub x_i32: Vec<i32>,
+    pub y: Vec<i32>,
+    pub batch_size: usize,
+}
+
+impl Batch {
+    pub fn f32(x: Vec<f32>, y: Vec<i32>, batch_size: usize) -> Batch {
+        Batch {
+            x_f32: x,
+            x_i32: Vec::new(),
+            y,
+            batch_size,
+        }
+    }
+    pub fn i32(x: Vec<i32>, y: Vec<i32>, batch_size: usize) -> Batch {
+        Batch {
+            x_f32: Vec::new(),
+            x_i32: x,
+            y,
+            batch_size,
+        }
+    }
+    pub fn x_buf(&mut self) -> XBuf<'_> {
+        if self.x_i32.is_empty() {
+            XBuf::F32(&mut self.x_f32)
+        } else {
+            XBuf::I32(&mut self.x_i32)
+        }
+    }
+}
+
+/// Result of one forward+backward.
+pub struct StepOut {
+    pub loss: f32,
+    /// Flat gradient, layout order (same length as params).
+    pub grads: Vec<f32>,
+}
+
+/// Result of one evaluation batch.
+pub struct EvalOut {
+    pub loss_sum_weighted: f32,
+    pub ncorrect: f32,
+}
+
+// Note: not `Send` — the PJRT client wraps an `Rc`. The engine runs learners
+// sequentially in one thread (DESIGN.md §Substitutions), so this costs nothing.
+pub trait Executor {
+    /// forward+backward at a given per-learner batch size.
+    fn step(&mut self, params: &[f32], batch: &Batch) -> anyhow::Result<StepOut>;
+    /// evaluation at the executor's eval batch size.
+    fn eval(&mut self, params: &[f32], batch: &Batch) -> anyhow::Result<EvalOut>;
+    /// Batch sizes `step` supports (empty = any).
+    fn step_batch_sizes(&self) -> Vec<usize>;
+    /// The batch size `eval` expects.
+    fn eval_batch(&self) -> usize;
+}

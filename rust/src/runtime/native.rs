@@ -1,0 +1,236 @@
+//! Pure-rust reference executor for MLPs (fc stacks with ReLU).
+//!
+//! Exists so the engine, compression and topology layers have a hermetic,
+//! artifact-free compute backend for unit/integration tests, and to
+//! cross-check PJRT numerics (rust/tests/pjrt_integration.rs trains the
+//! same MLP both ways). Supports any [d0, d1, ..., dk] relu stack with the
+//! same parameter layout convention as python's `_build_dnn` (alternating
+//! w [a,b], b [b]).
+
+use anyhow::{bail, Result};
+
+use super::{Batch, EvalOut, Executor, StepOut};
+use crate::models::{LayerKind, Layout};
+use crate::tensor::ops;
+
+pub struct NativeMlp {
+    pub dims: Vec<usize>,
+    layout: Layout,
+    eval_batch: usize,
+}
+
+impl NativeMlp {
+    pub fn new(dims: &[usize], eval_batch: usize) -> NativeMlp {
+        let mut specs: Vec<(String, Vec<usize>, LayerKind)> = Vec::new();
+        for (i, w) in dims.windows(2).enumerate() {
+            specs.push((format!("fc{}_w", i + 1), vec![w[0], w[1]], LayerKind::Fc));
+            specs.push((format!("fc{}_b", i + 1), vec![w[1]], LayerKind::Fc));
+        }
+        let layout = Layout::from_specs(
+            &specs
+                .iter()
+                .map(|(n, s, k)| (n.as_str(), s.as_slice(), *k))
+                .collect::<Vec<_>>(),
+        );
+        NativeMlp {
+            dims: dims.to_vec(),
+            layout,
+            eval_batch,
+        }
+    }
+
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    /// He-style deterministic init, same distribution family as the python
+    /// exporter (not bit-identical — used for hermetic tests only).
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Pcg32::new(seed, 0x1417);
+        let mut out = vec![0.0f32; self.layout.total];
+        for (i, l) in self.layout.layers.iter().enumerate() {
+            if i % 2 == 0 {
+                let fan_in = l.shape[0] as f32;
+                let std = (2.0 / fan_in).sqrt();
+                for v in out[l.offset..l.offset + l.len()].iter_mut() {
+                    *v = rng.normal() * std;
+                }
+            }
+        }
+        out
+    }
+
+    /// Forward through the stack; returns per-layer activations
+    /// (activations[0] = input, activations[k] = logits).
+    fn forward(&self, params: &[f32], x: &[f32], bsz: usize) -> Vec<Vec<f32>> {
+        let mut acts = vec![x.to_vec()];
+        let k = self.dims.len() - 1;
+        for li in 0..k {
+            let (a, b) = (self.dims[li], self.dims[li + 1]);
+            let w = self.layout.view(2 * li, params);
+            let bias = self.layout.view(2 * li + 1, params);
+            let mut out = vec![0.0f32; bsz * b];
+            ops::matmul(&acts[li], w, &mut out, bsz, a, b, false);
+            for r in 0..bsz {
+                for j in 0..b {
+                    out[r * b + j] += bias[j];
+                }
+            }
+            if li + 1 < k {
+                ops::relu(&mut out);
+            }
+            acts.push(out);
+        }
+        acts
+    }
+}
+
+impl Executor for NativeMlp {
+    fn step(&mut self, params: &[f32], batch: &Batch) -> Result<StepOut> {
+        let bsz = batch.batch_size;
+        let c = *self.dims.last().unwrap();
+        if batch.x_f32.len() != bsz * self.dims[0] {
+            bail!("x length mismatch");
+        }
+        let acts = self.forward(params, &batch.x_f32, bsz);
+        let logits = acts.last().unwrap();
+        let mut dlogits = vec![0.0f32; bsz * c];
+        let loss = ops::softmax_xent(logits, &batch.y, c, &mut dlogits);
+
+        let mut grads = vec![0.0f32; self.layout.total];
+        let k = self.dims.len() - 1;
+        let mut dout = dlogits;
+        for li in (0..k).rev() {
+            let (a, b) = (self.dims[li], self.dims[li + 1]);
+            // dW = act^T @ dout   (act: [bsz, a], dout: [bsz, b])
+            {
+                let gw = self.layout.view_mut(2 * li, &mut grads);
+                ops::matmul_at_b(&acts[li], &dout, gw, a, bsz, b);
+            }
+            {
+                let gb = self.layout.view_mut(2 * li + 1, &mut grads);
+                for r in 0..bsz {
+                    for j in 0..b {
+                        gb[j] += dout[r * b + j];
+                    }
+                }
+            }
+            if li > 0 {
+                // dact = dout @ W^T, then mask by relu
+                let w = self.layout.view(2 * li, params);
+                let mut dact = vec![0.0f32; bsz * a];
+                ops::matmul_a_bt(&dout, w, &mut dact, bsz, b, a);
+                ops::relu_grad(&acts[li], &mut dact);
+                dout = dact;
+            }
+        }
+        Ok(StepOut { loss, grads })
+    }
+
+    fn eval(&mut self, params: &[f32], batch: &Batch) -> Result<EvalOut> {
+        let bsz = batch.batch_size;
+        let c = *self.dims.last().unwrap();
+        let acts = self.forward(params, &batch.x_f32, bsz);
+        let logits = acts.last().unwrap();
+        let mut scratch = vec![0.0f32; bsz * c];
+        let loss = ops::softmax_xent(logits, &batch.y, c, &mut scratch);
+        let ncorrect = ops::count_correct(logits, &batch.y, c) as f32;
+        Ok(EvalOut {
+            loss_sum_weighted: loss,
+            ncorrect,
+        })
+    }
+
+    fn step_batch_sizes(&self) -> Vec<usize> {
+        Vec::new() // any
+    }
+
+    fn eval_batch(&self) -> usize {
+        self.eval_batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn toy_batch(bsz: usize, dim: usize, classes: usize, seed: u64) -> Batch {
+        let mut rng = Pcg32::seeded(seed);
+        let x = rng.normal_vec(bsz * dim, 1.0);
+        let y: Vec<i32> = (0..bsz).map(|i| (i % classes) as i32).collect();
+        Batch::f32(x, y, bsz)
+    }
+
+    #[test]
+    fn gradient_matches_numerical() {
+        let mut m = NativeMlp::new(&[6, 5, 3], 4);
+        let params = m.init_params(1);
+        let batch = toy_batch(4, 6, 3, 2);
+        let out = m.step(&params, &batch).unwrap();
+        let eps = 1e-3;
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..12 {
+            let i = rng.below(params.len() as u32) as usize;
+            let mut pp = params.clone();
+            pp[i] += eps;
+            let mut pm = params.clone();
+            pm[i] -= eps;
+            let lp = m.step(&pp, &batch).unwrap().loss;
+            let lm = m.step(&pm, &batch).unwrap().loss;
+            let num = (lp - lm) / (2.0 * eps);
+            let ana = out.grads[i];
+            assert!(
+                (num - ana).abs() < 2e-2 * num.abs().max(1.0),
+                "i={i} num={num} ana={ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_learns_separable_task() {
+        let mut m = NativeMlp::new(&[8, 16, 4], 32);
+        let mut params = m.init_params(7);
+        // class means pattern: one-hot-ish blocks
+        let mut rng = Pcg32::seeded(11);
+        let gen = |rng: &mut Pcg32, n: usize| -> Batch {
+            let mut x = vec![0.0f32; n * 8];
+            let mut y = vec![0i32; n];
+            for i in 0..n {
+                let cls = rng.below(4) as usize;
+                for j in 0..8 {
+                    x[i * 8 + j] = if j / 2 == cls { 1.0 } else { 0.0 } + 0.3 * rng.normal();
+                }
+                y[i] = cls as i32;
+            }
+            Batch::f32(x, y, n)
+        };
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..150 {
+            let b = gen(&mut rng, 32);
+            let out = m.step(&params, &b).unwrap();
+            if step == 0 {
+                first = out.loss;
+            }
+            last = out.loss;
+            for (p, g) in params.iter_mut().zip(out.grads.iter()) {
+                *p -= 0.3 * g;
+            }
+        }
+        assert!(last < first * 0.5, "first {first} last {last}");
+        // accuracy check
+        let b = gen(&mut rng, 32);
+        let ev = m.eval(&params, &b).unwrap();
+        assert!(ev.ncorrect >= 24.0, "ncorrect {}", ev.ncorrect);
+    }
+
+    #[test]
+    fn eval_counts_bounded() {
+        let mut m = NativeMlp::new(&[4, 3], 8);
+        let params = m.init_params(5);
+        let batch = toy_batch(8, 4, 3, 6);
+        let ev = m.eval(&params, &batch).unwrap();
+        assert!(ev.ncorrect >= 0.0 && ev.ncorrect <= 8.0);
+    }
+}

@@ -1,0 +1,346 @@
+//! Pure-rust CNN executor: a Caffe-quick-style stack of SAME 5x5 convs with
+//! 2x2 max-pools and a final FC head — the same architecture family as the
+//! paper's MNIST-CNN / CIFAR10-CNN. Used for hermetic conv-path integration
+//! tests and as an independent numerical cross-check of the PJRT path.
+//!
+//! Layout convention matches the python exporter: per conv layer
+//! (w [kh,kw,cin,cout], b [cout]), then (fc_w [flat,classes], fc_b).
+
+use anyhow::{bail, Result};
+
+use super::{Batch, EvalOut, Executor, StepOut};
+use crate::models::{LayerKind, Layout};
+use crate::tensor::{conv, ops};
+
+/// One conv stage: 5x5 SAME conv -> relu -> 2x2 maxpool.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvStage {
+    pub cin: usize,
+    pub cout: usize,
+}
+
+pub struct NativeCnn {
+    pub h: usize,
+    pub w: usize,
+    pub stages: Vec<ConvStage>,
+    pub classes: usize,
+    layout: Layout,
+    eval_batch: usize,
+    k: usize, // kernel size (5)
+}
+
+impl NativeCnn {
+    pub fn new(h: usize, w: usize, stages: &[ConvStage], classes: usize, eval_batch: usize) -> NativeCnn {
+        let k = 5usize;
+        let mut specs: Vec<(String, Vec<usize>, LayerKind)> = Vec::new();
+        for (i, s) in stages.iter().enumerate() {
+            specs.push((format!("conv{}_w", i + 1), vec![k, k, s.cin, s.cout], LayerKind::Conv));
+            specs.push((format!("conv{}_b", i + 1), vec![s.cout], LayerKind::Conv));
+        }
+        let (fh, fw) = (h >> stages.len(), w >> stages.len());
+        let flat = fh * fw * stages.last().unwrap().cout;
+        specs.push(("fc_w".into(), vec![flat, classes], LayerKind::Fc));
+        specs.push(("fc_b".into(), vec![classes], LayerKind::Fc));
+        let layout = Layout::from_specs(
+            &specs
+                .iter()
+                .map(|(n, s, kk)| (n.as_str(), s.as_slice(), *kk))
+                .collect::<Vec<_>>(),
+        );
+        NativeCnn {
+            h,
+            w,
+            stages: stages.to_vec(),
+            classes,
+            layout,
+            eval_batch,
+            k,
+        }
+    }
+
+    /// CIFAR-quick shape: 3 conv stages (3->32->32->64) + 10-way FC on 32x32x3.
+    pub fn cifar_quick(eval_batch: usize) -> NativeCnn {
+        NativeCnn::new(
+            32,
+            32,
+            &[
+                ConvStage { cin: 3, cout: 32 },
+                ConvStage { cin: 32, cout: 32 },
+                ConvStage { cin: 32, cout: 64 },
+            ],
+            10,
+            eval_batch,
+        )
+    }
+
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Pcg32::new(seed, 0xc44);
+        let mut out = vec![0.0f32; self.layout.total];
+        for l in self.layout.layers.iter() {
+            if l.shape.len() >= 2 {
+                let fan_in: usize = l.shape[..l.shape.len() - 1].iter().product();
+                let std = (2.0 / fan_in as f32).sqrt();
+                for v in out[l.offset..l.offset + l.len()].iter_mut() {
+                    *v = rng.normal() * std;
+                }
+            }
+        }
+        out
+    }
+
+    /// Forward pass caching everything the backward needs.
+    fn forward(&self, params: &[f32], x: &[f32], bsz: usize) -> Fwd {
+        let mut acts = vec![x.to_vec()]; // post-pool activations per stage input
+        let mut pre_pool = Vec::new(); // post-relu pre-pool
+        let mut argmaxes = Vec::new();
+        let (mut h, mut w) = (self.h, self.w);
+        let mut cols = Vec::new();
+        for (i, s) in self.stages.iter().enumerate() {
+            let wgt = self.layout.view(2 * i, params);
+            let bias = self.layout.view(2 * i + 1, params);
+            let mut y = Vec::new();
+            conv::conv2d_same(
+                acts.last().unwrap(),
+                wgt,
+                bias,
+                bsz,
+                h,
+                w,
+                s.cin,
+                self.k,
+                self.k,
+                s.cout,
+                &mut cols,
+                &mut y,
+            );
+            ops::relu(&mut y);
+            let mut pooled = Vec::new();
+            let mut am = Vec::new();
+            conv::maxpool2(&y, bsz, h, w, s.cout, &mut pooled, &mut am);
+            pre_pool.push(y);
+            argmaxes.push(am);
+            acts.push(pooled);
+            h /= 2;
+            w /= 2;
+        }
+        let nf = self.layout.layers[2 * self.stages.len()].shape[0];
+        let fw = self.layout.view(2 * self.stages.len(), params);
+        let fb = self.layout.view(2 * self.stages.len() + 1, params);
+        let mut logits = vec![0.0f32; bsz * self.classes];
+        ops::matmul(acts.last().unwrap(), fw, &mut logits, bsz, nf, self.classes, false);
+        for r in 0..bsz {
+            for c in 0..self.classes {
+                logits[r * self.classes + c] += fb[c];
+            }
+        }
+        Fwd {
+            acts,
+            pre_pool,
+            argmaxes,
+            logits,
+        }
+    }
+}
+
+struct Fwd {
+    acts: Vec<Vec<f32>>,
+    pre_pool: Vec<Vec<f32>>,
+    argmaxes: Vec<Vec<u32>>,
+    logits: Vec<f32>,
+}
+
+impl Executor for NativeCnn {
+    fn step(&mut self, params: &[f32], batch: &Batch) -> Result<StepOut> {
+        let bsz = batch.batch_size;
+        if batch.x_f32.len() != bsz * self.h * self.w * self.stages[0].cin {
+            bail!("x length mismatch");
+        }
+        let f = self.forward(params, &batch.x_f32, bsz);
+        let mut dlogits = vec![0.0f32; bsz * self.classes];
+        let loss = ops::softmax_xent(&f.logits, &batch.y, self.classes, &mut dlogits);
+
+        let mut grads = vec![0.0f32; self.layout.total];
+        let ns = self.stages.len();
+        let nf = self.layout.layers[2 * ns].shape[0];
+        // FC backward
+        {
+            let gw = self.layout.view_mut(2 * ns, &mut grads);
+            ops::matmul_at_b(f.acts.last().unwrap(), &dlogits, gw, nf, bsz, self.classes);
+        }
+        {
+            let gb = self.layout.view_mut(2 * ns + 1, &mut grads);
+            for r in 0..bsz {
+                for c in 0..self.classes {
+                    gb[c] += dlogits[r * self.classes + c];
+                }
+            }
+        }
+        let fw = self.layout.view(2 * ns, params);
+        let mut dpool = vec![0.0f32; bsz * nf];
+        ops::matmul_a_bt(&dlogits, fw, &mut dpool, bsz, self.classes, nf);
+
+        // conv stages backward
+        let (mut h, mut w) = (self.h >> ns, self.w >> ns);
+        let mut cols = Vec::new();
+        let mut dout = dpool;
+        for i in (0..ns).rev() {
+            let s = self.stages[i];
+            h *= 2;
+            w *= 2;
+            // unpool
+            let mut dy = vec![0.0f32; bsz * h * w * s.cout];
+            conv::maxpool2_bwd(&dout, &f.argmaxes[i], &mut dy);
+            // relu
+            ops::relu_grad(&f.pre_pool[i], &mut dy);
+            // conv
+            let wgt = self.layout.view(2 * i, params);
+            let mut dw = vec![0.0f32; self.layout.layers[2 * i].len()];
+            let mut db = vec![0.0f32; s.cout];
+            let mut dx = if i > 0 {
+                Some(vec![0.0f32; bsz * h * w * s.cin])
+            } else {
+                None
+            };
+            conv::conv2d_same_bwd(
+                &f.acts[i],
+                wgt,
+                &dy,
+                bsz,
+                h,
+                w,
+                s.cin,
+                self.k,
+                self.k,
+                s.cout,
+                &mut cols,
+                &mut dw,
+                &mut db,
+                dx.as_deref_mut(),
+            );
+            self.layout.view_mut(2 * i, &mut grads).copy_from_slice(&dw);
+            self.layout.view_mut(2 * i + 1, &mut grads).copy_from_slice(&db);
+            if let Some(dx) = dx {
+                dout = dx;
+            }
+        }
+        Ok(StepOut { loss, grads })
+    }
+
+    fn eval(&mut self, params: &[f32], batch: &Batch) -> Result<EvalOut> {
+        let bsz = batch.batch_size;
+        let f = self.forward(params, &batch.x_f32, bsz);
+        let mut scratch = vec![0.0f32; bsz * self.classes];
+        let loss = ops::softmax_xent(&f.logits, &batch.y, self.classes, &mut scratch);
+        Ok(EvalOut {
+            loss_sum_weighted: loss,
+            ncorrect: ops::count_correct(&f.logits, &batch.y, self.classes) as f32,
+        })
+    }
+
+    fn step_batch_sizes(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    fn eval_batch(&self) -> usize {
+        self.eval_batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn tiny() -> NativeCnn {
+        NativeCnn::new(
+            8,
+            8,
+            &[ConvStage { cin: 2, cout: 4 }, ConvStage { cin: 4, cout: 4 }],
+            3,
+            4,
+        )
+    }
+
+    #[test]
+    fn layout_shapes() {
+        let m = tiny();
+        assert_eq!(m.layout().num_layers(), 6);
+        // final spatial 2x2 x 4 channels = 16 features
+        assert_eq!(m.layout().layers[4].shape, vec![16, 3]);
+    }
+
+    #[test]
+    fn gradient_matches_numerical() {
+        let mut m = tiny();
+        let params = m.init_params(1);
+        let mut rng = Pcg32::seeded(2);
+        let x = rng.normal_vec(4 * 8 * 8 * 2, 1.0);
+        let y: Vec<i32> = vec![0, 1, 2, 1];
+        let batch = Batch::f32(x, y, 4);
+        let out = m.step(&params, &batch).unwrap();
+        let eps = 1e-2;
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..10 {
+            let i = rng.below(params.len() as u32) as usize;
+            let mut pp = params.clone();
+            pp[i] += eps;
+            let mut pm = params.clone();
+            pm[i] -= eps;
+            let lp = m.step(&pp, &batch).unwrap().loss;
+            let lm = m.step(&pm, &batch).unwrap().loss;
+            let num = (lp - lm) / (2.0 * eps);
+            let ana = out.grads[i];
+            assert!(
+                (num - ana).abs() < 3e-2_f32.max(0.15 * num.abs()),
+                "grad[{i}] num {num} ana {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn learns_channel_separable_task() {
+        // class = which input channel carries signal
+        let mut m = NativeCnn::new(
+            8,
+            8,
+            &[ConvStage { cin: 3, cout: 8 }],
+            3,
+            16,
+        );
+        let mut params = m.init_params(5);
+        let mut rng = Pcg32::seeded(6);
+        let gen = |rng: &mut Pcg32, n: usize| {
+            let mut x = vec![0.0f32; n * 8 * 8 * 3];
+            let mut y = vec![0i32; n];
+            for s in 0..n {
+                let cls = rng.below(3) as usize;
+                for p in 0..64 {
+                    x[(s * 64 + p) * 3 + cls] = 1.0 + 0.3 * rng.normal();
+                    for c in 0..3 {
+                        x[(s * 64 + p) * 3 + c] += 0.2 * rng.normal();
+                    }
+                }
+                y[s] = cls as i32;
+            }
+            Batch::f32(x, y, n)
+        };
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..60 {
+            let b = gen(&mut rng, 16);
+            let out = m.step(&params, &b).unwrap();
+            if step == 0 {
+                first = out.loss;
+            }
+            last = out.loss;
+            for (p, g) in params.iter_mut().zip(out.grads.iter()) {
+                *p -= 0.1 * g;
+            }
+        }
+        assert!(last < first * 0.5, "first {first} last {last}");
+    }
+}

@@ -1,0 +1,225 @@
+//! PJRT executor: loads AOT HLO text artifacts and runs them on the CPU
+//! PJRT client through the `xla` crate (xla_extension 0.5.1).
+//!
+//! Interchange is HLO *text* — see DESIGN.md §Interchange and
+//! /opt/xla-example/README.md for why serialized protos are rejected.
+//! Executables are compiled lazily per batch size and cached.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{Batch, EvalOut, Executor, StepOut};
+use crate::models::{Manifest, ModelMeta};
+use crate::util::json::Json;
+
+/// Shared PJRT client — one per thread (the client wraps an `Rc`, so it is
+/// deliberately not `Send`; the engine is single-threaded anyway).
+pub fn client() -> Result<xla::PjRtClient> {
+    use std::cell::RefCell;
+    thread_local! {
+        static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+    }
+    CLIENT.with(|c| {
+        let mut c = c.borrow_mut();
+        if c.is_none() {
+            *c = Some(xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?);
+        }
+        Ok(c.as_ref().unwrap().clone())
+    })
+}
+
+/// Compile an HLO text file on the shared client.
+pub fn compile_hlo(path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client()?
+        .compile(&comp)
+        .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+}
+
+pub struct PjrtExecutor {
+    meta: ModelMeta,
+    dir: String,
+    /// batch size -> step-HLO path (from the manifest's step_hlos map).
+    step_paths: HashMap<usize, String>,
+    step_cache: HashMap<usize, xla::PjRtLoadedExecutable>,
+    eval_exe: Option<xla::PjRtLoadedExecutable>,
+    /// Parameter tensor shapes as i64 dims, layout order.
+    param_dims: Vec<Vec<i64>>,
+}
+
+impl PjrtExecutor {
+    pub fn new(manifest: &Manifest, model: &str) -> Result<PjrtExecutor> {
+        let meta = manifest.model(model)?.clone();
+        // step_hlos lives in the manifest json; re-read for the batch map.
+        let txt = std::fs::read_to_string(Path::new(&manifest.dir).join("manifest.json"))?;
+        let v = Json::from_str_slice(&txt).map_err(|e| anyhow!("manifest: {e}"))?;
+        let hlos = v.get("models").get(model).get("step_hlos");
+        let mut step_paths = HashMap::new();
+        if let Some(obj) = hlos.as_obj() {
+            for (b, p) in obj {
+                let bs: usize = b.parse().context("step_hlos batch key")?;
+                step_paths.insert(bs, p.as_str().context("step_hlos path")?.to_string());
+            }
+        } else {
+            step_paths.insert(meta.batch, meta.step_hlo.clone());
+        }
+        let param_dims = meta
+            .layout
+            .layers
+            .iter()
+            .map(|l| l.shape.iter().map(|&d| d as i64).collect())
+            .collect();
+        Ok(PjrtExecutor {
+            meta,
+            dir: manifest.dir.clone(),
+            step_paths,
+            step_cache: HashMap::new(),
+            eval_exe: None,
+            param_dims,
+        })
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn step_exe(&mut self, batch: usize) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.step_cache.contains_key(&batch) {
+            let rel = self
+                .step_paths
+                .get(&batch)
+                .with_context(|| {
+                    format!(
+                        "model {} has no step HLO for batch {} (have {:?})",
+                        self.meta.name,
+                        batch,
+                        {
+                            let mut v: Vec<usize> = self.step_paths.keys().copied().collect();
+                            v.sort_unstable();
+                            v
+                        }
+                    )
+                })?
+                .clone();
+            let exe = compile_hlo(&Path::new(&self.dir).join(rel))?;
+            self.step_cache.insert(batch, exe);
+        }
+        Ok(&self.step_cache[&batch])
+    }
+
+    fn literals(&self, params: &[f32], batch: &Batch) -> Result<Vec<xla::Literal>> {
+        if params.len() != self.meta.layout.total {
+            bail!(
+                "params length {} != layout total {}",
+                params.len(),
+                self.meta.layout.total
+            );
+        }
+        let mut lits = Vec::with_capacity(self.param_dims.len() + 2);
+        for (i, dims) in self.param_dims.iter().enumerate() {
+            let l = &self.meta.layout.layers[i];
+            let flat = &params[l.offset..l.offset + l.len()];
+            let lit = xla::Literal::vec1(flat);
+            lits.push(if dims.is_empty() {
+                lit
+            } else {
+                lit.reshape(dims).map_err(|e| anyhow!("param reshape: {e:?}"))?
+            });
+        }
+        // x
+        let bs = batch.batch_size;
+        let mut x_dims: Vec<i64> = self.meta.x_shape.iter().map(|&d| d as i64).collect();
+        x_dims[0] = bs as i64;
+        let x_lit = if self.meta.x_is_int {
+            xla::Literal::vec1(&batch.x_i32)
+        } else {
+            xla::Literal::vec1(&batch.x_f32)
+        };
+        lits.push(x_lit.reshape(&x_dims).map_err(|e| anyhow!("x reshape: {e:?}"))?);
+        // y
+        let mut y_dims: Vec<i64> = self.meta.y_shape.iter().map(|&d| d as i64).collect();
+        y_dims[0] = bs as i64;
+        lits.push(
+            xla::Literal::vec1(&batch.y)
+                .reshape(&y_dims)
+                .map_err(|e| anyhow!("y reshape: {e:?}"))?,
+        );
+        Ok(lits)
+    }
+
+    fn run(
+        exe: &xla::PjRtLoadedExecutable,
+        lits: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = exe
+            .execute::<xla::Literal>(lits)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let root = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        root.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn step(&mut self, params: &[f32], batch: &Batch) -> Result<StepOut> {
+        let lits = self.literals(params, batch)?;
+        let exe = self.step_exe(batch.batch_size)?;
+        let parts = Self::run(exe, &lits)?;
+        if parts.len() != 1 + self.param_dims.len() {
+            bail!(
+                "step returned {} parts, expected loss + {} grads",
+                parts.len(),
+                self.param_dims.len()
+            );
+        }
+        let loss = parts[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))?[0];
+        let mut grads = vec![0.0f32; self.meta.layout.total];
+        for (i, part) in parts[1..].iter().enumerate() {
+            let l = &self.meta.layout.layers[i];
+            let v = part
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("grad {i}: {e:?}"))?;
+            if v.len() != l.len() {
+                bail!("grad {i} length {} != {}", v.len(), l.len());
+            }
+            grads[l.offset..l.offset + l.len()].copy_from_slice(&v);
+        }
+        Ok(StepOut { loss, grads })
+    }
+
+    fn eval(&mut self, params: &[f32], batch: &Batch) -> Result<EvalOut> {
+        if self.eval_exe.is_none() {
+            self.eval_exe = Some(compile_hlo(
+                &Path::new(&self.dir).join(&self.meta.eval_hlo),
+            )?);
+        }
+        let lits = self.literals(params, batch)?;
+        let parts = Self::run(self.eval_exe.as_ref().unwrap(), &lits)?;
+        if parts.len() != 2 {
+            bail!("eval returned {} parts, expected (loss, ncorrect)", parts.len());
+        }
+        let loss = parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let ncorrect = parts[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        Ok(EvalOut {
+            loss_sum_weighted: loss,
+            ncorrect,
+        })
+    }
+
+    fn step_batch_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.step_paths.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn eval_batch(&self) -> usize {
+        self.meta.batch
+    }
+}

@@ -1,0 +1,327 @@
+//! Convolution / pooling primitives for the native executor (NHWC, HWIO).
+//!
+//! im2col-based: correctness-first reference used by hermetic tests and for
+//! cross-checking the PJRT numerics; the production training path runs the
+//! XLA-compiled HLO instead.
+
+/// im2col for SAME-padded stride-1 convolution.
+/// x: [b, h, w, cin] -> cols: [b*h*w, kh*kw*cin]
+pub fn im2col_same(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    cols: &mut Vec<f32>,
+) {
+    let (ph, pw) = (kh / 2, kw / 2);
+    cols.clear();
+    cols.resize(b * h * w * kh * kw * cin, 0.0);
+    let row_len = kh * kw * cin;
+    for bi in 0..b {
+        for i in 0..h {
+            for j in 0..w {
+                let out_base = ((bi * h + i) * w + j) * row_len;
+                for ki in 0..kh {
+                    let si = i as isize + ki as isize - ph as isize;
+                    if si < 0 || si >= h as isize {
+                        continue;
+                    }
+                    for kj in 0..kw {
+                        let sj = j as isize + kj as isize - pw as isize;
+                        if sj < 0 || sj >= w as isize {
+                            continue;
+                        }
+                        let src = ((bi * h + si as usize) * w + sj as usize) * cin;
+                        let dst = out_base + (ki * kw + kj) * cin;
+                        cols[dst..dst + cin].copy_from_slice(&x[src..src + cin]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// col2im: scatter-add columns back into the input gradient.
+pub fn col2im_same(
+    cols: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    dx: &mut [f32],
+) {
+    let (ph, pw) = (kh / 2, kw / 2);
+    dx.iter_mut().for_each(|v| *v = 0.0);
+    let row_len = kh * kw * cin;
+    for bi in 0..b {
+        for i in 0..h {
+            for j in 0..w {
+                let col_base = ((bi * h + i) * w + j) * row_len;
+                for ki in 0..kh {
+                    let si = i as isize + ki as isize - ph as isize;
+                    if si < 0 || si >= h as isize {
+                        continue;
+                    }
+                    for kj in 0..kw {
+                        let sj = j as isize + kj as isize - pw as isize;
+                        if sj < 0 || sj >= w as isize {
+                            continue;
+                        }
+                        let dst = ((bi * h + si as usize) * w + sj as usize) * cin;
+                        let src = col_base + (ki * kw + kj) * cin;
+                        for c in 0..cin {
+                            dx[dst + c] += cols[src + c];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// SAME stride-1 conv forward. w: [kh, kw, cin, cout] (HWIO, row-major).
+/// Returns y [b,h,w,cout]; `cols` is scratch reused across calls.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same(
+    x: &[f32],
+    wgt: &[f32],
+    bias: &[f32],
+    b: usize,
+    h: usize,
+    w_: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    cols: &mut Vec<f32>,
+    y: &mut Vec<f32>,
+) {
+    im2col_same(x, b, h, w_, cin, kh, kw, cols);
+    let rows = b * h * w_;
+    let k = kh * kw * cin;
+    y.clear();
+    y.resize(rows * cout, 0.0);
+    super::ops::matmul(cols, wgt, y, rows, k, cout, false);
+    for r in 0..rows {
+        for c in 0..cout {
+            y[r * cout + c] += bias[c];
+        }
+    }
+}
+
+/// Backward of SAME stride-1 conv.
+/// dy: [b,h,w,cout]; fills dw [kh*kw*cin*cout], db [cout], dx [b,h,w,cin].
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same_bwd(
+    x: &[f32],
+    wgt: &[f32],
+    dy: &[f32],
+    b: usize,
+    h: usize,
+    w_: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    cout: usize,
+    cols: &mut Vec<f32>,
+    dw: &mut [f32],
+    db: &mut [f32],
+    dx: Option<&mut [f32]>,
+) {
+    let rows = b * h * w_;
+    let k = kh * kw * cin;
+    im2col_same(x, b, h, w_, cin, kh, kw, cols);
+    // dW = cols^T @ dy  (cols [rows,k], dy [rows,cout])
+    super::ops::matmul_at_b(cols, dy, dw, k, rows, cout);
+    db.iter_mut().for_each(|v| *v = 0.0);
+    for r in 0..rows {
+        for c in 0..cout {
+            db[c] += dy[r * cout + c];
+        }
+    }
+    if let Some(dx) = dx {
+        // dcols = dy @ W^T  (W [k,cout] row-major -> W^T is [cout,k])
+        let mut dcols = vec![0.0f32; rows * k];
+        super::ops::matmul_a_bt(dy, wgt, &mut dcols, rows, cout, k);
+        col2im_same(&dcols, b, h, w_, cin, kh, kw, dx);
+    }
+}
+
+/// 2x2 max pool (stride 2). Records argmax for the backward pass.
+/// x [b,h,w,c] -> y [b,h/2,w/2,c]; argmax stores the flat input index.
+pub fn maxpool2(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    y: &mut Vec<f32>,
+    argmax: &mut Vec<u32>,
+) {
+    let (oh, ow) = (h / 2, w / 2);
+    y.clear();
+    y.resize(b * oh * ow * c, 0.0);
+    argmax.clear();
+    argmax.resize(b * oh * ow * c, 0);
+    for bi in 0..b {
+        for i in 0..oh {
+            for j in 0..ow {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut bidx = 0u32;
+                    for di in 0..2 {
+                        for dj in 0..2 {
+                            let src = ((bi * h + 2 * i + di) * w + 2 * j + dj) * c + ch;
+                            if x[src] > best {
+                                best = x[src];
+                                bidx = src as u32;
+                            }
+                        }
+                    }
+                    let dst = ((bi * oh + i) * ow + j) * c + ch;
+                    y[dst] = best;
+                    argmax[dst] = bidx;
+                }
+            }
+        }
+    }
+}
+
+/// Backward of maxpool2: route dy to the recorded argmax positions.
+pub fn maxpool2_bwd(dy: &[f32], argmax: &[u32], dx: &mut [f32]) {
+    dx.iter_mut().for_each(|v| *v = 0.0);
+    for (d, &i) in dy.iter().zip(argmax.iter()) {
+        dx[i as usize] += d;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Naive direct convolution for cross-checking.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_naive(
+        x: &[f32],
+        wgt: &[f32],
+        bias: &[f32],
+        b: usize,
+        h: usize,
+        w_: usize,
+        cin: usize,
+        kh: usize,
+        kw: usize,
+        cout: usize,
+    ) -> Vec<f32> {
+        let (ph, pw) = (kh / 2, kw / 2);
+        let mut y = vec![0.0f32; b * h * w_ * cout];
+        for bi in 0..b {
+            for i in 0..h {
+                for j in 0..w_ {
+                    for co in 0..cout {
+                        let mut acc = bias[co];
+                        for ki in 0..kh {
+                            for kj in 0..kw {
+                                let si = i as isize + ki as isize - ph as isize;
+                                let sj = j as isize + kj as isize - pw as isize;
+                                if si < 0 || sj < 0 || si >= h as isize || sj >= w_ as isize {
+                                    continue;
+                                }
+                                for ci in 0..cin {
+                                    let xv = x[((bi * h + si as usize) * w_ + sj as usize) * cin + ci];
+                                    let wv = wgt[((ki * kw + kj) * cin + ci) * cout + co];
+                                    acc += xv * wv;
+                                }
+                            }
+                        }
+                        y[((bi * h + i) * w_ + j) * cout + co] = acc;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn conv_matches_naive() {
+        let (b, h, w_, cin, kh, kw, cout) = (2, 6, 5, 3, 3, 3, 4);
+        let mut rng = Pcg32::seeded(1);
+        let x = rng.normal_vec(b * h * w_ * cin, 1.0);
+        let wgt = rng.normal_vec(kh * kw * cin * cout, 0.5);
+        let bias = rng.normal_vec(cout, 0.1);
+        let mut cols = Vec::new();
+        let mut y = Vec::new();
+        conv2d_same(&x, &wgt, &bias, b, h, w_, cin, kh, kw, cout, &mut cols, &mut y);
+        let want = conv_naive(&x, &wgt, &bias, b, h, w_, cin, kh, kw, cout);
+        for (a, b) in y.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn conv_bwd_matches_finite_difference() {
+        let (b, h, w_, cin, kh, kw, cout) = (1, 4, 4, 2, 3, 3, 2);
+        let mut rng = Pcg32::seeded(2);
+        let x = rng.normal_vec(b * h * w_ * cin, 1.0);
+        let wgt = rng.normal_vec(kh * kw * cin * cout, 0.5);
+        let bias = vec![0.0; cout];
+        // loss = sum(y * m) for a fixed random mask m -> dy = m
+        let m = rng.normal_vec(b * h * w_ * cout, 1.0);
+        let loss = |x: &[f32], wgt: &[f32]| -> f32 {
+            let mut cols = Vec::new();
+            let mut y = Vec::new();
+            conv2d_same(x, wgt, &bias, b, h, w_, cin, kh, kw, cout, &mut cols, &mut y);
+            y.iter().zip(m.iter()).map(|(a, b)| a * b).sum()
+        };
+        let mut cols = Vec::new();
+        let mut dw = vec![0.0; wgt.len()];
+        let mut db = vec![0.0; cout];
+        let mut dx = vec![0.0; x.len()];
+        conv2d_same_bwd(
+            &x, &wgt, &m, b, h, w_, cin, kh, kw, cout, &mut cols, &mut dw, &mut db, Some(&mut dx),
+        );
+        let eps = 1e-3;
+        for idx in [0usize, 7, wgt.len() - 1] {
+            let mut wp = wgt.clone();
+            wp[idx] += eps;
+            let mut wm = wgt.clone();
+            wm[idx] -= eps;
+            let num = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * eps);
+            assert!((num - dw[idx]).abs() < 1e-2, "dw[{idx}] {num} vs {}", dw[idx]);
+        }
+        for idx in [0usize, 13, x.len() - 1] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let num = (loss(&xp, &wgt) - loss(&xm, &wgt)) / (2.0 * eps);
+            assert!((num - dx[idx]).abs() < 1e-2, "dx[{idx}] {num} vs {}", dx[idx]);
+        }
+    }
+
+    #[test]
+    fn maxpool_roundtrip() {
+        let (b, h, w_, c) = (1, 4, 4, 2);
+        let mut rng = Pcg32::seeded(3);
+        let x = rng.normal_vec(b * h * w_ * c, 1.0);
+        let mut y = Vec::new();
+        let mut am = Vec::new();
+        maxpool2(&x, b, h, w_, c, &mut y, &mut am);
+        assert_eq!(y.len(), 2 * 2 * 2);
+        // every output is the max of its window
+        for (dst, &src) in am.iter().enumerate() {
+            assert_eq!(y[dst], x[src as usize]);
+        }
+        // backward routes gradient to argmax only
+        let dy = vec![1.0f32; y.len()];
+        let mut dx = vec![0.0f32; x.len()];
+        maxpool2_bwd(&dy, &am, &mut dx);
+        assert_eq!(dx.iter().filter(|&&v| v != 0.0).count(), y.len());
+    }
+}

@@ -1,0 +1,178 @@
+//! Flat f32 tensor with shape metadata.
+//!
+//! The coordinator's view of model state: parameters, gradients and residues
+//! are flat `f32` buffers carved into per-layer views (see `models::Layout`).
+//! Deliberately minimal — the heavy model math happens either in AOT-compiled
+//! HLO (runtime::pjrt) or in `runtime::native`'s hand-written kernels; this
+//! type provides the shared vector algebra (optimizers, reductions, norms).
+
+pub mod conv;
+pub mod ops;
+
+/// Dense f32 tensor, row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on tensor of len {}", self.data.len());
+        self.data[0]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    // -- elementwise -------------------------------------------------------
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        ops::axpy(alpha, other.data(), self.data_mut());
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        self.data.iter_mut().for_each(|x| *x *= alpha);
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        self.axpy(1.0, other);
+    }
+
+    // -- reductions ----------------------------------------------------------
+
+    pub fn dot(&self, other: &Tensor) -> f32 {
+        ops::dot(self.data(), other.data())
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.dot(self).sqrt()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.data.iter().sum::<f32>() / self.data.len() as f32
+        }
+    }
+
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+        let t = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.data()[2], 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn axpy_scale() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![10.0, 10.0, 10.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[6.0, 7.0, 8.0]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::from_vec(&[4], vec![1.0, -2.0, 3.0, 0.0]);
+        assert_eq!(t.abs_max(), 3.0);
+        assert_eq!(t.mean(), 0.5);
+        assert_eq!(t.count_nonzero(), 3);
+        assert!((t.l2_norm() - 14.0f32.sqrt()).abs() < 1e-6);
+        assert!(t.is_finite());
+    }
+
+    #[test]
+    fn nonfinite_detected() {
+        let t = Tensor::from_vec(&[2], vec![1.0, f32::NAN]);
+        assert!(!t.is_finite());
+    }
+
+    #[test]
+    fn reshape() {
+        let t = Tensor::zeros(&[6]).reshape(&[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+    }
+}

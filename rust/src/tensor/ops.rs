@@ -1,0 +1,282 @@
+//! Flat-slice vector/matrix primitives shared by the optimizers, the
+//! compression hot path and the native executor.
+//!
+//! Written to autovectorize: fixed-stride loops over exact-chunk slices.
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * *xi;
+    }
+}
+
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len());
+    // 4 accumulators: breaks the fp dependency chain so LLVM vectorizes.
+    let mut acc = [0.0f32; 4];
+    let chunks = x.len() / 4;
+    for i in 0..chunks {
+        let b = i * 4;
+        acc[0] += x[b] * y[b];
+        acc[1] += x[b + 1] * y[b + 1];
+        acc[2] += x[b + 2] * y[b + 2];
+        acc[3] += x[b + 3] * y[b + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// C[m,n] = A[m,k] @ B[k,n]  (+= if `accumulate`)
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, accumulate: bool) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if !accumulate {
+        c.iter_mut().for_each(|x| *x = 0.0);
+    }
+    // ikj loop order: streams B and C rows, vectorizes the inner j loop.
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C[m,n] = A^T[k,m] @ B[k,n]   (A stored row-major as [k, m])
+pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.iter_mut().for_each(|x| *x = 0.0);
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C[m,n] = A[m,k] @ B^T[n,k]   (B stored row-major as [n, k])
+pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            *cv = dot(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// In-place ReLU; returns nothing. Pair with `relu_grad`.
+#[inline]
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// dx = dy * (y > 0), where y is the *post*-activation value.
+#[inline]
+pub fn relu_grad(y: &[f32], dy: &mut [f32]) {
+    assert_eq!(y.len(), dy.len());
+    for (d, &v) in dy.iter_mut().zip(y.iter()) {
+        if v <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Row-wise log-softmax + NLL loss; returns (mean loss, dlogits/mean).
+/// logits [rows, c], labels [rows]. dlogits is overwritten.
+pub fn softmax_xent(logits: &[f32], labels: &[i32], c: usize, dlogits: &mut [f32]) -> f32 {
+    let rows = labels.len();
+    assert_eq!(logits.len(), rows * c);
+    assert_eq!(dlogits.len(), rows * c);
+    let inv = 1.0 / rows as f32;
+    let mut loss = 0.0f64;
+    for r in 0..rows {
+        let row = &logits[r * c..(r + 1) * c];
+        let drow = &mut dlogits[r * c..(r + 1) * c];
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut sum = 0.0f32;
+        for (d, &x) in drow.iter_mut().zip(row.iter()) {
+            let e = (x - maxv).exp();
+            *d = e;
+            sum += e;
+        }
+        let label = labels[r] as usize;
+        debug_assert!(label < c);
+        let logz = sum.ln() + maxv;
+        loss += (logz - row[label]) as f64;
+        let isum = 1.0 / sum;
+        for d in drow.iter_mut() {
+            *d *= isum * inv;
+        }
+        drow[label] -= inv;
+    }
+    loss as f32 * inv
+}
+
+/// argmax per row; returns count of rows where argmax == label.
+pub fn count_correct(logits: &[f32], labels: &[i32], c: usize) -> usize {
+    let rows = labels.len();
+    let mut n = 0;
+    for r in 0..rows {
+        let row = &logits[r * c..(r + 1) * c];
+        let mut best = 0usize;
+        for j in 1..c {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best == labels[r] as usize {
+            n += 1;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] @ [[1,0],[0,1]] = same
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [1.0, 0.0, 0.0, 1.0];
+        let mut c = [0.0; 4];
+        matmul(&a, &b, &mut c, 2, 2, 2, false);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn matmul_transposes_agree() {
+        // random-ish small case, cross-check all three variants
+        let m = 3;
+        let k = 4;
+        let n = 2;
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32) * 0.3 - 1.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32) * 0.7 - 2.0).collect();
+        let mut c = vec![0.0; m * n];
+        matmul(&a, &b, &mut c, m, k, n, false);
+
+        // A^T stored as [k, m]
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for p in 0..k {
+                at[p * m + i] = a[i * k + p];
+            }
+        }
+        let mut c2 = vec![0.0; m * n];
+        matmul_at_b(&at, &b, &mut c2, m, k, n);
+        for (x, y) in c.iter().zip(c2.iter()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+
+        // B^T stored as [n, k]
+        let mut bt = vec![0.0; n * k];
+        for p in 0..k {
+            for j in 0..n {
+                bt[j * k + p] = b[p * n + j];
+            }
+        }
+        let mut c3 = vec![0.0; m * n];
+        matmul_a_bt(&a, &bt, &mut c3, m, k, n);
+        for (x, y) in c.iter().zip(c3.iter()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f32> = (0..103).map(|i| i as f32 * 0.01).collect();
+        let y: Vec<f32> = (0..103).map(|i| 1.0 - i as f32 * 0.02).collect();
+        let naive: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn relu_and_grad() {
+        let mut x = vec![-1.0, 0.5, 2.0];
+        relu(&mut x);
+        assert_eq!(x, vec![0.0, 0.5, 2.0]);
+        let mut dy = vec![1.0, 1.0, 1.0];
+        relu_grad(&x, &mut dy);
+        assert_eq!(dy, vec![0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn softmax_xent_uniform() {
+        // uniform logits -> loss = ln(c), grads sum to 0 per row
+        let c = 4;
+        let logits = vec![0.0; 2 * c];
+        let labels = vec![1, 3];
+        let mut d = vec![0.0; 2 * c];
+        let loss = softmax_xent(&logits, &labels, c, &mut d);
+        assert!((loss - (c as f32).ln()).abs() < 1e-5);
+        for r in 0..2 {
+            let s: f32 = d[r * c..(r + 1) * c].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_xent_gradient_numerical() {
+        let c = 3;
+        let logits = vec![0.2f32, -0.1, 0.5, 1.0, 0.0, -0.5];
+        let labels = vec![2, 0];
+        let mut d = vec![0.0; 6];
+        softmax_xent(&logits, &labels, c, &mut d);
+        let eps = 1e-3;
+        for i in 0..6 {
+            let mut lp = logits.clone();
+            lp[i] += eps;
+            let mut lm = logits.clone();
+            lm[i] -= eps;
+            let mut scratch = vec![0.0; 6];
+            let fp = softmax_xent(&lp, &labels, c, &mut scratch);
+            let fm = softmax_xent(&lm, &labels, c, &mut scratch);
+            let num = (fp - fm) / (2.0 * eps);
+            assert!((num - d[i]).abs() < 1e-3, "i={} num={} ana={}", i, num, d[i]);
+        }
+    }
+
+    #[test]
+    fn count_correct_basic() {
+        let logits = vec![1.0, 2.0, 0.0, 5.0, 1.0, 1.0];
+        let labels = vec![1, 0];
+        assert_eq!(count_correct(&logits, &labels, 3), 2);
+    }
+}

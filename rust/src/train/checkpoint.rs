@@ -1,0 +1,149 @@
+//! Checkpointing: save/restore flat parameters (+ run provenance) so long
+//! paper-scale runs can resume across sessions.
+//!
+//! Format (little-endian):
+//!   magic  "ADCK"  u32
+//!   version        u32
+//!   epoch          u32
+//!   model name     u32 len + bytes
+//!   params         u64 count + count x f32
+//!   checksum       u64 (FNV-1a over the param bytes)
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: u32 = 0x4144_434b; // "ADCK"
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub model: String,
+    pub epoch: u32,
+    pub params: Vec<f32>,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(&MAGIC.to_le_bytes())?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&self.epoch.to_le_bytes())?;
+        f.write_all(&(self.model.len() as u32).to_le_bytes())?;
+        f.write_all(self.model.as_bytes())?;
+        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+        let mut body = Vec::with_capacity(self.params.len() * 4);
+        for &v in &self.params {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&body)?;
+        f.write_all(&fnv1a(&body).to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut u32buf = [0u8; 4];
+        let mut u64buf = [0u8; 8];
+        f.read_exact(&mut u32buf)?;
+        if u32::from_le_bytes(u32buf) != MAGIC {
+            bail!("{}: not an adacomp checkpoint", path.display());
+        }
+        f.read_exact(&mut u32buf)?;
+        let version = u32::from_le_bytes(u32buf);
+        if version != VERSION {
+            bail!("{}: unsupported checkpoint version {version}", path.display());
+        }
+        f.read_exact(&mut u32buf)?;
+        let epoch = u32::from_le_bytes(u32buf);
+        f.read_exact(&mut u32buf)?;
+        let name_len = u32::from_le_bytes(u32buf) as usize;
+        if name_len > 4096 {
+            bail!("{}: implausible model-name length {name_len}", path.display());
+        }
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        f.read_exact(&mut u64buf)?;
+        let count = u64::from_le_bytes(u64buf) as usize;
+        let mut body = vec![0u8; count * 4];
+        f.read_exact(&mut body)?;
+        f.read_exact(&mut u64buf)?;
+        let want = u64::from_le_bytes(u64buf);
+        let got = fnv1a(&body);
+        if want != got {
+            bail!("{}: checksum mismatch (corrupt checkpoint)", path.display());
+        }
+        let params = body
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Checkpoint {
+            model: String::from_utf8(name)?,
+            epoch,
+            params,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("adacomp-ckpt-test-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = tmp("roundtrip");
+        let ck = Checkpoint {
+            model: "cifar_cnn".into(),
+            epoch: 17,
+            params: (0..1000).map(|i| i as f32 * 0.5 - 3.0).collect(),
+        };
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let p = tmp("corrupt");
+        let ck = Checkpoint {
+            model: "m".into(),
+            epoch: 0,
+            params: vec![1.0; 64],
+        };
+        ck.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&p, bytes).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let p = tmp("garbage");
+        std::fs::write(&p, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

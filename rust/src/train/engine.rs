@@ -1,0 +1,294 @@
+//! The synchronous data-parallel training engine — paper Algorithm 1.
+//!
+//! Per step, for every learner: sample the learner's shard minibatch, run
+//! forward+backward (the AOT-compiled HLO via PJRT, or the native reference
+//! executor), `pack()` each layer through the learner's compressor, then
+//! `exchange()` all packets over the configured topology (parameter server
+//! or ring), `unpack()` into the dense mean gradient and apply the central
+//! optimizer. All learners hold identical weights at every step — the
+//! paper's synchronous-SGD setting.
+//!
+//! Learners are simulated in-process (DESIGN.md §Substitutions): the
+//! semantics (who computes what on which data, what crosses the wire) are
+//! exactly the distributed ones; the fabric charges every packet its real
+//! encoded byte size.
+
+use anyhow::Result;
+
+use super::{eval::test_error, learner::Learner};
+use crate::comm::{topology, Fabric, LinkModel};
+use crate::compress;
+use crate::data::Dataset;
+use crate::metrics::{percentile, CompStat, EpochRecord, RunRecord};
+use crate::models::{LayerKind, Layout};
+use crate::optim::{self, LrSchedule};
+use crate::runtime::Executor;
+use crate::util::timer::Stopwatch;
+
+/// Everything that defines one training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub run_name: String,
+    pub model_name: String,
+    pub n_learners: usize,
+    pub batch_per_learner: usize,
+    pub epochs: usize,
+    /// Optimizer steps per epoch; 0 = train_len / (batch * learners).
+    pub steps_per_epoch: usize,
+    pub lr: LrSchedule,
+    pub optimizer: String,
+    pub momentum: f32,
+    pub compression: compress::Config,
+    pub topology: String,
+    pub link: LinkModel,
+    pub seed: u64,
+    /// Abort (mark diverged) when train loss exceeds this or goes non-finite.
+    pub divergence_loss: f64,
+    /// Callback cadence for residue stats (every epoch end).
+    pub track_residue: bool,
+    /// Global-norm clip applied to the mean gradient before the central
+    /// update (0 = off). Applied *after* exchange so it never interacts with
+    /// the compression path.
+    pub clip_norm: f32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            run_name: "run".into(),
+            model_name: "model".into(),
+            n_learners: 1,
+            batch_per_learner: 32,
+            epochs: 5,
+            steps_per_epoch: 0,
+            lr: LrSchedule::Constant(0.05),
+            optimizer: "sgd".into(),
+            momentum: 0.9,
+            compression: compress::Config::default(),
+            topology: "ring".into(),
+            link: LinkModel::default(),
+            seed: 42,
+            divergence_loss: 1e4,
+            track_residue: true,
+            clip_norm: 0.0,
+        }
+    }
+}
+
+/// Observer hook for figure harnesses that need per-epoch internals:
+/// `hook(epoch, learner0_compressor, learner0_last_dw)` — enough for the
+/// Fig 5 percentile curves and Fig 6 residual histograms.
+pub type EpochHook<'a> = dyn FnMut(usize, &dyn compress::Compressor, &[f32]) + 'a;
+
+pub struct Engine<'a> {
+    pub executor: &'a mut dyn Executor,
+    pub dataset: &'a dyn Dataset,
+    pub layout: &'a Layout,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(
+        executor: &'a mut dyn Executor,
+        dataset: &'a dyn Dataset,
+        layout: &'a Layout,
+    ) -> Engine<'a> {
+        Engine {
+            executor,
+            dataset,
+            layout,
+        }
+    }
+
+    pub fn run(&mut self, cfg: &TrainConfig, init_params: &[f32]) -> Result<RunRecord> {
+        self.run_with_hook(cfg, init_params, None)
+    }
+
+    pub fn run_with_hook(
+        &mut self,
+        cfg: &TrainConfig,
+        init_params: &[f32],
+        hook: Option<&mut EpochHook<'_>>,
+    ) -> Result<RunRecord> {
+        Ok(self.run_full(cfg, init_params, hook)?.0)
+    }
+
+    /// Full training loop; `hook(epoch, learner0_compressor, last_dw)` runs
+    /// at each epoch end before evaluation. Returns the record and the
+    /// final trained parameters (for checkpointing).
+    pub fn run_full(
+        &mut self,
+        cfg: &TrainConfig,
+        init_params: &[f32],
+        mut hook: Option<&mut EpochHook<'_>>,
+    ) -> Result<(RunRecord, Vec<f32>)> {
+        assert!(cfg.n_learners >= 1);
+        let layout = self.layout;
+        let mut params = init_params.to_vec();
+        let mut optimizer = optim::build(&cfg.optimizer, params.len(), cfg.momentum)
+            .unwrap_or_else(|| panic!("unknown optimizer '{}'", cfg.optimizer));
+        let mut topo = topology::build(&cfg.topology)
+            .unwrap_or_else(|| panic!("unknown topology '{}'", cfg.topology));
+        let mut fabric = Fabric::new(cfg.link);
+
+        let mut learners: Vec<Learner> = (0..cfg.n_learners)
+            .map(|id| {
+                Learner::new(
+                    id,
+                    cfg.n_learners,
+                    self.dataset,
+                    layout,
+                    &cfg.compression,
+                    cfg.batch_per_learner,
+                    cfg.seed,
+                )
+            })
+            .collect();
+
+        let steps_per_epoch = if cfg.steps_per_epoch > 0 {
+            cfg.steps_per_epoch
+        } else {
+            (self.dataset.train_len() / (cfg.batch_per_learner * cfg.n_learners)).max(1)
+        };
+        let layer_lens: Vec<usize> = layout.layers.iter().map(|l| l.len()).collect();
+        let inv_learners = 1.0f32 / cfg.n_learners as f32;
+
+        let mut record = RunRecord {
+            name: cfg.run_name.clone(),
+            model: cfg.model_name.clone(),
+            scheme: cfg.compression.kind.name().to_string(),
+            learners: cfg.n_learners,
+            batch_per_learner: cfg.batch_per_learner,
+            optimizer: cfg.optimizer.clone(),
+            epochs: Vec::new(),
+            diverged: false,
+            fabric: Default::default(),
+        };
+
+        let mut grad_mean = vec![0.0f32; layout.total];
+        let mut last_dw: Vec<f32> = Vec::new();
+
+        'epochs: for epoch in 0..cfg.epochs {
+            let sw = Stopwatch::start();
+            let lr = cfg.lr.at(epoch);
+            let mut loss_sum = 0.0f64;
+            let mut nloss = 0usize;
+            let mut comp_conv = CompStat::default();
+            let mut comp_fc = CompStat::default();
+            let mut comp_all = CompStat::default();
+
+            for _step in 0..steps_per_epoch {
+                // 1. every learner: local fwd/bwd + pack
+                let mut per_learner: Vec<Vec<compress::Packet>> =
+                    Vec::with_capacity(cfg.n_learners);
+                for l in learners.iter_mut() {
+                    let out = {
+                        let batch = l.next_batch(self.dataset);
+                        self.executor.step(&params, batch)?
+                    };
+                    loss_sum += out.loss as f64;
+                    nloss += 1;
+                    if !out.loss.is_finite() || out.loss as f64 > cfg.divergence_loss {
+                        record.diverged = true;
+                    }
+                    if l.id == 0 {
+                        last_dw = out.grads.clone();
+                    }
+                    let packets = l.pack(layout, &out.grads);
+                    for (li, p) in packets.iter().enumerate() {
+                        match layout.layers[li].kind {
+                            LayerKind::Conv => comp_conv.add(p),
+                            _ => comp_fc.add(p),
+                        }
+                        comp_all.add(p);
+                    }
+                    per_learner.push(packets);
+                }
+
+                if record.diverged {
+                    // record the partial epoch and stop
+                    let (err, tloss) =
+                        test_error(self.executor, self.dataset, &params).unwrap_or((100.0, f64::NAN));
+                    record.epochs.push(self.epoch_record(
+                        epoch, loss_sum, nloss, err, tloss, lr, comp_conv, comp_fc, comp_all,
+                        &learners, &last_dw, cfg, sw.secs(),
+                    ));
+                    break 'epochs;
+                }
+
+                // 2. exchange + unpack (dense sum), 3. central update
+                let reduced = topo.exchange(&per_learner, &layer_lens, &mut fabric);
+                for (li, sum) in reduced.sums.iter().enumerate() {
+                    let dst = layout.view_mut(li, &mut grad_mean);
+                    for (d, &s) in dst.iter_mut().zip(sum.iter()) {
+                        *d = s * inv_learners;
+                    }
+                }
+                if cfg.clip_norm > 0.0 {
+                    let norm = crate::tensor::ops::dot(&grad_mean, &grad_mean).sqrt();
+                    if norm > cfg.clip_norm {
+                        let s = cfg.clip_norm / norm;
+                        grad_mean.iter_mut().for_each(|g| *g *= s);
+                    }
+                }
+                optimizer.step(&mut params, &grad_mean, lr);
+            }
+
+            if let Some(h) = hook.as_deref_mut() {
+                h(epoch, learners[0].compressor.as_ref(), &last_dw);
+            }
+
+            let (err, tloss) = test_error(self.executor, self.dataset, &params)?;
+            record.epochs.push(self.epoch_record(
+                epoch, loss_sum, nloss, err, tloss, lr, comp_conv, comp_fc, comp_all,
+                &learners, &last_dw, cfg, sw.secs(),
+            ));
+        }
+
+        record.fabric = fabric.stats.clone();
+        Ok((record, params))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn epoch_record(
+        &self,
+        epoch: usize,
+        loss_sum: f64,
+        nloss: usize,
+        err: f64,
+        tloss: f64,
+        lr: f32,
+        comp_conv: CompStat,
+        comp_fc: CompStat,
+        comp_all: CompStat,
+        learners: &[Learner],
+        last_dw: &[f32],
+        cfg: &TrainConfig,
+        wall: f64,
+    ) -> EpochRecord {
+        let (mut rg_p95, mut dw_p95) = (0.0f32, 0.0f32);
+        if cfg.track_residue && !learners.is_empty() {
+            let c = &learners[0].compressor;
+            for li in 0..self.layout.num_layers() {
+                rg_p95 = rg_p95.max(percentile(c.residue(li), 95.0));
+            }
+            if !last_dw.is_empty() {
+                for li in 0..self.layout.num_layers() {
+                    dw_p95 = dw_p95.max(percentile(self.layout.view(li, last_dw), 95.0));
+                }
+            }
+        }
+        EpochRecord {
+            epoch,
+            train_loss: loss_sum / nloss.max(1) as f64,
+            test_error_pct: err,
+            test_loss: tloss,
+            lr,
+            comp_conv,
+            comp_fc,
+            comp_all,
+            rg_p95,
+            dw_p95,
+            wall_secs: wall,
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Held-out evaluation: test error % (top-1, as the paper's tables) and
+//! mean test loss.
+
+use anyhow::Result;
+
+use crate::data::{Dataset, Split, XBuf};
+use crate::runtime::{Batch, Executor};
+
+/// Evaluate `params` over (up to) the whole test split in executor-sized
+/// batches; trailing remainder is dropped (test set sizes are chosen
+/// divisible in the harnesses).
+pub fn test_error(
+    executor: &mut dyn Executor,
+    dataset: &dyn Dataset,
+    params: &[f32],
+) -> Result<(f64, f64)> {
+    let bs = executor.eval_batch();
+    let nbatches = (dataset.test_len() / bs).max(1).min(64);
+    let mut total = 0usize;
+    let mut correct = 0.0f64;
+    let mut loss_sum = 0.0f64;
+    let mut batch = if dataset.int_input() {
+        Batch::i32(
+            vec![0; bs * dataset.x_elems()],
+            vec![0; bs * dataset.y_elems()],
+            bs,
+        )
+    } else {
+        Batch::f32(
+            vec![0.0; bs * dataset.x_elems()],
+            vec![0; bs * dataset.y_elems()],
+            bs,
+        )
+    };
+    for bi in 0..nbatches {
+        let indices: Vec<usize> = (bi * bs..(bi + 1) * bs)
+            .map(|i| i % dataset.test_len())
+            .collect();
+        if batch.x_i32.is_empty() {
+            dataset.fill(Split::Test, &indices, XBuf::F32(&mut batch.x_f32), &mut batch.y);
+        } else {
+            dataset.fill(Split::Test, &indices, XBuf::I32(&mut batch.x_i32), &mut batch.y);
+        }
+        let out = executor.eval(params, &batch)?;
+        total += bs * dataset.y_elems();
+        correct += out.ncorrect as f64;
+        loss_sum += out.loss_sum_weighted as f64;
+    }
+    let err_pct = 100.0 * (1.0 - correct / total as f64);
+    Ok((err_pct, loss_sum / nbatches as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::GaussianMixture;
+    use crate::runtime::native::NativeMlp;
+
+    #[test]
+    fn random_net_near_chance() {
+        let ds = GaussianMixture::new(1, 8, 4, 100, 64, 0.3);
+        let mut m = NativeMlp::new(&[8, 4], 16);
+        let params = vec![0.0f32; m.layout().total]; // uniform logits
+        let (err, loss) = test_error(&mut m, &ds, &params).unwrap();
+        // all-zero net: argmax is class 0, accuracy = 25% on balanced labels
+        assert!(err > 60.0 && err <= 80.0, "err {err}");
+        assert!((loss - (4.0f64).ln()).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,118 @@
+//! Per-learner state: data shard, compressor (with its residual gradients),
+//! and the learner's batch-sampling RNG.
+
+use crate::compress::{self, Compressor, Packet};
+use crate::data::{draw_batch, Dataset, Shard, Split};
+use crate::models::Layout;
+use crate::runtime::Batch;
+use crate::util::rng::Pcg32;
+
+pub struct Learner {
+    pub id: usize,
+    pub shard: Shard,
+    pub compressor: Box<dyn Compressor>,
+    rng: Pcg32,
+    batch: Batch,
+}
+
+impl Learner {
+    pub fn new(
+        id: usize,
+        n_learners: usize,
+        dataset: &dyn Dataset,
+        layout: &Layout,
+        comp_cfg: &compress::Config,
+        batch_size: usize,
+        seed: u64,
+    ) -> Learner {
+        let shard = Shard {
+            learner: id,
+            n_learners,
+            train_len: dataset.train_len(),
+        };
+        let mut cfg = comp_cfg.clone();
+        cfg.seed = seed ^ (id as u64) << 17; // decorrelate stochastic schemes
+        let batch = if dataset.int_input() {
+            Batch::i32(
+                vec![0; batch_size * dataset.x_elems()],
+                vec![0; batch_size * dataset.y_elems()],
+                batch_size,
+            )
+        } else {
+            Batch::f32(
+                vec![0.0; batch_size * dataset.x_elems()],
+                vec![0; batch_size * dataset.y_elems()],
+                batch_size,
+            )
+        };
+        Learner {
+            id,
+            shard,
+            compressor: compress::build(&cfg, layout),
+            rng: Pcg32::new(seed, 0xbea7 + id as u64),
+            batch,
+        }
+    }
+
+    /// Sample this learner's next minibatch into its reusable batch buffer.
+    pub fn next_batch(&mut self, dataset: &dyn Dataset) -> &Batch {
+        let idx = draw_batch(&mut self.rng, &self.shard, self.batch.batch_size);
+        let y = &mut self.batch.y;
+        if self.batch.x_i32.is_empty() {
+            dataset.fill(
+                Split::Train,
+                &idx,
+                crate::data::XBuf::F32(&mut self.batch.x_f32),
+                y,
+            );
+        } else {
+            dataset.fill(
+                Split::Train,
+                &idx,
+                crate::data::XBuf::I32(&mut self.batch.x_i32),
+                y,
+            );
+        }
+        &self.batch
+    }
+
+    /// Compress a flat gradient into per-layer packets (Algorithm 1 pack()).
+    pub fn pack(&mut self, layout: &Layout, grads: &[f32]) -> Vec<Packet> {
+        (0..layout.num_layers())
+            .map(|li| self.compressor.pack_layer(li, layout.view(li, grads)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Config, Kind};
+    use crate::data::synth::GaussianMixture;
+    use crate::models::{LayerKind, Layout};
+
+    #[test]
+    fn learner_batches_stay_in_shard() {
+        let ds = GaussianMixture::new(1, 8, 4, 100, 20, 0.3);
+        let layout = Layout::from_specs(&[("w", &[8, 4], LayerKind::Fc)]);
+        let mut l = Learner::new(1, 4, &ds, &layout, &Config::with_kind(Kind::AdaComp), 4, 42);
+        let b = l.next_batch(&ds);
+        assert_eq!(b.x_f32.len(), 4 * 8);
+        assert_eq!(b.y.len(), 4);
+    }
+
+    #[test]
+    fn pack_covers_all_layers() {
+        let ds = GaussianMixture::new(1, 8, 4, 100, 20, 0.3);
+        let layout = Layout::from_specs(&[
+            ("w1", &[8, 4], LayerKind::Fc),
+            ("b1", &[4], LayerKind::Fc),
+        ]);
+        let mut l = Learner::new(0, 1, &ds, &layout, &Config::with_kind(Kind::None), 4, 1);
+        let grads = vec![0.5f32; layout.total];
+        let packets = l.pack(&layout, &grads);
+        assert_eq!(packets.len(), 2);
+        assert_eq!(packets[0].n, 32);
+        assert_eq!(packets[1].n, 4);
+    }
+}

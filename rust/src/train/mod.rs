@@ -1,0 +1,8 @@
+//! The distributed training coordinator (paper Algorithm 1).
+
+pub mod checkpoint;
+pub mod engine;
+pub mod eval;
+pub mod learner;
+
+pub use engine::{Engine, TrainConfig};

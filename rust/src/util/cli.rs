@@ -1,0 +1,132 @@
+//! Tiny CLI argument parser (clap is not in the vendored crate set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Every example binary and the main CLI routes through this so
+//! flag behaviour is uniform.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — `known_flags` are names that
+    /// take no value.
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(rest.to_string());
+                    } else {
+                        out.opts.insert(rest.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.pos.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse process args (skipping argv[0]).
+    pub fn parse(known_flags: &[&str]) -> Args {
+        Self::parse_from(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+    pub fn f32_or(&self, name: &str, default: f32) -> f32 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+    /// Comma-separated list of usizes, e.g. `--learners 1,4,8`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| p.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad entry '{p}'")))
+                .collect(),
+        }
+    }
+    pub fn positional(&self) -> &[String] {
+        &self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let a = args(&["--lr", "0.1", "--epochs=5", "train"], &[]);
+        assert_eq!(a.f32_or("lr", 0.0), 0.1);
+        assert_eq!(a.usize_or("epochs", 0), 5);
+        assert_eq!(a.positional(), &["train".to_string()]);
+    }
+
+    #[test]
+    fn flags() {
+        let a = args(&["--verbose", "--lr", "1"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.f32_or("lr", 0.0), 1.0);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = args(&["--debug"], &[]);
+        assert!(a.flag("debug"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args(&["--fast", "--lr", "2"], &[]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.f32_or("lr", 0.0), 2.0);
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = args(&["--learners", "1,4,8"], &[]);
+        assert_eq!(a.usize_list_or("learners", &[2]), vec![1, 4, 8]);
+        assert_eq!(a.usize_list_or("missing", &[2]), vec![2]);
+        assert_eq!(a.str_or("name", "x"), "x");
+    }
+}

@@ -1,0 +1,9 @@
+//! Infrastructure substrates: JSON, PRNG, CLI parsing, timing.
+//!
+//! These exist because the build environment is offline and the vendored
+//! crate set lacks serde_json / clap / rand / criterion; see DESIGN.md §3.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,123 @@
+//! Timing + summary-statistics helpers for the hand-rolled bench harness
+//! (criterion is not in the vendored crate set).
+
+use std::time::Instant;
+
+/// Measure a closure `iters` times after `warmup` runs; returns per-iteration
+/// timings in nanoseconds.
+pub fn time_n<F: FnMut()>(mut f: F, warmup: usize, iters: usize) -> Vec<u64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        out.push(t.elapsed().as_nanos() as u64);
+    }
+    out
+}
+
+/// Summary stats over nanosecond samples.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub stddev_ns: f64,
+    pub n: usize,
+}
+
+impl Stats {
+    pub fn from(samples: &[u64]) -> Stats {
+        assert!(!samples.is_empty());
+        let mut s: Vec<u64> = samples.to_vec();
+        s.sort_unstable();
+        let n = s.len();
+        let mean = s.iter().sum::<u64>() as f64 / n as f64;
+        let var = s
+            .iter()
+            .map(|&x| (x as f64 - mean) * (x as f64 - mean))
+            .sum::<f64>()
+            / n as f64;
+        Stats {
+            mean_ns: mean,
+            median_ns: s[n / 2] as f64,
+            p95_ns: s[(n * 95 / 100).min(n - 1)] as f64,
+            min_ns: s[0] as f64,
+            stddev_ns: var.sqrt(),
+            n,
+        }
+    }
+
+    /// Throughput in items/s given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{:.0}ns", ns)
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Simple wall-clock stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from(&[10, 20, 30, 40, 50]);
+        assert_eq!(s.mean_ns, 30.0);
+        assert_eq!(s.median_ns, 30.0);
+        assert_eq!(s.min_ns, 10.0);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn throughput() {
+        let s = Stats::from(&[1_000_000_000]); // 1s per iter
+        assert!((s.throughput(100.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(2500.0), "2.50us");
+        assert_eq!(fmt_ns(3.5e6), "3.50ms");
+        assert_eq!(fmt_ns(2.5e9), "2.50s");
+    }
+
+    #[test]
+    fn time_n_counts() {
+        let samples = time_n(
+            || {
+                std::hint::black_box(1 + 1);
+            },
+            2,
+            10,
+        );
+        assert_eq!(samples.len(), 10);
+    }
+}

