@@ -3,9 +3,14 @@
 //! bytes/time comparison in EXPERIMENTS.md §Perf and backs the Fig 7b
 //! communication story.
 //!
+//! Times the engine-shaped steady-state path (`exchange_into` with a
+//! persistent `Reduced` — zero allocation per round, see
+//! rust/tests/alloc_free.rs) and, for contrast, the allocating `exchange`
+//! wrapper.
+//!
 //!   cargo bench --bench bench_exchange
 
-use adacomp::comm::{topology, Fabric, LinkModel};
+use adacomp::comm::{topology, Fabric, LinkModel, Reduced};
 use adacomp::compress::{self, Config, Kind};
 use adacomp::models::{LayerKind, Layout};
 use adacomp::util::rng::Pcg32;
@@ -48,29 +53,41 @@ fn main() {
 
     println!("# exchange: reduce wall time + simulated fabric cost (cifar_cnn-shaped, adacomp lt=50)");
     println!(
-        "{:<6} {:>9} {:>12} {:>12} {:>14} {:>14} {:>12}",
-        "topo", "learners", "mean", "p95", "bytes/round", "sim-time", "dense-equiv"
+        "{:<6} {:>9} {:>12} {:>12} {:>12} {:>14} {:>14} {:>12}",
+        "topo", "learners", "into-mean", "into-p95", "alloc-mean", "bytes/round", "sim-time", "dense-equiv"
     );
     for n_learners in [2usize, 8, 32] {
         let packets = make_packets(&layout, n_learners, Kind::AdaComp, 50);
         for topo_name in ["ring", "ps"] {
             let mut topo = topology::build(topo_name).unwrap();
             let mut fabric = Fabric::new(LinkModel::default());
+            // steady state: persistent Reduced, zero-alloc rounds
+            let mut reduced = Reduced::new(&lens);
             let samples = time_n(
+                || {
+                    topo.exchange_into(&packets, &lens, &mut fabric, &mut reduced);
+                },
+                2,
+                50,
+            );
+            let s = Stats::from(&samples);
+            // contrast: the allocating wrapper (fresh Reduced per round)
+            let alloc_samples = time_n(
                 || {
                     std::hint::black_box(topo.exchange(&packets, &lens, &mut fabric));
                 },
                 2,
                 50,
             );
-            let s = Stats::from(&samples);
+            let sa = Stats::from(&alloc_samples);
             let rounds = fabric.stats.rounds as f64;
             println!(
-                "{:<6} {:>9} {:>12} {:>12} {:>14.0} {:>12.3}ms {:>12}",
+                "{:<6} {:>9} {:>12} {:>12} {:>12} {:>14.0} {:>12.3}ms {:>12}",
                 topo_name,
                 n_learners,
                 fmt_ns(s.mean_ns),
                 fmt_ns(s.p95_ns),
+                fmt_ns(sa.mean_ns),
                 fabric.stats.bytes_up as f64 / rounds,
                 fabric.stats.sim_time_s / rounds * 1e3,
                 fabric.stats.dense_bytes_equiv / fabric.stats.rounds,

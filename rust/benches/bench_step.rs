@@ -1,32 +1,206 @@
-//! End-to-end step benchmark: the full Algorithm-1 loop (PJRT fwd/bwd +
-//! pack + exchange + update) per model, with a pack/exchange/update time
-//! breakdown — shows where the paper's "compression must be much cheaper
-//! than backprop" constraint lands on this testbed.
+//! End-to-end engine benchmark.
 //!
-//! Requires artifacts (skips models that are missing).
+//! Always runs the hermetic **multi-learner engine sweep** on the synthetic
+//! FC workload (NativeMlp, no artifacts): learner counts 1/4/16, sequential
+//! (threads=1) vs parallel (threads=0 = auto), plus isolated pack/exchange
+//! timings — and emits machine-readable `BENCH_engine.json` (steps/sec,
+//! pack-ns, exchange-ns) so future PRs have a perf trajectory to regress
+//! against. The parallel and sequential runs are asserted bit-identical
+//! (the engine's determinism contract).
+//!
+//! With `--features pjrt` it additionally reports the per-model Algorithm-1
+//! breakdown over the AOT artifacts (skips models that are missing).
 //!
 //!   cargo bench --bench bench_step
 
 use adacomp::comm::{topology, Fabric, LinkModel};
-use adacomp::compress::{self, Config, Kind};
-use adacomp::harness::{dataset_for, defaults_for};
-use adacomp::models::Manifest;
-use adacomp::runtime::pjrt::PjrtExecutor;
-use adacomp::runtime::{Batch, Executor};
-use adacomp::util::timer::{fmt_ns, Stats, Stopwatch};
+use adacomp::compress::{self, Config, Kind, Packet};
+use adacomp::data::synth::GaussianMixture;
+use adacomp::optim::LrSchedule;
+use adacomp::runtime::native::NativeMlp;
+use adacomp::train::{Engine, TrainConfig};
+use adacomp::util::json::{self, Json};
+use adacomp::util::rng::Pcg32;
+use adacomp::util::timer::{fmt_ns, time_n, Stats, Stopwatch};
 
-fn main() -> anyhow::Result<()> {
+const DIMS: &[usize] = &[128, 256, 10];
+const BATCH: usize = 32;
+const STEPS: usize = 40;
+
+fn engine_cfg(learners: usize, threads: usize) -> TrainConfig {
+    TrainConfig {
+        run_name: format!("bench-{learners}L-{threads}T"),
+        model_name: "native_mlp".into(),
+        n_learners: learners,
+        batch_per_learner: BATCH,
+        epochs: 1,
+        steps_per_epoch: STEPS,
+        lr: LrSchedule::Constant(0.05),
+        compression: Config {
+            lt_override: 50,
+            ..Config::with_kind(Kind::AdaComp)
+        },
+        seed: 17,
+        threads,
+        ..TrainConfig::default()
+    }
+}
+
+/// One engine run; returns (wall seconds, final train loss bits).
+fn run_engine(learners: usize, threads: usize) -> anyhow::Result<(f64, u64)> {
+    let ds = GaussianMixture::new(7, DIMS[0], *DIMS.last().unwrap(), 4096, 64, 0.5);
+    let exe = NativeMlp::new(DIMS, 64);
+    let params = exe.init_params(3);
+    let layout = exe.layout().clone();
+    let mut engine = Engine::new(&exe, &ds, &layout);
+    let cfg = engine_cfg(learners, threads);
+    let sw = Stopwatch::start();
+    let rec = engine.run(&cfg, &params)?;
+    let wall = sw.secs();
+    Ok((wall, rec.epochs.last().unwrap().train_loss.to_bits()))
+}
+
+/// Isolated hot-path timings at one learner count: mean pack ns (per
+/// learner·step, all layers) and mean steady-state exchange_into ns.
+fn hot_path(learners: usize) -> (f64, f64) {
+    let exe = NativeMlp::new(DIMS, 64);
+    let layout = exe.layout().clone();
+    let lens: Vec<usize> = layout.layers.iter().map(|l| l.len()).collect();
+
+    // pack: one compressor over a fixed gradient, recycling its packets
+    let mut comp = compress::build(
+        &Config {
+            lt_override: 50,
+            ..Config::with_kind(Kind::AdaComp)
+        },
+        &layout,
+    );
+    let mut rng = Pcg32::seeded(11);
+    let dw = rng.normal_vec(layout.total, 0.1);
+    let mut slot: Vec<Packet> = Vec::with_capacity(lens.len());
+    let pack_samples = time_n(
+        || {
+            for spent in slot.drain(..) {
+                comp.recycle(spent);
+            }
+            for li in 0..lens.len() {
+                slot.push(comp.pack_layer(li, layout.view(li, &dw)));
+            }
+        },
+        5,
+        200,
+    );
+
+    // exchange: fixed packets, persistent Reduced (the engine's shape)
+    let per_learner: Vec<Vec<Packet>> = (0..learners)
+        .map(|l| {
+            let mut c = compress::build(
+                &Config {
+                    lt_override: 50,
+                    seed: l as u64,
+                    ..Config::with_kind(Kind::AdaComp)
+                },
+                &layout,
+            );
+            let mut rng = Pcg32::seeded(100 + l as u64);
+            (0..lens.len())
+                .map(|li| c.pack_layer(li, &rng.normal_vec(lens[li], 0.1)))
+                .collect()
+        })
+        .collect();
+    let mut topo = topology::build("ring").unwrap();
+    let mut fabric = Fabric::new(LinkModel::default());
+    let mut reduced = adacomp::comm::Reduced::new(&lens);
+    let ex_samples = time_n(
+        || {
+            topo.exchange_into(&per_learner, &lens, &mut fabric, &mut reduced);
+        },
+        5,
+        200,
+    );
+
+    (
+        Stats::from(&pack_samples).mean_ns,
+        Stats::from(&ex_samples).mean_ns,
+    )
+}
+
+fn engine_sweep() -> anyhow::Result<()> {
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("# engine sweep: NativeMlp {DIMS:?}, batch {BATCH}, {STEPS} steps, adacomp lt=50");
+    println!(
+        "{:<9} {:>10} {:>12} {:>12} {:>9} {:>12} {:>12} {:>10}",
+        "learners", "seq-wall", "par-wall", "speedup", "bit-eq", "steps/s", "pack", "exchange"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    for learners in [1usize, 4, 16] {
+        let (seq_wall, seq_bits) = run_engine(learners, 1)?;
+        let (par_wall, par_bits) = run_engine(learners, 0)?;
+        let bit_eq = seq_bits == par_bits;
+        let (pack_ns, ex_ns) = hot_path(learners);
+        let steps_per_sec = STEPS as f64 / par_wall;
+        println!(
+            "{:<9} {:>9.3}s {:>11.3}s {:>11.2}x {:>9} {:>12.1} {:>12} {:>12}",
+            learners,
+            seq_wall,
+            par_wall,
+            seq_wall / par_wall,
+            bit_eq,
+            steps_per_sec,
+            fmt_ns(pack_ns),
+            fmt_ns(ex_ns)
+        );
+        assert!(bit_eq, "threads=0 and threads=1 must be bit-identical");
+        rows.push(json::obj(vec![
+            ("learners", json::num(learners as f64)),
+            ("threads_auto", json::num(auto as f64)),
+            ("seq_wall_secs", json::num(seq_wall)),
+            ("par_wall_secs", json::num(par_wall)),
+            ("speedup", json::num(seq_wall / par_wall)),
+            ("steps_per_sec", json::num(steps_per_sec)),
+            ("pack_ns", json::num(pack_ns)),
+            ("exchange_ns", json::num(ex_ns)),
+            ("bit_identical", Json::Bool(bit_eq)),
+        ]));
+    }
+
+    let doc = json::obj(vec![
+        (
+            "workload",
+            json::obj(vec![
+                ("model", json::s("native_mlp")),
+                ("dims", json::arr(DIMS.iter().map(|&d| json::num(d as f64)).collect())),
+                ("batch_per_learner", json::num(BATCH as f64)),
+                ("steps", json::num(STEPS as f64)),
+                ("scheme", json::s("adacomp")),
+            ]),
+        ),
+        ("engine", json::arr(rows)),
+    ]);
+    std::fs::write("BENCH_engine.json", doc.to_string())?;
+    println!("\nwrote BENCH_engine.json (steps/sec, pack-ns, exchange-ns per learner count)");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_breakdown() -> anyhow::Result<()> {
+    use adacomp::harness::{dataset_for, defaults_for};
+    use adacomp::models::Manifest;
+    use adacomp::runtime::pjrt::PjrtExecutor;
+    use adacomp::runtime::{Batch, Executor};
+
     let dir = adacomp::harness::default_artifacts_dir();
     let manifest = match Manifest::load(dir) {
         Ok(m) => m,
         Err(_) => {
-            println!("artifacts missing — run `make artifacts` first; skipping bench_step");
+            println!("artifacts missing — run `make artifacts` first; skipping PJRT breakdown");
             return Ok(());
         }
     };
 
     println!(
-        "{:<12} {:>9} {:>6} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "\n{:<12} {:>9} {:>6} {:>12} {:>12} {:>12} {:>12} {:>10}",
         "model", "params", "batch", "step(hlo)", "pack", "exchange", "update", "pack-%"
     );
     for model in ["mnist_dnn", "cifar_cnn", "bn50_dnn_s", "char_lstm", "transformer"] {
@@ -70,7 +244,7 @@ fn main() -> anyhow::Result<()> {
             t_step.push((sw.secs() * 1e9) as u64);
 
             let sw = Stopwatch::start();
-            let packets: Vec<compress::Packet> = (0..meta.layout.num_layers())
+            let packets: Vec<Packet> = (0..meta.layout.num_layers())
                 .map(|li| comp.pack_layer(li, meta.layout.view(li, &out.grads)))
                 .collect();
             t_pack.push((sw.secs() * 1e9) as u64);
@@ -108,5 +282,12 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\npack-% = compression cost relative to fwd/bwd — the paper requires this to be small");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    engine_sweep()?;
+    #[cfg(feature = "pjrt")]
+    pjrt_breakdown()?;
     Ok(())
 }

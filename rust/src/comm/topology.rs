@@ -17,41 +17,86 @@
 //! Packets stay compressed end-to-end (this is the point of the paper:
 //! reduction of *sparse ternary* vectors), and the reduce is a dense
 //! accumulate into a reusable buffer.
+//!
+//! Hot-path contract (see DESIGN.md §Threading): `exchange_into` reuses the
+//! caller's [`Reduced`] buffers and each topology's internal scratch, so a
+//! steady-state exchange performs **zero heap allocation** (pinned by
+//! rust/tests/alloc_free.rs). Packets are reduced in learner-id order — the
+//! float summation order is part of the engine's determinism contract.
 
 use super::fabric::Fabric;
+use crate::compress::wire::HEADER_BYTES;
 use crate::compress::Packet;
 
-/// The dense per-layer sum of every learner's packet.
+/// The dense per-layer sum of every learner's packet. Allocate once with
+/// [`Reduced::new`] and reuse across rounds via `exchange_into`.
 pub struct Reduced {
     /// One dense buffer per layer, layer order.
     pub sums: Vec<Vec<f32>>,
 }
 
+impl Reduced {
+    pub fn new(layer_lens: &[usize]) -> Reduced {
+        Reduced {
+            sums: layer_lens.iter().map(|&n| vec![0.0; n]).collect(),
+        }
+    }
+
+    fn reset(&mut self, layer_lens: &[usize]) {
+        // shape can change between runs (not between steps) — realloc only then
+        if self.sums.len() != layer_lens.len()
+            || self.sums.iter().zip(layer_lens).any(|(s, &n)| s.len() != n)
+        {
+            *self = Reduced::new(layer_lens);
+            return;
+        }
+        for s in self.sums.iter_mut() {
+            s.fill(0.0);
+        }
+    }
+}
+
 pub trait Topology: Send {
     fn name(&self) -> &'static str;
 
-    /// One synchronous exchange round.
+    /// One synchronous exchange round, allocation-free in steady state.
     ///
     /// `per_learner[l]` holds learner l's packets, one per layer, in layer
-    /// order. `layer_lens` gives each layer's dense length. Returns the
-    /// per-layer dense sums and records bytes/time on `fabric`.
+    /// order. `layer_lens` gives each layer's dense length. Zeroes `out` and
+    /// accumulates the per-layer dense sums into it (learner-id order), and
+    /// records bytes/time on `fabric`.
+    fn exchange_into(
+        &mut self,
+        per_learner: &[Vec<Packet>],
+        layer_lens: &[usize],
+        fabric: &mut Fabric,
+        out: &mut Reduced,
+    );
+
+    /// Convenience wrapper that allocates a fresh `Reduced` per round
+    /// (benches/tests; the engine uses `exchange_into`).
     fn exchange(
         &mut self,
         per_learner: &[Vec<Packet>],
         layer_lens: &[usize],
         fabric: &mut Fabric,
-    ) -> Reduced;
+    ) -> Reduced {
+        let mut out = Reduced::new(layer_lens);
+        self.exchange_into(per_learner, layer_lens, fabric, &mut out);
+        out
+    }
 }
 
-fn reduce_dense(per_learner: &[Vec<Packet>], layer_lens: &[usize]) -> Reduced {
-    let mut sums: Vec<Vec<f32>> = layer_lens.iter().map(|&n| vec![0.0; n]).collect();
+/// Dense reduce in learner-id order (the determinism contract: float
+/// summation order is fixed regardless of how learners were scheduled).
+fn reduce_into(per_learner: &[Vec<Packet>], layer_lens: &[usize], out: &mut Reduced) {
+    out.reset(layer_lens);
     for packets in per_learner {
         assert_eq!(packets.len(), layer_lens.len(), "one packet per layer");
         for p in packets {
-            p.add_into(&mut sums[p.layer]);
+            p.add_into(&mut out.sums[p.layer]);
         }
     }
-    Reduced { sums }
 }
 
 fn dense_equiv(layer_lens: &[usize], n_learners: usize) -> usize {
@@ -59,94 +104,139 @@ fn dense_equiv(layer_lens: &[usize], n_learners: usize) -> usize {
 }
 
 /// Centralized parameter-server topology.
-pub struct ParamServer;
+///
+/// Holds reusable scratch (per-learner byte counts + the sparse-union
+/// bitset) so rounds are allocation-free in steady state.
+#[derive(Default)]
+pub struct ParamServer {
+    up: Vec<usize>,
+    down: Vec<usize>,
+    /// Reusable bitset words for the per-layer sparse-union size.
+    union_bits: Vec<u64>,
+}
+
+impl ParamServer {
+    /// Exact element count of the server's merged (union) packet for one
+    /// layer: duplicates across learners merge. Any dense packet forces the
+    /// whole layer dense.
+    fn union_sent(&mut self, per_learner: &[Vec<Packet>], layer: usize, len: usize) -> usize {
+        let words = len.div_ceil(64);
+        if self.union_bits.len() < words {
+            self.union_bits.resize(words, 0);
+        }
+        let bits = &mut self.union_bits[..words];
+        bits.fill(0);
+        for packets in per_learner {
+            let p = &packets[layer];
+            if p.is_dense() {
+                return len;
+            }
+            for &i in &p.idx {
+                bits[(i / 64) as usize] |= 1u64 << (i % 64);
+            }
+        }
+        bits.iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
 
 impl Topology for ParamServer {
     fn name(&self) -> &'static str {
         "ps"
     }
 
-    fn exchange(
+    fn exchange_into(
         &mut self,
         per_learner: &[Vec<Packet>],
         layer_lens: &[usize],
         fabric: &mut Fabric,
-    ) -> Reduced {
+        out: &mut Reduced,
+    ) {
         let n = per_learner.len();
-        let up: Vec<usize> = per_learner
-            .iter()
-            .map(|ps| ps.iter().map(|p| p.wire_bytes).sum())
-            .collect();
-        // The merged update the server broadcasts: the union of sparse
-        // packets. Upper-bounded by the sum of packet payloads (duplicates
-        // merge); we charge the union size per layer.
+        self.up.clear();
+        self.up.extend(
+            per_learner
+                .iter()
+                .map(|ps| ps.iter().map(|p| p.wire_bytes).sum::<usize>()),
+        );
+        // The merged update the server broadcasts: the exact sparse union of
+        // the learners' packets (a reusable bitset, not a capped sum), as
+        // (index u32, value f32) pairs — or the dense layer when that is
+        // cheaper. The header is charged once per layer, outside the min.
         let mut down_one = 0usize;
-        for layer in 0..layer_lens.len() {
-            let mut total_sent: usize = per_learner.iter().map(|ps| ps[layer].sent()).sum();
-            total_sent = total_sent.min(layer_lens[layer]);
-            // merged packet: sent elements as (index u32, value f32) + header
-            let dense_cost = 4 * layer_lens[layer];
-            down_one += (8 * total_sent + super::super::compress::wire::HEADER_BYTES).min(dense_cost + super::super::compress::wire::HEADER_BYTES);
+        for (layer, &len) in layer_lens.iter().enumerate() {
+            let union = self.union_sent(per_learner, layer, len);
+            down_one += (8 * union).min(4 * len) + HEADER_BYTES;
         }
-        let down = vec![down_one; n];
+        self.down.clear();
+        self.down.resize(n, down_one);
 
         // Single-port server: uploads serialize into the server, downloads
         // serialize out; learners' own links run in parallel.
-        let t_up: f64 = up.iter().map(|&b| fabric.link.transfer_time(b)).sum();
-        let t_down: f64 = down.iter().map(|&b| fabric.link.transfer_time(b)).sum();
-        fabric.record_round(&up, &down, t_up + t_down, dense_equiv(layer_lens, n));
+        let t_up: f64 = self.up.iter().map(|&b| fabric.link.transfer_time(b)).sum();
+        let t_down: f64 = self.down.iter().map(|&b| fabric.link.transfer_time(b)).sum();
+        fabric.record_round(&self.up, &self.down, t_up + t_down, dense_equiv(layer_lens, n));
 
-        reduce_dense(per_learner, layer_lens)
+        reduce_into(per_learner, layer_lens, out);
     }
 }
 
 /// Ring all-gather of compressed packets.
-pub struct Ring;
+#[derive(Default)]
+pub struct Ring {
+    own: Vec<usize>,
+    up: Vec<usize>,
+    down: Vec<usize>,
+}
 
 impl Topology for Ring {
     fn name(&self) -> &'static str {
         "ring"
     }
 
-    fn exchange(
+    fn exchange_into(
         &mut self,
         per_learner: &[Vec<Packet>],
         layer_lens: &[usize],
         fabric: &mut Fabric,
-    ) -> Reduced {
+        out: &mut Reduced,
+    ) {
         let n = per_learner.len();
-        let own: Vec<usize> = per_learner
-            .iter()
-            .map(|ps| ps.iter().map(|p| p.wire_bytes).sum())
-            .collect();
+        self.own.clear();
+        self.own.extend(
+            per_learner
+                .iter()
+                .map(|ps| ps.iter().map(|p| p.wire_bytes).sum::<usize>()),
+        );
         // Every packet traverses n-1 hops: learner l transmits, per hop, the
         // packet originated by (l - hop); all links are busy in parallel, so
         // hop time = latency + max packet / bandwidth.
-        let mut up = vec![0usize; n];
-        let mut down = vec![0usize; n];
+        self.up.clear();
+        self.up.resize(n, 0);
+        self.down.clear();
+        self.down.resize(n, 0);
         let mut time = 0.0f64;
         if n > 1 {
             for hop in 0..n - 1 {
                 let mut hop_max = 0usize;
                 for l in 0..n {
                     let src = (l + n - hop) % n;
-                    up[l] += own[src];
-                    down[(l + 1) % n] += own[src];
-                    hop_max = hop_max.max(own[src]);
+                    self.up[l] += self.own[src];
+                    self.down[(l + 1) % n] += self.own[src];
+                    hop_max = hop_max.max(self.own[src]);
                 }
                 time += fabric.link.transfer_time(hop_max);
             }
         }
-        fabric.record_round(&up, &down, time, dense_equiv(layer_lens, n));
-        reduce_dense(per_learner, layer_lens)
+        fabric.record_round(&self.up, &self.down, time, dense_equiv(layer_lens, n));
+        reduce_into(per_learner, layer_lens, out);
     }
 }
 
 /// Parse a topology by name.
 pub fn build(name: &str) -> Option<Box<dyn Topology>> {
     match name {
-        "ps" | "param_server" => Some(Box::new(ParamServer)),
-        "ring" => Some(Box::new(Ring)),
+        "ps" | "param_server" => Some(Box::new(ParamServer::default())),
+        "ring" => Some(Box::new(Ring::default())),
         _ => None,
     }
 }
@@ -179,17 +269,31 @@ mod tests {
         let (pk, lens) = learners();
         let mut f1 = Fabric::new(LinkModel::default());
         let mut f2 = Fabric::new(LinkModel::default());
-        let a = ParamServer.exchange(&pk, &lens, &mut f1);
-        let b = Ring.exchange(&pk, &lens, &mut f2);
+        let a = ParamServer::default().exchange(&pk, &lens, &mut f1);
+        let b = Ring::default().exchange(&pk, &lens, &mut f2);
         assert_eq!(a.sums, b.sums);
         assert_eq!(a.sums[0], vec![1.5, 0.0, 0.0, -1.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn exchange_into_reuses_buffers() {
+        let (pk, lens) = learners();
+        let mut f = Fabric::new(LinkModel::default());
+        let mut topo = Ring::default();
+        let mut red = Reduced::new(&lens);
+        topo.exchange_into(&pk, &lens, &mut f, &mut red);
+        let first = red.sums[0].clone();
+        // a second round must zero the buffer, not accumulate on top of it
+        topo.exchange_into(&pk, &lens, &mut f, &mut red);
+        assert_eq!(red.sums[0], first);
+        assert_eq!(f.stats.rounds, 2);
     }
 
     #[test]
     fn ring_bytes_scale_with_n_minus_1() {
         let (pk, lens) = learners();
         let mut f = Fabric::new(LinkModel::default());
-        Ring.exchange(&pk, &lens, &mut f);
+        Ring::default().exchange(&pk, &lens, &mut f);
         // each learner's 20-byte packet travels n-1 = 1 hop
         assert_eq!(f.stats.bytes_up, 40);
         assert_eq!(f.stats.rounds, 1);
@@ -199,17 +303,38 @@ mod tests {
     fn ps_charges_upload_plus_broadcast() {
         let (pk, lens) = learners();
         let mut f = Fabric::new(LinkModel::default());
-        ParamServer.exchange(&pk, &lens, &mut f);
+        ParamServer::default().exchange(&pk, &lens, &mut f);
         assert_eq!(f.stats.bytes_up, 40);
         assert!(f.stats.bytes_down > 0);
         assert!(f.stats.sim_time_s > 0.0);
     }
 
     #[test]
+    fn ps_broadcast_uses_exact_sparse_union() {
+        // learners overlap on index 0: union = {0, 3, 5} = 3 elements, not 4.
+        let (pk, lens) = learners();
+        let mut f = Fabric::new(LinkModel::default());
+        ParamServer::default().exchange(&pk, &lens, &mut f);
+        let expect_down_one = (8 * 3).min(4 * 6) + crate::compress::wire::HEADER_BYTES;
+        assert_eq!(f.stats.bytes_down, 2 * expect_down_one as u64);
+    }
+
+    #[test]
+    fn ps_dense_packet_forces_dense_union() {
+        let l0 = vec![Packet::dense(0, vec![1.0; 6])];
+        let l1 = vec![sparse(0, 6, vec![2], vec![1.0])];
+        let mut f = Fabric::new(LinkModel::default());
+        ParamServer::default().exchange(&[l0, l1], &[6], &mut f);
+        // dense fallback (4 bytes/elem beats 8) + one header, per learner
+        let expect_down_one = 4 * 6 + crate::compress::wire::HEADER_BYTES;
+        assert_eq!(f.stats.bytes_down, 2 * expect_down_one as u64);
+    }
+
+    #[test]
     fn single_learner_ring_is_free() {
         let pk = vec![vec![sparse(0, 4, vec![1], vec![1.0])]];
         let mut f = Fabric::new(LinkModel::default());
-        let r = Ring.exchange(&pk, &[4], &mut f);
+        let r = Ring::default().exchange(&pk, &[4], &mut f);
         assert_eq!(f.stats.bytes_up, 0);
         assert_eq!(r.sums[0], vec![0.0, 1.0, 0.0, 0.0]);
     }

@@ -18,7 +18,7 @@
 //! golden-vector test in rust/tests/golden.rs enforces this), including the
 //! `gmax > 0` guard documented there.
 
-use super::{residue::ResidueStore, wire, Compressor, Config, Kind, Packet};
+use super::{residue::ResidueStore, wire, BufPool, Compressor, Config, Kind, Packet};
 use crate::models::Layout;
 
 pub struct AdaComp {
@@ -30,9 +30,8 @@ pub struct AdaComp {
     per_bin_scale: bool,
     /// Scratch: per-bin maxima (reused across layers/steps).
     gmax: Vec<f32>,
-    /// Scratch: output staging.
-    idx: Vec<u32>,
-    val: Vec<f32>,
+    /// Recycled packet buffers (zero-alloc steady state).
+    pool: BufPool,
 }
 
 impl AdaComp {
@@ -43,8 +42,7 @@ impl AdaComp {
             sf_minus_1: cfg.scale_factor - 1.0,
             per_bin_scale: cfg.per_bin_scale,
             gmax: Vec::new(),
-            idx: Vec::new(),
-            val: Vec::new(),
+            pool: BufPool::default(),
         }
     }
 
@@ -97,9 +95,10 @@ impl Compressor for AdaComp {
 
         // Pass 2: soft-threshold select + ternarize + residue update.
         // Selection is sparse (a few per bin), so the loop is compare-heavy:
-        // keep the common path (no send) branch-minimal.
-        self.idx.clear();
-        self.val.clear();
+        // keep the common path (no send) branch-minimal. Output goes straight
+        // into recycled packet buffers (no staging copy, no steady-state
+        // allocation).
+        let (mut idx, mut val) = self.pool.take();
         let c1 = self.sf_minus_1;
         for (b, (rb, db)) in r.chunks_mut(lt).zip(dw.chunks(lt)).enumerate() {
             let gm = self.gmax[b];
@@ -121,23 +120,23 @@ impl Compressor for AdaComp {
                     } else {
                         0.0
                     };
-                    self.idx.push(base + j as u32);
-                    self.val.push(sent);
+                    idx.push(base + j as u32);
+                    val.push(sent);
                     *ri = g - sent;
                 }
             }
         }
 
-        let wire = wire::encode_adacomp(layer, n, lt, scale, &self.idx, &self.val);
-        let paper_bits = self.idx.len() * wire::slot_bits(lt) + 32;
+        // wire cost is analytic (== encode_adacomp length, pinned by
+        // wire::tests::lens_match_encoders) — no encode on the hot path
+        let wire_bytes = wire::adacomp_wire_len(n, lt, idx.len());
+        let paper_bits = idx.len() * wire::slot_bits(lt) + 32;
         Packet {
             layer,
             n,
-            // move the staging buffers out instead of cloning them; the next
-            // pack re-grows them once (amortized free, no memcpy per call)
-            idx: std::mem::take(&mut self.idx),
-            val: std::mem::take(&mut self.val),
-            wire_bytes: wire.len(),
+            idx,
+            val,
+            wire_bytes,
             paper_bits,
         }
     }
@@ -148,6 +147,10 @@ impl Compressor for AdaComp {
 
     fn reset(&mut self) {
         self.residues.reset();
+    }
+
+    fn recycle(&mut self, spent: Packet) {
+        self.pool.put(spent.idx, spent.val);
     }
 }
 

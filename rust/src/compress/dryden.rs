@@ -6,7 +6,7 @@
 //! copy — O(N) expected, no full sort — which is the strongest practical
 //! version of the baseline (an exact top-k).
 
-use super::{quantize, residue::ResidueStore, wire, Compressor, Config, Kind, Packet};
+use super::{quantize, residue::ResidueStore, wire, BufPool, Compressor, Config, Kind, Packet};
 use crate::models::Layout;
 use crate::util::rng::Pcg32;
 
@@ -15,8 +15,7 @@ pub struct Dryden {
     fraction: f64,
     rng: Pcg32,
     scratch: Vec<f32>,
-    idx: Vec<u32>,
-    val: Vec<f32>,
+    pool: BufPool,
 }
 
 impl Dryden {
@@ -26,8 +25,7 @@ impl Dryden {
             fraction: cfg.topk_fraction,
             rng: Pcg32::new(cfg.seed, 77),
             scratch: Vec::new(),
-            idx: Vec::new(),
-            val: Vec::new(),
+            pool: BufPool::default(),
         }
     }
 
@@ -88,37 +86,32 @@ impl Compressor for Dryden {
 
         // Collect the sent set (>= threshold, capped at k by scanning order to
         // keep an exact top-k even with ties).
-        self.idx.clear();
+        let (mut idx, mut val) = self.pool.take();
         let r = self.residues.layer(layer);
         for (i, &g) in r.iter().enumerate() {
-            if g.abs() >= thresh && self.idx.len() < k && g != 0.0 {
-                self.idx.push(i as u32);
+            if g.abs() >= thresh && idx.len() < k && g != 0.0 {
+                idx.push(i as u32);
             }
         }
-        let (pos, neg) =
-            quantize::signed_means(self.idx.iter().map(|&i| r[i as usize]));
+        let (pos, neg) = quantize::signed_means(idx.iter().map(|&i| r[i as usize]));
 
-        self.val.clear();
         let rm = self.residues.layer_mut(layer);
-        for &i in self.idx.iter() {
+        for &i in idx.iter() {
             let g = rm[i as usize];
             let sent = if g >= 0.0 { pos } else { neg };
-            self.val.push(sent);
+            val.push(sent);
             rm[i as usize] = g - sent;
         }
 
-        let wire_bytes = {
-            let neg_set: Vec<bool> = self.val.iter().map(|v| *v < 0.0).collect();
-            wire::encode_sparse_sign(layer, n, pos, neg, &self.idx, |j| neg_set[j]).len()
-        };
+        let wire_bytes = wire::sparse_sign_wire_len(idx.len());
+        let paper_bits = idx.len() * 32 + 64; // 32-bit index + sign, 2 means
         Packet {
             layer,
             n,
-            idx: self.idx.clone(),
-            val: self.val.clone(),
+            idx,
+            val,
             wire_bytes,
-            // paper accounting: 32-bit index + sign per element, 2 means
-            paper_bits: self.idx.len() * 32 + 64,
+            paper_bits,
         }
     }
 
@@ -128,6 +121,10 @@ impl Compressor for Dryden {
 
     fn reset(&mut self) {
         self.residues.reset();
+    }
+
+    fn recycle(&mut self, spent: Packet) {
+        self.pool.put(spent.idx, spent.val);
     }
 }
 

@@ -1,19 +1,19 @@
 //! No-compression baseline: transmits raw dense f32 gradients.
 
-use super::{residue::ResidueStore, Compressor, Kind, Packet};
-#[cfg(test)]
-use super::wire;
+use super::{residue::ResidueStore, wire, BufPool, Compressor, Kind, Packet};
 use crate::models::Layout;
 
 pub struct Identity {
     /// Zeros — identity never holds back gradient mass.
     zeros: ResidueStore,
+    pool: BufPool,
 }
 
 impl Identity {
     pub fn new(layout: &Layout) -> Identity {
         Identity {
             zeros: ResidueStore::new(layout),
+            pool: BufPool::default(),
         }
     }
 }
@@ -24,11 +24,21 @@ impl Compressor for Identity {
     }
 
     fn pack_layer(&mut self, layer: usize, dw: &[f32]) -> Packet {
-        assert_eq!(self.zeros.layer(layer).len(), dw.len());
+        let n = dw.len();
+        assert_eq!(self.zeros.layer(layer).len(), n);
         // wire size is analytic (header + 4 bytes/element, exactly what
         // wire::encode_dense_f32 produces) — no need to materialize bytes
         // on the hot path; the equality is pinned by the test below.
-        Packet::dense(layer, dw.to_vec())
+        let (idx, mut val) = self.pool.take();
+        val.extend_from_slice(dw);
+        Packet {
+            layer,
+            n,
+            idx, // dense packet: idx stays empty (pooled for its capacity)
+            val,
+            wire_bytes: wire::dense_f32_wire_len(n),
+            paper_bits: 32 * n,
+        }
     }
 
     fn residue(&self, layer: usize) -> &[f32] {
@@ -36,6 +46,10 @@ impl Compressor for Identity {
     }
 
     fn reset(&mut self) {}
+
+    fn recycle(&mut self, spent: Packet) {
+        self.pool.put(spent.idx, spent.val);
+    }
 }
 
 #[cfg(test)]

@@ -4,7 +4,7 @@
 //! scheme's residual gradients explode at high compression rates because the
 //! fixed one-per-bin budget cannot adapt to layers/steps that need more.
 
-use super::{residue::ResidueStore, wire, Compressor, Config, Kind, Packet};
+use super::{residue::ResidueStore, wire, BufPool, Compressor, Config, Kind, Packet};
 use crate::models::Layout;
 
 pub struct LocalSelect {
@@ -13,8 +13,7 @@ pub struct LocalSelect {
     per_bin_scale: bool,
     gmax: Vec<f32>,
     arg: Vec<u32>,
-    idx: Vec<u32>,
-    val: Vec<f32>,
+    pool: BufPool,
 }
 
 impl LocalSelect {
@@ -25,8 +24,7 @@ impl LocalSelect {
             per_bin_scale: cfg.per_bin_scale,
             gmax: Vec::new(),
             arg: Vec::new(),
-            idx: Vec::new(),
-            val: Vec::new(),
+            pool: BufPool::default(),
         }
     }
 }
@@ -63,8 +61,7 @@ impl Compressor for LocalSelect {
         }
         let scale = self.gmax.iter().sum::<f32>() / nbins as f32;
 
-        self.idx.clear();
-        self.val.clear();
+        let (mut idx, mut val) = self.pool.take();
         for b in 0..nbins {
             let gm = self.gmax[b];
             if gm <= 0.0 {
@@ -73,19 +70,20 @@ impl Compressor for LocalSelect {
             let i = self.arg[b] as usize;
             let q = if self.per_bin_scale { gm } else { scale };
             let sent = if r[i] > 0.0 { q } else { -q }; // |r[i]| = gm > 0
-            self.idx.push(i as u32);
-            self.val.push(sent);
+            idx.push(i as u32);
+            val.push(sent);
             r[i] -= sent;
         }
 
-        let wire_bytes = wire::encode_adacomp(layer, n, lt, scale, &self.idx, &self.val).len();
+        let wire_bytes = wire::adacomp_wire_len(n, lt, idx.len());
+        let paper_bits = idx.len() * wire::slot_bits(lt) + 32;
         Packet {
             layer,
             n,
-            idx: self.idx.clone(),
-            val: self.val.clone(),
+            idx,
+            val,
             wire_bytes,
-            paper_bits: self.idx.len() * wire::slot_bits(lt) + 32,
+            paper_bits,
         }
     }
 
@@ -95,6 +93,10 @@ impl Compressor for LocalSelect {
 
     fn reset(&mut self) {
         self.residues.reset();
+    }
+
+    fn recycle(&mut self, spent: Packet) {
+        self.pool.put(spent.idx, spent.val);
     }
 }
 

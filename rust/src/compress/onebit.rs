@@ -6,21 +6,19 @@
 //! originally for FC layers only — Fig 1 of the paper shows that applying it
 //! to conv layers (while FC is also compressed) diverges.
 
-use super::{quantize, residue::ResidueStore, wire, Compressor, Kind, Packet};
+use super::{quantize, residue::ResidueStore, wire, BufPool, Compressor, Kind, Packet};
 use crate::models::Layout;
 
 pub struct OneBit {
     residues: ResidueStore,
-    signs: Vec<bool>,
-    val: Vec<f32>,
+    pool: BufPool,
 }
 
 impl OneBit {
     pub fn new(layout: &Layout) -> OneBit {
         OneBit {
             residues: ResidueStore::new(layout),
-            signs: Vec::new(),
-            val: Vec::new(),
+            pool: BufPool::default(),
         }
     }
 }
@@ -36,23 +34,19 @@ impl Compressor for OneBit {
         let n = r.len();
         let (pos, neg) = quantize::signed_means(r.iter().copied());
 
-        self.signs.clear();
-        self.val.clear();
+        let (idx, mut val) = self.pool.take();
         for g in r.iter_mut() {
-            let isneg = *g < 0.0;
-            let sent = if isneg { neg } else { pos };
-            self.signs.push(isneg);
-            self.val.push(sent);
+            let sent = if *g < 0.0 { neg } else { pos };
+            val.push(sent);
             *g -= sent;
         }
 
-        let wire_bytes = wire::encode_onebit(layer, &self.signs, pos, neg).len();
         Packet {
             layer,
             n,
-            idx: Vec::new(),
-            val: self.val.clone(),
-            wire_bytes,
+            idx, // dense packet: idx stays empty (pooled for its capacity)
+            val,
+            wire_bytes: wire::onebit_wire_len(n),
             paper_bits: n + 64, // 1 bit per element + two reconstruction means
         }
     }
@@ -63,6 +57,10 @@ impl Compressor for OneBit {
 
     fn reset(&mut self) {
         self.residues.reset();
+    }
+
+    fn recycle(&mut self, spent: Packet) {
+        self.pool.put(spent.idx, spent.val);
     }
 }
 

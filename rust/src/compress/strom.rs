@@ -5,14 +5,13 @@
 //! The paper's critique: tau is a brittle global hyper-parameter ("these
 //! papers do not discuss techniques for determining an optimal threshold").
 
-use super::{residue::ResidueStore, wire, Compressor, Config, Kind, Packet};
+use super::{residue::ResidueStore, wire, BufPool, Compressor, Config, Kind, Packet};
 use crate::models::Layout;
 
 pub struct Strom {
     residues: ResidueStore,
     tau: f32,
-    idx: Vec<u32>,
-    val: Vec<f32>,
+    pool: BufPool,
 }
 
 impl Strom {
@@ -20,8 +19,7 @@ impl Strom {
         Strom {
             residues: ResidueStore::new(layout),
             tau: cfg.strom_tau,
-            idx: Vec::new(),
-            val: Vec::new(),
+            pool: BufPool::default(),
         }
     }
 }
@@ -37,31 +35,28 @@ impl Compressor for Strom {
         let n = r.len();
         let tau = self.tau;
 
-        self.idx.clear();
-        self.val.clear();
+        let (mut idx, mut val) = self.pool.take();
         for (i, g) in r.iter_mut().enumerate() {
             if *g > tau {
-                self.idx.push(i as u32);
-                self.val.push(tau);
+                idx.push(i as u32);
+                val.push(tau);
                 *g -= tau;
             } else if *g < -tau {
-                self.idx.push(i as u32);
-                self.val.push(-tau);
+                idx.push(i as u32);
+                val.push(-tau);
                 *g += tau;
             }
         }
 
-        let wire_bytes = {
-            let neg: Vec<bool> = self.val.iter().map(|v| *v < 0.0).collect();
-            wire::encode_sparse_sign(layer, n, tau, -tau, &self.idx, |j| neg[j]).len()
-        };
+        let wire_bytes = wire::sparse_sign_wire_len(idx.len());
+        let paper_bits = idx.len() * 32 + 32;
         Packet {
             layer,
             n,
-            idx: self.idx.clone(),
-            val: self.val.clone(),
+            idx,
+            val,
             wire_bytes,
-            paper_bits: self.idx.len() * 32 + 32,
+            paper_bits,
         }
     }
 
@@ -71,6 +66,10 @@ impl Compressor for Strom {
 
     fn reset(&mut self) {
         self.residues.reset();
+    }
+
+    fn recycle(&mut self, spent: Packet) {
+        self.pool.put(spent.idx, spent.val);
     }
 }
 

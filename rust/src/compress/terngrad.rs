@@ -6,7 +6,7 @@
 //! 16x ceiling the paper cites ("without the use of sparsity, the
 //! compression rate in their approach is limited to 16x").
 
-use super::{quantize::Tern, residue::ResidueStore, wire, Compressor, Config, Kind, Packet};
+use super::{quantize::Tern, residue::ResidueStore, wire, BufPool, Compressor, Config, Kind, Packet};
 use crate::models::Layout;
 use crate::util::rng::Pcg32;
 
@@ -15,8 +15,7 @@ pub struct TernGrad {
     /// TernGrad is residue-free.
     zeros: ResidueStore,
     rng: Pcg32,
-    codes: Vec<Tern>,
-    val: Vec<f32>,
+    pool: BufPool,
 }
 
 impl TernGrad {
@@ -24,8 +23,7 @@ impl TernGrad {
         TernGrad {
             zeros: ResidueStore::new(layout),
             rng: Pcg32::new(cfg.seed, 1313),
-            codes: Vec::new(),
-            val: Vec::new(),
+            pool: BufPool::default(),
         }
     }
 }
@@ -40,8 +38,7 @@ impl Compressor for TernGrad {
         assert_eq!(self.zeros.layer(layer).len(), n);
         let st = dw.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
 
-        self.codes.clear();
-        self.val.clear();
+        let (idx, mut val) = self.pool.take();
         if st > 0.0 {
             let inv = 1.0 / st;
             for &g in dw {
@@ -55,22 +52,18 @@ impl Compressor for TernGrad {
                 } else {
                     Tern::Zero
                 };
-                self.codes.push(t);
-                self.val.push(t.apply(st));
+                val.push(t.apply(st));
             }
         } else {
-            self.codes.resize(n, Tern::Zero);
-            self.val.resize(n, 0.0);
+            val.resize(n, 0.0);
         }
 
-        let wire_bytes =
-            wire::encode_ternary_dense(layer, n, st, self.codes.iter().copied()).len();
         Packet {
             layer,
             n,
-            idx: Vec::new(),
-            val: self.val.clone(),
-            wire_bytes,
+            idx, // dense packet: idx stays empty (pooled for its capacity)
+            val,
+            wire_bytes: wire::ternary_dense_wire_len(n),
             paper_bits: 2 * n + 32,
         }
     }
@@ -80,6 +73,10 @@ impl Compressor for TernGrad {
     }
 
     fn reset(&mut self) {}
+
+    fn recycle(&mut self, spent: Packet) {
+        self.pool.put(spent.idx, spent.val);
+    }
 }
 
 #[cfg(test)]

@@ -45,6 +45,34 @@ pub fn slot_bits(lt: usize) -> usize {
     }
 }
 
+/// Exact byte length of `encode_adacomp` output, computed without
+/// materializing the bytes — the pack hot path charges wire cost from this
+/// (the equality with the real encoder is pinned by `lens_match_encoders`).
+pub fn adacomp_wire_len(n: usize, lt: usize, sent: usize) -> usize {
+    let per = slot_bits(lt) / 8; // per-bin count field and per-element slot
+    HEADER_BYTES + (n.div_ceil(lt.max(1)) + sent) * per
+}
+
+/// Exact byte length of `encode_sparse_sign` output (dryden / strom).
+pub fn sparse_sign_wire_len(sent: usize) -> usize {
+    HEADER_BYTES + 4 + 8 + 4 * sent // count u32 + pos/neg f32 + slots
+}
+
+/// Exact byte length of `encode_onebit` output.
+pub fn onebit_wire_len(n: usize) -> usize {
+    HEADER_BYTES + 8 + n.div_ceil(8) // pos/neg f32 + sign bitmap
+}
+
+/// Exact byte length of `encode_ternary_dense` output (terngrad).
+pub fn ternary_dense_wire_len(n: usize) -> usize {
+    HEADER_BYTES + n.div_ceil(4) // 2-bit codes
+}
+
+/// Exact byte length of `encode_dense_f32` output (identity baseline).
+pub fn dense_f32_wire_len(n: usize) -> usize {
+    HEADER_BYTES + 4 * n
+}
+
 struct Writer {
     buf: Vec<u8>,
 }
@@ -416,6 +444,32 @@ mod tests {
     fn decode_rejects_garbage() {
         assert!(decode(&[1, 2, 3]).is_err());
         assert!(decode(&[99; 32]).is_err());
+    }
+
+    #[test]
+    fn lens_match_encoders() {
+        // adacomp, all three slot widths
+        for (n, lt, idx, val) in [
+            (30usize, 10usize, vec![0u32, 3, 9, 10, 25], vec![0.5f32, -0.5, 0.5, 0.0, -0.5]),
+            (1300, 500, vec![5, 499, 500, 1200], vec![1.5, -1.5, 1.5, 1.5]),
+            (40000, 20000, vec![20000], vec![-0.25]),
+            (100, 10, vec![], vec![]),
+        ] {
+            let bytes = encode_adacomp(0, n, lt, 0.5, &idx, &val);
+            assert_eq!(bytes.len(), adacomp_wire_len(n, lt, idx.len()), "n={n} lt={lt}");
+        }
+        let idx = vec![1u32, 7, 1000];
+        assert_eq!(
+            encode_sparse_sign(3, 2000, 0.2, -0.3, &idx, |j| j == 1).len(),
+            sparse_sign_wire_len(idx.len())
+        );
+        for n in [1usize, 8, 19, 64] {
+            let signs: Vec<bool> = (0..n).map(|i| i % 3 == 0).collect();
+            assert_eq!(encode_onebit(0, &signs, 0.5, -0.25).len(), onebit_wire_len(n));
+            let codes = (0..n).map(|i| if i % 2 == 0 { Tern::Pos } else { Tern::Zero });
+            assert_eq!(encode_ternary_dense(0, n, 1.0, codes).len(), ternary_dense_wire_len(n));
+            assert_eq!(encode_dense_f32(0, &vec![1.0; n]).len(), dense_f32_wire_len(n));
+        }
     }
 
     #[test]

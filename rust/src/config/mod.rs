@@ -20,7 +20,7 @@ pub fn from_json(v: &Json) -> Result<TrainConfig> {
         "name", "model", "learners", "batch_per_learner", "epochs",
         "steps_per_epoch", "lr", "lr_schedule", "optimizer", "momentum",
         "topology", "seed", "clip_norm", "divergence_loss", "compression",
-        "link",
+        "link", "threads",
     ];
     for k in obj.keys() {
         if !KNOWN.contains(&k.as_str()) {
@@ -69,6 +69,9 @@ pub fn from_json(v: &Json) -> Result<TrainConfig> {
     }
     if let Some(d) = v.get("divergence_loss").as_f64() {
         cfg.divergence_loss = d;
+    }
+    if let Some(t) = v.get("threads").as_usize() {
+        cfg.threads = t;
     }
     if let Some(lr) = v.get("lr").as_f64() {
         cfg.lr = LrSchedule::Constant(lr as f32);
@@ -215,6 +218,7 @@ pub fn to_json(cfg: &TrainConfig) -> Json {
         ("topology", json::s(&cfg.topology)),
         ("seed", json::num(cfg.seed as f64)),
         ("clip_norm", json::num(cfg.clip_norm as f64)),
+        ("threads", json::num(cfg.threads as f64)),
         ("lr_schedule", lr),
         ("compression", comp),
     ])

@@ -92,11 +92,18 @@ impl Shard {
 
 /// Draw a batch of shard-local indices for one epoch-step (with-replacement
 /// sampling keeps every learner's batch size constant regardless of shard
-/// remainder, matching the paper's fixed per-learner minibatch).
+/// remainder, matching the paper's fixed per-learner minibatch) into a
+/// reusable buffer — the engine's per-step learner phase allocates nothing.
+pub fn draw_batch_into(rng: &mut Pcg32, shard: &Shard, batch: usize, out: &mut Vec<usize>) {
+    out.clear();
+    out.extend((0..batch).map(|_| shard.global(rng.below(shard.len() as u32) as usize)));
+}
+
+/// Allocating convenience wrapper over [`draw_batch_into`].
 pub fn draw_batch(rng: &mut Pcg32, shard: &Shard, batch: usize) -> Vec<usize> {
-    (0..batch)
-        .map(|_| shard.global(rng.below(shard.len() as u32) as usize))
-        .collect()
+    let mut out = Vec::with_capacity(batch);
+    draw_batch_into(rng, shard, batch, &mut out);
+    out
 }
 
 #[cfg(test)]

@@ -17,7 +17,7 @@ use crate::data::{
 };
 use crate::models::Manifest;
 use crate::optim::LrSchedule;
-use crate::runtime::pjrt::PjrtExecutor;
+use crate::runtime::{Executor, ExecutorFactory};
 use crate::train::TrainConfig;
 use crate::util::cli::Args;
 
@@ -219,6 +219,7 @@ impl Workload {
             divergence_loss: 50.0, // classification losses; way past any sane value
             track_residue: true,
             clip_norm: args.f32_or("clip", d.clip_norm),
+            threads: args.usize_or("threads", 0),
         };
 
         let mut init_params = manifest.load_init(&meta)?;
@@ -247,8 +248,31 @@ impl Workload {
         })
     }
 
-    pub fn executor(&self) -> Result<PjrtExecutor> {
-        PjrtExecutor::new(&self.manifest, &self.model)
+    /// Executor factory for this workload's backend (PJRT over the AOT
+    /// artifacts). Without the `pjrt` cargo feature this errors at runtime —
+    /// hermetic tier-1 builds carry the harness but not the XLA binding.
+    #[cfg(feature = "pjrt")]
+    pub fn factory(&self) -> Result<Box<dyn ExecutorFactory>> {
+        Ok(Box::new(crate::runtime::pjrt::PjrtFactory::new(
+            self.manifest.clone(),
+            self.model.clone(),
+        )))
+    }
+
+    /// See the `pjrt`-enabled variant: this build has no PJRT backend.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn factory(&self) -> Result<Box<dyn ExecutorFactory>> {
+        anyhow::bail!(
+            "model '{}' needs the PJRT backend, but this binary was built without \
+             the `pjrt` feature — add the `xla` dependency and rebuild with \
+             `--features pjrt` (see rust/Cargo.toml and DESIGN.md §Interchange)",
+            self.model
+        )
+    }
+
+    /// A single executor on the calling thread (inspection / analyze paths).
+    pub fn local_executor(&self) -> Result<Box<dyn Executor>> {
+        self.factory()?.build_local()
     }
 
     /// Run training with the current config.
@@ -258,9 +282,10 @@ impl Workload {
 
     /// Run training, also returning the trained parameters (checkpointing).
     pub fn run_full(&self) -> Result<(crate::metrics::RunRecord, Vec<f32>)> {
-        let mut exe = self.executor()?;
+        let factory = self.factory()?;
         let layout = self.manifest.model(&self.model)?.layout.clone();
-        let mut engine = crate::train::Engine::new(&mut exe, self.dataset.as_ref(), &layout);
+        let mut engine =
+            crate::train::Engine::new(factory.as_ref(), self.dataset.as_ref(), &layout);
         engine.run_full(&self.cfg, &self.init_params, None)
     }
 
@@ -269,9 +294,10 @@ impl Workload {
         &self,
         hook: &mut crate::train::engine::EpochHook<'_>,
     ) -> Result<crate::metrics::RunRecord> {
-        let mut exe = self.executor()?;
+        let factory = self.factory()?;
         let layout = self.manifest.model(&self.model)?.layout.clone();
-        let mut engine = crate::train::Engine::new(&mut exe, self.dataset.as_ref(), &layout);
+        let mut engine =
+            crate::train::Engine::new(factory.as_ref(), self.dataset.as_ref(), &layout);
         engine.run_with_hook(&self.cfg, &self.init_params, Some(hook))
     }
 }

@@ -10,7 +10,14 @@
 //!       every figure/table of the paper.
 //!
 //! Python never runs on the training path: `make artifacts` lowers L1+L2 to
-//! HLO text once; the rust binary loads them via PJRT (`runtime::pjrt`).
+//! HLO text once; the rust binary loads them via PJRT (`runtime::pjrt`,
+//! behind the `pjrt` cargo feature — hermetic builds use the native
+//! executors and stay artifact-free).
+//!
+//! The multi-learner engine runs the per-learner phase in parallel
+//! (`runtime::ExecutorFactory` + `train::Engine`) with a zero-allocation
+//! exchange hot path; results are bit-identical for every thread count
+//! (DESIGN.md §Threading).
 
 pub mod comm;
 pub mod config;
@@ -27,5 +34,5 @@ pub mod util;
 
 pub use compress::{Compressor, Packet};
 pub use models::{LayerKind, Layout, Manifest};
-pub use runtime::Executor;
+pub use runtime::{Executor, ExecutorFactory};
 pub use train::{Engine, TrainConfig};

@@ -165,7 +165,6 @@ fn cmd_inspect(args: &Args) -> i32 {
 /// One forward/backward/pack on a real batch: per-layer compression report.
 fn cmd_analyze(args: &Args) -> i32 {
     use adacomp::compress;
-    use adacomp::runtime::Executor;
     let w = match Workload::from_args(args, "cifar_cnn") {
         Ok(w) => w,
         Err(e) => {
@@ -174,7 +173,7 @@ fn cmd_analyze(args: &Args) -> i32 {
         }
     };
     let meta = w.manifest.model(&w.model).unwrap().clone();
-    let mut exe = match w.executor() {
+    let mut exe = match w.local_executor() {
         Ok(e) => e,
         Err(e) => {
             eprintln!("error: {e:#}");
@@ -254,6 +253,8 @@ USAGE:
   adacomp train [--model M] [--scheme S] [--learners N] [--batch B]
                 [--epochs E] [--lt L] [--optimizer sgd|adam|rmsprop]
                 [--topology ring|ps] [--lr LR] [--seed S]
+                [--threads T]   (0 = auto; learner phase fan-out, results
+                                 are bit-identical for every thread count)
   adacomp inspect [--artifacts DIR]
   adacomp schemes
 

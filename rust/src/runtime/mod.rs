@@ -4,15 +4,23 @@
 //! flat parameters and a batch, produce (loss, flat gradients). Two
 //! implementations:
 //!
-//! * `pjrt::PjrtExecutor` — the production path: loads the AOT-lowered HLO
-//!   text (L1 Pallas kernels + L2 JAX models) and runs it on the PJRT CPU
-//!   client via the `xla` crate. Python is never involved.
-//! * `native::NativeMlp` — a pure-rust reference executor for FC stacks,
-//!   used by hermetic tests (no artifacts needed) and as a cross-check of
-//!   the PJRT numerics.
+//! * `pjrt::PjrtExecutor` — the production path (feature `pjrt`): loads the
+//!   AOT-lowered HLO text (L1 Pallas kernels + L2 JAX models) and runs it on
+//!   the PJRT CPU client via the `xla` crate. Python is never involved.
+//! * `native::NativeMlp` / `native_cnn::NativeCnn` — pure-rust reference
+//!   executors, used by hermetic tests (no artifacts needed), by the
+//!   parallel multi-learner engine, and as a cross-check of PJRT numerics.
+//!
+//! `ExecutorFactory` is how the engine provisions compute for N learners:
+//! the native backends stamp out one `Send` executor per learner so the
+//! per-learner phase fans out across threads; the PJRT backend is `!Send`
+//! (thread-local `Rc` client) and declares `parallel() == false`, which
+//! makes the engine fall back to the documented sequential path behind the
+//! same API (DESIGN.md §Threading).
 
 pub mod native;
 pub mod native_cnn;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 use crate::data::XBuf;
@@ -64,8 +72,9 @@ pub struct EvalOut {
     pub ncorrect: f32,
 }
 
-// Note: not `Send` — the PJRT client wraps an `Rc`. The engine runs learners
-// sequentially in one thread (DESIGN.md §Substitutions), so this costs nothing.
+// Note: the trait itself does not require `Send` — the PJRT client wraps an
+// `Rc` and stays pinned to one thread. Backends that CAN cross threads hand
+// out `Box<dyn Executor + Send>` through `ExecutorFactory::build_worker`.
 pub trait Executor {
     /// forward+backward at a given per-learner batch size.
     fn step(&mut self, params: &[f32], batch: &Batch) -> anyhow::Result<StepOut>;
@@ -75,4 +84,35 @@ pub trait Executor {
     fn step_batch_sizes(&self) -> Vec<usize>;
     /// The batch size `eval` expects.
     fn eval_batch(&self) -> usize;
+}
+
+/// Provisions executors for the engine — one per learner when the backend
+/// supports thread fan-out, plus a local one for evaluation and the
+/// sequential fallback.
+///
+/// The factory is `Send + Sync` so `std::thread::scope` workers may hold it;
+/// executor *instances* are single-owner (`&mut self` API) and are never
+/// shared across threads.
+pub trait ExecutorFactory: Send + Sync {
+    /// Backend name for logs/benches.
+    fn backend(&self) -> &'static str;
+
+    /// Whether `build_worker` executors may run on worker threads. When
+    /// false the engine runs every learner sequentially on the calling
+    /// thread with one shared `build_local` executor — bit-identical
+    /// results, no parallel speedup (the PJRT case).
+    fn parallel(&self) -> bool {
+        true
+    }
+
+    /// Build a `Send` executor owned by one learner. Backends with
+    /// `parallel() == false` return an error here.
+    fn build_worker(&self) -> anyhow::Result<Box<dyn Executor + Send>>;
+
+    /// Build an executor pinned to the calling thread (evaluation + the
+    /// sequential fallback). Every backend must support this.
+    fn build_local(&self) -> anyhow::Result<Box<dyn Executor>> {
+        let exe: Box<dyn Executor> = self.build_worker()?;
+        Ok(exe)
+    }
 }

@@ -9,14 +9,28 @@
 
 use anyhow::{bail, Result};
 
-use super::{Batch, EvalOut, Executor, StepOut};
+use super::{Batch, EvalOut, Executor, ExecutorFactory, StepOut};
 use crate::models::{LayerKind, Layout};
 use crate::tensor::ops;
 
+#[derive(Clone)]
 pub struct NativeMlp {
     pub dims: Vec<usize>,
     layout: Layout,
     eval_batch: usize,
+}
+
+/// The model spec doubles as the engine's executor factory: executors are
+/// pure functions of (dims, layout), so stamping one out per learner is a
+/// cheap clone and every copy produces bit-identical results.
+impl ExecutorFactory for NativeMlp {
+    fn backend(&self) -> &'static str {
+        "native_mlp"
+    }
+
+    fn build_worker(&self) -> Result<Box<dyn Executor + Send>> {
+        Ok(Box::new(self.clone()))
+    }
 }
 
 impl NativeMlp {

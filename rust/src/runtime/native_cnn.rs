@@ -8,7 +8,7 @@
 
 use anyhow::{bail, Result};
 
-use super::{Batch, EvalOut, Executor, StepOut};
+use super::{Batch, EvalOut, Executor, ExecutorFactory, StepOut};
 use crate::models::{LayerKind, Layout};
 use crate::tensor::{conv, ops};
 
@@ -19,6 +19,7 @@ pub struct ConvStage {
     pub cout: usize,
 }
 
+#[derive(Clone)]
 pub struct NativeCnn {
     pub h: usize,
     pub w: usize,
@@ -151,6 +152,18 @@ struct Fwd {
     pre_pool: Vec<Vec<f32>>,
     argmaxes: Vec<Vec<u32>>,
     logits: Vec<f32>,
+}
+
+/// See [`NativeMlp`](super::native::NativeMlp): the spec is the factory;
+/// per-learner clones are cheap and bit-identical.
+impl ExecutorFactory for NativeCnn {
+    fn backend(&self) -> &'static str {
+        "native_cnn"
+    }
+
+    fn build_worker(&self) -> Result<Box<dyn Executor + Send>> {
+        Ok(Box::new(self.clone()))
+    }
 }
 
 impl Executor for NativeCnn {

@@ -10,9 +10,52 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::{Batch, EvalOut, Executor, StepOut};
+use super::{Batch, EvalOut, Executor, ExecutorFactory, StepOut};
 use crate::models::{Manifest, ModelMeta};
 use crate::util::json::Json;
+
+/// Executor factory for the PJRT backend.
+///
+/// `PjrtExecutor` is deliberately `!Send` (the PJRT client wraps a
+/// thread-local `Rc`, and compiled executables cache per client), so this
+/// factory reports `parallel() == false`: the engine keeps every learner on
+/// the calling thread and drives them sequentially through one shared
+/// executor — the documented fallback behind the same `ExecutorFactory`
+/// API (DESIGN.md §Threading).
+pub struct PjrtFactory {
+    manifest: Manifest,
+    model: String,
+}
+
+impl PjrtFactory {
+    pub fn new(manifest: Manifest, model: impl Into<String>) -> PjrtFactory {
+        PjrtFactory {
+            manifest,
+            model: model.into(),
+        }
+    }
+}
+
+impl ExecutorFactory for PjrtFactory {
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn parallel(&self) -> bool {
+        false
+    }
+
+    fn build_worker(&self) -> Result<Box<dyn Executor + Send>> {
+        bail!(
+            "PJRT executors are not Send (thread-local Rc client); \
+             the engine must use the sequential fallback (parallel() == false)"
+        )
+    }
+
+    fn build_local(&self) -> Result<Box<dyn Executor>> {
+        Ok(Box::new(PjrtExecutor::new(&self.manifest, &self.model)?))
+    }
+}
 
 /// Shared PJRT client — one per thread (the client wraps an `Rc`, so it is
 /// deliberately not `Send`; the engine is single-threaded anyway).

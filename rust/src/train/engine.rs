@@ -1,12 +1,32 @@
 //! The synchronous data-parallel training engine — paper Algorithm 1.
 //!
-//! Per step, for every learner: sample the learner's shard minibatch, run
-//! forward+backward (the AOT-compiled HLO via PJRT, or the native reference
-//! executor), `pack()` each layer through the learner's compressor, then
-//! `exchange()` all packets over the configured topology (parameter server
-//! or ring), `unpack()` into the dense mean gradient and apply the central
-//! optimizer. All learners hold identical weights at every step — the
-//! paper's synchronous-SGD setting.
+//! Per step, every learner samples its shard minibatch, runs forward+backward
+//! (its own executor), and `pack()`s each layer through its compressor; the
+//! engine then `exchange()`s all packets over the configured topology
+//! (parameter server or ring), unpacks into the dense mean gradient, and
+//! applies the central optimizer. All learners hold identical weights at
+//! every step — the paper's synchronous-SGD setting.
+//!
+//! **Parallel learner phase.** The per-learner work is embarrassingly
+//! parallel: when the backend's [`ExecutorFactory`] reports `parallel()`,
+//! each learner owns a `Send` executor and the step fans learners out across
+//! `cfg.threads` scoped worker threads. The exchange/reduce stays on the
+//! engine thread and consumes packets in learner-id order, and per-step loss
+//! accounting also sums in learner-id order — so the results are
+//! **bit-identical** to the sequential path for any thread count (the
+//! determinism contract, DESIGN.md §Threading; pinned by
+//! rust/tests/engine_native.rs::parallel_matches_sequential_bitwise).
+//! Backends whose executors cannot cross threads (PJRT's `Rc`-backed client)
+//! fall back to one shared executor driven sequentially, behind the same API.
+//! Workers are scoped per step (spawn+join ≈ 0.1–0.2 ms for 8 threads),
+//! which amortizes against multi-millisecond learner phases; a persistent
+//! pool would shave that constant and is a candidate follow-up if profiles
+//! ever show it mattering.
+//!
+//! **Zero-alloc exchange.** Packet buffers recycle through the compressor
+//! pools, packets live in per-learner slots reused across steps, and the
+//! topology reduces into a persistent [`Reduced`] — the steady-state
+//! exchange/reduce path performs no heap allocation (rust/tests/alloc_free.rs).
 //!
 //! Learners are simulated in-process (DESIGN.md §Substitutions): the
 //! semantics (who computes what on which data, what crosses the wire) are
@@ -16,13 +36,13 @@
 use anyhow::Result;
 
 use super::{eval::test_error, learner::Learner};
-use crate::comm::{topology, Fabric, LinkModel};
-use crate::compress;
+use crate::comm::{topology, Fabric, LinkModel, Reduced};
+use crate::compress::{self, Packet};
 use crate::data::Dataset;
 use crate::metrics::{percentile, CompStat, EpochRecord, RunRecord};
 use crate::models::{LayerKind, Layout};
 use crate::optim::{self, LrSchedule};
-use crate::runtime::Executor;
+use crate::runtime::ExecutorFactory;
 use crate::util::timer::Stopwatch;
 
 /// Everything that defines one training run.
@@ -50,6 +70,10 @@ pub struct TrainConfig {
     /// update (0 = off). Applied *after* exchange so it never interacts with
     /// the compression path.
     pub clip_norm: f32,
+    /// Worker threads for the per-learner phase: 0 = auto (one per hardware
+    /// thread, capped at n_learners), 1 = sequential. Results are
+    /// bit-identical for every value (see module docs).
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -71,6 +95,7 @@ impl Default for TrainConfig {
             divergence_loss: 1e4,
             track_residue: true,
             clip_norm: 0.0,
+            threads: 0,
         }
     }
 }
@@ -81,22 +106,36 @@ impl Default for TrainConfig {
 pub type EpochHook<'a> = dyn FnMut(usize, &dyn compress::Compressor, &[f32]) + 'a;
 
 pub struct Engine<'a> {
-    pub executor: &'a mut dyn Executor,
+    pub factory: &'a dyn ExecutorFactory,
     pub dataset: &'a dyn Dataset,
     pub layout: &'a Layout,
 }
 
 impl<'a> Engine<'a> {
     pub fn new(
-        executor: &'a mut dyn Executor,
+        factory: &'a dyn ExecutorFactory,
         dataset: &'a dyn Dataset,
         layout: &'a Layout,
     ) -> Engine<'a> {
         Engine {
-            executor,
+            factory,
             dataset,
             layout,
         }
+    }
+
+    /// Resolve the worker-thread count for a run: honor `cfg.threads`, cap at
+    /// n_learners, and force 1 when the backend cannot cross threads.
+    fn resolve_threads(&self, cfg: &TrainConfig) -> usize {
+        if !self.factory.parallel() || cfg.n_learners <= 1 {
+            return 1;
+        }
+        let want = if cfg.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            cfg.threads
+        };
+        want.clamp(1, cfg.n_learners)
     }
 
     pub fn run(&mut self, cfg: &TrainConfig, init_params: &[f32]) -> Result<RunRecord> {
@@ -123,6 +162,11 @@ impl<'a> Engine<'a> {
     ) -> Result<(RunRecord, Vec<f32>)> {
         assert!(cfg.n_learners >= 1);
         let layout = self.layout;
+        let dataset = self.dataset;
+        let factory = self.factory;
+        let threads = self.resolve_threads(cfg);
+        let parallel = threads > 1;
+
         let mut params = init_params.to_vec();
         let mut optimizer = optim::build(&cfg.optimizer, params.len(), cfg.momentum)
             .unwrap_or_else(|| panic!("unknown optimizer '{}'", cfg.optimizer));
@@ -130,24 +174,39 @@ impl<'a> Engine<'a> {
             .unwrap_or_else(|| panic!("unknown topology '{}'", cfg.topology));
         let mut fabric = Fabric::new(cfg.link);
 
+        // Evaluation + sequential fallback run on this executor; in parallel
+        // mode every learner additionally owns a worker executor.
+        let mut local = factory.build_local()?;
         let mut learners: Vec<Learner> = (0..cfg.n_learners)
-            .map(|id| {
-                Learner::new(
+            .map(|id| -> Result<Learner> {
+                let exec = if parallel {
+                    Some(factory.build_worker()?)
+                } else {
+                    None
+                };
+                Ok(Learner::new(
                     id,
                     cfg.n_learners,
-                    self.dataset,
+                    dataset,
                     layout,
                     &cfg.compression,
                     cfg.batch_per_learner,
                     cfg.seed,
-                )
+                    exec,
+                ))
             })
+            .collect::<Result<Vec<Learner>>>()?;
+
+        // Per-learner packet slots, reused across steps (no Vec-of-Vec
+        // rebuild; buffers recycle through the compressor pools).
+        let mut slots: Vec<Vec<Packet>> = (0..cfg.n_learners)
+            .map(|_| Vec::with_capacity(layout.num_layers()))
             .collect();
 
         let steps_per_epoch = if cfg.steps_per_epoch > 0 {
             cfg.steps_per_epoch
         } else {
-            (self.dataset.train_len() / (cfg.batch_per_learner * cfg.n_learners)).max(1)
+            (dataset.train_len() / (cfg.batch_per_learner * cfg.n_learners)).max(1)
         };
         let layer_lens: Vec<usize> = layout.layers.iter().map(|l| l.len()).collect();
         let inv_learners = 1.0f32 / cfg.n_learners as f32;
@@ -165,7 +224,7 @@ impl<'a> Engine<'a> {
         };
 
         let mut grad_mean = vec![0.0f32; layout.total];
-        let mut last_dw: Vec<f32> = Vec::new();
+        let mut reduced = Reduced::new(&layer_lens);
 
         'epochs: for epoch in 0..cfg.epochs {
             let sw = Stopwatch::start();
@@ -177,46 +236,66 @@ impl<'a> Engine<'a> {
             let mut comp_all = CompStat::default();
 
             for _step in 0..steps_per_epoch {
-                // 1. every learner: local fwd/bwd + pack
-                let mut per_learner: Vec<Vec<compress::Packet>> =
-                    Vec::with_capacity(cfg.n_learners);
-                for l in learners.iter_mut() {
-                    let out = {
-                        let batch = l.next_batch(self.dataset);
-                        self.executor.step(&params, batch)?
-                    };
-                    loss_sum += out.loss as f64;
+                // 1. every learner: local fwd/bwd + pack, fanned out across
+                // worker threads (or sequentially on the shared executor)
+                if parallel {
+                    let chunk = cfg.n_learners.div_ceil(threads);
+                    let params_ref: &[f32] = &params;
+                    std::thread::scope(|scope| {
+                        let mut handles = Vec::with_capacity(threads);
+                        for (lch, sch) in
+                            learners.chunks_mut(chunk).zip(slots.chunks_mut(chunk))
+                        {
+                            handles.push(scope.spawn(move || -> Result<()> {
+                                for (l, s) in lch.iter_mut().zip(sch.iter_mut()) {
+                                    l.step(params_ref, dataset, layout, s)?;
+                                }
+                                Ok(())
+                            }));
+                        }
+                        for h in handles {
+                            h.join().expect("learner worker panicked")?;
+                        }
+                        Ok::<(), anyhow::Error>(())
+                    })?;
+                } else {
+                    for (l, s) in learners.iter_mut().zip(slots.iter_mut()) {
+                        l.step_with(local.as_mut(), &params, dataset, layout, s)?;
+                    }
+                }
+
+                // 2. accounting on the engine thread, learner-id order (the
+                // f64 loss sum is order-sensitive — this keeps it identical
+                // to the sequential path bit-for-bit)
+                for (l, slot) in learners.iter().zip(slots.iter()) {
+                    loss_sum += l.loss as f64;
                     nloss += 1;
-                    if !out.loss.is_finite() || out.loss as f64 > cfg.divergence_loss {
+                    if !l.loss.is_finite() || l.loss as f64 > cfg.divergence_loss {
                         record.diverged = true;
                     }
-                    if l.id == 0 {
-                        last_dw = out.grads.clone();
-                    }
-                    let packets = l.pack(layout, &out.grads);
-                    for (li, p) in packets.iter().enumerate() {
+                    for (li, p) in slot.iter().enumerate() {
                         match layout.layers[li].kind {
                             LayerKind::Conv => comp_conv.add(p),
                             _ => comp_fc.add(p),
                         }
                         comp_all.add(p);
                     }
-                    per_learner.push(packets);
                 }
 
                 if record.diverged {
                     // record the partial epoch and stop
-                    let (err, tloss) =
-                        test_error(self.executor, self.dataset, &params).unwrap_or((100.0, f64::NAN));
-                    record.epochs.push(self.epoch_record(
-                        epoch, loss_sum, nloss, err, tloss, lr, comp_conv, comp_fc, comp_all,
-                        &learners, &last_dw, cfg, sw.secs(),
+                    let (err, tloss) = test_error(local.as_mut(), dataset, &params)
+                        .unwrap_or((100.0, f64::NAN));
+                    record.epochs.push(epoch_record(
+                        layout, epoch, loss_sum, nloss, err, tloss, lr, comp_conv, comp_fc,
+                        comp_all, &learners, cfg, sw.secs(),
                     ));
                     break 'epochs;
                 }
 
-                // 2. exchange + unpack (dense sum), 3. central update
-                let reduced = topo.exchange(&per_learner, &layer_lens, &mut fabric);
+                // 3. exchange + unpack (dense sum, learner-id order) into the
+                // persistent buffers, 4. central update
+                topo.exchange_into(&slots, &layer_lens, &mut fabric, &mut reduced);
                 for (li, sum) in reduced.sums.iter().enumerate() {
                     let dst = layout.view_mut(li, &mut grad_mean);
                     for (d, &s) in dst.iter_mut().zip(sum.iter()) {
@@ -234,61 +313,61 @@ impl<'a> Engine<'a> {
             }
 
             if let Some(h) = hook.as_deref_mut() {
-                h(epoch, learners[0].compressor.as_ref(), &last_dw);
+                h(epoch, learners[0].compressor.as_ref(), learners[0].grads());
             }
 
-            let (err, tloss) = test_error(self.executor, self.dataset, &params)?;
-            record.epochs.push(self.epoch_record(
-                epoch, loss_sum, nloss, err, tloss, lr, comp_conv, comp_fc, comp_all,
-                &learners, &last_dw, cfg, sw.secs(),
+            let (err, tloss) = test_error(local.as_mut(), dataset, &params)?;
+            record.epochs.push(epoch_record(
+                layout, epoch, loss_sum, nloss, err, tloss, lr, comp_conv, comp_fc, comp_all,
+                &learners, cfg, sw.secs(),
             ));
         }
 
         record.fabric = fabric.stats.clone();
         Ok((record, params))
     }
+}
 
-    #[allow(clippy::too_many_arguments)]
-    fn epoch_record(
-        &self,
-        epoch: usize,
-        loss_sum: f64,
-        nloss: usize,
-        err: f64,
-        tloss: f64,
-        lr: f32,
-        comp_conv: CompStat,
-        comp_fc: CompStat,
-        comp_all: CompStat,
-        learners: &[Learner],
-        last_dw: &[f32],
-        cfg: &TrainConfig,
-        wall: f64,
-    ) -> EpochRecord {
-        let (mut rg_p95, mut dw_p95) = (0.0f32, 0.0f32);
-        if cfg.track_residue && !learners.is_empty() {
-            let c = &learners[0].compressor;
-            for li in 0..self.layout.num_layers() {
-                rg_p95 = rg_p95.max(percentile(c.residue(li), 95.0));
-            }
-            if !last_dw.is_empty() {
-                for li in 0..self.layout.num_layers() {
-                    dw_p95 = dw_p95.max(percentile(self.layout.view(li, last_dw), 95.0));
-                }
+#[allow(clippy::too_many_arguments)]
+fn epoch_record(
+    layout: &Layout,
+    epoch: usize,
+    loss_sum: f64,
+    nloss: usize,
+    err: f64,
+    tloss: f64,
+    lr: f32,
+    comp_conv: CompStat,
+    comp_fc: CompStat,
+    comp_all: CompStat,
+    learners: &[Learner],
+    cfg: &TrainConfig,
+    wall: f64,
+) -> EpochRecord {
+    let (mut rg_p95, mut dw_p95) = (0.0f32, 0.0f32);
+    if cfg.track_residue && !learners.is_empty() {
+        let c = &learners[0].compressor;
+        let last_dw = learners[0].grads();
+        for li in 0..layout.num_layers() {
+            rg_p95 = rg_p95.max(percentile(c.residue(li), 95.0));
+        }
+        if !last_dw.is_empty() {
+            for li in 0..layout.num_layers() {
+                dw_p95 = dw_p95.max(percentile(layout.view(li, last_dw), 95.0));
             }
         }
-        EpochRecord {
-            epoch,
-            train_loss: loss_sum / nloss.max(1) as f64,
-            test_error_pct: err,
-            test_loss: tloss,
-            lr,
-            comp_conv,
-            comp_fc,
-            comp_all,
-            rg_p95,
-            dw_p95,
-            wall_secs: wall,
-        }
+    }
+    EpochRecord {
+        epoch,
+        train_loss: loss_sum / nloss.max(1) as f64,
+        test_error_pct: err,
+        test_loss: tloss,
+        lr,
+        comp_conv,
+        comp_fc,
+        comp_all,
+        rg_p95,
+        dw_p95,
+        wall_secs: wall,
     }
 }

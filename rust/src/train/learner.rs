@@ -1,10 +1,21 @@
 //! Per-learner state: data shard, compressor (with its residual gradients),
-//! and the learner's batch-sampling RNG.
+//! the learner's batch-sampling RNG, reusable batch/gradient buffers, and —
+//! in the parallel engine — the learner's own executor.
+//!
+//! A `Learner` is a self-contained unit of work: `step`/`step_with` draws
+//! the next minibatch, runs forward+backward, and packs every layer into the
+//! caller's packet slots. All mutable state is owned by the learner, so the
+//! engine can fan learners out across `std::thread::scope` workers and still
+//! produce bit-identical results to the sequential loop (the only cross-
+//! learner operations — loss accounting and the packet reduce — happen on
+//! the engine thread in learner-id order; see DESIGN.md §Threading).
+
+use anyhow::Result;
 
 use crate::compress::{self, Compressor, Packet};
-use crate::data::{draw_batch, Dataset, Shard, Split};
+use crate::data::{draw_batch_into, Dataset, Shard, Split};
 use crate::models::Layout;
-use crate::runtime::Batch;
+use crate::runtime::{Batch, Executor};
 use crate::util::rng::Pcg32;
 
 pub struct Learner {
@@ -13,9 +24,20 @@ pub struct Learner {
     pub compressor: Box<dyn Compressor>,
     rng: Pcg32,
     batch: Batch,
+    /// Reusable index buffer for batch sampling (no per-step allocation).
+    idx_buf: Vec<usize>,
+    /// This learner's own executor (parallel engine). `None` = the engine
+    /// drives this learner through its shared local executor (`step_with`).
+    exec: Option<Box<dyn Executor + Send>>,
+    /// Flat gradient from the last `step` (moved out of the executor's
+    /// `StepOut` — never cloned).
+    grads: Vec<f32>,
+    /// Loss from the last `step`.
+    pub loss: f32,
 }
 
 impl Learner {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: usize,
         n_learners: usize,
@@ -24,6 +46,7 @@ impl Learner {
         comp_cfg: &compress::Config,
         batch_size: usize,
         seed: u64,
+        exec: Option<Box<dyn Executor + Send>>,
     ) -> Learner {
         let shard = Shard {
             learner: id,
@@ -51,29 +74,89 @@ impl Learner {
             compressor: compress::build(&cfg, layout),
             rng: Pcg32::new(seed, 0xbea7 + id as u64),
             batch,
+            idx_buf: Vec::with_capacity(batch_size),
+            exec,
+            grads: Vec::new(),
+            loss: 0.0,
         }
     }
 
     /// Sample this learner's next minibatch into its reusable batch buffer.
     pub fn next_batch(&mut self, dataset: &dyn Dataset) -> &Batch {
-        let idx = draw_batch(&mut self.rng, &self.shard, self.batch.batch_size);
+        draw_batch_into(&mut self.rng, &self.shard, self.batch.batch_size, &mut self.idx_buf);
         let y = &mut self.batch.y;
         if self.batch.x_i32.is_empty() {
             dataset.fill(
                 Split::Train,
-                &idx,
+                &self.idx_buf,
                 crate::data::XBuf::F32(&mut self.batch.x_f32),
                 y,
             );
         } else {
             dataset.fill(
                 Split::Train,
-                &idx,
+                &self.idx_buf,
                 crate::data::XBuf::I32(&mut self.batch.x_i32),
                 y,
             );
         }
         &self.batch
+    }
+
+    /// Flat gradient from the last `step` (layout order; empty before the
+    /// first step).
+    pub fn grads(&self) -> &[f32] {
+        &self.grads
+    }
+
+    /// One full learner phase on this learner's **own** executor: draw the
+    /// next minibatch, forward+backward, pack every layer into `slots`.
+    /// Safe to call from a worker thread.
+    pub fn step(
+        &mut self,
+        params: &[f32],
+        dataset: &dyn Dataset,
+        layout: &Layout,
+        slots: &mut Vec<Packet>,
+    ) -> Result<()> {
+        let mut exec = self
+            .exec
+            .take()
+            .expect("learner was built without its own executor; use step_with");
+        let r = self.step_with(exec.as_mut(), params, dataset, layout, slots);
+        self.exec = Some(exec);
+        r
+    }
+
+    /// Same as [`step`](Self::step) but on a caller-provided executor (the
+    /// engine's sequential fallback shares one executor across learners).
+    pub fn step_with(
+        &mut self,
+        exec: &mut dyn Executor,
+        params: &[f32],
+        dataset: &dyn Dataset,
+        layout: &Layout,
+        slots: &mut Vec<Packet>,
+    ) -> Result<()> {
+        self.next_batch(dataset);
+        let out = exec.step(params, &self.batch)?;
+        self.loss = out.loss;
+        self.grads = out.grads;
+        self.pack_into(layout, slots);
+        Ok(())
+    }
+
+    /// Compress the last gradient into `slots` (one packet per layer, layer
+    /// order), recycling the previous round's packet buffers through the
+    /// compressor pool first — steady state allocates nothing.
+    pub fn pack_into(&mut self, layout: &Layout, slots: &mut Vec<Packet>) {
+        for spent in slots.drain(..) {
+            self.compressor.recycle(spent);
+        }
+        for li in 0..layout.num_layers() {
+            let p = self.compressor.pack_layer(li, layout.view(li, &self.grads));
+            slots.push(p);
+        }
     }
 
     /// Compress a flat gradient into per-layer packets (Algorithm 1 pack()).
@@ -90,12 +173,23 @@ mod tests {
     use crate::compress::{Config, Kind};
     use crate::data::synth::GaussianMixture;
     use crate::models::{LayerKind, Layout};
+    use crate::runtime::native::NativeMlp;
+    use crate::runtime::ExecutorFactory;
 
     #[test]
     fn learner_batches_stay_in_shard() {
         let ds = GaussianMixture::new(1, 8, 4, 100, 20, 0.3);
         let layout = Layout::from_specs(&[("w", &[8, 4], LayerKind::Fc)]);
-        let mut l = Learner::new(1, 4, &ds, &layout, &Config::with_kind(Kind::AdaComp), 4, 42);
+        let mut l = Learner::new(
+            1,
+            4,
+            &ds,
+            &layout,
+            &Config::with_kind(Kind::AdaComp),
+            4,
+            42,
+            None,
+        );
         let b = l.next_batch(&ds);
         assert_eq!(b.x_f32.len(), 4 * 8);
         assert_eq!(b.y.len(), 4);
@@ -108,11 +202,60 @@ mod tests {
             ("w1", &[8, 4], LayerKind::Fc),
             ("b1", &[4], LayerKind::Fc),
         ]);
-        let mut l = Learner::new(0, 1, &ds, &layout, &Config::with_kind(Kind::None), 4, 1);
+        let mut l = Learner::new(0, 1, &ds, &layout, &Config::with_kind(Kind::None), 4, 1, None);
         let grads = vec![0.5f32; layout.total];
         let packets = l.pack(&layout, &grads);
         assert_eq!(packets.len(), 2);
         assert_eq!(packets[0].n, 32);
         assert_eq!(packets[1].n, 4);
+    }
+
+    #[test]
+    fn step_fills_slots_and_step_with_matches() {
+        // A learner stepping on its own executor must be bit-identical to
+        // the same learner driven through a shared executor.
+        let ds = GaussianMixture::new(2, 8, 4, 100, 20, 0.3);
+        let exe = NativeMlp::new(&[8, 6, 4], 16);
+        let layout = exe.layout().clone();
+        let params = exe.init_params(5);
+
+        let mut own = Learner::new(
+            0,
+            2,
+            &ds,
+            &layout,
+            &Config::with_kind(Kind::AdaComp),
+            4,
+            9,
+            Some(exe.build_worker().unwrap()),
+        );
+        let mut shared_exec = exe.build_local().unwrap();
+        let mut shared = Learner::new(
+            0,
+            2,
+            &ds,
+            &layout,
+            &Config::with_kind(Kind::AdaComp),
+            4,
+            9,
+            None,
+        );
+
+        let mut slots_a = Vec::new();
+        let mut slots_b = Vec::new();
+        for _ in 0..3 {
+            own.step(&params, &ds, &layout, &mut slots_a).unwrap();
+            shared
+                .step_with(shared_exec.as_mut(), &params, &ds, &layout, &mut slots_b)
+                .unwrap();
+            assert_eq!(own.loss, shared.loss);
+            assert_eq!(slots_a.len(), layout.num_layers());
+            for (a, b) in slots_a.iter().zip(slots_b.iter()) {
+                assert_eq!(a.idx, b.idx);
+                assert_eq!(a.val, b.val);
+                assert_eq!(a.wire_bytes, b.wire_bytes);
+            }
+        }
+        assert_eq!(own.grads(), shared.grads());
     }
 }

@@ -33,12 +33,24 @@ fn base_cfg(kind: Kind, learners: usize) -> TrainConfig {
 
 fn train(kind: Kind, learners: usize, topology: &str) -> adacomp::metrics::RunRecord {
     let ds = GaussianMixture::new(3, 16, 4, 800, 200, 0.6);
-    let mut exe = NativeMlp::new(&[16, 32, 4], 50);
+    let exe = NativeMlp::new(&[16, 32, 4], 50);
     let params = exe.init_params(11);
     let layout = exe.layout().clone();
     let mut cfg = base_cfg(kind, learners);
     cfg.topology = topology.into();
-    let mut engine = Engine::new(&mut exe, &ds, &layout);
+    let mut engine = Engine::new(&exe, &ds, &layout);
+    engine.run(&cfg, &params).expect("run")
+}
+
+/// Same run at an explicit worker-thread count.
+fn train_threads(kind: Kind, learners: usize, threads: usize) -> adacomp::metrics::RunRecord {
+    let ds = GaussianMixture::new(3, 16, 4, 800, 200, 0.6);
+    let exe = NativeMlp::new(&[16, 32, 4], 50);
+    let params = exe.init_params(11);
+    let layout = exe.layout().clone();
+    let mut cfg = base_cfg(kind, learners);
+    cfg.threads = threads;
+    let mut engine = Engine::new(&exe, &ds, &layout);
     engine.run(&cfg, &params).expect("run")
 }
 
@@ -124,15 +136,49 @@ fn deterministic_given_seed() {
 }
 
 #[test]
+fn parallel_matches_sequential_bitwise() {
+    // The engine's determinism contract (DESIGN.md §Threading): the same
+    // TrainConfig + seed must produce bit-identical losses and wire bytes at
+    // every worker-thread count — the parallel fan-out may not perturb the
+    // float reduction order or any learner's private state.
+    for kind in [Kind::AdaComp, Kind::None] {
+        let seq = train_threads(kind, 4, 1);
+        let par = train_threads(kind, 4, 4);
+        assert_eq!(seq.epochs.len(), par.epochs.len(), "{}", kind.name());
+        for (a, b) in seq.epochs.iter().zip(par.epochs.iter()) {
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "{} epoch {}: threads=1 loss {} vs threads=4 loss {}",
+                kind.name(),
+                a.epoch,
+                a.train_loss,
+                b.train_loss
+            );
+            assert_eq!(a.test_error_pct.to_bits(), b.test_error_pct.to_bits());
+        }
+        assert_eq!(seq.fabric.bytes_up, par.fabric.bytes_up, "{}", kind.name());
+        assert_eq!(seq.fabric.bytes_down, par.fabric.bytes_down);
+        assert_eq!(seq.fabric.rounds, par.fabric.rounds);
+    }
+    // oversubscription (threads > learners) must also be identical
+    let seq = train_threads(Kind::AdaComp, 3, 1);
+    let over = train_threads(Kind::AdaComp, 3, 8);
+    assert_eq!(seq.epochs.last().unwrap().train_loss.to_bits(),
+               over.epochs.last().unwrap().train_loss.to_bits());
+    assert_eq!(seq.fabric.bytes_up, over.fabric.bytes_up);
+}
+
+#[test]
 fn adam_optimizer_with_compression() {
     let ds = GaussianMixture::new(3, 16, 4, 800, 200, 0.6);
-    let mut exe = NativeMlp::new(&[16, 32, 4], 50);
+    let exe = NativeMlp::new(&[16, 32, 4], 50);
     let params = exe.init_params(11);
     let layout = exe.layout().clone();
     let mut cfg = base_cfg(Kind::AdaComp, 2);
     cfg.optimizer = "adam".into();
     cfg.lr = LrSchedule::Constant(0.01);
-    let mut engine = Engine::new(&mut exe, &ds, &layout);
+    let mut engine = Engine::new(&exe, &ds, &layout);
     let rec = engine.run(&cfg, &params).expect("run");
     assert!(!rec.diverged);
     assert!(rec.final_test_error() < 20.0, "err {}", rec.final_test_error());
@@ -141,11 +187,11 @@ fn adam_optimizer_with_compression() {
 #[test]
 fn epoch_hook_sees_residues() {
     let ds = GaussianMixture::new(3, 16, 4, 400, 100, 0.6);
-    let mut exe = NativeMlp::new(&[16, 32, 4], 50);
+    let exe = NativeMlp::new(&[16, 32, 4], 50);
     let params = exe.init_params(1);
     let layout = exe.layout().clone();
     let cfg = base_cfg(Kind::AdaComp, 1);
-    let mut engine = Engine::new(&mut exe, &ds, &layout);
+    let mut engine = Engine::new(&exe, &ds, &layout);
     let mut calls = 0usize;
     let mut hook = |_epoch: usize, comp: &dyn adacomp::Compressor, dw: &[f32]| {
         calls += 1;
@@ -164,7 +210,7 @@ fn native_cnn_engine_with_adacomp() {
     use adacomp::data::cifar_like::CifarLike;
     use adacomp::runtime::native_cnn::{ConvStage, NativeCnn};
     let ds = CifarLike::cifar10(5, 320, 80);
-    let mut exe = NativeCnn::new(
+    let exe = NativeCnn::new(
         32,
         32,
         &[ConvStage { cin: 3, cout: 8 }, ConvStage { cin: 8, cout: 8 }],
@@ -184,7 +230,7 @@ fn native_cnn_engine_with_adacomp() {
         compression: Config::with_kind(Kind::AdaComp),
         ..TrainConfig::default()
     };
-    let mut engine = Engine::new(&mut exe, &ds, &layout);
+    let mut engine = Engine::new(&exe, &ds, &layout);
     let rec = engine.run(&cfg, &params).expect("run");
     assert!(!rec.diverged);
     assert!(rec.epochs.len() == 3);

@@ -1,6 +1,9 @@
 //! Integration over the real AOT path: load manifest + HLO artifacts, run
 //! step/eval through PJRT, train a few steps, and exercise the standalone
 //! L1 compression graph. Tests skip gracefully when artifacts are missing.
+//! The whole file needs the `pjrt` cargo feature (hermetic tier-1 builds
+//! compile without the XLA binding — see rust/Cargo.toml).
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 
