@@ -1,0 +1,74 @@
+//! The paper's recurrent scenario, fully offline: char-LSTM on the
+//! Markov-Shakespeare corpus through the hermetic layer-graph backend
+//! (embed -> LSTM x2 -> fc head), AdaComp at the fc/lstm/embed L_T default
+//! of 500 vs the uncompressed baseline — Table 2's "LSTM compresses ~200X
+//! with negligible degradation" claim at CPU-testbed scale.
+//!
+//!   cargo run --release --example char_lstm_native
+//!
+//! No artifacts needed (the workload forces `--backend native`). Flags:
+//! --epochs, --learners, --batch, --seq-len, --train, --test, --threads.
+
+use adacomp::compress::Kind;
+use adacomp::harness::{report, Workload};
+use adacomp::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    // this harness is native-by-construction; let explicit flags win
+    if !argv.iter().any(|a| a == "--backend" || a.starts_with("--backend=")) {
+        argv.extend(["--backend".to_string(), "native".to_string()]);
+    }
+    let args = Args::parse_from(argv, &[]);
+
+    let mut runs = Vec::new();
+    for kind in [Kind::None, Kind::AdaComp] {
+        let mut w = Workload::from_args(&args, "char_lstm")?;
+        w.cfg.compression.kind = kind;
+        if args.get("learners").is_none() {
+            // 2 learners so the fabric carries real recurrent-layer traffic
+            w.cfg.n_learners = 2;
+        }
+        w.cfg.run_name = format!("char-lstm-{}", kind.name());
+        println!(
+            "== {} [{}] | L_T(fc/lstm/embed) {} ==",
+            w.cfg.run_name,
+            w.backend,
+            w.cfg.compression.lt_fc
+        );
+        let rec = w.run()?;
+        println!("{}", report::epoch_line(&rec));
+        runs.push(rec);
+    }
+
+    let mut t = report::Table::new(&[
+        "scheme",
+        "test-err %",
+        "test loss",
+        "rate (wire)",
+        "rate (paper)",
+        "bytes up",
+    ]);
+    for r in &runs {
+        let last = r.epochs.last().expect("at least one epoch");
+        t.row(vec![
+            r.scheme.clone(),
+            format!("{:.2}", r.final_test_error()),
+            format!("{:.3}", last.test_loss),
+            format!("{:.1}x", r.mean_rate_wire()),
+            format!("{:.1}x", r.mean_rate_paper()),
+            format!("{}", r.fabric.bytes_up),
+        ]);
+    }
+    println!();
+    t.print();
+    println!(
+        "\npaper context: Table 2 reports ~200X effective compression on\n\
+         fully-connected/recurrent layers at L_T=500 with negligible\n\
+         accuracy loss; the paper-accounting rate above is the comparable\n\
+         number at this scaled size."
+    );
+    let (j, c) = report::save_runs("char_lstm_native", &runs)?;
+    println!("saved {j} and {c}");
+    Ok(())
+}

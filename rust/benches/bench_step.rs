@@ -6,7 +6,9 @@
 //! timings — and emits machine-readable `BENCH_engine.json` (steps/sec,
 //! pack-ns, exchange-ns) so future PRs have a perf trajectory to regress
 //! against. The parallel and sequential runs are asserted bit-identical
-//! (the engine's determinism contract).
+//! (the engine's determinism contract). A char-LSTM row (the paper's
+//! recurrent workload on the native layer-graph backend) rides along under
+//! the `char_lstm` key.
 //!
 //! With `--features pjrt` it additionally reports the per-model Algorithm-1
 //! breakdown over the AOT artifacts (skips models that are missing).
@@ -16,6 +18,7 @@
 use adacomp::comm::{topology, Fabric, LinkModel};
 use adacomp::compress::{self, Config, Kind, Packet};
 use adacomp::data::synth::GaussianMixture;
+use adacomp::models::Layout;
 use adacomp::optim::LrSchedule;
 use adacomp::runtime::native::NativeMlp;
 use adacomp::train::{Engine, TrainConfig};
@@ -60,21 +63,15 @@ fn run_engine(learners: usize, threads: usize) -> anyhow::Result<(f64, u64)> {
     Ok((wall, rec.epochs.last().unwrap().train_loss.to_bits()))
 }
 
-/// Isolated hot-path timings at one learner count: mean pack ns (per
-/// learner·step, all layers) and mean steady-state exchange_into ns.
-fn hot_path(learners: usize) -> (f64, f64) {
-    let exe = NativeMlp::new(DIMS, 64);
-    let layout = exe.layout().clone();
+/// Isolated hot-path timings for one (layout, compression, learner count):
+/// mean pack ns (per learner·step, all layers) and mean steady-state
+/// exchange_into ns. Shared by the MLP sweep and the char-LSTM row so both
+/// BENCH_engine.json entries measure the same protocol.
+fn hot_path(layout: &Layout, learners: usize, comp_cfg: &Config) -> (f64, f64) {
     let lens: Vec<usize> = layout.layers.iter().map(|l| l.len()).collect();
 
     // pack: one compressor over a fixed gradient, recycling its packets
-    let mut comp = compress::build(
-        &Config {
-            lt_override: 50,
-            ..Config::with_kind(Kind::AdaComp)
-        },
-        &layout,
-    );
+    let mut comp = compress::build(comp_cfg, layout);
     let mut rng = Pcg32::seeded(11);
     let dw = rng.normal_vec(layout.total, 0.1);
     let mut slot: Vec<Packet> = Vec::with_capacity(lens.len());
@@ -96,11 +93,10 @@ fn hot_path(learners: usize) -> (f64, f64) {
         .map(|l| {
             let mut c = compress::build(
                 &Config {
-                    lt_override: 50,
                     seed: l as u64,
-                    ..Config::with_kind(Kind::AdaComp)
+                    ..comp_cfg.clone()
                 },
-                &layout,
+                layout,
             );
             let mut rng = Pcg32::seeded(100 + l as u64);
             (0..lens.len())
@@ -133,12 +129,17 @@ fn engine_sweep() -> anyhow::Result<()> {
         "learners", "seq-wall", "par-wall", "speedup", "bit-eq", "steps/s", "pack", "exchange"
     );
 
+    let mlp_layout = NativeMlp::new(DIMS, 64).layout().clone();
+    let mlp_comp = Config {
+        lt_override: 50,
+        ..Config::with_kind(Kind::AdaComp)
+    };
     let mut rows: Vec<Json> = Vec::new();
     for learners in [1usize, 4, 16] {
         let (seq_wall, seq_bits) = run_engine(learners, 1)?;
         let (par_wall, par_bits) = run_engine(learners, 0)?;
         let bit_eq = seq_bits == par_bits;
-        let (pack_ns, ex_ns) = hot_path(learners);
+        let (pack_ns, ex_ns) = hot_path(&mlp_layout, learners, &mlp_comp);
         let steps_per_sec = STEPS as f64 / par_wall;
         println!(
             "{:<9} {:>9.3}s {:>11.3}s {:>11.2}x {:>9} {:>12.1} {:>12} {:>12}",
@@ -177,10 +178,86 @@ fn engine_sweep() -> anyhow::Result<()> {
             ]),
         ),
         ("engine", json::arr(rows)),
+        ("char_lstm", char_lstm_row()?),
     ]);
     std::fs::write("BENCH_engine.json", doc.to_string())?;
-    println!("\nwrote BENCH_engine.json (steps/sec, pack-ns, exchange-ns per learner count)");
+    println!("\nwrote BENCH_engine.json (steps/sec, pack-ns, exchange-ns; MLP sweep + char_lstm row)");
     Ok(())
+}
+
+/// The paper's recurrent workload on the native layer-graph backend:
+/// embed -> LSTM -> fc over Markov-Shakespeare, AdaComp at the fc/lstm/embed
+/// L_T default of 500. One row: steps/sec plus isolated pack/exchange ns.
+fn char_lstm_row() -> anyhow::Result<Json> {
+    use adacomp::data::shakespeare::Shakespeare;
+    use adacomp::runtime::native_lstm::NativeCharLstm;
+
+    const LEARNERS: usize = 4;
+    const LSTM_BATCH: usize = 8;
+    const LSTM_STEPS: usize = 10;
+    const SEQ_LEN: usize = 32;
+
+    let ds = Shakespeare::new(17, 60_000, SEQ_LEN, 1024, 64);
+    let exe = NativeCharLstm::new(67, 32, &[64], 16)?;
+    let params = exe.init_params(3);
+    let layout = exe.layout().clone();
+    let cfg = TrainConfig {
+        run_name: "bench-char-lstm".into(),
+        model_name: "char_lstm".into(),
+        backend: "native".into(),
+        n_learners: LEARNERS,
+        batch_per_learner: LSTM_BATCH,
+        epochs: 1,
+        steps_per_epoch: LSTM_STEPS,
+        lr: LrSchedule::Constant(2e-3),
+        optimizer: "adam".into(),
+        momentum: 0.0,
+        compression: Config::with_kind(Kind::AdaComp),
+        seed: 29,
+        threads: 1,
+        ..TrainConfig::default()
+    };
+    let sw = Stopwatch::start();
+    let mut engine = Engine::new(&exe, &ds, &layout);
+    let rec = engine.run(&cfg, &params)?;
+    let seq_wall = sw.secs();
+
+    let mut par_cfg = cfg.clone();
+    par_cfg.threads = 0;
+    let sw = Stopwatch::start();
+    let mut engine = Engine::new(&exe, &ds, &layout);
+    let par_rec = engine.run(&par_cfg, &params)?;
+    let par_wall = sw.secs();
+    let bit_eq = rec.epochs.last().unwrap().train_loss.to_bits()
+        == par_rec.epochs.last().unwrap().train_loss.to_bits();
+    assert!(bit_eq, "char-lstm threads=0 and threads=1 must be bit-identical");
+
+    // isolated hot path on the char-lstm layout — same protocol as the MLP
+    // sweep, at the fc/lstm/embed L_T default of 500
+    let (pack_ns, ex_ns) = hot_path(&layout, LEARNERS, &Config::with_kind(Kind::AdaComp));
+    let steps_per_sec = LSTM_STEPS as f64 / par_wall;
+    println!(
+        "\n# char-lstm ({LEARNERS} learners x batch {LSTM_BATCH}, seq {SEQ_LEN}, adacomp lt=500)"
+    );
+    println!(
+        "seq {seq_wall:.3}s  par {par_wall:.3}s  speedup {:.2}x  {steps_per_sec:.1} steps/s  pack {}  exchange {}",
+        seq_wall / par_wall,
+        fmt_ns(pack_ns),
+        fmt_ns(ex_ns)
+    );
+    Ok(json::obj(vec![
+        ("model", json::s("native_char_lstm")),
+        ("learners", json::num(LEARNERS as f64)),
+        ("batch_per_learner", json::num(LSTM_BATCH as f64)),
+        ("seq_len", json::num(SEQ_LEN as f64)),
+        ("steps", json::num(LSTM_STEPS as f64)),
+        ("seq_wall_secs", json::num(seq_wall)),
+        ("par_wall_secs", json::num(par_wall)),
+        ("steps_per_sec", json::num(steps_per_sec)),
+        ("pack_ns", json::num(pack_ns)),
+        ("exchange_ns", json::num(ex_ns)),
+        ("bit_identical", Json::Bool(bit_eq)),
+    ]))
 }
 
 #[cfg(feature = "pjrt")]

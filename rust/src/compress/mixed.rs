@@ -89,6 +89,43 @@ mod tests {
     }
 
     #[test]
+    fn lt_defaults_cover_all_kinds() {
+        // Paper defaults per layer kind: conv 50, fc/lstm 500, and embed
+        // documented to ride with fc/lstm at 500. Checked at both places
+        // the default lives (Layout construction and Config::lt_for) plus
+        // per-kind routing through Mixed.
+        let layout = Layout::from_specs(&[
+            ("conv_w", &[3, 3, 2, 4], LayerKind::Conv),
+            ("fc_w", &[10, 10], LayerKind::Fc),
+            ("lstm_wx", &[10, 40], LayerKind::Lstm),
+            ("embed", &[25, 4], LayerKind::Embed),
+        ]);
+        let want = [50usize, 500, 500, 500];
+        let cfg = Config::default();
+        for (l, &w) in layout.layers.iter().zip(want.iter()) {
+            assert_eq!(l.lt_default, w, "layout default for {}", l.name);
+            assert_eq!(cfg.lt_for(l.kind), w, "config default for {}", l.name);
+        }
+        // Mixed routes conv to the conv-side scheme, every other kind
+        // (fc, lstm, embed) to the other side.
+        let mut m = Mixed::new(
+            &Config::with_kind(Kind::None),
+            &Config::with_kind(Kind::Dryden),
+            &layout,
+        );
+        let mut rng = Pcg32::seeded(3);
+        for (li, l) in layout.layers.iter().enumerate() {
+            let dw = rng.normal_vec(l.len(), 1.0);
+            let p = m.pack_layer(li, &dw);
+            if l.kind == LayerKind::Conv {
+                assert!(p.is_dense(), "conv layer {} should be dense", l.name);
+            } else {
+                assert!(!p.is_dense(), "{} should route to top-k side", l.name);
+            }
+        }
+    }
+
+    #[test]
     fn residues_tracked_per_side() {
         let layout = test_layout();
         let mut m = Mixed::new(

@@ -252,14 +252,21 @@ impl Config {
         }
     }
 
-    /// Effective L_T for a layer kind.
+    /// Effective L_T for a layer kind. Paper defaults: conv 50, fc/lstm 500
+    /// (Table 1). `Embed` is documented to share the fc/lstm default of 500:
+    /// embedding gradients are row-sparse like fc/lstm gradients (only the
+    /// minibatch's token rows are nonzero), so the fine conv bin length
+    /// would waste header bytes without improving selection. Pinned by
+    /// `mixed::tests::lt_defaults_cover_all_kinds`.
     pub fn lt_for(&self, kind: crate::models::LayerKind) -> usize {
         if self.lt_override > 0 {
             return self.lt_override;
         }
         match kind {
             crate::models::LayerKind::Conv => self.lt_conv,
-            _ => self.lt_fc,
+            crate::models::LayerKind::Fc
+            | crate::models::LayerKind::Lstm
+            | crate::models::LayerKind::Embed => self.lt_fc,
         }
     }
 }

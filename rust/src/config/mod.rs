@@ -17,7 +17,7 @@ use crate::util::json::{self, Json};
 pub fn from_json(v: &Json) -> Result<TrainConfig> {
     let obj = v.as_obj().context("experiment spec must be an object")?;
     const KNOWN: &[&str] = &[
-        "name", "model", "learners", "batch_per_learner", "epochs",
+        "name", "model", "backend", "learners", "batch_per_learner", "epochs",
         "steps_per_epoch", "lr", "lr_schedule", "optimizer", "momentum",
         "topology", "seed", "clip_norm", "divergence_loss", "compression",
         "link", "threads",
@@ -40,6 +40,12 @@ pub fn from_json(v: &Json) -> Result<TrainConfig> {
         .as_str()
         .map(|s| s.to_string())
         .unwrap_or_else(|| cfg.model_name.clone());
+    if let Some(b) = v.get("backend").as_str() {
+        match b {
+            "native" | "pjrt" | "auto" => cfg.backend = b.to_string(),
+            other => bail!("unknown backend '{other}' (native | pjrt | auto)"),
+        }
+    }
     if let Some(n) = v.get("learners").as_usize() {
         cfg.n_learners = n.max(1);
     }
@@ -209,6 +215,7 @@ pub fn to_json(cfg: &TrainConfig) -> Json {
     json::obj(vec![
         ("name", json::s(&cfg.run_name)),
         ("model", json::s(&cfg.model_name)),
+        ("backend", json::s(&cfg.backend)),
         ("learners", json::num(cfg.n_learners as f64)),
         ("batch_per_learner", json::num(cfg.batch_per_learner as f64)),
         ("epochs", json::num(cfg.epochs as f64)),
@@ -259,6 +266,17 @@ mod tests {
         assert_eq!(back.n_learners, cfg.n_learners);
         assert_eq!(back.compression.kind, cfg.compression.kind);
         assert_eq!(back.clip_norm, cfg.clip_norm);
+    }
+
+    #[test]
+    fn backend_key_roundtrips_and_validates() {
+        let v = Json::from_str_slice(r#"{"model": "char_lstm", "backend": "native"}"#).unwrap();
+        let cfg = from_json(&v).unwrap();
+        assert_eq!(cfg.backend, "native");
+        let back = from_json(&to_json(&cfg)).unwrap();
+        assert_eq!(back.backend, "native");
+        let bad = Json::from_str_slice(r#"{"model": "m", "backend": "tpu"}"#).unwrap();
+        assert!(from_json(&bad).is_err());
     }
 
     #[test]

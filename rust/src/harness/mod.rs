@@ -15,7 +15,7 @@ use crate::data::{
     cifar_like::CifarLike, fbank_like::FbankLike, mnist_gen::MnistGen,
     shakespeare::Shakespeare, Dataset,
 };
-use crate::models::Manifest;
+use crate::models::{Layout, Manifest, ModelMeta};
 use crate::optim::LrSchedule;
 use crate::runtime::{Executor, ExecutorFactory};
 use crate::train::TrainConfig;
@@ -156,30 +156,282 @@ pub fn dataset_for(model: &str, seed: u64, train: usize, test: usize, seq_len: u
     })
 }
 
+/// Models with a hermetic layer-graph builder (`runtime::net`) — trainable
+/// with no artifacts and no PJRT, via `--backend native` (or `auto` when
+/// the artifacts/pjrt path is unavailable).
+///
+/// Registering a model means updating all three of: this list,
+/// [`native_factory`], and [`native_spec`] (the
+/// `native_specs_build_for_all_registered_models` test pins list → builder
+/// agreement).
+pub fn native_models() -> &'static [&'static str] {
+    &["mnist_dnn", "mnist_cnn", "cifar_cnn", "bn50_dnn_s", "char_lstm"]
+}
+
+/// A hermetic native workload spec: the executor factory plus everything
+/// the harness needs to wire a run without an artifacts manifest.
+pub struct NativeSpec {
+    pub factory: Box<dyn ExecutorFactory>,
+    pub layout: Layout,
+    /// Deterministic initial parameters (the expensive part — only built
+    /// here, not on the per-run [`Workload::factory`] path).
+    pub init: Vec<f32>,
+    /// Default sequence length (0 for non-sequence models).
+    pub seq_len: usize,
+    /// Per-sample input/label element counts at the default seq_len; for
+    /// sequence models both scale with the chosen `--seq-len`.
+    pub x_elems: usize,
+    pub y_elems: usize,
+    pub num_classes: usize,
+    pub x_is_int: bool,
+}
+
+const MNIST_DNN_DIMS: &[usize] = &[784, 300, 100, 10];
+const BN50_S_DIMS: &[usize] = &[440, 512, 512, 512, 512, 512, 1500];
+
+/// Executor factory only — cheap (no init-parameter generation); the
+/// per-run [`Workload::factory`] path uses this.
+pub fn native_factory(model: &str, eval_batch: usize) -> Result<Box<dyn ExecutorFactory>> {
+    use crate::runtime::native::NativeMlp;
+    use crate::runtime::native_cnn::NativeCnn;
+    use crate::runtime::native_lstm::NativeCharLstm;
+    let f: Box<dyn ExecutorFactory> = match model {
+        "mnist_dnn" => Box::new(NativeMlp::new(MNIST_DNN_DIMS, eval_batch)),
+        "bn50_dnn_s" => Box::new(NativeMlp::new(BN50_S_DIMS, eval_batch)),
+        "mnist_cnn" => Box::new(mnist_cnn_model(eval_batch)?),
+        "cifar_cnn" => Box::new(NativeCnn::cifar_quick(eval_batch)),
+        "char_lstm" => Box::new(NativeCharLstm::scaled(eval_batch)),
+        other => bail!(
+            "no native backend for model '{other}' (native models: {})",
+            native_models().join(", ")
+        ),
+    };
+    Ok(f)
+}
+
+/// MNIST-CNN family: 2 conv stages + fc head on 28x28x1.
+fn mnist_cnn_model(eval_batch: usize) -> Result<crate::runtime::native_cnn::NativeCnn> {
+    use crate::runtime::native_cnn::{ConvStage, NativeCnn};
+    NativeCnn::new(
+        28,
+        28,
+        &[ConvStage { cin: 1, cout: 8 }, ConvStage { cin: 8, cout: 16 }],
+        10,
+        eval_batch,
+    )
+}
+
+/// Build the full hermetic spec for a model (factory + layout +
+/// deterministic init + dataset-facing metadata).
+pub fn native_spec(model: &str, seed: u64, eval_batch: usize) -> Result<NativeSpec> {
+    use crate::runtime::native::NativeMlp;
+    use crate::runtime::native_cnn::NativeCnn;
+    use crate::runtime::native_lstm::NativeCharLstm;
+    Ok(match model {
+        // paper MNIST-DNN 784-300-100-10 (python build_mnist_dnn)
+        "mnist_dnn" => {
+            let m = NativeMlp::new(MNIST_DNN_DIMS, eval_batch);
+            let (layout, init) = (m.layout().clone(), m.init_params(seed));
+            NativeSpec {
+                factory: Box::new(m),
+                layout,
+                init,
+                seq_len: 0,
+                x_elems: 784,
+                y_elems: 1,
+                num_classes: 10,
+                x_is_int: false,
+            }
+        }
+        // scaled BN50 DNN 440-512x4-1500 (python build_bn50_dnn_s)
+        "bn50_dnn_s" => {
+            let m = NativeMlp::new(BN50_S_DIMS, eval_batch);
+            let (layout, init) = (m.layout().clone(), m.init_params(seed));
+            NativeSpec {
+                factory: Box::new(m),
+                layout,
+                init,
+                seq_len: 0,
+                x_elems: 440,
+                y_elems: 1,
+                num_classes: 1500,
+                x_is_int: false,
+            }
+        }
+        "mnist_cnn" => {
+            let m = mnist_cnn_model(eval_batch)?;
+            let (layout, init) = (m.layout().clone(), m.init_params(seed));
+            NativeSpec {
+                factory: Box::new(m),
+                layout,
+                init,
+                seq_len: 0,
+                x_elems: 28 * 28, // 28x28x1
+                y_elems: 1,
+                num_classes: 10,
+                x_is_int: false,
+            }
+        }
+        // CIFAR10-CNN (Caffe-quick family): 3 conv stages + fc on 32x32x3
+        "cifar_cnn" => {
+            let m = NativeCnn::cifar_quick(eval_batch);
+            let (layout, init) = (m.layout().clone(), m.init_params(seed));
+            NativeSpec {
+                factory: Box::new(m),
+                layout,
+                init,
+                seq_len: 0,
+                x_elems: 32 * 32 * 3,
+                y_elems: 1,
+                num_classes: 10,
+                x_is_int: false,
+            }
+        }
+        // paper Shakespeare char-RNN, scaled: embed 32 -> LSTM 64x2 -> fc
+        "char_lstm" => {
+            let m = NativeCharLstm::scaled(eval_batch);
+            let (layout, init) = (m.layout().clone(), m.init_params(seed));
+            NativeSpec {
+                factory: Box::new(m),
+                layout,
+                init,
+                seq_len: 50,
+                x_elems: 50,
+                y_elems: 50,
+                num_classes: crate::data::shakespeare::VOCAB,
+                x_is_int: true,
+            }
+        }
+        other => bail!(
+            "no native backend for model '{other}' (native models: {})",
+            native_models().join(", ")
+        ),
+    })
+}
+
 /// A fully wired workload: dataset + executor + initial params + config.
 pub struct Workload {
+    /// Real artifacts manifest (pjrt backend) or a synthetic single-model
+    /// manifest describing the native spec — either way,
+    /// `manifest.model(&self.model)` resolves.
     pub manifest: Manifest,
     pub model: String,
+    /// Resolved compute backend: "native" or "pjrt".
+    pub backend: String,
     pub dataset: Box<dyn Dataset>,
     pub init_params: Vec<f32>,
     pub cfg: TrainConfig,
+    eval_batch: usize,
 }
 
 impl Workload {
-    /// Build from CLI args: common flags are --model --epochs --learners
-    /// --batch --train --test --scheme --lt --lt-conv --lt-fc --optimizer
-    /// --lr --topology --seed --artifacts.
+    /// Build from CLI args: common flags are --model --backend --epochs
+    /// --learners --batch --train --test --scheme --lt --lt-conv --lt-fc
+    /// --optimizer --lr --topology --seed --seq-len --artifacts.
     pub fn from_args(args: &Args, default_model: &str) -> Result<Workload> {
+        Workload::from_args_with_backend(args, default_model, None)
+    }
+
+    /// Like [`from_args`](Self::from_args) but with the backend forced by
+    /// the caller (a config-JSON `backend` key overrides CLI `--backend`).
+    pub fn from_args_with_backend(
+        args: &Args,
+        default_model: &str,
+        backend_override: Option<&str>,
+    ) -> Result<Workload> {
         let model = args.str_or("model", default_model);
         let dir = args.str_or("artifacts", default_artifacts_dir());
-        let manifest = Manifest::load(&dir)?;
-        let meta = manifest.model(&model)?.clone();
         let d = defaults_for(&model);
 
         let train = args.usize_or("train", d.train);
         let test = args.usize_or("test", d.test);
         let seed = args.u64_or("seed", 17);
-        let dataset = dataset_for(&model, seed ^ 0xda7a, train, test, meta.seq_len)?;
+        let eval_batch = d.batch.min(test.max(1)).max(1);
+
+        // Resolve the compute backend. An explicit request wins; "auto"
+        // prefers the AOT artifacts when both they and the pjrt feature are
+        // available, otherwise falls back to the hermetic native builders.
+        // The fallback only covers *absent* artifacts — a manifest that
+        // exists but fails to load is a real error and must surface.
+        let backend_req = match backend_override {
+            Some(b) => b.to_string(),
+            None => args.str_or("backend", "auto"),
+        };
+        let manifest_present = std::path::Path::new(&dir).join("manifest.json").exists();
+        let (manifest, backend): (Option<Manifest>, &str) = match backend_req.as_str() {
+            "native" => (None, "native"),
+            "pjrt" => (Some(Manifest::load(&dir)?), "pjrt"),
+            "auto" => {
+                let native_ok = native_models().contains(&model.as_str());
+                if cfg!(feature = "pjrt") && manifest_present {
+                    let m = Manifest::load(&dir)?;
+                    if m.model(&model).is_ok() || !native_ok {
+                        (Some(m), "pjrt")
+                    } else {
+                        // a (possibly stale) manifest that lacks this model
+                        // still falls back to the hermetic builder
+                        (None, "native")
+                    }
+                } else if native_ok {
+                    (None, "native")
+                } else {
+                    // keep the legacy artifact-centric error path for models
+                    // that only exist as AOT exports
+                    (Some(Manifest::load(&dir)?), "pjrt")
+                }
+            }
+            other => bail!("unknown --backend '{other}' (native | pjrt | auto)"),
+        };
+
+        let (manifest, init_native, seq_len) = match (manifest, backend) {
+            (Some(m), _) => {
+                let seq = m.model(&model)?.seq_len;
+                // the AOT executable is compiled for a fixed seq_len — an
+                // explicit different request cannot be honored
+                let req = args.usize_or("seq-len", seq);
+                if req != seq {
+                    bail!(
+                        "--seq-len {req} conflicts with the AOT artifact for '{model}' \
+                         (exported at seq_len {seq}); re-export the artifacts or use \
+                         --backend native"
+                    );
+                }
+                (m, None, seq)
+            }
+            (None, _) => {
+                let spec = native_spec(&model, seed, eval_batch)?;
+                let seq_len = args.usize_or("seq-len", spec.seq_len);
+                // sequence models scale x/y per-sample elems with seq_len
+                let (x_elems, y_elems) = if spec.seq_len > 0 {
+                    (seq_len, seq_len)
+                } else {
+                    (spec.x_elems, spec.y_elems)
+                };
+                let meta = ModelMeta {
+                    name: model.clone(),
+                    layout: spec.layout,
+                    step_hlo: String::new(),
+                    eval_hlo: String::new(),
+                    init_bin: String::new(),
+                    batch: d.batch,
+                    seq_len,
+                    x_shape: vec![x_elems],
+                    x_is_int: spec.x_is_int,
+                    y_shape: vec![y_elems],
+                    num_classes: spec.num_classes,
+                };
+                (
+                    Manifest {
+                        dir: "<native>".into(),
+                        models: vec![meta],
+                    },
+                    Some(spec.init),
+                    seq_len,
+                )
+            }
+        };
+
+        let dataset = dataset_for(&model, seed ^ 0xda7a, train, test, seq_len)?;
 
         let mut comp = compress::Config::default();
         if let Some(s) = args.get("scheme") {
@@ -205,6 +457,7 @@ impl Workload {
         let cfg = TrainConfig {
             run_name: args.str_or("name", &format!("{model}-{}", comp.kind.name())),
             model_name: model.clone(),
+            backend: backend.to_string(),
             n_learners: learners,
             batch_per_learner: batch,
             epochs: args.usize_or("epochs", d.epochs),
@@ -222,7 +475,13 @@ impl Workload {
             threads: args.usize_or("threads", 0),
         };
 
-        let mut init_params = manifest.load_init(&meta)?;
+        let mut init_params = match init_native {
+            Some(p) => p,
+            None => {
+                let meta = manifest.model(&model)?.clone();
+                manifest.load_init(&meta)?
+            }
+        };
         // --resume CKPT: continue from a saved checkpoint (same model).
         if let Some(ckpt_path) = args.get("resume") {
             let ck = crate::train::checkpoint::Checkpoint::load(std::path::Path::new(ckpt_path))?;
@@ -242,17 +501,25 @@ impl Workload {
         Ok(Workload {
             manifest,
             model,
+            backend: backend.to_string(),
             dataset,
             init_params,
             cfg,
+            eval_batch,
         })
     }
 
-    /// Executor factory for this workload's backend (PJRT over the AOT
-    /// artifacts). Without the `pjrt` cargo feature this errors at runtime —
-    /// hermetic tier-1 builds carry the harness but not the XLA binding.
-    #[cfg(feature = "pjrt")]
+    /// Executor factory for this workload's resolved backend: the hermetic
+    /// native layer-graph builders, or PJRT over the AOT artifacts.
     pub fn factory(&self) -> Result<Box<dyn ExecutorFactory>> {
+        if self.backend == "native" {
+            return native_factory(&self.model, self.eval_batch);
+        }
+        self.pjrt_factory()
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn pjrt_factory(&self) -> Result<Box<dyn ExecutorFactory>> {
         Ok(Box::new(crate::runtime::pjrt::PjrtFactory::new(
             self.manifest.clone(),
             self.model.clone(),
@@ -261,11 +528,12 @@ impl Workload {
 
     /// See the `pjrt`-enabled variant: this build has no PJRT backend.
     #[cfg(not(feature = "pjrt"))]
-    pub fn factory(&self) -> Result<Box<dyn ExecutorFactory>> {
+    fn pjrt_factory(&self) -> Result<Box<dyn ExecutorFactory>> {
         anyhow::bail!(
             "model '{}' needs the PJRT backend, but this binary was built without \
              the `pjrt` feature — add the `xla` dependency and rebuild with \
-             `--features pjrt` (see rust/Cargo.toml and DESIGN.md §Interchange)",
+             `--features pjrt`, or use `--backend native` for a hermetic model \
+             (see rust/Cargo.toml and DESIGN.md §Interchange)",
             self.model
         )
     }
@@ -339,5 +607,68 @@ mod tests {
     #[test]
     fn unknown_model_dataset_errors() {
         assert!(dataset_for("nope", 1, 10, 5, 0).is_err());
+    }
+
+    #[test]
+    fn native_specs_build_for_all_registered_models() {
+        for m in native_models() {
+            let spec = native_spec(m, 1, 8).unwrap();
+            assert_eq!(spec.init.len(), spec.layout.total, "{m}");
+            assert!(spec.factory.parallel(), "{m}");
+            assert!(spec.factory.build_worker().is_ok(), "{m}");
+            assert!(spec.num_classes > 1, "{m}");
+            // the cheap factory-only path must agree on the backend name
+            let f = native_factory(m, 8).unwrap();
+            assert_eq!(f.backend(), spec.factory.backend(), "{m}");
+        }
+        assert!(native_spec("transformer", 1, 8).is_err());
+        assert!(native_factory("transformer", 8).is_err());
+    }
+
+    #[test]
+    fn native_workload_from_args_is_hermetic() {
+        // no artifacts anywhere — the native backend must still wire a full
+        // workload (synthetic manifest included) and train end-to-end.
+        let args = Args::parse_from(
+            [
+                "--model",
+                "char_lstm",
+                "--backend",
+                "native",
+                "--train",
+                "60",
+                "--test",
+                "20",
+                "--epochs",
+                "1",
+                "--steps",
+                "2",
+                "--seq-len",
+                "12",
+                "--batch",
+                "4",
+            ]
+            .map(String::from),
+            &[],
+        );
+        let w = Workload::from_args(&args, "char_lstm").unwrap();
+        assert_eq!(w.backend, "native");
+        assert_eq!(w.cfg.backend, "native");
+        let meta = w.manifest.model("char_lstm").unwrap();
+        assert!(meta.x_is_int);
+        assert_eq!(meta.seq_len, 12);
+        assert_eq!(w.init_params.len(), meta.layout.total);
+        let rec = w.run().unwrap();
+        assert_eq!(rec.epochs.len(), 1);
+        assert!(rec.epochs[0].train_loss.is_finite());
+    }
+
+    #[test]
+    fn unknown_backend_rejected() {
+        let args = Args::parse_from(
+            ["--model", "char_lstm", "--backend", "tpu"].map(String::from),
+            &[],
+        );
+        assert!(Workload::from_args(&args, "char_lstm").is_err());
     }
 }

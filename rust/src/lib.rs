@@ -12,7 +12,9 @@
 //! Python never runs on the training path: `make artifacts` lowers L1+L2 to
 //! HLO text once; the rust binary loads them via PJRT (`runtime::pjrt`,
 //! behind the `pjrt` cargo feature — hermetic builds use the native
-//! executors and stay artifact-free).
+//! layer-graph executors (`runtime::net`: composable fc/relu/conv/pool/
+//! embedding/LSTM layers over the shared flat `Layout`) and stay
+//! artifact-free, including the paper's recurrent char-LSTM workload).
 //!
 //! The multi-learner engine runs the per-learner phase in parallel
 //! (`runtime::ExecutorFactory` + `train::Engine`) with a zero-allocation

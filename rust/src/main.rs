@@ -7,6 +7,7 @@
 //!
 //! Examples:
 //!   adacomp train --model cifar_cnn --scheme adacomp --learners 8
+//!   adacomp train --model char_lstm --backend native --scheme adacomp
 //!   adacomp train --model char_lstm --scheme dryden --topk 0.003
 //!   adacomp inspect
 //!
@@ -52,8 +53,12 @@ fn cmd_train(args: &Args) -> i32 {
     if let Some(path) = args.get("config") {
         match adacomp::config::load(path) {
             Ok(cfg) => {
-                if cfg.model_name != w.model {
-                    match Workload::from_args(args, &cfg.model_name.clone()) {
+                // rebuild the workload when the spec changes the model or
+                // pins a backend different from what the CLI resolved
+                let pinned = cfg.backend != "auto" && cfg.backend != w.backend;
+                if cfg.model_name != w.model || pinned {
+                    let ov = pinned.then_some(cfg.backend.as_str());
+                    match Workload::from_args_with_backend(args, &cfg.model_name.clone(), ov) {
                         Ok(w2) => w = w2,
                         Err(e) => {
                             eprintln!("error: {e:#}");
@@ -62,6 +67,9 @@ fn cmd_train(args: &Args) -> i32 {
                     }
                 }
                 w.cfg = cfg;
+                // the workload's backend is resolved at build time; keep
+                // the record truthful even if the spec said "auto"
+                w.cfg.backend = w.backend.clone();
             }
             Err(e) => {
                 eprintln!("error loading {path}: {e:#}");
@@ -70,8 +78,9 @@ fn cmd_train(args: &Args) -> i32 {
         }
     }
     println!(
-        "training {} | scheme {} | {} learners x batch {} | {} epochs | topology {}",
+        "training {} [{}] | scheme {} | {} learners x batch {} | {} epochs | topology {}",
         w.model,
+        w.backend,
         w.cfg.compression.kind.name(),
         w.cfg.n_learners,
         w.cfg.batch_per_learner,
@@ -252,11 +261,19 @@ fn print_help() {
 USAGE:
   adacomp train [--model M] [--scheme S] [--learners N] [--batch B]
                 [--epochs E] [--lt L] [--optimizer sgd|adam|rmsprop]
-                [--topology ring|ps] [--lr LR] [--seed S]
+                [--topology ring|ps] [--lr LR] [--seed S] [--seq-len T]
+                [--backend native|pjrt|auto]
+                                (native = hermetic layer-graph executors, no
+                                 artifacts needed: mnist_dnn, mnist_cnn,
+                                 cifar_cnn, bn50_dnn_s, char_lstm)
                 [--threads T]   (0 = auto; learner phase fan-out, results
                                  are bit-identical for every thread count)
   adacomp inspect [--artifacts DIR]
   adacomp schemes
+
+  adacomp train --model char_lstm --backend native --scheme adacomp
+    trains the paper's recurrent workload (embed -> LSTM x2 -> fc) fully
+    offline with AdaComp at the fc/lstm/embed L_T default of 500.
 
 Figure harnesses (one per paper figure/table) live in examples/:
   cargo run --release --example quickstart

@@ -91,9 +91,16 @@ impl Layout {
                     name: name.to_string(),
                     shape: shape.to_vec(),
                     kind: *kind,
+                    // Paper L_T defaults: conv 50; fc and lstm 500 (Table 1).
+                    // The paper has no embedding workload; embedding
+                    // gradients are row-sparse like fc/lstm (few rows per
+                    // minibatch, large residual build-up), so `Embed` takes
+                    // the documented fc/lstm default of 500 — mirrored by
+                    // `compress::Config::lt_for` and the python exporter's
+                    // `LT_DEFAULT`.
                     lt_default: match kind {
                         LayerKind::Conv => 50,
-                        _ => 500,
+                        LayerKind::Fc | LayerKind::Lstm | LayerKind::Embed => 500,
                     },
                     offset: 0,
                 })

@@ -7,8 +7,11 @@
 //! * `pjrt::PjrtExecutor` — the production path (feature `pjrt`): loads the
 //!   AOT-lowered HLO text (L1 Pallas kernels + L2 JAX models) and runs it on
 //!   the PJRT CPU client via the `xla` crate. Python is never involved.
-//! * `native::NativeMlp` / `native_cnn::NativeCnn` — pure-rust reference
-//!   executors, used by hermetic tests (no artifacts needed), by the
+//! * `net::NativeNet` — the pure-rust layer-graph engine: composable
+//!   `Layer` nodes (fc, relu, conv+pool, embedding, LSTM) over a shared
+//!   flat `Layout`. `native::NativeMlp`, `native_cnn::NativeCnn` and
+//!   `native_lstm::NativeCharLstm` are thin spec-builders over it — the
+//!   hermetic backends used by tests (no artifacts needed), by the
 //!   parallel multi-learner engine, and as a cross-check of PJRT numerics.
 //!
 //! `ExecutorFactory` is how the engine provisions compute for N learners:
@@ -20,6 +23,8 @@
 
 pub mod native;
 pub mod native_cnn;
+pub mod native_lstm;
+pub mod net;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 

@@ -1,23 +1,65 @@
-//! Pure-rust reference executor for MLPs (fc stacks with ReLU).
+//! Hermetic MLP executor — a thin spec-builder over the layer graph.
 //!
-//! Exists so the engine, compression and topology layers have a hermetic,
-//! artifact-free compute backend for unit/integration tests, and to
-//! cross-check PJRT numerics (rust/tests/pjrt_integration.rs trains the
-//! same MLP both ways). Supports any [d0, d1, ..., dk] relu stack with the
-//! same parameter layout convention as python's `_build_dnn` (alternating
-//! w [a,b], b [b]).
+//! `NativeMlp` assembles `[Fc, Relu, Fc, Relu, ..., Fc]` from a `[d0, ...,
+//! dk]` dim list on [`NativeNet`](super::net::NativeNet) — same parameter
+//! layout convention as python's `_build_dnn` (alternating `fc{i}_w [a,b]`,
+//! `fc{i}_b [b]`) and bit-identical forward/backward to the pre-graph
+//! monolithic executor (same kernels, same call order). Used by hermetic
+//! tests, the parallel multi-learner engine, and as a PJRT numerics
+//! cross-check (rust/tests/pjrt_integration.rs).
 
-use anyhow::{bail, Result};
+use std::sync::Arc;
 
+use anyhow::Result;
+
+use super::net::{Fc, Layer, NativeNet, Relu};
 use super::{Batch, EvalOut, Executor, ExecutorFactory, StepOut};
-use crate::models::{LayerKind, Layout};
-use crate::tensor::ops;
+use crate::models::Layout;
 
 #[derive(Clone)]
 pub struct NativeMlp {
     pub dims: Vec<usize>,
-    layout: Layout,
-    eval_batch: usize,
+    net: NativeNet,
+}
+
+impl NativeMlp {
+    pub fn new(dims: &[usize], eval_batch: usize) -> NativeMlp {
+        assert!(dims.len() >= 2, "an MLP needs at least [in, out] dims");
+        let k = dims.len() - 1;
+        let mut layers: Vec<Arc<dyn Layer>> = Vec::with_capacity(2 * k - 1);
+        for (i, w) in dims.windows(2).enumerate() {
+            layers.push(Arc::new(Fc::new(&format!("fc{}", i + 1), w[0], w[1])));
+            if i + 1 < k {
+                layers.push(Arc::new(Relu));
+            }
+        }
+        NativeMlp {
+            dims: dims.to_vec(),
+            net: NativeNet::new("native_mlp", layers, dims[0], eval_batch),
+        }
+    }
+
+    pub fn layout(&self) -> &Layout {
+        self.net.layout()
+    }
+
+    /// He-style deterministic init, same distribution family as the python
+    /// exporter (not bit-identical — used for hermetic tests only).
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let layout = self.net.layout();
+        let mut rng = crate::util::rng::Pcg32::new(seed, 0x1417);
+        let mut out = vec![0.0f32; layout.total];
+        for (i, l) in layout.layers.iter().enumerate() {
+            if i % 2 == 0 {
+                let fan_in = l.shape[0] as f32;
+                let std = (2.0 / fan_in).sqrt();
+                for v in out[l.offset..l.offset + l.len()].iter_mut() {
+                    *v = rng.normal() * std;
+                }
+            }
+        }
+        out
+    }
 }
 
 /// The model spec doubles as the engine's executor factory: executors are
@@ -33,134 +75,21 @@ impl ExecutorFactory for NativeMlp {
     }
 }
 
-impl NativeMlp {
-    pub fn new(dims: &[usize], eval_batch: usize) -> NativeMlp {
-        let mut specs: Vec<(String, Vec<usize>, LayerKind)> = Vec::new();
-        for (i, w) in dims.windows(2).enumerate() {
-            specs.push((format!("fc{}_w", i + 1), vec![w[0], w[1]], LayerKind::Fc));
-            specs.push((format!("fc{}_b", i + 1), vec![w[1]], LayerKind::Fc));
-        }
-        let layout = Layout::from_specs(
-            &specs
-                .iter()
-                .map(|(n, s, k)| (n.as_str(), s.as_slice(), *k))
-                .collect::<Vec<_>>(),
-        );
-        NativeMlp {
-            dims: dims.to_vec(),
-            layout,
-            eval_batch,
-        }
-    }
-
-    pub fn layout(&self) -> &Layout {
-        &self.layout
-    }
-
-    /// He-style deterministic init, same distribution family as the python
-    /// exporter (not bit-identical — used for hermetic tests only).
-    pub fn init_params(&self, seed: u64) -> Vec<f32> {
-        let mut rng = crate::util::rng::Pcg32::new(seed, 0x1417);
-        let mut out = vec![0.0f32; self.layout.total];
-        for (i, l) in self.layout.layers.iter().enumerate() {
-            if i % 2 == 0 {
-                let fan_in = l.shape[0] as f32;
-                let std = (2.0 / fan_in).sqrt();
-                for v in out[l.offset..l.offset + l.len()].iter_mut() {
-                    *v = rng.normal() * std;
-                }
-            }
-        }
-        out
-    }
-
-    /// Forward through the stack; returns per-layer activations
-    /// (activations[0] = input, activations[k] = logits).
-    fn forward(&self, params: &[f32], x: &[f32], bsz: usize) -> Vec<Vec<f32>> {
-        let mut acts = vec![x.to_vec()];
-        let k = self.dims.len() - 1;
-        for li in 0..k {
-            let (a, b) = (self.dims[li], self.dims[li + 1]);
-            let w = self.layout.view(2 * li, params);
-            let bias = self.layout.view(2 * li + 1, params);
-            let mut out = vec![0.0f32; bsz * b];
-            ops::matmul(&acts[li], w, &mut out, bsz, a, b, false);
-            for r in 0..bsz {
-                for j in 0..b {
-                    out[r * b + j] += bias[j];
-                }
-            }
-            if li + 1 < k {
-                ops::relu(&mut out);
-            }
-            acts.push(out);
-        }
-        acts
-    }
-}
-
 impl Executor for NativeMlp {
     fn step(&mut self, params: &[f32], batch: &Batch) -> Result<StepOut> {
-        let bsz = batch.batch_size;
-        let c = *self.dims.last().unwrap();
-        if batch.x_f32.len() != bsz * self.dims[0] {
-            bail!("x length mismatch");
-        }
-        let acts = self.forward(params, &batch.x_f32, bsz);
-        let logits = acts.last().unwrap();
-        let mut dlogits = vec![0.0f32; bsz * c];
-        let loss = ops::softmax_xent(logits, &batch.y, c, &mut dlogits);
-
-        let mut grads = vec![0.0f32; self.layout.total];
-        let k = self.dims.len() - 1;
-        let mut dout = dlogits;
-        for li in (0..k).rev() {
-            let (a, b) = (self.dims[li], self.dims[li + 1]);
-            // dW = act^T @ dout   (act: [bsz, a], dout: [bsz, b])
-            {
-                let gw = self.layout.view_mut(2 * li, &mut grads);
-                ops::matmul_at_b(&acts[li], &dout, gw, a, bsz, b);
-            }
-            {
-                let gb = self.layout.view_mut(2 * li + 1, &mut grads);
-                for r in 0..bsz {
-                    for j in 0..b {
-                        gb[j] += dout[r * b + j];
-                    }
-                }
-            }
-            if li > 0 {
-                // dact = dout @ W^T, then mask by relu
-                let w = self.layout.view(2 * li, params);
-                let mut dact = vec![0.0f32; bsz * a];
-                ops::matmul_a_bt(&dout, w, &mut dact, bsz, b, a);
-                ops::relu_grad(&acts[li], &mut dact);
-                dout = dact;
-            }
-        }
-        Ok(StepOut { loss, grads })
+        self.net.step(params, batch)
     }
 
     fn eval(&mut self, params: &[f32], batch: &Batch) -> Result<EvalOut> {
-        let bsz = batch.batch_size;
-        let c = *self.dims.last().unwrap();
-        let acts = self.forward(params, &batch.x_f32, bsz);
-        let logits = acts.last().unwrap();
-        let mut scratch = vec![0.0f32; bsz * c];
-        let loss = ops::softmax_xent(logits, &batch.y, c, &mut scratch);
-        let ncorrect = ops::count_correct(logits, &batch.y, c) as f32;
-        Ok(EvalOut {
-            loss_sum_weighted: loss,
-            ncorrect,
-        })
+        self.net.eval(params, batch)
     }
 
     fn step_batch_sizes(&self) -> Vec<usize> {
-        Vec::new() // any
+        self.net.step_batch_sizes()
     }
 
     fn eval_batch(&self) -> usize {
-        self.eval_batch
+        self.net.eval_batch()
     }
 }
 
@@ -174,6 +103,17 @@ mod tests {
         let x = rng.normal_vec(bsz * dim, 1.0);
         let y: Vec<i32> = (0..bsz).map(|i| (i % classes) as i32).collect();
         Batch::f32(x, y, bsz)
+    }
+
+    #[test]
+    fn layout_matches_dnn_convention() {
+        let m = NativeMlp::new(&[6, 5, 3], 4);
+        let l = m.layout();
+        assert_eq!(l.num_layers(), 4);
+        assert_eq!(l.layers[0].name, "fc1_w");
+        assert_eq!(l.layers[0].shape, vec![6, 5]);
+        assert_eq!(l.layers[3].name, "fc2_b");
+        assert_eq!(l.total, 6 * 5 + 5 + 5 * 3 + 3);
     }
 
     #[test]

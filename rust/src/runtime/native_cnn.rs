@@ -1,16 +1,20 @@
-//! Pure-rust CNN executor: a Caffe-quick-style stack of SAME 5x5 convs with
-//! 2x2 max-pools and a final FC head — the same architecture family as the
-//! paper's MNIST-CNN / CIFAR10-CNN. Used for hermetic conv-path integration
-//! tests and as an independent numerical cross-check of the PJRT path.
+//! Hermetic CNN executor — a thin spec-builder over the layer graph.
 //!
-//! Layout convention matches the python exporter: per conv layer
-//! (w [kh,kw,cin,cout], b [cout]), then (fc_w [flat,classes], fc_b).
+//! `NativeCnn` assembles a Caffe-quick-style stack — per stage `[Conv5x5Same,
+//! Relu, MaxPool2]`, then an `Fc` head — on [`NativeNet`](super::net::NativeNet);
+//! the same architecture family as the paper's MNIST-CNN / CIFAR10-CNN and
+//! bit-identical to the pre-graph monolithic executor (same kernels, same
+//! call order). Layout convention matches the python exporter: per conv
+//! layer (`w [kh,kw,cin,cout]`, `b [cout]`), then (`fc_w [flat,classes]`,
+//! `fc_b`).
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use super::net::{Conv5x5Same, Fc, Layer, MaxPool2, NativeNet, Relu};
 use super::{Batch, EvalOut, Executor, ExecutorFactory, StepOut};
-use crate::models::{LayerKind, Layout};
-use crate::tensor::{conv, ops};
+use crate::models::Layout;
 
 /// One conv stage: 5x5 SAME conv -> relu -> 2x2 maxpool.
 #[derive(Debug, Clone, Copy)]
@@ -25,38 +29,64 @@ pub struct NativeCnn {
     pub w: usize,
     pub stages: Vec<ConvStage>,
     pub classes: usize,
-    layout: Layout,
-    eval_batch: usize,
-    k: usize, // kernel size (5)
+    net: NativeNet,
 }
 
 impl NativeCnn {
-    pub fn new(h: usize, w: usize, stages: &[ConvStage], classes: usize, eval_batch: usize) -> NativeCnn {
-        let k = 5usize;
-        let mut specs: Vec<(String, Vec<usize>, LayerKind)> = Vec::new();
-        for (i, s) in stages.iter().enumerate() {
-            specs.push((format!("conv{}_w", i + 1), vec![k, k, s.cin, s.cout], LayerKind::Conv));
-            specs.push((format!("conv{}_b", i + 1), vec![s.cout], LayerKind::Conv));
+    /// Build the stack, validating that every 2x2 pool halves the spatial
+    /// dims exactly: `h` and `w` must be divisible by `2^stages` (the old
+    /// monolith silently computed a wrong flattened size via `h >> stages`
+    /// for e.g. 28x28 with 3 stages).
+    pub fn new(
+        h: usize,
+        w: usize,
+        stages: &[ConvStage],
+        classes: usize,
+        eval_batch: usize,
+    ) -> Result<NativeCnn> {
+        if stages.is_empty() {
+            bail!("NativeCnn needs at least one conv stage");
         }
-        let (fh, fw) = (h >> stages.len(), w >> stages.len());
-        let flat = fh * fw * stages.last().unwrap().cout;
-        specs.push(("fc_w".into(), vec![flat, classes], LayerKind::Fc));
-        specs.push(("fc_b".into(), vec![classes], LayerKind::Fc));
-        let layout = Layout::from_specs(
-            &specs
-                .iter()
-                .map(|(n, s, kk)| (n.as_str(), s.as_slice(), *kk))
-                .collect::<Vec<_>>(),
-        );
-        NativeCnn {
+        let div = 1usize << stages.len();
+        if h % div != 0 || w % div != 0 || h / div == 0 || w / div == 0 {
+            bail!(
+                "NativeCnn: input {}x{} is not exactly poolable through {} 2x2 stages \
+                 (needs h and w divisible by {div} with a nonzero result); got {}x{} after pooling",
+                h,
+                w,
+                stages.len(),
+                h / div,
+                w / div
+            );
+        }
+        let mut layers: Vec<Arc<dyn Layer>> = Vec::with_capacity(3 * stages.len() + 1);
+        let (mut sh, mut sw) = (h, w);
+        for (i, s) in stages.iter().enumerate() {
+            layers.push(Arc::new(Conv5x5Same {
+                name: format!("conv{}", i + 1),
+                h: sh,
+                w: sw,
+                cin: s.cin,
+                cout: s.cout,
+            }));
+            layers.push(Arc::new(Relu));
+            layers.push(Arc::new(MaxPool2 {
+                h: sh,
+                w: sw,
+                c: s.cout,
+            }));
+            sh /= 2;
+            sw /= 2;
+        }
+        let flat = sh * sw * stages.last().unwrap().cout;
+        layers.push(Arc::new(Fc::new("fc", flat, classes)));
+        Ok(NativeCnn {
             h,
             w,
             stages: stages.to_vec(),
             classes,
-            layout,
-            eval_batch,
-            k,
-        }
+            net: NativeNet::new("native_cnn", layers, h * w * stages[0].cin, eval_batch),
+        })
     }
 
     /// CIFAR-quick shape: 3 conv stages (3->32->32->64) + 10-way FC on 32x32x3.
@@ -72,16 +102,18 @@ impl NativeCnn {
             10,
             eval_batch,
         )
+        .expect("32x32 divides 3 pool stages")
     }
 
     pub fn layout(&self) -> &Layout {
-        &self.layout
+        self.net.layout()
     }
 
     pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let layout = self.net.layout();
         let mut rng = crate::util::rng::Pcg32::new(seed, 0xc44);
-        let mut out = vec![0.0f32; self.layout.total];
-        for l in self.layout.layers.iter() {
+        let mut out = vec![0.0f32; layout.total];
+        for l in layout.layers.iter() {
             if l.shape.len() >= 2 {
                 let fan_in: usize = l.shape[..l.shape.len() - 1].iter().product();
                 let std = (2.0 / fan_in as f32).sqrt();
@@ -92,66 +124,6 @@ impl NativeCnn {
         }
         out
     }
-
-    /// Forward pass caching everything the backward needs.
-    fn forward(&self, params: &[f32], x: &[f32], bsz: usize) -> Fwd {
-        let mut acts = vec![x.to_vec()]; // post-pool activations per stage input
-        let mut pre_pool = Vec::new(); // post-relu pre-pool
-        let mut argmaxes = Vec::new();
-        let (mut h, mut w) = (self.h, self.w);
-        let mut cols = Vec::new();
-        for (i, s) in self.stages.iter().enumerate() {
-            let wgt = self.layout.view(2 * i, params);
-            let bias = self.layout.view(2 * i + 1, params);
-            let mut y = Vec::new();
-            conv::conv2d_same(
-                acts.last().unwrap(),
-                wgt,
-                bias,
-                bsz,
-                h,
-                w,
-                s.cin,
-                self.k,
-                self.k,
-                s.cout,
-                &mut cols,
-                &mut y,
-            );
-            ops::relu(&mut y);
-            let mut pooled = Vec::new();
-            let mut am = Vec::new();
-            conv::maxpool2(&y, bsz, h, w, s.cout, &mut pooled, &mut am);
-            pre_pool.push(y);
-            argmaxes.push(am);
-            acts.push(pooled);
-            h /= 2;
-            w /= 2;
-        }
-        let nf = self.layout.layers[2 * self.stages.len()].shape[0];
-        let fw = self.layout.view(2 * self.stages.len(), params);
-        let fb = self.layout.view(2 * self.stages.len() + 1, params);
-        let mut logits = vec![0.0f32; bsz * self.classes];
-        ops::matmul(acts.last().unwrap(), fw, &mut logits, bsz, nf, self.classes, false);
-        for r in 0..bsz {
-            for c in 0..self.classes {
-                logits[r * self.classes + c] += fb[c];
-            }
-        }
-        Fwd {
-            acts,
-            pre_pool,
-            argmaxes,
-            logits,
-        }
-    }
-}
-
-struct Fwd {
-    acts: Vec<Vec<f32>>,
-    pre_pool: Vec<Vec<f32>>,
-    argmaxes: Vec<Vec<u32>>,
-    logits: Vec<f32>,
 }
 
 /// See [`NativeMlp`](super::native::NativeMlp): the spec is the factory;
@@ -168,98 +140,19 @@ impl ExecutorFactory for NativeCnn {
 
 impl Executor for NativeCnn {
     fn step(&mut self, params: &[f32], batch: &Batch) -> Result<StepOut> {
-        let bsz = batch.batch_size;
-        if batch.x_f32.len() != bsz * self.h * self.w * self.stages[0].cin {
-            bail!("x length mismatch");
-        }
-        let f = self.forward(params, &batch.x_f32, bsz);
-        let mut dlogits = vec![0.0f32; bsz * self.classes];
-        let loss = ops::softmax_xent(&f.logits, &batch.y, self.classes, &mut dlogits);
-
-        let mut grads = vec![0.0f32; self.layout.total];
-        let ns = self.stages.len();
-        let nf = self.layout.layers[2 * ns].shape[0];
-        // FC backward
-        {
-            let gw = self.layout.view_mut(2 * ns, &mut grads);
-            ops::matmul_at_b(f.acts.last().unwrap(), &dlogits, gw, nf, bsz, self.classes);
-        }
-        {
-            let gb = self.layout.view_mut(2 * ns + 1, &mut grads);
-            for r in 0..bsz {
-                for c in 0..self.classes {
-                    gb[c] += dlogits[r * self.classes + c];
-                }
-            }
-        }
-        let fw = self.layout.view(2 * ns, params);
-        let mut dpool = vec![0.0f32; bsz * nf];
-        ops::matmul_a_bt(&dlogits, fw, &mut dpool, bsz, self.classes, nf);
-
-        // conv stages backward
-        let (mut h, mut w) = (self.h >> ns, self.w >> ns);
-        let mut cols = Vec::new();
-        let mut dout = dpool;
-        for i in (0..ns).rev() {
-            let s = self.stages[i];
-            h *= 2;
-            w *= 2;
-            // unpool
-            let mut dy = vec![0.0f32; bsz * h * w * s.cout];
-            conv::maxpool2_bwd(&dout, &f.argmaxes[i], &mut dy);
-            // relu
-            ops::relu_grad(&f.pre_pool[i], &mut dy);
-            // conv
-            let wgt = self.layout.view(2 * i, params);
-            let mut dw = vec![0.0f32; self.layout.layers[2 * i].len()];
-            let mut db = vec![0.0f32; s.cout];
-            let mut dx = if i > 0 {
-                Some(vec![0.0f32; bsz * h * w * s.cin])
-            } else {
-                None
-            };
-            conv::conv2d_same_bwd(
-                &f.acts[i],
-                wgt,
-                &dy,
-                bsz,
-                h,
-                w,
-                s.cin,
-                self.k,
-                self.k,
-                s.cout,
-                &mut cols,
-                &mut dw,
-                &mut db,
-                dx.as_deref_mut(),
-            );
-            self.layout.view_mut(2 * i, &mut grads).copy_from_slice(&dw);
-            self.layout.view_mut(2 * i + 1, &mut grads).copy_from_slice(&db);
-            if let Some(dx) = dx {
-                dout = dx;
-            }
-        }
-        Ok(StepOut { loss, grads })
+        self.net.step(params, batch)
     }
 
     fn eval(&mut self, params: &[f32], batch: &Batch) -> Result<EvalOut> {
-        let bsz = batch.batch_size;
-        let f = self.forward(params, &batch.x_f32, bsz);
-        let mut scratch = vec![0.0f32; bsz * self.classes];
-        let loss = ops::softmax_xent(&f.logits, &batch.y, self.classes, &mut scratch);
-        Ok(EvalOut {
-            loss_sum_weighted: loss,
-            ncorrect: ops::count_correct(&f.logits, &batch.y, self.classes) as f32,
-        })
+        self.net.eval(params, batch)
     }
 
     fn step_batch_sizes(&self) -> Vec<usize> {
-        Vec::new()
+        self.net.step_batch_sizes()
     }
 
     fn eval_batch(&self) -> usize {
-        self.eval_batch
+        self.net.eval_batch()
     }
 }
 
@@ -276,6 +169,7 @@ mod tests {
             3,
             4,
         )
+        .unwrap()
     }
 
     #[test]
@@ -284,6 +178,26 @@ mod tests {
         assert_eq!(m.layout().num_layers(), 6);
         // final spatial 2x2 x 4 channels = 16 features
         assert_eq!(m.layout().layers[4].shape, vec![16, 3]);
+    }
+
+    #[test]
+    fn indivisible_dims_rejected() {
+        // 28x28 through 3 pool stages (28 % 8 != 0) must error loudly, not
+        // silently train on a truncated flat size.
+        let stages = [
+            ConvStage { cin: 1, cout: 4 },
+            ConvStage { cin: 4, cout: 4 },
+            ConvStage { cin: 4, cout: 4 },
+        ];
+        let err = NativeCnn::new(28, 28, &stages, 10, 4).unwrap_err().to_string();
+        assert!(err.contains("28x28"), "{err}");
+        assert!(err.contains("divisible"), "{err}");
+        // 28x28 with 2 stages is fine (28 -> 14 -> 7)
+        assert!(NativeCnn::new(28, 28, &stages[..2], 10, 4).is_ok());
+        // degenerate: pooling to zero rejected
+        assert!(NativeCnn::new(4, 4, &stages, 10, 4).is_err());
+        // no stages rejected
+        assert!(NativeCnn::new(8, 8, &[], 10, 4).is_err());
     }
 
     #[test]
@@ -317,13 +231,7 @@ mod tests {
     #[test]
     fn learns_channel_separable_task() {
         // class = which input channel carries signal
-        let mut m = NativeCnn::new(
-            8,
-            8,
-            &[ConvStage { cin: 3, cout: 8 }],
-            3,
-            16,
-        );
+        let mut m = NativeCnn::new(8, 8, &[ConvStage { cin: 3, cout: 8 }], 3, 16).unwrap();
         let mut params = m.init_params(5);
         let mut rng = Pcg32::seeded(6);
         let gen = |rng: &mut Pcg32, n: usize| {

@@ -1,0 +1,792 @@
+//! Composable layer-graph runtime — the hermetic executor core.
+//!
+//! The former `NativeMlp`/`NativeCnn` monoliths duplicated forward/backward
+//! plumbing per architecture; this module replaces them with a small graph
+//! engine so "add a model" means "compose layers", not "write an executor":
+//!
+//! * [`Layer`] — one node: declares its parameter tensors (name/shape/
+//!   [`LayerKind`]) and implements `forward`/`backward` over flat
+//!   activations. Parameters arrive as one contiguous slice of the model's
+//!   flat buffer, carved by the shared [`Layout`] — the same layout the
+//!   compression path uses for per-kind L_T defaults.
+//! * [`NativeNet`] — an ordered stack of layers plus a softmax-xent head.
+//!   It owns the activation/tape storage, runs the chain forward (caching
+//!   per-layer activations), applies the loss, and walks the chain backward
+//!   accumulating the flat gradient. It implements [`Executor`] and
+//!   [`ExecutorFactory`] (spec-is-the-factory: clones are cheap, layers are
+//!   shared immutably via `Arc`, results are bit-identical per clone).
+//!
+//! Concrete layers: [`Fc`], [`Relu`], [`Conv5x5Same`], [`MaxPool2`],
+//! [`Embedding`] (i32 ids -> rows), [`Lstm`] (full-sequence BPTT). The
+//! model builders in `native.rs` / `native_cnn.rs` / `native_lstm.rs` are
+//! thin wrappers that assemble these stacks.
+//!
+//! Determinism: layers call the same `tensor::` kernels in the same order
+//! as the old monoliths did, so refactored models are bit-identical to
+//! their pre-graph implementations (pinned by rust/tests/engine_native.rs).
+
+// `Layer::backward` legitimately carries the whole (params, activations,
+// tape, cotangents, grads) context — a context struct would just rename
+// the arguments.
+#![allow(clippy::too_many_arguments)]
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::{Batch, EvalOut, Executor, ExecutorFactory, StepOut};
+use crate::models::{LayerKind, Layout};
+use crate::tensor::{conv, embed, lstm, ops};
+
+/// An activation flowing between layers: dense f32 for most of the graph,
+/// i32 token ids feeding an [`Embedding`] front layer.
+#[derive(Clone, Copy)]
+pub enum Act<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> Act<'a> {
+    fn f32s(&self) -> &'a [f32] {
+        match *self {
+            Act::F32(x) => x,
+            Act::I32(_) => panic!("layer expected f32 activations, got i32 ids"),
+        }
+    }
+    fn ids(&self) -> &'a [i32] {
+        match *self {
+            Act::I32(x) => x,
+            Act::F32(_) => panic!("layer expected i32 ids, got f32 activations"),
+        }
+    }
+}
+
+/// Per-layer forward stash: whatever `backward` needs beyond the layer's
+/// input/output activations (conv im2col scratch, pool argmaxes, LSTM gate
+/// caches). Buffers persist across steps, so steady-state reuse is free.
+#[derive(Debug, Default, Clone)]
+pub struct Tape {
+    pub f: Vec<Vec<f32>>,
+    pub u: Vec<Vec<u32>>,
+}
+
+impl Tape {
+    fn ensure_f(&mut self, n: usize) {
+        while self.f.len() < n {
+            self.f.push(Vec::new());
+        }
+    }
+    fn ensure_u(&mut self, n: usize) {
+        while self.u.len() < n {
+            self.u.push(Vec::new());
+        }
+    }
+}
+
+/// One node of the graph. Implementations are immutable specs (`Send +
+/// Sync`, shared via `Arc`); all mutable state lives in the caller's tape
+/// and activation buffers.
+pub trait Layer: Send + Sync {
+    /// Parameter tensors this layer contributes to the flat [`Layout`],
+    /// in order. Empty for stateless layers (ReLU, pooling).
+    fn param_specs(&self) -> Vec<(String, Vec<usize>, LayerKind)>;
+
+    /// Output element count for an input of `in_len` elements (both counts
+    /// cover the whole batch). Lets the net validate the chain without
+    /// fixing the batch or sequence length at build time.
+    fn out_len(&self, in_len: usize) -> usize;
+
+    /// Whether this layer consumes i32 token ids (embedding front).
+    fn wants_ids(&self) -> bool {
+        false
+    }
+
+    /// Compute `y` from `x`, stashing whatever `backward` needs in `tape`.
+    /// `p` is this layer's contiguous parameter slice (spec order).
+    fn forward(&self, p: &[f32], x: Act<'_>, bsz: usize, tape: &mut Tape, y: &mut Vec<f32>);
+
+    /// Accumulate parameter gradients into `g` (zeroed by the net once per
+    /// step) and, when `dx` is given, fill the input gradient. `x`/`y` are
+    /// the forward activations; `tape` is the forward stash.
+    #[allow(clippy::too_many_arguments)]
+    fn backward(
+        &self,
+        p: &[f32],
+        x: Act<'_>,
+        y: &[f32],
+        tape: &mut Tape,
+        dy: &[f32],
+        bsz: usize,
+        g: &mut [f32],
+        dx: Option<&mut Vec<f32>>,
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Concrete layers
+// ---------------------------------------------------------------------------
+
+/// Fully-connected `x @ w + b`, applied row-wise: rows = `x.len() / in_dim`,
+/// so the same layer serves an MLP (`rows = bsz`) and a per-timestep head
+/// over a sequence (`rows = bsz * T`).
+pub struct Fc {
+    pub name: String,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub kind: LayerKind,
+}
+
+impl Fc {
+    pub fn new(name: &str, in_dim: usize, out_dim: usize) -> Fc {
+        Fc {
+            name: name.to_string(),
+            in_dim,
+            out_dim,
+            kind: LayerKind::Fc,
+        }
+    }
+}
+
+impl Layer for Fc {
+    fn param_specs(&self) -> Vec<(String, Vec<usize>, LayerKind)> {
+        vec![
+            (format!("{}_w", self.name), vec![self.in_dim, self.out_dim], self.kind),
+            (format!("{}_b", self.name), vec![self.out_dim], self.kind),
+        ]
+    }
+
+    fn out_len(&self, in_len: usize) -> usize {
+        assert_eq!(in_len % self.in_dim, 0, "fc '{}' input not a multiple of {}", self.name, self.in_dim);
+        in_len / self.in_dim * self.out_dim
+    }
+
+    fn forward(&self, p: &[f32], x: Act<'_>, _bsz: usize, _tape: &mut Tape, y: &mut Vec<f32>) {
+        let x = x.f32s();
+        let (a, b) = (self.in_dim, self.out_dim);
+        let rows = x.len() / a;
+        let (w, bias) = p.split_at(a * b);
+        y.clear();
+        y.resize(rows * b, 0.0);
+        ops::matmul(x, w, y, rows, a, b, false);
+        for r in 0..rows {
+            for j in 0..b {
+                y[r * b + j] += bias[j];
+            }
+        }
+    }
+
+    fn backward(
+        &self,
+        p: &[f32],
+        x: Act<'_>,
+        _y: &[f32],
+        _tape: &mut Tape,
+        dy: &[f32],
+        _bsz: usize,
+        g: &mut [f32],
+        dx: Option<&mut Vec<f32>>,
+    ) {
+        let x = x.f32s();
+        let (a, b) = (self.in_dim, self.out_dim);
+        let rows = x.len() / a;
+        let (w, _) = p.split_at(a * b);
+        let (gw, gb) = g.split_at_mut(a * b);
+        // dW = x^T @ dy   (x: [rows, a], dy: [rows, b])
+        ops::matmul_at_b(x, dy, gw, a, rows, b);
+        for r in 0..rows {
+            for j in 0..b {
+                gb[j] += dy[r * b + j];
+            }
+        }
+        if let Some(dx) = dx {
+            dx.clear();
+            dx.resize(rows * a, 0.0);
+            ops::matmul_a_bt(dy, w, dx, rows, b, a);
+        }
+    }
+}
+
+/// Elementwise ReLU.
+pub struct Relu;
+
+impl Layer for Relu {
+    fn param_specs(&self) -> Vec<(String, Vec<usize>, LayerKind)> {
+        Vec::new()
+    }
+
+    fn out_len(&self, in_len: usize) -> usize {
+        in_len
+    }
+
+    fn forward(&self, _p: &[f32], x: Act<'_>, _bsz: usize, _tape: &mut Tape, y: &mut Vec<f32>) {
+        let x = x.f32s();
+        y.clear();
+        y.extend_from_slice(x);
+        ops::relu(y);
+    }
+
+    fn backward(
+        &self,
+        _p: &[f32],
+        _x: Act<'_>,
+        y: &[f32],
+        _tape: &mut Tape,
+        dy: &[f32],
+        _bsz: usize,
+        _g: &mut [f32],
+        dx: Option<&mut Vec<f32>>,
+    ) {
+        if let Some(dx) = dx {
+            dx.clear();
+            dx.extend_from_slice(dy);
+            ops::relu_grad(y, dx);
+        }
+    }
+}
+
+/// SAME-padded stride-1 5x5 convolution over NHWC activations of fixed
+/// spatial size `h x w` (the builder threads the running spatial dims).
+pub struct Conv5x5Same {
+    pub name: String,
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    pub cout: usize,
+}
+
+const CONV_K: usize = 5;
+
+impl Layer for Conv5x5Same {
+    fn param_specs(&self) -> Vec<(String, Vec<usize>, LayerKind)> {
+        vec![
+            (
+                format!("{}_w", self.name),
+                vec![CONV_K, CONV_K, self.cin, self.cout],
+                LayerKind::Conv,
+            ),
+            (format!("{}_b", self.name), vec![self.cout], LayerKind::Conv),
+        ]
+    }
+
+    fn out_len(&self, in_len: usize) -> usize {
+        assert_eq!(in_len % (self.h * self.w * self.cin), 0);
+        in_len / self.cin * self.cout
+    }
+
+    fn forward(&self, p: &[f32], x: Act<'_>, bsz: usize, tape: &mut Tape, y: &mut Vec<f32>) {
+        let x = x.f32s();
+        assert_eq!(x.len(), bsz * self.h * self.w * self.cin);
+        let (wgt, bias) = p.split_at(CONV_K * CONV_K * self.cin * self.cout);
+        tape.ensure_f(1);
+        conv::conv2d_same(
+            x, wgt, bias, bsz, self.h, self.w, self.cin, CONV_K, CONV_K, self.cout,
+            &mut tape.f[0], y,
+        );
+    }
+
+    fn backward(
+        &self,
+        p: &[f32],
+        x: Act<'_>,
+        _y: &[f32],
+        tape: &mut Tape,
+        dy: &[f32],
+        bsz: usize,
+        g: &mut [f32],
+        dx: Option<&mut Vec<f32>>,
+    ) {
+        let x = x.f32s();
+        let (wgt, _) = p.split_at(CONV_K * CONV_K * self.cin * self.cout);
+        let (gw, gb) = g.split_at_mut(CONV_K * CONV_K * self.cin * self.cout);
+        tape.ensure_f(1);
+        let dx_slice = dx.map(|d| {
+            d.clear();
+            d.resize(bsz * self.h * self.w * self.cin, 0.0);
+            d.as_mut_slice()
+        });
+        conv::conv2d_same_bwd(
+            x, wgt, dy, bsz, self.h, self.w, self.cin, CONV_K, CONV_K, self.cout,
+            &mut tape.f[0], gw, gb, dx_slice,
+        );
+    }
+}
+
+/// 2x2 stride-2 max pool over NHWC activations of fixed spatial size.
+pub struct MaxPool2 {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Layer for MaxPool2 {
+    fn param_specs(&self) -> Vec<(String, Vec<usize>, LayerKind)> {
+        Vec::new()
+    }
+
+    fn out_len(&self, in_len: usize) -> usize {
+        assert_eq!(in_len % 4, 0);
+        in_len / 4
+    }
+
+    fn forward(&self, _p: &[f32], x: Act<'_>, bsz: usize, tape: &mut Tape, y: &mut Vec<f32>) {
+        let x = x.f32s();
+        assert_eq!(x.len(), bsz * self.h * self.w * self.c);
+        tape.ensure_u(1);
+        conv::maxpool2(x, bsz, self.h, self.w, self.c, y, &mut tape.u[0]);
+    }
+
+    fn backward(
+        &self,
+        _p: &[f32],
+        _x: Act<'_>,
+        _y: &[f32],
+        tape: &mut Tape,
+        dy: &[f32],
+        bsz: usize,
+        _g: &mut [f32],
+        dx: Option<&mut Vec<f32>>,
+    ) {
+        if let Some(dx) = dx {
+            dx.clear();
+            dx.resize(bsz * self.h * self.w * self.c, 0.0);
+            conv::maxpool2_bwd(dy, &tape.u[0], dx);
+        }
+    }
+}
+
+/// Token-id embedding table `[vocab, dim]`. Must be the first layer of a
+/// net (consumes the i32 input; produces `[bsz, T, dim]`).
+pub struct Embedding {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+}
+
+impl Layer for Embedding {
+    fn param_specs(&self) -> Vec<(String, Vec<usize>, LayerKind)> {
+        vec![(self.name.clone(), vec![self.vocab, self.dim], LayerKind::Embed)]
+    }
+
+    fn out_len(&self, in_len: usize) -> usize {
+        in_len * self.dim
+    }
+
+    fn wants_ids(&self) -> bool {
+        true
+    }
+
+    fn forward(&self, p: &[f32], x: Act<'_>, _bsz: usize, _tape: &mut Tape, y: &mut Vec<f32>) {
+        embed::gather(p, x.ids(), self.dim, y);
+    }
+
+    fn backward(
+        &self,
+        _p: &[f32],
+        x: Act<'_>,
+        _y: &[f32],
+        _tape: &mut Tape,
+        dy: &[f32],
+        _bsz: usize,
+        g: &mut [f32],
+        dx: Option<&mut Vec<f32>>,
+    ) {
+        assert!(dx.is_none(), "embedding has no input gradient (ids are discrete)");
+        embed::scatter_add(g, x.ids(), self.dim, dy);
+    }
+}
+
+/// Full-sequence LSTM (`[bsz, T, in] -> [bsz, T, hidden]`) with BPTT.
+/// Parameters follow the exporter convention: `wx [in, 4H]`, `wh [H, 4H]`,
+/// `b [4H]` (gate order i, f, g, o). `T` is inferred from the input length,
+/// so one spec serves any sequence length.
+pub struct Lstm {
+    pub name: String,
+    pub in_dim: usize,
+    pub hidden: usize,
+}
+
+impl Layer for Lstm {
+    fn param_specs(&self) -> Vec<(String, Vec<usize>, LayerKind)> {
+        vec![
+            (
+                format!("{}_wx", self.name),
+                vec![self.in_dim, 4 * self.hidden],
+                LayerKind::Lstm,
+            ),
+            (
+                format!("{}_wh", self.name),
+                vec![self.hidden, 4 * self.hidden],
+                LayerKind::Lstm,
+            ),
+            (format!("{}_b", self.name), vec![4 * self.hidden], LayerKind::Lstm),
+        ]
+    }
+
+    fn out_len(&self, in_len: usize) -> usize {
+        assert_eq!(in_len % self.in_dim, 0);
+        in_len / self.in_dim * self.hidden
+    }
+
+    fn forward(&self, p: &[f32], x: Act<'_>, bsz: usize, tape: &mut Tape, y: &mut Vec<f32>) {
+        let x = x.f32s();
+        let (i, h) = (self.in_dim, self.hidden);
+        assert_eq!(x.len() % (bsz * i), 0, "lstm '{}' input length", self.name);
+        let t_len = x.len() / (bsz * i);
+        let (wx, rest) = p.split_at(i * 4 * h);
+        let (wh, bias) = rest.split_at(h * 4 * h);
+        tape.ensure_f(3);
+        let (gates, rest) = tape.f.split_at_mut(1);
+        let (c, tanh_c) = rest.split_at_mut(1);
+        lstm::forward(
+            x, wx, wh, bias, bsz, t_len, i, h, &mut gates[0], &mut c[0], &mut tanh_c[0], y,
+        );
+    }
+
+    fn backward(
+        &self,
+        p: &[f32],
+        x: Act<'_>,
+        y: &[f32],
+        tape: &mut Tape,
+        dy: &[f32],
+        bsz: usize,
+        g: &mut [f32],
+        dx: Option<&mut Vec<f32>>,
+    ) {
+        let x = x.f32s();
+        let (i, h) = (self.in_dim, self.hidden);
+        let t_len = x.len() / (bsz * i);
+        let (wx, rest) = p.split_at(i * 4 * h);
+        let (wh, _) = rest.split_at(h * 4 * h);
+        let (gwx, grest) = g.split_at_mut(i * 4 * h);
+        let (gwh, gb) = grest.split_at_mut(h * 4 * h);
+        let dx_slice = dx.map(|d| {
+            d.clear();
+            d.resize(bsz * t_len * i, 0.0);
+            d.as_mut_slice()
+        });
+        lstm::backward(
+            x, wx, wh, &tape.f[0], &tape.f[1], &tape.f[2], y, dy, bsz, t_len, i, h, gwx, gwh,
+            gb, dx_slice,
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The net
+// ---------------------------------------------------------------------------
+
+fn input_act(int_input: bool, batch: &Batch) -> Act<'_> {
+    if int_input {
+        Act::I32(&batch.x_i32)
+    } else {
+        Act::F32(&batch.x_f32)
+    }
+}
+
+/// An ordered layer stack with a softmax cross-entropy head, runnable as an
+/// [`Executor`]. The logits are the last layer's output reshaped to
+/// `[labels, classes]` where `labels = batch.y.len()` — so classification
+/// (`labels = bsz`) and per-timestep LM heads (`labels = bsz * T`) share
+/// the same code path.
+#[derive(Clone)]
+pub struct NativeNet {
+    backend: &'static str,
+    layers: Vec<Arc<dyn Layer>>,
+    layout: Layout,
+    /// (flat offset, total len) of each graph layer's parameters.
+    spans: Vec<(usize, usize)>,
+    /// Per-sample input element count (f32 values or i32 ids).
+    in_elems: usize,
+    int_input: bool,
+    eval_batch: usize,
+    // Per-instance forward storage (reused across steps).
+    acts: Vec<Vec<f32>>,
+    tapes: Vec<Tape>,
+}
+
+impl NativeNet {
+    pub fn new(
+        backend: &'static str,
+        layers: Vec<Arc<dyn Layer>>,
+        in_elems: usize,
+        eval_batch: usize,
+    ) -> NativeNet {
+        assert!(!layers.is_empty(), "a net needs at least one layer");
+        let int_input = layers[0].wants_ids();
+        let mut specs: Vec<(String, Vec<usize>, LayerKind)> = Vec::new();
+        let mut counts = Vec::with_capacity(layers.len());
+        for l in &layers {
+            let s = l.param_specs();
+            counts.push(s.len());
+            specs.extend(s);
+        }
+        let layout = Layout::from_specs(
+            &specs
+                .iter()
+                .map(|(n, s, k)| (n.as_str(), s.as_slice(), *k))
+                .collect::<Vec<_>>(),
+        );
+        let mut spans = Vec::with_capacity(layers.len());
+        let mut ti = 0usize;
+        for &cnt in &counts {
+            if cnt == 0 {
+                spans.push((0, 0));
+            } else {
+                let off = layout.layers[ti].offset;
+                let len: usize = layout.layers[ti..ti + cnt].iter().map(|l| l.len()).sum();
+                spans.push((off, len));
+                ti += cnt;
+            }
+        }
+        let n = layers.len();
+        NativeNet {
+            backend,
+            layers,
+            layout,
+            spans,
+            in_elems,
+            int_input,
+            eval_batch,
+            acts: vec![Vec::new(); n],
+            tapes: vec![Tape::default(); n],
+        }
+    }
+
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    pub fn int_input(&self) -> bool {
+        self.int_input
+    }
+
+    pub fn in_elems(&self) -> usize {
+        self.in_elems
+    }
+
+    /// Override the per-sample input element count. Sequence models infer
+    /// seq_len from each batch and re-pin the check before stepping.
+    pub fn set_in_elems(&mut self, n: usize) {
+        self.in_elems = n;
+    }
+
+    fn check_input(&self, batch: &Batch) -> Result<()> {
+        let want = batch.batch_size * self.in_elems;
+        let got = if self.int_input {
+            batch.x_i32.len()
+        } else {
+            batch.x_f32.len()
+        };
+        if got != want {
+            bail!(
+                "x length mismatch: {} expects {} elements per sample ({} total at batch {}), got {}",
+                self.backend, self.in_elems, want, batch.batch_size, got
+            );
+        }
+        Ok(())
+    }
+
+    /// Run the chain forward, filling `self.acts[li]` per layer.
+    fn forward_all(&mut self, params: &[f32], batch: &Batch) -> Result<()> {
+        self.check_input(batch)?;
+        let bsz = batch.batch_size;
+        let int_input = self.int_input;
+        for li in 0..self.layers.len() {
+            let (done, rest) = self.acts.split_at_mut(li);
+            let y = &mut rest[0];
+            let x = if li == 0 {
+                input_act(int_input, batch)
+            } else {
+                Act::F32(&done[li - 1])
+            };
+            let x_len = match x {
+                Act::F32(v) => v.len(),
+                Act::I32(v) => v.len(),
+            };
+            let (off, len) = self.spans[li];
+            self.layers[li].forward(&params[off..off + len], x, bsz, &mut self.tapes[li], y);
+            debug_assert_eq!(
+                y.len(),
+                self.layers[li].out_len(x_len),
+                "layer {li} output length breaks its out_len contract"
+            );
+        }
+        Ok(())
+    }
+
+    /// logits view + class count after a forward pass.
+    fn logits_and_classes(&self, batch: &Batch) -> Result<(&[f32], usize)> {
+        let logits = self.acts.last().unwrap().as_slice();
+        let rows = batch.y.len();
+        if rows == 0 || logits.len() % rows != 0 {
+            bail!(
+                "head shape mismatch: {} logits vs {} labels",
+                logits.len(),
+                rows
+            );
+        }
+        Ok((logits, logits.len() / rows))
+    }
+}
+
+impl Executor for NativeNet {
+    fn step(&mut self, params: &[f32], batch: &Batch) -> Result<StepOut> {
+        let bsz = batch.batch_size;
+        self.forward_all(params, batch)?;
+        let (logits, classes) = self.logits_and_classes(batch)?;
+        let mut dlogits = vec![0.0f32; logits.len()];
+        let loss = ops::softmax_xent(logits, &batch.y, classes, &mut dlogits);
+
+        let mut grads = vec![0.0f32; self.layout.total];
+        let mut dy = dlogits;
+        for li in (0..self.layers.len()).rev() {
+            let (off, len) = self.spans[li];
+            let x = if li == 0 {
+                input_act(self.int_input, batch)
+            } else {
+                Act::F32(&self.acts[li - 1])
+            };
+            let mut dx = if li > 0 { Some(Vec::new()) } else { None };
+            self.layers[li].backward(
+                &params[off..off + len],
+                x,
+                &self.acts[li],
+                &mut self.tapes[li],
+                &dy,
+                bsz,
+                &mut grads[off..off + len],
+                dx.as_mut(),
+            );
+            if let Some(d) = dx {
+                dy = d;
+            }
+        }
+        Ok(StepOut { loss, grads })
+    }
+
+    fn eval(&mut self, params: &[f32], batch: &Batch) -> Result<EvalOut> {
+        self.forward_all(params, batch)?;
+        let (logits, classes) = self.logits_and_classes(batch)?;
+        let mut scratch = vec![0.0f32; logits.len()];
+        let loss = ops::softmax_xent(logits, &batch.y, classes, &mut scratch);
+        let ncorrect = ops::count_correct(logits, &batch.y, classes) as f32;
+        Ok(EvalOut {
+            loss_sum_weighted: loss,
+            ncorrect,
+        })
+    }
+
+    fn step_batch_sizes(&self) -> Vec<usize> {
+        Vec::new() // any
+    }
+
+    fn eval_batch(&self) -> usize {
+        self.eval_batch
+    }
+}
+
+/// Spec-is-the-factory (see `native.rs`): layer specs are immutable and
+/// `Arc`-shared, so stamping a per-learner executor is a cheap clone and
+/// every clone produces bit-identical results.
+impl ExecutorFactory for NativeNet {
+    fn backend(&self) -> &'static str {
+        self.backend
+    }
+
+    fn build_worker(&self) -> Result<Box<dyn Executor + Send>> {
+        Ok(Box::new(self.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn fc_relu_fc() -> NativeNet {
+        NativeNet::new(
+            "test_net",
+            vec![
+                Arc::new(Fc::new("fc1", 6, 5)),
+                Arc::new(Relu),
+                Arc::new(Fc::new("fc2", 5, 3)),
+            ],
+            6,
+            4,
+        )
+    }
+
+    #[test]
+    fn layout_spans_skip_stateless_layers() {
+        let net = fc_relu_fc();
+        let l = net.layout();
+        assert_eq!(l.num_layers(), 4); // fc1_w fc1_b fc2_w fc2_b
+        assert_eq!(l.layers[0].name, "fc1_w");
+        assert_eq!(l.layers[2].name, "fc2_w");
+        assert_eq!(net.spans[0], (0, 6 * 5 + 5));
+        assert_eq!(net.spans[1], (0, 0)); // relu
+        assert_eq!(net.spans[2], (35, 5 * 3 + 3));
+        assert_eq!(l.total, 35 + 18);
+    }
+
+    #[test]
+    fn step_produces_finite_loss_and_grads() {
+        let mut net = fc_relu_fc();
+        let mut rng = Pcg32::seeded(3);
+        let params = rng.normal_vec(net.layout().total, 0.3);
+        let x = rng.normal_vec(4 * 6, 1.0);
+        let batch = Batch::f32(x, vec![0, 1, 2, 0], 4);
+        let out = net.step(&params, &batch).unwrap();
+        assert!(out.loss.is_finite());
+        assert_eq!(out.grads.len(), net.layout().total);
+        assert!(out.grads.iter().any(|&g| g != 0.0));
+    }
+
+    #[test]
+    fn embedding_lstm_head_runs_and_learns_shape() {
+        let vocab = 11usize;
+        let mut net = NativeNet::new(
+            "test_lm",
+            vec![
+                Arc::new(Embedding {
+                    name: "embed".into(),
+                    vocab,
+                    dim: 6,
+                }),
+                Arc::new(Lstm {
+                    name: "lstm1".into(),
+                    in_dim: 6,
+                    hidden: 8,
+                }),
+                Arc::new(Fc::new("fc", 8, vocab)),
+            ],
+            5, // seq_len for this test
+            2,
+        );
+        assert!(net.int_input());
+        let mut rng = Pcg32::seeded(4);
+        let params = rng.normal_vec(net.layout().total, 0.2);
+        let (bsz, t) = (2usize, 5usize);
+        let x: Vec<i32> = (0..bsz * t).map(|i| (i % vocab) as i32).collect();
+        let y: Vec<i32> = (0..bsz * t).map(|i| ((i + 1) % vocab) as i32).collect();
+        let batch = Batch::i32(x, y, bsz);
+        let out = net.step(&params, &batch).unwrap();
+        assert!(out.loss.is_finite());
+        // embedding rows for unseen ids keep zero gradient
+        let emb_len = vocab * 6;
+        assert_eq!(net.layout().layers[0].len(), emb_len);
+        // lstm + fc kinds recorded for the compression path
+        assert_eq!(net.layout().layers[1].kind, LayerKind::Lstm);
+        assert_eq!(net.layout().layers[0].kind, LayerKind::Embed);
+        assert_eq!(net.layout().layers[4].kind, LayerKind::Fc);
+    }
+
+    #[test]
+    fn x_length_mismatch_errors() {
+        let mut net = fc_relu_fc();
+        let params = vec![0.0f32; net.layout().total];
+        let batch = Batch::f32(vec![0.0; 7], vec![0], 1);
+        assert!(net.step(&params, &batch).is_err());
+    }
+}

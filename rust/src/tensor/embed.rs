@@ -1,0 +1,71 @@
+//! Embedding-table kernels for the native layer-graph executor.
+//!
+//! A lookup table `[vocab, dim]` maps integer token ids to dense rows. The
+//! forward is a gather (row copies); the backward is a scatter-add of the
+//! output gradient rows into the table gradient — the classic sparse
+//! embedding gradient, which is also why `LayerKind::Embed` compresses like
+//! an fc/lstm layer under AdaComp (few rows touched per minibatch, large
+//! residual build-up elsewhere; L_T default 500, see `compress::Config`).
+
+/// y[r, :] = table[ids[r], :] for every row r. `y` is resized to
+/// `ids.len() * dim`. Ids must be in `[0, vocab)` where
+/// `vocab = table.len() / dim`.
+pub fn gather(table: &[f32], ids: &[i32], dim: usize, y: &mut Vec<f32>) {
+    assert_eq!(table.len() % dim, 0, "table len not a multiple of dim");
+    let vocab = table.len() / dim;
+    y.clear();
+    y.resize(ids.len() * dim, 0.0);
+    for (r, &id) in ids.iter().enumerate() {
+        let id = id as usize;
+        assert!(id < vocab, "token id {id} out of range (vocab {vocab})");
+        y[r * dim..(r + 1) * dim].copy_from_slice(&table[id * dim..(id + 1) * dim]);
+    }
+}
+
+/// dtable[ids[r], :] += dy[r, :] for every row r (accumulates — caller
+/// zeroes `dtable` once per step). Repeated ids accumulate in row order,
+/// so the result is deterministic.
+pub fn scatter_add(dtable: &mut [f32], ids: &[i32], dim: usize, dy: &[f32]) {
+    assert_eq!(dtable.len() % dim, 0, "table len not a multiple of dim");
+    assert_eq!(dy.len(), ids.len() * dim, "dy/ids length mismatch");
+    let vocab = dtable.len() / dim;
+    for (r, &id) in ids.iter().enumerate() {
+        let id = id as usize;
+        assert!(id < vocab, "token id {id} out of range (vocab {vocab})");
+        let dst = &mut dtable[id * dim..(id + 1) * dim];
+        let src = &dy[r * dim..(r + 1) * dim];
+        for (d, &s) in dst.iter_mut().zip(src.iter()) {
+            *d += s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_copies_rows() {
+        // vocab 3, dim 2
+        let table = vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0];
+        let mut y = Vec::new();
+        gather(&table, &[2, 0, 2], 2, &mut y);
+        assert_eq!(y, vec![20.0, 21.0, 0.0, 1.0, 20.0, 21.0]);
+    }
+
+    #[test]
+    fn scatter_accumulates_repeats() {
+        let mut dt = vec![0.0f32; 6];
+        let dy = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        scatter_add(&mut dt, &[1, 1, 0], 2, &dy);
+        assert_eq!(dt, vec![5.0, 6.0, 4.0, 6.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_id_panics() {
+        let table = vec![0.0f32; 4];
+        let mut y = Vec::new();
+        gather(&table, &[2], 2, &mut y);
+    }
+}

@@ -1,0 +1,311 @@
+//! LSTM sequence kernels for the native layer-graph executor.
+//!
+//! Matches the exported JAX cell (`python/compile/layers.py::lstm_layer`):
+//! parameters `wx [in, 4H]`, `wh [H, 4H]`, `b [4H]`, gate order `i, f, g, o`:
+//!
+//! ```text
+//! z = x_t @ wx + h_{t-1} @ wh + b
+//! c_t = sigmoid(f) * c_{t-1} + sigmoid(i) * tanh(g)
+//! h_t = sigmoid(o) * tanh(c_t)
+//! ```
+//!
+//! Activations are batch-major `[B, T, D]`; the forward caches the activated
+//! gates plus `c_t`/`tanh(c_t)` time-major (`[T, B, ·]`) so the backward can
+//! run BPTT without recomputing the nonlinearities. All *output* buffer
+//! arguments are resized by the kernel, so callers reuse them across steps
+//! (the layer tape does); small per-call gather/scratch buffers (`xt`, `z`,
+//! `dz`, ...) are allocated internally — correctness-first, same policy as
+//! the conv kernels, and outside the engine's zero-alloc exchange contract.
+
+use super::ops::{self, sigmoid};
+
+/// Forward over the whole sequence.
+///
+/// * `x` — `[B, T, in]` inputs.
+/// * `gates` — out: activated `i,f,g,o`, `[T, B, 4H]`.
+/// * `c`, `tanh_c` — out: cell state and its tanh, `[T, B, H]`.
+/// * `y` — out: hidden states, `[B, T, H]`.
+#[allow(clippy::too_many_arguments)]
+pub fn forward(
+    x: &[f32],
+    wx: &[f32],
+    wh: &[f32],
+    bias: &[f32],
+    bsz: usize,
+    t_len: usize,
+    in_dim: usize,
+    hidden: usize,
+    gates: &mut Vec<f32>,
+    c: &mut Vec<f32>,
+    tanh_c: &mut Vec<f32>,
+    y: &mut Vec<f32>,
+) {
+    let (h4, h) = (4 * hidden, hidden);
+    assert_eq!(x.len(), bsz * t_len * in_dim);
+    assert_eq!(wx.len(), in_dim * h4);
+    assert_eq!(wh.len(), h * h4);
+    assert_eq!(bias.len(), h4);
+    gates.clear();
+    gates.resize(t_len * bsz * h4, 0.0);
+    c.clear();
+    c.resize(t_len * bsz * h, 0.0);
+    tanh_c.clear();
+    tanh_c.resize(t_len * bsz * h, 0.0);
+    y.clear();
+    y.resize(bsz * t_len * h, 0.0);
+
+    let mut xt = vec![0.0f32; bsz * in_dim];
+    let mut z = vec![0.0f32; bsz * h4];
+    let mut h_prev = vec![0.0f32; bsz * h];
+    let mut c_prev = vec![0.0f32; bsz * h];
+
+    for t in 0..t_len {
+        for b in 0..bsz {
+            let src = (b * t_len + t) * in_dim;
+            xt[b * in_dim..(b + 1) * in_dim].copy_from_slice(&x[src..src + in_dim]);
+        }
+        ops::matmul(&xt, wx, &mut z, bsz, in_dim, h4, false);
+        ops::matmul(&h_prev, wh, &mut z, bsz, h, h4, true);
+
+        let gt = &mut gates[t * bsz * h4..(t + 1) * bsz * h4];
+        let ct = &mut c[t * bsz * h..(t + 1) * bsz * h];
+        let tct = &mut tanh_c[t * bsz * h..(t + 1) * bsz * h];
+        for b in 0..bsz {
+            let zr = &z[b * h4..(b + 1) * h4];
+            for j in 0..h {
+                let ai = sigmoid(zr[j] + bias[j]);
+                let af = sigmoid(zr[h + j] + bias[h + j]);
+                let ag = (zr[2 * h + j] + bias[2 * h + j]).tanh();
+                let ao = sigmoid(zr[3 * h + j] + bias[3 * h + j]);
+                let cc = af * c_prev[b * h + j] + ai * ag;
+                let tc = cc.tanh();
+                gt[b * h4 + j] = ai;
+                gt[b * h4 + h + j] = af;
+                gt[b * h4 + 2 * h + j] = ag;
+                gt[b * h4 + 3 * h + j] = ao;
+                ct[b * h + j] = cc;
+                tct[b * h + j] = tc;
+                y[(b * t_len + t) * h + j] = ao * tc;
+            }
+        }
+        c_prev.copy_from_slice(ct);
+        for b in 0..bsz {
+            let src = (b * t_len + t) * h;
+            h_prev[b * h..(b + 1) * h].copy_from_slice(&y[src..src + h]);
+        }
+    }
+}
+
+/// BPTT over the whole sequence. `gwx`/`gwh`/`gb` are accumulated into
+/// (caller zeroes them once); `dx` (when given) is fully overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn backward(
+    x: &[f32],
+    wx: &[f32],
+    wh: &[f32],
+    gates: &[f32],
+    c: &[f32],
+    tanh_c: &[f32],
+    y: &[f32],
+    dy: &[f32],
+    bsz: usize,
+    t_len: usize,
+    in_dim: usize,
+    hidden: usize,
+    gwx: &mut [f32],
+    gwh: &mut [f32],
+    gb: &mut [f32],
+    mut dx: Option<&mut [f32]>,
+) {
+    let (h4, h) = (4 * hidden, hidden);
+    assert_eq!(dy.len(), bsz * t_len * h);
+    assert_eq!(gwx.len(), in_dim * h4);
+    assert_eq!(gwh.len(), h * h4);
+    assert_eq!(gb.len(), h4);
+    if let Some(d) = dx.as_deref_mut() {
+        assert_eq!(d.len(), bsz * t_len * in_dim);
+    }
+
+    let mut dz = vec![0.0f32; bsz * h4];
+    let mut dh_next = vec![0.0f32; bsz * h];
+    let mut dc_next = vec![0.0f32; bsz * h];
+    let mut xt = vec![0.0f32; bsz * in_dim];
+    let mut h_prev = vec![0.0f32; bsz * h];
+    let mut dxt = vec![0.0f32; bsz * in_dim];
+    let mut gw_scratch = vec![0.0f32; in_dim.max(h) * h4];
+
+    for t in (0..t_len).rev() {
+        let gt = &gates[t * bsz * h4..(t + 1) * bsz * h4];
+        let ct_prev = if t > 0 {
+            Some(&c[(t - 1) * bsz * h..t * bsz * h])
+        } else {
+            None
+        };
+        let tct = &tanh_c[t * bsz * h..(t + 1) * bsz * h];
+        for b in 0..bsz {
+            for j in 0..h {
+                let dh = dy[(b * t_len + t) * h + j] + dh_next[b * h + j];
+                let ai = gt[b * h4 + j];
+                let af = gt[b * h4 + h + j];
+                let ag = gt[b * h4 + 2 * h + j];
+                let ao = gt[b * h4 + 3 * h + j];
+                let tc = tct[b * h + j];
+                let cprev = ct_prev.map_or(0.0, |s| s[b * h + j]);
+                let d_o = dh * tc;
+                let dc = dh * ao * (1.0 - tc * tc) + dc_next[b * h + j];
+                dc_next[b * h + j] = dc * af;
+                dz[b * h4 + j] = dc * ag * ai * (1.0 - ai);
+                dz[b * h4 + h + j] = dc * cprev * af * (1.0 - af);
+                dz[b * h4 + 2 * h + j] = dc * ai * (1.0 - ag * ag);
+                dz[b * h4 + 3 * h + j] = d_o * ao * (1.0 - ao);
+            }
+        }
+        for b in 0..bsz {
+            for j4 in 0..h4 {
+                gb[j4] += dz[b * h4 + j4];
+            }
+        }
+        for b in 0..bsz {
+            let src = (b * t_len + t) * in_dim;
+            xt[b * in_dim..(b + 1) * in_dim].copy_from_slice(&x[src..src + in_dim]);
+            if t > 0 {
+                let hsrc = (b * t_len + t - 1) * h;
+                h_prev[b * h..(b + 1) * h].copy_from_slice(&y[hsrc..hsrc + h]);
+            } else {
+                h_prev[b * h..(b + 1) * h].iter_mut().for_each(|v| *v = 0.0);
+            }
+        }
+        let gs = &mut gw_scratch[..in_dim * h4];
+        ops::matmul_at_b(&xt, &dz, gs, in_dim, bsz, h4);
+        ops::axpy(1.0, gs, gwx);
+        let gs = &mut gw_scratch[..h * h4];
+        ops::matmul_at_b(&h_prev, &dz, gs, h, bsz, h4);
+        ops::axpy(1.0, gs, gwh);
+        // dh_{t-1} += nothing else reaches it besides dz @ wh^T (dy[t-1] is
+        // added at the top of the next iteration)
+        ops::matmul_a_bt(&dz, wh, &mut dh_next, bsz, h4, h);
+        if let Some(d) = dx.as_deref_mut() {
+            ops::matmul_a_bt(&dz, wx, &mut dxt, bsz, h4, in_dim);
+            for b in 0..bsz {
+                let dst = (b * t_len + t) * in_dim;
+                d[dst..dst + in_dim].copy_from_slice(&dxt[b * in_dim..(b + 1) * in_dim]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn loss_of(
+        x: &[f32],
+        wx: &[f32],
+        wh: &[f32],
+        b: &[f32],
+        bsz: usize,
+        t: usize,
+        i: usize,
+        h: usize,
+    ) -> f32 {
+        let (mut g, mut c, mut tc, mut y) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        forward(x, wx, wh, b, bsz, t, i, h, &mut g, &mut c, &mut tc, &mut y);
+        // simple scalar loss: sum of squares / 2 -> dy = y
+        y.iter().map(|v| 0.5 * v * v).sum()
+    }
+
+    #[test]
+    fn bptt_matches_numerical() {
+        let (bsz, t, i, h) = (2usize, 3usize, 4usize, 3usize);
+        let mut rng = Pcg32::seeded(5);
+        let x = rng.normal_vec(bsz * t * i, 1.0);
+        let wx = rng.normal_vec(i * 4 * h, 0.4);
+        let wh = rng.normal_vec(h * 4 * h, 0.4);
+        let mut bias = vec![0.0f32; 4 * h];
+        bias[h..2 * h].iter_mut().for_each(|v| *v = 1.0);
+
+        let (mut g, mut c, mut tc, mut y) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        forward(&x, &wx, &wh, &bias, bsz, t, i, h, &mut g, &mut c, &mut tc, &mut y);
+        let dy = y.clone(); // d(sum y^2/2)/dy = y
+        let mut gwx = vec![0.0f32; wx.len()];
+        let mut gwh = vec![0.0f32; wh.len()];
+        let mut gb = vec![0.0f32; bias.len()];
+        let mut dx = vec![0.0f32; x.len()];
+        backward(
+            &x, &wx, &wh, &g, &c, &tc, &y, &dy, bsz, t, i, h, &mut gwx, &mut gwh, &mut gb,
+            Some(&mut dx),
+        );
+
+        let eps = 1e-2f32;
+        let check = |ana: &[f32], param: &dyn Fn(usize, f32) -> f32, n: usize, tag: &str| {
+            let mut rng = Pcg32::seeded(9);
+            for _ in 0..8 {
+                let k = rng.below(n as u32) as usize;
+                let lp = param(k, eps);
+                let lm = param(k, -eps);
+                let num = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (num - ana[k]).abs() < 2e-2 * num.abs().max(1.0),
+                    "{tag}[{k}] num {num} ana {}",
+                    ana[k]
+                );
+            }
+        };
+        check(
+            &gwx,
+            &|k, e| {
+                let mut p = wx.clone();
+                p[k] += e;
+                loss_of(&x, &p, &wh, &bias, bsz, t, i, h)
+            },
+            wx.len(),
+            "gwx",
+        );
+        check(
+            &gwh,
+            &|k, e| {
+                let mut p = wh.clone();
+                p[k] += e;
+                loss_of(&x, &wx, &p, &bias, bsz, t, i, h)
+            },
+            wh.len(),
+            "gwh",
+        );
+        check(
+            &gb,
+            &|k, e| {
+                let mut p = bias.clone();
+                p[k] += e;
+                loss_of(&x, &wx, &wh, &p, bsz, t, i, h)
+            },
+            bias.len(),
+            "gb",
+        );
+        check(
+            &dx,
+            &|k, e| {
+                let mut p = x.clone();
+                p[k] += e;
+                loss_of(&p, &wx, &wh, &bias, bsz, t, i, h)
+            },
+            x.len(),
+            "dx",
+        );
+    }
+
+    #[test]
+    fn zero_params_stay_at_rest() {
+        // all-zero parameters: gates sit at sigmoid(0)=0.5 / tanh(0)=0, so
+        // the cell never accumulates state and the output stays exactly 0
+        let (bsz, t, i, h) = (1usize, 4usize, 2usize, 2usize);
+        let x = vec![0.0f32; bsz * t * i];
+        let wx = vec![0.0f32; i * 4 * h];
+        let wh = vec![0.0f32; h * 4 * h];
+        let bias = vec![0.0f32; 4 * h];
+        let (mut g, mut c, mut tc, mut y) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        forward(&x, &wx, &wh, &bias, bsz, t, i, h, &mut g, &mut c, &mut tc, &mut y);
+        assert!(y.iter().all(|&v| v == 0.0));
+        assert!(c.iter().all(|&v| v == 0.0));
+    }
+}

@@ -7,6 +7,8 @@
 //! type provides the shared vector algebra (optimizers, reductions, norms).
 
 pub mod conv;
+pub mod embed;
+pub mod lstm;
 pub mod ops;
 
 /// Dense f32 tensor, row-major.

@@ -50,6 +50,11 @@ use crate::util::timer::Stopwatch;
 pub struct TrainConfig {
     pub run_name: String,
     pub model_name: String,
+    /// Compute backend the run was wired with: "native" (hermetic
+    /// layer-graph executors), "pjrt" (AOT artifacts), or "auto" (resolve
+    /// at workload build time). Informational to the engine itself — the
+    /// harness resolves it before the engine runs.
+    pub backend: String,
     pub n_learners: usize,
     pub batch_per_learner: usize,
     pub epochs: usize,
@@ -81,6 +86,7 @@ impl Default for TrainConfig {
         TrainConfig {
             run_name: "run".into(),
             model_name: "model".into(),
+            backend: "auto".into(),
             n_learners: 1,
             batch_per_learner: 32,
             epochs: 5,

@@ -1,0 +1,192 @@
+//! Finite-difference gradient checks for every `runtime::net::Layer`
+//! backward (fc, relu, conv, maxpool, embedding, lstm) on tiny shapes.
+//!
+//! Each case builds a small `NativeNet` ending in the softmax-xent head,
+//! takes the analytic flat gradient from one `step`, and compares a random
+//! sample of coordinates against central differences of the loss. Layers
+//! are checked both in single-layer nets (isolating their parameter
+//! gradients) and composed stacks (exercising their input-gradient `dx`
+//! chains).
+
+use std::sync::Arc;
+
+use adacomp::runtime::net::{Conv5x5Same, Embedding, Fc, Layer, Lstm, MaxPool2, NativeNet, Relu};
+use adacomp::runtime::{Batch, Executor};
+use adacomp::util::rng::Pcg32;
+
+/// Sample `probes` coordinates of the flat gradient and compare against
+/// central differences at `eps`.
+fn check_grads(net: &mut NativeNet, params: &[f32], batch: &Batch, eps: f32, probes: usize, tag: &str) {
+    let out = net.step(params, batch).unwrap();
+    assert!(out.loss.is_finite(), "{tag}: non-finite loss");
+    assert_eq!(out.grads.len(), params.len(), "{tag}");
+    let mut rng = Pcg32::seeded(0xfd + params.len() as u64);
+    for _ in 0..probes {
+        let i = rng.below(params.len() as u32) as usize;
+        let mut pp = params.to_vec();
+        pp[i] += eps;
+        let mut pm = params.to_vec();
+        pm[i] -= eps;
+        let lp = net.step(&pp, batch).unwrap().loss;
+        let lm = net.step(&pm, batch).unwrap().loss;
+        let num = (lp - lm) / (2.0 * eps);
+        let ana = out.grads[i];
+        assert!(
+            (num - ana).abs() < 3e-2_f32.max(0.1 * num.abs()),
+            "{tag}: grad[{i}] numerical {num} vs analytic {ana}"
+        );
+    }
+}
+
+fn f32_batch(bsz: usize, elems: usize, labels: Vec<i32>, seed: u64) -> Batch {
+    let mut rng = Pcg32::seeded(seed);
+    Batch::f32(rng.normal_vec(bsz * elems, 1.0), labels, bsz)
+}
+
+#[test]
+fn fc_backward() {
+    let mut net = NativeNet::new("gc_fc", vec![Arc::new(Fc::new("fc", 7, 4)) as Arc<dyn Layer>], 7, 4);
+    let mut rng = Pcg32::seeded(1);
+    let params = rng.normal_vec(net.layout().total, 0.4);
+    let batch = f32_batch(5, 7, vec![0, 1, 2, 3, 1], 11);
+    check_grads(&mut net, &params, &batch, 1e-3, 16, "fc");
+}
+
+#[test]
+fn fc_relu_chain_backward() {
+    // two fc layers with a relu between: perturbing fc1 params exercises
+    // Relu::backward and Fc::backward's dx path
+    let mut net = NativeNet::new(
+        "gc_mlp",
+        vec![
+            Arc::new(Fc::new("fc1", 6, 5)) as Arc<dyn Layer>,
+            Arc::new(Relu),
+            Arc::new(Fc::new("fc2", 5, 3)),
+        ],
+        6,
+        4,
+    );
+    let mut rng = Pcg32::seeded(2);
+    let params = rng.normal_vec(net.layout().total, 0.4);
+    let batch = f32_batch(4, 6, vec![2, 0, 1, 2], 12);
+    check_grads(&mut net, &params, &batch, 1e-3, 16, "fc+relu");
+}
+
+#[test]
+fn conv_maxpool_backward() {
+    // conv -> relu -> pool -> fc: checks Conv5x5Same and MaxPool2 backward
+    // plus their dx chains (pool and relu route through argmax/mask)
+    let (h, w, cin, cout) = (4usize, 4usize, 2usize, 3usize);
+    let mut net = NativeNet::new(
+        "gc_cnn",
+        vec![
+            Arc::new(Conv5x5Same {
+                name: "conv1".into(),
+                h,
+                w,
+                cin,
+                cout,
+            }) as Arc<dyn Layer>,
+            Arc::new(Relu),
+            Arc::new(MaxPool2 { h, w, c: cout }),
+            Arc::new(Fc::new("fc", (h / 2) * (w / 2) * cout, 3)),
+        ],
+        h * w * cin,
+        4,
+    );
+    let mut rng = Pcg32::seeded(3);
+    let params = rng.normal_vec(net.layout().total, 0.3);
+    let batch = f32_batch(3, h * w * cin, vec![0, 2, 1], 13);
+    // smaller eps: the pooling argmax makes the loss only piecewise smooth,
+    // so keep perturbations well inside the current max's margin
+    check_grads(&mut net, &params, &batch, 5e-3, 14, "conv+pool");
+}
+
+#[test]
+fn embedding_backward() {
+    let vocab = 9usize;
+    let mut net = NativeNet::new(
+        "gc_embed",
+        vec![Arc::new(Embedding {
+            name: "embed".into(),
+            vocab,
+            dim: 5,
+        }) as Arc<dyn Layer>],
+        3,
+        4,
+    );
+    let mut rng = Pcg32::seeded(4);
+    let params = rng.normal_vec(net.layout().total, 0.5);
+    // logits = the gathered rows themselves (head over dim=5 classes)
+    let (bsz, t) = (4usize, 3usize);
+    let x: Vec<i32> = (0..bsz * t).map(|i| ((i * 5) % vocab) as i32).collect();
+    let y: Vec<i32> = (0..bsz * t).map(|i| (i % 5) as i32).collect();
+    let batch = Batch::i32(x, y, bsz);
+    check_grads(&mut net, &params, &batch, 1e-3, 16, "embedding");
+}
+
+#[test]
+fn lstm_backward() {
+    // f32-input LSTM with an fc head: checks Lstm::backward parameter
+    // grads; fc perturbations check nothing new but come along for free
+    let (in_dim, hidden) = (4usize, 3usize);
+    let mut net = NativeNet::new(
+        "gc_lstm",
+        vec![
+            Arc::new(Lstm {
+                name: "lstm1".into(),
+                in_dim,
+                hidden,
+            }) as Arc<dyn Layer>,
+            Arc::new(Fc::new("fc", hidden, 4)),
+        ],
+        0, // in_elems pinned per batch below
+        4,
+    );
+    let (bsz, t) = (3usize, 4usize);
+    net.set_in_elems(t * in_dim);
+    let mut rng = Pcg32::seeded(5);
+    let params = rng.normal_vec(net.layout().total, 0.4);
+    let x = rng.normal_vec(bsz * t * in_dim, 1.0);
+    let y: Vec<i32> = (0..bsz * t).map(|i| (i % 4) as i32).collect();
+    let batch = Batch::f32(x, y, bsz);
+    check_grads(&mut net, &params, &batch, 1e-2, 16, "lstm");
+}
+
+#[test]
+fn full_char_lstm_stack_backward() {
+    // the composed recurrent model: embedding -> lstm -> lstm -> fc. This
+    // exercises every dx chain of the tentpole stack (fc -> lstm -> lstm ->
+    // embedding scatter).
+    let vocab = 7usize;
+    let mut net = NativeNet::new(
+        "gc_char",
+        vec![
+            Arc::new(Embedding {
+                name: "embed".into(),
+                vocab,
+                dim: 4,
+            }) as Arc<dyn Layer>,
+            Arc::new(Lstm {
+                name: "lstm1".into(),
+                in_dim: 4,
+                hidden: 5,
+            }),
+            Arc::new(Lstm {
+                name: "lstm2".into(),
+                in_dim: 5,
+                hidden: 4,
+            }),
+            Arc::new(Fc::new("fc", 4, vocab)),
+        ],
+        4,
+        4,
+    );
+    let mut rng = Pcg32::seeded(6);
+    let params = rng.normal_vec(net.layout().total, 0.4);
+    let (bsz, t) = (3usize, 4usize);
+    let x: Vec<i32> = (0..bsz * t).map(|_| rng.below(vocab as u32) as i32).collect();
+    let y: Vec<i32> = x.iter().map(|&c| (c + 1) % vocab as i32).collect();
+    let batch = Batch::i32(x, y, bsz);
+    check_grads(&mut net, &params, &batch, 1e-2, 20, "char-lstm stack");
+}
