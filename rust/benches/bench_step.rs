@@ -2,13 +2,20 @@
 //!
 //! Always runs the hermetic **multi-learner engine sweep** on the synthetic
 //! FC workload (NativeMlp, no artifacts): learner counts 1/4/16, sequential
-//! (threads=1) vs parallel (threads=0 = auto), plus isolated pack/exchange
-//! timings — and emits machine-readable `BENCH_engine.json` (steps/sec,
-//! pack-ns, exchange-ns) so future PRs have a perf trajectory to regress
-//! against. The parallel and sequential runs are asserted bit-identical
-//! (the engine's determinism contract). A char-LSTM row (the paper's
-//! recurrent workload on the native layer-graph backend) rides along under
-//! the `char_lstm` key.
+//! (threads=1) vs parallel (threads=0 = auto), `--exchange barrier` vs the
+//! layer-streamed overlap pipeline, plus isolated pack/exchange timings —
+//! and emits machine-readable `BENCH_engine.json` so future PRs have a perf
+//! trajectory to regress against. Per row: wall steps/sec, the simulated
+//! step time of the streamed pipeline (`sim_step_s`) against the barrier
+//! placement (`sim_step_barrier_s`, same measured compute + serialized
+//! comm) and a `projected_speedup` column (overlapped+compressed vs
+//! dense/barrier — the paper's compression rates as step-time wins). All
+//! runs are asserted bit-identical across thread counts AND exchange modes
+//! (the engine's determinism contract). A `pool` entry records the
+//! persistent worker pool's per-step constant next to what the retired
+//! per-step `thread::scope` spawn used to cost. A char-LSTM row (the
+//! paper's recurrent workload on the native layer-graph backend) rides
+//! along under the `char_lstm` key.
 //!
 //! With `--features pjrt` it additionally reports the per-model Algorithm-1
 //! breakdown over the AOT artifacts (skips models that are missing).
@@ -30,9 +37,9 @@ const DIMS: &[usize] = &[128, 256, 10];
 const BATCH: usize = 32;
 const STEPS: usize = 40;
 
-fn engine_cfg(learners: usize, threads: usize) -> TrainConfig {
+fn engine_cfg(learners: usize, threads: usize, exchange: &str) -> TrainConfig {
     TrainConfig {
-        run_name: format!("bench-{learners}L-{threads}T"),
+        run_name: format!("bench-{learners}L-{threads}T-{exchange}"),
         model_name: "native_mlp".into(),
         n_learners: learners,
         batch_per_learner: BATCH,
@@ -45,22 +52,31 @@ fn engine_cfg(learners: usize, threads: usize) -> TrainConfig {
         },
         seed: 17,
         threads,
+        exchange: exchange.into(),
         ..TrainConfig::default()
     }
 }
 
-/// One engine run; returns (wall seconds, final train loss bits).
-fn run_engine(learners: usize, threads: usize) -> anyhow::Result<(f64, u64)> {
+/// One engine run; returns (wall seconds, final train loss bits, fabric).
+fn run_engine(
+    learners: usize,
+    threads: usize,
+    exchange: &str,
+) -> anyhow::Result<(f64, u64, adacomp::comm::FabricStats)> {
     let ds = GaussianMixture::new(7, DIMS[0], *DIMS.last().unwrap(), 4096, 64, 0.5);
     let exe = NativeMlp::new(DIMS, 64);
     let params = exe.init_params(3);
     let layout = exe.layout().clone();
     let mut engine = Engine::new(&exe, &ds, &layout);
-    let cfg = engine_cfg(learners, threads);
+    let cfg = engine_cfg(learners, threads, exchange);
     let sw = Stopwatch::start();
     let rec = engine.run(&cfg, &params)?;
     let wall = sw.secs();
-    Ok((wall, rec.epochs.last().unwrap().train_loss.to_bits()))
+    Ok((
+        wall,
+        rec.epochs.last().unwrap().train_loss.to_bits(),
+        rec.fabric,
+    ))
 }
 
 /// Isolated hot-path timings for one (layout, compression, learner count):
@@ -125,8 +141,16 @@ fn engine_sweep() -> anyhow::Result<()> {
     let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("# engine sweep: NativeMlp {DIMS:?}, batch {BATCH}, {STEPS} steps, adacomp lt=50");
     println!(
-        "{:<9} {:>10} {:>12} {:>12} {:>9} {:>12} {:>12} {:>10}",
-        "learners", "seq-wall", "par-wall", "speedup", "bit-eq", "steps/s", "pack", "exchange"
+        "{:<9} {:>10} {:>12} {:>12} {:>9} {:>12} {:>13} {:>13} {:>9}",
+        "learners",
+        "seq-wall",
+        "par-wall",
+        "strm-wall",
+        "bit-eq",
+        "steps/s",
+        "sim-step",
+        "sim-barrier",
+        "proj-x"
     );
 
     let mlp_layout = NativeMlp::new(DIMS, 64).layout().clone();
@@ -136,33 +160,66 @@ fn engine_sweep() -> anyhow::Result<()> {
     };
     let mut rows: Vec<Json> = Vec::new();
     for learners in [1usize, 4, 16] {
-        let (seq_wall, seq_bits) = run_engine(learners, 1)?;
-        let (par_wall, par_bits) = run_engine(learners, 0)?;
-        let bit_eq = seq_bits == par_bits;
+        let (seq_wall, seq_bits, _) = run_engine(learners, 1, "barrier")?;
+        let (par_wall, par_bits, barrier_fab) = run_engine(learners, 0, "barrier")?;
+        let (strm_wall, strm_bits, strm_fab) = run_engine(learners, 0, "streamed")?;
+        let bit_eq = seq_bits == par_bits && seq_bits == strm_bits;
         let (pack_ns, ex_ns) = hot_path(&mlp_layout, learners, &mlp_comp);
-        let steps_per_sec = STEPS as f64 / par_wall;
+        let steps_per_sec = STEPS as f64 / strm_wall;
+
+        // simulated step times: the streamed run's overlapped placement vs
+        // the *same* measured compute behind a barrier (structural win), and
+        // the independent barrier run's own placement for cross-checking
+        let sim_step = strm_fab.sim_step_s();
+        let sim_step_barrier = strm_fab.sim_barrier_s / strm_fab.steps.max(1) as f64;
+        let projected = strm_fab.projected_speedup();
         println!(
-            "{:<9} {:>9.3}s {:>11.3}s {:>11.2}x {:>9} {:>12.1} {:>12} {:>12}",
+            "{:<9} {:>9.3}s {:>11.3}s {:>11.3}s {:>9} {:>12.1} {:>12.2}ms {:>12.2}ms {:>8.2}x",
             learners,
             seq_wall,
             par_wall,
-            seq_wall / par_wall,
+            strm_wall,
             bit_eq,
             steps_per_sec,
-            fmt_ns(pack_ns),
-            fmt_ns(ex_ns)
+            1e3 * sim_step,
+            1e3 * sim_step_barrier,
+            projected
         );
-        assert!(bit_eq, "threads=0 and threads=1 must be bit-identical");
+        assert!(
+            bit_eq,
+            "threads=0/1 and streamed/barrier must all be bit-identical"
+        );
+        if learners > 1 {
+            // the overlap pipeline's simulated step must be strictly below
+            // the barrier placement of the very same run (acceptance gate)
+            assert!(
+                strm_fab.sim_overlap_s < strm_fab.sim_barrier_s,
+                "{learners}L: overlap {} !< barrier {}",
+                strm_fab.sim_overlap_s,
+                strm_fab.sim_barrier_s
+            );
+        }
         rows.push(json::obj(vec![
             ("learners", json::num(learners as f64)),
             ("threads_auto", json::num(auto as f64)),
+            ("scheme", json::s("adacomp")),
             ("seq_wall_secs", json::num(seq_wall)),
             ("par_wall_secs", json::num(par_wall)),
+            ("streamed_wall_secs", json::num(strm_wall)),
             ("speedup", json::num(seq_wall / par_wall)),
             ("steps_per_sec", json::num(steps_per_sec)),
             ("pack_ns", json::num(pack_ns)),
             ("exchange_ns", json::num(ex_ns)),
+            // streamed pipeline placement (overlapped), barrier placement of
+            // the same compute, and the independent barrier run
+            ("sim_step_s", json::num(sim_step)),
+            ("sim_step_barrier_s", json::num(sim_step_barrier)),
+            ("sim_step_barrier_run_s", json::num(barrier_fab.sim_step_s())),
+            // overlapped+compressed vs dense/barrier — the paper's rates as
+            // wall-clock step-time wins
+            ("projected_speedup", json::num(projected)),
             ("bit_identical", Json::Bool(bit_eq)),
+            ("worker_pool", Json::Bool(true)),
         ]));
     }
 
@@ -178,11 +235,71 @@ fn engine_sweep() -> anyhow::Result<()> {
             ]),
         ),
         ("engine", json::arr(rows)),
+        ("pool", pool_overhead()?),
         ("char_lstm", char_lstm_row()?),
     ]);
     std::fs::write("BENCH_engine.json", doc.to_string())?;
-    println!("\nwrote BENCH_engine.json (steps/sec, pack-ns, exchange-ns; MLP sweep + char_lstm row)");
+    println!(
+        "\nwrote BENCH_engine.json (wall + simulated step times, projected_speedup, pool \
+         constant, char_lstm row)"
+    );
     Ok(())
+}
+
+/// The persistent-pool constant-cost win: per-step cost of a pooled engine
+/// step on a near-trivial workload (where the per-step constant dominates)
+/// next to what the retired per-step `thread::scope` spawn/join costs for
+/// the same thread count.
+fn pool_overhead() -> anyhow::Result<Json> {
+    const TINY_STEPS: usize = 200;
+    let threads = 4usize;
+
+    // what the old engine paid every step, measured directly
+    let iters = 200usize;
+    let sw = Stopwatch::start();
+    for _ in 0..iters {
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| {});
+            }
+        });
+    }
+    let scoped_spawn_ns = sw.secs() * 1e9 / iters as f64;
+
+    // pooled engine on a tiny model: per-step wall ≈ pool constant + ε
+    let ds = GaussianMixture::new(5, 8, 4, 512, 32, 0.5);
+    let exe = NativeMlp::new(&[8, 8, 4], 16);
+    let params = exe.init_params(2);
+    let layout = exe.layout().clone();
+    let cfg = TrainConfig {
+        run_name: "bench-pool-overhead".into(),
+        model_name: "native_mlp".into(),
+        n_learners: 4,
+        batch_per_learner: 4,
+        epochs: 1,
+        steps_per_epoch: TINY_STEPS,
+        lr: LrSchedule::Constant(0.05),
+        compression: Config::with_kind(Kind::None),
+        seed: 3,
+        threads,
+        ..TrainConfig::default()
+    };
+    let mut engine = Engine::new(&exe, &ds, &layout);
+    let sw = Stopwatch::start();
+    engine.run(&cfg, &params)?;
+    let pool_step_ns = sw.secs() * 1e9 / TINY_STEPS as f64;
+
+    println!(
+        "\n# pool constant ({threads} workers): scoped spawn {} / step (retired) vs pooled \
+         step {} (tiny model, all-in)",
+        fmt_ns(scoped_spawn_ns),
+        fmt_ns(pool_step_ns)
+    );
+    Ok(json::obj(vec![
+        ("threads", json::num(threads as f64)),
+        ("scoped_spawn_ns_per_step", json::num(scoped_spawn_ns)),
+        ("pool_step_ns", json::num(pool_step_ns)),
+    ]))
 }
 
 /// The paper's recurrent workload on the native layer-graph backend:
@@ -256,6 +373,12 @@ fn char_lstm_row() -> anyhow::Result<Json> {
         ("steps_per_sec", json::num(steps_per_sec)),
         ("pack_ns", json::num(pack_ns)),
         ("exchange_ns", json::num(ex_ns)),
+        ("sim_step_s", json::num(par_rec.fabric.sim_step_s())),
+        (
+            "sim_step_barrier_s",
+            json::num(par_rec.fabric.sim_barrier_s / par_rec.fabric.steps.max(1) as f64),
+        ),
+        ("projected_speedup", json::num(par_rec.fabric.projected_speedup())),
         ("bit_identical", Json::Bool(bit_eq)),
     ]))
 }

@@ -8,6 +8,15 @@
 //! wire-format bytes, and an analytic alpha-beta (latency + bandwidth) model
 //! turns byte counts into simulated exchange time so benches can compare
 //! topologies and compression rates in seconds, not just bytes.
+//!
+//! **Overlap timeline.** Beyond per-round comm time, the fabric folds each
+//! training step onto a simulated step timeline ([`Fabric::record_step`]):
+//! the engine supplies the step's measured compute span (backward + pack
+//! wall time) and three comm placements — overlapped behind backward (the
+//! streamed pipeline), serialized after a barrier, and the serialized dense
+//! no-compression baseline. `sim_step_s()` and `projected_speedup()` turn
+//! the paper's compression *rates* into projected wall-clock step-time wins
+//! (DESIGN.md §Overlap pipeline).
 
 /// Link parameters for the alpha-beta cost model.
 #[derive(Debug, Clone, Copy)]
@@ -41,12 +50,25 @@ pub struct FabricStats {
     pub bytes_up: u64,
     /// Total bytes delivered to learners.
     pub bytes_down: u64,
-    /// Number of exchange rounds.
+    /// Number of exchange rounds (one per step on the barrier path, one per
+    /// layer per step on the streamed path).
     pub rounds: u64,
     /// Simulated communication seconds (sum over rounds of the critical path).
     pub sim_time_s: f64,
     /// What the same rounds would have cost uncompressed (dense f32).
     pub dense_bytes_equiv: u64,
+    /// Steps folded into the step timeline (`record_step` calls).
+    pub steps: u64,
+    /// Σ per-step critical path with comm overlapped behind backward — the
+    /// streamed pipeline's step time. On the barrier path this equals
+    /// `sim_barrier_s` (nothing overlaps).
+    pub sim_overlap_s: f64,
+    /// Σ per-step compute + serialized comm: the same packets behind a full
+    /// barrier.
+    pub sim_barrier_s: f64,
+    /// Σ per-step compute + serialized *dense f32* comm: the
+    /// no-compression, no-overlap baseline.
+    pub sim_dense_s: f64,
 }
 
 impl FabricStats {
@@ -56,6 +78,27 @@ impl FabricStats {
             1.0
         } else {
             self.dense_bytes_equiv as f64 / self.bytes_up as f64
+        }
+    }
+
+    /// Mean simulated step time of the run's actual exchange placement
+    /// (overlapped on the streamed path, serialized on the barrier path).
+    pub fn sim_step_s(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.sim_overlap_s / self.steps as f64
+        }
+    }
+
+    /// Projected end-to-end speedup of this run's placement (overlapped +
+    /// compressed) over the dense/barrier baseline — the paper's ~40X/~200X
+    /// compression rates expressed as step-time wins.
+    pub fn projected_speedup(&self) -> f64 {
+        if self.sim_overlap_s <= 0.0 {
+            1.0
+        } else {
+            self.sim_dense_s / self.sim_overlap_s
         }
     }
 }
@@ -95,6 +138,27 @@ impl Fabric {
         self.stats.dense_bytes_equiv += dense_equiv as u64;
     }
 
+    /// Fold one finished training step onto the simulated step timeline.
+    ///
+    /// * `compute_s`: measured wall span of the learner phase (fwd/bwd+pack),
+    /// * `comm_serial_s`: Σ per-round comm time of the step's exchanges,
+    /// * `overlap_end_s`: when the last exchange finished on the overlap
+    ///   timeline (streamed: pipelined behind backward; barrier:
+    ///   `compute_s + comm_serial_s`),
+    /// * `dense_comm_s`: Σ per-round dense-baseline comm time.
+    pub fn record_step(
+        &mut self,
+        compute_s: f64,
+        comm_serial_s: f64,
+        overlap_end_s: f64,
+        dense_comm_s: f64,
+    ) {
+        self.stats.steps += 1;
+        self.stats.sim_overlap_s += overlap_end_s.max(compute_s);
+        self.stats.sim_barrier_s += compute_s + comm_serial_s;
+        self.stats.sim_dense_s += compute_s + dense_comm_s;
+    }
+
     pub fn reset(&mut self) {
         self.stats = FabricStats::default();
     }
@@ -126,5 +190,23 @@ mod tests {
         assert!((f.stats.effective_rate() - 8.0).abs() < 1e-12);
         f.reset();
         assert_eq!(f.stats.rounds, 0);
+    }
+
+    #[test]
+    fn step_timeline_overlap_vs_barrier_vs_dense() {
+        let mut f = Fabric::new(LinkModel::default());
+        // compute 10ms; compressed comm 2ms total, finishing at 10.5ms when
+        // overlapped; dense comm would take 40ms serialized.
+        f.record_step(10e-3, 2e-3, 10.5e-3, 40e-3);
+        assert_eq!(f.stats.steps, 1);
+        assert!((f.stats.sim_overlap_s - 10.5e-3).abs() < 1e-12);
+        assert!((f.stats.sim_barrier_s - 12e-3).abs() < 1e-12);
+        assert!((f.stats.sim_dense_s - 50e-3).abs() < 1e-12);
+        assert!(f.stats.sim_overlap_s < f.stats.sim_barrier_s);
+        assert!((f.stats.sim_step_s() - 10.5e-3).abs() < 1e-12);
+        assert!((f.stats.projected_speedup() - 50.0 / 10.5).abs() < 1e-9);
+        // overlap end can never beat pure compute: record_step clamps
+        f.record_step(5e-3, 1e-3, 1e-3, 2e-3);
+        assert!((f.stats.sim_overlap_s - 15.5e-3).abs() < 1e-12);
     }
 }

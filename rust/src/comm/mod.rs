@@ -4,4 +4,4 @@ pub mod fabric;
 pub mod topology;
 
 pub use fabric::{Fabric, FabricStats, LinkModel};
-pub use topology::{ParamServer, Reduced, Ring, Topology};
+pub use topology::{ParamServer, Reduced, Ring, RoundCost, Topology};

@@ -18,15 +18,48 @@
 //! reduction of *sparse ternary* vectors), and the reduce is a dense
 //! accumulate into a reusable buffer.
 //!
-//! Hot-path contract (see DESIGN.md §Threading): `exchange_into` reuses the
-//! caller's [`Reduced`] buffers and each topology's internal scratch, so a
+//! Two exchange granularities share those semantics:
+//!
+//! * `exchange_into` — the **barrier** path: one round covering every layer,
+//!   each learner's layers coalesced into one message (one latency charge
+//!   per learner per direction).
+//! * `exchange_layer_into` — the **streamed** path: one round covering a
+//!   single layer, so the engine can reduce layer *k* while layers
+//!   *k-1..0* are still in backward. Each layer travels as its own message,
+//!   so the per-message latency is charged per layer — the honest cost of
+//!   streaming. The float math is identical to the corresponding slice of
+//!   the barrier reduce (same learner-id summation order per element).
+//!
+//! Both return a [`RoundCost`] so the engine can place the round on the
+//! overlap timeline ([`Fabric::record_step`](super::fabric::Fabric)).
+//!
+//! Hot-path contract (see DESIGN.md §Threading): both exchange entry points
+//! reuse the caller's buffers and each topology's internal scratch, so a
 //! steady-state exchange performs **zero heap allocation** (pinned by
 //! rust/tests/alloc_free.rs). Packets are reduced in learner-id order — the
 //! float summation order is part of the engine's determinism contract.
 
-use super::fabric::Fabric;
+use super::fabric::{Fabric, LinkModel};
 use crate::compress::wire::HEADER_BYTES;
 use crate::compress::Packet;
+
+/// Valid topology names for [`build`] (aliases listed in the error text).
+pub const NAMES: &[&str] = &["ring", "ps"];
+
+/// Simulated cost of one exchange round (whole-step barrier round or one
+/// layer's streamed round).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundCost {
+    /// Critical-path seconds for the compressed packets actually sent.
+    pub comm_s: f64,
+    /// What the same round would have cost with dense f32 payloads, at the
+    /// same message granularity (whole step for `exchange_into`, one layer
+    /// for `exchange_layer_into`). For the run-level no-compression
+    /// baseline use [`Topology::dense_round_s`] — the coalesced dense
+    /// barrier round — so the baseline does not vary with the exchange
+    /// mode's message granularity.
+    pub dense_comm_s: f64,
+}
 
 /// The dense per-layer sum of every learner's packet. Allocate once with
 /// [`Reduced::new`] and reuse across rounds via `exchange_into`.
@@ -59,19 +92,46 @@ impl Reduced {
 pub trait Topology: Send {
     fn name(&self) -> &'static str;
 
-    /// One synchronous exchange round, allocation-free in steady state.
+    /// One synchronous **barrier** exchange round, allocation-free in steady
+    /// state.
     ///
     /// `per_learner[l]` holds learner l's packets, one per layer, in layer
     /// order. `layer_lens` gives each layer's dense length. Zeroes `out` and
-    /// accumulates the per-layer dense sums into it (learner-id order), and
-    /// records bytes/time on `fabric`.
+    /// accumulates the per-layer dense sums into it (learner-id order),
+    /// records bytes/time on `fabric`, and returns the round's cost.
     fn exchange_into(
         &mut self,
         per_learner: &[Vec<Packet>],
         layer_lens: &[usize],
         fabric: &mut Fabric,
         out: &mut Reduced,
-    );
+    ) -> RoundCost;
+
+    /// One **streamed** exchange round covering a single layer: `packets`
+    /// holds one packet per learner in learner-id order, all for `layer`
+    /// (dense length `len`). Zeroes `out` (the layer's dense sum buffer)
+    /// and accumulates into it in learner-id order — bit-identical to the
+    /// same layer's slice of `exchange_into`. Allocation-free in steady
+    /// state. The layer travels as its own message, so latency is charged
+    /// per layer.
+    fn exchange_layer_into(
+        &mut self,
+        layer: usize,
+        packets: &[Packet],
+        len: usize,
+        fabric: &mut Fabric,
+        out: &mut [f32],
+    ) -> RoundCost;
+
+    /// Simulated cost of one coalesced **dense-f32 barrier** round — the
+    /// no-compression baseline both exchange granularities are judged
+    /// against: every learner ships all layers as one message each way.
+    /// Constant for a fixed (layout, learner count), so the engine computes
+    /// it once per run; using the coalesced structure keeps the baseline
+    /// identical across `--exchange` modes (the streamed path's extra
+    /// per-layer latency is charged to the streamed packets, never to the
+    /// dense baseline).
+    fn dense_round_s(&self, layer_lens: &[usize], n_learners: usize, link: &LinkModel) -> f64;
 
     /// Convenience wrapper that allocates a fresh `Reduced` per round
     /// (benches/tests; the engine uses `exchange_into`).
@@ -99,6 +159,15 @@ fn reduce_into(per_learner: &[Vec<Packet>], layer_lens: &[usize], out: &mut Redu
     }
 }
 
+/// Single-layer reduce in learner-id order — the streamed counterpart of
+/// [`reduce_into`], same per-element float summation order.
+fn reduce_layer_into(packets: &[Packet], out: &mut [f32]) {
+    out.fill(0.0);
+    for p in packets {
+        p.add_into(out);
+    }
+}
+
 fn dense_equiv(layer_lens: &[usize], n_learners: usize) -> usize {
     4 * layer_lens.iter().sum::<usize>() * n_learners
 }
@@ -118,16 +187,20 @@ pub struct ParamServer {
 impl ParamServer {
     /// Exact element count of the server's merged (union) packet for one
     /// layer: duplicates across learners merge. Any dense packet forces the
-    /// whole layer dense.
-    fn union_sent(&mut self, per_learner: &[Vec<Packet>], layer: usize, len: usize) -> usize {
+    /// whole layer dense. `packets` yields one packet per learner for the
+    /// same layer.
+    fn union_sent<'p>(
+        &mut self,
+        packets: impl Iterator<Item = &'p Packet>,
+        len: usize,
+    ) -> usize {
         let words = len.div_ceil(64);
         if self.union_bits.len() < words {
             self.union_bits.resize(words, 0);
         }
         let bits = &mut self.union_bits[..words];
         bits.fill(0);
-        for packets in per_learner {
-            let p = &packets[layer];
+        for p in packets {
             if p.is_dense() {
                 return len;
             }
@@ -150,7 +223,7 @@ impl Topology for ParamServer {
         layer_lens: &[usize],
         fabric: &mut Fabric,
         out: &mut Reduced,
-    ) {
+    ) -> RoundCost {
         let n = per_learner.len();
         self.up.clear();
         self.up.extend(
@@ -164,7 +237,7 @@ impl Topology for ParamServer {
         // cheaper. The header is charged once per layer, outside the min.
         let mut down_one = 0usize;
         for (layer, &len) in layer_lens.iter().enumerate() {
-            let union = self.union_sent(per_learner, layer, len);
+            let union = self.union_sent(per_learner.iter().map(|ps| &ps[layer]), len);
             down_one += (8 * union).min(4 * len) + HEADER_BYTES;
         }
         self.down.clear();
@@ -177,6 +250,46 @@ impl Topology for ParamServer {
         fabric.record_round(&self.up, &self.down, t_up + t_down, dense_equiv(layer_lens, n));
 
         reduce_into(per_learner, layer_lens, out);
+
+        RoundCost {
+            comm_s: t_up + t_down,
+            dense_comm_s: self.dense_round_s(layer_lens, n, &fabric.link),
+        }
+    }
+
+    fn dense_round_s(&self, layer_lens: &[usize], n_learners: usize, link: &LinkModel) -> f64 {
+        // single-port server: n dense uploads serialize in, n broadcasts out
+        let bytes = 4 * layer_lens.iter().sum::<usize>() + HEADER_BYTES;
+        2.0 * n_learners as f64 * link.transfer_time(bytes)
+    }
+
+    fn exchange_layer_into(
+        &mut self,
+        _layer: usize,
+        packets: &[Packet],
+        len: usize,
+        fabric: &mut Fabric,
+        out: &mut [f32],
+    ) -> RoundCost {
+        let n = packets.len();
+        self.up.clear();
+        self.up.extend(packets.iter().map(|p| p.wire_bytes));
+        let union = self.union_sent(packets.iter(), len);
+        let down_one = (8 * union).min(4 * len) + HEADER_BYTES;
+        self.down.clear();
+        self.down.resize(n, down_one);
+
+        let t_up: f64 = self.up.iter().map(|&b| fabric.link.transfer_time(b)).sum();
+        let t_down: f64 = self.down.iter().map(|&b| fabric.link.transfer_time(b)).sum();
+        fabric.record_round(&self.up, &self.down, t_up + t_down, 4 * len * n);
+
+        reduce_layer_into(packets, out);
+
+        let dense_one = fabric.link.transfer_time(4 * len + HEADER_BYTES);
+        RoundCost {
+            comm_s: t_up + t_down,
+            dense_comm_s: 2.0 * n as f64 * dense_one,
+        }
     }
 }
 
@@ -188,28 +301,13 @@ pub struct Ring {
     down: Vec<usize>,
 }
 
-impl Topology for Ring {
-    fn name(&self) -> &'static str {
-        "ring"
-    }
-
-    fn exchange_into(
-        &mut self,
-        per_learner: &[Vec<Packet>],
-        layer_lens: &[usize],
-        fabric: &mut Fabric,
-        out: &mut Reduced,
-    ) {
-        let n = per_learner.len();
-        self.own.clear();
-        self.own.extend(
-            per_learner
-                .iter()
-                .map(|ps| ps.iter().map(|p| p.wire_bytes).sum::<usize>()),
-        );
-        // Every packet traverses n-1 hops: learner l transmits, per hop, the
-        // packet originated by (l - hop); all links are busy in parallel, so
-        // hop time = latency + max packet / bandwidth.
+impl Ring {
+    /// All-gather byte/time accounting for one message per learner of
+    /// `self.own[l]` bytes: every message traverses n-1 hops; all links are
+    /// busy in parallel, so hop time = latency + max message / bandwidth.
+    /// Fills `self.up`/`self.down` and returns the critical-path seconds.
+    fn all_gather(&mut self, fabric: &Fabric) -> f64 {
+        let n = self.own.len();
         self.up.clear();
         self.up.resize(n, 0);
         self.down.clear();
@@ -227,17 +325,77 @@ impl Topology for Ring {
                 time += fabric.link.transfer_time(hop_max);
             }
         }
-        fabric.record_round(&self.up, &self.down, time, dense_equiv(layer_lens, n));
-        reduce_into(per_learner, layer_lens, out);
+        time
     }
 }
 
-/// Parse a topology by name.
-pub fn build(name: &str) -> Option<Box<dyn Topology>> {
+impl Topology for Ring {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn exchange_into(
+        &mut self,
+        per_learner: &[Vec<Packet>],
+        layer_lens: &[usize],
+        fabric: &mut Fabric,
+        out: &mut Reduced,
+    ) -> RoundCost {
+        let n = per_learner.len();
+        self.own.clear();
+        self.own.extend(
+            per_learner
+                .iter()
+                .map(|ps| ps.iter().map(|p| p.wire_bytes).sum::<usize>()),
+        );
+        let time = self.all_gather(fabric);
+        fabric.record_round(&self.up, &self.down, time, dense_equiv(layer_lens, n));
+        reduce_into(per_learner, layer_lens, out);
+
+        RoundCost {
+            comm_s: time,
+            dense_comm_s: self.dense_round_s(layer_lens, n, &fabric.link),
+        }
+    }
+
+    fn dense_round_s(&self, layer_lens: &[usize], n_learners: usize, link: &LinkModel) -> f64 {
+        // all-gather of one coalesced dense message per learner: n-1 hops
+        let bytes = 4 * layer_lens.iter().sum::<usize>() + HEADER_BYTES;
+        n_learners.saturating_sub(1) as f64 * link.transfer_time(bytes)
+    }
+
+    fn exchange_layer_into(
+        &mut self,
+        _layer: usize,
+        packets: &[Packet],
+        len: usize,
+        fabric: &mut Fabric,
+        out: &mut [f32],
+    ) -> RoundCost {
+        let n = packets.len();
+        self.own.clear();
+        self.own.extend(packets.iter().map(|p| p.wire_bytes));
+        let time = self.all_gather(fabric);
+        fabric.record_round(&self.up, &self.down, time, 4 * len * n);
+        reduce_layer_into(packets, out);
+
+        let dense_hops = n.saturating_sub(1) as f64;
+        RoundCost {
+            comm_s: time,
+            dense_comm_s: dense_hops * fabric.link.transfer_time(4 * len + HEADER_BYTES),
+        }
+    }
+}
+
+/// Parse a topology by name; unknown names error with the valid list.
+pub fn build(name: &str) -> anyhow::Result<Box<dyn Topology>> {
     match name {
-        "ps" | "param_server" => Some(Box::new(ParamServer::default())),
-        "ring" => Some(Box::new(Ring::default())),
-        _ => None,
+        "ps" | "param_server" => Ok(Box::new(ParamServer::default())),
+        "ring" => Ok(Box::new(Ring::default())),
+        other => anyhow::bail!(
+            "unknown topology '{other}' (valid: {}; alias: param_server = ps)",
+            NAMES.join(", ")
+        ),
     }
 }
 
@@ -287,6 +445,52 @@ mod tests {
         topo.exchange_into(&pk, &lens, &mut f, &mut red);
         assert_eq!(red.sums[0], first);
         assert_eq!(f.stats.rounds, 2);
+    }
+
+    #[test]
+    fn layer_exchange_matches_barrier_sums() {
+        // the streamed per-layer reduce must be bit-identical to the same
+        // layer's slice of the barrier reduce, for both topologies
+        let (pk, lens) = learners();
+        let layer0: Vec<Packet> = pk.iter().map(|ps| ps[0].clone()).collect();
+        for name in NAMES {
+            let mut fa = Fabric::new(LinkModel::default());
+            let mut fb = Fabric::new(LinkModel::default());
+            let mut topo_a = build(name).unwrap();
+            let mut topo_b = build(name).unwrap();
+            let barrier = topo_a.exchange(&pk, &lens, &mut fa);
+            let mut out = vec![7.0f32; 6]; // must be zeroed by the call
+            let cost = topo_b.exchange_layer_into(0, &layer0, 6, &mut fb, &mut out);
+            assert_eq!(out, barrier.sums[0], "{name}");
+            // same payload bytes either way; time differs (per-layer latency)
+            assert_eq!(fa.stats.bytes_up, fb.stats.bytes_up, "{name}");
+            assert_eq!(fa.stats.bytes_down, fb.stats.bytes_down, "{name}");
+            assert!(cost.comm_s > 0.0 && cost.dense_comm_s > cost.comm_s, "{name}");
+        }
+    }
+
+    #[test]
+    fn dense_round_is_the_barrier_rounds_dense_baseline() {
+        // the run-level dense baseline must equal the coalesced barrier
+        // round's dense cost for both topologies (mode-independent baseline)
+        let (pk, lens) = learners();
+        for name in NAMES {
+            let mut f = Fabric::new(LinkModel::default());
+            let mut topo = build(name).unwrap();
+            let cost = topo.exchange_into(&pk, &lens, &mut f, &mut Reduced::new(&lens));
+            let dense = topo.dense_round_s(&lens, 2, &f.link);
+            assert!((cost.dense_comm_s - dense).abs() < 1e-15, "{name}");
+        }
+    }
+
+    #[test]
+    fn barrier_cost_reports_dense_baseline() {
+        let (pk, lens) = learners();
+        let mut f = Fabric::new(LinkModel::default());
+        let cost = Ring::default().exchange_into(&pk, &lens, &mut f, &mut Reduced::new(&lens));
+        assert!((cost.comm_s - f.stats.sim_time_s).abs() < 1e-15);
+        // tiny sparse packets: dense must cost strictly more
+        assert!(cost.dense_comm_s > cost.comm_s);
     }
 
     #[test]
@@ -341,8 +545,9 @@ mod tests {
 
     #[test]
     fn build_by_name() {
-        assert!(build("ps").is_some());
-        assert!(build("ring").is_some());
-        assert!(build("mesh").is_none());
+        assert!(build("ps").is_ok());
+        assert!(build("ring").is_ok());
+        let err = build("mesh").unwrap_err().to_string();
+        assert!(err.contains("ring") && err.contains("ps"), "{err}");
     }
 }

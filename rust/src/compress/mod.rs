@@ -176,6 +176,18 @@ pub enum Kind {
 }
 
 impl Kind {
+    /// Canonical scheme names, for CLI/config error messages.
+    pub const NAMES: &'static [&'static str] =
+        &["adacomp", "ls", "dryden", "onebit", "terngrad", "strom", "none"];
+
+    /// [`parse`](Self::parse) that errors with the valid-name list — the
+    /// one place CLI/config "unknown scheme" messages come from.
+    pub fn parse_or_err(s: &str) -> anyhow::Result<Kind> {
+        Self::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown scheme '{s}' (valid: {})", Self::NAMES.join(", "))
+        })
+    }
+
     pub fn parse(s: &str) -> Option<Kind> {
         Some(match s {
             "adacomp" => Kind::AdaComp,

@@ -20,7 +20,7 @@ pub fn from_json(v: &Json) -> Result<TrainConfig> {
         "name", "model", "backend", "learners", "batch_per_learner", "epochs",
         "steps_per_epoch", "lr", "lr_schedule", "optimizer", "momentum",
         "topology", "seed", "clip_norm", "divergence_loss", "compression",
-        "link", "threads",
+        "link", "threads", "exchange",
     ];
     for k in obj.keys() {
         if !KNOWN.contains(&k.as_str()) {
@@ -65,7 +65,13 @@ pub fn from_json(v: &Json) -> Result<TrainConfig> {
         cfg.momentum = m as f32;
     }
     if let Some(t) = v.get("topology").as_str() {
+        // fail at load time with the valid list, not mid-run
+        crate::comm::topology::build(t)?;
         cfg.topology = t.to_string();
+    }
+    if let Some(e) = v.get("exchange").as_str() {
+        crate::train::ExchangeMode::parse(e)?;
+        cfg.exchange = e.to_string();
     }
     if let Some(s) = v.get("seed").as_i64() {
         cfg.seed = s as u64;
@@ -134,13 +140,10 @@ fn lr_schedule_from(v: &Json) -> Result<LrSchedule> {
 fn compression_from(v: &Json) -> Result<compress::Config> {
     let mut c = compress::Config::default();
     if let Some(s) = v.get("scheme").as_str() {
-        c.kind = compress::Kind::parse(s)
-            .with_context(|| format!("unknown scheme '{s}'"))?;
+        c.kind = compress::Kind::parse_or_err(s)?;
     }
     if let Some(s) = v.get("scheme_conv").as_str() {
-        c.kind_conv = Some(
-            compress::Kind::parse(s).with_context(|| format!("unknown scheme '{s}'"))?,
-        );
+        c.kind_conv = Some(compress::Kind::parse_or_err(s)?);
     }
     if let Some(x) = v.get("lt_conv").as_usize() {
         c.lt_conv = x;
@@ -223,6 +226,7 @@ pub fn to_json(cfg: &TrainConfig) -> Json {
         ("optimizer", json::s(&cfg.optimizer)),
         ("momentum", json::num(cfg.momentum as f64)),
         ("topology", json::s(&cfg.topology)),
+        ("exchange", json::s(&cfg.exchange)),
         ("seed", json::num(cfg.seed as f64)),
         ("clip_norm", json::num(cfg.clip_norm as f64)),
         ("threads", json::num(cfg.threads as f64)),
@@ -277,6 +281,31 @@ mod tests {
         assert_eq!(back.backend, "native");
         let bad = Json::from_str_slice(r#"{"model": "m", "backend": "tpu"}"#).unwrap();
         assert!(from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn exchange_key_roundtrips_and_validates() {
+        let v = Json::from_str_slice(r#"{"model": "m", "exchange": "barrier"}"#).unwrap();
+        let cfg = from_json(&v).unwrap();
+        assert_eq!(cfg.exchange, "barrier");
+        let back = from_json(&to_json(&cfg)).unwrap();
+        assert_eq!(back.exchange, "barrier");
+        let bad = Json::from_str_slice(r#"{"model": "m", "exchange": "warp"}"#).unwrap();
+        let err = from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("streamed") && err.contains("barrier"), "{err}");
+    }
+
+    #[test]
+    fn unknown_names_error_with_valid_lists() {
+        let bad = Json::from_str_slice(r#"{"model": "m", "topology": "mesh"}"#).unwrap();
+        let err = format!("{:#}", from_json(&bad).unwrap_err());
+        assert!(err.contains("ring") && err.contains("ps"), "{err}");
+        let bad = Json::from_str_slice(
+            r#"{"model": "m", "compression": {"scheme": "gzip"}}"#,
+        )
+        .unwrap();
+        let err = format!("{:#}", from_json(&bad).unwrap_err());
+        assert!(err.contains("adacomp") && err.contains("terngrad"), "{err}");
     }
 
     #[test]

@@ -435,8 +435,7 @@ impl Workload {
 
         let mut comp = compress::Config::default();
         if let Some(s) = args.get("scheme") {
-            comp.kind = compress::Kind::parse(s)
-                .ok_or_else(|| anyhow::anyhow!("unknown scheme '{s}'"))?;
+            comp.kind = compress::Kind::parse_or_err(s)?;
         }
         comp.lt_conv = args.usize_or("lt-conv", comp.lt_conv);
         comp.lt_fc = args.usize_or("lt-fc", comp.lt_fc);
@@ -446,6 +445,13 @@ impl Workload {
         if args.flag("per-bin-scale") {
             comp.per_bin_scale = true;
         }
+
+        // validate by-name knobs at parse time: typos fail with the valid
+        // list instead of a mid-run failure
+        let topology = args.str_or("topology", "ring");
+        crate::comm::topology::build(&topology)?;
+        let exchange = args.str_or("exchange", "streamed");
+        crate::train::ExchangeMode::parse(&exchange)?;
 
         let learners = args.usize_or("learners", 1);
         let batch = args.usize_or("batch", d.batch / learners.max(1)).max(1);
@@ -466,13 +472,14 @@ impl Workload {
             optimizer: args.str_or("optimizer", d.optimizer),
             momentum: args.f32_or("momentum", d.momentum),
             compression: comp,
-            topology: args.str_or("topology", "ring"),
+            topology,
             link: Default::default(),
             seed,
             divergence_loss: 50.0, // classification losses; way past any sane value
             track_residue: true,
             clip_norm: args.f32_or("clip", d.clip_norm),
             threads: args.usize_or("threads", 0),
+            exchange,
         };
 
         let mut init_params = match init_native {
@@ -661,6 +668,22 @@ mod tests {
         let rec = w.run().unwrap();
         assert_eq!(rec.epochs.len(), 1);
         assert!(rec.epochs[0].train_loss.is_finite());
+    }
+
+    #[test]
+    fn unknown_cli_names_error_with_valid_lists() {
+        for (flag, val, needle) in [
+            ("--topology", "mesh", "ring"),
+            ("--exchange", "warp", "streamed"),
+            ("--scheme", "gzip", "adacomp"),
+        ] {
+            let args = Args::parse_from(
+                ["--model", "mnist_dnn", "--backend", "native", flag, val].map(String::from),
+                &[],
+            );
+            let err = format!("{:#}", Workload::from_args(&args, "mnist_dnn").unwrap_err());
+            assert!(err.contains(val) && err.contains(needle), "{flag}: {err}");
+        }
     }
 
     #[test]

@@ -16,10 +16,14 @@
 //! embedding/LSTM layers over the shared flat `Layout`) and stay
 //! artifact-free, including the paper's recurrent char-LSTM workload).
 //!
-//! The multi-learner engine runs the per-learner phase in parallel
-//! (`runtime::ExecutorFactory` + `train::Engine`) with a zero-allocation
-//! exchange hot path; results are bit-identical for every thread count
-//! (DESIGN.md §Threading).
+//! The multi-learner engine runs the per-learner phase on a persistent
+//! worker pool (`runtime::ExecutorFactory` + `train::Engine`) and, by
+//! default, streams the exchange per layer: each layer is packed and
+//! reduced over the topology while earlier layers are still in backward
+//! (`--exchange streamed`; `barrier` keeps the classic join-then-exchange
+//! round). The exchange hot path is zero-allocation in steady state and
+//! results are bit-identical for every thread count and both exchange
+//! modes (DESIGN.md §Threading, §Overlap pipeline).
 
 pub mod comm;
 pub mod config;
@@ -37,4 +41,4 @@ pub mod util;
 pub use compress::{Compressor, Packet};
 pub use models::{LayerKind, Layout, Manifest};
 pub use runtime::{Executor, ExecutorFactory};
-pub use train::{Engine, TrainConfig};
+pub use train::{Engine, ExchangeMode, TrainConfig};

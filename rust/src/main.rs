@@ -78,14 +78,15 @@ fn cmd_train(args: &Args) -> i32 {
         }
     }
     println!(
-        "training {} [{}] | scheme {} | {} learners x batch {} | {} epochs | topology {}",
+        "training {} [{}] | scheme {} | {} learners x batch {} | {} epochs | topology {} | exchange {}",
         w.model,
         w.backend,
         w.cfg.compression.kind.name(),
         w.cfg.n_learners,
         w.cfg.batch_per_learner,
         w.cfg.epochs,
-        w.cfg.topology
+        w.cfg.topology,
+        w.cfg.exchange
     );
     match w.run_full() {
         Ok((rec, final_params)) => {
@@ -266,8 +267,14 @@ USAGE:
                                 (native = hermetic layer-graph executors, no
                                  artifacts needed: mnist_dnn, mnist_cnn,
                                  cifar_cnn, bn50_dnn_s, char_lstm)
-                [--threads T]   (0 = auto; learner phase fan-out, results
-                                 are bit-identical for every thread count)
+                [--threads T]   (0 = auto; learner phase fan-out over the
+                                 persistent worker pool, results are
+                                 bit-identical for every thread count)
+                [--exchange streamed|barrier]
+                                (streamed = overlap per-layer pack/exchange
+                                 with the remaining backward, the default;
+                                 barrier = classic join-then-exchange round.
+                                 Bit-identical results either way)
   adacomp inspect [--artifacts DIR]
   adacomp schemes
 

@@ -181,6 +181,12 @@ impl RunRecord {
                     ("rounds", json::num(self.fabric.rounds as f64)),
                     ("sim_time_s", json::num(self.fabric.sim_time_s)),
                     ("effective_rate", json::num(self.fabric.effective_rate())),
+                    ("steps", json::num(self.fabric.steps as f64)),
+                    ("sim_step_s", json::num(self.fabric.sim_step_s())),
+                    ("sim_overlap_s", json::num(self.fabric.sim_overlap_s)),
+                    ("sim_barrier_s", json::num(self.fabric.sim_barrier_s)),
+                    ("sim_dense_s", json::num(self.fabric.sim_dense_s)),
+                    ("projected_speedup", json::num(self.fabric.projected_speedup())),
                 ]),
             ),
         ])

@@ -77,6 +77,15 @@ pub struct EvalOut {
     pub ncorrect: f32,
 }
 
+/// Grad-ready notification for the streamed step path: invoked with
+/// `(layers, grads)` where `layers` is the range of **layout-layer** indices
+/// whose spans inside the flat gradient `grads` are final and will not be
+/// written again this step. `NativeNet` fires one range per graph node as
+/// its backward completes (reverse graph order — the output head's layers
+/// arrive first, the input layers last); the ranges partition
+/// `0..layout.num_layers()`.
+pub type GradReady<'a> = dyn FnMut(std::ops::Range<usize>, &[f32]) + 'a;
+
 // Note: the trait itself does not require `Send` — the PJRT client wraps an
 // `Rc` and stays pinned to one thread. Backends that CAN cross threads hand
 // out `Box<dyn Executor + Send>` through `ExecutorFactory::build_worker`.
@@ -89,6 +98,31 @@ pub trait Executor {
     fn step_batch_sizes(&self) -> Vec<usize>;
     /// The batch size `eval` expects.
     fn eval_batch(&self) -> usize;
+
+    /// Whether [`step_streamed`](Self::step_streamed) reports gradients
+    /// layer-by-layer during backward. Backends that run backward as one
+    /// opaque program (PJRT's AOT executable) leave this `false`: the
+    /// default `step_streamed` never fires the callback and the caller
+    /// packs everything after the step — barrier-equivalent behavior behind
+    /// the same API.
+    fn streams(&self) -> bool {
+        false
+    }
+
+    /// forward+backward with grad-ready streaming: implementations that
+    /// return `streams() == true` invoke `on_ready` as each layout-layer
+    /// gradient span becomes final, enabling the engine to overlap pack +
+    /// exchange with the remaining backward. Must compute bit-identical
+    /// results to [`step`](Self::step).
+    fn step_streamed(
+        &mut self,
+        params: &[f32],
+        batch: &Batch,
+        on_ready: &mut GradReady<'_>,
+    ) -> anyhow::Result<StepOut> {
+        let _ = on_ready;
+        self.step(params, batch)
+    }
 }
 
 /// Provisions executors for the engine — one per learner when the backend

@@ -13,7 +13,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::net::{Fc, Layer, NativeNet, Relu};
-use super::{Batch, EvalOut, Executor, ExecutorFactory, StepOut};
+use super::{Batch, EvalOut, Executor, ExecutorFactory, GradReady, StepOut};
 use crate::models::Layout;
 
 #[derive(Clone)]
@@ -78,6 +78,19 @@ impl ExecutorFactory for NativeMlp {
 impl Executor for NativeMlp {
     fn step(&mut self, params: &[f32], batch: &Batch) -> Result<StepOut> {
         self.net.step(params, batch)
+    }
+
+    fn streams(&self) -> bool {
+        self.net.streams()
+    }
+
+    fn step_streamed(
+        &mut self,
+        params: &[f32],
+        batch: &Batch,
+        on_ready: &mut GradReady<'_>,
+    ) -> Result<StepOut> {
+        self.net.step_streamed(params, batch, on_ready)
     }
 
     fn eval(&mut self, params: &[f32], batch: &Batch) -> Result<EvalOut> {

@@ -13,7 +13,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use super::net::{Conv5x5Same, Fc, Layer, MaxPool2, NativeNet, Relu};
-use super::{Batch, EvalOut, Executor, ExecutorFactory, StepOut};
+use super::{Batch, EvalOut, Executor, ExecutorFactory, GradReady, StepOut};
 use crate::models::Layout;
 
 /// One conv stage: 5x5 SAME conv -> relu -> 2x2 maxpool.
@@ -141,6 +141,19 @@ impl ExecutorFactory for NativeCnn {
 impl Executor for NativeCnn {
     fn step(&mut self, params: &[f32], batch: &Batch) -> Result<StepOut> {
         self.net.step(params, batch)
+    }
+
+    fn streams(&self) -> bool {
+        self.net.streams()
+    }
+
+    fn step_streamed(
+        &mut self,
+        params: &[f32],
+        batch: &Batch,
+        on_ready: &mut GradReady<'_>,
+    ) -> Result<StepOut> {
+        self.net.step_streamed(params, batch, on_ready)
     }
 
     fn eval(&mut self, params: &[f32], batch: &Batch) -> Result<EvalOut> {

@@ -13,7 +13,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use super::net::{Embedding, Fc, Layer, Lstm, NativeNet};
-use super::{Batch, EvalOut, Executor, ExecutorFactory, StepOut};
+use super::{Batch, EvalOut, Executor, ExecutorFactory, GradReady, StepOut};
 use crate::models::Layout;
 
 #[derive(Clone)]
@@ -152,6 +152,22 @@ impl Executor for NativeCharLstm {
         let seq_len = batch.x_i32.len() / batch.batch_size;
         self.net.set_in_elems(seq_len);
         self.net.step(params, batch)
+    }
+
+    fn streams(&self) -> bool {
+        self.net.streams()
+    }
+
+    fn step_streamed(
+        &mut self,
+        params: &[f32],
+        batch: &Batch,
+        on_ready: &mut GradReady<'_>,
+    ) -> Result<StepOut> {
+        self.check_batch(batch)?;
+        let seq_len = batch.x_i32.len() / batch.batch_size;
+        self.net.set_in_elems(seq_len);
+        self.net.step_streamed(params, batch, on_ready)
     }
 
     fn eval(&mut self, params: &[f32], batch: &Batch) -> Result<EvalOut> {

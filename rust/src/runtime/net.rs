@@ -34,7 +34,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::{Batch, EvalOut, Executor, ExecutorFactory, StepOut};
+use super::{Batch, EvalOut, Executor, ExecutorFactory, GradReady, StepOut};
 use crate::models::{LayerKind, Layout};
 use crate::tensor::{conv, embed, lstm, ops};
 
@@ -496,6 +496,9 @@ pub struct NativeNet {
     layout: Layout,
     /// (flat offset, total len) of each graph layer's parameters.
     spans: Vec<(usize, usize)>,
+    /// (first layout-layer index, count) contributed by each graph layer —
+    /// the grad-ready notification unit for the streamed step path.
+    lranges: Vec<(usize, usize)>,
     /// Per-sample input element count (f32 values or i32 ids).
     in_elems: usize,
     int_input: bool,
@@ -528,14 +531,17 @@ impl NativeNet {
                 .collect::<Vec<_>>(),
         );
         let mut spans = Vec::with_capacity(layers.len());
+        let mut lranges = Vec::with_capacity(layers.len());
         let mut ti = 0usize;
         for &cnt in &counts {
             if cnt == 0 {
                 spans.push((0, 0));
+                lranges.push((ti, 0));
             } else {
                 let off = layout.layers[ti].offset;
                 let len: usize = layout.layers[ti..ti + cnt].iter().map(|l| l.len()).sum();
                 spans.push((off, len));
+                lranges.push((ti, cnt));
                 ti += cnt;
             }
         }
@@ -545,6 +551,7 @@ impl NativeNet {
             layers,
             layout,
             spans,
+            lranges,
             in_elems,
             int_input,
             eval_batch,
@@ -632,6 +639,24 @@ impl NativeNet {
 
 impl Executor for NativeNet {
     fn step(&mut self, params: &[f32], batch: &Batch) -> Result<StepOut> {
+        self.step_streamed(params, batch, &mut |_, _| {})
+    }
+
+    fn streams(&self) -> bool {
+        true
+    }
+
+    /// The streamed step path: the backward walk fires `on_ready` the
+    /// moment a graph layer's parameter-gradient spans are final — reverse
+    /// graph order, so the head's layout layers arrive first and the input
+    /// layers last. `step` is this with a no-op callback, so the two paths
+    /// are bit-identical by construction.
+    fn step_streamed(
+        &mut self,
+        params: &[f32],
+        batch: &Batch,
+        on_ready: &mut GradReady<'_>,
+    ) -> Result<StepOut> {
         let bsz = batch.batch_size;
         self.forward_all(params, batch)?;
         let (logits, classes) = self.logits_and_classes(batch)?;
@@ -658,6 +683,10 @@ impl Executor for NativeNet {
                 &mut grads[off..off + len],
                 dx.as_mut(),
             );
+            let (ti, cnt) = self.lranges[li];
+            if cnt > 0 {
+                on_ready(ti..ti + cnt, &grads);
+            }
             if let Some(d) = dx {
                 dy = d;
             }
@@ -780,6 +809,42 @@ mod tests {
         assert_eq!(net.layout().layers[1].kind, LayerKind::Lstm);
         assert_eq!(net.layout().layers[0].kind, LayerKind::Embed);
         assert_eq!(net.layout().layers[4].kind, LayerKind::Fc);
+    }
+
+    #[test]
+    fn step_streamed_partitions_layers_in_reverse_with_final_spans() {
+        let mut net = fc_relu_fc();
+        let mut rng = Pcg32::seeded(9);
+        let params = rng.normal_vec(net.layout().total, 0.3);
+        let x = rng.normal_vec(4 * 6, 1.0);
+        let batch = Batch::f32(x, vec![0, 1, 2, 0], 4);
+        assert!(net.streams());
+
+        let mut ranges: Vec<std::ops::Range<usize>> = Vec::new();
+        let mut snapshots: Vec<Vec<f32>> = Vec::new();
+        let layout = net.layout().clone();
+        let out = net
+            .step_streamed(&params, &batch, &mut |r, grads| {
+                for li in r.clone() {
+                    snapshots.push(layout.view(li, grads).to_vec());
+                }
+                ranges.push(r);
+            })
+            .unwrap();
+        // fc2 (layout layers 2..4) completes before fc1 (0..2); relu is silent
+        assert_eq!(ranges, vec![2..4, 0..2]);
+        // every notified span was already final: it matches the returned grads
+        let mut si = 0;
+        for r in &ranges {
+            for li in r.clone() {
+                assert_eq!(snapshots[si], layout.view(li, &out.grads), "layer {li}");
+                si += 1;
+            }
+        }
+        // and the streamed path is bit-identical to the plain step
+        let plain = net.step(&params, &batch).unwrap();
+        assert_eq!(plain.loss.to_bits(), out.loss.to_bits());
+        assert_eq!(plain.grads, out.grads);
     }
 
     #[test]

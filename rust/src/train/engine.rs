@@ -2,48 +2,97 @@
 //!
 //! Per step, every learner samples its shard minibatch, runs forward+backward
 //! (its own executor), and `pack()`s each layer through its compressor; the
-//! engine then `exchange()`s all packets over the configured topology
-//! (parameter server or ring), unpacks into the dense mean gradient, and
-//! applies the central optimizer. All learners hold identical weights at
-//! every step — the paper's synchronous-SGD setting.
+//! engine `exchange()`s the packets over the configured topology (parameter
+//! server or ring), unpacks into the dense mean gradient, and applies the
+//! central optimizer. All learners hold identical weights at every step —
+//! the paper's synchronous-SGD setting.
 //!
-//! **Parallel learner phase.** The per-learner work is embarrassingly
-//! parallel: when the backend's [`ExecutorFactory`] reports `parallel()`,
-//! each learner owns a `Send` executor and the step fans learners out across
-//! `cfg.threads` scoped worker threads. The exchange/reduce stays on the
-//! engine thread and consumes packets in learner-id order, and per-step loss
-//! accounting also sums in learner-id order — so the results are
-//! **bit-identical** to the sequential path for any thread count (the
-//! determinism contract, DESIGN.md §Threading; pinned by
-//! rust/tests/engine_native.rs::parallel_matches_sequential_bitwise).
-//! Backends whose executors cannot cross threads (PJRT's `Rc`-backed client)
-//! fall back to one shared executor driven sequentially, behind the same API.
-//! Workers are scoped per step (spawn+join ≈ 0.1–0.2 ms for 8 threads),
-//! which amortizes against multi-millisecond learner phases; a persistent
-//! pool would shave that constant and is a candidate follow-up if profiles
-//! ever show it mattering.
+//! **Layer-streamed exchange pipeline** (`--exchange streamed`, the
+//! default). Gradients complete in reverse layer order during backward, and
+//! the runtime reports each layout layer the moment its span is final
+//! ([`Executor::step_streamed`]). Learners pack each layer immediately and
+//! publish the packet into a per-(learner, layer) hand-off cell; the engine
+//! thread reduces layer *k* over the topology
+//! ([`Topology::exchange_layer_into`](crate::comm::Topology)) while layers
+//! *k-1..0* are still in backward. The fabric places each layer's comm on a
+//! simulated overlap timeline ([`Fabric::record_step`]) so
+//! `FabricStats::sim_step_s()` / `projected_speedup()` report the
+//! wall-clock value of compression + overlap against the barrier and dense
+//! baselines. `--exchange barrier` preserves the classic join-then-exchange
+//! round for A/B benching.
+//!
+//! **Persistent worker pool.** When the backend's [`ExecutorFactory`]
+//! reports `parallel()`, the engine spawns `cfg.threads` workers **once per
+//! run** and parks them on a condvar between steps
+//! ([`pool::PoolCtl`](super::pool)) — replacing the former per-step
+//! `std::thread::scope` spawn/join. Each worker owns a contiguous chunk of
+//! learners; all cross-learner reductions stay on the engine thread.
+//!
+//! **Determinism contract** (DESIGN.md §Threading, §Overlap pipeline):
+//! results are **bit-identical** across every thread count *and* across the
+//! two exchange modes, because packets are reduced per layer in learner-id
+//! order and the f64 loss sum runs on the engine thread in learner-id
+//! order. (Exceptions: schemes whose packing consumes a cross-layer RNG
+//! stream — terngrad — are deterministic within a mode but pack layers in
+//! a different order across modes; and on a *diverged* run the final
+//! aborted step's traffic appears in the streamed fabric stats but not the
+//! barrier ones — streamed has already exchanged by the time the loss is
+//! read, barrier skips that exchange, preserving the pre-pipeline
+//! accounting. Losses and weights are unaffected either way.) Pinned by
+//! rust/tests/engine_native.rs::{parallel_matches_sequential_bitwise,
+//! streamed_matches_barrier_bitwise}.
 //!
 //! **Zero-alloc exchange.** Packet buffers recycle through the compressor
-//! pools, packets live in per-learner slots reused across steps, and the
-//! topology reduces into a persistent [`Reduced`] — the steady-state
-//! exchange/reduce path performs no heap allocation (rust/tests/alloc_free.rs).
+//! pools, packets live in per-learner slots/cells reused across steps, and
+//! the topologies reduce into a persistent [`Reduced`] — both exchange
+//! paths perform no steady-state heap allocation (rust/tests/alloc_free.rs).
 //!
 //! Learners are simulated in-process (DESIGN.md §Substitutions): the
 //! semantics (who computes what on which data, what crosses the wire) are
 //! exactly the distributed ones; the fabric charges every packet its real
 //! encoded byte size.
 
-use anyhow::Result;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, RwLock};
+use std::time::Instant;
 
-use super::{eval::test_error, learner::Learner};
-use crate::comm::{topology, Fabric, LinkModel, Reduced};
+use anyhow::{anyhow, bail, Result};
+
+use super::eval::test_error;
+use super::learner::{Learner, PacketCell};
+use super::pool::PoolCtl;
+use crate::comm::{topology, Fabric, LinkModel, Reduced, Topology};
 use crate::compress::{self, Packet};
 use crate::data::Dataset;
 use crate::metrics::{percentile, CompStat, EpochRecord, RunRecord};
 use crate::models::{LayerKind, Layout};
-use crate::optim::{self, LrSchedule};
-use crate::runtime::ExecutorFactory;
+use crate::optim::{self, LrSchedule, Optimizer};
+use crate::runtime::{Executor, ExecutorFactory};
 use crate::util::timer::Stopwatch;
+
+/// Exchange scheduling mode (`TrainConfig::exchange`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExchangeMode {
+    /// Overlap pack+exchange with the remaining backward (per-layer rounds).
+    Streamed,
+    /// Classic full barrier between the learner phase and one whole-step round.
+    Barrier,
+}
+
+impl ExchangeMode {
+    pub const NAMES: &'static [&'static str] = &["streamed", "barrier"];
+
+    pub fn parse(name: &str) -> Result<ExchangeMode> {
+        match name {
+            "streamed" => Ok(ExchangeMode::Streamed),
+            "barrier" => Ok(ExchangeMode::Barrier),
+            other => bail!(
+                "unknown exchange mode '{other}' (valid: {})",
+                Self::NAMES.join(", ")
+            ),
+        }
+    }
+}
 
 /// Everything that defines one training run.
 #[derive(Clone, Debug)]
@@ -79,6 +128,10 @@ pub struct TrainConfig {
     /// thread, capped at n_learners), 1 = sequential. Results are
     /// bit-identical for every value (see module docs).
     pub threads: usize,
+    /// Exchange scheduling: "streamed" (overlap pack/exchange with backward,
+    /// the default) or "barrier" (join all learners, then one round).
+    /// Bit-identical results either way (see module docs).
+    pub exchange: String,
 }
 
 impl Default for TrainConfig {
@@ -102,6 +155,7 @@ impl Default for TrainConfig {
             track_residue: true,
             clip_norm: 0.0,
             threads: 0,
+            exchange: "streamed".into(),
         }
     }
 }
@@ -115,6 +169,152 @@ pub struct Engine<'a> {
     pub factory: &'a dyn ExecutorFactory,
     pub dataset: &'a dyn Dataset,
     pub layout: &'a Layout,
+}
+
+/// Run-scoped state shared between the engine thread and the pool workers.
+/// Everything here is either lock-protected or atomically published; the
+/// pool's generation barrier guarantees workers only touch it inside their
+/// own step generation.
+struct Shared<'a> {
+    dataset: &'a dyn Dataset,
+    layout: &'a Layout,
+    streamed: bool,
+    /// Central weights. Workers hold the read lock for the learner phase;
+    /// the engine takes the write lock for the optimizer update (phases
+    /// never overlap, so neither side ever blocks).
+    params: RwLock<Vec<f32>>,
+    learners: Vec<Mutex<Learner>>,
+    /// Barrier path: per-learner packet vec (layer order), reused across
+    /// steps.
+    bslots: Vec<Mutex<Vec<Packet>>>,
+    /// Streamed path: per-(learner, layer) packet hand-off cells.
+    cells: Vec<Vec<PacketCell>>,
+    /// Streamed path: learners that have packed layer `li` this step.
+    ready: Vec<AtomicUsize>,
+    /// Streamed path: phase-start instant the pack-time ready stamps are
+    /// measured from (reset by the engine before each step).
+    phase_start: Mutex<Instant>,
+    /// Streamed path: nanoseconds (since phase start, min 1) when layer
+    /// `li`'s LAST learner packed it — written by that learner at pack
+    /// time, so the overlap timeline reflects when the layer became
+    /// exchangeable, not when the engine got around to observing it
+    /// (identical semantics at every thread count). 0 = not yet.
+    ready_at: Vec<AtomicU64>,
+    /// Streamed path: wakes the engine's layer scan when a layer completes
+    /// or a worker checks in.
+    event: ReadyEvent,
+}
+
+/// A sequence-counted wakeup for the engine's streamed layer scan: bumped
+/// by workers on every layer completion and phase check-in, waited on (with
+/// a short timeout as a missed-wakeup backstop) by the engine when a scan
+/// pass finds nothing ready — the engine blocks instead of busy-spinning a
+/// core away from the workers it is waiting on.
+#[derive(Default)]
+struct ReadyEvent {
+    seq: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl ReadyEvent {
+    fn bump(&self) {
+        let mut s = self.seq.lock().unwrap();
+        *s += 1;
+        self.cv.notify_all();
+    }
+
+    fn current(&self) -> u64 {
+        *self.seq.lock().unwrap()
+    }
+
+    /// Block until the sequence advances past `last` or a short timeout
+    /// elapses; returns the sequence seen.
+    fn wait_past(&self, last: u64) -> u64 {
+        let mut s = self.seq.lock().unwrap();
+        while *s == last {
+            let (guard, timeout) = self
+                .cv
+                .wait_timeout(s, std::time::Duration::from_micros(500))
+                .unwrap();
+            s = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        *s
+    }
+}
+
+/// Pool-worker body: park for the next step generation, run this worker's
+/// learner chunk (streamed: publish per-layer packets + bump the ready
+/// counters; barrier: fill the learner's packet slot), check in.
+fn worker_loop(shared: &Shared<'_>, ctl: &PoolCtl, range: std::ops::Range<usize>) {
+    let mut gen = 0u64;
+    while let Some(g) = ctl.next_gen(gen) {
+        gen = g;
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| -> Result<()> {
+            let params = shared.params.read().unwrap();
+            for i in range.clone() {
+                let mut l = shared.learners[i].lock().unwrap();
+                if shared.streamed {
+                    l.step_streamed(
+                        &params,
+                        shared.dataset,
+                        shared.layout,
+                        &shared.cells[i],
+                        &mut |li| shared.layer_packed(li),
+                    )?;
+                } else {
+                    let mut slot = shared.bslots[i].lock().unwrap();
+                    l.step(&params, shared.dataset, shared.layout, &mut slot)?;
+                }
+            }
+            Ok(())
+        }));
+        ctl.report(match res {
+            Ok(Ok(())) => None,
+            Ok(Err(e)) => Some(format!("{e:#}")),
+            Err(p) => Some(panic_message(p.as_ref())),
+        });
+        // wake the engine's layer scan so it can observe all_done (matters
+        // when a failed worker leaves layers that will never become ready)
+        shared.event.bump();
+    }
+}
+
+impl Shared<'_> {
+    /// Grad-ready notification target (streamed path, both sequential and
+    /// pooled): bump layer `li`'s counter; the learner completing the count
+    /// records the pack-time ready stamp and wakes the engine.
+    fn layer_packed(&self, li: usize) {
+        let c = self.ready[li].fetch_add(1, Ordering::Release) + 1;
+        if c == self.learners.len() {
+            let ns = self.phase_start.lock().unwrap().elapsed().as_nanos() as u64;
+            self.ready_at[li].store(ns.max(1), Ordering::Release);
+            self.event.bump();
+        }
+    }
+}
+
+/// Shuts the pool down on drop — including during an engine-thread unwind
+/// (a panicking hook, a bug), where parked workers would otherwise deadlock
+/// the `thread::scope`'s implicit join.
+struct PoolShutdown<'a>(&'a PoolCtl);
+
+impl Drop for PoolShutdown<'_> {
+    fn drop(&mut self) {
+        self.0.shutdown();
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        format!("worker panicked: {s}")
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        format!("worker panicked: {s}")
+    } else {
+        "worker panicked".to_string()
+    }
 }
 
 impl<'a> Engine<'a> {
@@ -164,33 +364,37 @@ impl<'a> Engine<'a> {
         &mut self,
         cfg: &TrainConfig,
         init_params: &[f32],
-        mut hook: Option<&mut EpochHook<'_>>,
+        hook: Option<&mut EpochHook<'_>>,
     ) -> Result<(RunRecord, Vec<f32>)> {
         assert!(cfg.n_learners >= 1);
         let layout = self.layout;
         let dataset = self.dataset;
         let factory = self.factory;
+
+        // Validate every by-name knob up front so a typo'd config fails with
+        // the valid list, not a mid-run panic.
+        let mode = ExchangeMode::parse(&cfg.exchange)?;
+        let optimizer = optim::build(&cfg.optimizer, init_params.len(), cfg.momentum)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown optimizer '{}' (valid: sgd, adam, rmsprop)",
+                    cfg.optimizer
+                )
+            })?;
+        let topo = topology::build(&cfg.topology)?;
         let threads = self.resolve_threads(cfg);
         let parallel = threads > 1;
+        let streamed = mode == ExchangeMode::Streamed;
 
-        let mut params = init_params.to_vec();
-        let mut optimizer = optim::build(&cfg.optimizer, params.len(), cfg.momentum)
-            .unwrap_or_else(|| panic!("unknown optimizer '{}'", cfg.optimizer));
-        let mut topo = topology::build(&cfg.topology)
-            .unwrap_or_else(|| panic!("unknown topology '{}'", cfg.topology));
-        let mut fabric = Fabric::new(cfg.link);
-
-        // Evaluation + sequential fallback run on this executor; in parallel
-        // mode every learner additionally owns a worker executor.
-        let mut local = factory.build_local()?;
-        let mut learners: Vec<Learner> = (0..cfg.n_learners)
-            .map(|id| -> Result<Learner> {
+        let local = factory.build_local()?;
+        let learners = (0..cfg.n_learners)
+            .map(|id| -> Result<Mutex<Learner>> {
                 let exec = if parallel {
                     Some(factory.build_worker()?)
                 } else {
                     None
                 };
-                Ok(Learner::new(
+                Ok(Mutex::new(Learner::new(
                     id,
                     cfg.n_learners,
                     dataset,
@@ -199,86 +403,302 @@ impl<'a> Engine<'a> {
                     cfg.batch_per_learner,
                     cfg.seed,
                     exec,
-                ))
+                )))
             })
-            .collect::<Result<Vec<Learner>>>()?;
+            .collect::<Result<Vec<_>>>()?;
 
-        // Per-learner packet slots, reused across steps (no Vec-of-Vec
-        // rebuild; buffers recycle through the compressor pools).
-        let mut slots: Vec<Vec<Packet>> = (0..cfg.n_learners)
-            .map(|_| Vec::with_capacity(layout.num_layers()))
-            .collect();
+        let num_layers = layout.num_layers();
+        let shared = Shared {
+            dataset,
+            layout,
+            streamed,
+            params: RwLock::new(init_params.to_vec()),
+            learners,
+            bslots: if streamed {
+                Vec::new()
+            } else {
+                (0..cfg.n_learners)
+                    .map(|_| Mutex::new(Vec::with_capacity(num_layers)))
+                    .collect()
+            },
+            cells: if streamed {
+                (0..cfg.n_learners)
+                    .map(|_| (0..num_layers).map(|_| PacketCell::default()).collect())
+                    .collect()
+            } else {
+                Vec::new()
+            },
+            ready: (0..if streamed { num_layers } else { 0 })
+                .map(|_| AtomicUsize::new(0))
+                .collect(),
+            phase_start: Mutex::new(Instant::now()),
+            ready_at: (0..if streamed { num_layers } else { 0 })
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            event: ReadyEvent::default(),
+        };
 
-        let steps_per_epoch = if cfg.steps_per_epoch > 0 {
-            cfg.steps_per_epoch
+        let record = if parallel {
+            let ctl = PoolCtl::new();
+            std::thread::scope(|scope| {
+                let chunk = cfg.n_learners.div_ceil(threads);
+                let mut workers = 0usize;
+                let mut start = 0usize;
+                while start < cfg.n_learners {
+                    let end = (start + chunk).min(cfg.n_learners);
+                    let (sh, c) = (&shared, &ctl);
+                    scope.spawn(move || worker_loop(sh, c, start..end));
+                    workers += 1;
+                    start = end;
+                }
+                // Shut the pool down however run_loop exits (ok, error, or
+                // panic) — parked workers would otherwise deadlock the
+                // scope's implicit join.
+                let _shutdown = PoolShutdown(&ctl);
+                run_loop(
+                    cfg,
+                    layout,
+                    dataset,
+                    local,
+                    &shared,
+                    Some((&ctl, workers)),
+                    topo,
+                    optimizer,
+                    hook,
+                )
+            })?
         } else {
-            (dataset.train_len() / (cfg.batch_per_learner * cfg.n_learners)).max(1)
-        };
-        let layer_lens: Vec<usize> = layout.layers.iter().map(|l| l.len()).collect();
-        let inv_learners = 1.0f32 / cfg.n_learners as f32;
-
-        let mut record = RunRecord {
-            name: cfg.run_name.clone(),
-            model: cfg.model_name.clone(),
-            scheme: cfg.compression.kind.name().to_string(),
-            learners: cfg.n_learners,
-            batch_per_learner: cfg.batch_per_learner,
-            optimizer: cfg.optimizer.clone(),
-            epochs: Vec::new(),
-            diverged: false,
-            fabric: Default::default(),
+            run_loop(cfg, layout, dataset, local, &shared, None, topo, optimizer, hook)?
         };
 
-        let mut grad_mean = vec![0.0f32; layout.total];
-        let mut reduced = Reduced::new(&layer_lens);
+        let params = shared.params.into_inner().unwrap();
+        Ok((record, params))
+    }
+}
 
-        'epochs: for epoch in 0..cfg.epochs {
-            let sw = Stopwatch::start();
-            let lr = cfg.lr.at(epoch);
-            let mut loss_sum = 0.0f64;
-            let mut nloss = 0usize;
-            let mut comp_conv = CompStat::default();
-            let mut comp_fc = CompStat::default();
-            let mut comp_all = CompStat::default();
+/// The training loop proper, shared by all four (sequential/pool ×
+/// barrier/streamed) combinations. `pool` carries the step barrier and the
+/// worker count when a persistent pool is attached; `None` runs every
+/// learner on the engine thread through `local`.
+#[allow(clippy::too_many_arguments)]
+fn run_loop(
+    cfg: &TrainConfig,
+    layout: &Layout,
+    dataset: &dyn Dataset,
+    mut local: Box<dyn Executor>,
+    shared: &Shared<'_>,
+    pool: Option<(&PoolCtl, usize)>,
+    mut topo: Box<dyn Topology>,
+    mut optimizer: Box<dyn Optimizer>,
+    mut hook: Option<&mut EpochHook<'_>>,
+) -> Result<RunRecord> {
+    let n = cfg.n_learners;
+    let num_layers = layout.num_layers();
+    let layer_lens: Vec<usize> = layout.layers.iter().map(|l| l.len()).collect();
+    let inv_learners = 1.0f32 / n as f32;
+    let mut fabric = Fabric::new(cfg.link);
 
-            for _step in 0..steps_per_epoch {
-                // 1. every learner: local fwd/bwd + pack, fanned out across
-                // worker threads (or sequentially on the shared executor)
-                if parallel {
-                    let chunk = cfg.n_learners.div_ceil(threads);
-                    let params_ref: &[f32] = &params;
-                    std::thread::scope(|scope| {
-                        let mut handles = Vec::with_capacity(threads);
-                        for (lch, sch) in
-                            learners.chunks_mut(chunk).zip(slots.chunks_mut(chunk))
-                        {
-                            handles.push(scope.spawn(move || -> Result<()> {
-                                for (l, s) in lch.iter_mut().zip(sch.iter_mut()) {
-                                    l.step(params_ref, dataset, layout, s)?;
-                                }
-                                Ok(())
-                            }));
-                        }
-                        for h in handles {
-                            h.join().expect("learner worker panicked")?;
-                        }
-                        Ok::<(), anyhow::Error>(())
-                    })?;
+    let steps_per_epoch = if cfg.steps_per_epoch > 0 {
+        cfg.steps_per_epoch
+    } else {
+        (dataset.train_len() / (cfg.batch_per_learner * n)).max(1)
+    };
+
+    let mut record = RunRecord {
+        name: cfg.run_name.clone(),
+        model: cfg.model_name.clone(),
+        scheme: cfg.compression.kind.name().to_string(),
+        learners: n,
+        batch_per_learner: cfg.batch_per_learner,
+        optimizer: cfg.optimizer.clone(),
+        epochs: Vec::new(),
+        diverged: false,
+        fabric: Default::default(),
+    };
+
+    let mut grad_mean = vec![0.0f32; layout.total];
+    let mut reduced = Reduced::new(&layer_lens);
+    // The no-compression baseline: one coalesced dense barrier round, fixed
+    // for the run — deliberately NOT the sum of per-layer dense messages, so
+    // `projected_speedup()` never credits the streamed path with latency the
+    // dense baseline would not actually pay.
+    let dense_round_s = topo.dense_round_s(&layer_lens, n, &cfg.link);
+    // Streamed-path engine scratch, reused every step (no allocation in the
+    // steady state): packets gathered per layer, per-layer done flags, and
+    // per-layer all-learners-ready timestamps on the overlap timeline.
+    let mut gather: Vec<Packet> = Vec::with_capacity(n);
+    let mut done_flags = vec![false; num_layers];
+    let mut stamps = vec![-1.0f64; num_layers];
+    // Barrier-path scratch: per-learner packet vecs swapped out of the
+    // shared slots for the duration of the whole-step exchange.
+    let mut bscratch: Vec<Vec<Packet>> = (0..if shared.streamed { 0 } else { n })
+        .map(|_| Vec::new())
+        .collect();
+
+    'epochs: for epoch in 0..cfg.epochs {
+        let sw = Stopwatch::start();
+        let lr = cfg.lr.at(epoch);
+        let mut loss_sum = 0.0f64;
+        let mut nloss = 0usize;
+        let mut comp_conv = CompStat::default();
+        let mut comp_fc = CompStat::default();
+        let mut comp_all = CompStat::default();
+
+        for _step in 0..steps_per_epoch {
+            if shared.streamed {
+                // --- streamed pipeline: exchange overlaps backward -------
+                for r in &shared.ready {
+                    r.store(0, Ordering::Relaxed);
+                }
+                for r in &shared.ready_at {
+                    r.store(0, Ordering::Relaxed);
+                }
+                done_flags.iter_mut().for_each(|d| *d = false);
+                *shared.phase_start.lock().unwrap() = Instant::now();
+
+                if let Some((ctl, _)) = pool {
+                    ctl.kick();
                 } else {
-                    for (l, s) in learners.iter_mut().zip(slots.iter_mut()) {
-                        l.step_with(local.as_mut(), &params, dataset, layout, s)?;
+                    // Sequential learner phase on the engine thread; ready
+                    // stamps are taken at pack time (same callback as the
+                    // pooled path) so the overlap timeline reflects when
+                    // each layer *became* exchangeable at any thread count.
+                    for i in 0..n {
+                        let params = shared.params.read().unwrap();
+                        let mut l = shared.learners[i].lock().unwrap();
+                        l.step_streamed_with(
+                            local.as_mut(),
+                            &params,
+                            dataset,
+                            layout,
+                            &shared.cells[i],
+                            &mut |li| shared.layer_packed(li),
+                        )?;
                     }
                 }
 
-                // 2. accounting on the engine thread, learner-id order (the
-                // f64 loss sum is order-sensitive — this keeps it identical
-                // to the sequential path bit-for-bit)
-                for (l, slot) in learners.iter().zip(slots.iter()) {
+                // Consume layers as they complete (reverse layer order is
+                // the natural completion order); reduce each over the
+                // topology while the rest of backward is still running.
+                let mut pending = num_layers;
+                let (mut comm_end, mut comm_serial) = (0.0f64, 0.0f64);
+                let mut saw_done = pool.is_none();
+                let mut event_seq = shared.event.current();
+                loop {
+                    let mut progressed = false;
+                    for li in (0..num_layers).rev() {
+                        if done_flags[li] || shared.ready[li].load(Ordering::Acquire) != n {
+                            continue;
+                        }
+                        // the stamp store trails the final counter bump by
+                        // nanoseconds; spin past that publish window
+                        let mut ns = shared.ready_at[li].load(Ordering::Acquire);
+                        while ns == 0 {
+                            std::hint::spin_loop();
+                            ns = shared.ready_at[li].load(Ordering::Acquire);
+                        }
+                        stamps[li] = ns as f64 * 1e-9;
+                        gather.clear();
+                        for cells in &shared.cells {
+                            // learner-id order: the determinism contract
+                            let p = cells[li]
+                                .lock()
+                                .unwrap()
+                                .take()
+                                .expect("ready layer is missing a packet");
+                            gather.push(p);
+                        }
+                        for p in &gather {
+                            match layout.layers[li].kind {
+                                LayerKind::Conv => comp_conv.add(p),
+                                _ => comp_fc.add(p),
+                            }
+                            comp_all.add(p);
+                        }
+                        let cost = topo.exchange_layer_into(
+                            li,
+                            &gather,
+                            layer_lens[li],
+                            &mut fabric,
+                            &mut reduced.sums[li],
+                        );
+                        comm_serial += cost.comm_s;
+                        comm_end = comm_end.max(stamps[li]) + cost.comm_s;
+                        // hand the spent packets back for next-step recycling
+                        for (l, p) in gather.drain(..).enumerate() {
+                            *shared.cells[l][li].lock().unwrap() = Some(p);
+                        }
+                        done_flags[li] = true;
+                        pending -= 1;
+                        progressed = true;
+                    }
+                    if pending == 0 {
+                        break;
+                    }
+                    if !progressed {
+                        if saw_done {
+                            // a full scan after every worker checked in
+                            // found nothing: a worker failed mid-phase
+                            // (surfaced by wait_done below)
+                            break;
+                        }
+                        // Idle only: sample the pool barrier, then block on
+                        // the ready event (short-timeout backstop) instead
+                        // of busy-spinning a core away from the workers.
+                        // While layers are flowing, the scan touches
+                        // nothing but atomics.
+                        saw_done = match pool {
+                            Some((ctl, workers)) => ctl.all_done(workers),
+                            None => true,
+                        };
+                        event_seq = shared.event.wait_past(event_seq);
+                    }
+                }
+                if let Some((ctl, workers)) = pool {
+                    ctl.wait_done(workers)?;
+                }
+                if pending > 0 {
+                    bail!("streamed exchange ended with {pending} layers never ready");
+                }
+                // compute span = last layer completion; fold the step onto
+                // the simulated timeline (overlap vs barrier vs dense)
+                let compute_s = stamps.iter().cloned().fold(0.0f64, f64::max);
+                fabric.record_step(compute_s, comm_serial, comm_end, dense_round_s);
+
+                // loss accounting on the engine thread, learner-id order
+                // (the f64 sum is order-sensitive)
+                for cell in &shared.learners {
+                    let l = cell.lock().unwrap();
                     loss_sum += l.loss as f64;
                     nloss += 1;
                     if !l.loss.is_finite() || l.loss as f64 > cfg.divergence_loss {
                         record.diverged = true;
                     }
+                }
+            } else {
+                // --- barrier: join all learners, then one full round -----
+                let sw_phase = Stopwatch::start();
+                if let Some((ctl, workers)) = pool {
+                    ctl.kick();
+                    ctl.wait_done(workers)?;
+                } else {
+                    for i in 0..n {
+                        let params = shared.params.read().unwrap();
+                        let mut l = shared.learners[i].lock().unwrap();
+                        let mut slot = shared.bslots[i].lock().unwrap();
+                        l.step_with(local.as_mut(), &params, dataset, layout, &mut slot)?;
+                    }
+                }
+                let compute_s = sw_phase.secs();
+
+                for (cell, slot) in shared.learners.iter().zip(shared.bslots.iter()) {
+                    let l = cell.lock().unwrap();
+                    loss_sum += l.loss as f64;
+                    nloss += 1;
+                    if !l.loss.is_finite() || l.loss as f64 > cfg.divergence_loss {
+                        record.diverged = true;
+                    }
+                    let slot = slot.lock().unwrap();
                     for (li, p) in slot.iter().enumerate() {
                         match layout.layers[li].kind {
                             LayerKind::Conv => comp_conv.add(p),
@@ -288,50 +708,76 @@ impl<'a> Engine<'a> {
                     }
                 }
 
-                if record.diverged {
-                    // record the partial epoch and stop
-                    let (err, tloss) = test_error(local.as_mut(), dataset, &params)
-                        .unwrap_or((100.0, f64::NAN));
-                    record.epochs.push(epoch_record(
-                        layout, epoch, loss_sum, nloss, err, tloss, lr, comp_conv, comp_fc,
-                        comp_all, &learners, cfg, sw.secs(),
-                    ));
-                    break 'epochs;
-                }
-
-                // 3. exchange + unpack (dense sum, learner-id order) into the
-                // persistent buffers, 4. central update
-                topo.exchange_into(&slots, &layer_lens, &mut fabric, &mut reduced);
-                for (li, sum) in reduced.sums.iter().enumerate() {
-                    let dst = layout.view_mut(li, &mut grad_mean);
-                    for (d, &s) in dst.iter_mut().zip(sum.iter()) {
-                        *d = s * inv_learners;
+                if !record.diverged {
+                    // move the packet vecs out of the shared slots for the
+                    // round (swap: no allocation), then hand them back
+                    for (scratch, slot) in bscratch.iter_mut().zip(shared.bslots.iter()) {
+                        std::mem::swap(scratch, &mut slot.lock().unwrap());
                     }
-                }
-                if cfg.clip_norm > 0.0 {
-                    let norm = crate::tensor::ops::dot(&grad_mean, &grad_mean).sqrt();
-                    if norm > cfg.clip_norm {
-                        let s = cfg.clip_norm / norm;
-                        grad_mean.iter_mut().for_each(|g| *g *= s);
+                    let cost =
+                        topo.exchange_into(&bscratch, &layer_lens, &mut fabric, &mut reduced);
+                    for (scratch, slot) in bscratch.iter_mut().zip(shared.bslots.iter()) {
+                        std::mem::swap(scratch, &mut slot.lock().unwrap());
                     }
+                    fabric.record_step(
+                        compute_s,
+                        cost.comm_s,
+                        compute_s + cost.comm_s,
+                        cost.dense_comm_s,
+                    );
                 }
-                optimizer.step(&mut params, &grad_mean, lr);
             }
 
-            if let Some(h) = hook.as_deref_mut() {
-                h(epoch, learners[0].compressor.as_ref(), learners[0].grads());
+            if record.diverged {
+                // record the partial epoch and stop (no central update)
+                let (err, tloss) = {
+                    let params = shared.params.read().unwrap();
+                    test_error(local.as_mut(), dataset, &params).unwrap_or((100.0, f64::NAN))
+                };
+                let l0 = shared.learners[0].lock().unwrap();
+                record.epochs.push(epoch_record(
+                    layout, epoch, loss_sum, nloss, err, tloss, lr, comp_conv, comp_fc,
+                    comp_all, &l0, cfg, sw.secs(),
+                ));
+                break 'epochs;
             }
 
-            let (err, tloss) = test_error(local.as_mut(), dataset, &params)?;
-            record.epochs.push(epoch_record(
-                layout, epoch, loss_sum, nloss, err, tloss, lr, comp_conv, comp_fc, comp_all,
-                &learners, cfg, sw.secs(),
-            ));
+            // central update: unpack the dense mean, clip, optimizer step
+            for (li, sum) in reduced.sums.iter().enumerate() {
+                let dst = layout.view_mut(li, &mut grad_mean);
+                for (d, &s) in dst.iter_mut().zip(sum.iter()) {
+                    *d = s * inv_learners;
+                }
+            }
+            if cfg.clip_norm > 0.0 {
+                let norm = crate::tensor::ops::dot(&grad_mean, &grad_mean).sqrt();
+                if norm > cfg.clip_norm {
+                    let s = cfg.clip_norm / norm;
+                    grad_mean.iter_mut().for_each(|g| *g *= s);
+                }
+            }
+            let mut params = shared.params.write().unwrap();
+            optimizer.step(&mut params, &grad_mean, lr);
         }
 
-        record.fabric = fabric.stats.clone();
-        Ok((record, params))
+        if let Some(h) = hook.as_deref_mut() {
+            let l0 = shared.learners[0].lock().unwrap();
+            h(epoch, l0.compressor.as_ref(), l0.grads());
+        }
+
+        let (err, tloss) = {
+            let params = shared.params.read().unwrap();
+            test_error(local.as_mut(), dataset, &params)?
+        };
+        let l0 = shared.learners[0].lock().unwrap();
+        record.epochs.push(epoch_record(
+            layout, epoch, loss_sum, nloss, err, tloss, lr, comp_conv, comp_fc, comp_all, &l0,
+            cfg, sw.secs(),
+        ));
     }
+
+    record.fabric = fabric.stats.clone();
+    Ok(record)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -346,14 +792,14 @@ fn epoch_record(
     comp_conv: CompStat,
     comp_fc: CompStat,
     comp_all: CompStat,
-    learners: &[Learner],
+    learner0: &Learner,
     cfg: &TrainConfig,
     wall: f64,
 ) -> EpochRecord {
     let (mut rg_p95, mut dw_p95) = (0.0f32, 0.0f32);
-    if cfg.track_residue && !learners.is_empty() {
-        let c = &learners[0].compressor;
-        let last_dw = learners[0].grads();
+    if cfg.track_residue {
+        let c = &learner0.compressor;
+        let last_dw = learner0.grads();
         for li in 0..layout.num_layers() {
             rg_p95 = rg_p95.max(percentile(c.residue(li), 95.0));
         }

@@ -18,6 +18,12 @@ use crate::models::Layout;
 use crate::runtime::{Batch, Executor};
 use crate::util::rng::Pcg32;
 
+/// One per-layer packet hand-off slot between a learner (producer, worker
+/// thread) and the engine (consumer). The engine returns spent packets to
+/// the same cell after the exchange so the next step can recycle their
+/// buffers — the cell never allocates in steady state.
+pub type PacketCell = std::sync::Mutex<Option<Packet>>;
+
 pub struct Learner {
     pub id: usize,
     pub shard: Shard,
@@ -146,6 +152,77 @@ impl Learner {
         Ok(())
     }
 
+    /// One **streamed** learner phase on this learner's own executor: like
+    /// [`step`](Self::step), but each layout layer is packed the moment its
+    /// gradient span is final during backward (reverse graph order) and
+    /// published into `cells[li]`, with `on_packed(li)` fired after the
+    /// publish — the engine's grad-ready notification. Safe to call from a
+    /// worker thread.
+    pub fn step_streamed(
+        &mut self,
+        params: &[f32],
+        dataset: &dyn Dataset,
+        layout: &Layout,
+        cells: &[PacketCell],
+        on_packed: &mut dyn FnMut(usize),
+    ) -> Result<()> {
+        let mut exec = self
+            .exec
+            .take()
+            .expect("learner was built without its own executor; use step_streamed_with");
+        let r = self.step_streamed_with(exec.as_mut(), params, dataset, layout, cells, on_packed);
+        self.exec = Some(exec);
+        r
+    }
+
+    /// [`step_streamed`](Self::step_streamed) on a caller-provided executor
+    /// (the engine's sequential path shares one executor across learners).
+    ///
+    /// Spent packets from the previous round are taken back out of `cells`
+    /// and recycled first. Executors whose `streams()` is `false` (PJRT's
+    /// opaque AOT program) produce no grad-ready callbacks; every layer is
+    /// then packed after the step in ascending layer order —
+    /// barrier-equivalent behavior behind the same API.
+    pub fn step_streamed_with(
+        &mut self,
+        exec: &mut dyn Executor,
+        params: &[f32],
+        dataset: &dyn Dataset,
+        layout: &Layout,
+        cells: &[PacketCell],
+        on_packed: &mut dyn FnMut(usize),
+    ) -> Result<()> {
+        assert_eq!(cells.len(), layout.num_layers(), "one cell per layout layer");
+        for c in cells {
+            if let Some(spent) = c.lock().unwrap().take() {
+                self.compressor.recycle(spent);
+            }
+        }
+        self.next_batch(dataset);
+        let streams = exec.streams();
+        let out = {
+            let comp = &mut self.compressor;
+            let batch = &self.batch;
+            exec.step_streamed(params, batch, &mut |layers, grads| {
+                for li in layers {
+                    let p = comp.pack_layer(li, layout.view(li, grads));
+                    *cells[li].lock().unwrap() = Some(p);
+                    on_packed(li);
+                }
+            })?
+        };
+        self.loss = out.loss;
+        self.grads = out.grads;
+        if !streams {
+            for li in 0..layout.num_layers() {
+                let p = self.compressor.pack_layer(li, layout.view(li, &self.grads));
+                *cells[li].lock().unwrap() = Some(p);
+                on_packed(li);
+            }
+        }
+        Ok(())
+    }
+
     /// Compress the last gradient into `slots` (one packet per layer, layer
     /// order), recycling the previous round's packet buffers through the
     /// compressor pool first — steady state allocates nothing.
@@ -208,6 +285,54 @@ mod tests {
         assert_eq!(packets.len(), 2);
         assert_eq!(packets[0].n, 32);
         assert_eq!(packets[1].n, 4);
+    }
+
+    #[test]
+    fn step_streamed_matches_step_packets_in_reverse_order() {
+        // the streamed phase must produce the same packets as the barrier
+        // phase (per layer: same idx/val/wire bytes), published in reverse
+        // graph order, and recycle cleanly across steps
+        let ds = GaussianMixture::new(2, 8, 4, 100, 20, 0.3);
+        let exe = NativeMlp::new(&[8, 6, 4], 16);
+        let layout = exe.layout().clone();
+        let params = exe.init_params(5);
+
+        let mk = |seed| {
+            Learner::new(
+                0,
+                2,
+                &ds,
+                &layout,
+                &Config::with_kind(Kind::AdaComp),
+                4,
+                seed,
+                Some(exe.build_worker().unwrap()),
+            )
+        };
+        let mut streamed = mk(9);
+        let mut barrier = mk(9);
+
+        let cells: Vec<crate::train::learner::PacketCell> =
+            (0..layout.num_layers()).map(|_| PacketCell::default()).collect();
+        let mut slots = Vec::new();
+        for _ in 0..3 {
+            let mut order = Vec::new();
+            streamed
+                .step_streamed(&params, &ds, &layout, &cells, &mut |li| order.push(li))
+                .unwrap();
+            barrier.step(&params, &ds, &layout, &mut slots).unwrap();
+            // fc2 layers (2, 3) ready before fc1 layers (0, 1)
+            assert_eq!(order, vec![2, 3, 0, 1]);
+            assert_eq!(streamed.loss.to_bits(), barrier.loss.to_bits());
+            for (li, b) in slots.iter().enumerate() {
+                let guard = cells[li].lock().unwrap();
+                let s = guard.as_ref().expect("cell filled");
+                assert_eq!(s.idx, b.idx, "layer {li}");
+                assert_eq!(s.val, b.val, "layer {li}");
+                assert_eq!(s.wire_bytes, b.wire_bytes, "layer {li}");
+            }
+        }
+        assert_eq!(streamed.grads(), barrier.grads());
     }
 
     #[test]

@@ -4,5 +4,6 @@ pub mod checkpoint;
 pub mod engine;
 pub mod eval;
 pub mod learner;
+pub mod pool;
 
-pub use engine::{Engine, TrainConfig};
+pub use engine::{Engine, ExchangeMode, TrainConfig};

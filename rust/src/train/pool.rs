@@ -1,0 +1,178 @@
+//! Persistent worker-pool coordination for the engine's learner phase.
+//!
+//! The engine used to spawn fresh `std::thread::scope` workers every step
+//! (the documented follow-up in engine.rs); a pool now spawns once per run
+//! and parks between steps on a condvar, so the per-step cost is one
+//! notify + one wake instead of N thread spawns/joins.
+//!
+//! [`PoolCtl`] is the generation-counted step barrier the engine and the
+//! workers rendezvous on:
+//!
+//! * engine: [`kick`](PoolCtl::kick) publishes a new step generation, then
+//!   either blocks in [`wait_done`](PoolCtl::wait_done) (barrier exchange)
+//!   or polls [`all_done`](PoolCtl::all_done) while it consumes per-layer
+//!   grad-ready notifications (streamed exchange).
+//! * worker: [`next_gen`](PoolCtl::next_gen) parks until the generation
+//!   advances (or shutdown), runs its learner chunk, and checks in via
+//!   [`report`](PoolCtl::report) — carrying any learner error back to the
+//!   engine instead of unwinding through the pool.
+//!
+//! The data plane (learners, packet cells, ready counters, the parameter
+//! vector) lives in the engine's run-scoped `Shared` state, not here: the
+//! pool only sequences access so that workers touch it strictly inside
+//! their own generation. All of this is run-scoped — the pool threads live
+//! inside a `std::thread::scope` that wraps the training loop, so borrows
+//! of run-local state need no `'static` gymnastics.
+
+use std::sync::{Condvar, Mutex};
+
+struct CtlState {
+    /// Current step generation; 0 = nothing published yet.
+    gen: u64,
+    /// Workers that have checked in for `gen`.
+    n_done: usize,
+    shutdown: bool,
+    /// First worker error of the current generation (formatted — the engine
+    /// re-wraps it; `anyhow::Error` is not `Clone`).
+    failed: Option<String>,
+}
+
+/// Generation-counted step barrier between the engine and its pool workers.
+pub struct PoolCtl {
+    state: Mutex<CtlState>,
+    go: Condvar,
+    done: Condvar,
+}
+
+impl Default for PoolCtl {
+    fn default() -> Self {
+        PoolCtl::new()
+    }
+}
+
+impl PoolCtl {
+    pub fn new() -> PoolCtl {
+        PoolCtl {
+            state: Mutex::new(CtlState {
+                gen: 0,
+                n_done: 0,
+                shutdown: false,
+                failed: None,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        }
+    }
+
+    /// Engine: publish the next step generation and wake all workers.
+    pub fn kick(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.gen += 1;
+        s.n_done = 0;
+        s.failed = None;
+        self.go.notify_all();
+    }
+
+    /// Engine: block until all `workers` have checked in for the current
+    /// generation; surfaces the first worker error.
+    pub fn wait_done(&self, workers: usize) -> anyhow::Result<()> {
+        let mut s = self.state.lock().unwrap();
+        while s.n_done < workers {
+            s = self.done.wait(s).unwrap();
+        }
+        match s.failed.take() {
+            Some(e) => Err(anyhow::anyhow!("learner phase failed: {e}")),
+            None => Ok(()),
+        }
+    }
+
+    /// Engine: non-blocking check that every worker has checked in for the
+    /// current generation (used while draining streamed grad-ready queues,
+    /// so a failed worker cannot deadlock the engine's layer scan).
+    pub fn all_done(&self, workers: usize) -> bool {
+        self.state.lock().unwrap().n_done >= workers
+    }
+
+    /// Engine: stop the pool; parked workers wake and exit.
+    pub fn shutdown(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.shutdown = true;
+        self.go.notify_all();
+    }
+
+    /// Worker: park until a generation newer than `last` is published.
+    /// `None` means shutdown.
+    pub fn next_gen(&self, last: u64) -> Option<u64> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.shutdown {
+                return None;
+            }
+            if s.gen > last {
+                return Some(s.gen);
+            }
+            s = self.go.wait(s).unwrap();
+        }
+    }
+
+    /// Worker: check in for the current generation, carrying any error.
+    pub fn report(&self, err: Option<String>) {
+        let mut s = self.state.lock().unwrap();
+        if let Some(e) = err {
+            s.failed.get_or_insert(e);
+        }
+        s.n_done += 1;
+        self.done.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_generations_and_shuts_down() {
+        let ctl = PoolCtl::new();
+        let hits = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                let (ctl, hits) = (&ctl, &hits);
+                scope.spawn(move || {
+                    let mut gen = 0;
+                    while let Some(g) = ctl.next_gen(gen) {
+                        gen = g;
+                        hits.fetch_add(1, Ordering::Relaxed);
+                        ctl.report(None);
+                    }
+                });
+            }
+            for _ in 0..5 {
+                ctl.kick();
+                ctl.wait_done(3).unwrap();
+            }
+            ctl.shutdown();
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 15);
+    }
+
+    #[test]
+    fn worker_errors_surface_to_the_engine() {
+        let ctl = PoolCtl::new();
+        std::thread::scope(|scope| {
+            let c = &ctl;
+            scope.spawn(move || {
+                let mut gen = 0;
+                while let Some(g) = c.next_gen(gen) {
+                    gen = g;
+                    c.report(Some("executor exploded".into()));
+                }
+            });
+            ctl.kick();
+            let err = ctl.wait_done(1).unwrap_err().to_string();
+            assert!(err.contains("executor exploded"), "{err}");
+            assert!(ctl.all_done(1));
+            ctl.shutdown();
+        });
+    }
+}

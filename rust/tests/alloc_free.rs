@@ -99,6 +99,57 @@ fn steady_state_exchange_and_pack_are_allocation_free() {
         assert_eq!(fabric.stats.rounds, 53);
     }
 
+    // --- streamed per-layer exchange: the overlap pipeline's hot path -----
+    // The engine's streamed scheduler takes each learner's packet out of its
+    // per-(learner, layer) hand-off cell, reduces the layer over the
+    // topology (`exchange_layer_into`), and puts the packets back for
+    // next-step recycling. Steady state must not allocate.
+    {
+        use std::sync::Mutex;
+        let per_learner = packets_for(&layout, 4, Kind::AdaComp);
+        for name in ["ring", "ps"] {
+            let mut topo = topology::build(name).unwrap();
+            let mut fabric = Fabric::new(LinkModel::default());
+            let mut reduced = Reduced::new(&lens);
+            let cells: Vec<Vec<Mutex<Option<Packet>>>> = per_learner
+                .iter()
+                .map(|ps| ps.iter().map(|p| Mutex::new(Some(p.clone()))).collect())
+                .collect();
+            let mut gather: Vec<Packet> = Vec::with_capacity(4);
+            let mut streamed_round = |topo: &mut Box<dyn Topology>,
+                                      fabric: &mut Fabric,
+                                      reduced: &mut Reduced,
+                                      gather: &mut Vec<Packet>| {
+                for li in (0..lens.len()).rev() {
+                    gather.clear();
+                    for learner in &cells {
+                        gather.push(learner[li].lock().unwrap().take().unwrap());
+                    }
+                    topo.exchange_layer_into(li, gather, lens[li], fabric, &mut reduced.sums[li]);
+                    for (l, p) in gather.drain(..).enumerate() {
+                        *cells[l][li].lock().unwrap() = Some(p);
+                    }
+                }
+            };
+            // warmup sizes topology scratch (ps bitset, up/down vectors)
+            for _ in 0..3 {
+                streamed_round(&mut topo, &mut fabric, &mut reduced, &mut gather);
+            }
+            let before = allocs();
+            for _ in 0..50 {
+                streamed_round(&mut topo, &mut fabric, &mut reduced, &mut gather);
+            }
+            let after = allocs();
+            assert_eq!(
+                after - before,
+                0,
+                "{name}: steady-state streamed exchange_layer_into must not allocate"
+            );
+            // per-layer rounds: one fabric round per layer per step
+            assert_eq!(fabric.stats.rounds, 53 * lens.len() as u64);
+        }
+    }
+
     // --- pack -> exchange -> recycle: the engine's per-step packet flow ---
     // With recycled buffers the loop settles into zero allocation once the
     // buffer capacities have grown to the high-water packet size. The dense
