@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n== ablation: topology (identical math, different wire profile) ==");
     let mut t = report::Table::new(&["topology", "test-err %", "bytes up", "sim comm time"]);
-    for topo in ["ring", "ps"] {
+    for topo in ["ring", "ps", "ps:4", "hier:4"] {
         let mut w = Workload::from_args(&args, "cifar_cnn")?;
         w.cfg.compression.kind = Kind::AdaComp;
         w.cfg.n_learners = 8;

@@ -49,7 +49,7 @@ fn main() {
         ("conv3", &[51200], LayerKind::Conv),
         ("fc", &[10240], LayerKind::Fc),
     ]);
-    let lens: Vec<usize> = layout.layers.iter().map(|l| l.len()).collect();
+    let lens: Vec<usize> = layout.layer_lens();
 
     println!("# exchange: reduce wall time + simulated fabric cost (cifar_cnn-shaped, adacomp lt=50)");
     println!(
@@ -58,8 +58,14 @@ fn main() {
     );
     for n_learners in [2usize, 8, 32] {
         let packets = make_packets(&layout, n_learners, Kind::AdaComp, 50);
-        for topo_name in ["ring", "ps"] {
-            let mut topo = topology::build(topo_name).unwrap();
+        // sharded/hierarchical variants need at least that many learners
+        let topos: &[&str] = if n_learners >= 4 {
+            &["ring", "ps", "ps:4", "hier:4"]
+        } else {
+            &["ring", "ps"]
+        };
+        for topo_name in topos {
+            let mut topo = topology::build(topo_name, n_learners).unwrap();
             let mut fabric = Fabric::new(LinkModel::default());
             // steady state: persistent Reduced, zero-alloc rounds
             let mut reduced = Reduced::new(&lens);
@@ -102,7 +108,7 @@ fn main() {
     );
     for kind in [Kind::AdaComp, Kind::Dryden, Kind::OneBit, Kind::TernGrad, Kind::None] {
         let packets = make_packets(&layout, 8, kind, 50);
-        let mut topo = topology::build("ring").unwrap();
+        let mut topo = topology::build("ring", 8).unwrap();
         let mut fabric = Fabric::new(LinkModel::default());
         topo.exchange(&packets, &lens, &mut fabric);
         println!(

@@ -37,9 +37,9 @@ const DIMS: &[usize] = &[128, 256, 10];
 const BATCH: usize = 32;
 const STEPS: usize = 40;
 
-fn engine_cfg(learners: usize, threads: usize, exchange: &str) -> TrainConfig {
+fn engine_cfg(learners: usize, threads: usize, exchange: &str, topology: &str) -> TrainConfig {
     TrainConfig {
-        run_name: format!("bench-{learners}L-{threads}T-{exchange}"),
+        run_name: format!("bench-{learners}L-{threads}T-{exchange}-{topology}"),
         model_name: "native_mlp".into(),
         n_learners: learners,
         batch_per_learner: BATCH,
@@ -50,6 +50,7 @@ fn engine_cfg(learners: usize, threads: usize, exchange: &str) -> TrainConfig {
             lt_override: 50,
             ..Config::with_kind(Kind::AdaComp)
         },
+        topology: topology.into(),
         seed: 17,
         threads,
         exchange: exchange.into(),
@@ -62,13 +63,14 @@ fn run_engine(
     learners: usize,
     threads: usize,
     exchange: &str,
+    topology: &str,
 ) -> anyhow::Result<(f64, u64, adacomp::comm::FabricStats)> {
     let ds = GaussianMixture::new(7, DIMS[0], *DIMS.last().unwrap(), 4096, 64, 0.5);
     let exe = NativeMlp::new(DIMS, 64);
     let params = exe.init_params(3);
     let layout = exe.layout().clone();
     let mut engine = Engine::new(&exe, &ds, &layout);
-    let cfg = engine_cfg(learners, threads, exchange);
+    let cfg = engine_cfg(learners, threads, exchange, topology);
     let sw = Stopwatch::start();
     let rec = engine.run(&cfg, &params)?;
     let wall = sw.secs();
@@ -84,7 +86,7 @@ fn run_engine(
 /// exchange_into ns. Shared by the MLP sweep and the char-LSTM row so both
 /// BENCH_engine.json entries measure the same protocol.
 fn hot_path(layout: &Layout, learners: usize, comp_cfg: &Config) -> (f64, f64) {
-    let lens: Vec<usize> = layout.layers.iter().map(|l| l.len()).collect();
+    let lens: Vec<usize> = layout.layer_lens();
 
     // pack: one compressor over a fixed gradient, recycling its packets
     let mut comp = compress::build(comp_cfg, layout);
@@ -120,7 +122,7 @@ fn hot_path(layout: &Layout, learners: usize, comp_cfg: &Config) -> (f64, f64) {
                 .collect()
         })
         .collect();
-    let mut topo = topology::build("ring").unwrap();
+    let mut topo = topology::build("ring", learners).unwrap();
     let mut fabric = Fabric::new(LinkModel::default());
     let mut reduced = adacomp::comm::Reduced::new(&lens);
     let ex_samples = time_n(
@@ -160,9 +162,9 @@ fn engine_sweep() -> anyhow::Result<()> {
     };
     let mut rows: Vec<Json> = Vec::new();
     for learners in [1usize, 4, 16] {
-        let (seq_wall, seq_bits, _) = run_engine(learners, 1, "barrier")?;
-        let (par_wall, par_bits, barrier_fab) = run_engine(learners, 0, "barrier")?;
-        let (strm_wall, strm_bits, strm_fab) = run_engine(learners, 0, "streamed")?;
+        let (seq_wall, seq_bits, _) = run_engine(learners, 1, "barrier", "ring")?;
+        let (par_wall, par_bits, barrier_fab) = run_engine(learners, 0, "barrier", "ring")?;
+        let (strm_wall, strm_bits, strm_fab) = run_engine(learners, 0, "streamed", "ring")?;
         let bit_eq = seq_bits == par_bits && seq_bits == strm_bits;
         let (pack_ns, ex_ns) = hot_path(&mlp_layout, learners, &mlp_comp);
         let steps_per_sec = STEPS as f64 / strm_wall;
@@ -235,15 +237,84 @@ fn engine_sweep() -> anyhow::Result<()> {
             ]),
         ),
         ("engine", json::arr(rows)),
+        ("topology_sweep", topology_sweep()?),
         ("pool", pool_overhead()?),
         ("char_lstm", char_lstm_row()?),
     ]);
     std::fs::write("BENCH_engine.json", doc.to_string())?;
     println!(
-        "\nwrote BENCH_engine.json (wall + simulated step times, projected_speedup, pool \
-         constant, char_lstm row)"
+        "\nwrote BENCH_engine.json (wall + simulated step times, projected_speedup, topology \
+         sweep, pool constant, char_lstm row)"
     );
     Ok(())
+}
+
+/// Reduce-plan topology sweep at 16 learners, streamed: flat ps vs sharded
+/// ps:4 vs hierarchical hier:4 vs ring, same workload and plan. Reports the
+/// simulated step time and projected speedup per row and asserts the
+/// sharded server strictly beats the flat one on the overlap timeline
+/// (port pipelining) with compute canceled out — the acceptance gate for
+/// the sharded reduce path.
+fn topology_sweep() -> anyhow::Result<Json> {
+    const LEARNERS: usize = 16;
+    println!("\n# topology sweep ({LEARNERS} learners, streamed, adacomp lt=50)");
+    println!(
+        "{:<8} {:>12} {:>13} {:>13} {:>12} {:>9}",
+        "topo", "steps/s", "sim-step", "comm-tail", "bytes-up", "proj-x"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut tails: Vec<(String, f64)> = Vec::new();
+    let mut loss_bits: Vec<u64> = Vec::new();
+    for topo in ["ps", "ps:4", "hier:4", "ring"] {
+        let (wall, bits, fab) = run_engine(LEARNERS, 0, "streamed", topo)?;
+        let tail = fab.comm_tail_s();
+        println!(
+            "{:<8} {:>12.1} {:>12.3}ms {:>12.3}ms {:>12} {:>8.2}x",
+            topo,
+            STEPS as f64 / wall,
+            1e3 * fab.sim_step_s(),
+            1e3 * tail / fab.steps.max(1) as f64,
+            fab.bytes_up,
+            fab.projected_speedup()
+        );
+        rows.push(json::obj(vec![
+            ("topology", json::s(topo)),
+            ("learners", json::num(LEARNERS as f64)),
+            ("steps_per_sec", json::num(STEPS as f64 / wall)),
+            ("sim_step_s", json::num(fab.sim_step_s())),
+            ("comm_tail_s", json::num(tail / fab.steps.max(1) as f64)),
+            ("bytes_up", json::num(fab.bytes_up as f64)),
+            ("projected_speedup", json::num(fab.projected_speedup())),
+        ]));
+        tails.push((topo.to_string(), tail));
+        loss_bits.push(bits);
+    }
+    // determinism across topologies (the reduce-plan contract)
+    assert!(
+        loss_bits.iter().all(|&b| b == loss_bits[0]),
+        "all topologies must be bit-identical"
+    );
+    // acceptance gate: ps:4 strictly beats ps at 16 learners — the sharded
+    // ports pipeline bucket rounds the single-port server serializes.
+    // (Round costs are simulated and identical across the bit-identical
+    // runs; the gate could only tie if scheduler preemption stretched the
+    // gap between consecutive bucket completions past a full ~0.9ms round
+    // in EVERY one of the 40 steps — if this ever fires spuriously, suspect
+    // a machine under extreme load, not the reduce path.)
+    let tail_of = |name: &str| {
+        tails
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| *t)
+            .unwrap()
+    };
+    assert!(
+        tail_of("ps:4") < tail_of("ps"),
+        "ps:4 comm tail {} !< ps comm tail {}",
+        tail_of("ps:4"),
+        tail_of("ps")
+    );
+    Ok(json::arr(rows))
 }
 
 /// The persistent-pool constant-cost win: per-step cost of a pooled engine
@@ -427,9 +498,9 @@ fn pjrt_breakdown() -> anyhow::Result<()> {
 
         let cfg = Config::with_kind(Kind::AdaComp);
         let mut comp = compress::build(&cfg, &meta.layout);
-        let mut topo = topology::build("ring").unwrap();
+        let mut topo = topology::build("ring", 2).unwrap();
         let mut fabric = Fabric::new(LinkModel::default());
-        let lens: Vec<usize> = meta.layout.layers.iter().map(|l| l.len()).collect();
+        let lens: Vec<usize> = meta.layout.layer_lens();
         let mut opt = adacomp::optim::Sgd::new(params.len(), 0.9);
         let mut p = params.clone();
 

@@ -13,10 +13,15 @@
 //! training step onto a simulated step timeline ([`Fabric::record_step`]):
 //! the engine supplies the step's measured compute span (backward + pack
 //! wall time) and three comm placements — overlapped behind backward (the
-//! streamed pipeline), serialized after a barrier, and the serialized dense
-//! no-compression baseline. `sim_step_s()` and `projected_speedup()` turn
-//! the paper's compression *rates* into projected wall-clock step-time wins
-//! (DESIGN.md §Overlap pipeline).
+//! streamed pipeline, with per-bucket rounds placed **per port**: rounds on
+//! one topology port serialize, rounds on disjoint ports — `ps:<S>` shards
+//! — run concurrently, and `overlap_end_s` is the max over port
+//! completion times), serialized after a barrier, and the serialized dense
+//! no-compression baseline ([`ReducePlan::dense_round_s`]
+//! (super::plan::ReducePlan::dense_round_s) — identical across topologies
+//! and exchange modes). `sim_step_s()` and `projected_speedup()` turn the
+//! paper's compression *rates* into projected wall-clock step-time wins
+//! (DESIGN.md §Overlap pipeline, §Topologies).
 
 /// Link parameters for the alpha-beta cost model.
 #[derive(Debug, Clone, Copy)]
@@ -50,8 +55,9 @@ pub struct FabricStats {
     pub bytes_up: u64,
     /// Total bytes delivered to learners.
     pub bytes_down: u64,
-    /// Number of exchange rounds (one per step on the barrier path, one per
-    /// layer per step on the streamed path).
+    /// Number of exchange rounds: one per reduce-plan bucket per step, in
+    /// both exchange modes (the modes differ in placement, not message
+    /// structure).
     pub rounds: u64,
     /// Simulated communication seconds (sum over rounds of the critical path).
     pub sim_time_s: f64,
@@ -101,6 +107,23 @@ impl FabricStats {
             self.sim_dense_s / self.sim_overlap_s
         }
     }
+
+    /// Σ per-step `max(comm_end, compute) − compute`: the comm tail of the
+    /// overlap placement with the measured compute canceled out — the
+    /// deterministic part of the streamed timeline (round costs are
+    /// simulated), comparable across runs. Derived from the identity
+    /// `sim_barrier_s = Σ(compute + comm_serial)` and
+    /// `sim_time_s = Σ comm_serial`.
+    pub fn comm_tail_s(&self) -> f64 {
+        self.sim_overlap_s - self.sim_barrier_s + self.sim_time_s
+    }
+
+    /// Σ per-step dense-baseline comm with the measured compute canceled
+    /// (steps × the plan's canonical dense round) — deterministic, used to
+    /// pin the baseline's mode/topology independence.
+    pub fn dense_comm_total_s(&self) -> f64 {
+        self.sim_dense_s - self.sim_barrier_s + self.sim_time_s
+    }
 }
 
 /// The fabric: link model + running stats.
@@ -143,7 +166,8 @@ impl Fabric {
     /// * `compute_s`: measured wall span of the learner phase (fwd/bwd+pack),
     /// * `comm_serial_s`: Σ per-round comm time of the step's exchanges,
     /// * `overlap_end_s`: when the last exchange finished on the overlap
-    ///   timeline (streamed: pipelined behind backward; barrier:
+    ///   timeline (streamed: per-bucket rounds pipelined behind backward,
+    ///   max over the topology's port completion times; barrier:
     ///   `compute_s + comm_serial_s`),
     /// * `dense_comm_s`: Σ per-round dense-baseline comm time.
     pub fn record_step(

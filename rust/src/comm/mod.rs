@@ -1,7 +1,10 @@
-//! Communication substrate: simulated fabric + exchange topologies.
+//! Communication substrate: simulated fabric, reduce plan, and exchange
+//! topologies.
 
 pub mod fabric;
+pub mod plan;
 pub mod topology;
 
 pub use fabric::{Fabric, FabricStats, LinkModel};
-pub use topology::{ParamServer, Reduced, Ring, RoundCost, Topology};
+pub use plan::{Bucket, ReducePlan};
+pub use topology::{HierPs, ParamServer, Reduced, Ring, RoundCost, Topology};

@@ -1,0 +1,356 @@
+//! The reduce plan: how a model's layers become wire messages.
+//!
+//! Built **once per run** from the model [`Layout`], the plan answers two
+//! questions the exchange path used to hard-code:
+//!
+//! 1. **Bucketing** — which layers share a wire message. PR 3's per-layer
+//!    timeline showed tiny layers (biases) paying one full per-message
+//!    latency each on the streamed path. The plan walks the layout in
+//!    **reverse layer order** (the order gradients complete during
+//!    backward) and coalesces consecutive sub-threshold layers into a
+//!    bucket: one [`bucket frame`](crate::compress::wire::bucket_wire_len)
+//!    per bucket on the wire, one latency charge per bucket. A layer whose
+//!    dense wire size alone reaches the threshold stands as its own bucket
+//!    (big layers must not wait for neighbours). Because the walk is the
+//!    streamed completion order, every bucket covers a **contiguous** layer
+//!    range and becomes exchangeable the moment its earliest layer's
+//!    gradient is packed.
+//! 2. **Port mapping** — which fabric port carries each bucket. Sharded
+//!    topologies ([`ParamServer`](super::topology::ParamServer) with
+//!    `ps:<S>`) expose S independent ports; the plan partitions buckets
+//!    over them
+//!    (`bucket.id % ports`), and the engine overlaps rounds on disjoint
+//!    ports on the simulated timeline while rounds on one port serialize.
+//!
+//! The plan also owns the run's **canonical dense baseline**
+//! ([`ReducePlan::dense_round_s`]): the cost of shipping the entire model
+//! dense (f32) as **one coalesced message** per learner each way through a
+//! single serialized port — no sharding, no overlap, no bucketing. The
+//! same "before" system for every topology, exchange mode, *and* bucket
+//! threshold, so `projected_speedup` compares apples to apples across
+//! `--topology`, `--exchange`, and `--bucket-bytes` choices.
+//!
+//! The plan never touches floats: reduction order (learner-id within each
+//! bucket) is the topologies' contract, which is why results stay
+//! bit-identical across every plan shape.
+
+use std::ops::Range;
+
+use super::fabric::LinkModel;
+use crate::compress::wire::{bucket_wire_len, dense_f32_wire_len};
+use crate::models::Layout;
+
+/// One coalesced wire message: a contiguous run of layout layers.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    /// Position in [`ReducePlan::buckets`] (reverse-layer streamed order).
+    pub id: usize,
+    /// Fabric port this bucket's rounds run on (`< ReducePlan::ports`).
+    pub port: usize,
+    /// The layout layers coalesced into this bucket, as an ascending range;
+    /// packets inside the bucket's message travel in this (ascending layer)
+    /// order.
+    pub layers: Range<usize>,
+}
+
+impl Bucket {
+    /// A synthetic whole-model bucket (benches/tests drive the coalesced
+    /// barrier exchange through this; the engine uses a real plan).
+    pub fn whole_model(num_layers: usize) -> Bucket {
+        Bucket {
+            id: 0,
+            port: 0,
+            layers: 0..num_layers,
+        }
+    }
+
+    /// Number of layers (sub-messages) in this bucket.
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Dense f32 wire bytes of this bucket's frame: every layer dense,
+    /// wrapped in the bucket frame. The canonical no-compression message.
+    pub fn dense_wire_bytes(&self, layer_lens: &[usize]) -> usize {
+        let payload: usize = self
+            .layers
+            .clone()
+            .map(|li| dense_f32_wire_len(layer_lens[li]))
+            .sum();
+        bucket_wire_len(self.num_layers(), payload)
+    }
+}
+
+/// Canonical dense baseline for one bucket: each learner ships the bucket
+/// dense through a single serialized port, up and down — no compression, no
+/// sharding, no overlap. Identical for every topology by construction
+/// (pinned by `dense_baseline_is_topology_independent`).
+pub fn dense_bucket_s(
+    bucket: &Bucket,
+    layer_lens: &[usize],
+    n_learners: usize,
+    link: &LinkModel,
+) -> f64 {
+    2.0 * n_learners as f64 * link.transfer_time(bucket.dense_wire_bytes(layer_lens))
+}
+
+/// The run's reduce plan: buckets in streamed completion order plus the
+/// layer → bucket map.
+#[derive(Debug, Clone)]
+pub struct ReducePlan {
+    /// Buckets in reverse-layer streamed order: `buckets[0]` holds the
+    /// *last* layout layers (first gradients to complete during backward).
+    pub buckets: Vec<Bucket>,
+    /// `bucket_of[layer]` = index into `buckets`.
+    pub bucket_of: Vec<usize>,
+    /// Coalescing threshold actually used, in dense wire bytes.
+    pub threshold_bytes: usize,
+    /// Fabric ports the buckets are partitioned over.
+    pub ports: usize,
+}
+
+impl ReducePlan {
+    /// Default coalescing threshold for a link: the latency·bandwidth
+    /// product (α·β). Below it a message's per-message latency costs more
+    /// than its payload transfer — exactly the regime where coalescing
+    /// wins; above it streaming granularity matters more than latency.
+    pub fn auto_threshold(link: &LinkModel) -> usize {
+        ((link.latency_s * link.bandwidth_bps) as usize).max(1)
+    }
+
+    /// Build the plan: walk layers in reverse order, coalescing consecutive
+    /// layers whose dense wire size is below `threshold_bytes` until the
+    /// open bucket reaches the threshold; at-or-above-threshold layers get
+    /// singleton buckets. `threshold_bytes = 1` reproduces the pre-plan
+    /// per-layer messages. Buckets are assigned ports round-robin.
+    pub fn build(layout: &Layout, threshold_bytes: usize, ports: usize) -> ReducePlan {
+        let threshold_bytes = threshold_bytes.max(1);
+        let ports = ports.max(1);
+        let num_layers = layout.num_layers();
+        let mut buckets: Vec<Bucket> = Vec::new();
+        // open bucket: ascending range [open_lo, open_hi) accumulated while
+        // walking layers downwards (open_hi fixed, open_lo decreasing)
+        let mut open: Option<(Range<usize>, usize)> = None;
+        fn close(open: &mut Option<(Range<usize>, usize)>, buckets: &mut Vec<Bucket>) {
+            if let Some((layers, _)) = open.take() {
+                buckets.push(Bucket {
+                    id: buckets.len(),
+                    port: 0,
+                    layers,
+                });
+            }
+        }
+        for li in (0..num_layers).rev() {
+            let bytes = dense_f32_wire_len(layout.layers[li].len());
+            if bytes >= threshold_bytes {
+                // big layer: its own bucket, never merged
+                close(&mut open, &mut buckets);
+                buckets.push(Bucket {
+                    id: buckets.len(),
+                    port: 0,
+                    layers: li..li + 1,
+                });
+                continue;
+            }
+            let (layers, acc) = match open.take() {
+                Some((r, acc)) => (li..r.end, acc + bytes),
+                None => (li..li + 1, bytes),
+            };
+            open = Some((layers, acc));
+            if acc >= threshold_bytes {
+                close(&mut open, &mut buckets);
+            }
+        }
+        close(&mut open, &mut buckets);
+
+        let mut bucket_of = vec![usize::MAX; num_layers];
+        for b in buckets.iter_mut() {
+            b.port = b.id % ports;
+            for li in b.layers.clone() {
+                bucket_of[li] = b.id;
+            }
+        }
+        debug_assert!(bucket_of.iter().all(|&b| b != usize::MAX));
+        ReducePlan {
+            buckets,
+            bucket_of,
+            threshold_bytes,
+            ports,
+        }
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// (bucket index, slot within the bucket's message) for a layout layer.
+    pub fn slot_of(&self, layer: usize) -> (usize, usize) {
+        let bi = self.bucket_of[layer];
+        (bi, layer - self.buckets[bi].layers.start)
+    }
+
+    /// The run's canonical dense baseline: every learner ships the
+    /// **entire model** as one dense f32 message each way through a single
+    /// serialized port — no compression, no bucketing, no sharding, no
+    /// overlap. Deliberately independent of the plan's bucket structure
+    /// (a smaller `--bucket-bytes` must not inflate the "before" system
+    /// with extra per-message latency) and identical across topologies and
+    /// exchange modes, so `projected_speedup` is comparable across every
+    /// knob. Constant for a fixed (layout, learner count, link); the
+    /// engine computes it once per run.
+    pub fn dense_round_s(&self, layer_lens: &[usize], n_learners: usize, link: &LinkModel) -> f64 {
+        dense_bucket_s(
+            &Bucket::whole_model(layer_lens.len()),
+            layer_lens,
+            n_learners,
+            link,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::wire::HEADER_BYTES;
+    use crate::models::LayerKind;
+
+    /// mlp-ish layout: big weight / tiny bias pairs.
+    fn layout() -> Layout {
+        Layout::from_specs(&[
+            ("w1", &[2000], LayerKind::Fc), // 8016 dense-wire bytes
+            ("b1", &[20], LayerKind::Fc),   // 96
+            ("w2", &[1500], LayerKind::Fc), // 6016
+            ("b2", &[10], LayerKind::Fc),   // 56
+        ])
+    }
+
+    #[test]
+    fn every_layer_in_exactly_one_bucket() {
+        let layout = layout();
+        for threshold in [1usize, 200, 4096, 1 << 20] {
+            let plan = ReducePlan::build(&layout, threshold, 2);
+            let mut seen = vec![0usize; layout.num_layers()];
+            for b in &plan.buckets {
+                for li in b.layers.clone() {
+                    seen[li] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "threshold {threshold}: {seen:?}");
+            // bucket_of agrees with the bucket ranges
+            for li in 0..layout.num_layers() {
+                let (bi, slot) = plan.slot_of(li);
+                assert!(plan.buckets[bi].layers.contains(&li));
+                assert_eq!(plan.buckets[bi].layers.start + slot, li);
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_order_is_reverse_layer_streamed_order() {
+        let layout = layout();
+        for threshold in [1usize, 200, 4096] {
+            let plan = ReducePlan::build(&layout, threshold, 1);
+            // bucket k's layers all come after bucket k+1's layers in the
+            // layout — i.e. bucket order = reverse completion order
+            for w in plan.buckets.windows(2) {
+                assert!(
+                    w[0].layers.start >= w[1].layers.end,
+                    "threshold {threshold}: {:?} then {:?}",
+                    w[0].layers,
+                    w[1].layers
+                );
+            }
+            // ids are positions
+            for (i, b) in plan.buckets.iter().enumerate() {
+                assert_eq!(b.id, i);
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_layer_coalescing_respects_threshold() {
+        let layout = layout();
+        // threshold 4096: b2 (56) and b1 (96) are sub-threshold, w1/w2 are
+        // not. Reverse walk: b2 opens a bucket; w2 (6016 >= 4096) closes it
+        // as a singleton-of-b2 and stands alone; b1 opens; w1 stands alone.
+        let plan = ReducePlan::build(&layout, 4096, 1);
+        let ranges: Vec<Range<usize>> = plan.buckets.iter().map(|b| b.layers.clone()).collect();
+        assert_eq!(ranges, vec![3..4, 2..3, 1..2, 0..1]);
+
+        // threshold 1 MiB: everything sub-threshold -> one bucket
+        let plan = ReducePlan::build(&layout, 1 << 20, 1);
+        assert_eq!(plan.num_buckets(), 1);
+        assert_eq!(plan.buckets[0].layers, 0..4);
+
+        // threshold 1: per-layer buckets (the pre-plan wire shape)
+        let plan = ReducePlan::build(&layout, 1, 1);
+        assert_eq!(plan.num_buckets(), 4);
+        assert!(plan.buckets.iter().all(|b| b.num_layers() == 1));
+
+        // threshold 10000: b2 + w2 coalesce (56 + 6016 < 10000), b1 joins
+        // (6168 < 10000), then w1 (8016 < 10000) joins and the cumulative
+        // 14184 >= 10000 closes the bucket — all four in one message
+        let plan = ReducePlan::build(&layout, 10000, 1);
+        assert_eq!(plan.num_buckets(), 1);
+
+        // a run of tiny layers closes once the *cumulative* size crosses
+        let tiny = Layout::from_specs(&[
+            ("t0", &[10], LayerKind::Fc),
+            ("t1", &[10], LayerKind::Fc),
+            ("t2", &[10], LayerKind::Fc),
+            ("t3", &[10], LayerKind::Fc),
+        ]);
+        // each is 56 bytes; threshold 100 -> two buckets of two
+        let plan = ReducePlan::build(&tiny, 100, 1);
+        let ranges: Vec<Range<usize>> = plan.buckets.iter().map(|b| b.layers.clone()).collect();
+        assert_eq!(ranges, vec![2..4, 0..2]);
+    }
+
+    #[test]
+    fn ports_partition_round_robin() {
+        let layout = layout();
+        let plan = ReducePlan::build(&layout, 1, 3);
+        assert_eq!(plan.ports, 3);
+        let ports: Vec<usize> = plan.buckets.iter().map(|b| b.port).collect();
+        assert_eq!(ports, vec![0, 1, 2, 0]);
+        // single port: everything on port 0
+        let plan = ReducePlan::build(&layout, 1, 1);
+        assert!(plan.buckets.iter().all(|b| b.port == 0));
+    }
+
+    #[test]
+    fn auto_threshold_is_latency_bandwidth_product() {
+        let link = LinkModel::default(); // 25us, 1.25 GB/s
+        assert_eq!(ReducePlan::auto_threshold(&link), 31250);
+        let tiny = LinkModel {
+            latency_s: 0.0,
+            bandwidth_bps: 1e9,
+        };
+        assert_eq!(ReducePlan::auto_threshold(&tiny), 1);
+    }
+
+    #[test]
+    fn dense_round_is_plan_shape_independent() {
+        // the canonical baseline must not vary with the bucket threshold:
+        // a finer plan changes the *compressed* message structure, never
+        // the "before" system projected_speedup divides by
+        let layout = layout();
+        let lens = layout.layer_lens();
+        let link = LinkModel::default();
+        let whole = dense_bucket_s(&Bucket::whole_model(lens.len()), &lens, 4, &link);
+        for threshold in [1usize, 200, 4096, 1 << 20] {
+            let plan = ReducePlan::build(&layout, threshold, 2);
+            let total = plan.dense_round_s(&lens, 4, &link);
+            assert!((total - whole).abs() < 1e-18, "threshold {threshold}");
+        }
+        // one singleton bucket's dense bytes: frame + one dense sub-message
+        let plan = ReducePlan::build(&layout, 4096, 2);
+        let b = &plan.buckets[0]; // {b2}: 10 elements
+        assert_eq!(
+            b.dense_wire_bytes(&lens),
+            bucket_wire_len(1, HEADER_BYTES + 4 * 10)
+        );
+        // more learners -> strictly costlier baseline
+        assert!(plan.dense_round_s(&lens, 8, &link) > whole);
+    }
+}

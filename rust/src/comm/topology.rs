@@ -1,68 +1,84 @@
 //! Exchange topologies over compressed gradient packets.
 //!
-//! Both topologies implement the same *semantics* — every learner ends the
-//! round holding the elementwise **sum** of all learners' packets (synchronous
-//! SGD with identical weights, as in the paper) — but charge the fabric
-//! differently:
+//! Every topology implements the same *semantics* — each round, every
+//! learner ends up holding the elementwise **sum** of all learners' packets
+//! for the round's bucket (synchronous SGD with identical weights, as in
+//! the paper) — but charges the fabric differently:
 //!
-//! * `ParamServer`: learners push packets up (their wire bytes); the server
-//!   reduces and broadcasts the merged *sparse union* back down. Round time =
-//!   max(upload) + max(download) with the server's in/out links serialized
-//!   across learners (single-port model).
-//! * `Ring`: all-gather of compressed packets around the ring (the
-//!   paper-cited NCCL-style ring, Luehr'16). Each learner forwards every
-//!   other learner's packet once: N-1 hops, per-hop time = latency + max
-//!   chunk / bandwidth; all links run in parallel.
+//! * [`ParamServer`] (`ps`, `ps:<S>`): learners push bucket messages up;
+//!   the server reduces and broadcasts the merged *sparse union* back down.
+//!   A shard's in/out links serialize across learners (single-port model).
+//!   With `S > 1` shards, each shard is an independent **port**: the reduce
+//!   plan partitions buckets over ports and the engine overlaps rounds on
+//!   disjoint ports on the simulated timeline — the sharding win is
+//!   pipeline parallelism across buckets, not a cheaper single round.
+//! * [`HierPs`] (`hier:<G>`): rack-local aggregators of G learners feed a
+//!   root — a two-hop tree. Per round: members serialize into their
+//!   aggregator (racks in parallel), aggregators serialize their rack
+//!   unions into the root, the root serializes the global union back out,
+//!   aggregators broadcast to members (racks in parallel). The root handles
+//!   ceil(N/G) messages instead of N — the classic fan-in reduction.
+//! * [`Ring`]: all-gather of compressed bucket messages around the ring
+//!   (the paper-cited NCCL-style ring, Luehr'16): N-1 hops, per-hop time =
+//!   latency + max message / bandwidth; all links run in parallel.
 //!
-//! Packets stay compressed end-to-end (this is the point of the paper:
-//! reduction of *sparse ternary* vectors), and the reduce is a dense
-//! accumulate into a reusable buffer.
+//! **Granularity.** The unit of exchange is the reduce-plan
+//! [`Bucket`](super::plan::Bucket): one
+//! [bucket frame](crate::compress::wire::bucket_wire_len) per learner per
+//! round coalescing the bucket's per-layer packets, so per-message latency
+//! is charged per *bucket* — tiny layers (biases) ride along with their
+//! neighbours instead of paying a full latency each
+//! ([`exchange_bucket_into`](Topology::exchange_bucket_into)).
+//! [`Topology::exchange_into`] drives the same path through a synthetic
+//! whole-model bucket (the pre-plan coalesced barrier round) for benches
+//! and tests.
 //!
-//! Two exchange granularities share those semantics:
+//! **Dense baseline.** Every round reports
+//! [`RoundCost::dense_comm_s`] = [`plan::dense_bucket_s`] — the canonical
+//! single-port uncompressed cost of the same bucket, *identical across
+//! topologies and exchange modes* so `projected_speedup` always compares
+//! against the same "before" system.
 //!
-//! * `exchange_into` — the **barrier** path: one round covering every layer,
-//!   each learner's layers coalesced into one message (one latency charge
-//!   per learner per direction).
-//! * `exchange_layer_into` — the **streamed** path: one round covering a
-//!   single layer, so the engine can reduce layer *k* while layers
-//!   *k-1..0* are still in backward. Each layer travels as its own message,
-//!   so the per-message latency is charged per layer — the honest cost of
-//!   streaming. The float math is identical to the corresponding slice of
-//!   the barrier reduce (same learner-id summation order per element).
+//! **Determinism.** Packets are reduced densely in learner-id order within
+//! each bucket ([`reduce_bucket_into`]) no matter the topology: the
+//! simulated aggregation structure (shards, racks, ring hops) affects only
+//! the *timeline*, never the float summation order. This is what keeps
+//! results bit-identical across `ps`/`ps:S`/`hier:G`/`ring` × exchange mode
+//! × thread count (rust/tests/engine_native.rs).
 //!
-//! Both return a [`RoundCost`] so the engine can place the round on the
-//! overlap timeline ([`Fabric::record_step`](super::fabric::Fabric)).
-//!
-//! Hot-path contract (see DESIGN.md §Threading): both exchange entry points
-//! reuse the caller's buffers and each topology's internal scratch, so a
-//! steady-state exchange performs **zero heap allocation** (pinned by
-//! rust/tests/alloc_free.rs). Packets are reduced in learner-id order — the
-//! float summation order is part of the engine's determinism contract.
+//! Hot-path contract (DESIGN.md §Threading): exchanges reuse the caller's
+//! buffers and each topology's internal scratch — a steady-state round
+//! performs **zero heap allocation** (rust/tests/alloc_free.rs).
+
+use anyhow::bail;
 
 use super::fabric::{Fabric, LinkModel};
-use crate::compress::wire::HEADER_BYTES;
+use super::plan::{dense_bucket_s, Bucket};
+use crate::compress::wire::{bucket_wire_len, HEADER_BYTES};
 use crate::compress::Packet;
 
-/// Valid topology names for [`build`] (aliases listed in the error text).
-pub const NAMES: &[&str] = &["ring", "ps"];
+/// Valid-form list for [`build`] errors (grammar, not literal names —
+/// `ps:<S>`/`hier:<G>` take an integer parameter).
+const VALID: &str = "valid: ring, ps, ps:<S> (S shard servers), hier:<G> (racks of G); \
+                     alias: param_server = ps";
 
-/// Simulated cost of one exchange round (whole-step barrier round or one
-/// layer's streamed round).
+/// Simulated cost of one exchange round (one bucket, or the whole-model
+/// bucket on the coalesced barrier path).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RoundCost {
     /// Critical-path seconds for the compressed packets actually sent.
     pub comm_s: f64,
-    /// What the same round would have cost with dense f32 payloads, at the
-    /// same message granularity (whole step for `exchange_into`, one layer
-    /// for `exchange_layer_into`). For the run-level no-compression
-    /// baseline use [`Topology::dense_round_s`] — the coalesced dense
-    /// barrier round — so the baseline does not vary with the exchange
-    /// mode's message granularity.
+    /// The canonical dense baseline for the same bucket
+    /// ([`plan::dense_bucket_s`]): uncompressed f32 through a single
+    /// serialized port. Identical across topologies and exchange modes —
+    /// the run-level baseline is [`ReducePlan::dense_round_s`]
+    /// (super::plan::ReducePlan::dense_round_s), never a per-topology or
+    /// per-granularity quantity.
     pub dense_comm_s: f64,
 }
 
 /// The dense per-layer sum of every learner's packet. Allocate once with
-/// [`Reduced::new`] and reuse across rounds via `exchange_into`.
+/// [`Reduced::new`] and reuse across rounds.
 pub struct Reduced {
     /// One dense buffer per layer, layer order.
     pub sums: Vec<Vec<f32>>,
@@ -90,51 +106,52 @@ impl Reduced {
 }
 
 pub trait Topology: Send {
-    fn name(&self) -> &'static str;
+    /// Topology name as parsed (`ps`, `ps:4`, `hier:2`, `ring`).
+    fn name(&self) -> &str;
 
-    /// One synchronous **barrier** exchange round, allocation-free in steady
-    /// state.
+    /// Number of independent fabric ports. Rounds on distinct ports may
+    /// overlap on the engine's simulated timeline; rounds on one port
+    /// serialize. The reduce plan partitions buckets over `0..ports()`.
+    fn ports(&self) -> usize {
+        1
+    }
+
+    /// One synchronous exchange round for one reduce-plan bucket,
+    /// allocation-free in steady state.
     ///
-    /// `per_learner[l]` holds learner l's packets, one per layer, in layer
-    /// order. `layer_lens` gives each layer's dense length. Zeroes `out` and
-    /// accumulates the per-layer dense sums into it (learner-id order),
-    /// records bytes/time on `fabric`, and returns the round's cost.
-    fn exchange_into(
+    /// `per_learner[l]` holds learner l's packets for the bucket's layers,
+    /// ascending layer order (matching `bucket.layers`). Zeroes the
+    /// bucket's slices of `out` and accumulates the dense sums in
+    /// learner-id order, records bytes/time on `fabric`, and returns the
+    /// round's cost. Each learner's packets travel as **one** bucket-framed
+    /// message, so latency is charged once per learner per direction.
+    fn exchange_bucket_into(
         &mut self,
+        bucket: &Bucket,
         per_learner: &[Vec<Packet>],
         layer_lens: &[usize],
         fabric: &mut Fabric,
         out: &mut Reduced,
     ) -> RoundCost;
 
-    /// One **streamed** exchange round covering a single layer: `packets`
-    /// holds one packet per learner in learner-id order, all for `layer`
-    /// (dense length `len`). Zeroes `out` (the layer's dense sum buffer)
-    /// and accumulates into it in learner-id order — bit-identical to the
-    /// same layer's slice of `exchange_into`. Allocation-free in steady
-    /// state. The layer travels as its own message, so latency is charged
-    /// per layer.
-    fn exchange_layer_into(
+    /// One coalesced **whole-model barrier** round: every layer in a single
+    /// synthetic bucket (benches/tests; the engine drives real plan buckets
+    /// through [`exchange_bucket_into`](Self::exchange_bucket_into)).
+    /// `per_learner[l]` holds one packet per layer in layer order.
+    fn exchange_into(
         &mut self,
-        layer: usize,
-        packets: &[Packet],
-        len: usize,
+        per_learner: &[Vec<Packet>],
+        layer_lens: &[usize],
         fabric: &mut Fabric,
-        out: &mut [f32],
-    ) -> RoundCost;
-
-    /// Simulated cost of one coalesced **dense-f32 barrier** round — the
-    /// no-compression baseline both exchange granularities are judged
-    /// against: every learner ships all layers as one message each way.
-    /// Constant for a fixed (layout, learner count), so the engine computes
-    /// it once per run; using the coalesced structure keeps the baseline
-    /// identical across `--exchange` modes (the streamed path's extra
-    /// per-layer latency is charged to the streamed packets, never to the
-    /// dense baseline).
-    fn dense_round_s(&self, layer_lens: &[usize], n_learners: usize, link: &LinkModel) -> f64;
+        out: &mut Reduced,
+    ) -> RoundCost {
+        out.reset(layer_lens);
+        let bucket = Bucket::whole_model(layer_lens.len());
+        self.exchange_bucket_into(&bucket, per_learner, layer_lens, fabric, out)
+    }
 
     /// Convenience wrapper that allocates a fresh `Reduced` per round
-    /// (benches/tests; the engine uses `exchange_into`).
+    /// (benches/tests; the engine reuses one).
     fn exchange(
         &mut self,
         per_learner: &[Vec<Packet>],
@@ -147,78 +164,144 @@ pub trait Topology: Send {
     }
 }
 
-/// Dense reduce in learner-id order (the determinism contract: float
-/// summation order is fixed regardless of how learners were scheduled).
-fn reduce_into(per_learner: &[Vec<Packet>], layer_lens: &[usize], out: &mut Reduced) {
-    out.reset(layer_lens);
+/// Dense reduce of one bucket in learner-id order — the determinism
+/// contract: the float summation order is fixed by learner id regardless of
+/// topology, thread schedule, or exchange mode.
+fn reduce_bucket_into(bucket: &Bucket, per_learner: &[Vec<Packet>], out: &mut Reduced) {
+    for li in bucket.layers.clone() {
+        out.sums[li].fill(0.0);
+    }
     for packets in per_learner {
-        assert_eq!(packets.len(), layer_lens.len(), "one packet per layer");
+        assert_eq!(
+            packets.len(),
+            bucket.num_layers(),
+            "one packet per bucket layer"
+        );
         for p in packets {
+            debug_assert!(bucket.layers.contains(&p.layer));
             p.add_into(&mut out.sums[p.layer]);
         }
     }
 }
 
-/// Single-layer reduce in learner-id order — the streamed counterpart of
-/// [`reduce_into`], same per-element float summation order.
-fn reduce_layer_into(packets: &[Packet], out: &mut [f32]) {
-    out.fill(0.0);
-    for p in packets {
-        p.add_into(out);
+/// What dense f32 would have sent in total for this bucket (payload only —
+/// feeds `FabricStats::dense_bytes_equiv` / `effective_rate`).
+fn dense_payload_equiv(bucket: &Bucket, layer_lens: &[usize], n_learners: usize) -> usize {
+    4 * bucket.layers.clone().map(|li| layer_lens[li]).sum::<usize>() * n_learners
+}
+
+/// Wire bytes of one learner's bucket-framed upload.
+fn bucket_msg_bytes(packets: &[Packet]) -> usize {
+    bucket_wire_len(packets.len(), packets.iter().map(|p| p.wire_bytes).sum())
+}
+
+/// Reusable bitset scratch for exact sparse-union sizes.
+#[derive(Default)]
+struct UnionBits {
+    bits: Vec<u64>,
+}
+
+impl UnionBits {
+    fn clear(&mut self, len: usize) -> &mut [u64] {
+        let words = len.div_ceil(64);
+        if self.bits.len() < words {
+            self.bits.resize(words, 0);
+        }
+        let bits = &mut self.bits[..words];
+        bits.fill(0);
+        bits
+    }
+
+    fn count(&self, len: usize) -> usize {
+        self.bits[..len.div_ceil(64)]
+            .iter()
+            .map(|w| w.count_ones() as usize)
+            .sum()
     }
 }
 
-fn dense_equiv(layer_lens: &[usize], n_learners: usize) -> usize {
-    4 * layer_lens.iter().sum::<usize>() * n_learners
+/// Set a packet's indices in `bits`; returns false (dense, union = whole
+/// layer) if the packet is dense.
+fn set_packet_bits(bits: &mut [u64], p: &Packet) -> bool {
+    if p.is_dense() {
+        return false;
+    }
+    for &i in &p.idx {
+        bits[(i / 64) as usize] |= 1u64 << (i % 64);
+    }
+    true
 }
 
-/// Centralized parameter-server topology.
+/// Per-layer downlink payload for a merged update of `union` of `len`
+/// elements: (index u32, value f32) pairs or the dense layer when cheaper,
+/// plus the per-layer sub-message header (charged once, outside the min).
+fn union_payload(union: usize, len: usize) -> usize {
+    (8 * union).min(4 * len) + HEADER_BYTES
+}
+
+/// Centralized parameter-server topology, optionally sharded (`ps:<S>`).
 ///
 /// Holds reusable scratch (per-learner byte counts + the sparse-union
-/// bitset) so rounds are allocation-free in steady state.
-#[derive(Default)]
+/// bitset) so rounds are allocation-free in steady state. The shard count
+/// only sets [`ports`](Topology::ports) — each bucket's round runs on its
+/// plan-assigned shard with the classic single-port cost; disjoint shards
+/// overlap on the engine's timeline.
 pub struct ParamServer {
+    shards: usize,
+    name: String,
     up: Vec<usize>,
     down: Vec<usize>,
-    /// Reusable bitset words for the per-layer sparse-union size.
-    union_bits: Vec<u64>,
+    union: UnionBits,
+}
+
+impl Default for ParamServer {
+    fn default() -> Self {
+        ParamServer::sharded(1)
+    }
 }
 
 impl ParamServer {
-    /// Exact element count of the server's merged (union) packet for one
-    /// layer: duplicates across learners merge. Any dense packet forces the
-    /// whole layer dense. `packets` yields one packet per learner for the
-    /// same layer.
-    fn union_sent<'p>(
-        &mut self,
-        packets: impl Iterator<Item = &'p Packet>,
-        len: usize,
-    ) -> usize {
-        let words = len.div_ceil(64);
-        if self.union_bits.len() < words {
-            self.union_bits.resize(words, 0);
+    pub fn sharded(shards: usize) -> ParamServer {
+        assert!(shards >= 1);
+        ParamServer {
+            shards,
+            name: if shards == 1 {
+                "ps".to_string()
+            } else {
+                format!("ps:{shards}")
+            },
+            up: Vec::new(),
+            down: Vec::new(),
+            union: UnionBits::default(),
         }
-        let bits = &mut self.union_bits[..words];
-        bits.fill(0);
+    }
+
+    /// Exact element count of the server's merged (union) packet for one
+    /// layer: duplicates across learners merge; any dense packet forces the
+    /// whole layer dense.
+    fn union_sent<'p>(&mut self, packets: impl Iterator<Item = &'p Packet>, len: usize) -> usize {
+        let bits = self.union.clear(len);
         for p in packets {
-            if p.is_dense() {
+            if !set_packet_bits(bits, p) {
                 return len;
             }
-            for &i in &p.idx {
-                bits[(i / 64) as usize] |= 1u64 << (i % 64);
-            }
         }
-        bits.iter().map(|w| w.count_ones() as usize).sum()
+        self.union.count(len)
     }
 }
 
 impl Topology for ParamServer {
-    fn name(&self) -> &'static str {
-        "ps"
+    fn name(&self) -> &str {
+        &self.name
     }
 
-    fn exchange_into(
+    fn ports(&self) -> usize {
+        self.shards
+    }
+
+    fn exchange_bucket_into(
         &mut self,
+        bucket: &Bucket,
         per_learner: &[Vec<Packet>],
         layer_lens: &[usize],
         fabric: &mut Fabric,
@@ -226,74 +309,183 @@ impl Topology for ParamServer {
     ) -> RoundCost {
         let n = per_learner.len();
         self.up.clear();
-        self.up.extend(
-            per_learner
-                .iter()
-                .map(|ps| ps.iter().map(|p| p.wire_bytes).sum::<usize>()),
-        );
-        // The merged update the server broadcasts: the exact sparse union of
-        // the learners' packets (a reusable bitset, not a capped sum), as
-        // (index u32, value f32) pairs — or the dense layer when that is
-        // cheaper. The header is charged once per layer, outside the min.
-        let mut down_one = 0usize;
-        for (layer, &len) in layer_lens.iter().enumerate() {
-            let union = self.union_sent(per_learner.iter().map(|ps| &ps[layer]), len);
-            down_one += (8 * union).min(4 * len) + HEADER_BYTES;
+        self.up.extend(per_learner.iter().map(|ps| bucket_msg_bytes(ps)));
+        // The merged update the shard broadcasts: per layer, the exact
+        // sparse union of the learners' packets (reusable bitset, not a
+        // capped sum) — or the dense layer when that is cheaper — framed as
+        // one bucket message.
+        let mut down_payload = 0usize;
+        for (pos, li) in bucket.layers.clone().enumerate() {
+            let len = layer_lens[li];
+            let union = self.union_sent(per_learner.iter().map(|ps| &ps[pos]), len);
+            down_payload += union_payload(union, len);
         }
+        let down_one = bucket_wire_len(bucket.num_layers(), down_payload);
         self.down.clear();
         self.down.resize(n, down_one);
 
-        // Single-port server: uploads serialize into the server, downloads
+        // Single-port shard: uploads serialize into the shard, downloads
         // serialize out; learners' own links run in parallel.
         let t_up: f64 = self.up.iter().map(|&b| fabric.link.transfer_time(b)).sum();
         let t_down: f64 = self.down.iter().map(|&b| fabric.link.transfer_time(b)).sum();
-        fabric.record_round(&self.up, &self.down, t_up + t_down, dense_equiv(layer_lens, n));
+        fabric.record_round(
+            &self.up,
+            &self.down,
+            t_up + t_down,
+            dense_payload_equiv(bucket, layer_lens, n),
+        );
 
-        reduce_into(per_learner, layer_lens, out);
+        reduce_bucket_into(bucket, per_learner, out);
 
         RoundCost {
             comm_s: t_up + t_down,
-            dense_comm_s: self.dense_round_s(layer_lens, n, &fabric.link),
-        }
-    }
-
-    fn dense_round_s(&self, layer_lens: &[usize], n_learners: usize, link: &LinkModel) -> f64 {
-        // single-port server: n dense uploads serialize in, n broadcasts out
-        let bytes = 4 * layer_lens.iter().sum::<usize>() + HEADER_BYTES;
-        2.0 * n_learners as f64 * link.transfer_time(bytes)
-    }
-
-    fn exchange_layer_into(
-        &mut self,
-        _layer: usize,
-        packets: &[Packet],
-        len: usize,
-        fabric: &mut Fabric,
-        out: &mut [f32],
-    ) -> RoundCost {
-        let n = packets.len();
-        self.up.clear();
-        self.up.extend(packets.iter().map(|p| p.wire_bytes));
-        let union = self.union_sent(packets.iter(), len);
-        let down_one = (8 * union).min(4 * len) + HEADER_BYTES;
-        self.down.clear();
-        self.down.resize(n, down_one);
-
-        let t_up: f64 = self.up.iter().map(|&b| fabric.link.transfer_time(b)).sum();
-        let t_down: f64 = self.down.iter().map(|&b| fabric.link.transfer_time(b)).sum();
-        fabric.record_round(&self.up, &self.down, t_up + t_down, 4 * len * n);
-
-        reduce_layer_into(packets, out);
-
-        let dense_one = fabric.link.transfer_time(4 * len + HEADER_BYTES);
-        RoundCost {
-            comm_s: t_up + t_down,
-            dense_comm_s: 2.0 * n as f64 * dense_one,
+            dense_comm_s: dense_bucket_s(bucket, layer_lens, n, &fabric.link),
         }
     }
 }
 
-/// Ring all-gather of compressed packets.
+/// Two-level parameter server (`hier:<G>`): rack-local aggregators of G
+/// learners feeding a root.
+///
+/// Timeline model (two-hop): members serialize into their aggregator
+/// (racks in parallel → max over racks), aggregators serialize rack unions
+/// into the root, the root serializes the global union back to each
+/// aggregator, aggregators broadcast to their members (racks in parallel).
+/// Fabric **bytes** are charged at the learner edge only (what each learner
+/// sent/received); the aggregator↔root hop shows up in the round *time* —
+/// byte totals stay comparable with `ps` at the same compression.
+///
+/// The numerical reduce stays the canonical flat learner-id-order sum
+/// ([`reduce_bucket_into`]): the rack tree shapes the simulated timeline
+/// only (DESIGN.md §Topologies, determinism contract).
+pub struct HierPs {
+    group: usize,
+    name: String,
+    up: Vec<usize>,
+    down: Vec<usize>,
+    /// Per-rack downlink payload scratch (rack-union bucket messages).
+    rack_payload: Vec<usize>,
+    rack_bits: UnionBits,
+    global_bits: UnionBits,
+}
+
+impl HierPs {
+    pub fn new(group: usize) -> HierPs {
+        assert!(group >= 2);
+        HierPs {
+            group,
+            name: format!("hier:{group}"),
+            up: Vec::new(),
+            down: Vec::new(),
+            rack_payload: Vec::new(),
+            rack_bits: UnionBits::default(),
+            global_bits: UnionBits::default(),
+        }
+    }
+
+    fn racks(&self, n: usize) -> usize {
+        n.div_ceil(self.group)
+    }
+}
+
+impl Topology for HierPs {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn exchange_bucket_into(
+        &mut self,
+        bucket: &Bucket,
+        per_learner: &[Vec<Packet>],
+        layer_lens: &[usize],
+        fabric: &mut Fabric,
+        out: &mut Reduced,
+    ) -> RoundCost {
+        let n = per_learner.len();
+        let racks = self.racks(n);
+        self.up.clear();
+        self.up.extend(per_learner.iter().map(|ps| bucket_msg_bytes(ps)));
+
+        // Per layer: rack unions (what each aggregator forwards) and the
+        // global union (what the root broadcasts). A dense member packet
+        // forces its rack — and therefore the global — union dense.
+        self.rack_payload.clear();
+        self.rack_payload.resize(racks, 0);
+        let mut global_payload = 0usize;
+        for (pos, li) in bucket.layers.clone().enumerate() {
+            let len = layer_lens[li];
+            self.global_bits.clear(len);
+            let mut global_dense = false;
+            for r in 0..racks {
+                let members = (r * self.group)..((r + 1) * self.group).min(n);
+                let bits = self.rack_bits.clear(len);
+                let mut rack_dense = false;
+                for l in members {
+                    if !set_packet_bits(bits, &per_learner[l][pos]) {
+                        rack_dense = true;
+                    }
+                }
+                let rack_union = if rack_dense {
+                    global_dense = true;
+                    len
+                } else {
+                    self.rack_bits.count(len)
+                };
+                self.rack_payload[r] += union_payload(rack_union, len);
+                let gbits = &mut self.global_bits.bits[..len.div_ceil(64)];
+                for (g, w) in gbits.iter_mut().zip(self.rack_bits.bits.iter()) {
+                    *g |= *w;
+                }
+            }
+            let global_union = if global_dense {
+                len
+            } else {
+                self.global_bits.count(len)
+            };
+            global_payload += union_payload(global_union, len);
+        }
+        let k = bucket.num_layers();
+        let global_msg = bucket_wire_len(k, global_payload);
+        self.down.clear();
+        self.down.resize(n, global_msg);
+
+        // Hop 1 up: members serialize into their aggregator, racks parallel.
+        let mut t_rack_up = 0.0f64;
+        // Hop 2 down: aggregators broadcast the global union, racks parallel.
+        let mut t_rack_down = 0.0f64;
+        for r in 0..racks {
+            let members = (r * self.group)..((r + 1) * self.group).min(n);
+            let m = members.len();
+            let t_up: f64 = members.map(|l| fabric.link.transfer_time(self.up[l])).sum();
+            t_rack_up = t_rack_up.max(t_up);
+            t_rack_down = t_rack_down.max(m as f64 * fabric.link.transfer_time(global_msg));
+        }
+        // Root: rack unions serialize in, global unions serialize out.
+        let t_root_in: f64 = self
+            .rack_payload
+            .iter()
+            .map(|&p| fabric.link.transfer_time(bucket_wire_len(k, p)))
+            .sum();
+        let t_root_out = racks as f64 * fabric.link.transfer_time(global_msg);
+        let t = t_rack_up + t_root_in + t_root_out + t_rack_down;
+
+        fabric.record_round(
+            &self.up,
+            &self.down,
+            t,
+            dense_payload_equiv(bucket, layer_lens, n),
+        );
+
+        reduce_bucket_into(bucket, per_learner, out);
+
+        RoundCost {
+            comm_s: t,
+            dense_comm_s: dense_bucket_s(bucket, layer_lens, n, &fabric.link),
+        }
+    }
+}
+
+/// Ring all-gather of compressed bucket messages.
 #[derive(Default)]
 pub struct Ring {
     own: Vec<usize>,
@@ -330,12 +522,13 @@ impl Ring {
 }
 
 impl Topology for Ring {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "ring"
     }
 
-    fn exchange_into(
+    fn exchange_bucket_into(
         &mut self,
+        bucket: &Bucket,
         per_learner: &[Vec<Packet>],
         layer_lens: &[usize],
         fabric: &mut Fabric,
@@ -343,59 +536,56 @@ impl Topology for Ring {
     ) -> RoundCost {
         let n = per_learner.len();
         self.own.clear();
-        self.own.extend(
-            per_learner
-                .iter()
-                .map(|ps| ps.iter().map(|p| p.wire_bytes).sum::<usize>()),
+        self.own.extend(per_learner.iter().map(|ps| bucket_msg_bytes(ps)));
+        let time = self.all_gather(fabric);
+        fabric.record_round(
+            &self.up,
+            &self.down,
+            time,
+            dense_payload_equiv(bucket, layer_lens, n),
         );
-        let time = self.all_gather(fabric);
-        fabric.record_round(&self.up, &self.down, time, dense_equiv(layer_lens, n));
-        reduce_into(per_learner, layer_lens, out);
+        reduce_bucket_into(bucket, per_learner, out);
 
         RoundCost {
             comm_s: time,
-            dense_comm_s: self.dense_round_s(layer_lens, n, &fabric.link),
-        }
-    }
-
-    fn dense_round_s(&self, layer_lens: &[usize], n_learners: usize, link: &LinkModel) -> f64 {
-        // all-gather of one coalesced dense message per learner: n-1 hops
-        let bytes = 4 * layer_lens.iter().sum::<usize>() + HEADER_BYTES;
-        n_learners.saturating_sub(1) as f64 * link.transfer_time(bytes)
-    }
-
-    fn exchange_layer_into(
-        &mut self,
-        _layer: usize,
-        packets: &[Packet],
-        len: usize,
-        fabric: &mut Fabric,
-        out: &mut [f32],
-    ) -> RoundCost {
-        let n = packets.len();
-        self.own.clear();
-        self.own.extend(packets.iter().map(|p| p.wire_bytes));
-        let time = self.all_gather(fabric);
-        fabric.record_round(&self.up, &self.down, time, 4 * len * n);
-        reduce_layer_into(packets, out);
-
-        let dense_hops = n.saturating_sub(1) as f64;
-        RoundCost {
-            comm_s: time,
-            dense_comm_s: dense_hops * fabric.link.transfer_time(4 * len + HEADER_BYTES),
+            dense_comm_s: dense_bucket_s(bucket, layer_lens, n, &fabric.link),
         }
     }
 }
 
-/// Parse a topology by name; unknown names error with the valid list.
-pub fn build(name: &str) -> anyhow::Result<Box<dyn Topology>> {
+/// Parse a topology spec; unknown names or invalid parameters error with
+/// the valid-form list. `n_learners` bounds the `ps:<S>` shard count and
+/// `hier:<G>` group size — a plan that shards wider than the learner count
+/// is a config typo, not a topology.
+pub fn build(name: &str, n_learners: usize) -> anyhow::Result<Box<dyn Topology>> {
+    if let Some(s) = name.strip_prefix("ps:") {
+        let shards: usize = s.parse().map_err(|_| {
+            anyhow::anyhow!("topology '{name}': '{s}' is not a shard count ({VALID})")
+        })?;
+        if shards < 1 || shards > n_learners {
+            bail!(
+                "topology '{name}': shard count must satisfy 1 <= S <= learner count \
+                 ({n_learners}) ({VALID})"
+            );
+        }
+        return Ok(Box::new(ParamServer::sharded(shards)));
+    }
+    if let Some(g) = name.strip_prefix("hier:") {
+        let group: usize = g.parse().map_err(|_| {
+            anyhow::anyhow!("topology '{name}': '{g}' is not a group size ({VALID})")
+        })?;
+        if group < 2 || group > n_learners {
+            bail!(
+                "topology '{name}': group size must satisfy 2 <= G <= learner count \
+                 ({n_learners}) ({VALID})"
+            );
+        }
+        return Ok(Box::new(HierPs::new(group)));
+    }
     match name {
         "ps" | "param_server" => Ok(Box::new(ParamServer::default())),
         "ring" => Ok(Box::new(Ring::default())),
-        other => anyhow::bail!(
-            "unknown topology '{other}' (valid: {}; alias: param_server = ps)",
-            NAMES.join(", ")
-        ),
+        other => bail!("unknown topology '{other}' ({VALID})"),
     }
 }
 
@@ -403,6 +593,8 @@ pub fn build(name: &str) -> anyhow::Result<Box<dyn Topology>> {
 mod tests {
     use super::*;
     use crate::comm::fabric::LinkModel;
+    use crate::comm::plan::ReducePlan;
+    use crate::models::{LayerKind, Layout};
 
     fn sparse(layer: usize, n: usize, idx: Vec<u32>, val: Vec<f32>) -> Packet {
         let wire = 16 + 2 * idx.len();
@@ -422,15 +614,42 @@ mod tests {
         (vec![l0, l1], vec![6])
     }
 
+    /// 3-layer fixture with 4 learners for plan-driven bucket tests.
+    fn bucketed() -> (Layout, Vec<Vec<Packet>>) {
+        let layout = Layout::from_specs(&[
+            ("w", &[40], LayerKind::Fc),
+            ("b", &[8], LayerKind::Fc),
+            ("head", &[12], LayerKind::Fc),
+        ]);
+        let per_learner = (0..4usize)
+            .map(|l| {
+                vec![
+                    sparse(0, 40, vec![l as u32, 10 + l as u32], vec![1.0, -1.0]),
+                    sparse(1, 8, vec![l as u32], vec![0.5]),
+                    sparse(2, 12, vec![2 * l as u32], vec![2.0]),
+                ]
+            })
+            .collect();
+        (layout, per_learner)
+    }
+
+    /// Every buildable topology spec at 4 learners.
+    const TOPOS4: &[&str] = &["ring", "ps", "ps:2", "ps:4", "hier:2", "hier:4"];
+
     #[test]
-    fn ps_and_ring_same_sums() {
+    fn all_topologies_same_sums() {
         let (pk, lens) = learners();
-        let mut f1 = Fabric::new(LinkModel::default());
-        let mut f2 = Fabric::new(LinkModel::default());
-        let a = ParamServer::default().exchange(&pk, &lens, &mut f1);
-        let b = Ring::default().exchange(&pk, &lens, &mut f2);
-        assert_eq!(a.sums, b.sums);
-        assert_eq!(a.sums[0], vec![1.5, 0.0, 0.0, -1.0, 0.0, 2.0]);
+        let mut reference: Option<Vec<Vec<f32>>> = None;
+        for name in ["ring", "ps", "ps:2", "hier:2"] {
+            let mut f = Fabric::new(LinkModel::default());
+            let r = build(name, 2).unwrap().exchange(&pk, &lens, &mut f);
+            assert_eq!(r.sums[0], vec![1.5, 0.0, 0.0, -1.0, 0.0, 2.0], "{name}");
+            if let Some(expect) = &reference {
+                assert_eq!(&r.sums, expect, "{name}");
+            } else {
+                reference = Some(r.sums);
+            }
+        }
     }
 
     #[test]
@@ -448,39 +667,187 @@ mod tests {
     }
 
     #[test]
-    fn layer_exchange_matches_barrier_sums() {
-        // the streamed per-layer reduce must be bit-identical to the same
-        // layer's slice of the barrier reduce, for both topologies
-        let (pk, lens) = learners();
-        let layer0: Vec<Packet> = pk.iter().map(|ps| ps[0].clone()).collect();
-        for name in NAMES {
+    fn bucket_exchange_matches_barrier_sums() {
+        // exchanging plan buckets one by one must produce bit-identical sums
+        // to the coalesced whole-model round, for every topology
+        let (layout, pk) = bucketed();
+        let lens = layout.layer_lens();
+        // threshold 100: head (64B) + b (48B) coalesce, w (176B) alone
+        let plan = ReducePlan::build(&layout, 100, 2);
+        assert_eq!(plan.num_buckets(), 2);
+        for name in TOPOS4 {
             let mut fa = Fabric::new(LinkModel::default());
             let mut fb = Fabric::new(LinkModel::default());
-            let mut topo_a = build(name).unwrap();
-            let mut topo_b = build(name).unwrap();
+            let mut topo_a = build(name, 4).unwrap();
+            let mut topo_b = build(name, 4).unwrap();
             let barrier = topo_a.exchange(&pk, &lens, &mut fa);
-            let mut out = vec![7.0f32; 6]; // must be zeroed by the call
-            let cost = topo_b.exchange_layer_into(0, &layer0, 6, &mut fb, &mut out);
-            assert_eq!(out, barrier.sums[0], "{name}");
-            // same payload bytes either way; time differs (per-layer latency)
-            assert_eq!(fa.stats.bytes_up, fb.stats.bytes_up, "{name}");
-            assert_eq!(fa.stats.bytes_down, fb.stats.bytes_down, "{name}");
-            assert!(cost.comm_s > 0.0 && cost.dense_comm_s > cost.comm_s, "{name}");
+            let mut out = Reduced::new(&lens);
+            // poison: the bucket exchange must zero its layers
+            for s in out.sums.iter_mut() {
+                s.fill(7.0);
+            }
+            for bucket in &plan.buckets {
+                let gather: Vec<Vec<Packet>> = pk
+                    .iter()
+                    .map(|ps| bucket.layers.clone().map(|li| ps[li].clone()).collect())
+                    .collect();
+                let cost =
+                    topo_b.exchange_bucket_into(bucket, &gather, &lens, &mut fb, &mut out);
+                assert!(cost.comm_s > 0.0, "{name}");
+            }
+            assert_eq!(out.sums, barrier.sums, "{name}");
+            assert_eq!(fa.stats.dense_bytes_equiv, fb.stats.dense_bytes_equiv, "{name}");
         }
     }
 
     #[test]
-    fn dense_round_is_the_barrier_rounds_dense_baseline() {
-        // the run-level dense baseline must equal the coalesced barrier
-        // round's dense cost for both topologies (mode-independent baseline)
-        let (pk, lens) = learners();
-        for name in NAMES {
+    fn dense_baseline_is_topology_independent() {
+        // satellite: RoundCost::dense_comm_s must be the canonical
+        // per-bucket baseline — identical for every topology — and the
+        // run-level plan baseline must be the whole-model coalesced round
+        // (independent of the bucket structure)
+        let (layout, pk) = bucketed();
+        let lens = layout.layer_lens();
+        let plan = ReducePlan::build(&layout, 100, 2);
+        let link = LinkModel::default();
+        let mut dense_totals = Vec::new();
+        for name in TOPOS4 {
             let mut f = Fabric::new(LinkModel::default());
-            let mut topo = build(name).unwrap();
-            let cost = topo.exchange_into(&pk, &lens, &mut f, &mut Reduced::new(&lens));
-            let dense = topo.dense_round_s(&lens, 2, &f.link);
-            assert!((cost.dense_comm_s - dense).abs() < 1e-15, "{name}");
+            let mut topo = build(name, 4).unwrap();
+            let mut out = Reduced::new(&lens);
+            let mut total = 0.0f64;
+            for bucket in &plan.buckets {
+                let gather: Vec<Vec<Packet>> = pk
+                    .iter()
+                    .map(|ps| bucket.layers.clone().map(|li| ps[li].clone()).collect())
+                    .collect();
+                total += topo
+                    .exchange_bucket_into(bucket, &gather, &lens, &mut f, &mut out)
+                    .dense_comm_s;
+            }
+            dense_totals.push(total);
         }
+        let expect: f64 = plan
+            .buckets
+            .iter()
+            .map(|b| dense_bucket_s(b, &lens, 4, &link))
+            .sum();
+        for (name, &t) in TOPOS4.iter().zip(dense_totals.iter()) {
+            assert!((t - expect).abs() < 1e-15, "{name}: {t} vs {expect}");
+        }
+        // the run-level baseline the engine divides by is the whole-model
+        // coalesced round — same for any plan over this layout
+        let whole = dense_bucket_s(&Bucket::whole_model(lens.len()), &lens, 4, &link);
+        assert!((plan.dense_round_s(&lens, 4, &link) - whole).abs() < 1e-18);
+        let finer = ReducePlan::build(&layout, 1, 2);
+        assert!((finer.dense_round_s(&lens, 4, &link) - whole).abs() < 1e-18);
+    }
+
+    #[test]
+    fn ports_reflect_shards() {
+        assert_eq!(build("ps", 4).unwrap().ports(), 1);
+        assert_eq!(build("ps:4", 4).unwrap().ports(), 4);
+        assert_eq!(build("ps:2", 4).unwrap().ports(), 2);
+        assert_eq!(build("ring", 4).unwrap().ports(), 1);
+        assert_eq!(build("hier:2", 4).unwrap().ports(), 1);
+    }
+
+    #[test]
+    fn sharded_ps_round_cost_matches_single_shard() {
+        // a single bucket's round is the same single-port cost at any shard
+        // count — the sharding win is overlap across ports, not a cheaper
+        // round (the engine's per-port timeline claims it)
+        let (pk, lens) = learners();
+        let mut f1 = Fabric::new(LinkModel::default());
+        let mut f2 = Fabric::new(LinkModel::default());
+        let c1 = build("ps", 2)
+            .unwrap()
+            .exchange_into(&pk, &lens, &mut f1, &mut Reduced::new(&lens));
+        let c2 = build("ps:2", 2)
+            .unwrap()
+            .exchange_into(&pk, &lens, &mut f2, &mut Reduced::new(&lens));
+        assert!((c1.comm_s - c2.comm_s).abs() < 1e-18);
+        assert_eq!(f1.stats.bytes_up, f2.stats.bytes_up);
+        assert_eq!(f1.stats.bytes_down, f2.stats.bytes_down);
+    }
+
+    #[test]
+    fn hier_root_fan_in_beats_flat_ps_at_scale() {
+        // 16 learners in racks of 4: the root serializes 4 rack messages
+        // instead of 16 learner messages — on a latency-dominated round the
+        // two-hop tree must beat the flat single-port server; with one rack
+        // (G = N) the extra hop must cost strictly more than flat ps
+        let n = 16usize;
+        let lens = vec![64usize];
+        let pk: Vec<Vec<Packet>> = (0..n)
+            .map(|l| vec![sparse(0, 64, vec![l as u32], vec![1.0])])
+            .collect();
+        let cost = |name: &str| {
+            let mut f = Fabric::new(LinkModel::default());
+            build(name, n)
+                .unwrap()
+                .exchange_into(&pk, &lens, &mut f, &mut Reduced::new(&lens))
+                .comm_s
+        };
+        assert!(cost("hier:4") < cost("ps"), "two-hop tree must win at 16 learners");
+        assert!(cost("hier:16") > cost("ps"), "one rack = flat ps plus two extra hops");
+    }
+
+    #[test]
+    fn ring_bytes_scale_with_n_minus_1() {
+        let (pk, lens) = learners();
+        let mut f = Fabric::new(LinkModel::default());
+        Ring::default().exchange(&pk, &lens, &mut f);
+        // each learner's 20-byte packet rides a 32-byte bucket frame
+        // (8 header + 4 length prefix) and travels n-1 = 1 hop
+        assert_eq!(f.stats.bytes_up, 2 * 32);
+        assert_eq!(f.stats.rounds, 1);
+    }
+
+    #[test]
+    fn ps_charges_upload_plus_broadcast() {
+        let (pk, lens) = learners();
+        let mut f = Fabric::new(LinkModel::default());
+        ParamServer::default().exchange(&pk, &lens, &mut f);
+        assert_eq!(f.stats.bytes_up, 2 * 32);
+        assert!(f.stats.bytes_down > 0);
+        assert!(f.stats.sim_time_s > 0.0);
+    }
+
+    #[test]
+    fn ps_broadcast_uses_exact_sparse_union() {
+        // learners overlap on index 0: union = {0, 3, 5} = 3 elements, not 4.
+        let (pk, lens) = learners();
+        let mut f = Fabric::new(LinkModel::default());
+        ParamServer::default().exchange(&pk, &lens, &mut f);
+        let payload = (8 * 3usize).min(4 * 6) + HEADER_BYTES;
+        let expect_down_one = bucket_wire_len(1, payload);
+        assert_eq!(f.stats.bytes_down, 2 * expect_down_one as u64);
+    }
+
+    #[test]
+    fn ps_dense_packet_forces_dense_union() {
+        let l0 = vec![Packet::dense(0, vec![1.0; 6])];
+        let l1 = vec![sparse(0, 6, vec![2], vec![1.0])];
+        let mut f = Fabric::new(LinkModel::default());
+        ParamServer::default().exchange(&[l0, l1], &[6], &mut f);
+        // dense fallback (4 bytes/elem beats 8) + one sub-header, framed
+        let expect_down_one = bucket_wire_len(1, 4 * 6 + HEADER_BYTES);
+        assert_eq!(f.stats.bytes_down, 2 * expect_down_one as u64);
+    }
+
+    #[test]
+    fn hier_learner_edge_bytes_match_ps() {
+        // hier charges learner-edge bytes only (aggregator<->root traffic is
+        // time, not learner bytes): byte totals must equal flat ps
+        let (layout, pk) = bucketed();
+        let lens = layout.layer_lens();
+        let mut fp = Fabric::new(LinkModel::default());
+        let mut fh = Fabric::new(LinkModel::default());
+        build("ps", 4).unwrap().exchange(&pk, &lens, &mut fp);
+        build("hier:2", 4).unwrap().exchange(&pk, &lens, &mut fh);
+        assert_eq!(fp.stats.bytes_up, fh.stats.bytes_up);
+        assert_eq!(fp.stats.bytes_down, fh.stats.bytes_down);
     }
 
     #[test]
@@ -494,47 +861,6 @@ mod tests {
     }
 
     #[test]
-    fn ring_bytes_scale_with_n_minus_1() {
-        let (pk, lens) = learners();
-        let mut f = Fabric::new(LinkModel::default());
-        Ring::default().exchange(&pk, &lens, &mut f);
-        // each learner's 20-byte packet travels n-1 = 1 hop
-        assert_eq!(f.stats.bytes_up, 40);
-        assert_eq!(f.stats.rounds, 1);
-    }
-
-    #[test]
-    fn ps_charges_upload_plus_broadcast() {
-        let (pk, lens) = learners();
-        let mut f = Fabric::new(LinkModel::default());
-        ParamServer::default().exchange(&pk, &lens, &mut f);
-        assert_eq!(f.stats.bytes_up, 40);
-        assert!(f.stats.bytes_down > 0);
-        assert!(f.stats.sim_time_s > 0.0);
-    }
-
-    #[test]
-    fn ps_broadcast_uses_exact_sparse_union() {
-        // learners overlap on index 0: union = {0, 3, 5} = 3 elements, not 4.
-        let (pk, lens) = learners();
-        let mut f = Fabric::new(LinkModel::default());
-        ParamServer::default().exchange(&pk, &lens, &mut f);
-        let expect_down_one = (8 * 3).min(4 * 6) + crate::compress::wire::HEADER_BYTES;
-        assert_eq!(f.stats.bytes_down, 2 * expect_down_one as u64);
-    }
-
-    #[test]
-    fn ps_dense_packet_forces_dense_union() {
-        let l0 = vec![Packet::dense(0, vec![1.0; 6])];
-        let l1 = vec![sparse(0, 6, vec![2], vec![1.0])];
-        let mut f = Fabric::new(LinkModel::default());
-        ParamServer::default().exchange(&[l0, l1], &[6], &mut f);
-        // dense fallback (4 bytes/elem beats 8) + one header, per learner
-        let expect_down_one = 4 * 6 + crate::compress::wire::HEADER_BYTES;
-        assert_eq!(f.stats.bytes_down, 2 * expect_down_one as u64);
-    }
-
-    #[test]
     fn single_learner_ring_is_free() {
         let pk = vec![vec![sparse(0, 4, vec![1], vec![1.0])]];
         let mut f = Fabric::new(LinkModel::default());
@@ -545,9 +871,37 @@ mod tests {
 
     #[test]
     fn build_by_name() {
-        assert!(build("ps").is_ok());
-        assert!(build("ring").is_ok());
-        let err = build("mesh").unwrap_err().to_string();
-        assert!(err.contains("ring") && err.contains("ps"), "{err}");
+        assert!(build("ps", 1).is_ok());
+        assert!(build("ring", 1).is_ok());
+        assert_eq!(build("param_server", 1).unwrap().name(), "ps");
+        assert_eq!(build("ps:4", 8).unwrap().name(), "ps:4");
+        assert_eq!(build("hier:2", 8).unwrap().name(), "hier:2");
+        let err = build("mesh", 1).unwrap_err().to_string();
+        assert!(err.contains("ring") && err.contains("ps") && err.contains("hier"), "{err}");
+    }
+
+    #[test]
+    fn build_validates_shard_and_group_params() {
+        // satellite: fail fast, valid-form list in every error
+        for (spec, n) in [
+            ("ps:0", 4),    // S < 1
+            ("ps:8", 4),    // S > learners
+            ("ps:x", 4),    // not an integer
+            ("ps:", 4),     // empty
+            ("hier:1", 4),  // G < 2
+            ("hier:8", 4),  // G > learners
+            ("hier:two", 4),
+        ] {
+            let err = build(spec, n).unwrap_err().to_string();
+            assert!(
+                err.contains("valid: ring, ps, ps:<S>") && err.contains("hier:<G>"),
+                "{spec}: {err}"
+            );
+        }
+        // boundary cases that must pass
+        assert!(build("ps:1", 1).is_ok());
+        assert!(build("ps:4", 4).is_ok());
+        assert!(build("hier:2", 2).is_ok());
+        assert!(build("hier:4", 4).is_ok());
     }
 }

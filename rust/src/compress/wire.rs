@@ -19,6 +19,14 @@
 //! Dense 1-bit packet (onebit): header + pos f32 + neg f32 + ceil(n/8) bytes.
 //! Dense 2-bit packet (terngrad): header + ceil(n/4) bytes (codes as Tern).
 //! Dense f32 packet (none): header + 4n bytes.
+//!
+//! Bucket frame (the reduce-plan's coalesced message — one wire message per
+//! *bucket* of layers, amortizing per-message latency over tiny layers):
+//!   bucket header (8B): tag u8 (0xB5), pad u8, bucket u16, count u32
+//!   then per sub-message: len u32 + the sub-message bytes (any of the
+//!   per-layer formats above). `bucket_wire_len` is the analytic length the
+//!   exchange hot path charges; `encode_bucket_frame`/`decode_bucket_frame`
+//!   pin it against the real encoder.
 
 use anyhow::{bail, Result};
 
@@ -26,6 +34,20 @@ use super::quantize::Tern;
 use super::Packet;
 
 pub const HEADER_BYTES: usize = 16;
+
+/// Bucket-frame header: tag u8, pad u8, bucket u16, sub-message count u32.
+pub const BUCKET_HEADER_BYTES: usize = 8;
+
+/// Frame tag identifying a bucket message.
+pub const BUCKET_TAG: u8 = 0xB5;
+
+/// Exact byte length of a bucket frame coalescing `parts` sub-messages whose
+/// encoded bytes sum to `payload_bytes`: one bucket header plus a u32 length
+/// prefix per sub-message. Charged once per *bucket* on the fabric — this is
+/// the latency-amortization the reduce plan buys for sub-threshold layers.
+pub fn bucket_wire_len(parts: usize, payload_bytes: usize) -> usize {
+    BUCKET_HEADER_BYTES + 4 * parts + payload_bytes
+}
 
 pub const SCHEME_ADACOMP: u8 = 1;
 pub const SCHEME_SPARSE_SIGN: u8 = 2;
@@ -353,6 +375,49 @@ pub fn encode_dense_f32(layer: usize, vals: &[f32]) -> Vec<u8> {
     w.buf
 }
 
+/// Encode a bucket frame: the per-layer sub-messages of one reduce-plan
+/// bucket coalesced into a single wire message.
+pub fn encode_bucket_frame(bucket: usize, parts: &[Vec<u8>]) -> Vec<u8> {
+    assert!(bucket <= u16::MAX as usize, "bucket id {bucket} overflows the frame header");
+    let mut w = Writer::new();
+    w.u8(BUCKET_TAG);
+    w.u8(0);
+    w.u16(bucket as u16);
+    w.u32(parts.len() as u32);
+    for p in parts {
+        w.u32(p.len() as u32);
+        w.buf.extend_from_slice(p);
+    }
+    w.buf
+}
+
+/// Decode a bucket frame back into (bucket id, per-layer packets).
+pub fn decode_bucket_frame(bytes: &[u8]) -> Result<(usize, Vec<Packet>)> {
+    let mut r = Reader { b: bytes, i: 0 };
+    let tag = r.u8()?;
+    if tag != BUCKET_TAG {
+        bail!("not a bucket frame (tag {tag:#x})");
+    }
+    let _pad = r.u8()?;
+    let bucket = r.u16()? as usize;
+    let count = r.u32()? as usize;
+    // every sub-message needs at least its u32 length prefix — reject a
+    // lying count before trusting it with an allocation
+    if count > (bytes.len() - r.i) / 4 {
+        bail!("wire underrun in bucket frame (count {count})");
+    }
+    let mut packets = Vec::with_capacity(count);
+    for _ in 0..count {
+        let len = r.u32()? as usize;
+        if r.i + len > r.b.len() {
+            bail!("wire underrun in bucket frame");
+        }
+        packets.push(decode(&r.b[r.i..r.i + len])?);
+        r.i += len;
+    }
+    Ok((bucket, packets))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -470,6 +535,51 @@ mod tests {
             assert_eq!(encode_ternary_dense(0, n, 1.0, codes).len(), ternary_dense_wire_len(n));
             assert_eq!(encode_dense_f32(0, &vec![1.0; n]).len(), dense_f32_wire_len(n));
         }
+    }
+
+    #[test]
+    fn bucket_frame_roundtrip_mixed_schemes() {
+        // one bucket coalescing an adacomp layer, a tiny dense bias, and a
+        // sparse-sign layer — the decoded packets must match each sub-format
+        let parts = vec![
+            encode_adacomp(3, 30, 10, 0.5, &[0, 9, 25], &[0.5, -0.5, 0.5]),
+            encode_dense_f32(4, &[1.0, -2.0]),
+            encode_sparse_sign(5, 100, 0.2, -0.3, &[7, 40], |j| j == 0),
+        ];
+        let bytes = encode_bucket_frame(2, &parts);
+        let payload: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(bytes.len(), bucket_wire_len(parts.len(), payload));
+        let (bucket, packets) = decode_bucket_frame(&bytes).unwrap();
+        assert_eq!(bucket, 2);
+        assert_eq!(packets.len(), 3);
+        assert_eq!(packets[0].layer, 3);
+        assert_eq!(packets[0].idx, vec![0, 9, 25]);
+        assert_eq!(packets[1].layer, 4);
+        assert_eq!(packets[1].val, vec![1.0, -2.0]);
+        assert_eq!(packets[2].layer, 5);
+        assert_eq!(packets[2].val, vec![-0.3, 0.2]);
+    }
+
+    #[test]
+    fn bucket_frame_rejects_garbage() {
+        assert!(decode_bucket_frame(&[1, 2, 3]).is_err());
+        // right tag, truncated payload
+        let good = encode_bucket_frame(0, &[encode_dense_f32(0, &[1.0])]);
+        assert!(decode_bucket_frame(&good[..good.len() - 2]).is_err());
+        // a per-layer packet is not a bucket frame
+        assert!(decode_bucket_frame(&encode_dense_f32(0, &[1.0])).is_err());
+        // a lying sub-message count must error, not allocate count capacity
+        let bomb = [BUCKET_TAG, 0, 0, 0, 0xff, 0xff, 0xff, 0xff];
+        assert!(decode_bucket_frame(&bomb).is_err());
+    }
+
+    #[test]
+    fn empty_bucket_frame() {
+        let bytes = encode_bucket_frame(1, &[]);
+        assert_eq!(bytes.len(), BUCKET_HEADER_BYTES);
+        let (bucket, packets) = decode_bucket_frame(&bytes).unwrap();
+        assert_eq!(bucket, 1);
+        assert!(packets.is_empty());
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub fn from_json(v: &Json) -> Result<TrainConfig> {
         "name", "model", "backend", "learners", "batch_per_learner", "epochs",
         "steps_per_epoch", "lr", "lr_schedule", "optimizer", "momentum",
         "topology", "seed", "clip_norm", "divergence_loss", "compression",
-        "link", "threads", "exchange",
+        "link", "threads", "exchange", "bucket_bytes",
     ];
     for k in obj.keys() {
         if !KNOWN.contains(&k.as_str()) {
@@ -65,13 +65,17 @@ pub fn from_json(v: &Json) -> Result<TrainConfig> {
         cfg.momentum = m as f32;
     }
     if let Some(t) = v.get("topology").as_str() {
-        // fail at load time with the valid list, not mid-run
-        crate::comm::topology::build(t)?;
+        // fail at load time with the valid-form list, not mid-run; ps:<S>
+        // and hier:<G> parameters are bounded by the spec's learner count
+        crate::comm::topology::build(t, cfg.n_learners)?;
         cfg.topology = t.to_string();
     }
     if let Some(e) = v.get("exchange").as_str() {
         crate::train::ExchangeMode::parse(e)?;
         cfg.exchange = e.to_string();
+    }
+    if let Some(b) = v.get("bucket_bytes").as_usize() {
+        cfg.bucket_bytes = b;
     }
     if let Some(s) = v.get("seed").as_i64() {
         cfg.seed = s as u64;
@@ -227,6 +231,7 @@ pub fn to_json(cfg: &TrainConfig) -> Json {
         ("momentum", json::num(cfg.momentum as f64)),
         ("topology", json::s(&cfg.topology)),
         ("exchange", json::s(&cfg.exchange)),
+        ("bucket_bytes", json::num(cfg.bucket_bytes as f64)),
         ("seed", json::num(cfg.seed as f64)),
         ("clip_norm", json::num(cfg.clip_norm as f64)),
         ("threads", json::num(cfg.threads as f64)),
@@ -293,6 +298,44 @@ mod tests {
         let bad = Json::from_str_slice(r#"{"model": "m", "exchange": "warp"}"#).unwrap();
         let err = from_json(&bad).unwrap_err().to_string();
         assert!(err.contains("streamed") && err.contains("barrier"), "{err}");
+    }
+
+    #[test]
+    fn sharded_and_hier_topologies_roundtrip() {
+        let v = Json::from_str_slice(
+            r#"{"model": "m", "learners": 8, "topology": "ps:4", "bucket_bytes": 2048}"#,
+        )
+        .unwrap();
+        let cfg = from_json(&v).unwrap();
+        assert_eq!(cfg.topology, "ps:4");
+        assert_eq!(cfg.bucket_bytes, 2048);
+        let back = from_json(&to_json(&cfg)).unwrap();
+        assert_eq!(back.topology, "ps:4");
+        assert_eq!(back.bucket_bytes, 2048);
+        let v = Json::from_str_slice(r#"{"model": "m", "learners": 8, "topology": "hier:2"}"#)
+            .unwrap();
+        assert_eq!(from_json(&v).unwrap().topology, "hier:2");
+    }
+
+    #[test]
+    fn sharded_topology_params_fail_fast() {
+        // satellite: S/G bounds are checked against the spec's learner
+        // count at load time, with the valid-form list in the error
+        for spec in [
+            r#"{"model": "m", "learners": 4, "topology": "ps:8"}"#,
+            r#"{"model": "m", "learners": 4, "topology": "ps:0"}"#,
+            r#"{"model": "m", "learners": 4, "topology": "hier:1"}"#,
+            r#"{"model": "m", "learners": 4, "topology": "hier:8"}"#,
+            r#"{"model": "m", "topology": "ps:2"}"#, // default learners = 1
+        ] {
+            let v = Json::from_str_slice(spec).unwrap();
+            let err = format!("{:#}", from_json(&v).unwrap_err());
+            assert!(err.contains("ps:<S>") && err.contains("hier:<G>"), "{spec}: {err}");
+        }
+        // boundary: S == learners is fine
+        let v = Json::from_str_slice(r#"{"model": "m", "learners": 4, "topology": "ps:4"}"#)
+            .unwrap();
+        assert!(from_json(&v).is_ok());
     }
 
     #[test]

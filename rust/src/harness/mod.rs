@@ -327,7 +327,8 @@ pub struct Workload {
 impl Workload {
     /// Build from CLI args: common flags are --model --backend --epochs
     /// --learners --batch --train --test --scheme --lt --lt-conv --lt-fc
-    /// --optimizer --lr --topology --seed --seq-len --artifacts.
+    /// --optimizer --lr --topology (ring | ps | ps:S | hier:G)
+    /// --bucket-bytes --seed --seq-len --artifacts.
     pub fn from_args(args: &Args, default_model: &str) -> Result<Workload> {
         Workload::from_args_with_backend(args, default_model, None)
     }
@@ -447,13 +448,13 @@ impl Workload {
         }
 
         // validate by-name knobs at parse time: typos fail with the valid
-        // list instead of a mid-run failure
+        // list instead of a mid-run failure (learners resolves first — the
+        // ps:<S>/hier:<G> parameter bounds depend on it)
+        let learners = args.usize_or("learners", 1);
         let topology = args.str_or("topology", "ring");
-        crate::comm::topology::build(&topology)?;
+        crate::comm::topology::build(&topology, learners)?;
         let exchange = args.str_or("exchange", "streamed");
         crate::train::ExchangeMode::parse(&exchange)?;
-
-        let learners = args.usize_or("learners", 1);
         let batch = args.usize_or("batch", d.batch / learners.max(1)).max(1);
         let lr = match args.get("lr") {
             Some(v) => LrSchedule::Constant(v.parse()?),
@@ -480,6 +481,7 @@ impl Workload {
             clip_norm: args.f32_or("clip", d.clip_norm),
             threads: args.usize_or("threads", 0),
             exchange,
+            bucket_bytes: args.usize_or("bucket-bytes", 0),
         };
 
         let mut init_params = match init_native {
@@ -668,6 +670,36 @@ mod tests {
         let rec = w.run().unwrap();
         assert_eq!(rec.epochs.len(), 1);
         assert!(rec.epochs[0].train_loss.is_finite());
+    }
+
+    #[test]
+    fn sharded_topology_cli_validates_against_learners() {
+        // satellite: ps:<S>/hier:<G> bounds check against --learners at
+        // parse time, with the valid-form list in the error
+        let ok = Args::parse_from(
+            [
+                "--model", "mnist_dnn", "--backend", "native", "--learners", "4",
+                "--topology", "ps:2", "--bucket-bytes", "4096",
+            ]
+            .map(String::from),
+            &[],
+        );
+        let w = Workload::from_args(&ok, "mnist_dnn").unwrap();
+        assert_eq!(w.cfg.topology, "ps:2");
+        assert_eq!(w.cfg.bucket_bytes, 4096);
+
+        for (topo, learners) in [("ps:8", "4"), ("hier:1", "4"), ("hier:8", "4"), ("ps:2", "1")] {
+            let args = Args::parse_from(
+                [
+                    "--model", "mnist_dnn", "--backend", "native", "--learners", learners,
+                    "--topology", topo,
+                ]
+                .map(String::from),
+                &[],
+            );
+            let err = format!("{:#}", Workload::from_args(&args, "mnist_dnn").unwrap_err());
+            assert!(err.contains("ps:<S>") && err.contains("hier:<G>"), "{topo}: {err}");
+        }
     }
 
     #[test]

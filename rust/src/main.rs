@@ -262,7 +262,17 @@ fn print_help() {
 USAGE:
   adacomp train [--model M] [--scheme S] [--learners N] [--batch B]
                 [--epochs E] [--lt L] [--optimizer sgd|adam|rmsprop]
-                [--topology ring|ps] [--lr LR] [--seed S] [--seq-len T]
+                [--topology ring|ps|ps:S|hier:G]
+                                (ps:S = S independent shard servers, reduce-
+                                 plan buckets partitioned across them;
+                                 hier:G = racks of G learners feeding a
+                                 root. Identical results for every choice)
+                [--bucket-bytes B]
+                                (reduce-plan coalescing threshold: layers
+                                 below B dense wire bytes share one bucket
+                                 message. 0 = auto from the link model,
+                                 1 = one message per layer)
+                [--lr LR] [--seed S] [--seq-len T]
                 [--backend native|pjrt|auto]
                                 (native = hermetic layer-graph executors, no
                                  artifacts needed: mnist_dnn, mnist_cnn,

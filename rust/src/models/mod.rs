@@ -112,6 +112,12 @@ impl Layout {
         self.layers.len()
     }
 
+    /// Dense element count of every layer, layer order — the shape the
+    /// exchange path (reduce plan, topologies, `Reduced`) works in.
+    pub fn layer_lens(&self) -> Vec<usize> {
+        self.layers.iter().map(|l| l.len()).collect()
+    }
+
     /// Slice layer `i` out of a flat buffer.
     pub fn view<'a>(&self, i: usize, flat: &'a [f32]) -> &'a [f32] {
         let l = &self.layers[i];
@@ -252,6 +258,12 @@ mod tests {
         assert_eq!(l.layers[0].len(), 600);
         assert_eq!(l.layers[1].offset, 600);
         assert_eq!(l.total, 1800);
+    }
+
+    #[test]
+    fn layer_lens_match_views() {
+        let l = test_layout();
+        assert_eq!(l.layer_lens(), vec![600, 1200]);
     }
 
     #[test]

@@ -1,51 +1,64 @@
 //! The synchronous data-parallel training engine — paper Algorithm 1.
 //!
 //! Per step, every learner samples its shard minibatch, runs forward+backward
-//! (its own executor), and `pack()`s each layer through its compressor; the
-//! engine `exchange()`s the packets over the configured topology (parameter
-//! server or ring), unpacks into the dense mean gradient, and applies the
-//! central optimizer. All learners hold identical weights at every step —
-//! the paper's synchronous-SGD setting.
+//! (its own executor), and packs each layer through its compressor into its
+//! reduce-plan bucket cell; the engine reduces each bucket over the
+//! configured topology (`ps`, `ps:<S>`, `hier:<G>`, `ring`), unpacks into
+//! the dense mean gradient, and applies the central optimizer. All learners
+//! hold identical weights at every step — the paper's synchronous-SGD
+//! setting.
+//!
+//! **Reduce plan** (DESIGN.md §Topologies). The engine builds a
+//! [`ReducePlan`] once per run from the model layout: tiny layers (biases)
+//! coalesce into buckets — one wire message per bucket, one latency charge
+//! per bucket — and each bucket maps onto a **port** of the topology
+//! (`ps:<S>` exposes S shard ports). The plan, not the topology, defines
+//! the message structure, so bytes on the wire are identical across
+//! topologies and exchange modes. `cfg.bucket_bytes` sets the coalescing
+//! threshold (0 = auto: the link's latency·bandwidth product; 1 = per-layer
+//! messages).
 //!
 //! **Layer-streamed exchange pipeline** (`--exchange streamed`, the
 //! default). Gradients complete in reverse layer order during backward, and
 //! the runtime reports each layout layer the moment its span is final
-//! ([`Executor::step_streamed`]). Learners pack each layer immediately and
-//! publish the packet into a per-(learner, layer) hand-off cell; the engine
-//! thread reduces layer *k* over the topology
-//! ([`Topology::exchange_layer_into`](crate::comm::Topology)) while layers
-//! *k-1..0* are still in backward. The fabric places each layer's comm on a
-//! simulated overlap timeline ([`Fabric::record_step`]) so
-//! `FabricStats::sim_step_s()` / `projected_speedup()` report the
-//! wall-clock value of compression + overlap against the barrier and dense
-//! baselines. `--exchange barrier` preserves the classic join-then-exchange
-//! round for A/B benching.
+//! ([`Executor::step_streamed`]). Learners pack each layer immediately into
+//! its bucket cell; the moment a *bucket* — not a layer — is complete at
+//! every learner, the engine thread reduces it over the topology
+//! ([`Topology::exchange_bucket_into`](crate::comm::Topology)) while
+//! earlier layers are still in backward. The fabric places each bucket's
+//! round on its port's simulated timeline (rounds on disjoint ports
+//! overlap; rounds on one port serialize) so `FabricStats::sim_step_s()` /
+//! `projected_speedup()` report the wall-clock value of compression +
+//! overlap + sharding against the canonical dense baseline
+//! ([`ReducePlan::dense_round_s`]). `--exchange barrier` joins all learners
+//! first, then runs the same bucket rounds serialized after compute — same
+//! packets, same bytes, different placement.
 //!
 //! **Persistent worker pool.** When the backend's [`ExecutorFactory`]
 //! reports `parallel()`, the engine spawns `cfg.threads` workers **once per
 //! run** and parks them on a condvar between steps
-//! ([`pool::PoolCtl`](super::pool)) — replacing the former per-step
-//! `std::thread::scope` spawn/join. Each worker owns a contiguous chunk of
+//! ([`pool::PoolCtl`](super::pool)). Each worker owns a contiguous chunk of
 //! learners; all cross-learner reductions stay on the engine thread.
 //!
-//! **Determinism contract** (DESIGN.md §Threading, §Overlap pipeline):
-//! results are **bit-identical** across every thread count *and* across the
-//! two exchange modes, because packets are reduced per layer in learner-id
-//! order and the f64 loss sum runs on the engine thread in learner-id
-//! order. (Exceptions: schemes whose packing consumes a cross-layer RNG
-//! stream — terngrad — are deterministic within a mode but pack layers in
-//! a different order across modes; and on a *diverged* run the final
-//! aborted step's traffic appears in the streamed fabric stats but not the
-//! barrier ones — streamed has already exchanged by the time the loss is
-//! read, barrier skips that exchange, preserving the pre-pipeline
-//! accounting. Losses and weights are unaffected either way.) Pinned by
-//! rust/tests/engine_native.rs::{parallel_matches_sequential_bitwise,
-//! streamed_matches_barrier_bitwise}.
+//! **Determinism contract** (DESIGN.md §Threading, §Topologies): results
+//! are **bit-identical** across every thread count, both exchange modes,
+//! *and every topology*, because packets are reduced per bucket in
+//! learner-id order (the simulated shard/rack/ring structure shapes only
+//! the timeline), packing happens in the same (streamed) order in both
+//! modes, and the f64 loss sum runs on the engine thread in learner-id
+//! order. (One residual cross-mode difference: on a *diverged* run the
+//! final aborted step's traffic appears in the streamed fabric stats but
+//! not the barrier ones — streamed has already exchanged by the time the
+//! loss is read, barrier skips that exchange. Losses and weights are
+//! unaffected.) Pinned by rust/tests/engine_native.rs::{
+//! parallel_matches_sequential_bitwise, streamed_matches_barrier_bitwise,
+//! topologies_bitwise_identical}.
 //!
 //! **Zero-alloc exchange.** Packet buffers recycle through the compressor
-//! pools, packets live in per-learner slots/cells reused across steps, and
-//! the topologies reduce into a persistent [`Reduced`] — both exchange
-//! paths perform no steady-state heap allocation (rust/tests/alloc_free.rs).
+//! pools, packets live in per-(learner, bucket) cells reused across steps,
+//! and the topologies reduce into a persistent [`Reduced`] — the bucketed
+//! cell→exchange→hand-back loop performs no steady-state heap allocation
+//! (rust/tests/alloc_free.rs).
 //!
 //! Learners are simulated in-process (DESIGN.md §Substitutions): the
 //! semantics (who computes what on which data, what crosses the wire) are
@@ -59,9 +72,9 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use super::eval::test_error;
-use super::learner::{Learner, PacketCell};
+use super::learner::{cells_for_plan, BucketCell, Learner};
 use super::pool::PoolCtl;
-use crate::comm::{topology, Fabric, LinkModel, Reduced, Topology};
+use crate::comm::{topology, Bucket, Fabric, LinkModel, Reduced, ReducePlan, Topology};
 use crate::compress::{self, Packet};
 use crate::data::Dataset;
 use crate::metrics::{percentile, CompStat, EpochRecord, RunRecord};
@@ -73,9 +86,11 @@ use crate::util::timer::Stopwatch;
 /// Exchange scheduling mode (`TrainConfig::exchange`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExchangeMode {
-    /// Overlap pack+exchange with the remaining backward (per-layer rounds).
+    /// Overlap pack/exchange with the remaining backward (per-bucket rounds
+    /// pipelined on the topology's ports).
     Streamed,
-    /// Classic full barrier between the learner phase and one whole-step round.
+    /// Classic full barrier between the learner phase and the serialized
+    /// bucket rounds.
     Barrier,
 }
 
@@ -113,6 +128,9 @@ pub struct TrainConfig {
     pub optimizer: String,
     pub momentum: f32,
     pub compression: compress::Config,
+    /// Exchange topology: "ring", "ps", "ps:<S>" (S shard servers),
+    /// "hier:<G>" (racks of G feeding a root). Identical results for every
+    /// choice; only bytes-per-link and the simulated timeline differ.
     pub topology: String,
     pub link: LinkModel,
     pub seed: u64,
@@ -128,10 +146,17 @@ pub struct TrainConfig {
     /// thread, capped at n_learners), 1 = sequential. Results are
     /// bit-identical for every value (see module docs).
     pub threads: usize,
-    /// Exchange scheduling: "streamed" (overlap pack/exchange with backward,
-    /// the default) or "barrier" (join all learners, then one round).
-    /// Bit-identical results either way (see module docs).
+    /// Exchange scheduling: "streamed" (overlap per-bucket pack/exchange
+    /// with backward, the default) or "barrier" (join all learners, then
+    /// the same bucket rounds serialized). Bit-identical results either way
+    /// (see module docs).
     pub exchange: String,
+    /// Reduce-plan coalescing threshold in dense wire bytes: consecutive
+    /// layers below it share one bucket message. 0 = auto (the link's
+    /// latency·bandwidth product — [`ReducePlan::auto_threshold`]);
+    /// 1 = one message per layer (the pre-plan wire shape). Affects only
+    /// message granularity, never results.
+    pub bucket_bytes: usize,
 }
 
 impl Default for TrainConfig {
@@ -156,6 +181,7 @@ impl Default for TrainConfig {
             clip_norm: 0.0,
             threads: 0,
             exchange: "streamed".into(),
+            bucket_bytes: 0,
         }
     }
 }
@@ -178,35 +204,33 @@ pub struct Engine<'a> {
 struct Shared<'a> {
     dataset: &'a dyn Dataset,
     layout: &'a Layout,
-    streamed: bool,
+    /// The run's reduce plan: bucket coalescing + port mapping, built once.
+    plan: ReducePlan,
     /// Central weights. Workers hold the read lock for the learner phase;
     /// the engine takes the write lock for the optimizer update (phases
     /// never overlap, so neither side ever blocks).
     params: RwLock<Vec<f32>>,
     learners: Vec<Mutex<Learner>>,
-    /// Barrier path: per-learner packet vec (layer order), reused across
-    /// steps.
-    bslots: Vec<Mutex<Vec<Packet>>>,
-    /// Streamed path: per-(learner, layer) packet hand-off cells.
-    cells: Vec<Vec<PacketCell>>,
-    /// Streamed path: learners that have packed layer `li` this step.
+    /// Per-(learner, bucket) packet hand-off cells.
+    cells: Vec<Vec<BucketCell>>,
+    /// Learners that have completed bucket `bi` this step.
     ready: Vec<AtomicUsize>,
-    /// Streamed path: phase-start instant the pack-time ready stamps are
-    /// measured from (reset by the engine before each step).
+    /// Phase-start instant the pack-time ready stamps are measured from
+    /// (reset by the engine before each step).
     phase_start: Mutex<Instant>,
-    /// Streamed path: nanoseconds (since phase start, min 1) when layer
-    /// `li`'s LAST learner packed it — written by that learner at pack
-    /// time, so the overlap timeline reflects when the layer became
-    /// exchangeable, not when the engine got around to observing it
-    /// (identical semantics at every thread count). 0 = not yet.
+    /// Nanoseconds (since phase start, min 1) when bucket `bi`'s LAST
+    /// learner completed it — written by that learner at pack time, so the
+    /// overlap timeline reflects when the bucket became exchangeable, not
+    /// when the engine got around to observing it (identical semantics at
+    /// every thread count). 0 = not yet.
     ready_at: Vec<AtomicU64>,
-    /// Streamed path: wakes the engine's layer scan when a layer completes
-    /// or a worker checks in.
+    /// Wakes the engine's bucket scan when a bucket completes or a worker
+    /// checks in.
     event: ReadyEvent,
 }
 
-/// A sequence-counted wakeup for the engine's streamed layer scan: bumped
-/// by workers on every layer completion and phase check-in, waited on (with
+/// A sequence-counted wakeup for the engine's streamed bucket scan: bumped
+/// by workers on every bucket completion and phase check-in, waited on (with
 /// a short timeout as a missed-wakeup backstop) by the engine when a scan
 /// pass finds nothing ready — the engine blocks instead of busy-spinning a
 /// core away from the workers it is waiting on.
@@ -246,8 +270,9 @@ impl ReadyEvent {
 }
 
 /// Pool-worker body: park for the next step generation, run this worker's
-/// learner chunk (streamed: publish per-layer packets + bump the ready
-/// counters; barrier: fill the learner's packet slot), check in.
+/// learner chunk (publish per-bucket packets + bump the ready counters),
+/// check in. Both exchange modes run the same streamed learner phase — the
+/// mode only changes when the engine consumes the buckets.
 fn worker_loop(shared: &Shared<'_>, ctl: &PoolCtl, range: std::ops::Range<usize>) {
     let mut gen = 0u64;
     while let Some(g) = ctl.next_gen(gen) {
@@ -256,18 +281,14 @@ fn worker_loop(shared: &Shared<'_>, ctl: &PoolCtl, range: std::ops::Range<usize>
             let params = shared.params.read().unwrap();
             for i in range.clone() {
                 let mut l = shared.learners[i].lock().unwrap();
-                if shared.streamed {
-                    l.step_streamed(
-                        &params,
-                        shared.dataset,
-                        shared.layout,
-                        &shared.cells[i],
-                        &mut |li| shared.layer_packed(li),
-                    )?;
-                } else {
-                    let mut slot = shared.bslots[i].lock().unwrap();
-                    l.step(&params, shared.dataset, shared.layout, &mut slot)?;
-                }
+                l.step_streamed(
+                    &params,
+                    shared.dataset,
+                    shared.layout,
+                    &shared.plan,
+                    &shared.cells[i],
+                    &mut |bi| shared.bucket_packed(bi),
+                )?;
             }
             Ok(())
         }));
@@ -276,21 +297,21 @@ fn worker_loop(shared: &Shared<'_>, ctl: &PoolCtl, range: std::ops::Range<usize>
             Ok(Err(e)) => Some(format!("{e:#}")),
             Err(p) => Some(panic_message(p.as_ref())),
         });
-        // wake the engine's layer scan so it can observe all_done (matters
-        // when a failed worker leaves layers that will never become ready)
+        // wake the engine's bucket scan so it can observe all_done (matters
+        // when a failed worker leaves buckets that will never become ready)
         shared.event.bump();
     }
 }
 
 impl Shared<'_> {
-    /// Grad-ready notification target (streamed path, both sequential and
-    /// pooled): bump layer `li`'s counter; the learner completing the count
-    /// records the pack-time ready stamp and wakes the engine.
-    fn layer_packed(&self, li: usize) {
-        let c = self.ready[li].fetch_add(1, Ordering::Release) + 1;
+    /// Bucket-ready notification target (both sequential and pooled): bump
+    /// bucket `bi`'s counter; the learner completing the count records the
+    /// pack-time ready stamp and wakes the engine.
+    fn bucket_packed(&self, bi: usize) {
+        let c = self.ready[bi].fetch_add(1, Ordering::Release) + 1;
         if c == self.learners.len() {
             let ns = self.phase_start.lock().unwrap().elapsed().as_nanos() as u64;
-            self.ready_at[li].store(ns.max(1), Ordering::Release);
+            self.ready_at[bi].store(ns.max(1), Ordering::Release);
             self.event.bump();
         }
     }
@@ -381,10 +402,19 @@ impl<'a> Engine<'a> {
                     cfg.optimizer
                 )
             })?;
-        let topo = topology::build(&cfg.topology)?;
+        let topo = topology::build(&cfg.topology, cfg.n_learners)?;
         let threads = self.resolve_threads(cfg);
         let parallel = threads > 1;
-        let streamed = mode == ExchangeMode::Streamed;
+
+        // The run's reduce plan: bucket coalescing + port partition, built
+        // once from the layout (DESIGN.md §Topologies).
+        let threshold = if cfg.bucket_bytes == 0 {
+            ReducePlan::auto_threshold(&cfg.link)
+        } else {
+            cfg.bucket_bytes
+        };
+        let plan = ReducePlan::build(layout, threshold, topo.ports());
+        let num_buckets = plan.num_buckets();
 
         let local = factory.build_local()?;
         let learners = (0..cfg.n_learners)
@@ -407,34 +437,18 @@ impl<'a> Engine<'a> {
             })
             .collect::<Result<Vec<_>>>()?;
 
-        let num_layers = layout.num_layers();
+        let cells: Vec<Vec<BucketCell>> =
+            (0..cfg.n_learners).map(|_| cells_for_plan(&plan)).collect();
         let shared = Shared {
             dataset,
             layout,
-            streamed,
+            plan,
             params: RwLock::new(init_params.to_vec()),
             learners,
-            bslots: if streamed {
-                Vec::new()
-            } else {
-                (0..cfg.n_learners)
-                    .map(|_| Mutex::new(Vec::with_capacity(num_layers)))
-                    .collect()
-            },
-            cells: if streamed {
-                (0..cfg.n_learners)
-                    .map(|_| (0..num_layers).map(|_| PacketCell::default()).collect())
-                    .collect()
-            } else {
-                Vec::new()
-            },
-            ready: (0..if streamed { num_layers } else { 0 })
-                .map(|_| AtomicUsize::new(0))
-                .collect(),
+            cells,
+            ready: (0..num_buckets).map(|_| AtomicUsize::new(0)).collect(),
             phase_start: Mutex::new(Instant::now()),
-            ready_at: (0..if streamed { num_layers } else { 0 })
-                .map(|_| AtomicU64::new(0))
-                .collect(),
+            ready_at: (0..num_buckets).map(|_| AtomicU64::new(0)).collect(),
             event: ReadyEvent::default(),
         };
 
@@ -462,13 +476,16 @@ impl<'a> Engine<'a> {
                     local,
                     &shared,
                     Some((&ctl, workers)),
+                    mode,
                     topo,
                     optimizer,
                     hook,
                 )
             })?
         } else {
-            run_loop(cfg, layout, dataset, local, &shared, None, topo, optimizer, hook)?
+            run_loop(
+                cfg, layout, dataset, local, &shared, None, mode, topo, optimizer, hook,
+            )?
         };
 
         let params = shared.params.into_inner().unwrap();
@@ -476,10 +493,71 @@ impl<'a> Engine<'a> {
     }
 }
 
-/// The training loop proper, shared by all four (sequential/pool ×
-/// barrier/streamed) combinations. `pool` carries the step barrier and the
-/// worker count when a persistent pool is attached; `None` runs every
-/// learner on the engine thread through `local`.
+/// Fold one packet into the per-kind compression stats. Single definition
+/// so the normal exchange path and the diverged-barrier path (which counts
+/// packed-but-unsent packets) can never drift apart.
+fn tally_packet(
+    layout: &Layout,
+    p: &Packet,
+    comp_conv: &mut CompStat,
+    comp_fc: &mut CompStat,
+    comp_all: &mut CompStat,
+) {
+    match layout.layers[p.layer].kind {
+        LayerKind::Conv => comp_conv.add(p),
+        _ => comp_fc.add(p),
+    }
+    comp_all.add(p);
+}
+
+/// Take one ready bucket out of every learner's cell (learner-id order —
+/// the determinism contract), fold its packets into the compression stats,
+/// reduce it over the topology, and hand the spent packets back for
+/// next-step recycling. Allocation-free in steady state (`gather` reuses
+/// its per-learner vecs).
+#[allow(clippy::too_many_arguments)]
+fn exchange_one_bucket(
+    shared: &Shared<'_>,
+    layout: &Layout,
+    layer_lens: &[usize],
+    bucket: &Bucket,
+    gather: &mut [Vec<Packet>],
+    topo: &mut dyn Topology,
+    fabric: &mut Fabric,
+    reduced: &mut Reduced,
+    comp_conv: &mut CompStat,
+    comp_fc: &mut CompStat,
+    comp_all: &mut CompStat,
+) -> crate::comm::RoundCost {
+    let bi = bucket.id;
+    for (l, cells) in shared.cells.iter().enumerate() {
+        let mut cell = cells[bi].lock();
+        for slot in cell.slots.iter_mut() {
+            gather[l].push(slot.take().expect("ready bucket is missing a packet"));
+        }
+    }
+    for packets in gather.iter() {
+        for p in packets {
+            tally_packet(layout, p, comp_conv, comp_fc, comp_all);
+        }
+    }
+    let cost = topo.exchange_bucket_into(bucket, &*gather, layer_lens, fabric, reduced);
+    for (l, cells) in shared.cells.iter().enumerate() {
+        let mut cell = cells[bi].lock();
+        for (slot, p) in cell.slots.iter_mut().zip(gather[l].drain(..)) {
+            *slot = Some(p);
+        }
+    }
+    cost
+}
+
+/// The training loop proper, shared by all (sequential/pool ×
+/// barrier/streamed × topology) combinations. `pool` carries the step
+/// barrier and the worker count when a persistent pool is attached; `None`
+/// runs every learner on the engine thread through `local`. Both modes run
+/// the same streamed learner phase and the same per-bucket rounds — the
+/// mode decides *when* the engine consumes buckets (mid-backward vs after
+/// the join) and how the rounds land on the simulated timeline.
 #[allow(clippy::too_many_arguments)]
 fn run_loop(
     cfg: &TrainConfig,
@@ -488,14 +566,17 @@ fn run_loop(
     mut local: Box<dyn Executor>,
     shared: &Shared<'_>,
     pool: Option<(&PoolCtl, usize)>,
+    mode: ExchangeMode,
     mut topo: Box<dyn Topology>,
     mut optimizer: Box<dyn Optimizer>,
     mut hook: Option<&mut EpochHook<'_>>,
 ) -> Result<RunRecord> {
     let n = cfg.n_learners;
-    let num_layers = layout.num_layers();
-    let layer_lens: Vec<usize> = layout.layers.iter().map(|l| l.len()).collect();
+    let plan = &shared.plan;
+    let num_buckets = plan.num_buckets();
+    let layer_lens = layout.layer_lens();
     let inv_learners = 1.0f32 / n as f32;
+    let streamed = mode == ExchangeMode::Streamed;
     let mut fabric = Fabric::new(cfg.link);
 
     let steps_per_epoch = if cfg.steps_per_epoch > 0 {
@@ -518,22 +599,21 @@ fn run_loop(
 
     let mut grad_mean = vec![0.0f32; layout.total];
     let mut reduced = Reduced::new(&layer_lens);
-    // The no-compression baseline: one coalesced dense barrier round, fixed
-    // for the run — deliberately NOT the sum of per-layer dense messages, so
-    // `projected_speedup()` never credits the streamed path with latency the
-    // dense baseline would not actually pay.
-    let dense_round_s = topo.dense_round_s(&layer_lens, n, &cfg.link);
-    // Streamed-path engine scratch, reused every step (no allocation in the
-    // steady state): packets gathered per layer, per-layer done flags, and
-    // per-layer all-learners-ready timestamps on the overlap timeline.
-    let mut gather: Vec<Packet> = Vec::with_capacity(n);
-    let mut done_flags = vec![false; num_layers];
-    let mut stamps = vec![-1.0f64; num_layers];
-    // Barrier-path scratch: per-learner packet vecs swapped out of the
-    // shared slots for the duration of the whole-step exchange.
-    let mut bscratch: Vec<Vec<Packet>> = (0..if shared.streamed { 0 } else { n })
-        .map(|_| Vec::new())
-        .collect();
+    // The no-compression baseline: one coalesced whole-model dense round,
+    // fixed for the run and identical across topologies, exchange modes,
+    // and bucket thresholds — `projected_speedup()` always measures against
+    // the same "before" system (never inflated by message-granularity
+    // latency or deflated by sharding).
+    let dense_round_s = plan.dense_round_s(&layer_lens, n, &cfg.link);
+    // Engine scratch, reused every step (no allocation in the steady
+    // state): per-learner bucket gathers, per-bucket done flags,
+    // all-learners-ready timestamps, and per-port completion times.
+    let max_bucket = plan.buckets.iter().map(|b| b.num_layers()).max().unwrap_or(0);
+    let mut gather: Vec<Vec<Packet>> =
+        (0..n).map(|_| Vec::with_capacity(max_bucket)).collect();
+    let mut done_flags = vec![false; num_buckets];
+    let mut stamps = vec![-1.0f64; num_buckets];
+    let mut port_end = vec![0.0f64; topo.ports()];
 
     'epochs: for epoch in 0..cfg.epochs {
         let sw = Stopwatch::start();
@@ -545,90 +625,83 @@ fn run_loop(
         let mut comp_all = CompStat::default();
 
         for _step in 0..steps_per_epoch {
-            if shared.streamed {
-                // --- streamed pipeline: exchange overlaps backward -------
-                for r in &shared.ready {
-                    r.store(0, Ordering::Relaxed);
-                }
-                for r in &shared.ready_at {
-                    r.store(0, Ordering::Relaxed);
-                }
-                done_flags.iter_mut().for_each(|d| *d = false);
-                *shared.phase_start.lock().unwrap() = Instant::now();
+            // --- learner phase (identical in both modes) -----------------
+            for r in &shared.ready {
+                r.store(0, Ordering::Relaxed);
+            }
+            for r in &shared.ready_at {
+                r.store(0, Ordering::Relaxed);
+            }
+            done_flags.iter_mut().for_each(|d| *d = false);
+            port_end.iter_mut().for_each(|p| *p = 0.0);
+            *shared.phase_start.lock().unwrap() = Instant::now();
+            let sw_phase = Stopwatch::start();
 
-                if let Some((ctl, _)) = pool {
-                    ctl.kick();
-                } else {
-                    // Sequential learner phase on the engine thread; ready
-                    // stamps are taken at pack time (same callback as the
-                    // pooled path) so the overlap timeline reflects when
-                    // each layer *became* exchangeable at any thread count.
-                    for i in 0..n {
-                        let params = shared.params.read().unwrap();
-                        let mut l = shared.learners[i].lock().unwrap();
-                        l.step_streamed_with(
-                            local.as_mut(),
-                            &params,
-                            dataset,
-                            layout,
-                            &shared.cells[i],
-                            &mut |li| shared.layer_packed(li),
-                        )?;
-                    }
+            if let Some((ctl, _)) = pool {
+                ctl.kick();
+            } else {
+                // Sequential learner phase on the engine thread; ready
+                // stamps are taken at pack time (same callback as the
+                // pooled path) so the overlap timeline reflects when each
+                // bucket *became* exchangeable at any thread count.
+                for i in 0..n {
+                    let params = shared.params.read().unwrap();
+                    let mut l = shared.learners[i].lock().unwrap();
+                    l.step_streamed_with(
+                        local.as_mut(),
+                        &params,
+                        dataset,
+                        layout,
+                        plan,
+                        &shared.cells[i],
+                        &mut |bi| shared.bucket_packed(bi),
+                    )?;
                 }
+            }
 
-                // Consume layers as they complete (reverse layer order is
-                // the natural completion order); reduce each over the
-                // topology while the rest of backward is still running.
-                let mut pending = num_layers;
-                let (mut comm_end, mut comm_serial) = (0.0f64, 0.0f64);
+            if streamed {
+                // --- streamed: consume buckets as they complete ----------
+                // (reverse layer order is the natural completion order);
+                // reduce each over the topology while the rest of backward
+                // is still running, pipelining rounds across the
+                // topology's ports.
+                let mut pending = num_buckets;
+                let mut comm_serial = 0.0f64;
                 let mut saw_done = pool.is_none();
                 let mut event_seq = shared.event.current();
                 loop {
                     let mut progressed = false;
-                    for li in (0..num_layers).rev() {
-                        if done_flags[li] || shared.ready[li].load(Ordering::Acquire) != n {
+                    for (bi, bucket) in plan.buckets.iter().enumerate() {
+                        if done_flags[bi] || shared.ready[bi].load(Ordering::Acquire) != n {
                             continue;
                         }
                         // the stamp store trails the final counter bump by
                         // nanoseconds; spin past that publish window
-                        let mut ns = shared.ready_at[li].load(Ordering::Acquire);
+                        let mut ns = shared.ready_at[bi].load(Ordering::Acquire);
                         while ns == 0 {
                             std::hint::spin_loop();
-                            ns = shared.ready_at[li].load(Ordering::Acquire);
+                            ns = shared.ready_at[bi].load(Ordering::Acquire);
                         }
-                        stamps[li] = ns as f64 * 1e-9;
-                        gather.clear();
-                        for cells in &shared.cells {
-                            // learner-id order: the determinism contract
-                            let p = cells[li]
-                                .lock()
-                                .unwrap()
-                                .take()
-                                .expect("ready layer is missing a packet");
-                            gather.push(p);
-                        }
-                        for p in &gather {
-                            match layout.layers[li].kind {
-                                LayerKind::Conv => comp_conv.add(p),
-                                _ => comp_fc.add(p),
-                            }
-                            comp_all.add(p);
-                        }
-                        let cost = topo.exchange_layer_into(
-                            li,
-                            &gather,
-                            layer_lens[li],
+                        stamps[bi] = ns as f64 * 1e-9;
+                        let cost = exchange_one_bucket(
+                            shared,
+                            layout,
+                            &layer_lens,
+                            bucket,
+                            &mut gather,
+                            topo.as_mut(),
                             &mut fabric,
-                            &mut reduced.sums[li],
+                            &mut reduced,
+                            &mut comp_conv,
+                            &mut comp_fc,
+                            &mut comp_all,
                         );
                         comm_serial += cost.comm_s;
-                        comm_end = comm_end.max(stamps[li]) + cost.comm_s;
-                        // hand the spent packets back for next-step recycling
-                        for (l, p) in gather.drain(..).enumerate() {
-                            *shared.cells[l][li].lock().unwrap() = Some(p);
-                        }
-                        done_flags[li] = true;
+                        // rounds on one port serialize; disjoint ports
+                        // overlap — the sharded-PS win
+                        let port = bucket.port;
+                        port_end[port] = port_end[port].max(stamps[bi]) + cost.comm_s;
+                        done_flags[bi] = true;
                         pending -= 1;
                         progressed = true;
                     }
@@ -645,7 +718,7 @@ fn run_loop(
                         // Idle only: sample the pool barrier, then block on
                         // the ready event (short-timeout backstop) instead
                         // of busy-spinning a core away from the workers.
-                        // While layers are flowing, the scan touches
+                        // While buckets are flowing, the scan touches
                         // nothing but atomics.
                         saw_done = match pool {
                             Some((ctl, workers)) => ctl.all_done(workers),
@@ -658,11 +731,12 @@ fn run_loop(
                     ctl.wait_done(workers)?;
                 }
                 if pending > 0 {
-                    bail!("streamed exchange ended with {pending} layers never ready");
+                    bail!("streamed exchange ended with {pending} buckets never ready");
                 }
-                // compute span = last layer completion; fold the step onto
+                // compute span = last bucket completion; fold the step onto
                 // the simulated timeline (overlap vs barrier vs dense)
                 let compute_s = stamps.iter().cloned().fold(0.0f64, f64::max);
+                let comm_end = port_end.iter().cloned().fold(0.0f64, f64::max);
                 fabric.record_step(compute_s, comm_serial, comm_end, dense_round_s);
 
                 // loss accounting on the engine thread, learner-id order
@@ -676,55 +750,62 @@ fn run_loop(
                     }
                 }
             } else {
-                // --- barrier: join all learners, then one full round -----
-                let sw_phase = Stopwatch::start();
+                // --- barrier: join all learners, then the same bucket
+                // rounds serialized after compute ------------------------
                 if let Some((ctl, workers)) = pool {
-                    ctl.kick();
                     ctl.wait_done(workers)?;
-                } else {
-                    for i in 0..n {
-                        let params = shared.params.read().unwrap();
-                        let mut l = shared.learners[i].lock().unwrap();
-                        let mut slot = shared.bslots[i].lock().unwrap();
-                        l.step_with(local.as_mut(), &params, dataset, layout, &mut slot)?;
-                    }
                 }
                 let compute_s = sw_phase.secs();
 
-                for (cell, slot) in shared.learners.iter().zip(shared.bslots.iter()) {
+                for cell in &shared.learners {
                     let l = cell.lock().unwrap();
                     loss_sum += l.loss as f64;
                     nloss += 1;
                     if !l.loss.is_finite() || l.loss as f64 > cfg.divergence_loss {
                         record.diverged = true;
                     }
-                    let slot = slot.lock().unwrap();
-                    for (li, p) in slot.iter().enumerate() {
-                        match layout.layers[li].kind {
-                            LayerKind::Conv => comp_conv.add(p),
-                            _ => comp_fc.add(p),
-                        }
-                        comp_all.add(p);
-                    }
                 }
 
                 if !record.diverged {
-                    // move the packet vecs out of the shared slots for the
-                    // round (swap: no allocation), then hand them back
-                    for (scratch, slot) in bscratch.iter_mut().zip(shared.bslots.iter()) {
-                        std::mem::swap(scratch, &mut slot.lock().unwrap());
-                    }
-                    let cost =
-                        topo.exchange_into(&bscratch, &layer_lens, &mut fabric, &mut reduced);
-                    for (scratch, slot) in bscratch.iter_mut().zip(shared.bslots.iter()) {
-                        std::mem::swap(scratch, &mut slot.lock().unwrap());
+                    let mut comm_serial = 0.0f64;
+                    for bucket in &plan.buckets {
+                        let cost = exchange_one_bucket(
+                            shared,
+                            layout,
+                            &layer_lens,
+                            bucket,
+                            &mut gather,
+                            topo.as_mut(),
+                            &mut fabric,
+                            &mut reduced,
+                            &mut comp_conv,
+                            &mut comp_fc,
+                            &mut comp_all,
+                        );
+                        comm_serial += cost.comm_s;
                     }
                     fabric.record_step(
                         compute_s,
-                        cost.comm_s,
-                        compute_s + cost.comm_s,
-                        cost.dense_comm_s,
+                        comm_serial,
+                        compute_s + comm_serial,
+                        dense_round_s,
                     );
+                } else {
+                    // diverged: the final step's packets were packed but will
+                    // not cross the wire — still fold them into the epoch's
+                    // compression stats so the partial-epoch report matches
+                    // the streamed mode's accounting (only fabric traffic
+                    // differs across modes on a diverged run; module docs)
+                    for cells in &shared.cells {
+                        for cell in cells.iter() {
+                            let cell = cell.lock();
+                            for p in cell.slots.iter().flatten() {
+                                tally_packet(
+                                    layout, p, &mut comp_conv, &mut comp_fc, &mut comp_all,
+                                );
+                            }
+                        }
+                    }
                 }
             }
 

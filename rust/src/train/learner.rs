@@ -2,27 +2,65 @@
 //! the learner's batch-sampling RNG, reusable batch/gradient buffers, and —
 //! in the parallel engine — the learner's own executor.
 //!
-//! A `Learner` is a self-contained unit of work: `step`/`step_with` draws
-//! the next minibatch, runs forward+backward, and packs every layer into the
-//! caller's packet slots. All mutable state is owned by the learner, so the
-//! engine can fan learners out across `std::thread::scope` workers and still
-//! produce bit-identical results to the sequential loop (the only cross-
-//! learner operations — loss accounting and the packet reduce — happen on
-//! the engine thread in learner-id order; see DESIGN.md §Threading).
+//! A `Learner` is a self-contained unit of work: `step_streamed[_with]`
+//! draws the next minibatch, runs forward+backward, packs each layout layer
+//! the moment its gradient is final, and publishes the packet into its
+//! reduce-plan **bucket cell** ([`BucketCell`] — one slot per bucket
+//! layer); the engine exchanges a bucket the moment every learner has
+//! completed it. All mutable state is owned by the learner, so the engine
+//! can fan learners out across pool workers and still produce bit-identical
+//! results to the sequential loop (the only cross-learner operations —
+//! loss accounting and the packet reduce — happen on the engine thread in
+//! learner-id order; see DESIGN.md §Threading, §Topologies).
+
+use std::sync::{Mutex, MutexGuard};
 
 use anyhow::Result;
 
+use crate::comm::ReducePlan;
 use crate::compress::{self, Compressor, Packet};
 use crate::data::{draw_batch_into, Dataset, Shard, Split};
 use crate::models::Layout;
 use crate::runtime::{Batch, Executor};
 use crate::util::rng::Pcg32;
 
-/// One per-layer packet hand-off slot between a learner (producer, worker
-/// thread) and the engine (consumer). The engine returns spent packets to
-/// the same cell after the exchange so the next step can recycle their
-/// buffers — the cell never allocates in steady state.
-pub type PacketCell = std::sync::Mutex<Option<Packet>>;
+/// One per-(learner, bucket) packet hand-off cell between a learner
+/// (producer, worker thread) and the engine (consumer): one slot per layer
+/// of the reduce-plan bucket, ascending layer order. The learner fills
+/// slots as gradients complete during backward and reports the bucket done
+/// when the last slot lands; the engine takes the packets for the exchange
+/// and returns the spent ones to the same slots so the next step can
+/// recycle their buffers — the cell never allocates in steady state.
+pub struct BucketCell(Mutex<BucketSlots>);
+
+/// The guarded state of a [`BucketCell`].
+pub struct BucketSlots {
+    /// One slot per bucket layer (ascending layer order within the bucket).
+    pub slots: Vec<Option<Packet>>,
+    /// Slots filled this step; the bucket is complete at `slots.len()`.
+    pub filled: usize,
+}
+
+impl BucketCell {
+    pub fn new(num_layers: usize) -> BucketCell {
+        BucketCell(Mutex::new(BucketSlots {
+            slots: (0..num_layers).map(|_| None).collect(),
+            filled: 0,
+        }))
+    }
+
+    pub fn lock(&self) -> MutexGuard<'_, BucketSlots> {
+        self.0.lock().unwrap()
+    }
+}
+
+/// Build one learner's cell row for a reduce plan (one cell per bucket).
+pub fn cells_for_plan(plan: &ReducePlan) -> Vec<BucketCell> {
+    plan.buckets
+        .iter()
+        .map(|b| BucketCell::new(b.num_layers()))
+        .collect()
+}
 
 pub struct Learner {
     pub id: usize,
@@ -155,22 +193,24 @@ impl Learner {
     /// One **streamed** learner phase on this learner's own executor: like
     /// [`step`](Self::step), but each layout layer is packed the moment its
     /// gradient span is final during backward (reverse graph order) and
-    /// published into `cells[li]`, with `on_packed(li)` fired after the
-    /// publish — the engine's grad-ready notification. Safe to call from a
-    /// worker thread.
+    /// published into its reduce-plan bucket's cell slot; when a bucket's
+    /// last slot lands, `on_bucket(bi)` fires — the engine's bucket-ready
+    /// notification. Safe to call from a worker thread.
     pub fn step_streamed(
         &mut self,
         params: &[f32],
         dataset: &dyn Dataset,
         layout: &Layout,
-        cells: &[PacketCell],
-        on_packed: &mut dyn FnMut(usize),
+        plan: &ReducePlan,
+        cells: &[BucketCell],
+        on_bucket: &mut dyn FnMut(usize),
     ) -> Result<()> {
         let mut exec = self
             .exec
             .take()
             .expect("learner was built without its own executor; use step_streamed_with");
-        let r = self.step_streamed_with(exec.as_mut(), params, dataset, layout, cells, on_packed);
+        let r =
+            self.step_streamed_with(exec.as_mut(), params, dataset, layout, plan, cells, on_bucket);
         self.exec = Some(exec);
         r
     }
@@ -179,23 +219,31 @@ impl Learner {
     /// (the engine's sequential path shares one executor across learners).
     ///
     /// Spent packets from the previous round are taken back out of `cells`
-    /// and recycled first. Executors whose `streams()` is `false` (PJRT's
-    /// opaque AOT program) produce no grad-ready callbacks; every layer is
-    /// then packed after the step in ascending layer order —
-    /// barrier-equivalent behavior behind the same API.
+    /// and recycled first (resetting each bucket's fill count). Executors
+    /// whose `streams()` is `false` (PJRT's opaque AOT program) produce no
+    /// grad-ready callbacks; every layer is then packed after the step in
+    /// ascending layer order — buckets complete in ascending-layer order
+    /// instead of streamed order, behind the same API and with the same
+    /// packets.
+    #[allow(clippy::too_many_arguments)]
     pub fn step_streamed_with(
         &mut self,
         exec: &mut dyn Executor,
         params: &[f32],
         dataset: &dyn Dataset,
         layout: &Layout,
-        cells: &[PacketCell],
-        on_packed: &mut dyn FnMut(usize),
+        plan: &ReducePlan,
+        cells: &[BucketCell],
+        on_bucket: &mut dyn FnMut(usize),
     ) -> Result<()> {
-        assert_eq!(cells.len(), layout.num_layers(), "one cell per layout layer");
+        assert_eq!(cells.len(), plan.num_buckets(), "one cell per plan bucket");
         for c in cells {
-            if let Some(spent) = c.lock().unwrap().take() {
-                self.compressor.recycle(spent);
+            let mut cell = c.lock();
+            cell.filled = 0;
+            for slot in cell.slots.iter_mut() {
+                if let Some(spent) = slot.take() {
+                    self.compressor.recycle(spent);
+                }
             }
         }
         self.next_batch(dataset);
@@ -206,8 +254,7 @@ impl Learner {
             exec.step_streamed(params, batch, &mut |layers, grads| {
                 for li in layers {
                     let p = comp.pack_layer(li, layout.view(li, grads));
-                    *cells[li].lock().unwrap() = Some(p);
-                    on_packed(li);
+                    publish(plan, cells, li, p, on_bucket);
                 }
             })?
         };
@@ -216,8 +263,7 @@ impl Learner {
         if !streams {
             for li in 0..layout.num_layers() {
                 let p = self.compressor.pack_layer(li, layout.view(li, &self.grads));
-                *cells[li].lock().unwrap() = Some(p);
-                on_packed(li);
+                publish(plan, cells, li, p, on_bucket);
             }
         }
         Ok(())
@@ -225,7 +271,9 @@ impl Learner {
 
     /// Compress the last gradient into `slots` (one packet per layer, layer
     /// order), recycling the previous round's packet buffers through the
-    /// compressor pool first — steady state allocates nothing.
+    /// compressor pool first — steady state allocates nothing. (Tests and
+    /// figure harnesses; the engine drives `step_streamed_with` in both
+    /// exchange modes.)
     pub fn pack_into(&mut self, layout: &Layout, slots: &mut Vec<Packet>) {
         for spent in slots.drain(..) {
             self.compressor.recycle(spent);
@@ -241,6 +289,29 @@ impl Learner {
         (0..layout.num_layers())
             .map(|li| self.compressor.pack_layer(li, layout.view(li, grads)))
             .collect()
+    }
+}
+
+/// Publish one packed layer into its bucket cell slot; fires `on_bucket`
+/// when the bucket's last slot lands. The cell lock is dropped before the
+/// callback (the engine's notification path takes its own locks).
+fn publish(
+    plan: &ReducePlan,
+    cells: &[BucketCell],
+    li: usize,
+    p: Packet,
+    on_bucket: &mut dyn FnMut(usize),
+) {
+    let (bi, pos) = plan.slot_of(li);
+    let done = {
+        let mut cell = cells[bi].lock();
+        debug_assert!(cell.slots[pos].is_none(), "layer {li} packed twice");
+        cell.slots[pos] = Some(p);
+        cell.filled += 1;
+        cell.filled == cell.slots.len()
+    };
+    if done {
+        on_bucket(bi);
     }
 }
 
@@ -289,13 +360,17 @@ mod tests {
 
     #[test]
     fn step_streamed_matches_step_packets_in_reverse_order() {
-        // the streamed phase must produce the same packets as the barrier
-        // phase (per layer: same idx/val/wire bytes), published in reverse
-        // graph order, and recycle cleanly across steps
+        // the streamed phase must produce the same packets as the legacy
+        // barrier phase (per layer: same idx/val/wire bytes), publish
+        // buckets in reverse graph order, and recycle cleanly across steps
         let ds = GaussianMixture::new(2, 8, 4, 100, 20, 0.3);
         let exe = NativeMlp::new(&[8, 6, 4], 16);
         let layout = exe.layout().clone();
         let params = exe.init_params(5);
+        // threshold 1: every layer its own bucket — bucket order is then
+        // exactly reverse layer order (bucket 0 = last layer)
+        let plan = ReducePlan::build(&layout, 1, 1);
+        assert_eq!(plan.num_buckets(), layout.num_layers());
 
         let mk = |seed| {
             Learner::new(
@@ -312,27 +387,63 @@ mod tests {
         let mut streamed = mk(9);
         let mut barrier = mk(9);
 
-        let cells: Vec<crate::train::learner::PacketCell> =
-            (0..layout.num_layers()).map(|_| PacketCell::default()).collect();
+        let cells = cells_for_plan(&plan);
         let mut slots = Vec::new();
         for _ in 0..3 {
             let mut order = Vec::new();
             streamed
-                .step_streamed(&params, &ds, &layout, &cells, &mut |li| order.push(li))
+                .step_streamed(&params, &ds, &layout, &plan, &cells, &mut |bi| {
+                    order.push(plan.buckets[bi].layers.start)
+                })
                 .unwrap();
             barrier.step(&params, &ds, &layout, &mut slots).unwrap();
             // fc2 layers (2, 3) ready before fc1 layers (0, 1)
             assert_eq!(order, vec![2, 3, 0, 1]);
             assert_eq!(streamed.loss.to_bits(), barrier.loss.to_bits());
             for (li, b) in slots.iter().enumerate() {
-                let guard = cells[li].lock().unwrap();
-                let s = guard.as_ref().expect("cell filled");
+                let (bi, pos) = plan.slot_of(li);
+                let guard = cells[bi].lock();
+                let s = guard.slots[pos].as_ref().expect("cell filled");
                 assert_eq!(s.idx, b.idx, "layer {li}");
                 assert_eq!(s.val, b.val, "layer {li}");
                 assert_eq!(s.wire_bytes, b.wire_bytes, "layer {li}");
             }
         }
         assert_eq!(streamed.grads(), barrier.grads());
+    }
+
+    #[test]
+    fn bucket_cells_fire_once_per_completed_bucket() {
+        // a whole-model bucket: the callback must fire exactly once, when
+        // the bucket's LAST layer lands; fill counts must reset across steps
+        let ds = GaussianMixture::new(2, 8, 4, 100, 20, 0.3);
+        let exe = NativeMlp::new(&[8, 6, 4], 16);
+        let layout = exe.layout().clone();
+        let params = exe.init_params(5);
+        // coalesce everything below 1 MiB -> a single whole-model bucket
+        let plan = ReducePlan::build(&layout, 1 << 20, 1);
+        assert_eq!(plan.num_buckets(), 1);
+        let cells = cells_for_plan(&plan);
+        let mut l = Learner::new(
+            0,
+            1,
+            &ds,
+            &layout,
+            &Config::with_kind(Kind::AdaComp),
+            4,
+            3,
+            Some(exe.build_worker().unwrap()),
+        );
+        for _ in 0..2 {
+            let mut fired = Vec::new();
+            l.step_streamed(&params, &ds, &layout, &plan, &cells, &mut |bi| fired.push(bi))
+                .unwrap();
+            // single bucket: fires once, only after ALL layers packed
+            assert_eq!(fired, vec![0]);
+            let cell = cells[0].lock();
+            assert_eq!(cell.filled, layout.num_layers());
+            assert!(cell.slots.iter().all(|s| s.is_some()));
+        }
     }
 
     #[test]

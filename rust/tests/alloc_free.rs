@@ -1,8 +1,10 @@
 //! Zero-allocation guarantee for the exchange/reduce hot path.
 //!
 //! A counting global allocator wraps `System`; after a warmup round, a
-//! steady-state `exchange_into` (both topologies) and a steady-state
-//! pack→exchange→recycle loop must perform **zero** heap allocations.
+//! steady-state `exchange_into` (every topology), the bucketed
+//! cell→exchange→hand-back loop (the engine's streamed scheduler shape),
+//! and a steady-state pack→exchange→recycle loop must perform **zero**
+//! heap allocations.
 //!
 //! NOTE: exactly one #[test] lives in this binary — the default test harness
 //! runs tests concurrently in one process, and a second test's allocations
@@ -38,14 +40,19 @@ fn allocs() -> usize {
     ALLOCS.load(Ordering::Relaxed)
 }
 
-use adacomp::comm::{topology, Fabric, LinkModel, Reduced, Topology};
+use adacomp::comm::{topology, Fabric, LinkModel, Reduced, ReducePlan, Topology};
 use adacomp::compress::{self, Config, Kind, Packet};
 use adacomp::models::{LayerKind, Layout};
+use adacomp::train::learner::{cells_for_plan, BucketCell};
 use adacomp::util::rng::Pcg32;
+
+/// Every topology the hot path must keep allocation-free (4 learners).
+const TOPOLOGIES: &[&str] = &["ring", "ps", "ps:2", "hier:2"];
 
 fn layout() -> Layout {
     Layout::from_specs(&[
         ("conv1", &[2400], LayerKind::Conv),
+        ("bias", &[16], LayerKind::Conv),
         ("conv2", &[6400], LayerKind::Conv),
         ("fc", &[4096], LayerKind::Fc),
     ])
@@ -74,15 +81,15 @@ fn packets_for(layout: &Layout, n_learners: usize, kind: Kind) -> Vec<Vec<Packet
 #[test]
 fn steady_state_exchange_and_pack_are_allocation_free() {
     let layout = layout();
-    let lens: Vec<usize> = layout.layers.iter().map(|l| l.len()).collect();
+    let lens: Vec<usize> = layout.layer_lens();
 
-    // --- exchange/reduce: both topologies, fixed packets ------------------
+    // --- whole-model barrier exchange: every topology, fixed packets ------
     let per_learner = packets_for(&layout, 4, Kind::AdaComp);
-    for name in ["ring", "ps"] {
-        let mut topo = topology::build(name).unwrap();
+    for name in TOPOLOGIES {
+        let mut topo = topology::build(name, 4).unwrap();
         let mut fabric = Fabric::new(LinkModel::default());
         let mut reduced = Reduced::new(&lens);
-        // warmup: sizes internal scratch (ps bitset, up/down vectors)
+        // warmup: sizes internal scratch (union bitsets, up/down vectors)
         for _ in 0..3 {
             topo.exchange_into(&per_learner, &lens, &mut fabric, &mut reduced);
         }
@@ -99,39 +106,51 @@ fn steady_state_exchange_and_pack_are_allocation_free() {
         assert_eq!(fabric.stats.rounds, 53);
     }
 
-    // --- streamed per-layer exchange: the overlap pipeline's hot path -----
-    // The engine's streamed scheduler takes each learner's packet out of its
-    // per-(learner, layer) hand-off cell, reduces the layer over the
-    // topology (`exchange_layer_into`), and puts the packets back for
-    // next-step recycling. Steady state must not allocate.
+    // --- bucketed cell -> exchange -> hand-back: the streamed scheduler's
+    // hot path. The engine takes each learner's bucket message out of its
+    // per-(learner, bucket) cell, reduces the bucket over the topology
+    // (`exchange_bucket_into`), and puts the packets back for next-step
+    // recycling. Steady state must not allocate.
     {
-        use std::sync::Mutex;
+        // threshold 12000: bias+conv1 coalesce, conv2 and fc stand alone
+        let plan = ReducePlan::build(&layout, 12000, 2);
+        assert_eq!(plan.num_buckets(), 3, "fixture should exercise coalescing");
         let per_learner = packets_for(&layout, 4, Kind::AdaComp);
-        for name in ["ring", "ps"] {
-            let mut topo = topology::build(name).unwrap();
+        for name in TOPOLOGIES {
+            let mut topo = topology::build(name, 4).unwrap();
             let mut fabric = Fabric::new(LinkModel::default());
             let mut reduced = Reduced::new(&lens);
-            let cells: Vec<Vec<Mutex<Option<Packet>>>> = per_learner
-                .iter()
-                .map(|ps| ps.iter().map(|p| Mutex::new(Some(p.clone()))).collect())
-                .collect();
-            let mut gather: Vec<Packet> = Vec::with_capacity(4);
+            let cells: Vec<Vec<BucketCell>> =
+                (0..4).map(|_| cells_for_plan(&plan)).collect();
+            for (l, packets) in per_learner.iter().enumerate() {
+                for (li, p) in packets.iter().enumerate() {
+                    let (bi, pos) = plan.slot_of(li);
+                    cells[l][bi].lock().slots[pos] = Some(p.clone());
+                }
+            }
+            let mut gather: Vec<Vec<Packet>> =
+                (0..4).map(|_| Vec::with_capacity(lens.len())).collect();
             let mut streamed_round = |topo: &mut Box<dyn Topology>,
                                       fabric: &mut Fabric,
                                       reduced: &mut Reduced,
-                                      gather: &mut Vec<Packet>| {
-                for li in (0..lens.len()).rev() {
-                    gather.clear();
-                    for learner in &cells {
-                        gather.push(learner[li].lock().unwrap().take().unwrap());
+                                      gather: &mut Vec<Vec<Packet>>| {
+                for bucket in &plan.buckets {
+                    for (l, row) in cells.iter().enumerate() {
+                        let mut cell = row[bucket.id].lock();
+                        for slot in cell.slots.iter_mut() {
+                            gather[l].push(slot.take().unwrap());
+                        }
                     }
-                    topo.exchange_layer_into(li, gather, lens[li], fabric, &mut reduced.sums[li]);
-                    for (l, p) in gather.drain(..).enumerate() {
-                        *cells[l][li].lock().unwrap() = Some(p);
+                    topo.exchange_bucket_into(bucket, gather, &lens, fabric, reduced);
+                    for (l, row) in cells.iter().enumerate() {
+                        let mut cell = row[bucket.id].lock();
+                        for (slot, p) in cell.slots.iter_mut().zip(gather[l].drain(..)) {
+                            *slot = Some(p);
+                        }
                     }
                 }
             };
-            // warmup sizes topology scratch (ps bitset, up/down vectors)
+            // warmup sizes topology scratch (union bitsets, up/down vectors)
             for _ in 0..3 {
                 streamed_round(&mut topo, &mut fabric, &mut reduced, &mut gather);
             }
@@ -143,10 +162,10 @@ fn steady_state_exchange_and_pack_are_allocation_free() {
             assert_eq!(
                 after - before,
                 0,
-                "{name}: steady-state streamed exchange_layer_into must not allocate"
+                "{name}: steady-state bucketed exchange must not allocate"
             );
-            // per-layer rounds: one fabric round per layer per step
-            assert_eq!(fabric.stats.rounds, 53 * lens.len() as u64);
+            // per-bucket rounds: one fabric round per bucket per step
+            assert_eq!(fabric.stats.rounds, 53 * plan.num_buckets() as u64);
         }
     }
 
@@ -176,7 +195,7 @@ fn steady_state_exchange_and_pack_are_allocation_free() {
         })
         .collect();
     let mut slots: Vec<Vec<Packet>> = (0..4).map(|_| Vec::with_capacity(lens.len())).collect();
-    let mut topo = topology::build("ring").unwrap();
+    let mut topo = topology::build("ring", 4).unwrap();
     let mut fabric = Fabric::new(LinkModel::default());
     let mut reduced = Reduced::new(&lens);
 

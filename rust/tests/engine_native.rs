@@ -27,9 +27,16 @@ fn base_cfg(kind: Kind, learners: usize) -> TrainConfig {
         topology: "ring".into(),
         link: LinkModel::default(),
         seed: 7,
+        // keep the tiny test model multi-bucket (w1 stands alone, the rest
+        // coalesce) so the streamed pipeline has something to overlap; the
+        // auto threshold would coalesce the whole model into one bucket
+        bucket_bytes: 600,
         ..TrainConfig::default()
     }
 }
+
+/// Every topology spec the matrix tests sweep (4 learners).
+const TOPOLOGIES: &[&str] = &["ps", "ps:4", "hier:4", "ring"];
 
 fn train(kind: Kind, learners: usize, topology: &str) -> adacomp::metrics::RunRecord {
     let ds = GaussianMixture::new(3, 16, 4, 800, 200, 0.6);
@@ -60,6 +67,27 @@ fn train_mode(
     let layout = exe.layout().clone();
     let mut cfg = base_cfg(kind, learners);
     cfg.threads = threads;
+    cfg.exchange = exchange.into();
+    let mut engine = Engine::new(&exe, &ds, &layout);
+    engine.run(&cfg, &params).expect("run")
+}
+
+/// Short run with every knob explicit (the topology-matrix tests).
+fn train_matrix(
+    kind: Kind,
+    threads: usize,
+    topology: &str,
+    exchange: &str,
+) -> adacomp::metrics::RunRecord {
+    let ds = GaussianMixture::new(3, 16, 4, 800, 200, 0.6);
+    let exe = NativeMlp::new(&[16, 32, 4], 50);
+    let params = exe.init_params(11);
+    let layout = exe.layout().clone();
+    let mut cfg = base_cfg(kind, 4);
+    cfg.epochs = 2;
+    cfg.steps_per_epoch = 12;
+    cfg.threads = threads;
+    cfg.topology = topology.into();
     cfg.exchange = exchange.into();
     let mut engine = Engine::new(&exe, &ds, &layout);
     engine.run(&cfg, &params).expect("run")
@@ -184,9 +212,11 @@ fn parallel_matches_sequential_bitwise() {
 fn streamed_matches_barrier_bitwise() {
     // The overlap pipeline's determinism contract (DESIGN.md §Overlap
     // pipeline): `--exchange streamed` must equal `--exchange barrier`
-    // bit-for-bit — per-layer packets are identical and the per-layer
-    // reduce consumes them in learner-id order — at every thread count.
-    for kind in [Kind::AdaComp, Kind::None] {
+    // bit-for-bit — per-bucket packets are identical and the reduce
+    // consumes them in learner-id order — at every thread count. Both
+    // modes now pack during backward in the same order, so even terngrad
+    // (cross-layer RNG stream while packing) is bit-equal across modes.
+    for kind in [Kind::AdaComp, Kind::None, Kind::TernGrad] {
         for threads in [1usize, 4] {
             let b = train_mode(kind, 4, threads, "barrier");
             let s = train_mode(kind, 4, threads, "streamed");
@@ -209,6 +239,120 @@ fn streamed_matches_barrier_bitwise() {
             assert_eq!(b.fabric.bytes_down, s.fabric.bytes_down, "{}", kind.name());
         }
     }
+}
+
+#[test]
+fn topologies_bitwise_identical_across_modes_and_threads() {
+    // The reduce-plan determinism contract (ISSUE 4 acceptance): final
+    // results are bit-identical for every topology × exchange mode ×
+    // thread count — reduction stays in learner-id order within each
+    // bucket, and the simulated shard/rack/ring structure shapes only the
+    // timeline. Wire bytes are identical across modes and threads *within*
+    // a topology (same bucket messages, different placement).
+    let mut reference: Option<adacomp::metrics::RunRecord> = None;
+    for topo in TOPOLOGIES {
+        let mut topo_bytes: Option<(u64, u64)> = None;
+        for exchange in ["streamed", "barrier"] {
+            for threads in [1usize, 4] {
+                let r = train_matrix(Kind::AdaComp, threads, topo, exchange);
+                assert!(!r.diverged, "{topo}/{exchange}/t{threads}");
+                match &reference {
+                    None => reference = Some(r.clone()),
+                    Some(exp) => {
+                        assert_eq!(exp.epochs.len(), r.epochs.len());
+                        for (a, b) in exp.epochs.iter().zip(r.epochs.iter()) {
+                            assert_eq!(
+                                a.train_loss.to_bits(),
+                                b.train_loss.to_bits(),
+                                "{topo}/{exchange}/t{threads} epoch {}: {} vs {}",
+                                a.epoch,
+                                a.train_loss,
+                                b.train_loss
+                            );
+                            assert_eq!(
+                                a.test_error_pct.to_bits(),
+                                b.test_error_pct.to_bits(),
+                                "{topo}/{exchange}/t{threads}"
+                            );
+                        }
+                    }
+                }
+                match &topo_bytes {
+                    None => topo_bytes = Some((r.fabric.bytes_up, r.fabric.bytes_down)),
+                    Some(&(up, down)) => {
+                        assert_eq!(r.fabric.bytes_up, up, "{topo}/{exchange}/t{threads}");
+                        assert_eq!(r.fabric.bytes_down, down, "{topo}/{exchange}/t{threads}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_baseline_mode_and_topology_independent() {
+    // satellite: the projected-speedup dense baseline must not vary with
+    // the topology or exchange mode. FabricStats::dense_comm_total_s
+    // cancels the measured compute, leaving exactly
+    // steps × plan.dense_round_s — a deterministic quantity.
+    let mut vals: Vec<(String, f64)> = Vec::new();
+    for topo in TOPOLOGIES {
+        for exchange in ["streamed", "barrier"] {
+            let r = train_matrix(Kind::AdaComp, 1, topo, exchange);
+            let steps = r.fabric.steps as f64;
+            assert!(steps > 0.0);
+            vals.push((format!("{topo}/{exchange}"), r.fabric.dense_comm_total_s() / steps));
+        }
+    }
+    let name0 = vals[0].0.clone();
+    let v0 = vals[0].1;
+    for (name, v) in &vals[1..] {
+        assert!(
+            (*v - v0).abs() < 1e-12,
+            "dense baseline differs: {name0}={v0} vs {name}={v}"
+        );
+    }
+}
+
+#[test]
+fn sharded_ps_overlaps_ports_on_timeline() {
+    // ps:4 runs the same rounds as ps but pipelines buckets across shard
+    // ports: identical bytes and per-round comm, strictly earlier overlap
+    // completion whenever two buckets' rounds would have queued on the
+    // single port. The comparison cancels the measured compute
+    // (FabricStats::comm_tail_s), and a deliberately slow link makes each
+    // simulated round (~40ms) dwarf any scheduler-preemption gap between
+    // consecutive bucket pack stamps — the strict inequality cannot tie
+    // from timing noise.
+    let slow = LinkModel {
+        latency_s: 5e-3,
+        bandwidth_bps: 1.25e9,
+    };
+    let run = |topo: &str| {
+        let ds = GaussianMixture::new(3, 16, 4, 800, 200, 0.6);
+        let exe = NativeMlp::new(&[16, 32, 4], 50);
+        let params = exe.init_params(11);
+        let layout = exe.layout().clone();
+        let mut cfg = base_cfg(Kind::AdaComp, 4);
+        cfg.epochs = 2;
+        cfg.steps_per_epoch = 12;
+        cfg.threads = 1;
+        cfg.topology = topo.into();
+        cfg.link = slow;
+        let mut engine = Engine::new(&exe, &ds, &layout);
+        engine.run(&cfg, &params).expect("run")
+    };
+    let flat = run("ps");
+    let sharded = run("ps:4");
+    assert_eq!(flat.fabric.bytes_up, sharded.fabric.bytes_up);
+    assert_eq!(flat.fabric.bytes_down, sharded.fabric.bytes_down);
+    assert!((flat.fabric.sim_time_s - sharded.fabric.sim_time_s).abs() < 1e-9);
+    assert!(
+        sharded.fabric.comm_tail_s() < flat.fabric.comm_tail_s(),
+        "ps:4 comm tail {} !< ps comm tail {}",
+        sharded.fabric.comm_tail_s(),
+        flat.fabric.comm_tail_s()
+    );
 }
 
 #[test]
