@@ -11,25 +11,44 @@
 //!
 //! **Overlap timeline.** Beyond per-round comm time, the fabric folds each
 //! training step onto a simulated step timeline ([`Fabric::record_step`]):
-//! the engine supplies the step's measured compute span (backward + pack
-//! wall time) and three comm placements — overlapped behind backward (the
-//! streamed pipeline, with per-bucket rounds placed **per port**: rounds on
-//! one topology port serialize, rounds on disjoint ports — `ps:<S>` shards
-//! — run concurrently, and `overlap_end_s` is the max over port
-//! completion times), serialized after a barrier, and the serialized dense
-//! no-compression baseline ([`ReducePlan::dense_round_s`]
-//! (super::plan::ReducePlan::dense_round_s) — identical across topologies
-//! and exchange modes). `sim_step_s()` and `projected_speedup()` turn the
-//! paper's compression *rates* into projected wall-clock step-time wins
-//! (DESIGN.md §Overlap pipeline, §Topologies).
+//! the engine supplies the step's (jittered) compute span and three comm
+//! placements — the frontier advance of the overlapped schedule (the
+//! streamed pipeline, with per-bucket rounds placed **per port** from
+//! their [`RoundSched`](super::topology::RoundSched) ready-time inputs:
+//! rounds on one topology port serialize, rounds on disjoint ports —
+//! `ps:<S>` shards — run concurrently, and the timeline is continuous
+//! across steps under bounded staleness), serialized after a barrier, and
+//! the serialized dense no-compression baseline
+//! ([`ReducePlan::dense_round_s`]
+//! (super::plan::ReducePlan::dense_round_s) — identical across topologies,
+//! exchange modes and staleness windows). `sim_step_s()` and
+//! `projected_speedup()` turn the paper's compression *rates* into
+//! projected wall-clock step-time wins (DESIGN.md §Overlap pipeline,
+//! §Topologies, §Bounded staleness).
+//!
+//! **Straggler model.** [`LinkModel::jitter`] makes the simulated fleet
+//! uneven: [`LinkModel::compute_mult`] draws a deterministic per-(learner,
+//! step) compute multiplier (base jitter plus occasional straggler
+//! episodes) from a seeded xorshift64* hash, and [`Fabric::record_stall`]
+//! accounts the resulting window-wait time (`stall_s`) and per-learner
+//! critical-path shares.
 
-/// Link parameters for the alpha-beta cost model.
+/// Link parameters for the alpha-beta cost model, plus the per-learner
+/// compute-jitter model used by the straggler simulation.
 #[derive(Debug, Clone, Copy)]
 pub struct LinkModel {
     /// Per-message latency (alpha), seconds.
     pub latency_s: f64,
     /// Link bandwidth (1/beta), bytes per second.
     pub bandwidth_bps: f64,
+    /// Per-learner compute-jitter fraction (`--jitter`), `0.0 <= j < 1.0`.
+    /// 0 = every learner computes at its measured speed (no skew). With
+    /// `j > 0` each (learner, step) draws a deterministic multiplier from
+    /// [`compute_mult`](Self::compute_mult) — base jitter up to `+j`, plus
+    /// an occasional straggler episode — so the simulated fleet is uneven
+    /// in a reproducible way at any thread count. Timeline-only: jitter
+    /// never touches gradients, losses, or bytes.
+    pub jitter: f64,
 }
 
 impl Default for LinkModel {
@@ -38,13 +57,68 @@ impl Default for LinkModel {
         LinkModel {
             latency_s: 25e-6,
             bandwidth_bps: 1.25e9,
+            jitter: 0.0,
         }
     }
+}
+
+/// Probability (as a power-of-two reciprocal) that a (learner, step) cell is
+/// a straggler episode: 1/8 of steps run `1 + STRAGGLE_BOOST * jitter`
+/// slower — the long-tail slowdown (GC pause, co-tenant burst, flaky NIC)
+/// that bounded staleness exists to absorb.
+const STRAGGLE_SHIFT: u32 = 3;
+/// Multiple of `jitter` a straggler episode adds on top of the base draw.
+pub const STRAGGLE_BOOST: f64 = 4.0;
+
+/// One round of xorshift64* mixing (Vigna'16) — the deterministic hash
+/// behind the jitter draws.
+#[inline]
+fn xorshift64star(mut x: u64) -> u64 {
+    x ^= x >> 12;
+    x ^= x << 25;
+    x ^= x >> 27;
+    x.wrapping_mul(0x2545_F491_4F6C_DD1D)
 }
 
 impl LinkModel {
     pub fn transfer_time(&self, bytes: usize) -> f64 {
         self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Fail fast on an out-of-range jitter fraction (the `topology::build`
+    /// pattern: config JSON, CLI/harness, and the engine all validate
+    /// through here).
+    pub fn validate_jitter(jitter: f64) -> anyhow::Result<()> {
+        if !jitter.is_finite() || !(0.0..1.0).contains(&jitter) {
+            anyhow::bail!(
+                "jitter {jitter} out of range (valid: 0.0 <= jitter < 1.0; 0 = no jitter)"
+            );
+        }
+        Ok(())
+    }
+
+    /// Deterministic compute-time multiplier for one (learner, step) cell:
+    /// `1 + jitter·u` with `u ~ U[0,1)` drawn from a seeded xorshift64*
+    /// hash of `(seed, learner, step)`, plus an occasional straggler
+    /// episode (1 step in 8) that adds `STRAGGLE_BOOST · jitter`. Pure
+    /// function of its inputs — identical at every thread count, across
+    /// repeat runs, and independent of wall-clock time.
+    pub fn compute_mult(&self, seed: u64, learner: usize, step: u64) -> f64 {
+        if self.jitter <= 0.0 {
+            return 1.0;
+        }
+        let x = xorshift64star(
+            seed ^ 0xada0_0417 // decorrelate from batch/compressor streams
+                ^ (learner as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ step.wrapping_mul(0xD1B5_4A32_D192_ED03),
+        );
+        let u = (x >> 11) as f64 / (1u64 << 53) as f64;
+        let spike = if x & ((1u64 << STRAGGLE_SHIFT) - 1) == 0 {
+            STRAGGLE_BOOST * self.jitter
+        } else {
+            0.0
+        };
+        1.0 + self.jitter * u + spike
     }
 }
 
@@ -65,8 +139,10 @@ pub struct FabricStats {
     pub dense_bytes_equiv: u64,
     /// Steps folded into the step timeline (`record_step` calls).
     pub steps: u64,
-    /// Σ per-step critical path with comm overlapped behind backward — the
-    /// streamed pipeline's step time. On the barrier path this equals
+    /// The simulated makespan of the run's actual schedule: Σ per-step
+    /// frontier advances (comm overlapped behind backward on the streamed
+    /// path; with bounded staleness, steps also amortize behind each
+    /// other). On the synchronous (K = 0) barrier path this equals
     /// `sim_barrier_s` (nothing overlaps).
     pub sim_overlap_s: f64,
     /// Σ per-step compute + serialized comm: the same packets behind a full
@@ -75,6 +151,16 @@ pub struct FabricStats {
     /// Σ per-step compute + serialized *dense f32* comm: the
     /// no-compression, no-overlap baseline.
     pub sim_dense_s: f64,
+    /// Σ over (learner, step) of simulated idle time: how long learners sat
+    /// waiting for the staleness window (the K-back update frontier) before
+    /// starting their next step. The synchronous engine (K = 0) charges the
+    /// full barrier wait here; bounded staleness exists to shrink it.
+    pub stall_s: f64,
+    /// Per-learner count of steps where this learner finished compute last
+    /// (the step's critical path ran through it). With jitter off every
+    /// learner ties near-evenly; a straggler shows up as a dominant share
+    /// ([`crit_share`](Self::crit_share)).
+    pub crit_steps: Vec<u64>,
 }
 
 impl FabricStats {
@@ -124,6 +210,19 @@ impl FabricStats {
     pub fn dense_comm_total_s(&self) -> f64 {
         self.sim_dense_s - self.sim_barrier_s + self.sim_time_s
     }
+
+    /// Mean simulated stall seconds per (learner, step).
+    pub fn stall_per_step_s(&self) -> f64 {
+        let cells = self.steps.max(1) * self.crit_steps.len().max(1) as u64;
+        self.stall_s / cells as f64
+    }
+
+    /// Fraction of steps whose compute critical path ran through each
+    /// learner (sums to ~1 over learners).
+    pub fn crit_share(&self) -> Vec<f64> {
+        let steps = self.steps.max(1) as f64;
+        self.crit_steps.iter().map(|&c| c as f64 / steps).collect()
+    }
 }
 
 /// The fabric: link model + running stats.
@@ -163,24 +262,41 @@ impl Fabric {
 
     /// Fold one finished training step onto the simulated step timeline.
     ///
-    /// * `compute_s`: measured wall span of the learner phase (fwd/bwd+pack),
+    /// * `compute_s`: the step's (jittered) compute span — max over the
+    ///   learners' simulated step durations,
     /// * `comm_serial_s`: Σ per-round comm time of the step's exchanges,
-    /// * `overlap_end_s`: when the last exchange finished on the overlap
-    ///   timeline (streamed: per-bucket rounds pipelined behind backward,
-    ///   max over the topology's port completion times; barrier:
-    ///   `compute_s + comm_serial_s`),
-    /// * `dense_comm_s`: Σ per-round dense-baseline comm time.
+    /// * `overlap_s`: the step's increment on the continuous overlap
+    ///   timeline — how far the applied-update frontier advanced (streamed:
+    ///   per-bucket rounds pipelined behind backward across the topology's
+    ///   ports and, with staleness, behind *later steps'* compute; barrier:
+    ///   the serialized placement). The window scheduler may advance the
+    ///   frontier by **less than** `compute_s` on an amortized step — the
+    ///   engine owns the placement, the fabric only accumulates it,
+    /// * `dense_comm_s`: Σ per-round dense-baseline comm time (the
+    ///   synchronous coalesced round — the "before" system is always the
+    ///   K = 0 barrier placement).
     pub fn record_step(
         &mut self,
         compute_s: f64,
         comm_serial_s: f64,
-        overlap_end_s: f64,
+        overlap_s: f64,
         dense_comm_s: f64,
     ) {
         self.stats.steps += 1;
-        self.stats.sim_overlap_s += overlap_end_s.max(compute_s);
+        self.stats.sim_overlap_s += overlap_s;
         self.stats.sim_barrier_s += compute_s + comm_serial_s;
         self.stats.sim_dense_s += compute_s + dense_comm_s;
+    }
+
+    /// Fold one step's straggler accounting: `stalls[l]` = simulated idle
+    /// seconds learner `l` spent waiting for the staleness window before
+    /// this step, `crit` = the learner whose compute finished last.
+    pub fn record_stall(&mut self, stalls: &[f64], crit: usize) {
+        if self.stats.crit_steps.len() < stalls.len() {
+            self.stats.crit_steps.resize(stalls.len(), 0);
+        }
+        self.stats.stall_s += stalls.iter().sum::<f64>();
+        self.stats.crit_steps[crit] += 1;
     }
 
     pub fn reset(&mut self) {
@@ -197,6 +313,7 @@ mod tests {
         let l = LinkModel {
             latency_s: 1e-3,
             bandwidth_bps: 1e6,
+            ..LinkModel::default()
         };
         // 1ms latency + 1000 bytes at 1MB/s = 1ms -> 2ms
         assert!((l.transfer_time(1000) - 2e-3).abs() < 1e-12);
@@ -229,8 +346,62 @@ mod tests {
         assert!(f.stats.sim_overlap_s < f.stats.sim_barrier_s);
         assert!((f.stats.sim_step_s() - 10.5e-3).abs() < 1e-12);
         assert!((f.stats.projected_speedup() - 50.0 / 10.5).abs() < 1e-9);
-        // overlap end can never beat pure compute: record_step clamps
+        // with bounded staleness a step may advance the frontier by less
+        // than its own compute (amortized behind earlier steps) — the
+        // fabric accumulates the engine's placement verbatim
         f.record_step(5e-3, 1e-3, 1e-3, 2e-3);
-        assert!((f.stats.sim_overlap_s - 15.5e-3).abs() < 1e-12);
+        assert!((f.stats.sim_overlap_s - 11.5e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stall_accounting_accumulates_and_shares() {
+        let mut f = Fabric::new(LinkModel::default());
+        f.record_step(1e-3, 0.0, 1e-3, 2e-3);
+        f.record_stall(&[0.0, 2e-3, 1e-3], 1);
+        f.record_step(1e-3, 0.0, 1e-3, 2e-3);
+        f.record_stall(&[5e-4, 0.0, 5e-4], 1);
+        assert!((f.stats.stall_s - 4e-3).abs() < 1e-15);
+        assert!((f.stats.stall_per_step_s() - 4e-3 / 6.0).abs() < 1e-15);
+        assert_eq!(f.stats.crit_steps, vec![0, 2, 0]);
+        let share = f.stats.crit_share();
+        assert_eq!(share, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn jitter_model_is_deterministic_bounded_and_validated() {
+        let link = LinkModel {
+            jitter: 0.3,
+            ..LinkModel::default()
+        };
+        // pure function of (seed, learner, step): repeat draws identical
+        let mut spikes = 0usize;
+        for l in 0..16usize {
+            for t in 0..200u64 {
+                let m = link.compute_mult(42, l, t);
+                assert_eq!(m.to_bits(), link.compute_mult(42, l, t).to_bits());
+                // base draw in [1, 1.3); straggler episodes add 4*0.3
+                assert!((1.0..1.0 + 0.3 + STRAGGLE_BOOST * 0.3).contains(&m), "{m}");
+                if m >= 1.0 + STRAGGLE_BOOST * 0.3 {
+                    spikes += 1;
+                }
+            }
+        }
+        // ~1/8 of cells are straggler episodes (3200 draws: loose bounds)
+        assert!((200..600).contains(&spikes), "spikes {spikes}");
+        // different seeds decorrelate
+        assert_ne!(
+            link.compute_mult(1, 0, 0).to_bits(),
+            link.compute_mult(2, 0, 0).to_bits()
+        );
+        // jitter off: multiplier is exactly 1
+        let off = LinkModel::default();
+        assert_eq!(off.compute_mult(42, 3, 7), 1.0);
+        // range validation (the fail-fast satellite)
+        assert!(LinkModel::validate_jitter(0.0).is_ok());
+        assert!(LinkModel::validate_jitter(0.999).is_ok());
+        for bad in [-0.1, 1.0, 2.5, f64::NAN, f64::INFINITY] {
+            let err = LinkModel::validate_jitter(bad).unwrap_err().to_string();
+            assert!(err.contains("0.0 <= jitter < 1.0"), "{bad}: {err}");
+        }
     }
 }

@@ -7,4 +7,4 @@ pub mod topology;
 
 pub use fabric::{Fabric, FabricStats, LinkModel};
 pub use plan::{Bucket, ReducePlan};
-pub use topology::{HierPs, ParamServer, Reduced, Ring, RoundCost, Topology};
+pub use topology::{HierPs, ParamServer, Reduced, Ring, RoundCost, RoundSched, Topology};

@@ -183,6 +183,12 @@ impl ReducePlan {
         self.buckets.len()
     }
 
+    /// Largest per-bucket layer count — sizes the engine's reusable
+    /// per-learner gather buffers (one packet per bucket layer).
+    pub fn max_bucket_layers(&self) -> usize {
+        self.buckets.iter().map(|b| b.num_layers()).max().unwrap_or(0)
+    }
+
     /// (bucket index, slot within the bucket's message) for a layout layer.
     pub fn slot_of(&self, layer: usize) -> (usize, usize) {
         let bi = self.bucket_of[layer];
@@ -304,6 +310,8 @@ mod tests {
         let plan = ReducePlan::build(&tiny, 100, 1);
         let ranges: Vec<Range<usize>> = plan.buckets.iter().map(|b| b.layers.clone()).collect();
         assert_eq!(ranges, vec![2..4, 0..2]);
+        assert_eq!(plan.max_bucket_layers(), 2);
+        assert_eq!(ReducePlan::build(&tiny, 1 << 20, 1).max_bucket_layers(), 4);
     }
 
     #[test]
@@ -325,6 +333,7 @@ mod tests {
         let tiny = LinkModel {
             latency_s: 0.0,
             bandwidth_bps: 1e9,
+            ..LinkModel::default()
         };
         assert_eq!(ReducePlan::auto_threshold(&tiny), 1);
     }

@@ -62,8 +62,23 @@ use crate::compress::Packet;
 const VALID: &str = "valid: ring, ps, ps:<S> (S shard servers), hier:<G> (racks of G); \
                      alias: param_server = ps";
 
+/// Ready-time inputs for placing one round on the simulated timeline
+/// (the bounded-staleness scheduler's contract with the topologies): when
+/// the bucket became exchangeable at every learner, and when its assigned
+/// port last went idle. The default (both zero) reproduces the
+/// placement-free cost accounting benches and tests use.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundSched {
+    /// Simulated time the bucket's last learner published it.
+    pub ready_s: f64,
+    /// Simulated completion time of the previous round on this bucket's
+    /// port (rounds on one port serialize; disjoint ports overlap).
+    pub port_free_s: f64,
+}
+
 /// Simulated cost of one exchange round (one bucket, or the whole-model
-/// bucket on the coalesced barrier path).
+/// bucket on the coalesced barrier path), including its placement on the
+/// caller's port timeline.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RoundCost {
     /// Critical-path seconds for the compressed packets actually sent.
@@ -75,6 +90,26 @@ pub struct RoundCost {
     /// (super::plan::ReducePlan::dense_round_s), never a per-topology or
     /// per-granularity quantity.
     pub dense_comm_s: f64,
+    /// When the round started: `max(sched.ready_s, sched.port_free_s)`.
+    pub start_s: f64,
+    /// When the round finished on its port: `start_s + comm_s`. The caller
+    /// feeds this back as the port's next `port_free_s`.
+    pub end_s: f64,
+}
+
+impl RoundCost {
+    /// Place a round of `comm_s` seconds on the timeline described by
+    /// `sched` — single definition of the start/end arithmetic so every
+    /// topology schedules identically.
+    fn place(sched: RoundSched, comm_s: f64, dense_comm_s: f64) -> RoundCost {
+        let start_s = sched.ready_s.max(sched.port_free_s);
+        RoundCost {
+            comm_s,
+            dense_comm_s,
+            start_s,
+            end_s: start_s + comm_s,
+        }
+    }
 }
 
 /// The dense per-layer sum of every learner's packet. Allocate once with
@@ -123,13 +158,17 @@ pub trait Topology: Send {
     /// ascending layer order (matching `bucket.layers`). Zeroes the
     /// bucket's slices of `out` and accumulates the dense sums in
     /// learner-id order, records bytes/time on `fabric`, and returns the
-    /// round's cost. Each learner's packets travel as **one** bucket-framed
-    /// message, so latency is charged once per learner per direction.
+    /// round's cost **placed** on the timeline described by `sched` (the
+    /// round starts at `max(ready_s, port_free_s)`; the scheduler feeds
+    /// `RoundCost::end_s` back as the port's next `port_free_s`). Each
+    /// learner's packets travel as **one** bucket-framed message, so
+    /// latency is charged once per learner per direction.
     fn exchange_bucket_into(
         &mut self,
         bucket: &Bucket,
         per_learner: &[Vec<Packet>],
         layer_lens: &[usize],
+        sched: RoundSched,
         fabric: &mut Fabric,
         out: &mut Reduced,
     ) -> RoundCost;
@@ -147,7 +186,14 @@ pub trait Topology: Send {
     ) -> RoundCost {
         out.reset(layer_lens);
         let bucket = Bucket::whole_model(layer_lens.len());
-        self.exchange_bucket_into(&bucket, per_learner, layer_lens, fabric, out)
+        self.exchange_bucket_into(
+            &bucket,
+            per_learner,
+            layer_lens,
+            RoundSched::default(),
+            fabric,
+            out,
+        )
     }
 
     /// Convenience wrapper that allocates a fresh `Reduced` per round
@@ -304,6 +350,7 @@ impl Topology for ParamServer {
         bucket: &Bucket,
         per_learner: &[Vec<Packet>],
         layer_lens: &[usize],
+        sched: RoundSched,
         fabric: &mut Fabric,
         out: &mut Reduced,
     ) -> RoundCost {
@@ -337,10 +384,11 @@ impl Topology for ParamServer {
 
         reduce_bucket_into(bucket, per_learner, out);
 
-        RoundCost {
-            comm_s: t_up + t_down,
-            dense_comm_s: dense_bucket_s(bucket, layer_lens, n, &fabric.link),
-        }
+        RoundCost::place(
+            sched,
+            t_up + t_down,
+            dense_bucket_s(bucket, layer_lens, n, &fabric.link),
+        )
     }
 }
 
@@ -398,6 +446,7 @@ impl Topology for HierPs {
         bucket: &Bucket,
         per_learner: &[Vec<Packet>],
         layer_lens: &[usize],
+        sched: RoundSched,
         fabric: &mut Fabric,
         out: &mut Reduced,
     ) -> RoundCost {
@@ -478,10 +527,7 @@ impl Topology for HierPs {
 
         reduce_bucket_into(bucket, per_learner, out);
 
-        RoundCost {
-            comm_s: t,
-            dense_comm_s: dense_bucket_s(bucket, layer_lens, n, &fabric.link),
-        }
+        RoundCost::place(sched, t, dense_bucket_s(bucket, layer_lens, n, &fabric.link))
     }
 }
 
@@ -531,6 +577,7 @@ impl Topology for Ring {
         bucket: &Bucket,
         per_learner: &[Vec<Packet>],
         layer_lens: &[usize],
+        sched: RoundSched,
         fabric: &mut Fabric,
         out: &mut Reduced,
     ) -> RoundCost {
@@ -546,10 +593,7 @@ impl Topology for Ring {
         );
         reduce_bucket_into(bucket, per_learner, out);
 
-        RoundCost {
-            comm_s: time,
-            dense_comm_s: dense_bucket_s(bucket, layer_lens, n, &fabric.link),
-        }
+        RoundCost::place(sched, time, dense_bucket_s(bucket, layer_lens, n, &fabric.link))
     }
 }
 
@@ -691,8 +735,14 @@ mod tests {
                     .iter()
                     .map(|ps| bucket.layers.clone().map(|li| ps[li].clone()).collect())
                     .collect();
-                let cost =
-                    topo_b.exchange_bucket_into(bucket, &gather, &lens, &mut fb, &mut out);
+                let cost = topo_b.exchange_bucket_into(
+                    bucket,
+                    &gather,
+                    &lens,
+                    RoundSched::default(),
+                    &mut fb,
+                    &mut out,
+                );
                 assert!(cost.comm_s > 0.0, "{name}");
             }
             assert_eq!(out.sums, barrier.sums, "{name}");
@@ -722,7 +772,14 @@ mod tests {
                     .map(|ps| bucket.layers.clone().map(|li| ps[li].clone()).collect())
                     .collect();
                 total += topo
-                    .exchange_bucket_into(bucket, &gather, &lens, &mut f, &mut out)
+                    .exchange_bucket_into(
+                        bucket,
+                        &gather,
+                        &lens,
+                        RoundSched::default(),
+                        &mut f,
+                        &mut out,
+                    )
                     .dense_comm_s;
             }
             dense_totals.push(total);
@@ -741,6 +798,45 @@ mod tests {
         assert!((plan.dense_round_s(&lens, 4, &link) - whole).abs() < 1e-18);
         let finer = ReducePlan::build(&layout, 1, 2);
         assert!((finer.dense_round_s(&lens, 4, &link) - whole).abs() < 1e-18);
+    }
+
+    #[test]
+    fn round_placement_honors_ready_and_port_times() {
+        // RoundSched inputs (the bounded-staleness scheduler's contract):
+        // a round starts at max(ready, port_free) and ends start + comm —
+        // identically for every topology.
+        let (pk, lens) = learners();
+        let bucket = Bucket::whole_model(lens.len());
+        for name in ["ring", "ps", "hier:2"] {
+            let mut f = Fabric::new(LinkModel::default());
+            let mut topo = build(name, 2).unwrap();
+            let mut out = Reduced::new(&lens);
+            // ready after the port went idle: the round starts at ready
+            let c = topo.exchange_bucket_into(
+                &bucket,
+                &pk,
+                &lens,
+                RoundSched { ready_s: 2.0, port_free_s: 1.0 },
+                &mut f,
+                &mut out,
+            );
+            assert!((c.start_s - 2.0).abs() < 1e-15, "{name}");
+            assert!((c.end_s - (2.0 + c.comm_s)).abs() < 1e-15, "{name}");
+            // port still busy past the ready stamp: the round queues
+            let c2 = topo.exchange_bucket_into(
+                &bucket,
+                &pk,
+                &lens,
+                RoundSched { ready_s: 2.5, port_free_s: c.end_s },
+                &mut f,
+                &mut out,
+            );
+            assert!((c2.start_s - c.end_s.max(2.5)).abs() < 1e-15, "{name}");
+            // the default sched is the placement-free origin
+            let c3 = topo.exchange_into(&pk, &lens, &mut f, &mut out);
+            assert_eq!(c3.start_s, 0.0, "{name}");
+            assert!((c3.end_s - c3.comm_s).abs() < 1e-15, "{name}");
+        }
     }
 
     #[test]

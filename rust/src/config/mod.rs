@@ -20,7 +20,7 @@ pub fn from_json(v: &Json) -> Result<TrainConfig> {
         "name", "model", "backend", "learners", "batch_per_learner", "epochs",
         "steps_per_epoch", "lr", "lr_schedule", "optimizer", "momentum",
         "topology", "seed", "clip_norm", "divergence_loss", "compression",
-        "link", "threads", "exchange", "bucket_bytes",
+        "link", "threads", "exchange", "bucket_bytes", "staleness", "jitter",
     ];
     for k in obj.keys() {
         if !KNOWN.contains(&k.as_str()) {
@@ -77,6 +77,26 @@ pub fn from_json(v: &Json) -> Result<TrainConfig> {
     if let Some(b) = v.get("bucket_bytes").as_usize() {
         cfg.bucket_bytes = b;
     }
+    // bounded-staleness window knobs: fail at load time with the valid
+    // range (the topology::build pattern), not a mid-run panic
+    if v.get("staleness") != &Json::Null {
+        let k = v
+            .get("staleness")
+            .as_f64()
+            .context("'staleness' must be a number")?;
+        // reject fractional / negative values instead of silently
+        // truncating to a different schedule than the spec asked for
+        if k < 0.0 || k.fract() != 0.0 {
+            bail!(
+                "staleness {k} out of range (valid: integer 0 <= K <= {}; 0 = synchronous)",
+                crate::train::engine::MAX_STALENESS
+            );
+        }
+        cfg.staleness = k as usize;
+    }
+    if v.get("jitter") != &Json::Null {
+        cfg.link.jitter = v.get("jitter").as_f64().context("'jitter' must be a number")?;
+    }
     if let Some(s) = v.get("seed").as_i64() {
         cfg.seed = s as u64;
     }
@@ -106,8 +126,12 @@ pub fn from_json(v: &Json) -> Result<TrainConfig> {
                 .get("bandwidth_bps")
                 .as_f64()
                 .unwrap_or(1.25e9),
+            // jitter stays a top-level key (it models learners, not the link
+            // alpha-beta parameters)
+            jitter: cfg.link.jitter,
         };
     }
+    crate::train::engine::validate_window(cfg.staleness, cfg.link.jitter)?;
     Ok(cfg)
 }
 
@@ -232,6 +256,8 @@ pub fn to_json(cfg: &TrainConfig) -> Json {
         ("topology", json::s(&cfg.topology)),
         ("exchange", json::s(&cfg.exchange)),
         ("bucket_bytes", json::num(cfg.bucket_bytes as f64)),
+        ("staleness", json::num(cfg.staleness as f64)),
+        ("jitter", json::num(cfg.link.jitter)),
         ("seed", json::num(cfg.seed as f64)),
         ("clip_norm", json::num(cfg.clip_norm as f64)),
         ("threads", json::num(cfg.threads as f64)),
@@ -336,6 +362,51 @@ mod tests {
         let v = Json::from_str_slice(r#"{"model": "m", "learners": 4, "topology": "ps:4"}"#)
             .unwrap();
         assert!(from_json(&v).is_ok());
+    }
+
+    #[test]
+    fn staleness_and_jitter_roundtrip_and_validate() {
+        // satellite: window knobs load, roundtrip, and fail fast with the
+        // valid range in the error (the topology::build pattern)
+        let v = Json::from_str_slice(
+            r#"{"model": "m", "learners": 8, "staleness": 2, "jitter": 0.3}"#,
+        )
+        .unwrap();
+        let cfg = from_json(&v).unwrap();
+        assert_eq!(cfg.staleness, 2);
+        assert!((cfg.link.jitter - 0.3).abs() < 1e-12);
+        let back = from_json(&to_json(&cfg)).unwrap();
+        assert_eq!(back.staleness, 2);
+        assert!((back.link.jitter - 0.3).abs() < 1e-12);
+        // jitter composes with an explicit link object (stays a
+        // learner-model knob, not an alpha-beta parameter)
+        let v = Json::from_str_slice(
+            r#"{"model": "m", "jitter": 0.5,
+                "link": {"latency_s": 1e-3, "bandwidth_bps": 1e9}}"#,
+        )
+        .unwrap();
+        let cfg = from_json(&v).unwrap();
+        assert!((cfg.link.jitter - 0.5).abs() < 1e-12);
+        assert!((cfg.link.latency_s - 1e-3).abs() < 1e-12);
+        // out-of-range (or wrongly typed) values fail at load time
+        for (spec, needle) in [
+            (r#"{"model": "m", "staleness": -1}"#, "0 <= K <= 16"),
+            (r#"{"model": "m", "staleness": 99}"#, "0 <= K <= 16"),
+            (r#"{"model": "m", "staleness": 2.7}"#, "0 <= K <= 16"),
+            (r#"{"model": "m", "staleness": "two"}"#, "must be a number"),
+            (r#"{"model": "m", "jitter": 1.0}"#, "0.0 <= jitter < 1.0"),
+            (r#"{"model": "m", "jitter": -0.2}"#, "0.0 <= jitter < 1.0"),
+            (r#"{"model": "m", "jitter": "0.3"}"#, "must be a number"),
+        ] {
+            let v = Json::from_str_slice(spec).unwrap();
+            let err = format!("{:#}", from_json(&v).unwrap_err());
+            assert!(err.contains(needle), "{spec}: {err}");
+        }
+        // defaults: synchronous, no jitter
+        let v = Json::from_str_slice(r#"{"model": "m"}"#).unwrap();
+        let cfg = from_json(&v).unwrap();
+        assert_eq!(cfg.staleness, 0);
+        assert_eq!(cfg.link.jitter, 0.0);
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod report;
 
 use anyhow::{bail, Result};
 
+use crate::comm::LinkModel;
 use crate::compress;
 use crate::data::{
     cifar_like::CifarLike, fbank_like::FbankLike, mnist_gen::MnistGen,
@@ -447,14 +448,44 @@ impl Workload {
             comp.per_bin_scale = true;
         }
 
-        // validate by-name knobs at parse time: typos fail with the valid
-        // list instead of a mid-run failure (learners resolves first — the
-        // ps:<S>/hier:<G> parameter bounds depend on it)
+        // validate by-name/by-range knobs at parse time: typos fail with
+        // the valid list instead of a mid-run failure (learners resolves
+        // first — the ps:<S>/hier:<G> parameter bounds depend on it)
         let learners = args.usize_or("learners", 1);
         let topology = args.str_or("topology", "ring");
         crate::comm::topology::build(&topology, learners)?;
         let exchange = args.str_or("exchange", "streamed");
         crate::train::ExchangeMode::parse(&exchange)?;
+        // bounded-staleness window knobs (hand-parsed so a negative K or a
+        // non-number fails with the valid range, not an integer-parse panic)
+        let staleness = match args.get("staleness") {
+            None => 0usize,
+            Some(v) => {
+                let k: i64 = v.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "--staleness '{v}' is not an integer (valid: 0 <= K <= {}; \
+                         0 = synchronous)",
+                        crate::train::MAX_STALENESS
+                    )
+                })?;
+                if k < 0 {
+                    bail!(
+                        "staleness {k} out of range (valid: 0 <= K <= {}; 0 = synchronous)",
+                        crate::train::MAX_STALENESS
+                    );
+                }
+                k as usize
+            }
+        };
+        let jitter = match args.get("jitter") {
+            None => 0.0f64,
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "--jitter '{v}' is not a number (valid: 0.0 <= jitter < 1.0; 0 = no jitter)"
+                )
+            })?,
+        };
+        crate::train::validate_window(staleness, jitter)?;
         let batch = args.usize_or("batch", d.batch / learners.max(1)).max(1);
         let lr = match args.get("lr") {
             Some(v) => LrSchedule::Constant(v.parse()?),
@@ -474,7 +505,10 @@ impl Workload {
             momentum: args.f32_or("momentum", d.momentum),
             compression: comp,
             topology,
-            link: Default::default(),
+            link: LinkModel {
+                jitter,
+                ..Default::default()
+            },
             seed,
             divergence_loss: 50.0, // classification losses; way past any sane value
             track_residue: true,
@@ -482,6 +516,7 @@ impl Workload {
             threads: args.usize_or("threads", 0),
             exchange,
             bucket_bytes: args.usize_or("bucket-bytes", 0),
+            staleness,
         };
 
         let mut init_params = match init_native {
@@ -699,6 +734,48 @@ mod tests {
             );
             let err = format!("{:#}", Workload::from_args(&args, "mnist_dnn").unwrap_err());
             assert!(err.contains("ps:<S>") && err.contains("hier:<G>"), "{topo}: {err}");
+        }
+    }
+
+    #[test]
+    fn staleness_and_jitter_cli_validate_at_parse_time() {
+        // satellite: the window knobs fail fast with the valid range in
+        // the error (the topology::build pattern), and wire through to
+        // TrainConfig/LinkModel when in range
+        let ok = Args::parse_from(
+            [
+                "--model", "mnist_dnn", "--backend", "native", "--learners", "4",
+                "--staleness", "2", "--jitter", "0.3",
+            ]
+            .map(String::from),
+            &[],
+        );
+        let w = Workload::from_args(&ok, "mnist_dnn").unwrap();
+        assert_eq!(w.cfg.staleness, 2);
+        assert!((w.cfg.link.jitter - 0.3).abs() < 1e-12);
+        // defaults: synchronous, no jitter
+        let none = Args::parse_from(
+            ["--model", "mnist_dnn", "--backend", "native"].map(String::from),
+            &[],
+        );
+        let w = Workload::from_args(&none, "mnist_dnn").unwrap();
+        assert_eq!(w.cfg.staleness, 0);
+        assert_eq!(w.cfg.link.jitter, 0.0);
+
+        for (flag, val, needle) in [
+            ("--staleness", "-1", "0 <= K <= 16"),
+            ("--staleness", "99", "0 <= K <= 16"),
+            ("--staleness", "two", "0 <= K <= 16"),
+            ("--jitter", "1.0", "0.0 <= jitter < 1.0"),
+            ("--jitter", "-0.5", "0.0 <= jitter < 1.0"),
+            ("--jitter", "lots", "0.0 <= jitter < 1.0"),
+        ] {
+            let args = Args::parse_from(
+                ["--model", "mnist_dnn", "--backend", "native", flag, val].map(String::from),
+                &[],
+            );
+            let err = format!("{:#}", Workload::from_args(&args, "mnist_dnn").unwrap_err());
+            assert!(err.contains(needle), "{flag} {val}: {err}");
         }
     }
 

@@ -78,7 +78,7 @@ fn cmd_train(args: &Args) -> i32 {
         }
     }
     println!(
-        "training {} [{}] | scheme {} | {} learners x batch {} | {} epochs | topology {} | exchange {}",
+        "training {} [{}] | scheme {} | {} learners x batch {} | {} epochs | topology {} | exchange {} | staleness {} | jitter {}",
         w.model,
         w.backend,
         w.cfg.compression.kind.name(),
@@ -86,7 +86,9 @@ fn cmd_train(args: &Args) -> i32 {
         w.cfg.batch_per_learner,
         w.cfg.epochs,
         w.cfg.topology,
-        w.cfg.exchange
+        w.cfg.exchange,
+        w.cfg.staleness,
+        w.cfg.link.jitter
     );
     match w.run_full() {
         Ok((rec, final_params)) => {
@@ -285,6 +287,19 @@ USAGE:
                                  with the remaining backward, the default;
                                  barrier = classic join-then-exchange round.
                                  Bit-identical results either way)
+                [--staleness K] (bounded-staleness window: learners run up
+                                 to K steps ahead of the applied-update
+                                 frontier, gradients computed at the K-back
+                                 param version. 0 = synchronous (default),
+                                 bit-identical to the classic engine;
+                                 results at fixed K are deterministic at
+                                 every thread count)
+                [--jitter F]    (deterministic per-learner compute jitter,
+                                 0.0 <= F < 1.0: each (learner, step) draws
+                                 up to +F extra compute plus occasional
+                                 straggler episodes from a seeded xorshift.
+                                 Shapes only the simulated timeline /
+                                 stall accounting — never the results)
   adacomp inspect [--artifacts DIR]
   adacomp schemes
 

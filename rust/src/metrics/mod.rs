@@ -187,6 +187,11 @@ impl RunRecord {
                     ("sim_barrier_s", json::num(self.fabric.sim_barrier_s)),
                     ("sim_dense_s", json::num(self.fabric.sim_dense_s)),
                     ("projected_speedup", json::num(self.fabric.projected_speedup())),
+                    ("stall_s", json::num(self.fabric.stall_s)),
+                    (
+                        "crit_share",
+                        json::arr(self.fabric.crit_share().into_iter().map(json::num).collect()),
+                    ),
                 ]),
             ),
         ])

@@ -1,80 +1,109 @@
-//! The synchronous data-parallel training engine — paper Algorithm 1.
+//! The data-parallel training engine — paper Algorithm 1 under a
+//! **bounded-staleness window scheduler**.
 //!
-//! Per step, every learner samples its shard minibatch, runs forward+backward
-//! (its own executor), and packs each layer through its compressor into its
-//! reduce-plan bucket cell; the engine reduces each bucket over the
-//! configured topology (`ps`, `ps:<S>`, `hier:<G>`, `ring`), unpacks into
-//! the dense mean gradient, and applies the central optimizer. All learners
-//! hold identical weights at every step — the paper's synchronous-SGD
-//! setting.
+//! Per step, every learner samples its shard minibatch, runs
+//! forward+backward (its own executor), and packs each layer through its
+//! compressor into its reduce-plan bucket cell; the engine reduces each
+//! bucket over the configured topology (`ps`, `ps:<S>`, `hier:<G>`,
+//! `ring`), unpacks into the dense mean gradient, and applies the central
+//! optimizer.
+//!
+//! **Staleness window** (`--staleness K`, default 0; DESIGN.md §Bounded
+//! staleness). Learners may run up to `K` steps ahead of the applied-update
+//! frontier: step `t`'s gradients are computed against the param version
+//! `θ_{max(0, t−K)}`, and a learner may start step `t` the moment update
+//! `t−K−1` has been applied — it never waits for the fleet's slowest
+//! member, only for the window. `K = 0` degenerates to the classic
+//! synchronous engine (gradients at `θ_t`, every step a barrier) and is
+//! **bit-identical to it by construction**: the same per-learner order of
+//! operations, the same learner-id reduce order, the same f64 loss sum
+//! (rust/tests/engine_native.rs::staleness_zero_matches_synchronous_bitwise).
+//! AdaComp's residue accumulation is exactly what makes `K > 0` safe: a
+//! gradient computed on slightly stale weights is a delayed update, and the
+//! paper's compression is robust to delayed residual application.
+//!
+//! In-flight steps from adjacent windows coexist through **per-(learner,
+//! bucket, step-slot) cells**: each learner owns a ring of `K + 1` cell
+//! rows (slot = step mod `K + 1`), and a slot is reused only after its
+//! step's update has been applied — the engine has emptied the cells and
+//! the compressor pool has recycled the packet buffers, so the windowed
+//! loop stays allocation-free in steady state (rust/tests/alloc_free.rs
+//! pins `K = 2`). Central weights live in a **param-version ring** of the
+//! same depth: `θ_v` occupies slot `v mod (K + 1)` and is overwritten by
+//! `θ_{v+K+1}` only after every step that reads `θ_v` has finished.
 //!
 //! **Reduce plan** (DESIGN.md §Topologies). The engine builds a
 //! [`ReducePlan`] once per run from the model layout: tiny layers (biases)
 //! coalesce into buckets — one wire message per bucket, one latency charge
 //! per bucket — and each bucket maps onto a **port** of the topology
-//! (`ps:<S>` exposes S shard ports). The plan, not the topology, defines
-//! the message structure, so bytes on the wire are identical across
-//! topologies and exchange modes. `cfg.bucket_bytes` sets the coalescing
-//! threshold (0 = auto: the link's latency·bandwidth product; 1 = per-layer
-//! messages).
+//! (`ps:<S>` exposes S shard ports). The engine exchanges a bucket's round
+//! as soon as all learners have published it **for that step**; because a
+//! learner publishes step `t` completely before touching step `t + 1`,
+//! cross-step readiness is monotone and rounds still run in step order.
 //!
-//! **Layer-streamed exchange pipeline** (`--exchange streamed`, the
-//! default). Gradients complete in reverse layer order during backward, and
-//! the runtime reports each layout layer the moment its span is final
-//! ([`Executor::step_streamed`]). Learners pack each layer immediately into
-//! its bucket cell; the moment a *bucket* — not a layer — is complete at
-//! every learner, the engine thread reduces it over the topology
-//! ([`Topology::exchange_bucket_into`](crate::comm::Topology)) while
-//! earlier layers are still in backward. The fabric places each bucket's
-//! round on its port's simulated timeline (rounds on disjoint ports
-//! overlap; rounds on one port serialize) so `FabricStats::sim_step_s()` /
-//! `projected_speedup()` report the wall-clock value of compression +
-//! overlap + sharding against the canonical dense baseline
-//! ([`ReducePlan::dense_round_s`]). `--exchange barrier` joins all learners
-//! first, then runs the same bucket rounds serialized after compute — same
-//! packets, same bytes, different placement.
+//! **Simulated timeline** (DESIGN.md §Bounded staleness). The fabric's
+//! step timeline is now continuous across steps: per-port completion times
+//! (`port_end`) carry over, and each round is placed from its
+//! [`RoundSched`] ready-time inputs — `max(bucket ready, port free)` —
+//! where a bucket's ready time is the max over learners of
+//! `start_l(t) + publish_offset_l · jitter_mult_l(t)`. Per-learner compute
+//! spans are measured wall time of that learner's own step (so the
+//! simulated fleet is N parallel learners at any local thread count),
+//! scaled by the deterministic straggler model
+//! ([`LinkModel::compute_mult`], `--jitter`). `FabricStats` additionally
+//! accounts `stall_s` (simulated learner idle time waiting on the window —
+//! the synchronous engine charges the full barrier wait here) and the
+//! per-learner critical-path share. The dense baseline stays the
+//! **synchronous coalesced round** ([`ReducePlan::dense_round_s`]):
+//! `projected_speedup` always measures against the same K = 0, no-overlap,
+//! no-compression "before" system.
 //!
 //! **Persistent worker pool.** When the backend's [`ExecutorFactory`]
 //! reports `parallel()`, the engine spawns `cfg.threads` workers **once per
-//! run** and parks them on a condvar between steps
-//! ([`pool::PoolCtl`](super::pool)). Each worker owns a contiguous chunk of
-//! learners; all cross-learner reductions stay on the engine thread.
+//! run**. Workers free-run their learner chunks through the step sequence
+//! and park only when a step would outrun the staleness window or the
+//! epoch frontier ([`pool::PoolCtl`](super::pool)); all cross-learner
+//! reductions stay on the engine thread.
 //!
-//! **Determinism contract** (DESIGN.md §Threading, §Topologies): results
-//! are **bit-identical** across every thread count, both exchange modes,
-//! *and every topology*, because packets are reduced per bucket in
-//! learner-id order (the simulated shard/rack/ring structure shapes only
-//! the timeline), packing happens in the same (streamed) order in both
-//! modes, and the f64 loss sum runs on the engine thread in learner-id
-//! order. (One residual cross-mode difference: on a *diverged* run the
+//! **Determinism contract** (DESIGN.md §Threading, §Topologies, §Bounded
+//! staleness): results are **bit-identical** across every thread count,
+//! both exchange modes, every topology, *and under any jitter*, at every
+//! fixed `K`: step `t`'s gradients depend only on `(θ_{max(0,t−K)}`, the
+//! learner's private RNG/residue state), packets are reduced per bucket in
+//! learner-id order, updates apply in step order on the engine thread, and
+//! jitter shapes only the simulated timeline — never gradients, losses, or
+//! bytes. (One residual cross-mode difference: on a *diverged* run the
 //! final aborted step's traffic appears in the streamed fabric stats but
 //! not the barrier ones — streamed has already exchanged by the time the
 //! loss is read, barrier skips that exchange. Losses and weights are
 //! unaffected.) Pinned by rust/tests/engine_native.rs::{
 //! parallel_matches_sequential_bitwise, streamed_matches_barrier_bitwise,
-//! topologies_bitwise_identical}.
+//! topologies_bitwise_identical, staleness_zero_matches_synchronous_bitwise,
+//! staleness_window_deterministic_under_jitter}.
 //!
 //! **Zero-alloc exchange.** Packet buffers recycle through the compressor
-//! pools, packets live in per-(learner, bucket) cells reused across steps,
-//! and the topologies reduce into a persistent [`Reduced`] — the bucketed
-//! cell→exchange→hand-back loop performs no steady-state heap allocation
-//! (rust/tests/alloc_free.rs).
+//! pools, packets live in the per-(learner, bucket, slot) cell rings
+//! reused across steps, and the topologies reduce into a persistent
+//! [`Reduced`] — the windowed cell→exchange→hand-back loop performs no
+//! steady-state heap allocation (rust/tests/alloc_free.rs).
 //!
 //! Learners are simulated in-process (DESIGN.md §Substitutions): the
-//! semantics (who computes what on which data, what crosses the wire) are
-//! exactly the distributed ones; the fabric charges every packet its real
-//! encoded byte size.
+//! semantics (who computes what on which data and which weights, what
+//! crosses the wire) are exactly the distributed ones; the fabric charges
+//! every packet its real encoded byte size.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, RwLock};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
 use super::eval::test_error;
-use super::learner::{cells_for_plan, BucketCell, Learner};
+use super::learner::{cell_ring_for_plan, BucketCell, Learner};
 use super::pool::PoolCtl;
-use crate::comm::{topology, Bucket, Fabric, LinkModel, Reduced, ReducePlan, Topology};
+use crate::comm::{
+    topology, Bucket, Fabric, LinkModel, Reduced, ReducePlan, RoundSched, Topology,
+};
 use crate::compress::{self, Packet};
 use crate::data::Dataset;
 use crate::metrics::{percentile, CompStat, EpochRecord, RunRecord};
@@ -107,6 +136,24 @@ impl ExchangeMode {
             ),
         }
     }
+}
+
+/// Upper bound on `--staleness`: the window holds `K + 1` param-vector
+/// copies and `K + 1` packet-cell rings per learner, so an absurd `K` is a
+/// config typo, not a schedule.
+pub const MAX_STALENESS: usize = 16;
+
+/// Fail fast on out-of-range window knobs, with the valid range in the
+/// error — the `topology::build` pattern: config JSON, the CLI/harness,
+/// and the engine itself all validate through here.
+pub fn validate_window(staleness: usize, jitter: f64) -> Result<()> {
+    if staleness > MAX_STALENESS {
+        bail!(
+            "staleness {staleness} out of range (valid: 0 <= K <= {MAX_STALENESS}; \
+             0 = synchronous)"
+        );
+    }
+    LinkModel::validate_jitter(jitter)
 }
 
 /// Everything that defines one training run.
@@ -157,6 +204,13 @@ pub struct TrainConfig {
     /// 1 = one message per layer (the pre-plan wire shape). Affects only
     /// message granularity, never results.
     pub bucket_bytes: usize,
+    /// Bounded-staleness window `K` (`--staleness`): learners may run up to
+    /// `K` steps ahead of the applied-update frontier, computing step `t`'s
+    /// gradients at `θ_{max(0, t−K)}`. 0 (the default) is the classic
+    /// synchronous engine, bit-identical to the pre-window behavior.
+    /// Results at a fixed `K` are deterministic across thread counts,
+    /// exchange modes, topologies, and jitter settings (see module docs).
+    pub staleness: usize,
 }
 
 impl Default for TrainConfig {
@@ -182,6 +236,7 @@ impl Default for TrainConfig {
             threads: 0,
             exchange: "streamed".into(),
             bucket_bytes: 0,
+            staleness: 0,
         }
     }
 }
@@ -199,39 +254,52 @@ pub struct Engine<'a> {
 
 /// Run-scoped state shared between the engine thread and the pool workers.
 /// Everything here is either lock-protected or atomically published; the
-/// pool's generation barrier guarantees workers only touch it inside their
-/// own step generation.
+/// staleness window guarantees a step slot is never touched by a worker
+/// while the engine still owns it (and vice versa).
 struct Shared<'a> {
     dataset: &'a dyn Dataset,
     layout: &'a Layout,
     /// The run's reduce plan: bucket coalescing + port mapping, built once.
     plan: ReducePlan,
-    /// Central weights. Workers hold the read lock for the learner phase;
-    /// the engine takes the write lock for the optimizer update (phases
-    /// never overlap, so neither side ever blocks).
-    params: RwLock<Vec<f32>>,
+    /// Param-version ring: slot `v % window` holds `θ_v` while any
+    /// in-flight step may still read it. Workers hold a read lock for the
+    /// duration of a learner step; the engine takes the write lock only
+    /// for the slot being overwritten (dead by the window invariant).
+    hist: Vec<RwLock<Vec<f32>>>,
     learners: Vec<Mutex<Learner>>,
-    /// Per-(learner, bucket) packet hand-off cells.
-    cells: Vec<Vec<BucketCell>>,
-    /// Learners that have completed bucket `bi` this step.
+    /// Per-(learner, step-slot, bucket) packet hand-off cells:
+    /// `cells[l][slot][bucket]`, slot = step % window.
+    cells: Vec<Vec<Vec<BucketCell>>>,
+    /// Window size `K + 1` (number of step slots / param versions).
+    window: usize,
+    /// The staleness bound `K` (step `t` reads `θ_{max(0, t−K)}`).
+    staleness: usize,
+    n_buckets: usize,
+    /// `ready[slot * n_buckets + b]`: learners that completed bucket `b`
+    /// of the slot's in-flight step.
     ready: Vec<AtomicUsize>,
-    /// Phase-start instant the pack-time ready stamps are measured from
-    /// (reset by the engine before each step).
-    phase_start: Mutex<Instant>,
-    /// Nanoseconds (since phase start, min 1) when bucket `bi`'s LAST
-    /// learner completed it — written by that learner at pack time, so the
-    /// overlap timeline reflects when the bucket became exchangeable, not
-    /// when the engine got around to observing it (identical semantics at
-    /// every thread count). 0 = not yet.
-    ready_at: Vec<AtomicU64>,
-    /// Wakes the engine's bucket scan when a bucket completes or a worker
-    /// checks in.
+    /// `finished[slot]`: learners fully done with the slot's step (loss and
+    /// compute span published).
+    finished: Vec<AtomicUsize>,
+    /// `pub_ns[(l * window + slot) * n_buckets + b]`: nanoseconds into
+    /// learner `l`'s own step when it published bucket `b` (min 1) — the
+    /// per-learner ready-time offsets the simulated timeline scales by the
+    /// jitter model. Written before the `ready` bump (Release) publishes it.
+    pub_ns: Vec<AtomicU64>,
+    /// `compute_ns[l * window + slot]`: learner `l`'s full measured step
+    /// span (min 1). Written before the `finished` bump publishes it.
+    compute_ns: Vec<AtomicU64>,
+    /// `loss_bits[l * window + slot]`: the step's loss (f32 bits), written
+    /// before the `finished` bump.
+    loss_bits: Vec<AtomicU32>,
+    /// Wakes the engine's bucket scan when a bucket completes, a learner
+    /// finishes a step, or a worker fails.
     event: ReadyEvent,
 }
 
-/// A sequence-counted wakeup for the engine's streamed bucket scan: bumped
-/// by workers on every bucket completion and phase check-in, waited on (with
-/// a short timeout as a missed-wakeup backstop) by the engine when a scan
+/// A sequence-counted wakeup for the engine's bucket scan: bumped by
+/// workers on every bucket completion and step check-in, waited on (with a
+/// short timeout as a missed-wakeup backstop) by the engine when a scan
 /// pass finds nothing ready — the engine blocks instead of busy-spinning a
 /// core away from the workers it is waiting on.
 #[derive(Default)]
@@ -269,51 +337,124 @@ impl ReadyEvent {
     }
 }
 
-/// Pool-worker body: park for the next step generation, run this worker's
-/// learner chunk (publish per-bucket packets + bump the ready counters),
-/// check in. Both exchange modes run the same streamed learner phase — the
-/// mode only changes when the engine consumes the buckets.
+/// Pool-worker body: advance this worker's learner chunk through the step
+/// sequence, parking only when the next step would outrun the staleness
+/// window or the epoch frontier. Both exchange modes run the same streamed
+/// learner phase — the mode only changes when the engine consumes the
+/// buckets.
 fn worker_loop(shared: &Shared<'_>, ctl: &PoolCtl, range: std::ops::Range<usize>) {
-    let mut gen = 0u64;
-    while let Some(g) = ctl.next_gen(gen) {
-        gen = g;
+    let mut step = 0u64;
+    while ctl.wait_runnable(step) {
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| -> Result<()> {
-            let params = shared.params.read().unwrap();
             for i in range.clone() {
-                let mut l = shared.learners[i].lock().unwrap();
-                l.step_streamed(
-                    &params,
-                    shared.dataset,
-                    shared.layout,
-                    &shared.plan,
-                    &shared.cells[i],
-                    &mut |bi| shared.bucket_packed(bi),
-                )?;
+                shared.run_learner_step(i, step as usize, None)?;
             }
             Ok(())
         }));
-        ctl.report(match res {
-            Ok(Ok(())) => None,
-            Ok(Err(e)) => Some(format!("{e:#}")),
-            Err(p) => Some(panic_message(p.as_ref())),
-        });
-        // wake the engine's bucket scan so it can observe all_done (matters
-        // when a failed worker leaves buckets that will never become ready)
-        shared.event.bump();
+        match res {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                ctl.fail(format!("{e:#}"));
+                shared.event.bump();
+                return;
+            }
+            Err(p) => {
+                ctl.fail(panic_message(p.as_ref()));
+                shared.event.bump();
+                return;
+            }
+        }
+        step += 1;
     }
 }
 
 impl Shared<'_> {
-    /// Bucket-ready notification target (both sequential and pooled): bump
-    /// bucket `bi`'s counter; the learner completing the count records the
-    /// pack-time ready stamp and wakes the engine.
-    fn bucket_packed(&self, bi: usize) {
-        let c = self.ready[bi].fetch_add(1, Ordering::Release) + 1;
+    /// Param version step `t` reads: `θ_{max(0, t−K)}` — the freshest
+    /// version the window deterministically guarantees to exist.
+    fn params_version(&self, step: usize) -> usize {
+        step.saturating_sub(self.staleness)
+    }
+
+    /// One full learner step for learner `i` at global step `step`: read
+    /// the window's param version, run the streamed phase into the step's
+    /// slot cells, publish per-bucket ready offsets and the step's
+    /// loss/compute span. `exec` = the engine's shared local executor on
+    /// the sequential path, `None` = the learner's own (worker path).
+    fn run_learner_step(
+        &self,
+        i: usize,
+        step: usize,
+        exec: Option<&mut dyn Executor>,
+    ) -> Result<()> {
+        let w = self.window;
+        let slot = step % w;
+        let params = self.hist[self.params_version(step) % w].read().unwrap();
+        let mut l = self.learners[i].lock().unwrap();
+        let t0 = Instant::now();
+        let mut on_bucket = |bi: usize| self.bucket_packed(i, slot, bi, &t0);
+        match exec {
+            Some(e) => l.step_streamed_with(
+                e,
+                &params,
+                self.dataset,
+                self.layout,
+                &self.plan,
+                &self.cells[i][slot],
+                &mut on_bucket,
+            )?,
+            None => l.step_streamed(
+                &params,
+                self.dataset,
+                self.layout,
+                &self.plan,
+                &self.cells[i][slot],
+                &mut on_bucket,
+            )?,
+        }
+        let span = (t0.elapsed().as_nanos() as u64).max(1);
+        let loss = l.loss;
+        self.compute_ns[i * w + slot].store(span, Ordering::Relaxed);
+        self.loss_bits[i * w + slot].store(loss.to_bits(), Ordering::Relaxed);
+        drop(l);
+        drop(params);
+        // the Release bump publishes the stores above to the engine's
+        // Acquire load of `finished`
+        self.finished[slot].fetch_add(1, Ordering::Release);
+        self.event.bump();
+        Ok(())
+    }
+
+    /// Bucket-ready notification (both sequential and pooled): record this
+    /// learner's publish offset, bump the bucket's counter; the completing
+    /// learner wakes the engine.
+    fn bucket_packed(&self, l: usize, slot: usize, bi: usize, t0: &Instant) {
+        let ns = (t0.elapsed().as_nanos() as u64).max(1);
+        self.pub_ns[(l * self.window + slot) * self.n_buckets + bi].store(ns, Ordering::Relaxed);
+        let c = self.ready[slot * self.n_buckets + bi].fetch_add(1, Ordering::Release) + 1;
         if c == self.learners.len() {
-            let ns = self.phase_start.lock().unwrap().elapsed().as_nanos() as u64;
-            self.ready_at[bi].store(ns.max(1), Ordering::Release);
             self.event.bump();
         }
+    }
+
+    /// Simulated time bucket `bi` of the slot's step became exchangeable:
+    /// max over learners of `start_l + publish_offset_l · jitter_mult_l`.
+    /// Only valid once the bucket's ready counter reached `n` (the Acquire
+    /// load of that counter publishes every learner's offset store).
+    fn bucket_ready_s(&self, slot: usize, bi: usize, start: &[f64], jmult: &[f64]) -> f64 {
+        let mut r = 0.0f64;
+        for (l, (&s, &jm)) in start.iter().zip(jmult.iter()).enumerate() {
+            let ns = self.pub_ns[(l * self.window + slot) * self.n_buckets + bi]
+                .load(Ordering::Relaxed);
+            r = r.max(s + ns as f64 * 1e-9 * jm);
+        }
+        r
+    }
+
+    /// Learner `l`'s simulated compute span for the slot's step (measured
+    /// wall span of its own fwd/bwd+pack, scaled by the jitter model).
+    /// Only valid once `finished[slot]` reached `n`.
+    fn dur_s(&self, slot: usize, l: usize, jm: f64) -> f64 {
+        self.compute_ns[l * self.window + slot].load(Ordering::Relaxed) as f64 * 1e-9 * jm
     }
 }
 
@@ -392,9 +533,10 @@ impl<'a> Engine<'a> {
         let dataset = self.dataset;
         let factory = self.factory;
 
-        // Validate every by-name knob up front so a typo'd config fails with
-        // the valid list, not a mid-run panic.
+        // Validate every by-name/by-range knob up front so a typo'd config
+        // fails with the valid list, not a mid-run panic.
         let mode = ExchangeMode::parse(&cfg.exchange)?;
+        validate_window(cfg.staleness, cfg.link.jitter)?;
         let optimizer = optim::build(&cfg.optimizer, init_params.len(), cfg.momentum)
             .ok_or_else(|| {
                 anyhow!(
@@ -405,6 +547,7 @@ impl<'a> Engine<'a> {
         let topo = topology::build(&cfg.topology, cfg.n_learners)?;
         let threads = self.resolve_threads(cfg);
         let parallel = threads > 1;
+        let window = cfg.staleness + 1;
 
         // The run's reduce plan: bucket coalescing + port partition, built
         // once from the layout (DESIGN.md §Topologies).
@@ -437,32 +580,38 @@ impl<'a> Engine<'a> {
             })
             .collect::<Result<Vec<_>>>()?;
 
-        let cells: Vec<Vec<BucketCell>> =
-            (0..cfg.n_learners).map(|_| cells_for_plan(&plan)).collect();
+        let cells: Vec<Vec<Vec<BucketCell>>> = (0..cfg.n_learners)
+            .map(|_| cell_ring_for_plan(&plan, window))
+            .collect();
         let shared = Shared {
             dataset,
             layout,
             plan,
-            params: RwLock::new(init_params.to_vec()),
+            hist: (0..window).map(|_| RwLock::new(init_params.to_vec())).collect(),
             learners,
             cells,
-            ready: (0..num_buckets).map(|_| AtomicUsize::new(0)).collect(),
-            phase_start: Mutex::new(Instant::now()),
-            ready_at: (0..num_buckets).map(|_| AtomicU64::new(0)).collect(),
+            window,
+            staleness: cfg.staleness,
+            n_buckets: num_buckets,
+            ready: (0..window * num_buckets).map(|_| AtomicUsize::new(0)).collect(),
+            finished: (0..window).map(|_| AtomicUsize::new(0)).collect(),
+            pub_ns: (0..cfg.n_learners * window * num_buckets)
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            compute_ns: (0..cfg.n_learners * window).map(|_| AtomicU64::new(0)).collect(),
+            loss_bits: (0..cfg.n_learners * window).map(|_| AtomicU32::new(0)).collect(),
             event: ReadyEvent::default(),
         };
 
-        let record = if parallel {
-            let ctl = PoolCtl::new();
+        let (record, final_slot) = if parallel {
+            let ctl = PoolCtl::new(cfg.staleness);
             std::thread::scope(|scope| {
                 let chunk = cfg.n_learners.div_ceil(threads);
-                let mut workers = 0usize;
                 let mut start = 0usize;
                 while start < cfg.n_learners {
                     let end = (start + chunk).min(cfg.n_learners);
                     let (sh, c) = (&shared, &ctl);
                     scope.spawn(move || worker_loop(sh, c, start..end));
-                    workers += 1;
                     start = end;
                 }
                 // Shut the pool down however run_loop exits (ok, error, or
@@ -475,7 +624,7 @@ impl<'a> Engine<'a> {
                     dataset,
                     local,
                     &shared,
-                    Some((&ctl, workers)),
+                    Some(&ctl),
                     mode,
                     topo,
                     optimizer,
@@ -488,7 +637,8 @@ impl<'a> Engine<'a> {
             )?
         };
 
-        let params = shared.params.into_inner().unwrap();
+        let mut hist = shared.hist;
+        let params = hist.swap_remove(final_slot).into_inner().unwrap();
         Ok((record, params))
     }
 }
@@ -510,18 +660,21 @@ fn tally_packet(
     comp_all.add(p);
 }
 
-/// Take one ready bucket out of every learner's cell (learner-id order —
-/// the determinism contract), fold its packets into the compression stats,
-/// reduce it over the topology, and hand the spent packets back for
-/// next-step recycling. Allocation-free in steady state (`gather` reuses
+/// Take one ready bucket out of every learner's slot cell (learner-id
+/// order — the determinism contract), fold its packets into the
+/// compression stats, reduce it over the topology at the given timeline
+/// placement, and hand the spent packets back for recycling when the slot
+/// comes around again. Allocation-free in steady state (`gather` reuses
 /// its per-learner vecs).
 #[allow(clippy::too_many_arguments)]
 fn exchange_one_bucket(
     shared: &Shared<'_>,
+    slot: usize,
     layout: &Layout,
     layer_lens: &[usize],
     bucket: &Bucket,
     gather: &mut [Vec<Packet>],
+    sched: RoundSched,
     topo: &mut dyn Topology,
     fabric: &mut Fabric,
     reduced: &mut Reduced,
@@ -530,10 +683,10 @@ fn exchange_one_bucket(
     comp_all: &mut CompStat,
 ) -> crate::comm::RoundCost {
     let bi = bucket.id;
-    for (l, cells) in shared.cells.iter().enumerate() {
-        let mut cell = cells[bi].lock();
-        for slot in cell.slots.iter_mut() {
-            gather[l].push(slot.take().expect("ready bucket is missing a packet"));
+    for (l, ring) in shared.cells.iter().enumerate() {
+        let mut cell = ring[slot][bi].lock();
+        for s in cell.slots.iter_mut() {
+            gather[l].push(s.take().expect("ready bucket is missing a packet"));
         }
     }
     for packets in gather.iter() {
@@ -541,23 +694,44 @@ fn exchange_one_bucket(
             tally_packet(layout, p, comp_conv, comp_fc, comp_all);
         }
     }
-    let cost = topo.exchange_bucket_into(bucket, &*gather, layer_lens, fabric, reduced);
-    for (l, cells) in shared.cells.iter().enumerate() {
-        let mut cell = cells[bi].lock();
-        for (slot, p) in cell.slots.iter_mut().zip(gather[l].drain(..)) {
-            *slot = Some(p);
+    let cost = topo.exchange_bucket_into(bucket, &*gather, layer_lens, sched, fabric, reduced);
+    for (l, ring) in shared.cells.iter().enumerate() {
+        let mut cell = ring[slot][bi].lock();
+        for (s, p) in cell.slots.iter_mut().zip(gather[l].drain(..)) {
+            *s = Some(p);
         }
     }
     cost
 }
 
+/// Engine-side wait for an atomic counter to reach `n`, surfacing worker
+/// failures instead of deadlocking on a dead worker.
+fn wait_counter(
+    shared: &Shared<'_>,
+    pool: Option<&PoolCtl>,
+    counter: &AtomicUsize,
+    n: usize,
+) -> Result<()> {
+    let mut event_seq = shared.event.current();
+    while counter.load(Ordering::Acquire) < n {
+        if let Some(ctl) = pool {
+            if let Some(e) = ctl.failure() {
+                bail!("learner phase failed: {e}");
+            }
+        }
+        event_seq = shared.event.wait_past(event_seq);
+    }
+    Ok(())
+}
+
 /// The training loop proper, shared by all (sequential/pool ×
-/// barrier/streamed × topology) combinations. `pool` carries the step
-/// barrier and the worker count when a persistent pool is attached; `None`
-/// runs every learner on the engine thread through `local`. Both modes run
-/// the same streamed learner phase and the same per-bucket rounds — the
-/// mode decides *when* the engine consumes buckets (mid-backward vs after
-/// the join) and how the rounds land on the simulated timeline.
+/// barrier/streamed × topology × staleness) combinations. `pool` carries
+/// the window controller when a persistent pool is attached; `None` runs
+/// every learner on the engine thread through `local`. Both modes run the
+/// same streamed learner phase and the same per-bucket rounds — the mode
+/// decides *when* the engine consumes buckets (mid-backward vs after the
+/// step join) and how the rounds land on the simulated timeline. Returns
+/// the record plus the param-ring slot holding the final weights.
 #[allow(clippy::too_many_arguments)]
 fn run_loop(
     cfg: &TrainConfig,
@@ -565,15 +739,17 @@ fn run_loop(
     dataset: &dyn Dataset,
     mut local: Box<dyn Executor>,
     shared: &Shared<'_>,
-    pool: Option<(&PoolCtl, usize)>,
+    pool: Option<&PoolCtl>,
     mode: ExchangeMode,
     mut topo: Box<dyn Topology>,
     mut optimizer: Box<dyn Optimizer>,
     mut hook: Option<&mut EpochHook<'_>>,
-) -> Result<RunRecord> {
+) -> Result<(RunRecord, usize)> {
     let n = cfg.n_learners;
     let plan = &shared.plan;
-    let num_buckets = plan.num_buckets();
+    let nb = plan.num_buckets();
+    let w = shared.window;
+    let k = shared.staleness;
     let layer_lens = layout.layer_lens();
     let inv_learners = 1.0f32 / n as f32;
     let streamed = mode == ExchangeMode::Streamed;
@@ -601,19 +777,28 @@ fn run_loop(
     let mut reduced = Reduced::new(&layer_lens);
     // The no-compression baseline: one coalesced whole-model dense round,
     // fixed for the run and identical across topologies, exchange modes,
-    // and bucket thresholds — `projected_speedup()` always measures against
-    // the same "before" system (never inflated by message-granularity
-    // latency or deflated by sharding).
+    // bucket thresholds AND staleness windows — `projected_speedup()`
+    // always measures against the same synchronous "before" system.
     let dense_round_s = plan.dense_round_s(&layer_lens, n, &cfg.link);
     // Engine scratch, reused every step (no allocation in the steady
-    // state): per-learner bucket gathers, per-bucket done flags,
-    // all-learners-ready timestamps, and per-port completion times.
-    let max_bucket = plan.buckets.iter().map(|b| b.num_layers()).max().unwrap_or(0);
-    let mut gather: Vec<Vec<Packet>> =
-        (0..n).map(|_| Vec::with_capacity(max_bucket)).collect();
-    let mut done_flags = vec![false; num_buckets];
-    let mut stamps = vec![-1.0f64; num_buckets];
+    // state): per-learner bucket gathers, per-bucket done flags, and the
+    // continuous per-port timeline.
+    let mut gather: Vec<Vec<Packet>> = (0..n)
+        .map(|_| Vec::with_capacity(plan.max_bucket_layers()))
+        .collect();
+    let mut done_flags = vec![false; nb];
     let mut port_end = vec![0.0f64; topo.ports()];
+    // Windowed-timeline state: per-learner availability/start times and
+    // jitter draws for the step in flight, plus the ring of applied-update
+    // frontier times (apply_ring[s % (K+2)] = when update s landed; steps
+    // t−K−1..t are alive at once).
+    let mut avail = vec![0.0f64; n];
+    let mut start = vec![0.0f64; n];
+    let mut jmult = vec![1.0f64; n];
+    let mut stalls = vec![0.0f64; n];
+    let mut apply_ring = vec![0.0f64; k + 2];
+    let mut t = 0usize; // global step index (continuous across epochs)
+    let mut cur_slot = 0usize; // param-ring slot of the newest version
 
     'epochs: for epoch in 0..cfg.epochs {
         let sw = Stopwatch::start();
@@ -624,71 +809,72 @@ fn run_loop(
         let mut comp_fc = CompStat::default();
         let mut comp_all = CompStat::default();
 
-        for _step in 0..steps_per_epoch {
-            // --- learner phase (identical in both modes) -----------------
-            for r in &shared.ready {
-                r.store(0, Ordering::Relaxed);
-            }
-            for r in &shared.ready_at {
-                r.store(0, Ordering::Relaxed);
-            }
-            done_flags.iter_mut().for_each(|d| *d = false);
-            port_end.iter_mut().for_each(|p| *p = 0.0);
-            *shared.phase_start.lock().unwrap() = Instant::now();
-            let sw_phase = Stopwatch::start();
+        // Open this epoch's steps to the workers. The frontier never
+        // crosses an epoch boundary, so evaluation and the epoch hook read
+        // quiescent learner state even at K > 0.
+        let epoch_limit = t + steps_per_epoch;
+        if let Some(ctl) = pool {
+            ctl.open(epoch_limit as u64);
+        }
 
-            if let Some((ctl, _)) = pool {
-                ctl.kick();
-            } else {
-                // Sequential learner phase on the engine thread; ready
-                // stamps are taken at pack time (same callback as the
-                // pooled path) so the overlap timeline reflects when each
-                // bucket *became* exchangeable at any thread count.
+        for _step in 0..steps_per_epoch {
+            let slot = t % w;
+
+            // Sequential fallback: drive every learner through the shared
+            // local executor for this step (same per-learner order of
+            // operations as the pooled path — bit-identical results).
+            if pool.is_none() {
                 for i in 0..n {
-                    let params = shared.params.read().unwrap();
-                    let mut l = shared.learners[i].lock().unwrap();
-                    l.step_streamed_with(
-                        local.as_mut(),
-                        &params,
-                        dataset,
-                        layout,
-                        plan,
-                        &shared.cells[i],
-                        &mut |bi| shared.bucket_packed(bi),
-                    )?;
+                    shared.run_learner_step(i, t, Some(local.as_mut()))?;
                 }
             }
+
+            // --- step entry: jitter draws + window-stall accounting ------
+            let frontier = if t > k { apply_ring[(t - k - 1) % (k + 2)] } else { 0.0 };
+            for l in 0..n {
+                jmult[l] = cfg.link.compute_mult(cfg.seed, l, t as u64);
+                let s = avail[l].max(frontier);
+                stalls[l] = s - avail[l];
+                start[l] = s;
+            }
+            done_flags.iter_mut().for_each(|d| *d = false);
+            let mut comm_serial = 0.0f64;
+            let mut step_comm_end = 0.0f64;
 
             if streamed {
                 // --- streamed: consume buckets as they complete ----------
                 // (reverse layer order is the natural completion order);
                 // reduce each over the topology while the rest of backward
-                // is still running, pipelining rounds across the
-                // topology's ports.
-                let mut pending = num_buckets;
-                let mut comm_serial = 0.0f64;
-                let mut saw_done = pool.is_none();
+                // — and, with staleness, later steps' compute — is still
+                // running, pipelining rounds across the topology's ports.
+                let mut pending = nb;
                 let mut event_seq = shared.event.current();
+                // set once the step has fully finished at every learner: a
+                // full scan after that with buckets still unready is a
+                // streaming-contract violation (an executor published fewer
+                // layers than the layout), not a slow worker — bail instead
+                // of spinning forever
+                let mut saw_finished = false;
                 loop {
                     let mut progressed = false;
                     for (bi, bucket) in plan.buckets.iter().enumerate() {
-                        if done_flags[bi] || shared.ready[bi].load(Ordering::Acquire) != n {
+                        if done_flags[bi]
+                            || shared.ready[slot * nb + bi].load(Ordering::Acquire) != n
+                        {
                             continue;
                         }
-                        // the stamp store trails the final counter bump by
-                        // nanoseconds; spin past that publish window
-                        let mut ns = shared.ready_at[bi].load(Ordering::Acquire);
-                        while ns == 0 {
-                            std::hint::spin_loop();
-                            ns = shared.ready_at[bi].load(Ordering::Acquire);
-                        }
-                        stamps[bi] = ns as f64 * 1e-9;
+                        let sched = RoundSched {
+                            ready_s: shared.bucket_ready_s(slot, bi, &start, &jmult),
+                            port_free_s: port_end[bucket.port],
+                        };
                         let cost = exchange_one_bucket(
                             shared,
+                            slot,
                             layout,
                             &layer_lens,
                             bucket,
                             &mut gather,
+                            sched,
                             topo.as_mut(),
                             &mut fabric,
                             &mut reduced,
@@ -699,8 +885,8 @@ fn run_loop(
                         comm_serial += cost.comm_s;
                         // rounds on one port serialize; disjoint ports
                         // overlap — the sharded-PS win
-                        let port = bucket.port;
-                        port_end[port] = port_end[port].max(stamps[bi]) + cost.comm_s;
+                        port_end[bucket.port] = cost.end_s;
+                        step_comm_end = step_comm_end.max(cost.end_s);
                         done_flags[bi] = true;
                         pending -= 1;
                         progressed = true;
@@ -709,72 +895,59 @@ fn run_loop(
                         break;
                     }
                     if !progressed {
-                        if saw_done {
-                            // a full scan after every worker checked in
-                            // found nothing: a worker failed mid-phase
-                            // (surfaced by wait_done below)
-                            break;
+                        if let Some(ctl) = pool {
+                            if let Some(e) = ctl.failure() {
+                                bail!("learner phase failed: {e}");
+                            }
                         }
-                        // Idle only: sample the pool barrier, then block on
-                        // the ready event (short-timeout backstop) instead
-                        // of busy-spinning a core away from the workers.
-                        // While buckets are flowing, the scan touches
-                        // nothing but atomics.
-                        saw_done = match pool {
-                            Some((ctl, workers)) => ctl.all_done(workers),
-                            None => true,
-                        };
-                        event_seq = shared.event.wait_past(event_seq);
+                        if saw_finished {
+                            bail!(
+                                "streamed exchange ended with {pending} buckets never ready"
+                            );
+                        }
+                        saw_finished = shared.finished[slot].load(Ordering::Acquire) == n;
+                        if !saw_finished {
+                            event_seq = shared.event.wait_past(event_seq);
+                        }
                     }
                 }
-                if let Some((ctl, workers)) = pool {
-                    ctl.wait_done(workers)?;
-                }
-                if pending > 0 {
-                    bail!("streamed exchange ended with {pending} buckets never ready");
-                }
-                // compute span = last bucket completion; fold the step onto
-                // the simulated timeline (overlap vs barrier vs dense)
-                let compute_s = stamps.iter().cloned().fold(0.0f64, f64::max);
-                let comm_end = port_end.iter().cloned().fold(0.0f64, f64::max);
-                fabric.record_step(compute_s, comm_serial, comm_end, dense_round_s);
+            }
+            // join the step: streamed after the scan (the loss/compute
+            // spans publish with `finished`), barrier before anything else
+            wait_counter(shared, pool, &shared.finished[slot], n)?;
 
-                // loss accounting on the engine thread, learner-id order
-                // (the f64 sum is order-sensitive)
-                for cell in &shared.learners {
-                    let l = cell.lock().unwrap();
-                    loss_sum += l.loss as f64;
-                    nloss += 1;
-                    if !l.loss.is_finite() || l.loss as f64 > cfg.divergence_loss {
-                        record.diverged = true;
-                    }
+            // loss accounting on the engine thread, learner-id order (the
+            // f64 sum is order-sensitive)
+            for l in 0..n {
+                let loss = f32::from_bits(shared.loss_bits[l * w + slot].load(Ordering::Relaxed));
+                loss_sum += loss as f64;
+                nloss += 1;
+                if !loss.is_finite() || loss as f64 > cfg.divergence_loss {
+                    record.diverged = true;
                 }
-            } else {
-                // --- barrier: join all learners, then the same bucket
-                // rounds serialized after compute ------------------------
-                if let Some((ctl, workers)) = pool {
-                    ctl.wait_done(workers)?;
-                }
-                let compute_s = sw_phase.secs();
+            }
 
-                for cell in &shared.learners {
-                    let l = cell.lock().unwrap();
-                    loss_sum += l.loss as f64;
-                    nloss += 1;
-                    if !l.loss.is_finite() || l.loss as f64 > cfg.divergence_loss {
-                        record.diverged = true;
-                    }
-                }
-
+            if !streamed {
                 if !record.diverged {
-                    let mut comm_serial = 0.0f64;
+                    // the same bucket rounds, serialized after the join (no
+                    // port-overlap credit — the classic placement)
+                    let join_s = (0..n)
+                        .map(|l| start[l] + shared.dur_s(slot, l, jmult[l]))
+                        .fold(0.0f64, f64::max);
+                    let mut cursor = join_s;
                     for bucket in &plan.buckets {
+                        let sched = RoundSched {
+                            ready_s: cursor,
+                            port_free_s: port_end[bucket.port],
+                        };
                         let cost = exchange_one_bucket(
                             shared,
+                            slot,
                             layout,
                             &layer_lens,
                             bucket,
                             &mut gather,
+                            sched,
                             topo.as_mut(),
                             &mut fabric,
                             &mut reduced,
@@ -783,21 +956,19 @@ fn run_loop(
                             &mut comp_all,
                         );
                         comm_serial += cost.comm_s;
+                        cursor = cost.end_s;
+                        port_end[bucket.port] = cost.end_s;
                     }
-                    fabric.record_step(
-                        compute_s,
-                        comm_serial,
-                        compute_s + comm_serial,
-                        dense_round_s,
-                    );
+                    step_comm_end = cursor;
                 } else {
-                    // diverged: the final step's packets were packed but will
-                    // not cross the wire — still fold them into the epoch's
-                    // compression stats so the partial-epoch report matches
-                    // the streamed mode's accounting (only fabric traffic
-                    // differs across modes on a diverged run; module docs)
-                    for cells in &shared.cells {
-                        for cell in cells.iter() {
+                    // diverged: the final step's packets were packed but
+                    // will not cross the wire — still fold them into the
+                    // epoch's compression stats so the partial-epoch report
+                    // matches the streamed mode's accounting (only fabric
+                    // traffic differs across modes on a diverged run;
+                    // module docs)
+                    for ring in &shared.cells {
+                        for cell in ring[slot].iter() {
                             let cell = cell.lock();
                             for p in cell.slots.iter().flatten() {
                                 tally_packet(
@@ -809,10 +980,49 @@ fn run_loop(
                 }
             }
 
+            // --- fold the step onto the simulated timeline ---------------
+            let mut compute_span = 0.0f64;
+            let mut crit = 0usize;
+            let mut crit_end = f64::MIN;
+            for l in 0..n {
+                let dur = shared.dur_s(slot, l, jmult[l]);
+                compute_span = compute_span.max(dur);
+                let end = start[l] + dur;
+                avail[l] = end;
+                if end > crit_end {
+                    crit_end = end;
+                    crit = l;
+                }
+            }
+            if !record.diverged || streamed {
+                let prev_apply = if t > 0 { apply_ring[(t - 1) % (k + 2)] } else { 0.0 };
+                let apply_t = prev_apply.max(step_comm_end).max(crit_end);
+                apply_ring[t % (k + 2)] = apply_t;
+                fabric.record_step(compute_span, comm_serial, apply_t - prev_apply, dense_round_s);
+                fabric.record_stall(&stalls, crit);
+            }
+
             if record.diverged {
+                // Quiesce the window before snapshotting learner state:
+                // with K > 0, steps t+1..=hi are already runnable (the
+                // frontier stays at t), so pool workers will execute them
+                // regardless of the abort. Drain them on both paths —
+                // waiting on the pool, running them inline sequentially —
+                // so the partial-epoch residue/gradient snapshot is taken
+                // at the same deterministic point (after step `hi`) for
+                // every thread count.
+                let hi = (t + k).min(epoch_limit - 1);
+                for s in (t + 1)..=hi {
+                    if pool.is_none() {
+                        for i in 0..n {
+                            shared.run_learner_step(i, s, Some(local.as_mut()))?;
+                        }
+                    }
+                    wait_counter(shared, pool, &shared.finished[s % w], n)?;
+                }
                 // record the partial epoch and stop (no central update)
                 let (err, tloss) = {
-                    let params = shared.params.read().unwrap();
+                    let params = shared.hist[cur_slot].read().unwrap();
                     test_error(local.as_mut(), dataset, &params).unwrap_or((100.0, f64::NAN))
                 };
                 let l0 = shared.learners[0].lock().unwrap();
@@ -824,6 +1034,7 @@ fn run_loop(
             }
 
             // central update: unpack the dense mean, clip, optimizer step
+            // into the next param-ring slot (dead by the window invariant)
             for (li, sum) in reduced.sums.iter().enumerate() {
                 let dst = layout.view_mut(li, &mut grad_mean);
                 for (d, &s) in dst.iter_mut().zip(sum.iter()) {
@@ -837,8 +1048,30 @@ fn run_loop(
                     grad_mean.iter_mut().for_each(|g| *g *= s);
                 }
             }
-            let mut params = shared.params.write().unwrap();
-            optimizer.step(&mut params, &grad_mean, lr);
+            let next_slot = (t + 1) % w;
+            if w == 1 {
+                let mut params = shared.hist[0].write().unwrap();
+                optimizer.step(&mut params, &grad_mean, lr);
+            } else {
+                let cur = shared.hist[cur_slot].read().unwrap();
+                let mut next = shared.hist[next_slot].write().unwrap();
+                next.copy_from_slice(&cur);
+                drop(cur);
+                optimizer.step(&mut next, &grad_mean, lr);
+            }
+            cur_slot = next_slot;
+
+            // hand the slot back to the window: reset its counters, then
+            // publish the applied update (the PoolCtl mutex orders the
+            // resets before any worker can re-enter the slot)
+            for b in 0..nb {
+                shared.ready[slot * nb + b].store(0, Ordering::Relaxed);
+            }
+            shared.finished[slot].store(0, Ordering::Relaxed);
+            t += 1;
+            if let Some(ctl) = pool {
+                ctl.applied(t as u64);
+            }
         }
 
         if let Some(h) = hook.as_deref_mut() {
@@ -847,7 +1080,7 @@ fn run_loop(
         }
 
         let (err, tloss) = {
-            let params = shared.params.read().unwrap();
+            let params = shared.hist[cur_slot].read().unwrap();
             test_error(local.as_mut(), dataset, &params)?
         };
         let l0 = shared.learners[0].lock().unwrap();
@@ -858,7 +1091,7 @@ fn run_loop(
     }
 
     record.fabric = fabric.stats.clone();
-    Ok(record)
+    Ok((record, cur_slot))
 }
 
 #[allow(clippy::too_many_arguments)]

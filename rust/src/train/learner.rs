@@ -62,6 +62,18 @@ pub fn cells_for_plan(plan: &ReducePlan) -> Vec<BucketCell> {
         .collect()
 }
 
+/// Build one learner's **slot ring** for the bounded-staleness window:
+/// `window` independent cell rows (`ring[slot][bucket]`, slot = step %
+/// window), so packets from up to `window = K + 1` in-flight steps coexist
+/// without aliasing. Step t's cells are reused by step t + window only
+/// after update t has been applied — the engine has emptied them and the
+/// learner's compressor pool has recycled the buffers, so the ring never
+/// allocates in steady state (rust/tests/alloc_free.rs pins K = 2).
+pub fn cell_ring_for_plan(plan: &ReducePlan, window: usize) -> Vec<Vec<BucketCell>> {
+    assert!(window >= 1);
+    (0..window).map(|_| cells_for_plan(plan)).collect()
+}
+
 pub struct Learner {
     pub id: usize,
     pub shard: Shard,

@@ -6,4 +6,4 @@ pub mod eval;
 pub mod learner;
 pub mod pool;
 
-pub use engine::{Engine, ExchangeMode, TrainConfig};
+pub use engine::{validate_window, Engine, ExchangeMode, TrainConfig, MAX_STALENESS};

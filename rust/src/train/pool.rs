@@ -1,177 +1,220 @@
-//! Persistent worker-pool coordination for the engine's learner phase.
+//! Bounded-staleness window coordination for the engine's worker pool.
 //!
-//! The engine used to spawn fresh `std::thread::scope` workers every step
-//! (the documented follow-up in engine.rs); a pool now spawns once per run
-//! and parks between steps on a condvar, so the per-step cost is one
-//! notify + one wake instead of N thread spawns/joins.
+//! The engine used to rendezvous with its workers on a per-step generation
+//! barrier (kick → run chunk → check in): every learner's last bucket had
+//! to land before any learner could start step t+1, so one slow learner
+//! stalled the whole fleet. [`PoolCtl`] replaces the barrier with the
+//! **staleness window**: workers free-run their learner chunks through the
+//! step sequence and only block when a step would outrun the window.
 //!
-//! [`PoolCtl`] is the generation-counted step barrier the engine and the
-//! workers rendezvous on:
+//! * worker: [`wait_runnable(s)`](PoolCtl::wait_runnable) parks until step
+//!   `s` is inside the window — the engine has applied at least `s − K`
+//!   updates (the param version θ_{s−K} that step `s` reads exists) and
+//!   the epoch frontier has been opened past `s` — or the run is over
+//!   (shutdown / a sibling worker failed).
+//! * engine: [`open`](PoolCtl::open) raises the epoch frontier (workers
+//!   never run ahead across an epoch boundary — evaluation and the epoch
+//!   hook read quiescent learner state), [`applied`](PoolCtl::applied)
+//!   publishes each central update (waking workers whose next step just
+//!   entered the window), [`fail`](PoolCtl::fail) /
+//!   [`failure`](PoolCtl::failure) carry the first worker error to the
+//!   engine instead of unwinding through the pool, and
+//!   [`shutdown`](PoolCtl::shutdown) ends the run.
 //!
-//! * engine: [`kick`](PoolCtl::kick) publishes a new step generation, then
-//!   either blocks in [`wait_done`](PoolCtl::wait_done) (barrier exchange)
-//!   or polls [`all_done`](PoolCtl::all_done) while it consumes per-layer
-//!   grad-ready notifications (streamed exchange).
-//! * worker: [`next_gen`](PoolCtl::next_gen) parks until the generation
-//!   advances (or shutdown), runs its learner chunk, and checks in via
-//!   [`report`](PoolCtl::report) — carrying any learner error back to the
-//!   engine instead of unwinding through the pool.
-//!
-//! The data plane (learners, packet cells, ready counters, the parameter
-//! vector) lives in the engine's run-scoped `Shared` state, not here: the
-//! pool only sequences access so that workers touch it strictly inside
-//! their own generation. All of this is run-scoped — the pool threads live
-//! inside a `std::thread::scope` that wraps the training loop, so borrows
-//! of run-local state need no `'static` gymnastics.
+//! With `staleness = 0` the window degenerates to the old step barrier:
+//! a worker may start step `s` only once update `s − 1` is applied, which
+//! is exactly the synchronous engine. The data plane (learners, packet
+//! cells, ready counters, the param-version ring) lives in the engine's
+//! run-scoped `Shared` state, not here: the window only sequences access
+//! so a slot is never reused while any in-flight step still needs it. All
+//! of this is run-scoped — the pool threads live inside a
+//! `std::thread::scope` that wraps the training loop, so borrows of
+//! run-local state need no `'static` gymnastics.
 
 use std::sync::{Condvar, Mutex};
 
 struct CtlState {
-    /// Current step generation; 0 = nothing published yet.
-    gen: u64,
-    /// Workers that have checked in for `gen`.
-    n_done: usize,
+    /// Central updates applied so far: θ_applied is the newest version.
+    applied: u64,
+    /// One past the last step workers may start (the epoch frontier).
+    limit: u64,
     shutdown: bool,
-    /// First worker error of the current generation (formatted — the engine
-    /// re-wraps it; `anyhow::Error` is not `Clone`).
+    /// First worker error of the run (formatted — the engine re-wraps it;
+    /// `anyhow::Error` is not `Clone`).
     failed: Option<String>,
 }
 
-/// Generation-counted step barrier between the engine and its pool workers.
+/// Staleness-window gate between the engine and its pool workers.
 pub struct PoolCtl {
+    /// The window bound K: a worker may start step `s` once `s − K`
+    /// updates are applied (step `s` reads param version θ_{s−K}).
+    staleness: u64,
     state: Mutex<CtlState>,
     go: Condvar,
-    done: Condvar,
-}
-
-impl Default for PoolCtl {
-    fn default() -> Self {
-        PoolCtl::new()
-    }
 }
 
 impl PoolCtl {
-    pub fn new() -> PoolCtl {
+    pub fn new(staleness: usize) -> PoolCtl {
         PoolCtl {
+            staleness: staleness as u64,
             state: Mutex::new(CtlState {
-                gen: 0,
-                n_done: 0,
+                applied: 0,
+                limit: 0,
                 shutdown: false,
                 failed: None,
             }),
             go: Condvar::new(),
-            done: Condvar::new(),
         }
     }
 
-    /// Engine: publish the next step generation and wake all workers.
-    pub fn kick(&self) {
-        let mut s = self.state.lock().unwrap();
-        s.gen += 1;
-        s.n_done = 0;
-        s.failed = None;
+    /// Worker: block until step `s` is inside the staleness window and the
+    /// open epoch. Returns `false` when the run is over (shutdown or a
+    /// worker failure) — the worker exits its loop.
+    pub fn wait_runnable(&self, s: u64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.shutdown || st.failed.is_some() {
+                return false;
+            }
+            if s < st.limit && s <= st.applied + self.staleness {
+                return true;
+            }
+            st = self.go.wait(st).unwrap();
+        }
+    }
+
+    /// Engine: open steps `[.., limit)` to the workers (the epoch
+    /// frontier; monotone).
+    pub fn open(&self, limit: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.limit = st.limit.max(limit);
         self.go.notify_all();
     }
 
-    /// Engine: block until all `workers` have checked in for the current
-    /// generation; surfaces the first worker error.
-    pub fn wait_done(&self, workers: usize) -> anyhow::Result<()> {
-        let mut s = self.state.lock().unwrap();
-        while s.n_done < workers {
-            s = self.done.wait(s).unwrap();
-        }
-        match s.failed.take() {
-            Some(e) => Err(anyhow::anyhow!("learner phase failed: {e}")),
-            None => Ok(()),
-        }
+    /// Engine: publish that `applied` central updates have landed
+    /// (θ_applied is now the newest param version).
+    pub fn applied(&self, applied: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.applied = applied;
+        self.go.notify_all();
     }
 
-    /// Engine: non-blocking check that every worker has checked in for the
-    /// current generation (used while draining streamed grad-ready queues,
-    /// so a failed worker cannot deadlock the engine's layer scan).
-    pub fn all_done(&self, workers: usize) -> bool {
-        self.state.lock().unwrap().n_done >= workers
+    /// Worker: record a learner-phase error; the first one wins. Sibling
+    /// workers drain out of `wait_runnable` and the engine surfaces it.
+    pub fn fail(&self, msg: String) {
+        let mut st = self.state.lock().unwrap();
+        st.failed.get_or_insert(msg);
+        self.go.notify_all();
+    }
+
+    /// Engine: the first worker error, if any (checked inside the bucket
+    /// scan so a dead worker can never deadlock the engine).
+    pub fn failure(&self) -> Option<String> {
+        self.state.lock().unwrap().failed.clone()
     }
 
     /// Engine: stop the pool; parked workers wake and exit.
     pub fn shutdown(&self) {
-        let mut s = self.state.lock().unwrap();
-        s.shutdown = true;
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
         self.go.notify_all();
-    }
-
-    /// Worker: park until a generation newer than `last` is published.
-    /// `None` means shutdown.
-    pub fn next_gen(&self, last: u64) -> Option<u64> {
-        let mut s = self.state.lock().unwrap();
-        loop {
-            if s.shutdown {
-                return None;
-            }
-            if s.gen > last {
-                return Some(s.gen);
-            }
-            s = self.go.wait(s).unwrap();
-        }
-    }
-
-    /// Worker: check in for the current generation, carrying any error.
-    pub fn report(&self, err: Option<String>) {
-        let mut s = self.state.lock().unwrap();
-        if let Some(e) = err {
-            s.failed.get_or_insert(e);
-        }
-        s.n_done += 1;
-        self.done.notify_all();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::time::Duration;
 
-    #[test]
-    fn pool_runs_generations_and_shuts_down() {
-        let ctl = PoolCtl::new();
-        let hits = AtomicUsize::new(0);
-        std::thread::scope(|scope| {
-            for _ in 0..3 {
-                let (ctl, hits) = (&ctl, &hits);
-                scope.spawn(move || {
-                    let mut gen = 0;
-                    while let Some(g) = ctl.next_gen(gen) {
-                        gen = g;
-                        hits.fetch_add(1, Ordering::Relaxed);
-                        ctl.report(None);
-                    }
-                });
+    /// Spin-wait (bounded) until `cond` holds.
+    fn eventually(cond: impl Fn() -> bool) -> bool {
+        for _ in 0..2000 {
+            if cond() {
+                return true;
             }
-            for _ in 0..5 {
-                ctl.kick();
-                ctl.wait_done(3).unwrap();
-            }
-            ctl.shutdown();
-        });
-        assert_eq!(hits.load(Ordering::Relaxed), 15);
+            std::thread::sleep(Duration::from_micros(500));
+        }
+        false
     }
 
     #[test]
-    fn worker_errors_surface_to_the_engine() {
-        let ctl = PoolCtl::new();
+    fn window_gates_worker_progress() {
+        // K = 1: a worker may run steps 0..=applied+1 (and only below the
+        // epoch frontier); each `applied` bump releases exactly one more.
+        let ctl = PoolCtl::new(1);
+        let started = AtomicU64::new(0);
         std::thread::scope(|scope| {
-            let c = &ctl;
+            let (c, started) = (&ctl, &started);
             scope.spawn(move || {
-                let mut gen = 0;
-                while let Some(g) = c.next_gen(gen) {
-                    gen = g;
-                    c.report(Some("executor exploded".into()));
+                let mut s = 0u64;
+                while c.wait_runnable(s) {
+                    started.store(s + 1, Ordering::SeqCst);
+                    s += 1;
                 }
             });
-            ctl.kick();
-            let err = ctl.wait_done(1).unwrap_err().to_string();
-            assert!(err.contains("executor exploded"), "{err}");
-            assert!(ctl.all_done(1));
+            // nothing open yet: the worker must idle at 0
+            std::thread::sleep(Duration::from_millis(5));
+            assert_eq!(started.load(Ordering::SeqCst), 0);
+            ctl.open(4);
+            // applied = 0, K = 1 -> steps 0 and 1 may start, step 2 may not
+            assert!(eventually(|| started.load(Ordering::SeqCst) == 2));
+            std::thread::sleep(Duration::from_millis(5));
+            assert_eq!(started.load(Ordering::SeqCst), 2);
+            ctl.applied(1);
+            assert!(eventually(|| started.load(Ordering::SeqCst) == 3));
+            // the epoch frontier also gates: the window is wide open but
+            // steps past the frontier (4) stay parked
+            ctl.applied(5);
+            assert!(eventually(|| started.load(Ordering::SeqCst) == 4));
+            std::thread::sleep(Duration::from_millis(5));
+            assert_eq!(started.load(Ordering::SeqCst), 4);
+            ctl.open(5);
+            assert!(eventually(|| started.load(Ordering::SeqCst) == 5));
+            ctl.shutdown();
+        });
+    }
+
+    #[test]
+    fn staleness_zero_is_the_step_barrier() {
+        // K = 0: each step waits for its predecessor's update — the old
+        // synchronous generation barrier.
+        let ctl = PoolCtl::new(0);
+        let started = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            let (c, started) = (&ctl, &started);
+            scope.spawn(move || {
+                let mut s = 0u64;
+                while c.wait_runnable(s) {
+                    started.store(s + 1, Ordering::SeqCst);
+                    s += 1;
+                }
+            });
+            ctl.open(8);
+            for t in 1..=4u64 {
+                assert!(eventually(|| started.load(Ordering::SeqCst) == t));
+                std::thread::sleep(Duration::from_millis(2));
+                assert_eq!(started.load(Ordering::SeqCst), t);
+                ctl.applied(t);
+            }
+            ctl.shutdown();
+        });
+    }
+
+    #[test]
+    fn worker_failure_drains_the_pool_and_surfaces() {
+        let ctl = PoolCtl::new(2);
+        std::thread::scope(|scope| {
+            let c = &ctl;
+            // a healthy worker parked on a far-future step
+            let healthy = scope.spawn(move || c.wait_runnable(100));
+            std::thread::sleep(Duration::from_millis(2));
+            ctl.fail("executor exploded".into());
+            // the parked sibling drains out with `false`
+            assert!(!healthy.join().unwrap());
+            // the engine sees the first error; later steps are not runnable
+            assert_eq!(ctl.failure().as_deref(), Some("executor exploded"));
+            assert!(!ctl.wait_runnable(0));
             ctl.shutdown();
         });
     }

@@ -40,10 +40,10 @@ fn allocs() -> usize {
     ALLOCS.load(Ordering::Relaxed)
 }
 
-use adacomp::comm::{topology, Fabric, LinkModel, Reduced, ReducePlan, Topology};
+use adacomp::comm::{topology, Fabric, LinkModel, Reduced, ReducePlan, RoundSched, Topology};
 use adacomp::compress::{self, Config, Kind, Packet};
 use adacomp::models::{LayerKind, Layout};
-use adacomp::train::learner::{cells_for_plan, BucketCell};
+use adacomp::train::learner::{cell_ring_for_plan, cells_for_plan, BucketCell};
 use adacomp::util::rng::Pcg32;
 
 /// Every topology the hot path must keep allocation-free (4 learners).
@@ -141,7 +141,14 @@ fn steady_state_exchange_and_pack_are_allocation_free() {
                             gather[l].push(slot.take().unwrap());
                         }
                     }
-                    topo.exchange_bucket_into(bucket, gather, &lens, fabric, reduced);
+                    topo.exchange_bucket_into(
+                        bucket,
+                        gather,
+                        &lens,
+                        RoundSched::default(),
+                        fabric,
+                        reduced,
+                    );
                     for (l, row) in cells.iter().enumerate() {
                         let mut cell = row[bucket.id].lock();
                         for (slot, p) in cell.slots.iter_mut().zip(gather[l].drain(..)) {
@@ -167,6 +174,137 @@ fn steady_state_exchange_and_pack_are_allocation_free() {
             // per-bucket rounds: one fabric round per bucket per step
             assert_eq!(fabric.stats.rounds, 53 * plan.num_buckets() as u64);
         }
+    }
+
+    // --- windowed (K = 2) slot-ring loop: the bounded-staleness engine's
+    // steady state. Three step slots are in flight at once; each step packs
+    // into its slot's cells (recycling the packets the slot held K + 1
+    // steps ago through the compressor pool), the engine exchanges every
+    // bucket with ready-time placement on the per-port timeline, and hands
+    // the packets back to the same slot. Once every slot has cycled and
+    // the pool reached its high-water capacity, the loop must not allocate.
+    {
+        const WINDOW: usize = 3; // --staleness 2
+        let plan = ReducePlan::build(&layout, 12000, 2);
+        assert_eq!(plan.num_buckets(), 3, "fixture should exercise coalescing");
+        // dense scheme: deterministic packet sizes make the zero assertion
+        // exact; sparse schemes share the identical BufPool path
+        let mut comps: Vec<Box<dyn compress::Compressor>> = (0..4)
+            .map(|l| {
+                compress::build(
+                    &Config {
+                        lt_override: 50,
+                        seed: l as u64,
+                        ..Config::with_kind(Kind::None)
+                    },
+                    &layout,
+                )
+            })
+            .collect();
+        let dws: Vec<Vec<Vec<f32>>> = (0..4)
+            .map(|l| {
+                let mut rng = Pcg32::seeded(900 + l as u64);
+                (0..layout.num_layers())
+                    .map(|li| rng.normal_vec(layout.layers[li].len(), 0.1))
+                    .collect()
+            })
+            .collect();
+        let rings: Vec<Vec<Vec<BucketCell>>> =
+            (0..4).map(|_| cell_ring_for_plan(&plan, WINDOW)).collect();
+        let mut topo = topology::build("ps:2", 4).unwrap();
+        let mut fabric = Fabric::new(LinkModel::default());
+        let mut reduced = Reduced::new(&lens);
+        let mut gather: Vec<Vec<Packet>> =
+            (0..4).map(|_| Vec::with_capacity(lens.len())).collect();
+        let mut port_end = vec![0.0f64; 2];
+
+        let mut windowed_step = |step: usize,
+                                 comps: &mut Vec<Box<dyn compress::Compressor>>,
+                                 topo: &mut Box<dyn Topology>,
+                                 fabric: &mut Fabric,
+                                 reduced: &mut Reduced,
+                                 gather: &mut Vec<Vec<Packet>>,
+                                 port_end: &mut Vec<f64>| {
+            let slot = step % WINDOW;
+            // learner phase: recycle the slot's previous occupancy, pack
+            // fresh packets into the slot's cells
+            for (l, comp) in comps.iter_mut().enumerate() {
+                for cell in rings[l][slot].iter() {
+                    let mut cell = cell.lock();
+                    cell.filled = 0;
+                    for s in cell.slots.iter_mut() {
+                        if let Some(spent) = s.take() {
+                            comp.recycle(spent);
+                        }
+                    }
+                }
+                for li in 0..lens.len() {
+                    let p = comp.pack_layer(li, &dws[l][li]);
+                    let (bi, pos) = plan.slot_of(li);
+                    let mut cell = rings[l][slot][bi].lock();
+                    cell.slots[pos] = Some(p);
+                    cell.filled += 1;
+                }
+            }
+            // engine phase: exchange each bucket at its ready time, hand
+            // the packets back for the slot's next occupancy
+            let ready_s = step as f64 * 1e-3;
+            for bucket in &plan.buckets {
+                for (l, ring) in rings.iter().enumerate() {
+                    let mut cell = ring[slot][bucket.id].lock();
+                    for s in cell.slots.iter_mut() {
+                        gather[l].push(s.take().unwrap());
+                    }
+                }
+                let cost = topo.exchange_bucket_into(
+                    bucket,
+                    gather,
+                    &lens,
+                    RoundSched {
+                        ready_s,
+                        port_free_s: port_end[bucket.port],
+                    },
+                    fabric,
+                    reduced,
+                );
+                port_end[bucket.port] = cost.end_s;
+                for (l, ring) in rings.iter().enumerate() {
+                    let mut cell = ring[slot][bucket.id].lock();
+                    for (s, p) in cell.slots.iter_mut().zip(gather[l].drain(..)) {
+                        *s = Some(p);
+                    }
+                }
+            }
+        };
+
+        // warmup: every slot cycles several times so the compressor pools
+        // reach their high-water capacity across the ring
+        let mut step = 0usize;
+        for _ in 0..4 * WINDOW {
+            windowed_step(
+                step, &mut comps, &mut topo, &mut fabric, &mut reduced, &mut gather,
+                &mut port_end,
+            );
+            step += 1;
+        }
+        let before = allocs();
+        for _ in 0..10 * WINDOW {
+            windowed_step(
+                step, &mut comps, &mut topo, &mut fabric, &mut reduced, &mut gather,
+                &mut port_end,
+            );
+            step += 1;
+        }
+        let after = allocs();
+        assert_eq!(
+            after - before,
+            0,
+            "windowed (K=2) slot-ring exchange must not allocate in steady state"
+        );
+        assert_eq!(
+            fabric.stats.rounds,
+            (14 * WINDOW * plan.num_buckets()) as u64
+        );
     }
 
     // --- pack -> exchange -> recycle: the engine's per-step packet flow ---

@@ -79,6 +79,18 @@ fn train_matrix(
     topology: &str,
     exchange: &str,
 ) -> adacomp::metrics::RunRecord {
+    train_window(kind, threads, topology, exchange, 0, 0.0)
+}
+
+/// The full knob matrix including the bounded-staleness window.
+fn train_window(
+    kind: Kind,
+    threads: usize,
+    topology: &str,
+    exchange: &str,
+    staleness: usize,
+    jitter: f64,
+) -> adacomp::metrics::RunRecord {
     let ds = GaussianMixture::new(3, 16, 4, 800, 200, 0.6);
     let exe = NativeMlp::new(&[16, 32, 4], 50);
     let params = exe.init_params(11);
@@ -89,8 +101,35 @@ fn train_matrix(
     cfg.threads = threads;
     cfg.topology = topology.into();
     cfg.exchange = exchange.into();
+    cfg.staleness = staleness;
+    cfg.link.jitter = jitter;
     let mut engine = Engine::new(&exe, &ds, &layout);
     engine.run(&cfg, &params).expect("run")
+}
+
+/// Assert two runs have bit-identical per-epoch losses and test errors.
+fn assert_epochs_bitwise(
+    a: &adacomp::metrics::RunRecord,
+    b: &adacomp::metrics::RunRecord,
+    what: &str,
+) {
+    assert_eq!(a.epochs.len(), b.epochs.len(), "{what}");
+    for (ea, eb) in a.epochs.iter().zip(b.epochs.iter()) {
+        assert_eq!(
+            ea.train_loss.to_bits(),
+            eb.train_loss.to_bits(),
+            "{what} epoch {}: {} vs {}",
+            ea.epoch,
+            ea.train_loss,
+            eb.train_loss
+        );
+        assert_eq!(
+            ea.test_error_pct.to_bits(),
+            eb.test_error_pct.to_bits(),
+            "{what} epoch {}",
+            ea.epoch
+        );
+    }
 }
 
 #[test]
@@ -290,6 +329,102 @@ fn topologies_bitwise_identical_across_modes_and_threads() {
 }
 
 #[test]
+fn staleness_zero_matches_synchronous_bitwise() {
+    // ISSUE 5 acceptance: `--staleness 0` IS the synchronous engine —
+    // bit-identical trajectories across ps/ring × streamed/barrier × 1/4
+    // threads, with K = 0 explicit, and jitter must be timeline-only (a
+    // jittered K = 0 run is bit-equal to the unjittered one).
+    let reference = train_matrix(Kind::AdaComp, 1, "ps", "streamed");
+    for topo in ["ps", "ring"] {
+        for exchange in ["streamed", "barrier"] {
+            for threads in [1usize, 4] {
+                let r = train_window(Kind::AdaComp, threads, topo, exchange, 0, 0.0);
+                assert!(!r.diverged, "{topo}/{exchange}/t{threads}");
+                assert_epochs_bitwise(
+                    &reference,
+                    &r,
+                    &format!("K=0 {topo}/{exchange}/t{threads}"),
+                );
+                let jittered = train_window(Kind::AdaComp, threads, topo, exchange, 0, 0.3);
+                assert_epochs_bitwise(
+                    &r,
+                    &jittered,
+                    &format!("K=0+jitter {topo}/{exchange}/t{threads}"),
+                );
+                // jitter never touches the wire either
+                assert_eq!(r.fabric.bytes_up, jittered.fabric.bytes_up);
+                assert_eq!(r.fabric.bytes_down, jittered.fabric.bytes_down);
+                assert_eq!(r.fabric.rounds, jittered.fabric.rounds);
+            }
+        }
+    }
+}
+
+#[test]
+fn staleness_window_deterministic_under_jitter() {
+    // K = 2 under jitter: bit-identical across thread counts and repeat
+    // runs (the windowed scheduler's determinism contract — gradients
+    // depend only on the K-back param version and per-learner state;
+    // jitter shapes only the simulated timeline).
+    let reference = train_window(Kind::AdaComp, 1, "ring", "streamed", 2, 0.3);
+    assert!(!reference.diverged);
+    for threads in [1usize, 4] {
+        for repeat in 0..2 {
+            let r = train_window(Kind::AdaComp, threads, "ring", "streamed", 2, 0.3);
+            assert_epochs_bitwise(&reference, &r, &format!("K=2 t{threads} repeat{repeat}"));
+            assert_eq!(reference.fabric.bytes_up, r.fabric.bytes_up);
+            assert_eq!(reference.fabric.bytes_down, r.fabric.bytes_down);
+            assert_eq!(reference.fabric.rounds, r.fabric.rounds);
+        }
+    }
+    // both modes run the same windowed schedule
+    let barrier = train_window(Kind::AdaComp, 4, "ring", "barrier", 2, 0.3);
+    assert_epochs_bitwise(&reference, &barrier, "K=2 barrier");
+    // the window genuinely delays gradients: K = 2 is a different (still
+    // converging) trajectory than synchronous
+    let sync = train_matrix(Kind::AdaComp, 1, "ring", "streamed");
+    assert_ne!(
+        reference.epochs[0].train_loss.to_bits(),
+        sync.epochs[0].train_loss.to_bits(),
+        "K=2 must train on delayed param versions, not θ_t"
+    );
+    // the run still learns through the delay (AdaComp's residue tolerance)
+    assert!(
+        reference.epochs.last().unwrap().train_loss
+            < reference.epochs.first().unwrap().train_loss
+    );
+    // stall accounting: every step has a critical learner, and the
+    // simulated stall time is finite and non-negative
+    let total_crit: u64 = reference.fabric.crit_steps.iter().sum();
+    assert_eq!(total_crit, reference.fabric.steps);
+    assert!(reference.fabric.stall_s.is_finite() && reference.fabric.stall_s >= 0.0);
+}
+
+#[test]
+fn window_knobs_validated_by_engine() {
+    // satellite: the engine itself is the validation backstop (config and
+    // CLI route through the same validate_window)
+    let ds = GaussianMixture::new(3, 16, 4, 100, 50, 0.6);
+    let exe = NativeMlp::new(&[16, 8, 4], 10);
+    let params = exe.init_params(1);
+    let layout = exe.layout().clone();
+    for (staleness, jitter, needle) in [
+        (99usize, 0.0f64, "0 <= K <= 16"),
+        (0, 1.0, "0.0 <= jitter < 1.0"),
+        (0, -0.3, "0.0 <= jitter < 1.0"),
+    ] {
+        let mut cfg = base_cfg(Kind::None, 1);
+        cfg.epochs = 1;
+        cfg.steps_per_epoch = 1;
+        cfg.staleness = staleness;
+        cfg.link.jitter = jitter;
+        let mut engine = Engine::new(&exe, &ds, &layout);
+        let err = engine.run(&cfg, &params).unwrap_err().to_string();
+        assert!(err.contains(needle), "K={staleness} j={jitter}: {err}");
+    }
+}
+
+#[test]
 fn dense_baseline_mode_and_topology_independent() {
     // satellite: the projected-speedup dense baseline must not vary with
     // the topology or exchange mode. FabricStats::dense_comm_total_s
@@ -327,6 +462,7 @@ fn sharded_ps_overlaps_ports_on_timeline() {
     let slow = LinkModel {
         latency_s: 5e-3,
         bandwidth_bps: 1.25e9,
+        ..LinkModel::default()
     };
     let run = |topo: &str| {
         let ds = GaussianMixture::new(3, 16, 4, 800, 200, 0.6);
