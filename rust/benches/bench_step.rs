@@ -15,7 +15,11 @@
 //! K ∈ {0,1,2} × jitter ∈ {0, 0.3}) reports what the bounded-staleness
 //! window buys under straggler skew (`sim_step_s`, `stall_s`,
 //! `projected_speedup` per row) and asserts K=2 strictly beats the
-//! synchronous schedule at jitter 0.3. A `pool` entry records the
+//! synchronous schedule at jitter 0.3. A `churn_sweep` (8 learners, mixed
+//! fail/join/leave schedule plus a matched fail-vs-leave pair) reports the
+//! per-event recovery cost of a membership epoch — `rebuild_s`,
+//! `drain_stall_s`, and the residual L1 mass lost (fail) or handed over
+//! (leave). A `pool` entry records the
 //! persistent worker pool's per-step constant next to what the retired
 //! per-step `thread::scope` spawn used to cost. A char-LSTM row (the
 //! paper's recurrent workload on the native layer-graph backend) rides
@@ -247,13 +251,14 @@ fn engine_sweep() -> anyhow::Result<()> {
         ("engine", json::arr(rows)),
         ("topology_sweep", topology_sweep()?),
         ("staleness_sweep", staleness_sweep()?),
+        ("churn_sweep", churn_sweep()?),
         ("pool", pool_overhead()?),
         ("char_lstm", char_lstm_row()?),
     ]);
     std::fs::write("BENCH_engine.json", doc.to_string())?;
     println!(
         "\nwrote BENCH_engine.json (wall + simulated step times, projected_speedup, topology \
-         sweep, staleness sweep, pool constant, char_lstm row)"
+         sweep, staleness sweep, churn sweep, pool constant, char_lstm row)"
     );
     Ok(())
 }
@@ -338,6 +343,79 @@ fn staleness_sweep() -> anyhow::Result<Json> {
         "K=2 sim step {} !< K=0 sim step {} at jitter 0.3",
         step_of(2, 0.3),
         step_of(0, 0.3)
+    );
+    Ok(json::arr(rows))
+}
+
+/// Elastic-fleet churn sweep at 8 learners on the streamed ring: one
+/// scripted schedule mixing all three event kinds, plus a matched
+/// fail-vs-leave pair losing / handing over the same residual mass.
+/// Per-event rows report the recovery cost the membership epoch charged
+/// to the simulated timeline (rebuild_s, drain-stall) and the residual
+/// mass that was lost (fail) or folded into the survivors (leave).
+fn churn_sweep() -> anyhow::Result<Json> {
+    const LEARNERS: usize = 8;
+    println!("\n# churn sweep ({LEARNERS} learners, ring, streamed, adacomp lt=50)");
+    println!(
+        "{:<22} {:<6} {:>5} {:>8} {:>12} {:>12} {:>12} {:>12}",
+        "schedule", "kind", "step", "n-after", "rebuild", "drain-stall", "lost-L1", "handover-L1"
+    );
+    let run_churn = |name: &str, churn: &str| -> anyhow::Result<(u64, adacomp::comm::FabricStats)> {
+        let mut cfg = engine_cfg(LEARNERS, 0, "streamed", "ring");
+        cfg.run_name = format!("bench-churn-{name}");
+        cfg.staleness = 2;
+        cfg.churn = churn.into();
+        let (_, bits, fab) = run_engine_cfg(&cfg)?;
+        Ok((bits, fab))
+    };
+    let mut rows: Vec<Json> = Vec::new();
+    let mut emit = |schedule: &str, fab: &adacomp::comm::FabricStats| {
+        for m in &fab.membership {
+            println!(
+                "{:<22} {:<6} {:>5} {:>8} {:>10.3}ms {:>10.3}ms {:>12.4} {:>12.4}",
+                schedule,
+                m.kind,
+                m.step,
+                m.n_after,
+                1e3 * m.rebuild_s,
+                1e3 * m.drain_stall_s,
+                m.lost_l1,
+                m.handover_l1
+            );
+            rows.push(json::obj(vec![
+                ("schedule", json::s(schedule)),
+                ("kind", json::s(&m.kind)),
+                ("step", json::num(m.step as f64)),
+                ("count", json::num(m.count as f64)),
+                ("n_after", json::num(m.n_after as f64)),
+                ("topology", json::s(&m.topology)),
+                ("degraded", Json::Bool(m.degraded)),
+                ("rebuild_s", json::num(m.rebuild_s)),
+                ("drain_stall_s", json::num(m.drain_stall_s)),
+                ("lost_residual_l1", json::num(m.lost_l1)),
+                ("handover_l1", json::num(m.handover_l1)),
+            ]));
+        }
+    };
+
+    // mixed schedule: every event kind exercised in one run
+    let mixed = "fail@10:2,join@20:2,leave@30:2";
+    let (_, fab) = run_churn("mixed", mixed)?;
+    assert_eq!(fab.membership.len(), 3, "mixed schedule must record 3 events");
+    emit(mixed, &fab);
+
+    // matched pair: identical prefix, so the residual mass at stake is the
+    // same — fail loses it, leave folds it into the survivors
+    let (fail_bits, fail) = run_churn("fail", "fail@20:2")?;
+    let (leave_bits, leave) = run_churn("leave", "leave@20:2")?;
+    emit("fail@20:2", &fail);
+    emit("leave@20:2", &leave);
+    assert!(fail.lost_residual_l1 > 0.0, "fail must lose residual mass");
+    assert!(leave.handover_l1 > 0.0 && leave.lost_residual_l1 == 0.0);
+    assert_ne!(fail_bits, leave_bits, "fail and leave must diverge in loss");
+    println!(
+        "matched pair @20:2 — lost (fail) {:.4} vs handed over (leave) {:.4} L1",
+        fail.lost_residual_l1, leave.handover_l1
     );
     Ok(json::arr(rows))
 }

@@ -161,6 +161,47 @@ pub struct FabricStats {
     /// learner ties near-evenly; a straggler shows up as a dominant share
     /// ([`crit_share`](Self::crit_share)).
     pub crit_steps: Vec<u64>,
+    /// Simulated seconds spent rebuilding the fleet (reduce plan, topology,
+    /// cell rings) across all membership epochs.
+    pub rebuild_s: f64,
+    /// Simulated idle seconds learners spent while the engine drained the
+    /// staleness window to the frontier before a membership event.
+    pub drain_stall_s: f64,
+    /// Total L1 mass of residual gradient lost to `fail` events (learners
+    /// that vanished without handover).
+    pub lost_residual_l1: f64,
+    /// Total L1 mass of residual gradient handed over by `leave` events
+    /// (folded into the survivors' residue stores).
+    pub handover_l1: f64,
+    /// Membership timeline: one entry per applied churn event.
+    pub membership: Vec<MembershipChange>,
+}
+
+/// One applied membership event (fail / join / leave) and its recovery
+/// accounting, recorded by [`Fabric::record_membership`].
+#[derive(Debug, Clone)]
+pub struct MembershipChange {
+    /// Global step boundary the event fired at.
+    pub step: u64,
+    /// Event kind name ("fail" | "join" | "leave").
+    pub kind: String,
+    /// Learners added or removed.
+    pub count: usize,
+    /// Fleet size after the event.
+    pub n_after: usize,
+    /// Effective topology after the rebuild (post-fallback).
+    pub topology: String,
+    /// True when the requested topology's bounds no longer held and the
+    /// rebuild degraded to a fallback instead of aborting.
+    pub degraded: bool,
+    /// Simulated seconds this event's rebuild took.
+    pub rebuild_s: f64,
+    /// Simulated idle seconds spent draining the window for this event.
+    pub drain_stall_s: f64,
+    /// Residual L1 mass lost by this event (fail only; 0 otherwise).
+    pub lost_l1: f64,
+    /// Residual L1 mass handed over by this event (leave only; 0 otherwise).
+    pub handover_l1: f64,
 }
 
 impl FabricStats {
@@ -299,6 +340,16 @@ impl Fabric {
         self.stats.crit_steps[crit] += 1;
     }
 
+    /// Record one applied membership event: appends it to the timeline and
+    /// folds its recovery costs into the run totals.
+    pub fn record_membership(&mut self, change: MembershipChange) {
+        self.stats.rebuild_s += change.rebuild_s;
+        self.stats.drain_stall_s += change.drain_stall_s;
+        self.stats.lost_residual_l1 += change.lost_l1;
+        self.stats.handover_l1 += change.handover_l1;
+        self.stats.membership.push(change);
+    }
+
     pub fn reset(&mut self) {
         self.stats = FabricStats::default();
     }
@@ -365,6 +416,44 @@ mod tests {
         assert_eq!(f.stats.crit_steps, vec![0, 2, 0]);
         let share = f.stats.crit_share();
         assert_eq!(share, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn membership_events_accumulate_recovery_totals() {
+        let mut f = Fabric::new(LinkModel::default());
+        f.record_membership(MembershipChange {
+            step: 20,
+            kind: "fail".into(),
+            count: 1,
+            n_after: 3,
+            topology: "ps:3".into(),
+            degraded: true,
+            rebuild_s: 1e-3,
+            drain_stall_s: 2e-3,
+            lost_l1: 5.0,
+            handover_l1: 0.0,
+        });
+        f.record_membership(MembershipChange {
+            step: 40,
+            kind: "leave".into(),
+            count: 1,
+            n_after: 2,
+            topology: "ps:2".into(),
+            degraded: true,
+            rebuild_s: 1e-3,
+            drain_stall_s: 0.0,
+            lost_l1: 0.0,
+            handover_l1: 3.5,
+        });
+        assert_eq!(f.stats.membership.len(), 2);
+        assert!((f.stats.rebuild_s - 2e-3).abs() < 1e-12);
+        assert!((f.stats.drain_stall_s - 2e-3).abs() < 1e-12);
+        assert!((f.stats.lost_residual_l1 - 5.0).abs() < 1e-12);
+        assert!((f.stats.handover_l1 - 3.5).abs() < 1e-12);
+        assert_eq!(f.stats.membership[0].kind, "fail");
+        assert_eq!(f.stats.membership[1].n_after, 2);
+        f.reset();
+        assert!(f.stats.membership.is_empty());
     }
 
     #[test]

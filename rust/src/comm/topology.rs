@@ -597,11 +597,13 @@ impl Topology for Ring {
     }
 }
 
-/// Parse a topology spec; unknown names or invalid parameters error with
-/// the valid-form list. `n_learners` bounds the `ps:<S>` shard count and
-/// `hier:<G>` group size — a plan that shards wider than the learner count
-/// is a config typo, not a topology.
-pub fn build(name: &str, n_learners: usize) -> anyhow::Result<Box<dyn Topology>> {
+/// Validate a topology spec against a learner count without constructing
+/// it. Unknown names and out-of-bound `ps:<S>` / `hier:<G>` parameters
+/// error with the valid-form list. [`build`] routes through this at
+/// startup; the elastic-fleet rebuild calls it again on every membership
+/// change, because a spec that was valid at the initial learner count can
+/// stop being valid after the fleet shrinks (see [`fallback`]).
+pub fn revalidate(name: &str, n_learners: usize) -> anyhow::Result<()> {
     if let Some(s) = name.strip_prefix("ps:") {
         let shards: usize = s.parse().map_err(|_| {
             anyhow::anyhow!("topology '{name}': '{s}' is not a shard count ({VALID})")
@@ -612,7 +614,7 @@ pub fn build(name: &str, n_learners: usize) -> anyhow::Result<Box<dyn Topology>>
                  ({n_learners}) ({VALID})"
             );
         }
-        return Ok(Box::new(ParamServer::sharded(shards)));
+        return Ok(());
     }
     if let Some(g) = name.strip_prefix("hier:") {
         let group: usize = g.parse().map_err(|_| {
@@ -624,12 +626,55 @@ pub fn build(name: &str, n_learners: usize) -> anyhow::Result<Box<dyn Topology>>
                  ({n_learners}) ({VALID})"
             );
         }
-        return Ok(Box::new(HierPs::new(group)));
+        return Ok(());
+    }
+    match name {
+        "ps" | "param_server" | "ring" => Ok(()),
+        other => bail!("unknown topology '{other}' ({VALID})"),
+    }
+}
+
+/// Degrade a topology spec to one valid at `n_learners`, for the
+/// elastic-fleet rebuild: aborting a run because `ps:4` lost its fourth
+/// learner would turn every shrink event into a crash. `ps:<S>` with S
+/// beyond the fleet shrinks to `ps:<n>`; `hier:<G>` shrinks its group to
+/// the fleet while racks of >= 2 still form, else flattens to `ps`.
+/// Returns the spec unchanged while it is still valid — so a later `join`
+/// that restores the learner count restores the requested topology too.
+pub fn fallback(name: &str, n_learners: usize) -> String {
+    if revalidate(name, n_learners).is_ok() {
+        return name.to_string();
+    }
+    if name.starts_with("ps:") {
+        return format!("ps:{}", n_learners.max(1));
+    }
+    if name.starts_with("hier:") {
+        if n_learners >= 2 {
+            return format!("hier:{n_learners}");
+        }
+        return "ps".to_string();
+    }
+    // ring/ps have no parameters to outgrow; anything else was rejected at
+    // startup by revalidate
+    name.to_string()
+}
+
+/// Parse a topology spec; unknown names or invalid parameters error with
+/// the valid-form list. `n_learners` bounds the `ps:<S>` shard count and
+/// `hier:<G>` group size — a plan that shards wider than the learner count
+/// is a config typo, not a topology.
+pub fn build(name: &str, n_learners: usize) -> anyhow::Result<Box<dyn Topology>> {
+    revalidate(name, n_learners)?;
+    if let Some(s) = name.strip_prefix("ps:") {
+        return Ok(Box::new(ParamServer::sharded(s.parse().expect("revalidated"))));
+    }
+    if let Some(g) = name.strip_prefix("hier:") {
+        return Ok(Box::new(HierPs::new(g.parse().expect("revalidated"))));
     }
     match name {
         "ps" | "param_server" => Ok(Box::new(ParamServer::default())),
         "ring" => Ok(Box::new(Ring::default())),
-        other => bail!("unknown topology '{other}' ({VALID})"),
+        other => unreachable!("revalidate accepted unknown topology '{other}'"),
     }
 }
 
@@ -999,5 +1044,53 @@ mod tests {
         assert!(build("ps:4", 4).is_ok());
         assert!(build("hier:2", 2).is_ok());
         assert!(build("hier:4", 4).is_ok());
+    }
+
+    #[test]
+    fn revalidate_matches_build_and_carries_valid_forms() {
+        // satellite: the churn rebuild re-checks specs against the *new*
+        // learner count through the same validation build uses — the two
+        // must agree, and the error text must keep the valid-form list
+        for (spec, n) in [
+            ("ring", 1), ("ring", 8), ("ps", 1), ("ps:2", 4), ("ps:4", 4),
+            ("hier:2", 4), ("hier:4", 4), ("param_server", 3),
+        ] {
+            assert!(revalidate(spec, n).is_ok(), "{spec}@{n}");
+            assert!(build(spec, n).is_ok(), "{spec}@{n}");
+        }
+        for (spec, n) in [
+            ("ps:0", 4), ("ps:8", 4), ("ps:x", 4), ("hier:1", 4),
+            ("hier:8", 4), ("mesh", 4),
+        ] {
+            let err = revalidate(spec, n).unwrap_err().to_string();
+            assert!(
+                err.contains("valid: ring, ps, ps:<S>") && err.contains("hier:<G>"),
+                "{spec}: {err}"
+            );
+            assert!(build(spec, n).is_err(), "{spec}@{n}");
+        }
+        // the same spec flips validity as the fleet shrinks — the churn case
+        assert!(revalidate("ps:4", 4).is_ok());
+        assert!(revalidate("ps:4", 3).is_err());
+    }
+
+    #[test]
+    fn fallback_degrades_instead_of_aborting() {
+        // still-valid specs pass through unchanged (a re-grown fleet gets
+        // its requested topology back)
+        for (spec, n) in [("ring", 1), ("ps", 1), ("ps:4", 4), ("hier:2", 4)] {
+            assert_eq!(fallback(spec, n), spec);
+        }
+        // ps:S shrinks with the fleet
+        assert_eq!(fallback("ps:4", 3), "ps:3");
+        assert_eq!(fallback("ps:4", 1), "ps:1");
+        // hier:G shrinks its group while racks still form, else flattens
+        assert_eq!(fallback("hier:4", 3), "hier:3");
+        assert_eq!(fallback("hier:4", 2), "hier:2");
+        assert_eq!(fallback("hier:2", 1), "ps");
+        // every fallback result must actually build at that learner count
+        for (spec, n) in [("ps:4", 3), ("ps:4", 1), ("hier:4", 3), ("hier:2", 1)] {
+            assert!(build(&fallback(spec, n), n).is_ok(), "{spec}@{n}");
+        }
     }
 }

@@ -145,6 +145,10 @@ impl Compressor for AdaComp {
         self.residues.layer(layer)
     }
 
+    fn residue_mut(&mut self, layer: usize) -> Option<&mut [f32]> {
+        Some(self.residues.layer_mut(layer))
+    }
+
     fn reset(&mut self) {
         self.residues.reset();
     }

@@ -119,6 +119,10 @@ impl Compressor for Dryden {
         self.residues.layer(layer)
     }
 
+    fn residue_mut(&mut self, layer: usize) -> Option<&mut [f32]> {
+        Some(self.residues.layer_mut(layer))
+    }
+
     fn reset(&mut self) {
         self.residues.reset();
     }

@@ -44,6 +44,14 @@ impl Compressor for Mixed {
         }
     }
 
+    fn residue_mut(&mut self, layer: usize) -> Option<&mut [f32]> {
+        if self.is_conv[layer] {
+            self.conv.residue_mut(layer)
+        } else {
+            self.other.residue_mut(layer)
+        }
+    }
+
     fn residue(&self, layer: usize) -> &[f32] {
         if self.is_conv[layer] {
             self.conv.residue(layer)

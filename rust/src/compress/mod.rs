@@ -154,6 +154,12 @@ pub trait Compressor: Send {
     /// Residual gradient for metrics (Fig 5/6). Dense, layer length.
     fn residue(&self, layer: usize) -> &[f32];
 
+    /// Mutable residual access for state handover when a learner departs
+    /// (elastic fleet). Schemes with no carried residue return None.
+    fn residue_mut(&mut self, _layer: usize) -> Option<&mut [f32]> {
+        None
+    }
+
     /// Drop all state (new training run).
     fn reset(&mut self);
 

@@ -55,6 +55,10 @@ impl Compressor for OneBit {
         self.residues.layer(layer)
     }
 
+    fn residue_mut(&mut self, layer: usize) -> Option<&mut [f32]> {
+        Some(self.residues.layer_mut(layer))
+    }
+
     fn reset(&mut self) {
         self.residues.reset();
     }

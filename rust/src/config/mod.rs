@@ -21,6 +21,7 @@ pub fn from_json(v: &Json) -> Result<TrainConfig> {
         "steps_per_epoch", "lr", "lr_schedule", "optimizer", "momentum",
         "topology", "seed", "clip_norm", "divergence_loss", "compression",
         "link", "threads", "exchange", "bucket_bytes", "staleness", "jitter",
+        "churn", "mtbf",
     ];
     for k in obj.keys() {
         if !KNOWN.contains(&k.as_str()) {
@@ -96,6 +97,19 @@ pub fn from_json(v: &Json) -> Result<TrainConfig> {
     }
     if v.get("jitter") != &Json::Null {
         cfg.link.jitter = v.get("jitter").as_f64().context("'jitter' must be a number")?;
+    }
+    // elastic-fleet knobs: the churn schedule is parsed (and rejected with
+    // the valid event forms) at load time, not at step N mid-run
+    if let Some(c) = v.get("churn").as_str() {
+        crate::train::churn::parse(c)?;
+        cfg.churn = c.to_string();
+    }
+    if v.get("mtbf") != &Json::Null {
+        let m = v.get("mtbf").as_f64().context("'mtbf' must be a number")?;
+        if m < 0.0 || m.fract() != 0.0 {
+            bail!("mtbf {m} out of range (valid: integer steps >= 0; 0 disables random failures)");
+        }
+        cfg.mtbf = m as u64;
     }
     if let Some(s) = v.get("seed").as_i64() {
         cfg.seed = s as u64;
@@ -258,6 +272,8 @@ pub fn to_json(cfg: &TrainConfig) -> Json {
         ("bucket_bytes", json::num(cfg.bucket_bytes as f64)),
         ("staleness", json::num(cfg.staleness as f64)),
         ("jitter", json::num(cfg.link.jitter)),
+        ("churn", json::s(&cfg.churn)),
+        ("mtbf", json::num(cfg.mtbf as f64)),
         ("seed", json::num(cfg.seed as f64)),
         ("clip_norm", json::num(cfg.clip_norm as f64)),
         ("threads", json::num(cfg.threads as f64)),
@@ -407,6 +423,39 @@ mod tests {
         let cfg = from_json(&v).unwrap();
         assert_eq!(cfg.staleness, 0);
         assert_eq!(cfg.link.jitter, 0.0);
+    }
+
+    #[test]
+    fn churn_and_mtbf_roundtrip_and_validate() {
+        // elastic-fleet knobs load, roundtrip, and fail fast with the valid
+        // event forms in the error (the topology::build pattern)
+        let v = Json::from_str_slice(
+            r#"{"model": "m", "learners": 8, "churn": "fail@120:2,join@300:1", "mtbf": 500}"#,
+        )
+        .unwrap();
+        let cfg = from_json(&v).unwrap();
+        assert_eq!(cfg.churn, "fail@120:2,join@300:1");
+        assert_eq!(cfg.mtbf, 500);
+        let back = from_json(&to_json(&cfg)).unwrap();
+        assert_eq!(back.churn, cfg.churn);
+        assert_eq!(back.mtbf, 500);
+        for (spec, needle) in [
+            (r#"{"model": "m", "churn": "fail120:2"}"#, "missing '@'"),
+            (r#"{"model": "m", "churn": "explode@9:1"}"#, "unknown kind"),
+            (r#"{"model": "m", "churn": "fail@9:0"}"#, "count must be >= 1"),
+            (r#"{"model": "m", "mtbf": -3}"#, "integer steps >= 0"),
+            (r#"{"model": "m", "mtbf": 2.5}"#, "integer steps >= 0"),
+            (r#"{"model": "m", "mtbf": "often"}"#, "must be a number"),
+        ] {
+            let v = Json::from_str_slice(spec).unwrap();
+            let err = format!("{:#}", from_json(&v).unwrap_err());
+            assert!(err.contains(needle), "{spec}: {err}");
+        }
+        // defaults: static fleet
+        let v = Json::from_str_slice(r#"{"model": "m"}"#).unwrap();
+        let cfg = from_json(&v).unwrap();
+        assert_eq!(cfg.churn, "");
+        assert_eq!(cfg.mtbf, 0);
     }
 
     #[test]

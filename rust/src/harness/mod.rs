@@ -329,7 +329,7 @@ impl Workload {
     /// Build from CLI args: common flags are --model --backend --epochs
     /// --learners --batch --train --test --scheme --lt --lt-conv --lt-fc
     /// --optimizer --lr --topology (ring | ps | ps:S | hier:G)
-    /// --bucket-bytes --seed --seq-len --artifacts.
+    /// --bucket-bytes --seed --seq-len --artifacts --churn --mtbf.
     pub fn from_args(args: &Args, default_model: &str) -> Result<Workload> {
         Workload::from_args_with_backend(args, default_model, None)
     }
@@ -486,6 +486,20 @@ impl Workload {
             })?,
         };
         crate::train::validate_window(staleness, jitter)?;
+        // elastic-fleet knobs: the churn schedule parses (or fails with the
+        // valid event forms) here, not at step N mid-run; mtbf hand-parsed
+        // like --staleness so junk fails with the valid range
+        let churn = args.str_or("churn", "");
+        crate::train::churn::parse(&churn)?;
+        let mtbf = match args.get("mtbf") {
+            None => 0u64,
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "--mtbf '{v}' is not a step count (valid: integer steps >= 0; \
+                     0 disables random failures)"
+                )
+            })?,
+        };
         let batch = args.usize_or("batch", d.batch / learners.max(1)).max(1);
         let lr = match args.get("lr") {
             Some(v) => LrSchedule::Constant(v.parse()?),
@@ -517,6 +531,8 @@ impl Workload {
             exchange,
             bucket_bytes: args.usize_or("bucket-bytes", 0),
             staleness,
+            churn,
+            mtbf,
         };
 
         let mut init_params = match init_native {
@@ -769,6 +785,48 @@ mod tests {
             ("--jitter", "1.0", "0.0 <= jitter < 1.0"),
             ("--jitter", "-0.5", "0.0 <= jitter < 1.0"),
             ("--jitter", "lots", "0.0 <= jitter < 1.0"),
+        ] {
+            let args = Args::parse_from(
+                ["--model", "mnist_dnn", "--backend", "native", flag, val].map(String::from),
+                &[],
+            );
+            let err = format!("{:#}", Workload::from_args(&args, "mnist_dnn").unwrap_err());
+            assert!(err.contains(needle), "{flag} {val}: {err}");
+        }
+    }
+
+    #[test]
+    fn churn_and_mtbf_cli_validate_at_parse_time() {
+        // satellite: the elastic-fleet knobs fail fast with the valid event
+        // forms in the error (the topology::build pattern), and wire
+        // through to TrainConfig when well-formed
+        let ok = Args::parse_from(
+            [
+                "--model", "mnist_dnn", "--backend", "native", "--learners", "4",
+                "--churn", "fail@120:2, join@300:1 ,leave@500:1", "--mtbf", "800",
+            ]
+            .map(String::from),
+            &[],
+        );
+        let w = Workload::from_args(&ok, "mnist_dnn").unwrap();
+        assert_eq!(w.cfg.churn, "fail@120:2, join@300:1 ,leave@500:1");
+        assert_eq!(w.cfg.mtbf, 800);
+        // defaults: static fleet
+        let none = Args::parse_from(
+            ["--model", "mnist_dnn", "--backend", "native"].map(String::from),
+            &[],
+        );
+        let w = Workload::from_args(&none, "mnist_dnn").unwrap();
+        assert_eq!(w.cfg.churn, "");
+        assert_eq!(w.cfg.mtbf, 0);
+
+        for (flag, val, needle) in [
+            ("--churn", "fail120:2", "missing '@'"),
+            ("--churn", "explode@9:1", "unknown kind"),
+            ("--churn", "fail@x:1", "not a step number"),
+            ("--churn", "join@9:0", "count must be >= 1"),
+            ("--mtbf", "-5", "integer steps >= 0"),
+            ("--mtbf", "often", "integer steps >= 0"),
         ] {
             let args = Args::parse_from(
                 ["--model", "mnist_dnn", "--backend", "native", flag, val].map(String::from),

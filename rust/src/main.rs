@@ -94,11 +94,11 @@ fn cmd_train(args: &Args) -> i32 {
         Ok((rec, final_params)) => {
             // --save CKPT: persist trained weights (resume with --resume).
             if let Some(path) = args.get("save") {
-                let ck = adacomp::train::checkpoint::Checkpoint {
-                    model: w.model.clone(),
-                    epoch: rec.epochs.len() as u32,
-                    params: final_params,
-                };
+                let ck = adacomp::train::checkpoint::Checkpoint::new(
+                    w.model.clone(),
+                    rec.epochs.len() as u32,
+                    final_params,
+                );
                 if let Err(e) = ck.save(std::path::Path::new(path)) {
                     eprintln!("checkpoint save failed: {e:#}");
                 } else {
@@ -300,6 +300,20 @@ USAGE:
                                  straggler episodes from a seeded xorshift.
                                  Shapes only the simulated timeline /
                                  stall accounting — never the results)
+                [--churn SPEC]  (elastic fleet: comma-separated membership
+                                 events kind@STEP:COUNT with kind one of
+                                 fail (learners vanish, residual gradient
+                                 state lost), leave (graceful handover:
+                                 residue + optimizer state fold into the
+                                 survivors), join (cold learners added).
+                                 e.g. --churn fail@120:2,join@300:1.
+                                 Deterministic: same seed + schedule gives
+                                 bit-identical results at every thread
+                                 count and exchange mode)
+                [--mtbf STEPS]  (random failure injection: each step one
+                                 learner fails with probability 1/STEPS,
+                                 drawn from a seeded generator so runs
+                                 reproduce. 0 = off, composes with --churn)
   adacomp inspect [--artifacts DIR]
   adacomp schemes
 

@@ -192,6 +192,33 @@ impl RunRecord {
                         "crit_share",
                         json::arr(self.fabric.crit_share().into_iter().map(json::num).collect()),
                     ),
+                    ("rebuild_s", json::num(self.fabric.rebuild_s)),
+                    ("drain_stall_s", json::num(self.fabric.drain_stall_s)),
+                    ("lost_residual_l1", json::num(self.fabric.lost_residual_l1)),
+                    ("handover_l1", json::num(self.fabric.handover_l1)),
+                    (
+                        "membership",
+                        json::arr(
+                            self.fabric
+                                .membership
+                                .iter()
+                                .map(|m| {
+                                    json::obj(vec![
+                                        ("step", json::num(m.step as f64)),
+                                        ("kind", json::s(&m.kind)),
+                                        ("count", json::num(m.count as f64)),
+                                        ("n_after", json::num(m.n_after as f64)),
+                                        ("topology", json::s(&m.topology)),
+                                        ("degraded", Json::Bool(m.degraded)),
+                                        ("rebuild_s", json::num(m.rebuild_s)),
+                                        ("drain_stall_s", json::num(m.drain_stall_s)),
+                                        ("lost_l1", json::num(m.lost_l1)),
+                                        ("handover_l1", json::num(m.handover_l1)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ]),
             ),
         ])
@@ -282,6 +309,32 @@ mod tests {
         let v = Json::from_str_slice(&j).unwrap();
         assert_eq!(v.get("final_test_error").as_f64(), Some(20.0));
         assert_eq!(v.get("epochs").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn run_record_json_carries_membership_timeline() {
+        let mut r = rec();
+        r.fabric.membership.push(crate::comm::MembershipChange {
+            step: 20,
+            kind: "leave".into(),
+            count: 1,
+            n_after: 1,
+            topology: "ps".into(),
+            degraded: true,
+            rebuild_s: 1e-3,
+            drain_stall_s: 2e-3,
+            lost_l1: 0.0,
+            handover_l1: 4.25,
+        });
+        r.fabric.handover_l1 = 4.25;
+        let j = r.to_json().to_string();
+        let v = Json::from_str_slice(&j).unwrap();
+        let fab = v.get("fabric");
+        assert_eq!(fab.get("handover_l1").as_f64(), Some(4.25));
+        let ms = fab.get("membership").as_arr().unwrap();
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].get("kind").as_str(), Some("leave"));
+        assert_eq!(ms[0].get("n_after").as_f64(), Some(1.0));
     }
 
     #[test]

@@ -13,6 +13,17 @@ pub trait Optimizer: Send {
     /// params -= update(grad); `grad` is the mean gradient across learners.
     fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32);
     fn reset(&mut self);
+    /// Flat serialization of the optimizer's slow state (momentum /
+    /// moment estimates), for checkpoint handover across membership
+    /// epochs. Stateless optimizers return an empty vec.
+    fn state(&self) -> Vec<f32> {
+        Vec::new()
+    }
+    /// Restore state captured by [`state`](Optimizer::state). Returns
+    /// false (and leaves the optimizer untouched) on a shape mismatch.
+    fn load_state(&mut self, _s: &[f32]) -> bool {
+        false
+    }
 }
 
 /// SGD with classical momentum: v = mu*v + g; p -= lr*v.
@@ -47,6 +58,18 @@ impl Optimizer for Sgd {
 
     fn reset(&mut self) {
         self.v.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn state(&self) -> Vec<f32> {
+        self.v.clone()
+    }
+
+    fn load_state(&mut self, s: &[f32]) -> bool {
+        if s.len() != self.v.len() {
+            return false;
+        }
+        self.v.copy_from_slice(s);
+        true
     }
 }
 
@@ -101,6 +124,25 @@ impl Optimizer for Adam {
         self.v.iter_mut().for_each(|x| *x = 0.0);
         self.t = 0;
     }
+
+    fn state(&self) -> Vec<f32> {
+        let mut s = Vec::with_capacity(self.m.len() * 2 + 1);
+        s.extend_from_slice(&self.m);
+        s.extend_from_slice(&self.v);
+        s.push(self.t as f32);
+        s
+    }
+
+    fn load_state(&mut self, s: &[f32]) -> bool {
+        let n = self.m.len();
+        if s.len() != n * 2 + 1 {
+            return false;
+        }
+        self.m.copy_from_slice(&s[..n]);
+        self.v.copy_from_slice(&s[n..n * 2]);
+        self.t = s[n * 2] as u32;
+        true
+    }
 }
 
 /// RMSProp (Hinton): s = rho*s + (1-rho)*g^2; p -= lr * g / sqrt(s + eps).
@@ -137,6 +179,18 @@ impl Optimizer for RmsProp {
 
     fn reset(&mut self) {
         self.s.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn state(&self) -> Vec<f32> {
+        self.s.clone()
+    }
+
+    fn load_state(&mut self, s: &[f32]) -> bool {
+        if s.len() != self.s.len() {
+            return false;
+        }
+        self.s.copy_from_slice(s);
+        true
     }
 }
 
@@ -204,6 +258,33 @@ mod tests {
         let mut p = vec![0.0f32];
         o.step(&mut p, &[1e-4], 0.1);
         assert!((p[0] + 0.1).abs() < 1e-3, "{}", p[0]);
+    }
+
+    #[test]
+    fn state_roundtrips_and_rejects_shape_mismatch() {
+        // run each optimizer a few steps, snapshot, run a fresh one from
+        // the snapshot — next step must match bit-for-bit.
+        for name in ["sgd", "adam", "rmsprop"] {
+            let mut a = build(name, 3, 0.9).unwrap();
+            let mut p = vec![1.0f32, -2.0, 3.0];
+            for _ in 0..5 {
+                let g = p.clone();
+                a.step(&mut p, &g, 0.05);
+            }
+            let snap = a.state();
+            assert!(!snap.is_empty(), "{name} state should be non-empty");
+            let mut b = build(name, 3, 0.9).unwrap();
+            assert!(b.load_state(&snap), "{name} load_state");
+            assert!(!b.load_state(&snap[..snap.len() - 1]), "{name} mismatch");
+            let g = p.clone();
+            let mut pa = p.clone();
+            let mut pb = p.clone();
+            a.step(&mut pa, &g, 0.05);
+            b.step(&mut pb, &g, 0.05);
+            for (x, y) in pa.iter().zip(pb.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{name} diverged after load");
+            }
+        }
     }
 
     #[test]

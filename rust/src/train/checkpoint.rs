@@ -1,13 +1,24 @@
 //! Checkpointing: save/restore flat parameters (+ run provenance) so long
-//! paper-scale runs can resume across sessions.
+//! paper-scale runs can resume across sessions, and — since the elastic
+//! fleet — carry per-learner residual gradients and central optimizer
+//! momentum so a departing learner can hand its error-feedback state to the
+//! survivors instead of losing it.
 //!
 //! Format (little-endian):
 //!   magic  "ADCK"  u32
-//!   version        u32
+//!   version        u32   (1 = params only, 2 = + state sections)
 //!   epoch          u32
 //!   model name     u32 len + bytes
 //!   params         u64 count + count x f32
 //!   checksum       u64 (FNV-1a over the param bytes)
+//! v2 appends, after the param checksum:
+//!   residues       u32 learner count, then per learner u64 count + f32s
+//!   momentum       u64 count + count x f32
+//!   checksum       u64 (FNV-1a over the section bytes)
+//!
+//! A checkpoint with no state sections always writes version 1, so plain
+//! `--save` files stay readable by older builds; version-1 files load with
+//! empty sections. Versions above 2 are rejected (future-format guard).
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -16,12 +27,19 @@ use anyhow::{bail, Context, Result};
 
 const MAGIC: u32 = 0x4144_434b; // "ADCK"
 const VERSION: u32 = 1;
+const VERSION_STATE: u32 = 2;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
     pub model: String,
     pub epoch: u32,
     pub params: Vec<f32>,
+    /// Per-learner residual-gradient state (flat, layout order); empty for
+    /// plain parameter checkpoints.
+    pub residues: Vec<Vec<f32>>,
+    /// Central optimizer state (e.g. SGD velocity, Adam moments); empty for
+    /// plain parameter checkpoints.
+    pub momentum: Vec<f32>,
 }
 
 fn fnv1a(bytes: &[u8]) -> u64 {
@@ -33,48 +51,81 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
+fn f32s_to_bytes(vals: &[f32], out: &mut Vec<u8>) {
+    for &v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn f32s_from_bytes(body: &[u8]) -> Vec<f32> {
+    body.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
 impl Checkpoint {
-    pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
+    /// A plain parameter checkpoint (no handover state sections).
+    pub fn new(model: String, epoch: u32, params: Vec<f32>) -> Checkpoint {
+        Checkpoint {
+            model,
+            epoch,
+            params,
+            residues: Vec::new(),
+            momentum: Vec::new(),
         }
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
-        f.write_all(&MAGIC.to_le_bytes())?;
-        f.write_all(&VERSION.to_le_bytes())?;
-        f.write_all(&self.epoch.to_le_bytes())?;
-        f.write_all(&(self.model.len() as u32).to_le_bytes())?;
-        f.write_all(self.model.as_bytes())?;
-        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+    }
+
+    fn has_state(&self) -> bool {
+        !self.residues.is_empty() || !self.momentum.is_empty()
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        let version = if self.has_state() { VERSION_STATE } else { VERSION };
+        w.write_all(&MAGIC.to_le_bytes())?;
+        w.write_all(&version.to_le_bytes())?;
+        w.write_all(&self.epoch.to_le_bytes())?;
+        w.write_all(&(self.model.len() as u32).to_le_bytes())?;
+        w.write_all(self.model.as_bytes())?;
+        w.write_all(&(self.params.len() as u64).to_le_bytes())?;
         let mut body = Vec::with_capacity(self.params.len() * 4);
-        for &v in &self.params {
-            body.extend_from_slice(&v.to_le_bytes());
+        f32s_to_bytes(&self.params, &mut body);
+        w.write_all(&body)?;
+        w.write_all(&fnv1a(&body).to_le_bytes())?;
+        if version >= VERSION_STATE {
+            let mut sect = Vec::new();
+            sect.extend_from_slice(&(self.residues.len() as u32).to_le_bytes());
+            for r in &self.residues {
+                sect.extend_from_slice(&(r.len() as u64).to_le_bytes());
+                f32s_to_bytes(r, &mut sect);
+            }
+            sect.extend_from_slice(&(self.momentum.len() as u64).to_le_bytes());
+            f32s_to_bytes(&self.momentum, &mut sect);
+            w.write_all(&sect)?;
+            w.write_all(&fnv1a(&sect).to_le_bytes())?;
         }
-        f.write_all(&body)?;
-        f.write_all(&fnv1a(&body).to_le_bytes())?;
         Ok(())
     }
 
-    pub fn load(path: &Path) -> Result<Checkpoint> {
-        let mut f = std::fs::File::open(path)
-            .with_context(|| format!("opening {}", path.display()))?;
+    /// `src` labels errors (a path for files, a placeholder for in-memory
+    /// handover bytes).
+    pub fn read_from<R: Read>(f: &mut R, src: &str) -> Result<Checkpoint> {
         let mut u32buf = [0u8; 4];
         let mut u64buf = [0u8; 8];
         f.read_exact(&mut u32buf)?;
         if u32::from_le_bytes(u32buf) != MAGIC {
-            bail!("{}: not an adacomp checkpoint", path.display());
+            bail!("{src}: not an adacomp checkpoint");
         }
         f.read_exact(&mut u32buf)?;
         let version = u32::from_le_bytes(u32buf);
-        if version != VERSION {
-            bail!("{}: unsupported checkpoint version {version}", path.display());
+        if version < VERSION || version > VERSION_STATE {
+            bail!("{src}: unsupported checkpoint version {version}");
         }
         f.read_exact(&mut u32buf)?;
         let epoch = u32::from_le_bytes(u32buf);
         f.read_exact(&mut u32buf)?;
         let name_len = u32::from_le_bytes(u32buf) as usize;
         if name_len > 4096 {
-            bail!("{}: implausible model-name length {name_len}", path.display());
+            bail!("{src}: implausible model-name length {name_len}");
         }
         let mut name = vec![0u8; name_len];
         f.read_exact(&mut name)?;
@@ -84,19 +135,80 @@ impl Checkpoint {
         f.read_exact(&mut body)?;
         f.read_exact(&mut u64buf)?;
         let want = u64::from_le_bytes(u64buf);
-        let got = fnv1a(&body);
-        if want != got {
-            bail!("{}: checksum mismatch (corrupt checkpoint)", path.display());
+        if want != fnv1a(&body) {
+            bail!("{src}: checksum mismatch (corrupt checkpoint)");
         }
-        let params = body
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
+        let params = f32s_from_bytes(&body);
+
+        let mut residues = Vec::new();
+        let mut momentum = Vec::new();
+        if version >= VERSION_STATE {
+            // re-serialize while reading so the section checksum covers
+            // exactly the bytes the writer hashed
+            let mut sect = Vec::new();
+            f.read_exact(&mut u32buf)?;
+            sect.extend_from_slice(&u32buf);
+            let n_res = u32::from_le_bytes(u32buf) as usize;
+            if n_res > 1 << 20 {
+                bail!("{src}: implausible residue-section count {n_res}");
+            }
+            for _ in 0..n_res {
+                f.read_exact(&mut u64buf)?;
+                sect.extend_from_slice(&u64buf);
+                let rc = u64::from_le_bytes(u64buf) as usize;
+                let mut rb = vec![0u8; rc * 4];
+                f.read_exact(&mut rb)?;
+                residues.push(f32s_from_bytes(&rb));
+                sect.extend_from_slice(&rb);
+            }
+            f.read_exact(&mut u64buf)?;
+            sect.extend_from_slice(&u64buf);
+            let mc = u64::from_le_bytes(u64buf) as usize;
+            let mut mb = vec![0u8; mc * 4];
+            f.read_exact(&mut mb)?;
+            momentum = f32s_from_bytes(&mb);
+            sect.extend_from_slice(&mb);
+            f.read_exact(&mut u64buf)?;
+            if u64::from_le_bytes(u64buf) != fnv1a(&sect) {
+                bail!("{src}: state-section checksum mismatch (corrupt checkpoint)");
+            }
+        }
         Ok(Checkpoint {
             model: String::from_utf8(name)?,
             epoch,
             params,
+            residues,
+            momentum,
         })
+    }
+
+    /// Serialize to the exact on-disk byte format (handover paths round-trip
+    /// state through real checkpoint bytes, not a shortcut copy).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        // Vec<u8> writes are infallible
+        self.write_to(&mut out).expect("in-memory checkpoint write");
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        let mut cur = bytes;
+        Self::read_from(&mut cur, "<bytes>")
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        self.write_to(&mut f)
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Self::read_from(&mut f, &path.display().to_string())
     }
 }
 
@@ -111,11 +223,11 @@ mod tests {
     #[test]
     fn roundtrip() {
         let p = tmp("roundtrip");
-        let ck = Checkpoint {
-            model: "cifar_cnn".into(),
-            epoch: 17,
-            params: (0..1000).map(|i| i as f32 * 0.5 - 3.0).collect(),
-        };
+        let ck = Checkpoint::new(
+            "cifar_cnn".into(),
+            17,
+            (0..1000).map(|i| i as f32 * 0.5 - 3.0).collect(),
+        );
         ck.save(&p).unwrap();
         let back = Checkpoint::load(&p).unwrap();
         assert_eq!(ck, back);
@@ -123,27 +235,109 @@ mod tests {
     }
 
     #[test]
+    fn v2_state_sections_roundtrip() {
+        let p = tmp("v2");
+        let ck = Checkpoint {
+            model: "mnist_dnn".into(),
+            epoch: 3,
+            params: vec![1.0, -2.0, 0.5],
+            residues: vec![vec![0.25, -0.5, 0.0], vec![1.5, 0.0, -0.125]],
+            momentum: vec![0.1, 0.2, 0.3],
+        };
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(ck, back);
+        // in-memory bytes are the same format
+        let back2 = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(ck, back2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn plain_checkpoints_stay_version_1() {
+        // no state sections -> v1 bytes, so older readers still load them
+        let ck = Checkpoint::new("m".into(), 0, vec![1.0; 8]);
+        let bytes = ck.to_bytes();
+        assert_eq!(u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]), 1);
+        // and a v1 file loads with empty sections
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert!(back.residues.is_empty() && back.momentum.is_empty());
+        // state sections bump to v2
+        let ck2 = Checkpoint {
+            residues: vec![vec![0.5; 8]],
+            ..ck
+        };
+        let bytes2 = ck2.to_bytes();
+        assert_eq!(u32::from_le_bytes([bytes2[4], bytes2[5], bytes2[6], bytes2[7]]), 2);
+    }
+
+    #[test]
     fn detects_corruption() {
         let p = tmp("corrupt");
-        let ck = Checkpoint {
-            model: "m".into(),
-            epoch: 0,
-            params: vec![1.0; 64],
-        };
+        let ck = Checkpoint::new("m".into(), 0, vec![1.0; 64]);
         ck.save(&p).unwrap();
         let mut bytes = std::fs::read(&p).unwrap();
         let mid = bytes.len() / 2;
         bytes[mid] ^= 0xff;
         std::fs::write(&p, bytes).unwrap();
-        assert!(Checkpoint::load(&p).is_err());
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn detects_state_section_corruption() {
+        let ck = Checkpoint {
+            model: "m".into(),
+            epoch: 0,
+            params: vec![1.0; 16],
+            residues: vec![vec![2.0; 16]],
+            momentum: vec![3.0; 16],
+        };
+        let mut bytes = ck.to_bytes();
+        // flip a byte inside the momentum data (after params + their checksum)
+        let in_momentum = bytes.len() - 8 - 16 * 4 + 2;
+        bytes[in_momentum] ^= 0xff;
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
     }
 
     #[test]
     fn rejects_garbage_file() {
         let p = tmp("garbage");
         std::fs::write(&p, b"not a checkpoint").unwrap();
-        assert!(Checkpoint::load(&p).is_err());
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("not an adacomp checkpoint"), "{err}");
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let p = tmp("truncated");
+        let ck = Checkpoint::new("m".into(), 2, vec![0.5; 128]);
+        ck.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // cut mid-params and mid-header
+        for cut in [bytes.len() - 20, 10] {
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(Checkpoint::load(&p).is_err(), "cut at {cut}");
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_future_version() {
+        let ck = Checkpoint::new("m".into(), 0, vec![1.0; 4]);
+        let good = ck.to_bytes();
+        // wrong magic
+        let mut bad = good.clone();
+        bad[0] ^= 0x55;
+        let err = Checkpoint::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("not an adacomp checkpoint"), "{err}");
+        // future version (3) must be rejected, not misparsed
+        let mut fut = good;
+        fut[4..8].copy_from_slice(&3u32.to_le_bytes());
+        let err = Checkpoint::from_bytes(&fut).unwrap_err().to_string();
+        assert!(err.contains("unsupported checkpoint version 3"), "{err}");
     }
 }

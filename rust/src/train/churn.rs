@@ -1,0 +1,199 @@
+//! Deterministic membership schedules for the elastic fleet.
+//!
+//! Two sources of membership events, both resolved to an explicit sorted
+//! event list **before** the run starts so every exchange mode and thread
+//! count sees the identical schedule:
+//!
+//! * `--churn "fail@120:2,join@300:1"` — explicit scripted events. `fail`
+//!   drops learners and their residual state (gradient mass is lost),
+//!   `leave` drops learners after handing their residual state to the
+//!   survivors through a v2 [`Checkpoint`](super::checkpoint::Checkpoint),
+//!   `join` adds cold learners.
+//! * `--mtbf M` — a seeded random-failure process: each step fails one
+//!   learner with probability 1/M. The draw is a pure function of
+//!   (seed, step) — the same xorshift64* generator family the jitter model
+//!   uses, under a distinct salt — so an MTBF run is exactly as
+//!   reproducible as a scripted one.
+//!
+//! An event at step `s` is applied at the step boundary **before** step `s`
+//! runs; the engine drains the staleness window to the frontier first (all
+//! updates `< s` applied, no step `>= s` started).
+
+use anyhow::{bail, Result};
+
+/// Valid-form list for churn spec errors (the `topology::build` pattern).
+pub const VALID: &str =
+    "valid: comma-separated fail@STEP:K | join@STEP:K | leave@STEP:K, K >= 1";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Learners vanish; their residual + momentum state is lost.
+    Fail,
+    /// Cold learners join the fleet.
+    Join,
+    /// Learners depart gracefully, handing state to the survivors.
+    Leave,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Fail => "fail",
+            EventKind::Join => "join",
+            EventKind::Leave => "leave",
+        }
+    }
+}
+
+/// One membership event: `count` learners `kind` at the boundary before
+/// global step `step`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub step: usize,
+    pub kind: EventKind,
+    pub count: usize,
+}
+
+/// Parse a `--churn` spec into events sorted by step (stable — same-step
+/// events keep their spec order). Empty spec = no events. Errors carry the
+/// valid-form list.
+pub fn parse(spec: &str) -> Result<Vec<Event>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (kind_s, rest) = part.split_once('@').ok_or_else(|| {
+            anyhow::anyhow!("churn event '{part}': missing '@' ({VALID})")
+        })?;
+        let kind = match kind_s {
+            "fail" => EventKind::Fail,
+            "join" => EventKind::Join,
+            "leave" => EventKind::Leave,
+            other => bail!("churn event '{part}': unknown kind '{other}' ({VALID})"),
+        };
+        let (step_s, count_s) = rest.split_once(':').ok_or_else(|| {
+            anyhow::anyhow!("churn event '{part}': missing ':COUNT' ({VALID})")
+        })?;
+        let step: usize = step_s.parse().map_err(|_| {
+            anyhow::anyhow!("churn event '{part}': '{step_s}' is not a step number ({VALID})")
+        })?;
+        let count: usize = count_s.parse().map_err(|_| {
+            anyhow::anyhow!("churn event '{part}': '{count_s}' is not a learner count ({VALID})")
+        })?;
+        if count < 1 {
+            bail!("churn event '{part}': count must be >= 1 ({VALID})");
+        }
+        out.push(Event { step, kind, count });
+    }
+    out.sort_by_key(|e| e.step);
+    Ok(out)
+}
+
+fn xorshift64star(mut x: u64) -> u64 {
+    x ^= x >> 12;
+    x ^= x << 25;
+    x ^= x >> 27;
+    x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+}
+
+/// Whether the MTBF process fails one learner at step `step`: a
+/// deterministic draw with probability `1/mtbf`, salted away from the
+/// jitter stream (`mtbf == 0` disables the process).
+pub fn mtbf_fails(mtbf: u64, seed: u64, step: u64) -> bool {
+    if mtbf == 0 {
+        return false;
+    }
+    let x = xorshift64star(
+        seed ^ 0x6d74_6266 ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1),
+    );
+    let u = (x >> 11) as f64 / (1u64 << 53) as f64;
+    u < 1.0 / mtbf as f64
+}
+
+/// Resolve the run's full membership schedule: scripted `--churn` events
+/// merged with the MTBF failure draws for every step in `0..total_steps`,
+/// sorted by step. Materializing the MTBF draws up front keeps the worker
+/// pool's epoch frontier computable before the steps run.
+pub fn schedule(spec: &str, mtbf: u64, seed: u64, total_steps: usize) -> Result<Vec<Event>> {
+    let mut events = parse(spec)?;
+    if mtbf > 0 {
+        for step in 0..total_steps {
+            if mtbf_fails(mtbf, seed, step as u64) {
+                events.push(Event {
+                    step,
+                    kind: EventKind::Fail,
+                    count: 1,
+                });
+            }
+        }
+        events.sort_by_key(|e| e.step);
+    }
+    Ok(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_sorts_events() {
+        let ev = parse("join@300:1, fail@120:2,leave@500:1").unwrap();
+        assert_eq!(
+            ev,
+            vec![
+                Event { step: 120, kind: EventKind::Fail, count: 2 },
+                Event { step: 300, kind: EventKind::Join, count: 1 },
+                Event { step: 500, kind: EventKind::Leave, count: 1 },
+            ]
+        );
+        assert!(parse("").unwrap().is_empty());
+        assert!(parse("  ").unwrap().is_empty());
+        // same-step events keep spec order (stable sort)
+        let ev = parse("fail@10:1,join@10:2").unwrap();
+        assert_eq!(ev[0].kind, EventKind::Fail);
+        assert_eq!(ev[1].kind, EventKind::Join);
+    }
+
+    #[test]
+    fn rejects_malformed_specs_with_valid_forms() {
+        for bad in [
+            "fail@120",      // missing count
+            "fail:120:2",    // missing @
+            "explode@9:1",   // unknown kind
+            "fail@x:1",      // bad step
+            "fail@9:x",      // bad count
+            "fail@9:0",      // zero count
+            "join@:1",       // empty step
+        ] {
+            let err = parse(bad).unwrap_err().to_string();
+            assert!(err.contains("fail@STEP:K"), "{bad}: {err}");
+            assert!(err.contains(bad.split(',').next().unwrap().trim()), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn mtbf_draws_are_deterministic_and_rate_plausible() {
+        assert!(!mtbf_fails(0, 7, 3), "mtbf 0 disables the process");
+        let fails: Vec<bool> = (0..10_000).map(|s| mtbf_fails(100, 42, s)).collect();
+        let again: Vec<bool> = (0..10_000).map(|s| mtbf_fails(100, 42, s)).collect();
+        assert_eq!(fails, again, "same (seed, step) must draw the same");
+        let n = fails.iter().filter(|&&f| f).count();
+        // expectation 100 over 10k steps; allow a generous band
+        assert!(n > 40 && n < 250, "observed {n} failures at mtbf 100");
+        // a different seed draws a different timeline
+        let other: Vec<bool> = (0..10_000).map(|s| mtbf_fails(100, 43, s)).collect();
+        assert_ne!(fails, other);
+    }
+
+    #[test]
+    fn schedule_merges_scripted_and_mtbf_events() {
+        let ev = schedule("fail@5:1", 0, 1, 100).unwrap();
+        assert_eq!(ev.len(), 1);
+        // tiny mtbf: most steps fail — merged list stays step-sorted
+        let ev = schedule("join@50:2", 3, 9, 100).unwrap();
+        assert!(ev.iter().any(|e| e.kind == EventKind::Join));
+        assert!(ev.iter().any(|e| e.kind == EventKind::Fail));
+        for w in ev.windows(2) {
+            assert!(w[0].step <= w[1].step);
+        }
+        assert!(schedule("bogus", 0, 1, 10).is_err());
+    }
+}

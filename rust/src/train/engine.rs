@@ -98,11 +98,14 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use super::checkpoint::Checkpoint;
+use super::churn;
 use super::eval::test_error;
 use super::learner::{cell_ring_for_plan, BucketCell, Learner};
 use super::pool::PoolCtl;
 use crate::comm::{
-    topology, Bucket, Fabric, LinkModel, Reduced, ReducePlan, RoundSched, Topology,
+    topology, Bucket, Fabric, LinkModel, MembershipChange, Reduced, ReducePlan, RoundSched,
+    Topology,
 };
 use crate::compress::{self, Packet};
 use crate::data::Dataset;
@@ -211,6 +214,20 @@ pub struct TrainConfig {
     /// Results at a fixed `K` are deterministic across thread counts,
     /// exchange modes, topologies, and jitter settings (see module docs).
     pub staleness: usize,
+    /// Scripted membership schedule (`--churn "fail@120:2,join@300:1"`;
+    /// empty = static fleet). Events fire at the step boundary **before**
+    /// the named global step, after the engine drains the staleness window
+    /// to the frontier: `fail` drops learners and loses their residual
+    /// state, `leave` hands residual + optimizer momentum state to the
+    /// survivors through a v2 checkpoint, `join` adds cold learners. Same
+    /// seed + schedule ⇒ bit-identical results at every thread count and
+    /// exchange mode (see [`super::churn`]).
+    pub churn: String,
+    /// Mean steps between random single-learner failures (`--mtbf`; 0 =
+    /// off). Draws are seeded like `--jitter` and materialized into the
+    /// membership schedule before the run starts, so an MTBF run is exactly
+    /// as reproducible as a scripted one.
+    pub mtbf: u64,
 }
 
 impl Default for TrainConfig {
@@ -237,6 +254,8 @@ impl Default for TrainConfig {
             exchange: "streamed".into(),
             bucket_bytes: 0,
             staleness: 0,
+            churn: String::new(),
+            mtbf: 0,
         }
     }
 }
@@ -252,35 +271,23 @@ pub struct Engine<'a> {
     pub layout: &'a Layout,
 }
 
-/// Run-scoped state shared between the engine thread and the pool workers.
-/// Everything here is either lock-protected or atomically published; the
-/// staleness window guarantees a step slot is never touched by a worker
-/// while the engine still owns it (and vice versa).
-struct Shared<'a> {
-    dataset: &'a dyn Dataset,
-    layout: &'a Layout,
-    /// The run's reduce plan: bucket coalescing + port mapping, built once.
+/// The learner-count-dependent half of the run state: everything a
+/// membership epoch (churn event) rebuilds. Lives behind
+/// [`Shared::fleet`]'s `RwLock`: workers and the engine's step loop take
+/// read guards; the engine takes the write guard only at a membership
+/// boundary, when the staleness window has been drained to the frontier
+/// and every worker is parked in `wait_runnable` (the pool's open limit is
+/// capped at the next event step, so no worker can be mid-step).
+struct Fleet {
+    /// The fleet's reduce plan: bucket coalescing + port mapping. Bucket
+    /// structure depends only on layout + threshold, so a churn rebuild
+    /// with the same threshold keeps `Shared::n_buckets` invariant — only
+    /// the bucket→port mapping changes with the topology.
     plan: ReducePlan,
-    /// Param-version ring: slot `v % window` holds `θ_v` while any
-    /// in-flight step may still read it. Workers hold a read lock for the
-    /// duration of a learner step; the engine takes the write lock only
-    /// for the slot being overwritten (dead by the window invariant).
-    hist: Vec<RwLock<Vec<f32>>>,
     learners: Vec<Mutex<Learner>>,
     /// Per-(learner, step-slot, bucket) packet hand-off cells:
     /// `cells[l][slot][bucket]`, slot = step % window.
     cells: Vec<Vec<Vec<BucketCell>>>,
-    /// Window size `K + 1` (number of step slots / param versions).
-    window: usize,
-    /// The staleness bound `K` (step `t` reads `θ_{max(0, t−K)}`).
-    staleness: usize,
-    n_buckets: usize,
-    /// `ready[slot * n_buckets + b]`: learners that completed bucket `b`
-    /// of the slot's in-flight step.
-    ready: Vec<AtomicUsize>,
-    /// `finished[slot]`: learners fully done with the slot's step (loss and
-    /// compute span published).
-    finished: Vec<AtomicUsize>,
     /// `pub_ns[(l * window + slot) * n_buckets + b]`: nanoseconds into
     /// learner `l`'s own step when it published bucket `b` (min 1) — the
     /// per-learner ready-time offsets the simulated timeline scales by the
@@ -292,6 +299,36 @@ struct Shared<'a> {
     /// `loss_bits[l * window + slot]`: the step's loss (f32 bits), written
     /// before the `finished` bump.
     loss_bits: Vec<AtomicU32>,
+}
+
+/// Run-scoped state shared between the engine thread and the pool workers.
+/// Everything here is either lock-protected or atomically published; the
+/// staleness window guarantees a step slot is never touched by a worker
+/// while the engine still owns it (and vice versa).
+struct Shared<'a> {
+    dataset: &'a dyn Dataset,
+    layout: &'a Layout,
+    /// The learner-count-dependent state, rebuilt at membership epochs.
+    fleet: RwLock<Fleet>,
+    /// Param-version ring: slot `v % window` holds `θ_v` while any
+    /// in-flight step may still read it. Workers hold a read lock for the
+    /// duration of a learner step; the engine takes the write lock only
+    /// for the slot being overwritten (dead by the window invariant).
+    /// Deliberately *outside* the fleet — central weights survive churn.
+    hist: Vec<RwLock<Vec<f32>>>,
+    /// Window size `K + 1` (number of step slots / param versions).
+    window: usize,
+    /// The staleness bound `K` (step `t` reads `θ_{max(0, t−K)}`).
+    staleness: usize,
+    /// Bucket count — invariant across churn rebuilds (same layout, same
+    /// coalescing threshold).
+    n_buckets: usize,
+    /// `ready[slot * n_buckets + b]`: learners that completed bucket `b`
+    /// of the slot's in-flight step.
+    ready: Vec<AtomicUsize>,
+    /// `finished[slot]`: learners fully done with the slot's step (loss and
+    /// compute span published).
+    finished: Vec<AtomicUsize>,
     /// Wakes the engine's bucket scan when a bucket completes, a learner
     /// finishes a step, or a worker fails.
     event: ReadyEvent,
@@ -339,15 +376,28 @@ impl ReadyEvent {
 
 /// Pool-worker body: advance this worker's learner chunk through the step
 /// sequence, parking only when the next step would outrun the staleness
-/// window or the epoch frontier. Both exchange modes run the same streamed
-/// learner phase — the mode only changes when the engine consumes the
-/// buckets.
-fn worker_loop(shared: &Shared<'_>, ctl: &PoolCtl, range: std::ops::Range<usize>) {
+/// window, the epoch frontier, or the next membership event. Both exchange
+/// modes run the same streamed learner phase — the mode only changes when
+/// the engine consumes the buckets.
+///
+/// The chunk is recomputed from the **current** fleet size every step
+/// (worker `widx` of `nworkers` owns an equal contiguous slice), so workers
+/// stay balanced across a shrinking or growing pool; a worker whose slice
+/// is empty after a shrink simply free-runs to the open limit and parks.
+/// The fleet read guard is held only inside the step body — never across a
+/// park — so the engine's write lock at a membership boundary cannot
+/// deadlock against a parked worker.
+fn worker_loop(shared: &Shared<'_>, ctl: &PoolCtl, widx: usize, nworkers: usize) {
     let mut step = 0u64;
     while ctl.wait_runnable(step) {
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| -> Result<()> {
-            for i in range.clone() {
-                shared.run_learner_step(i, step as usize, None)?;
+            let fleet = shared.fleet.read().unwrap();
+            let n = fleet.learners.len();
+            let chunk = n.div_ceil(nworkers);
+            let lo = (widx * chunk).min(n);
+            let hi = (lo + chunk).min(n);
+            for i in lo..hi {
+                shared.run_learner_step(&fleet, i, step as usize, None)?;
             }
             Ok(())
         }));
@@ -380,8 +430,10 @@ impl Shared<'_> {
     /// slot cells, publish per-bucket ready offsets and the step's
     /// loss/compute span. `exec` = the engine's shared local executor on
     /// the sequential path, `None` = the learner's own (worker path).
+    /// Callers pass the fleet read guard they already hold.
     fn run_learner_step(
         &self,
+        fleet: &Fleet,
         i: usize,
         step: usize,
         exec: Option<&mut dyn Executor>,
@@ -389,32 +441,32 @@ impl Shared<'_> {
         let w = self.window;
         let slot = step % w;
         let params = self.hist[self.params_version(step) % w].read().unwrap();
-        let mut l = self.learners[i].lock().unwrap();
+        let mut l = fleet.learners[i].lock().unwrap();
         let t0 = Instant::now();
-        let mut on_bucket = |bi: usize| self.bucket_packed(i, slot, bi, &t0);
+        let mut on_bucket = |bi: usize| self.bucket_packed(fleet, i, slot, bi, &t0);
         match exec {
             Some(e) => l.step_streamed_with(
                 e,
                 &params,
                 self.dataset,
                 self.layout,
-                &self.plan,
-                &self.cells[i][slot],
+                &fleet.plan,
+                &fleet.cells[i][slot],
                 &mut on_bucket,
             )?,
             None => l.step_streamed(
                 &params,
                 self.dataset,
                 self.layout,
-                &self.plan,
-                &self.cells[i][slot],
+                &fleet.plan,
+                &fleet.cells[i][slot],
                 &mut on_bucket,
             )?,
         }
         let span = (t0.elapsed().as_nanos() as u64).max(1);
         let loss = l.loss;
-        self.compute_ns[i * w + slot].store(span, Ordering::Relaxed);
-        self.loss_bits[i * w + slot].store(loss.to_bits(), Ordering::Relaxed);
+        fleet.compute_ns[i * w + slot].store(span, Ordering::Relaxed);
+        fleet.loss_bits[i * w + slot].store(loss.to_bits(), Ordering::Relaxed);
         drop(l);
         drop(params);
         // the Release bump publishes the stores above to the engine's
@@ -427,11 +479,11 @@ impl Shared<'_> {
     /// Bucket-ready notification (both sequential and pooled): record this
     /// learner's publish offset, bump the bucket's counter; the completing
     /// learner wakes the engine.
-    fn bucket_packed(&self, l: usize, slot: usize, bi: usize, t0: &Instant) {
+    fn bucket_packed(&self, fleet: &Fleet, l: usize, slot: usize, bi: usize, t0: &Instant) {
         let ns = (t0.elapsed().as_nanos() as u64).max(1);
-        self.pub_ns[(l * self.window + slot) * self.n_buckets + bi].store(ns, Ordering::Relaxed);
+        fleet.pub_ns[(l * self.window + slot) * self.n_buckets + bi].store(ns, Ordering::Relaxed);
         let c = self.ready[slot * self.n_buckets + bi].fetch_add(1, Ordering::Release) + 1;
-        if c == self.learners.len() {
+        if c == fleet.learners.len() {
             self.event.bump();
         }
     }
@@ -440,10 +492,17 @@ impl Shared<'_> {
     /// max over learners of `start_l + publish_offset_l · jitter_mult_l`.
     /// Only valid once the bucket's ready counter reached `n` (the Acquire
     /// load of that counter publishes every learner's offset store).
-    fn bucket_ready_s(&self, slot: usize, bi: usize, start: &[f64], jmult: &[f64]) -> f64 {
+    fn bucket_ready_s(
+        &self,
+        fleet: &Fleet,
+        slot: usize,
+        bi: usize,
+        start: &[f64],
+        jmult: &[f64],
+    ) -> f64 {
         let mut r = 0.0f64;
         for (l, (&s, &jm)) in start.iter().zip(jmult.iter()).enumerate() {
-            let ns = self.pub_ns[(l * self.window + slot) * self.n_buckets + bi]
+            let ns = fleet.pub_ns[(l * self.window + slot) * self.n_buckets + bi]
                 .load(Ordering::Relaxed);
             r = r.max(s + ns as f64 * 1e-9 * jm);
         }
@@ -453,8 +512,8 @@ impl Shared<'_> {
     /// Learner `l`'s simulated compute span for the slot's step (measured
     /// wall span of its own fwd/bwd+pack, scaled by the jitter model).
     /// Only valid once `finished[slot]` reached `n`.
-    fn dur_s(&self, slot: usize, l: usize, jm: f64) -> f64 {
-        self.compute_ns[l * self.window + slot].load(Ordering::Relaxed) as f64 * 1e-9 * jm
+    fn dur_s(&self, fleet: &Fleet, slot: usize, l: usize, jm: f64) -> f64 {
+        fleet.compute_ns[l * self.window + slot].load(Ordering::Relaxed) as f64 * 1e-9 * jm
     }
 }
 
@@ -537,6 +596,7 @@ impl<'a> Engine<'a> {
         // fails with the valid list, not a mid-run panic.
         let mode = ExchangeMode::parse(&cfg.exchange)?;
         validate_window(cfg.staleness, cfg.link.jitter)?;
+        super::churn::parse(&cfg.churn)?;
         let optimizer = optim::build(&cfg.optimizer, init_params.len(), cfg.momentum)
             .ok_or_else(|| {
                 anyhow!(
@@ -586,33 +646,31 @@ impl<'a> Engine<'a> {
         let shared = Shared {
             dataset,
             layout,
-            plan,
+            fleet: RwLock::new(Fleet {
+                plan,
+                learners,
+                cells,
+                pub_ns: (0..cfg.n_learners * window * num_buckets)
+                    .map(|_| AtomicU64::new(0))
+                    .collect(),
+                compute_ns: (0..cfg.n_learners * window).map(|_| AtomicU64::new(0)).collect(),
+                loss_bits: (0..cfg.n_learners * window).map(|_| AtomicU32::new(0)).collect(),
+            }),
             hist: (0..window).map(|_| RwLock::new(init_params.to_vec())).collect(),
-            learners,
-            cells,
             window,
             staleness: cfg.staleness,
             n_buckets: num_buckets,
             ready: (0..window * num_buckets).map(|_| AtomicUsize::new(0)).collect(),
             finished: (0..window).map(|_| AtomicUsize::new(0)).collect(),
-            pub_ns: (0..cfg.n_learners * window * num_buckets)
-                .map(|_| AtomicU64::new(0))
-                .collect(),
-            compute_ns: (0..cfg.n_learners * window).map(|_| AtomicU64::new(0)).collect(),
-            loss_bits: (0..cfg.n_learners * window).map(|_| AtomicU32::new(0)).collect(),
             event: ReadyEvent::default(),
         };
 
         let (record, final_slot) = if parallel {
             let ctl = PoolCtl::new(cfg.staleness);
             std::thread::scope(|scope| {
-                let chunk = cfg.n_learners.div_ceil(threads);
-                let mut start = 0usize;
-                while start < cfg.n_learners {
-                    let end = (start + chunk).min(cfg.n_learners);
+                for widx in 0..threads {
                     let (sh, c) = (&shared, &ctl);
-                    scope.spawn(move || worker_loop(sh, c, start..end));
-                    start = end;
+                    scope.spawn(move || worker_loop(sh, c, widx, threads));
                 }
                 // Shut the pool down however run_loop exits (ok, error, or
                 // panic) — parked workers would otherwise deadlock the
@@ -622,6 +680,7 @@ impl<'a> Engine<'a> {
                     cfg,
                     layout,
                     dataset,
+                    factory,
                     local,
                     &shared,
                     Some(&ctl),
@@ -633,7 +692,8 @@ impl<'a> Engine<'a> {
             })?
         } else {
             run_loop(
-                cfg, layout, dataset, local, &shared, None, mode, topo, optimizer, hook,
+                cfg, layout, dataset, factory, local, &shared, None, mode, topo, optimizer,
+                hook,
             )?
         };
 
@@ -668,7 +728,7 @@ fn tally_packet(
 /// its per-learner vecs).
 #[allow(clippy::too_many_arguments)]
 fn exchange_one_bucket(
-    shared: &Shared<'_>,
+    fleet: &Fleet,
     slot: usize,
     layout: &Layout,
     layer_lens: &[usize],
@@ -683,7 +743,7 @@ fn exchange_one_bucket(
     comp_all: &mut CompStat,
 ) -> crate::comm::RoundCost {
     let bi = bucket.id;
-    for (l, ring) in shared.cells.iter().enumerate() {
+    for (l, ring) in fleet.cells.iter().enumerate() {
         let mut cell = ring[slot][bi].lock();
         for s in cell.slots.iter_mut() {
             gather[l].push(s.take().expect("ready bucket is missing a packet"));
@@ -695,13 +755,197 @@ fn exchange_one_bucket(
         }
     }
     let cost = topo.exchange_bucket_into(bucket, &*gather, layer_lens, sched, fabric, reduced);
-    for (l, ring) in shared.cells.iter().enumerate() {
+    for (l, ring) in fleet.cells.iter().enumerate() {
         let mut cell = ring[slot][bi].lock();
         for (s, p) in cell.slots.iter_mut().zip(gather[l].drain(..)) {
             *s = Some(p);
         }
     }
     cost
+}
+
+/// Apply one membership event under the fleet write lock (all workers are
+/// parked at the pool's open limit; the staleness window is drained).
+/// Returns the rebuilt topology plus the event's timeline entry (the
+/// caller fills in `drain_stall_s`), or `None` when the event had to be
+/// skipped. The bucket structure is churn-invariant (same layout, same
+/// threshold) — only the bucket→port mapping and the per-learner rings are
+/// rebuilt.
+#[allow(clippy::too_many_arguments)]
+fn apply_membership_event(
+    cfg: &TrainConfig,
+    layout: &Layout,
+    shared: &Shared<'_>,
+    factory: &dyn ExecutorFactory,
+    parallel: bool,
+    threshold: usize,
+    epoch: usize,
+    ev: churn::Event,
+    optimizer: &mut dyn Optimizer,
+) -> Result<Option<(Box<dyn Topology>, MembershipChange)>> {
+    use churn::EventKind;
+    let mut fleet = shared.fleet.write().unwrap();
+    let n = fleet.learners.len();
+    let t0 = Instant::now();
+    let (mut lost_l1, mut handover_l1) = (0.0f64, 0.0f64);
+    let mut count = ev.count;
+    match ev.kind {
+        EventKind::Fail | EventKind::Leave => {
+            if count >= n {
+                if n == 1 {
+                    eprintln!(
+                        "churn: skipping {}@{}:{} — would leave no learners",
+                        ev.kind.name(),
+                        ev.step,
+                        ev.count
+                    );
+                    return Ok(None);
+                }
+                eprintln!(
+                    "churn: clamping {}@{}:{} to {} — would leave no learners",
+                    ev.kind.name(),
+                    ev.step,
+                    ev.count,
+                    n - 1
+                );
+                count = n - 1;
+            }
+            let departing = fleet.learners.split_off(n - count);
+            if ev.kind == EventKind::Fail {
+                // a crash loses the accumulated residual gradient mass —
+                // account it so fail and leave are distinguishable
+                for dm in &departing {
+                    let d = dm.lock().unwrap();
+                    for li in 0..layout.num_layers() {
+                        lost_l1 += d
+                            .compressor
+                            .residue(li)
+                            .iter()
+                            .map(|x| x.abs() as f64)
+                            .sum::<f64>();
+                    }
+                }
+            } else {
+                // graceful leave: departing residual + optimizer momentum
+                // cross the same v2 checkpoint format an external
+                // coordinator would use, then fold into the survivors
+                // (round-robin) so no gradient mass is lost
+                let mut ck =
+                    Checkpoint::new(cfg.model_name.clone(), epoch as u32, Vec::new());
+                for dm in &departing {
+                    let d = dm.lock().unwrap();
+                    let mut flat = Vec::with_capacity(layout.total);
+                    // same per-layer summation order as the fail branch, so
+                    // a matched fail/leave pair accounts the identical mass
+                    for li in 0..layout.num_layers() {
+                        let r = d.compressor.residue(li);
+                        handover_l1 += r.iter().map(|x| x.abs() as f64).sum::<f64>();
+                        flat.extend_from_slice(r);
+                    }
+                    ck.residues.push(flat);
+                }
+                ck.momentum = optimizer.state();
+                let ck = Checkpoint::from_bytes(&ck.to_bytes())?;
+                let survivors = fleet.learners.len();
+                for (j, flat) in ck.residues.iter().enumerate() {
+                    let mut s = fleet.learners[j % survivors].lock().unwrap();
+                    for li in 0..layout.num_layers() {
+                        if let Some(dst) = s.compressor.residue_mut(li) {
+                            for (d, &x) in dst.iter_mut().zip(layout.view(li, flat)) {
+                                *d += x;
+                            }
+                        }
+                    }
+                }
+                if !ck.momentum.is_empty() {
+                    optimizer.load_state(&ck.momentum);
+                }
+            }
+            drop(departing);
+        }
+        EventKind::Join => {
+            // joiners start cold: fresh residue and a fresh RNG stream,
+            // decorrelated from any learner that ever held this id by
+            // mixing the birth step into the seed
+            let seed = cfg.seed ^ (ev.step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            for j in 0..count {
+                let exec = if parallel {
+                    Some(factory.build_worker()?)
+                } else {
+                    None
+                };
+                fleet.learners.push(Mutex::new(Learner::new(
+                    n + j,
+                    n + count,
+                    shared.dataset,
+                    layout,
+                    &cfg.compression,
+                    cfg.batch_per_learner,
+                    seed,
+                    exec,
+                )));
+            }
+        }
+    }
+
+    // reindex: contiguous ids + data shards over the new fleet size
+    let new_n = fleet.learners.len();
+    for (i, lm) in fleet.learners.iter_mut().enumerate() {
+        let l = lm.get_mut().unwrap();
+        l.id = i;
+        l.shard.learner = i;
+        l.shard.n_learners = new_n;
+    }
+
+    // rebuild topology (graceful degradation — never abort mid-run on a
+    // bound that the *requested* spec no longer satisfies; re-checked from
+    // the original spec each event so a re-grown fleet restores it)
+    let effective = topology::fallback(&cfg.topology, new_n);
+    let degraded = effective != cfg.topology;
+    if degraded {
+        eprintln!(
+            "churn: topology '{}' out of bounds for {new_n} learners at step {}; \
+             degrading to '{effective}'",
+            cfg.topology, ev.step
+        );
+    }
+    let topo = topology::build(&effective, new_n)?;
+    fleet.plan = ReducePlan::build(layout, threshold, topo.ports());
+    debug_assert_eq!(
+        fleet.plan.num_buckets(),
+        shared.n_buckets,
+        "bucket structure must be churn-invariant"
+    );
+    let window = shared.window;
+    let nb = shared.n_buckets;
+    fleet.cells = (0..new_n)
+        .map(|_| cell_ring_for_plan(&fleet.plan, window))
+        .collect();
+    fleet.pub_ns = (0..new_n * window * nb).map(|_| AtomicU64::new(0)).collect();
+    fleet.compute_ns = (0..new_n * window).map(|_| AtomicU64::new(0)).collect();
+    fleet.loss_bits = (0..new_n * window).map(|_| AtomicU32::new(0)).collect();
+    for r in &shared.ready {
+        r.store(0, Ordering::Relaxed);
+    }
+    for f in &shared.finished {
+        f.store(0, Ordering::Relaxed);
+    }
+
+    Ok(Some((
+        topo,
+        MembershipChange {
+            step: ev.step as u64,
+            kind: ev.kind.name().to_string(),
+            count,
+            n_after: new_n,
+            topology: effective,
+            degraded,
+            rebuild_s: t0.elapsed().as_secs_f64(),
+            drain_stall_s: 0.0,
+            lost_l1,
+            handover_l1,
+        },
+    )))
 }
 
 /// Engine-side wait for an atomic counter to reach `n`, surfacing worker
@@ -737,6 +981,7 @@ fn run_loop(
     cfg: &TrainConfig,
     layout: &Layout,
     dataset: &dyn Dataset,
+    factory: &dyn ExecutorFactory,
     mut local: Box<dyn Executor>,
     shared: &Shared<'_>,
     pool: Option<&PoolCtl>,
@@ -745,13 +990,12 @@ fn run_loop(
     mut optimizer: Box<dyn Optimizer>,
     mut hook: Option<&mut EpochHook<'_>>,
 ) -> Result<(RunRecord, usize)> {
-    let n = cfg.n_learners;
-    let plan = &shared.plan;
-    let nb = plan.num_buckets();
+    let mut n = cfg.n_learners;
+    let nb = shared.n_buckets;
     let w = shared.window;
     let k = shared.staleness;
     let layer_lens = layout.layer_lens();
-    let inv_learners = 1.0f32 / n as f32;
+    let mut inv_learners = 1.0f32 / n as f32;
     let streamed = mode == ExchangeMode::Streamed;
     let mut fabric = Fabric::new(cfg.link);
 
@@ -759,6 +1003,41 @@ fn run_loop(
         cfg.steps_per_epoch
     } else {
         (dataset.train_len() / (cfg.batch_per_learner * n)).max(1)
+    };
+    let total_steps = steps_per_epoch * cfg.epochs;
+
+    // The run's full membership schedule, resolved before the first step
+    // (scripted --churn events merged with the precomputed --mtbf draws) so
+    // the pool's open limits — and therefore the window-drain points — are
+    // identical at every thread count and exchange mode.
+    let threshold = if cfg.bucket_bytes == 0 {
+        ReducePlan::auto_threshold(&cfg.link)
+    } else {
+        cfg.bucket_bytes
+    };
+    let events: Vec<churn::Event> =
+        churn::schedule(&cfg.churn, cfg.mtbf, cfg.seed, total_steps)?
+            .into_iter()
+            .filter(|e| {
+                if e.step >= total_steps {
+                    eprintln!(
+                        "churn: ignoring {}@{}:{} beyond the run's {total_steps} steps",
+                        e.kind.name(),
+                        e.step,
+                        e.count
+                    );
+                    return false;
+                }
+                true
+            })
+            .collect();
+    let mut next_event = 0usize;
+    // Worker frontier cap: a worker may never enter a membership-event
+    // step — by the time the engine reaches the event, every update before
+    // it has been applied and every worker is parked (drained window).
+    let open_limit = |next_event: usize, epoch_limit: usize| -> u64 {
+        let ev = events.get(next_event).map(|e| e.step).unwrap_or(usize::MAX);
+        epoch_limit.min(ev) as u64
     };
 
     let mut record = RunRecord {
@@ -776,16 +1055,21 @@ fn run_loop(
     let mut grad_mean = vec![0.0f32; layout.total];
     let mut reduced = Reduced::new(&layer_lens);
     // The no-compression baseline: one coalesced whole-model dense round,
-    // fixed for the run and identical across topologies, exchange modes,
-    // bucket thresholds AND staleness windows — `projected_speedup()`
-    // always measures against the same synchronous "before" system.
-    let dense_round_s = plan.dense_round_s(&layer_lens, n, &cfg.link);
+    // identical across topologies, exchange modes, bucket thresholds AND
+    // staleness windows — `projected_speedup()` always measures against the
+    // same synchronous "before" system. Recomputed only when churn changes
+    // the learner count.
+    let mut dense_round_s;
     // Engine scratch, reused every step (no allocation in the steady
     // state): per-learner bucket gathers, per-bucket done flags, and the
-    // continuous per-port timeline.
-    let mut gather: Vec<Vec<Packet>> = (0..n)
-        .map(|_| Vec::with_capacity(plan.max_bucket_layers()))
-        .collect();
+    // continuous per-port timeline. Resized at membership epochs.
+    let mut gather: Vec<Vec<Packet>>;
+    {
+        let fleet = shared.fleet.read().unwrap();
+        dense_round_s = fleet.plan.dense_round_s(&layer_lens, n, &cfg.link);
+        let cap = fleet.plan.max_bucket_layers();
+        gather = (0..n).map(|_| Vec::with_capacity(cap)).collect();
+    }
     let mut done_flags = vec![false; nb];
     let mut port_end = vec![0.0f64; topo.ports()];
     // Windowed-timeline state: per-learner availability/start times and
@@ -809,23 +1093,78 @@ fn run_loop(
         let mut comp_fc = CompStat::default();
         let mut comp_all = CompStat::default();
 
-        // Open this epoch's steps to the workers. The frontier never
-        // crosses an epoch boundary, so evaluation and the epoch hook read
-        // quiescent learner state even at K > 0.
+        // Open this epoch's steps to the workers, capped at the next
+        // membership event. The frontier never crosses an epoch boundary,
+        // so evaluation and the epoch hook read quiescent learner state
+        // even at K > 0.
         let epoch_limit = t + steps_per_epoch;
         if let Some(ctl) = pool {
-            ctl.open(epoch_limit as u64);
+            ctl.open(open_limit(next_event, epoch_limit));
         }
 
         for _step in 0..steps_per_epoch {
+            // --- membership boundary (see DESIGN.md §Elastic fleet) ------
+            // The open limit was capped at this step, so every worker is
+            // parked in `wait_runnable` and every update < t has been
+            // applied: the staleness window is drained to the frontier by
+            // construction, and the fleet write lock is uncontended.
+            while next_event < events.len() && events[next_event].step == t {
+                let ev = events[next_event];
+                next_event += 1;
+                // drain accounting: every learner syncs to the frontier
+                let sync_s = avail.iter().fold(
+                    if t > 0 { apply_ring[(t - 1) % (k + 2)] } else { 0.0 },
+                    |a, &b| a.max(b),
+                );
+                let drain_stall: f64 = avail.iter().map(|&a| sync_s - a).sum();
+                if let Some((new_topo, mut change)) = apply_membership_event(
+                    cfg,
+                    layout,
+                    shared,
+                    factory,
+                    pool.is_some(),
+                    threshold,
+                    epoch,
+                    ev,
+                    optimizer.as_mut(),
+                )? {
+                    topo = new_topo;
+                    n = change.n_after;
+                    inv_learners = 1.0f32 / n as f32;
+                    change.drain_stall_s = drain_stall;
+                    let resume = sync_s + change.rebuild_s;
+                    {
+                        let fleet = shared.fleet.read().unwrap();
+                        dense_round_s = fleet.plan.dense_round_s(&layer_lens, n, &cfg.link);
+                        let cap = fleet.plan.max_bucket_layers();
+                        gather.resize_with(n, || Vec::with_capacity(cap));
+                    }
+                    // the rebuilt fleet resumes on a fresh, synchronized
+                    // timeline: ports and learners all become free at the
+                    // post-rebuild instant
+                    port_end.clear();
+                    port_end.resize(topo.ports(), resume);
+                    avail.clear();
+                    avail.resize(n, resume);
+                    start.resize(n, 0.0);
+                    jmult.resize(n, 1.0);
+                    stalls.resize(n, 0.0);
+                    fabric.record_membership(change);
+                }
+                if let Some(ctl) = pool {
+                    ctl.open(open_limit(next_event, epoch_limit));
+                }
+            }
+
             let slot = t % w;
+            let fleet = shared.fleet.read().unwrap();
 
             // Sequential fallback: drive every learner through the shared
             // local executor for this step (same per-learner order of
             // operations as the pooled path — bit-identical results).
             if pool.is_none() {
                 for i in 0..n {
-                    shared.run_learner_step(i, t, Some(local.as_mut()))?;
+                    shared.run_learner_step(&fleet, i, t, Some(local.as_mut()))?;
                 }
             }
 
@@ -857,18 +1196,18 @@ fn run_loop(
                 let mut saw_finished = false;
                 loop {
                     let mut progressed = false;
-                    for (bi, bucket) in plan.buckets.iter().enumerate() {
+                    for (bi, bucket) in fleet.plan.buckets.iter().enumerate() {
                         if done_flags[bi]
                             || shared.ready[slot * nb + bi].load(Ordering::Acquire) != n
                         {
                             continue;
                         }
                         let sched = RoundSched {
-                            ready_s: shared.bucket_ready_s(slot, bi, &start, &jmult),
+                            ready_s: shared.bucket_ready_s(&fleet, slot, bi, &start, &jmult),
                             port_free_s: port_end[bucket.port],
                         };
                         let cost = exchange_one_bucket(
-                            shared,
+                            &fleet,
                             slot,
                             layout,
                             &layer_lens,
@@ -919,7 +1258,7 @@ fn run_loop(
             // loss accounting on the engine thread, learner-id order (the
             // f64 sum is order-sensitive)
             for l in 0..n {
-                let loss = f32::from_bits(shared.loss_bits[l * w + slot].load(Ordering::Relaxed));
+                let loss = f32::from_bits(fleet.loss_bits[l * w + slot].load(Ordering::Relaxed));
                 loss_sum += loss as f64;
                 nloss += 1;
                 if !loss.is_finite() || loss as f64 > cfg.divergence_loss {
@@ -932,16 +1271,16 @@ fn run_loop(
                     // the same bucket rounds, serialized after the join (no
                     // port-overlap credit — the classic placement)
                     let join_s = (0..n)
-                        .map(|l| start[l] + shared.dur_s(slot, l, jmult[l]))
+                        .map(|l| start[l] + shared.dur_s(&fleet, slot, l, jmult[l]))
                         .fold(0.0f64, f64::max);
                     let mut cursor = join_s;
-                    for bucket in &plan.buckets {
+                    for bucket in &fleet.plan.buckets {
                         let sched = RoundSched {
                             ready_s: cursor,
                             port_free_s: port_end[bucket.port],
                         };
                         let cost = exchange_one_bucket(
-                            shared,
+                            &fleet,
                             slot,
                             layout,
                             &layer_lens,
@@ -967,7 +1306,7 @@ fn run_loop(
                     // matches the streamed mode's accounting (only fabric
                     // traffic differs across modes on a diverged run;
                     // module docs)
-                    for ring in &shared.cells {
+                    for ring in &fleet.cells {
                         for cell in ring[slot].iter() {
                             let cell = cell.lock();
                             for p in cell.slots.iter().flatten() {
@@ -985,7 +1324,7 @@ fn run_loop(
             let mut crit = 0usize;
             let mut crit_end = f64::MIN;
             for l in 0..n {
-                let dur = shared.dur_s(slot, l, jmult[l]);
+                let dur = shared.dur_s(&fleet, slot, l, jmult[l]);
                 compute_span = compute_span.max(dur);
                 let end = start[l] + dur;
                 avail[l] = end;
@@ -1010,12 +1349,19 @@ fn run_loop(
                 // waiting on the pool, running them inline sequentially —
                 // so the partial-epoch residue/gradient snapshot is taken
                 // at the same deterministic point (after step `hi`) for
-                // every thread count.
-                let hi = (t + k).min(epoch_limit - 1);
+                // every thread count. `hi` is additionally capped below the
+                // next membership event: the pool's open limit means no
+                // worker can ever run a step past it, so waiting for one
+                // would deadlock.
+                let event_cap = events
+                    .get(next_event)
+                    .map(|e| e.step)
+                    .unwrap_or(usize::MAX);
+                let hi = (t + k).min(epoch_limit - 1).min(event_cap.saturating_sub(1));
                 for s in (t + 1)..=hi {
                     if pool.is_none() {
                         for i in 0..n {
-                            shared.run_learner_step(i, s, Some(local.as_mut()))?;
+                            shared.run_learner_step(&fleet, i, s, Some(local.as_mut()))?;
                         }
                     }
                     wait_counter(shared, pool, &shared.finished[s % w], n)?;
@@ -1025,7 +1371,7 @@ fn run_loop(
                     let params = shared.hist[cur_slot].read().unwrap();
                     test_error(local.as_mut(), dataset, &params).unwrap_or((100.0, f64::NAN))
                 };
-                let l0 = shared.learners[0].lock().unwrap();
+                let l0 = fleet.learners[0].lock().unwrap();
                 record.epochs.push(epoch_record(
                     layout, epoch, loss_sum, nloss, err, tloss, lr, comp_conv, comp_fc,
                     comp_all, &l0, cfg, sw.secs(),
@@ -1074,8 +1420,9 @@ fn run_loop(
             }
         }
 
+        let fleet = shared.fleet.read().unwrap();
         if let Some(h) = hook.as_deref_mut() {
-            let l0 = shared.learners[0].lock().unwrap();
+            let l0 = fleet.learners[0].lock().unwrap();
             h(epoch, l0.compressor.as_ref(), l0.grads());
         }
 
@@ -1083,7 +1430,7 @@ fn run_loop(
             let params = shared.hist[cur_slot].read().unwrap();
             test_error(local.as_mut(), dataset, &params)?
         };
-        let l0 = shared.learners[0].lock().unwrap();
+        let l0 = fleet.learners[0].lock().unwrap();
         record.epochs.push(epoch_record(
             layout, epoch, loss_sum, nloss, err, tloss, lr, comp_conv, comp_fc, comp_all, &l0,
             cfg, sw.secs(),

@@ -1,6 +1,7 @@
 //! The distributed training coordinator (paper Algorithm 1).
 
 pub mod checkpoint;
+pub mod churn;
 pub mod engine;
 pub mod eval;
 pub mod learner;

@@ -31,6 +31,7 @@
 //! `std::thread::scope` that wraps the training loop, so borrows of
 //! run-local state need no `'static` gymnastics.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
 
 struct CtlState {
@@ -51,6 +52,13 @@ pub struct PoolCtl {
     staleness: u64,
     state: Mutex<CtlState>,
     go: Condvar,
+    /// Lock-free mirror of `failed.is_some()`. The engine polls
+    /// [`failure`](PoolCtl::failure) from inside its streamed bucket scan —
+    /// the hot path — so the no-failure case must not contend on the state
+    /// mutex a parked worker is about to reacquire. Set (Release) under the
+    /// lock in [`fail`](PoolCtl::fail) *before* the wake, so an Acquire
+    /// load that observes `true` is guaranteed to find the message.
+    failed_flag: AtomicBool,
 }
 
 impl PoolCtl {
@@ -64,6 +72,7 @@ impl PoolCtl {
                 failed: None,
             }),
             go: Condvar::new(),
+            failed_flag: AtomicBool::new(false),
         }
     }
 
@@ -104,12 +113,18 @@ impl PoolCtl {
     pub fn fail(&self, msg: String) {
         let mut st = self.state.lock().unwrap();
         st.failed.get_or_insert(msg);
+        self.failed_flag.store(true, Ordering::Release);
         self.go.notify_all();
     }
 
     /// Engine: the first worker error, if any (checked inside the bucket
-    /// scan so a dead worker can never deadlock the engine).
+    /// scan so a dead worker can never deadlock the engine). The common
+    /// no-failure poll is a single atomic load; the mutex is only taken
+    /// once a failure actually exists.
     pub fn failure(&self) -> Option<String> {
+        if !self.failed_flag.load(Ordering::Acquire) {
+            return None;
+        }
         self.state.lock().unwrap().failed.clone()
     }
 
@@ -217,5 +232,25 @@ mod tests {
             assert!(!ctl.wait_runnable(0));
             ctl.shutdown();
         });
+    }
+
+    #[test]
+    fn first_failure_wins_and_fast_path_sees_it() {
+        // `failure()` must never observe the flag set without the message
+        // (fail() publishes the message before the flag's Release store),
+        // and concurrent failers must agree on a single winner.
+        let ctl = PoolCtl::new(0);
+        assert_eq!(ctl.failure(), None);
+        std::thread::scope(|scope| {
+            let c = &ctl;
+            for i in 0..4 {
+                scope.spawn(move || c.fail(format!("worker {i} panicked")));
+            }
+        });
+        let first = ctl.failure().expect("a failure must be visible");
+        assert!(first.starts_with("worker ") && first.ends_with(" panicked"));
+        // later failers lost: the recorded error is stable
+        ctl.fail("late loser".into());
+        assert_eq!(ctl.failure().as_deref(), Some(first.as_str()));
     }
 }

@@ -653,6 +653,325 @@ fn char_lstm_parallel_matches_sequential_bitwise() {
     assert_eq!(seq.fabric.bytes_down, par.fabric.bytes_down);
 }
 
+/// The elastic-fleet knob matrix: everything `train_window` sweeps plus a
+/// churn schedule and an MTBF failure rate (2 epochs x 12 steps, 4 learners).
+fn train_churn(
+    kind: Kind,
+    threads: usize,
+    topology: &str,
+    exchange: &str,
+    staleness: usize,
+    churn: &str,
+    mtbf: u64,
+) -> adacomp::metrics::RunRecord {
+    let ds = GaussianMixture::new(3, 16, 4, 800, 200, 0.6);
+    let exe = NativeMlp::new(&[16, 32, 4], 50);
+    let params = exe.init_params(11);
+    let layout = exe.layout().clone();
+    let mut cfg = base_cfg(kind, 4);
+    cfg.epochs = 2;
+    cfg.steps_per_epoch = 12;
+    cfg.threads = threads;
+    cfg.topology = topology.into();
+    cfg.exchange = exchange.into();
+    cfg.staleness = staleness;
+    cfg.churn = churn.into();
+    cfg.mtbf = mtbf;
+    let mut engine = Engine::new(&exe, &ds, &layout);
+    engine.run(&cfg, &params).expect("run")
+}
+
+#[test]
+fn churn_deterministic_across_threads_and_modes() {
+    // ISSUE 6 acceptance: same seed + churn schedule => bit-identical
+    // params (losses, test errors, wire bytes) across 1/4 threads and
+    // streamed/barrier — membership epochs drain the window at the same
+    // deterministic step boundary everywhere.
+    let reference = train_churn(Kind::AdaComp, 1, "ring", "streamed", 0, "fail@12:1", 0);
+    assert!(!reference.diverged);
+    assert_eq!(reference.fabric.membership.len(), 1);
+    for exchange in ["streamed", "barrier"] {
+        for threads in [1usize, 4] {
+            let r = train_churn(Kind::AdaComp, threads, "ring", exchange, 0, "fail@12:1", 0);
+            assert_epochs_bitwise(&reference, &r, &format!("churn {exchange}/t{threads}"));
+            assert_eq!(reference.fabric.bytes_up, r.fabric.bytes_up);
+            assert_eq!(reference.fabric.bytes_down, r.fabric.bytes_down);
+        }
+    }
+    // a no-churn run diverges from the churned one only AFTER the event
+    // step: fail@12 lands exactly on the epoch boundary, so epoch 0 is
+    // bit-equal and epoch 1 (3 learners vs 4) is not
+    let still = train_churn(Kind::AdaComp, 1, "ring", "streamed", 0, "", 0);
+    assert_eq!(
+        still.epochs[0].train_loss.to_bits(),
+        reference.epochs[0].train_loss.to_bits(),
+        "pre-event trajectory must be untouched"
+    );
+    assert_ne!(
+        still.epochs[1].train_loss.to_bits(),
+        reference.epochs[1].train_loss.to_bits(),
+        "post-event trajectory must reflect the smaller fleet"
+    );
+    // mid-epoch event under a live staleness window: the drain-to-frontier
+    // rule keeps the same determinism contract
+    let k2 = train_churn(Kind::AdaComp, 1, "ring", "streamed", 2, "fail@6:1", 0);
+    assert!(!k2.diverged);
+    for threads in [1usize, 4] {
+        let r = train_churn(Kind::AdaComp, threads, "ring", "barrier", 2, "fail@6:1", 0);
+        assert_epochs_bitwise(&k2, &r, &format!("churn K=2 t{threads}"));
+        assert_eq!(k2.fabric.bytes_up, r.fabric.bytes_up);
+    }
+    // recovery accounting is populated
+    let m = &reference.fabric.membership[0];
+    assert_eq!(m.kind, "fail");
+    assert_eq!(m.step, 12);
+    assert_eq!(m.n_after, 3);
+    assert!(m.rebuild_s >= 0.0 && m.rebuild_s.is_finite());
+    assert!(m.drain_stall_s >= 0.0 && m.drain_stall_s.is_finite());
+    assert!(reference.fabric.drain_stall_s >= 0.0);
+}
+
+#[test]
+fn leave_hands_over_state_fail_loses_it() {
+    // ISSUE 6 tentpole semantics: `leave` rides the v2 checkpoint handover
+    // (residual mass folds into the survivors), `fail` loses it, `join`
+    // adds cold learners — and the three kinds are distinguishable in the
+    // loss trajectory.
+    let leave = train_churn(Kind::AdaComp, 4, "ring", "streamed", 0, "leave@12:2", 0);
+    let fail = train_churn(Kind::AdaComp, 4, "ring", "streamed", 0, "fail@12:2", 0);
+    let join = train_churn(Kind::AdaComp, 4, "ring", "streamed", 0, "join@12:1", 0);
+    assert!(!leave.diverged && !fail.diverged && !join.diverged);
+    // leave preserves residual L1 mass, fail loses it
+    assert!(
+        leave.fabric.handover_l1 > 0.0,
+        "leave must hand over residual mass, got {}",
+        leave.fabric.handover_l1
+    );
+    assert_eq!(leave.fabric.lost_residual_l1, 0.0);
+    assert!(
+        fail.fabric.lost_residual_l1 > 0.0,
+        "fail must lose residual mass, got {}",
+        fail.fabric.lost_residual_l1
+    );
+    assert_eq!(fail.fabric.handover_l1, 0.0);
+    // ...and the same mass is at stake either way (same seed, same step,
+    // same departing learners): lost-on-fail == handed-over-on-leave
+    assert_eq!(
+        fail.fabric.lost_residual_l1.to_bits(),
+        leave.fabric.handover_l1.to_bits(),
+        "fail {} vs leave {}",
+        fail.fabric.lost_residual_l1,
+        leave.fabric.handover_l1
+    );
+    // membership timeline in the run record
+    assert_eq!(leave.fabric.membership[0].kind, "leave");
+    assert_eq!(leave.fabric.membership[0].n_after, 2);
+    assert_eq!(join.fabric.membership[0].kind, "join");
+    assert_eq!(join.fabric.membership[0].n_after, 5);
+    // all three post-event trajectories differ
+    let (l, f, j) = (
+        leave.epochs[1].train_loss.to_bits(),
+        fail.epochs[1].train_loss.to_bits(),
+        join.epochs[1].train_loss.to_bits(),
+    );
+    assert_ne!(l, f, "leave vs fail");
+    assert_ne!(l, j, "leave vs join");
+    assert_ne!(f, j, "fail vs join");
+}
+
+#[test]
+fn leave_converges_better_than_matched_fail() {
+    // ISSUE 6 acceptance: a graceful `leave` run reaches a strictly lower
+    // final train loss than the matched `fail` run — the handed-over
+    // residual gradient mass (error-feedback state) is real signal, and
+    // losing 3 of 4 learners' accumulated residues costs convergence.
+    let run = |churn: &str| {
+        let ds = GaussianMixture::new(3, 16, 4, 800, 200, 0.6);
+        let exe = NativeMlp::new(&[16, 32, 4], 50);
+        let params = exe.init_params(11);
+        let layout = exe.layout().clone();
+        let mut cfg = base_cfg(Kind::AdaComp, 4);
+        cfg.epochs = 3;
+        cfg.steps_per_epoch = 15;
+        cfg.churn = churn.into();
+        let mut engine = Engine::new(&exe, &ds, &layout);
+        engine.run(&cfg, &params).expect("run")
+    };
+    let leave = run("leave@10:3");
+    let fail = run("fail@10:3");
+    assert!(!leave.diverged && !fail.diverged);
+    let ll = leave.epochs.last().unwrap().train_loss;
+    let lf = fail.epochs.last().unwrap().train_loss;
+    assert!(
+        ll < lf,
+        "leave final loss {ll} must be strictly below matched fail {lf}"
+    );
+}
+
+#[test]
+fn mtbf_failures_are_deterministic() {
+    // --mtbf draws are precomputed from the run seed: the same rate gives
+    // the same failure schedule at every thread count and exchange mode.
+    let a = train_churn(Kind::AdaComp, 1, "ring", "streamed", 0, "", 4);
+    let b = train_churn(Kind::AdaComp, 4, "ring", "barrier", 0, "", 4);
+    assert_epochs_bitwise(&a, &b, "mtbf=4");
+    assert_eq!(a.fabric.bytes_up, b.fabric.bytes_up);
+    assert_eq!(a.fabric.membership.len(), b.fabric.membership.len());
+    for (ma, mb) in a.fabric.membership.iter().zip(b.fabric.membership.iter()) {
+        assert_eq!(ma.step, mb.step);
+        assert_eq!(ma.n_after, mb.n_after);
+        assert_eq!(ma.kind, "fail");
+    }
+    // the seed-7 draw at mtbf 4 fails a learner at steps 4 and 7 of the
+    // 24-step run — the knob must actually fire, not just parse
+    assert!(!a.fabric.membership.is_empty(), "mtbf 4 drew no failures in 24 steps");
+}
+
+#[test]
+fn churn_topology_degrades_and_recovers() {
+    // tentpole: on every membership epoch the topology revalidates against
+    // the new learner count — ps:4 over 2 learners degrades (logged, not
+    // fatal) and a later join restores the requested spec.
+    let r = train_churn(Kind::AdaComp, 4, "ps:4", "streamed", 0, "fail@6:2,join@12:2", 0);
+    assert!(!r.diverged);
+    assert_eq!(r.fabric.membership.len(), 2);
+    let down = &r.fabric.membership[0];
+    assert_eq!(down.n_after, 2);
+    assert!(down.degraded, "ps:4 over 2 learners must degrade");
+    assert_eq!(down.topology, "ps:2");
+    let up = &r.fabric.membership[1];
+    assert_eq!(up.n_after, 4);
+    assert!(!up.degraded, "regrown fleet must restore the requested topology");
+    assert_eq!(up.topology, "ps:4");
+}
+
+/// Executor wrapper that panics inside the Nth streamed grad-ready
+/// callback — mid-backward, while the engine's bucket scan is live and
+/// sibling workers may be parked in `wait_runnable`.
+struct PanicInjector {
+    inner: Box<dyn adacomp::runtime::Executor + Send>,
+    calls: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+    panic_at: usize,
+}
+
+impl adacomp::runtime::Executor for PanicInjector {
+    fn step(
+        &mut self,
+        params: &[f32],
+        batch: &adacomp::runtime::Batch,
+    ) -> anyhow::Result<adacomp::runtime::StepOut> {
+        self.inner.step(params, batch)
+    }
+    fn eval(
+        &mut self,
+        params: &[f32],
+        batch: &adacomp::runtime::Batch,
+    ) -> anyhow::Result<adacomp::runtime::EvalOut> {
+        self.inner.eval(params, batch)
+    }
+    fn step_batch_sizes(&self) -> Vec<usize> {
+        self.inner.step_batch_sizes()
+    }
+    fn eval_batch(&self) -> usize {
+        self.inner.eval_batch()
+    }
+    fn streams(&self) -> bool {
+        self.inner.streams()
+    }
+    fn step_streamed(
+        &mut self,
+        params: &[f32],
+        batch: &adacomp::runtime::Batch,
+        on_ready: &mut adacomp::runtime::GradReady<'_>,
+    ) -> anyhow::Result<adacomp::runtime::StepOut> {
+        let call = self
+            .calls
+            .fetch_add(1, std::sync::atomic::Ordering::SeqCst)
+            + 1;
+        let blow_up = call == self.panic_at;
+        let mut wrapped = |r: std::ops::Range<usize>, g: &[f32]| {
+            if blow_up {
+                panic!("injected executor fault");
+            }
+            on_ready(r, g);
+        };
+        self.inner.step_streamed(params, batch, &mut wrapped)
+    }
+}
+
+struct PanicFactory {
+    inner: NativeMlp,
+    calls: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+    panic_at: usize,
+}
+
+impl adacomp::runtime::ExecutorFactory for PanicFactory {
+    fn backend(&self) -> &'static str {
+        "native-faulty"
+    }
+    fn build_worker(&self) -> anyhow::Result<Box<dyn adacomp::runtime::Executor + Send>> {
+        Ok(Box::new(PanicInjector {
+            inner: self.inner.build_worker()?,
+            calls: self.calls.clone(),
+            panic_at: self.panic_at,
+        }))
+    }
+    fn build_local(&self) -> anyhow::Result<Box<dyn adacomp::runtime::Executor>> {
+        // evaluation and the sequential fallback stay healthy — only the
+        // pool workers carry the injected fault
+        self.inner.build_local()
+    }
+}
+
+#[test]
+fn worker_panic_mid_stream_surfaces_without_deadlock() {
+    // pool.rs hardening satellite: a worker panicking inside the streamed
+    // grad-ready callback mid-window must (a) wake every sibling parked in
+    // wait_runnable, (b) surface through the engine's Result with the
+    // panic payload, and (c) never deadlock the engine's bucket scan or
+    // the scope join. The staleness window (K = 2) guarantees parked
+    // siblings exist when the fault fires.
+    let ds = GaussianMixture::new(3, 16, 4, 800, 200, 0.6);
+    let factory = PanicFactory {
+        inner: NativeMlp::new(&[16, 32, 4], 50),
+        calls: std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+        panic_at: 6,
+    };
+    let params = factory.inner.init_params(11);
+    let layout = factory.inner.layout().clone();
+    let mut cfg = base_cfg(Kind::AdaComp, 4);
+    cfg.epochs = 1;
+    cfg.steps_per_epoch = 10;
+    cfg.threads = 4;
+    cfg.staleness = 2;
+    let mut engine = Engine::new(&factory, &ds, &layout);
+    let err = format!("{:#}", engine.run(&cfg, &params).unwrap_err());
+    assert!(
+        err.contains("learner phase failed"),
+        "engine must wrap the worker failure: {err}"
+    );
+    assert!(
+        err.contains("injected executor fault"),
+        "panic payload must survive: {err}"
+    );
+    // both exchange modes drain: the barrier path waits in wait_counter,
+    // which polls the failure flag instead of blocking forever
+    let factory = PanicFactory {
+        inner: NativeMlp::new(&[16, 32, 4], 50),
+        calls: std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+        panic_at: 6,
+    };
+    let mut cfg = base_cfg(Kind::AdaComp, 4);
+    cfg.epochs = 1;
+    cfg.steps_per_epoch = 10;
+    cfg.threads = 4;
+    cfg.staleness = 2;
+    cfg.exchange = "barrier".into();
+    let mut engine = Engine::new(&factory, &ds, &layout);
+    let err = format!("{:#}", engine.run(&cfg, &params).unwrap_err());
+    assert!(err.contains("injected executor fault"), "{err}");
+}
+
 #[test]
 fn native_cnn_engine_with_adacomp() {
     // hermetic conv path: tiny CNN + engine + adacomp (conv L_T default 50)
