@@ -1,14 +1,29 @@
-//! Pack/unpack micro-benchmarks: the L3 hot path.
+//! Pack/unpack and wire-encoding micro-benchmarks: the L3 hot path.
 //!
 //! For every compression scheme, measures pack throughput (elements/s and
 //! GB/s of gradient processed) across layer sizes and L_T values, plus the
-//! wire encode/decode cost for AdaComp packets. This regenerates the
-//! numbers in EXPERIMENTS.md §Perf.
+//! real wire encode/decode cost per scheme (the `encode_packet_into` /
+//! `decode_into` pass the exchange path now runs), the delta-vbyte SIMD
+//! kernel against its scalar fallback, and measured-vs-analytic wire bytes.
+//! Machine-readable results land in `BENCH_wire.json`:
 //!
-//!   cargo bench --bench bench_pack
+//! - `schemes`: per-scheme encode/decode throughput + measured vs analytic
+//!   bytes for a representative packet,
+//! - `vbyte`: the index codec's SIMD-vs-scalar encode/decode throughput
+//!   (streams asserted bit-identical),
+//! - `adacomp_v2_16bit`: v1 vs v2 bytes at (n=1M, L_T=500) — the 16-bit
+//!   slot regime, where the delta-vbyte stream must strictly shrink,
+//! - `models`: whole-model adacomp bucket frames for mnist_dnn and
+//!   char_lstm, asserting measured <= analytic (the CI smoke's contract).
+//!
+//! This regenerates the numbers in EXPERIMENTS.md §Perf.
+//!
+//!   cargo bench --bench bench_pack [-- --fast]
 
-use adacomp::compress::{self, wire, Config, Kind};
+use adacomp::compress::{self, vbyte, wire, Config, Kind, Packet};
+use adacomp::harness;
 use adacomp::models::{LayerKind, Layout};
+use adacomp::util::json::{self, Json};
 use adacomp::util::rng::Pcg32;
 use adacomp::util::timer::{fmt_ns, time_n, Stats};
 
@@ -35,12 +50,246 @@ fn bench_scheme(kind: Kind, n: usize, lt: usize, iters: usize) -> (Stats, usize)
     (Stats::from(&samples), sent)
 }
 
-fn main() {
+/// Steady-state packet for one (scheme, n, lt) — packs a few rounds so the
+/// residues are warm, then returns the final packet.
+fn steady_packet(kind: Kind, n: usize, lt: usize, seed: u64) -> Packet {
+    let layout = Layout::from_specs(&[("w", &[n], LayerKind::Conv)]);
+    let cfg = Config {
+        lt_override: lt,
+        ..Config::with_kind(kind)
+    };
+    let mut c = compress::build(&cfg, &layout);
+    let mut rng = Pcg32::seeded(seed);
+    let dw = rng.normal_vec(n, 0.1);
+    let mut p = c.pack_layer(0, &dw);
+    for _ in 0..2 {
+        c.recycle(p);
+        p = c.pack_layer(0, &dw);
+    }
+    p
+}
+
+/// Real wire encode + decode timings for one scheme's steady-state packet;
+/// prints one table row and returns the BENCH_wire.json entry.
+fn wire_scheme_row(kind: Kind, n: usize, lt: usize, iters: usize) -> Json {
+    let p = steady_packet(kind, n, lt, 42);
+    let analytic = p.wire_bytes;
+    let mut buf = Vec::new();
+    let enc = time_n(
+        || {
+            buf.clear();
+            wire::encode_packet_into(&p, &mut buf).unwrap();
+            std::hint::black_box(buf.len());
+        },
+        3,
+        iters,
+    );
+    let measured = buf.len();
+    let (mut idx, mut val) = (Vec::new(), Vec::new());
+    let dec = time_n(
+        || {
+            wire::decode_into(&buf, &mut idx, &mut val).unwrap();
+            std::hint::black_box(idx.len());
+        },
+        3,
+        iters,
+    );
+    // roundtrip sanity on the benched buffers
+    assert_eq!(idx, p.idx, "{} wire roundtrip", kind.name());
+    assert_eq!(val.len(), p.val.len());
+    let es = Stats::from(&enc);
+    let ds = Stats::from(&dec);
+    let enc_gbs = es.throughput(n as f64 * 4.0) / 1e9;
+    let dec_gbs = ds.throughput(n as f64 * 4.0) / 1e9;
+    println!(
+        "{:<10} {:>9} {:>6} {:>9} {:>10} {:>10} {:>9.2} {:>9.2}",
+        kind.name(),
+        n,
+        lt,
+        p.sent(),
+        measured,
+        analytic,
+        enc_gbs,
+        dec_gbs
+    );
+    json::obj(vec![
+        ("scheme", json::s(kind.name())),
+        ("n", json::num(n as f64)),
+        ("lt", json::num(lt as f64)),
+        ("sent", json::num(p.sent() as f64)),
+        ("measured_bytes", json::num(measured as f64)),
+        ("analytic_bytes", json::num(analytic as f64)),
+        ("enc_melems_s", json::num(es.throughput(n as f64) / 1e6)),
+        ("dec_melems_s", json::num(ds.throughput(n as f64) / 1e6)),
+        ("enc_gbs", json::num(enc_gbs)),
+        ("dec_gbs", json::num(dec_gbs)),
+    ])
+}
+
+/// The index codec alone: SIMD dispatch vs forced-scalar encode/decode on
+/// the same stream, streams asserted bit-identical.
+fn vbyte_micro(count: usize, iters: usize) -> Json {
+    let mut rng = Pcg32::seeded(5);
+    let mut idx = Vec::with_capacity(count);
+    let mut cur = 0u32;
+    for _ in 0..count {
+        cur += 1 + rng.below(300); // mixed 1- and 2-byte deltas
+        idx.push(cur);
+    }
+    let mut fast = Vec::new();
+    let mut slow = Vec::new();
+    let e_f = time_n(
+        || {
+            fast.clear();
+            vbyte::encode_into(&idx, &mut fast);
+        },
+        3,
+        iters,
+    );
+    let e_s = time_n(
+        || {
+            slow.clear();
+            vbyte::encode_scalar_into(&idx, &mut slow);
+        },
+        3,
+        iters,
+    );
+    assert_eq!(fast, slow, "SIMD and scalar vbyte streams must be bit-identical");
+    let mut out = Vec::new();
+    let d_f = time_n(
+        || {
+            out.clear();
+            vbyte::decode_into(count, &fast, &mut out).unwrap();
+        },
+        3,
+        iters,
+    );
+    assert_eq!(out, idx);
+    let d_s = time_n(
+        || {
+            out.clear();
+            vbyte::decode_scalar_into(count, &fast, &mut out).unwrap();
+        },
+        3,
+        iters,
+    );
+    assert_eq!(out, idx);
+    let melems = |s: &Stats| s.throughput(count as f64) / 1e6;
+    let (ef, es, df, ds) = (
+        Stats::from(&e_f),
+        Stats::from(&e_s),
+        Stats::from(&d_f),
+        Stats::from(&d_s),
+    );
+    println!(
+        "vbyte count {} simd={}: encode {:.0} vs scalar {:.0} Melem/s, decode {:.0} vs {:.0}",
+        count,
+        vbyte::simd_enabled(),
+        melems(&ef),
+        melems(&es),
+        melems(&df),
+        melems(&ds)
+    );
+    json::obj(vec![
+        ("count", json::num(count as f64)),
+        ("bytes", json::num(fast.len() as f64)),
+        ("simd_enabled", Json::Bool(vbyte::simd_enabled())),
+        ("enc_melems_s", json::num(melems(&ef))),
+        ("enc_scalar_melems_s", json::num(melems(&es))),
+        ("dec_melems_s", json::num(melems(&df))),
+        ("dec_scalar_melems_s", json::num(melems(&ds))),
+    ])
+}
+
+/// v1 vs v2 adacomp bytes in the 16-bit slot regime — the delta-vbyte
+/// index stream must strictly shrink the packet here (acceptance gate).
+fn adacomp_v2_16bit_row() -> Json {
+    let (n, lt) = (1_048_576usize, 500usize);
+    let p = steady_packet(Kind::AdaComp, n, lt, 42);
+    let scale = p.val.iter().find(|v| **v != 0.0).map(|v| v.abs()).unwrap_or(1.0);
+    let v1 = wire::encode_adacomp(0, n, lt, scale, &p.idx, &p.val).unwrap().len();
+    assert_eq!(v1, p.wire_bytes, "analytic v1 bytes match the v1 encoder");
+    let v2 = wire::encode_packet(&p).unwrap().len();
+    assert!(
+        v2 < v1,
+        "v2 delta-vbyte ({v2}) must strictly shrink v1 ({v1}) at L_T={lt}"
+    );
+    println!(
+        "adacomp 16-bit regime (n={n}, L_T={lt}, sent={}): v1 {v1} B -> v2 {v2} B ({:.2}x)",
+        p.sent(),
+        v1 as f64 / v2 as f64
+    );
+    json::obj(vec![
+        ("n", json::num(n as f64)),
+        ("lt", json::num(lt as f64)),
+        ("sent", json::num(p.sent() as f64)),
+        ("v1_bytes", json::num(v1 as f64)),
+        ("v2_bytes", json::num(v2 as f64)),
+    ])
+}
+
+/// Whole-model adacomp bucket frame for one registered model: measured
+/// frame bytes vs the analytic per-layer accounting. The CI smoke asserts
+/// `measured_bytes <= analytic_bytes` from the JSON this returns.
+fn model_row(model: &str, steps: usize) -> anyhow::Result<Json> {
+    let spec = harness::native_spec(model, 11, 16)?;
+    let layout = &spec.layout;
+    let mut c = compress::build(&Config::with_kind(Kind::AdaComp), layout);
+    let mut rng = Pcg32::seeded(13);
+    let dw = rng.normal_vec(layout.total, 0.1);
+    let mut slots: Vec<Option<Packet>> = (0..layout.num_layers()).map(|_| None).collect();
+    for _ in 0..steps {
+        for (li, slot) in slots.iter_mut().enumerate() {
+            if let Some(spent) = slot.take() {
+                c.recycle(spent);
+            }
+            *slot = Some(c.pack_layer(li, layout.view(li, &dw)));
+        }
+    }
+    let payload: usize = slots.iter().map(|s| s.as_ref().unwrap().wire_bytes).sum();
+    let analytic = wire::bucket_wire_len(slots.len(), payload);
+    let mut frame = Vec::new();
+    wire::encode_bucket_frame_packets_into(0, &slots, &mut frame)?;
+    let measured = frame.len();
+    assert!(
+        measured <= analytic,
+        "{model}: measured {measured} B > analytic {analytic} B"
+    );
+    let (bi, decoded) = wire::decode_bucket_frame(&frame)?;
+    assert_eq!(bi, 0);
+    assert_eq!(decoded.len(), layout.num_layers());
+    println!(
+        "{:<10} layers {:>3} total {:>9}: measured {:>9} B <= analytic {:>9} B ({:.3}x)",
+        model,
+        layout.num_layers(),
+        layout.total,
+        measured,
+        analytic,
+        analytic as f64 / measured as f64
+    );
+    Ok(json::obj(vec![
+        ("model", json::s(model)),
+        ("scheme", json::s("adacomp")),
+        ("layers", json::num(layout.num_layers() as f64)),
+        ("total_elems", json::num(layout.total as f64)),
+        ("measured_bytes", json::num(measured as f64)),
+        ("analytic_bytes", json::num(analytic as f64)),
+    ]))
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+
     println!("# pack() throughput (per layer call, steady-state residues)");
     println!(
         "{:<10} {:>9} {:>6} {:>12} {:>12} {:>10} {:>8}",
         "scheme", "n", "L_T", "mean", "p95", "Melem/s", "GB/s"
     );
+    let pack_shapes: &[(usize, usize)] = if fast {
+        &[(25_600, 50)]
+    } else {
+        &[(25_600, 50), (1_048_576, 50), (1_048_576, 500)]
+    };
     for kind in [
         Kind::AdaComp,
         Kind::LocalSelect,
@@ -50,8 +299,14 @@ fn main() {
         Kind::Strom,
         Kind::None,
     ] {
-        for (n, lt) in [(25_600usize, 50usize), (1_048_576, 50), (1_048_576, 500)] {
-            let iters = if n > 500_000 { 30 } else { 200 };
+        for &(n, lt) in pack_shapes {
+            let iters = if fast {
+                5
+            } else if n > 500_000 {
+                30
+            } else {
+                200
+            };
             let (s, _sent) = bench_scheme(kind, n, lt, iters);
             let melems = s.throughput(n as f64) / 1e6;
             let gbs = s.throughput(n as f64 * 4.0) / 1e9;
@@ -68,65 +323,49 @@ fn main() {
         }
     }
 
-    println!("\n# adacomp wire encode+decode");
+    println!("\n# wire encode+decode per scheme (real exchange-path pass)");
     println!(
-        "{:<12} {:>9} {:>6} {:>12} {:>12} {:>10}",
-        "op", "n", "L_T", "mean", "p95", "GB/s"
+        "{:<10} {:>9} {:>6} {:>9} {:>10} {:>10} {:>9} {:>9}",
+        "scheme", "n", "L_T", "sent", "measured", "analytic", "encGB/s", "decGB/s"
     );
-    for (n, lt) in [(25_600usize, 50usize), (1_048_576, 500)] {
-        let layout = Layout::from_specs(&[("w", &[n], LayerKind::Conv)]);
-        let cfg = Config {
-            lt_override: lt,
-            ..Config::with_kind(Kind::AdaComp)
-        };
-        let mut c = compress::build(&cfg, &layout);
-        let mut rng = Pcg32::seeded(7);
-        let dw = rng.normal_vec(n, 0.1);
-        let p = c.pack_layer(0, &dw);
-        let scale = p.val.iter().find(|v| **v != 0.0).map(|v| v.abs()).unwrap_or(1.0);
-
-        let iters = if n > 500_000 { 50 } else { 300 };
-        let enc = time_n(
-            || {
-                std::hint::black_box(wire::encode_adacomp(0, n, lt, scale, &p.idx, &p.val));
-            },
-            3,
-            iters,
-        );
-        let s = Stats::from(&enc);
-        println!(
-            "{:<12} {:>9} {:>6} {:>12} {:>12} {:>10.2}",
-            "encode",
-            n,
-            lt,
-            fmt_ns(s.mean_ns),
-            fmt_ns(s.p95_ns),
-            s.throughput(n as f64 * 4.0) / 1e9
-        );
-        let bytes = wire::encode_adacomp(0, n, lt, scale, &p.idx, &p.val);
-        let dec = time_n(
-            || {
-                std::hint::black_box(wire::decode(&bytes).unwrap());
-            },
-            3,
-            iters,
-        );
-        let s = Stats::from(&dec);
-        println!(
-            "{:<12} {:>9} {:>6} {:>12} {:>12} {:>10.2}",
-            "decode",
-            n,
-            lt,
-            fmt_ns(s.mean_ns),
-            fmt_ns(s.p95_ns),
-            s.throughput(n as f64 * 4.0) / 1e9
-        );
+    let (wn, wlt, witers) = if fast { (25_600, 50, 20) } else { (1_048_576, 500, 50) };
+    let mut scheme_rows = Vec::new();
+    for kind in [
+        Kind::AdaComp,
+        Kind::LocalSelect,
+        Kind::Dryden,
+        Kind::OneBit,
+        Kind::TernGrad,
+        Kind::Strom,
+        Kind::None,
+    ] {
+        scheme_rows.push(wire_scheme_row(kind, wn, wlt, witers));
     }
+
+    println!("\n# delta-vbyte index codec (SIMD dispatch vs scalar fallback)");
+    let vb = vbyte_micro(if fast { 100_000 } else { 1_000_000 }, if fast { 20 } else { 100 });
+
+    println!("\n# adacomp v1 vs v2 (16-bit slot regime)");
+    let v2row = adacomp_v2_16bit_row();
+
+    println!("\n# whole-model adacomp bucket frames (measured vs analytic)");
+    let steps = if fast { 2 } else { 4 };
+    let models = vec![model_row("mnist_dnn", steps)?, model_row("char_lstm", steps)?];
+
+    let doc = json::obj(vec![
+        ("schemes", json::arr(scheme_rows)),
+        ("vbyte", vb),
+        ("adacomp_v2_16bit", v2row),
+        ("models", json::arr(models)),
+    ]);
+    std::fs::write("BENCH_wire.json", doc.to_string())?;
+    println!("\nwrote BENCH_wire.json (per-scheme wire throughput, vbyte SIMD-vs-scalar, \
+         v1-vs-v2 shrink, per-model measured-vs-analytic bytes)");
 
     println!("\n# ablation: soft-threshold scale factor (paper studied 1.5-3.0)");
     println!("{:<8} {:>12} {:>14}", "factor", "mean", "sent/bin");
     for factor in [1.5f32, 2.0, 2.5, 3.0] {
-        let n = 1_048_576;
+        let n = if fast { 65_536 } else { 1_048_576 };
         let layout = Layout::from_specs(&[("w", &[n], LayerKind::Conv)]);
         let cfg = Config {
             lt_override: 50,
@@ -142,7 +381,7 @@ fn main() {
                 sent = c.pack_layer(0, &dw).sent();
             },
             2,
-            20,
+            if fast { 5 } else { 20 },
         );
         let s = Stats::from(&samples);
         println!(
@@ -152,4 +391,5 @@ fn main() {
             sent as f64 / (n / 50) as f64
         );
     }
+    Ok(())
 }

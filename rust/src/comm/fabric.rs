@@ -5,9 +5,13 @@
 //! about convergence and bytes-on-the-wire, both fully determined by the
 //! synchronous-SGD semantics — see DESIGN.md §Substitutions), and this
 //! module provides the honest accounting: every packet is charged its real
-//! wire-format bytes, and an analytic alpha-beta (latency + bandwidth) model
-//! turns byte counts into simulated exchange time so benches can compare
-//! topologies and compression rates in seconds, not just bytes.
+//! wire-format bytes — on the engine path these come from the learner's
+//! actually-serialized bucket frame (encode at publish, decode before
+//! reduce; see `crate::compress::wire`), so the charge is the measured
+//! frame length, not an analytic estimate — and an alpha-beta (latency +
+//! bandwidth) model turns byte counts into simulated exchange time so
+//! benches can compare topologies and compression rates in seconds, not
+//! just bytes.
 //!
 //! **Overlap timeline.** Beyond per-round comm time, the fabric folds each
 //! training step onto a simulated step timeline ([`Fabric::record_step`]):

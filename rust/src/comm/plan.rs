@@ -9,7 +9,9 @@
 //!    **reverse layer order** (the order gradients complete during
 //!    backward) and coalesces consecutive sub-threshold layers into a
 //!    bucket: one [`bucket frame`](crate::compress::wire::bucket_wire_len)
-//!    per bucket on the wire, one latency charge per bucket. A layer whose
+//!    per bucket on the wire (a real serialized byte frame on the engine
+//!    path — its measured length is what the fabric is charged), one
+//!    latency charge per bucket. A layer whose
 //!    dense wire size alone reaches the threshold stands as its own bucket
 //!    (big layers must not wait for neighbours). Because the walk is the
 //!    streamed completion order, every bucket covers a **contiguous** layer

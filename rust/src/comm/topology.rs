@@ -33,6 +33,19 @@
 //! whole-model bucket (the pre-plan coalesced barrier round) for benches
 //! and tests.
 //!
+//! **Measured bytes.** On the engine's exchange path the packets handed to
+//! [`exchange_bucket_into`](Topology::exchange_bucket_into) are *decoded
+//! from the learner's serialized bucket frame*
+//! ([`wire::decode_bucket_frame_into`]
+//! (crate::compress::wire::decode_bucket_frame_into)), so each packet's
+//! `wire_bytes` is the measured length of its sub-message and the bucket
+//! message the fabric is charged sums to exactly the frame's byte length —
+//! real encoded bytes, not an estimate. The analytic `*_wire_len` lens in
+//! [`wire`](crate::compress::wire) survive as the compressors' a-priori
+//! sizes (compression-rate stats, dense baselines) and as a cross-check:
+//! v1 forms measure exactly analytic, v2 delta-vbyte forms measure at or
+//! under it in the 16-bit slot regime.
+//!
 //! **Dense baseline.** Every round reports
 //! [`RoundCost::dense_comm_s`] = [`plan::dense_bucket_s`] — the canonical
 //! single-port uncompressed cost of the same bucket, *identical across

@@ -269,11 +269,18 @@ mod tests {
         let mut c = AdaComp::new(&cfg, &layout);
         let p = c.pack_layer(0, &dw);
         let bytes = wire::encode_adacomp(0, p.n, 50, scale_of(&p), &p.idx, &p.val);
-        let q = wire::decode(&bytes).unwrap();
+        let q = wire::decode(&bytes.unwrap()).unwrap();
         assert_eq!(p.idx, q.idx);
         for (a, b) in p.val.iter().zip(q.val.iter()) {
             assert!((a - b).abs() < 1e-7);
         }
+        // the engine's v2 wire form (what actually crosses the fabric) is
+        // bitwise-exact; its measured length is the decoded wire_bytes
+        let v2 = wire::encode_packet(&p).unwrap();
+        let q2 = wire::decode(&v2).unwrap();
+        assert_eq!(p.idx, q2.idx);
+        assert_eq!(p.val, q2.val);
+        assert_eq!(q2.wire_bytes, v2.len());
     }
 
     fn scale_of(p: &Packet) -> f32 {

@@ -147,6 +147,23 @@ mod tests {
     }
 
     #[test]
+    fn wire_roundtrip_bitwise() {
+        // dryden packets carry two distinct values (+mean / -mean) -> the
+        // v2 two-value sparse form; the real wire bytes must round-trip
+        // bit-exactly and never exceed the analytic sparse-sign length
+        let mut c = make(1000, 0.01);
+        let mut rng = Pcg32::seeded(21);
+        let dw = rng.normal_vec(1000, 1.0);
+        let p = c.pack_layer(0, &dw);
+        let bytes = super::super::wire::encode_packet(&p).unwrap();
+        let q = super::super::wire::decode(&bytes).unwrap();
+        assert_eq!(q.idx, p.idx);
+        assert_eq!(q.val, p.val);
+        assert_eq!(q.wire_bytes, bytes.len());
+        assert!(bytes.len() <= p.wire_bytes, "measured {} > analytic {}", bytes.len(), p.wire_bytes);
+    }
+
+    #[test]
     fn sends_top_fraction() {
         let mut c = make(1000, 0.01);
         let mut rng = Pcg32::seeded(9);

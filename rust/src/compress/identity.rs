@@ -63,7 +63,12 @@ mod tests {
         let mut c = Identity::new(&layout);
         let dw = vec![0.25f32; 600];
         let p = c.pack_layer(0, &dw);
-        assert_eq!(p.wire_bytes, wire::encode_dense_f32(0, &dw).len());
+        assert_eq!(p.wire_bytes, wire::encode_dense_f32(0, &dw).unwrap().len());
+        // generic (3+ distinct values) dense packets keep the raw-f32 wire
+        // form on the real exchange path too: measured == analytic
+        let dw2: Vec<f32> = (0..1200).map(|i| i as f32 * 0.01).collect();
+        let p2 = c.pack_layer(1, &dw2);
+        assert_eq!(wire::encode_packet(&p2).unwrap().len(), p2.wire_bytes);
     }
 
     #[test]

@@ -111,6 +111,24 @@ mod tests {
     use crate::util::rng::Pcg32;
 
     #[test]
+    fn wire_roundtrip_bitwise() {
+        // ls packets are ternary like adacomp's; the engine's v2 sparse
+        // wire form must reproduce them bit-exactly
+        let layout = Layout::from_specs(&[("w", &[2000], LayerKind::Fc)]);
+        let cfg = Config { lt_override: 500, ..Config::with_kind(Kind::LocalSelect) };
+        let mut c = LocalSelect::new(&cfg, &layout);
+        let mut rng = Pcg32::seeded(23);
+        let dw = rng.normal_vec(2000, 1.0);
+        let p = c.pack_layer(0, &dw);
+        assert!(p.sent() > 0);
+        let bytes = super::super::wire::encode_packet(&p).unwrap();
+        let q = super::super::wire::decode(&bytes).unwrap();
+        assert_eq!(q.idx, p.idx);
+        assert_eq!(q.val, p.val);
+        assert!(bytes.len() <= p.wire_bytes, "measured {} > analytic {}", bytes.len(), p.wire_bytes);
+    }
+
+    #[test]
     fn sends_exactly_one_per_nonzero_bin() {
         let layout = Layout::from_specs(&[("w", &[1000], LayerKind::Conv)]);
         let cfg = Config {

@@ -34,6 +34,7 @@ pub mod quantize;
 pub mod residue;
 pub mod strom;
 pub mod terngrad;
+pub mod vbyte;
 pub mod wire;
 
 use crate::models::Layout;
@@ -118,6 +119,7 @@ impl Packet {
 #[derive(Debug, Default)]
 pub struct BufPool {
     bufs: Vec<(Vec<u32>, Vec<f32>)>,
+    bytes: Vec<Vec<u8>>,
 }
 
 impl BufPool {
@@ -133,12 +135,24 @@ impl BufPool {
         self.bufs.push((idx, val));
     }
 
+    /// Pop a cleared byte buffer (capacity preserved), or a fresh empty one.
+    /// The wire path uses these for encoded bucket frames.
+    pub fn take_bytes(&mut self) -> Vec<u8> {
+        let mut b = self.bytes.pop().unwrap_or_default();
+        b.clear();
+        b
+    }
+
+    pub fn put_bytes(&mut self, b: Vec<u8>) {
+        self.bytes.push(b);
+    }
+
     pub fn len(&self) -> usize {
         self.bufs.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.bufs.is_empty()
+        self.bufs.is_empty() && self.bytes.is_empty()
     }
 }
 
@@ -366,6 +380,21 @@ mod tests {
         let (i2, v2) = pool.take();
         assert!(i2.is_empty() && v2.is_empty(), "pooled buffers come back cleared");
         assert!(i2.capacity() >= ic && v2.capacity() >= vc, "capacity survives the pool");
+    }
+
+    #[test]
+    fn bufpool_recycles_byte_buffers() {
+        // the wire path's frame buffers ride the same pool
+        let mut pool = BufPool::default();
+        let mut b = pool.take_bytes();
+        b.reserve(256);
+        let cap = b.capacity();
+        b.extend_from_slice(&[1, 2, 3]);
+        pool.put_bytes(b);
+        assert!(!pool.is_empty());
+        let b2 = pool.take_bytes();
+        assert!(b2.is_empty(), "pooled byte buffers come back cleared");
+        assert!(b2.capacity() >= cap, "capacity survives the pool");
     }
 
     #[test]

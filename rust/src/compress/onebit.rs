@@ -79,6 +79,22 @@ mod tests {
     }
 
     #[test]
+    fn wire_roundtrip_bitwise() {
+        // onebit's dense two-level packets keep the v1 ONEBIT wire form:
+        // measured bytes == the compressor's analytic wire_bytes, and the
+        // decoded values are bit-identical
+        let mut c = make(100);
+        let mut rng = Pcg32::seeded(24);
+        let dw = rng.normal_vec(100, 1.0);
+        let p = c.pack_layer(0, &dw);
+        let bytes = crate::compress::wire::encode_packet(&p).unwrap();
+        assert_eq!(bytes.len(), p.wire_bytes);
+        let q = crate::compress::wire::decode(&bytes).unwrap();
+        assert!(q.is_dense());
+        assert_eq!(q.val, p.val);
+    }
+
+    #[test]
     fn dense_packet_two_levels() {
         let mut c = make(100);
         let mut rng = Pcg32::seeded(1);

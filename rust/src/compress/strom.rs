@@ -92,6 +92,23 @@ mod tests {
     }
 
     #[test]
+    fn wire_roundtrip_bitwise() {
+        // strom packets are +/- tau (shared magnitude): both v2 sparse
+        // forms apply and the encoder picks the smaller; bit-exact
+        // round-trip, measured <= analytic
+        let mut c = make(5000, 0.8);
+        let mut rng = crate::util::rng::Pcg32::seeded(22);
+        let dw = rng.normal_vec(5000, 1.0);
+        let p = c.pack_layer(0, &dw);
+        assert!(p.sent() > 0);
+        let bytes = super::super::wire::encode_packet(&p).unwrap();
+        let q = super::super::wire::decode(&bytes).unwrap();
+        assert_eq!(q.idx, p.idx);
+        assert_eq!(q.val, p.val);
+        assert!(bytes.len() <= p.wire_bytes, "measured {} > analytic {}", bytes.len(), p.wire_bytes);
+    }
+
+    #[test]
     fn only_above_threshold_sent() {
         let mut c = make(5, 1.0);
         let p = c.pack_layer(0, &[0.5, 1.5, -2.0, -0.9, 1.0]);

@@ -94,6 +94,21 @@ mod tests {
     }
 
     #[test]
+    fn wire_roundtrip_bitwise() {
+        // terngrad's dense ternary packets keep the v1 TERNARY_DENSE wire
+        // form: measured == analytic, values bit-identical after decode
+        let n = 64;
+        let dw: Vec<f32> = (0..n).map(|i| (i as f32 / n as f32) - 0.5).collect();
+        let mut c = make(n, 7);
+        let p = c.pack_layer(0, &dw);
+        let bytes = crate::compress::wire::encode_packet(&p).unwrap();
+        assert_eq!(bytes.len(), p.wire_bytes);
+        let q = crate::compress::wire::decode(&bytes).unwrap();
+        assert!(q.is_dense());
+        assert_eq!(q.val, p.val);
+    }
+
+    #[test]
     fn unbiased_in_expectation() {
         // average many independent quantizations of the same dW
         let n = 64;

@@ -1,0 +1,398 @@
+//! Delta + group-varint codec for sparse gradient indices (the v2 wire
+//! format's index stream), stream-vbyte style.
+//!
+//! A packet's indices are strictly increasing, so they are first
+//! delta-encoded (`d_0 = idx_0`, `d_i = idx_i - idx_{i-1}`) and the small
+//! deltas then variable-byte packed in groups of four:
+//!
+//! ```text
+//! [control stream: ceil(count/4) bytes] [data stream: 1..=4 bytes per delta]
+//! ```
+//!
+//! Each control byte holds four 2-bit length codes (`code = bytes - 1`,
+//! value `j`'s code at bits `2 * (j % 4)`, little-endian within the byte);
+//! the data stream is the deltas' little-endian bytes, truncated to the
+//! coded length and concatenated in order. Splitting control from data is
+//! what makes the format SIMD-friendly: four values are packed or unpacked
+//! with a single SSSE3 `pshufb` whose shuffle mask is looked up by the
+//! control byte in a 256-entry table (one entry per 4-code combination).
+//! The tables are generated deterministically at first use into a
+//! `OnceLock`, so the hot path is allocation-free after warm-up.
+//!
+//! The scalar fallback produces **bit-identical** streams (pinned by the
+//! tests here and by rust/tests/wire_property.rs, which cross-compares the
+//! two paths on random inputs). Dispatch is cached: x86_64 with SSSE3
+//! detected at runtime takes the SIMD kernels unless the `ADACOMP_NO_SIMD`
+//! environment variable is set non-empty (the CI switch that keeps the
+//! scalar path exercised).
+
+use anyhow::{bail, Result};
+use std::sync::OnceLock;
+
+/// 2-bit length code for one delta: encoded byte count minus one.
+#[inline]
+fn code(d: u32) -> u8 {
+    3u8.saturating_sub((d.leading_zeros() / 8) as u8)
+}
+
+/// True when the SSSE3 kernels are in use: compiled for x86_64, the CPU
+/// reports SSSE3, and `ADACOMP_NO_SIMD` is unset/empty. Cached after the
+/// first call (which reads the environment once).
+pub fn simd_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        let forced_off = std::env::var_os("ADACOMP_NO_SIMD")
+            .map(|v| !v.is_empty())
+            .unwrap_or(false);
+        if forced_off {
+            return false;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            std::is_x86_feature_detected!("ssse3")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
+/// Exact encoded byte length of `idx`'s delta stream (control + data),
+/// without materializing it — the analytic cross-check for v2 wire lens.
+pub fn encoded_len(idx: &[u32]) -> usize {
+    if idx.is_empty() {
+        return 0;
+    }
+    let mut prev = 0u32;
+    let mut data = 0usize;
+    for &v in idx {
+        data += code(v.wrapping_sub(prev)) as usize + 1;
+        prev = v;
+    }
+    idx.len().div_ceil(4) + data
+}
+
+/// Worst-case encoded length for `count` values (every delta 4 bytes).
+pub fn max_encoded_len(count: usize) -> usize {
+    count.div_ceil(4) + 4 * count
+}
+
+/// Append `idx`'s delta-vbyte stream to `out`. `idx` must be strictly
+/// increasing (the wire layer validates; garbage in, garbage out here).
+/// Dispatches to the SSSE3 kernel when available, scalar otherwise — the
+/// two produce bit-identical bytes.
+pub fn encode_into(idx: &[u32], out: &mut Vec<u8>) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: simd_enabled() verified SSSE3 support at runtime.
+        unsafe { encode_ssse3(idx, out) };
+        return;
+    }
+    encode_scalar_into(idx, out);
+}
+
+/// Decode `count` values from the front of `bytes`, appending the
+/// prefix-summed (absolute) indices to `out`. Returns the number of bytes
+/// consumed. Errors (never panics) on a truncated stream.
+pub fn decode_into(count: usize, bytes: &[u8], out: &mut Vec<u32>) -> Result<usize> {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: simd_enabled() verified SSSE3 support at runtime.
+        return unsafe { decode_ssse3(count, bytes, out) };
+    }
+    decode_scalar_into(count, bytes, out)
+}
+
+/// Scalar reference encoder (bit-identical to the SIMD kernel; public so
+/// tests and benches can cross-compare the two paths explicitly).
+pub fn encode_scalar_into(idx: &[u32], out: &mut Vec<u8>) {
+    let n = idx.len();
+    if n == 0 {
+        return;
+    }
+    let ctrl_at = out.len();
+    out.resize(ctrl_at + n.div_ceil(4), 0);
+    let mut prev = 0u32;
+    for (j, &v) in idx.iter().enumerate() {
+        let d = v.wrapping_sub(prev);
+        prev = v;
+        let c = code(d);
+        out[ctrl_at + j / 4] |= c << (2 * (j % 4));
+        out.extend_from_slice(&d.to_le_bytes()[..c as usize + 1]);
+    }
+}
+
+/// Scalar reference decoder (bounds-checked per value; public for
+/// cross-comparison like [`encode_scalar_into`]).
+pub fn decode_scalar_into(count: usize, bytes: &[u8], out: &mut Vec<u32>) -> Result<usize> {
+    if count == 0 {
+        return Ok(0);
+    }
+    let ctrl_len = count.div_ceil(4);
+    if bytes.len() < ctrl_len {
+        bail!("vbyte underrun (control stream)");
+    }
+    let mut di = ctrl_len;
+    let mut prev = 0u32;
+    for j in 0..count {
+        let w = ((bytes[j / 4] >> (2 * (j % 4))) & 3) as usize + 1;
+        if di + w > bytes.len() {
+            bail!("vbyte underrun (data stream)");
+        }
+        let mut b = [0u8; 4];
+        b[..w].copy_from_slice(&bytes[di..di + w]);
+        prev = prev.wrapping_add(u32::from_le_bytes(b));
+        out.push(prev);
+        di += w;
+    }
+    Ok(di)
+}
+
+/// Shuffle-mask tables for the SSSE3 kernels, one entry per control byte.
+/// `enc[c]` gathers the valid little-endian bytes of four u32 lanes into a
+/// contiguous prefix; `dec[c]` scatters a packed prefix back into four
+/// lanes (0x80 lanes shuffle in zero); `len[c]` is the packed byte count.
+#[cfg(target_arch = "x86_64")]
+struct VbTables {
+    enc: [[u8; 16]; 256],
+    dec: [[u8; 16]; 256],
+    len: [u8; 256],
+}
+
+#[cfg(target_arch = "x86_64")]
+fn tables() -> &'static VbTables {
+    static T: OnceLock<VbTables> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut t = VbTables {
+            enc: [[0x80; 16]; 256],
+            dec: [[0x80; 16]; 256],
+            len: [0; 256],
+        };
+        #[allow(clippy::needless_range_loop)]
+        for ctrl in 0..256usize {
+            let mut src = 0usize;
+            for lane in 0..4 {
+                let w = ((ctrl >> (2 * lane)) & 3) + 1;
+                for k in 0..w {
+                    t.enc[ctrl][src] = (4 * lane + k) as u8;
+                    t.dec[ctrl][4 * lane + k] = src as u8;
+                    src += 1;
+                }
+            }
+            t.len[ctrl] = src as u8;
+        }
+        t
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "ssse3")]
+unsafe fn encode_ssse3(idx: &[u32], out: &mut Vec<u8>) {
+    use std::arch::x86_64::*;
+    let n = idx.len();
+    if n == 0 {
+        return;
+    }
+    let t = tables();
+    let ctrl_at = out.len();
+    out.resize(ctrl_at + n.div_ceil(4), 0);
+    let mut prev = 0u32;
+    let mut q = 0usize;
+    while q + 4 <= n {
+        let d = [
+            idx[q].wrapping_sub(prev),
+            idx[q + 1].wrapping_sub(idx[q]),
+            idx[q + 2].wrapping_sub(idx[q + 1]),
+            idx[q + 3].wrapping_sub(idx[q + 2]),
+        ];
+        prev = idx[q + 3];
+        let ctrl = code(d[0]) | (code(d[1]) << 2) | (code(d[2]) << 4) | (code(d[3]) << 6);
+        out[ctrl_at + q / 4] = ctrl;
+        let v = _mm_loadu_si128(d.as_ptr() as *const __m128i);
+        let mask = _mm_loadu_si128(t.enc[ctrl as usize].as_ptr() as *const __m128i);
+        let mut tmp = [0u8; 16];
+        _mm_storeu_si128(tmp.as_mut_ptr() as *mut __m128i, _mm_shuffle_epi8(v, mask));
+        out.extend_from_slice(&tmp[..t.len[ctrl as usize] as usize]);
+        q += 4;
+    }
+    // tail group (< 4 values): scalar, byte-identical to encode_scalar_into
+    let mut ctrl = 0u8;
+    for (j, &v) in idx[q..].iter().enumerate() {
+        let d = v.wrapping_sub(prev);
+        prev = v;
+        let c = code(d);
+        ctrl |= c << (2 * j);
+        out.extend_from_slice(&d.to_le_bytes()[..c as usize + 1]);
+    }
+    if q < n {
+        out[ctrl_at + q / 4] = ctrl;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "ssse3")]
+unsafe fn decode_ssse3(count: usize, bytes: &[u8], out: &mut Vec<u32>) -> Result<usize> {
+    use std::arch::x86_64::*;
+    if count == 0 {
+        return Ok(0);
+    }
+    let t = tables();
+    let ctrl_len = count.div_ceil(4);
+    if bytes.len() < ctrl_len {
+        bail!("vbyte underrun (control stream)");
+    }
+    let mut di = ctrl_len;
+    let mut prev = 0u32;
+    let mut j = 0usize;
+    // the 16-byte pshufb load over-reads past the group's own data, so the
+    // SIMD path runs only while a full vector fits; the scalar tail takes
+    // over near the end of the buffer (bounds-checked per value)
+    while j + 4 <= count && di + 16 <= bytes.len() {
+        let ctrl = bytes[j / 4];
+        let d = _mm_loadu_si128(bytes.as_ptr().add(di) as *const __m128i);
+        let mask = _mm_loadu_si128(t.dec[ctrl as usize].as_ptr() as *const __m128i);
+        let mut tmp = [0u32; 4];
+        _mm_storeu_si128(tmp.as_mut_ptr() as *mut __m128i, _mm_shuffle_epi8(d, mask));
+        for v in tmp {
+            prev = prev.wrapping_add(v);
+            out.push(prev);
+        }
+        di += t.len[ctrl as usize] as usize;
+        j += 4;
+    }
+    for k in j..count {
+        let w = ((bytes[k / 4] >> (2 * (k % 4))) & 3) as usize + 1;
+        if di + w > bytes.len() {
+            bail!("vbyte underrun (data stream)");
+        }
+        let mut b = [0u8; 4];
+        b[..w].copy_from_slice(&bytes[di..di + w]);
+        prev = prev.wrapping_add(u32::from_le_bytes(b));
+        out.push(prev);
+        di += w;
+    }
+    Ok(di)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Random strictly-increasing index set with deltas spanning all four
+    /// byte widths (gap magnitude drawn log-uniform-ish per element).
+    fn random_idx(rng: &mut Pcg32, count: usize) -> Vec<u32> {
+        let mut idx = Vec::with_capacity(count);
+        let mut cur = 0u64;
+        for _ in 0..count {
+            let shift = rng.below(25); // gaps 1..=2^25: 1-to-4-byte deltas
+            cur += 1 + rng.below(1u32 << shift) as u64;
+            if cur > u32::MAX as u64 {
+                break;
+            }
+            idx.push(cur as u32);
+        }
+        idx
+    }
+
+    #[test]
+    fn vbyte_code_widths() {
+        assert_eq!(code(0), 0);
+        assert_eq!(code(255), 0);
+        assert_eq!(code(256), 1);
+        assert_eq!(code(65535), 1);
+        assert_eq!(code(65536), 2);
+        assert_eq!(code((1 << 24) - 1), 2);
+        assert_eq!(code(1 << 24), 3);
+        assert_eq!(code(u32::MAX), 3);
+    }
+
+    #[test]
+    fn vbyte_scalar_roundtrip_known() {
+        // first delta is idx[0] itself; later deltas cross width boundaries
+        let idx = vec![0u32, 1, 255, 256, 65535, 1 << 20, 1 << 26, u32::MAX];
+        let mut bytes = Vec::new();
+        encode_scalar_into(&idx, &mut bytes);
+        assert_eq!(bytes.len(), encoded_len(&idx));
+        let mut back = Vec::new();
+        let used = decode_scalar_into(idx.len(), &bytes, &mut back).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(back, idx);
+    }
+
+    #[test]
+    fn vbyte_dispatch_roundtrip_and_scalar_bit_identity() {
+        let mut rng = Pcg32::seeded(0xb17e);
+        for count in [0usize, 1, 2, 3, 4, 5, 7, 8, 63, 256, 1000] {
+            let idx = random_idx(&mut rng, count);
+            let mut fast = Vec::new();
+            encode_into(&idx, &mut fast);
+            let mut slow = Vec::new();
+            encode_scalar_into(&idx, &mut slow);
+            assert_eq!(fast, slow, "count {count}: SIMD and scalar streams differ");
+            assert_eq!(fast.len(), encoded_len(&idx), "count {count}");
+
+            let mut a = Vec::new();
+            assert_eq!(decode_into(idx.len(), &fast, &mut a).unwrap(), fast.len());
+            assert_eq!(a, idx, "count {count}: dispatch decode");
+            let mut b = Vec::new();
+            assert_eq!(decode_scalar_into(idx.len(), &fast, &mut b).unwrap(), fast.len());
+            assert_eq!(b, idx, "count {count}: scalar decode");
+        }
+    }
+
+    #[test]
+    fn vbyte_decode_appends_and_reports_consumed() {
+        // two streams back to back: consumed lets the caller advance
+        let first = vec![3u32, 9, 700];
+        let second = vec![1u32, 1 << 17];
+        let mut bytes = Vec::new();
+        encode_into(&first, &mut bytes);
+        let mid = bytes.len();
+        encode_into(&second, &mut bytes);
+        let mut out = Vec::new();
+        let used = decode_into(first.len(), &bytes, &mut out).unwrap();
+        assert_eq!(used, mid);
+        let used2 = decode_into(second.len(), &bytes[mid..], &mut out).unwrap();
+        assert_eq!(mid + used2, bytes.len());
+        assert_eq!(out, vec![3, 9, 700, 1, 1 << 17]);
+    }
+
+    #[test]
+    fn vbyte_truncation_errors_not_panics() {
+        let mut rng = Pcg32::seeded(7);
+        let idx = random_idx(&mut rng, 300);
+        let mut bytes = Vec::new();
+        encode_into(&idx, &mut bytes);
+        for cut in 0..bytes.len() {
+            let mut out = Vec::new();
+            assert!(
+                decode_into(idx.len(), &bytes[..cut], &mut out).is_err(),
+                "cut {cut} decoded from a truncated stream"
+            );
+            let mut out = Vec::new();
+            assert!(decode_scalar_into(idx.len(), &bytes[..cut], &mut out).is_err());
+        }
+    }
+
+    #[test]
+    fn vbyte_empty_stream() {
+        let mut bytes = Vec::new();
+        encode_into(&[], &mut bytes);
+        assert!(bytes.is_empty());
+        assert_eq!(encoded_len(&[]), 0);
+        let mut out = Vec::new();
+        assert_eq!(decode_into(0, &[], &mut out).unwrap(), 0);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn vbyte_worst_case_bound_holds() {
+        let mut rng = Pcg32::seeded(11);
+        for count in [1usize, 5, 64, 333] {
+            let idx = random_idx(&mut rng, count);
+            assert!(encoded_len(&idx) <= max_encoded_len(idx.len()));
+        }
+    }
+}

@@ -4,9 +4,13 @@
 //! representation of 8 bits per sent element for L_T < 64 and 16 bits for
 //! L_T up to 16K, with 2 of those bits holding the ternary value. This
 //! module implements that format *for real* — encode + decode round-trip —
-//! so the simulated fabric charges honest byte counts:
+//! and the exchange hot path now serializes every bucket through it, so the
+//! simulated fabric charges **measured** byte counts (DESIGN.md §Wire
+//! encoding).
 //!
-//! AdaComp/LS packet layout (little-endian):
+//! **v1 per-layer formats** (little-endian; scheme byte < [`V2_FLAG`]):
+//!
+//! AdaComp/LS packet layout:
 //!   header (16B): scheme u8, pad u8, layer u16, n u32, lt u32, scale f32
 //!   then per bin:
 //!     L_T < 64   : count u8,  count x u8  slot (idx:6 | code:2)
@@ -20,18 +24,42 @@
 //! Dense 2-bit packet (terngrad): header + ceil(n/4) bytes (codes as Tern).
 //! Dense f32 packet (none): header + 4n bytes.
 //!
+//! **v2 sparse formats** (scheme byte ORed with [`V2_FLAG`]): the index
+//! stream is delta + group-varint coded ([`super::vbyte`] — SIMD
+//! stream-vbyte with a bit-identical scalar fallback), which beats the v1
+//! per-bin slot scheme because typical inter-index gaps fit one or two
+//! bytes and no per-bin count fields are paid:
+//!
+//!   ternary   : header(scale) + count u32 + vbyte idx + ceil(count/4) codes
+//!   two-value : header + count u32 + a f32 + b f32 + vbyte idx
+//!               + ceil(count/8) bitmap (bit 1 = second value)
+//!   sparse f32: header + count u32 + vbyte idx + count x f32
+//!
+//! [`encode_packet_into`] picks the smallest applicable form by **bitwise**
+//! value classification, so decode(encode(p)) reproduces `idx`/`val`
+//! bit-exactly for every packet (including NaN and -0.0 payloads) — the
+//! engine reduces *decoded* packets and stays bit-identical to the
+//! pre-serialization engine. Dense packets keep their v1 forms, so dense
+//! measured bytes equal the analytic `*_wire_len` (pinned by
+//! `lens_match_encoders`); sparse packets go v2 and typically measure
+//! *below* the analytic v1 length (asserted per model in bench_pack →
+//! BENCH_wire.json).
+//!
 //! Bucket frame (the reduce-plan's coalesced message — one wire message per
 //! *bucket* of layers, amortizing per-message latency over tiny layers):
 //!   bucket header (8B): tag u8 (0xB5), pad u8, bucket u16, count u32
 //!   then per sub-message: len u32 + the sub-message bytes (any of the
-//!   per-layer formats above). `bucket_wire_len` is the analytic length the
-//!   exchange hot path charges; `encode_bucket_frame`/`decode_bucket_frame`
-//!   pin it against the real encoder.
+//!   per-layer formats above). Learners build the frame at publish time
+//!   ([`encode_bucket_frame_packets_into`]); the engine decodes it through
+//!   pooled buffers ([`decode_bucket_frame_into`]) and each decoded
+//!   packet's `wire_bytes` is its measured sub-message length, so the
+//!   topology's per-message charge equals the real frame length exactly.
+//!   `bucket_wire_len` / `*_wire_len` remain as analytic cross-checks.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::quantize::Tern;
-use super::Packet;
+use super::{vbyte, BufPool, Packet};
 
 pub const HEADER_BYTES: usize = 16;
 
@@ -54,6 +82,16 @@ pub const SCHEME_SPARSE_SIGN: u8 = 2;
 pub const SCHEME_ONEBIT: u8 = 3;
 pub const SCHEME_TERNARY_DENSE: u8 = 4;
 pub const SCHEME_DENSE_F32: u8 = 5;
+/// Generic sparse f32 payload — only exists in v2 (the bitwise fallback
+/// when sparse values are neither ternary nor two-valued).
+pub const SCHEME_SPARSE_F32: u8 = 6;
+
+/// Scheme-byte flag selecting the v2 delta-vbyte sparse formats.
+pub const V2_FLAG: u8 = 0x80;
+
+pub const SCHEME_ADACOMP_V2: u8 = SCHEME_ADACOMP | V2_FLAG;
+pub const SCHEME_SPARSE_SIGN_V2: u8 = SCHEME_SPARSE_SIGN | V2_FLAG;
+pub const SCHEME_SPARSE_F32_V2: u8 = SCHEME_SPARSE_F32 | V2_FLAG;
 
 /// Slot width in bits for a given bin length (paper's 8/16-bit scheme,
 /// widened to 32 past 16K so the format stays total).
@@ -95,26 +133,31 @@ pub fn dense_f32_wire_len(n: usize) -> usize {
     HEADER_BYTES + 4 * n
 }
 
-struct Writer {
-    buf: Vec<u8>,
+/// Exact byte length of the v2 ternary sparse form for these indices.
+pub fn v2_ternary_wire_len(idx: &[u32]) -> usize {
+    HEADER_BYTES + 4 + vbyte::encoded_len(idx) + idx.len().div_ceil(4)
 }
 
-impl Writer {
-    fn new() -> Writer {
-        Writer { buf: Vec::new() }
-    }
-    fn u8(&mut self, v: u8) {
-        self.buf.push(v);
-    }
-    fn u16(&mut self, v: u16) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-    fn u32(&mut self, v: u32) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-    fn f32(&mut self, v: f32) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
+/// Exact byte length of the v2 two-value sparse form for these indices.
+pub fn v2_two_value_wire_len(idx: &[u32]) -> usize {
+    HEADER_BYTES + 4 + 8 + vbyte::encoded_len(idx) + idx.len().div_ceil(8)
+}
+
+/// Exact byte length of the v2 sparse f32 form for these indices.
+pub fn v2_sparse_f32_wire_len(idx: &[u32]) -> usize {
+    HEADER_BYTES + 4 + vbyte::encoded_len(idx) + 4 * idx.len()
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
 }
 
 struct Reader<'a> {
@@ -122,7 +165,7 @@ struct Reader<'a> {
     i: usize,
 }
 
-impl<'a> Reader<'a> {
+impl Reader<'_> {
     fn u8(&mut self) -> Result<u8> {
         if self.i >= self.b.len() {
             bail!("wire underrun");
@@ -149,25 +192,95 @@ impl<'a> Reader<'a> {
     fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_bits(self.u32()?))
     }
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
 }
 
-fn header(w: &mut Writer, scheme: u8, layer: usize, n: usize, lt: usize, scale: f32) {
-    w.u8(scheme);
-    w.u8(0);
-    w.u16(layer as u16);
-    w.u32(n as u32);
-    w.u32(lt as u32);
-    w.f32(scale);
+/// Write the 16-byte per-layer header, failing fast on any field that
+/// would silently truncate (layer > u16, n or lt > u32).
+fn header_checked(
+    out: &mut Vec<u8>,
+    scheme: u8,
+    layer: usize,
+    n: usize,
+    lt: usize,
+    scale: f32,
+) -> Result<()> {
+    if layer > u16::MAX as usize {
+        bail!("layer id {layer} overflows the u16 wire header");
+    }
+    if n > u32::MAX as usize {
+        bail!("layer length {n} overflows the u32 wire header");
+    }
+    if lt > u32::MAX as usize {
+        bail!("bin length {lt} overflows the u32 wire header");
+    }
+    out.push(scheme);
+    out.push(0);
+    put_u16(out, layer as u16);
+    put_u32(out, n as u32);
+    put_u32(out, lt as u32);
+    put_f32(out, scale);
+    Ok(())
+}
+
+/// Fail unless `idx` is strictly increasing with every index below `n` —
+/// the invariant both the v1 bin walk and the v2 delta coder rely on.
+fn check_sparse_idx(idx: &[u32], n: usize) -> Result<()> {
+    let mut prev: Option<u32> = None;
+    for &i in idx {
+        if let Some(p) = prev {
+            if i <= p {
+                bail!("sparse indices must be strictly increasing ({i} after {p})");
+            }
+        }
+        if i as usize >= n {
+            bail!("sparse index {i} out of range for layer length {n}");
+        }
+        prev = Some(i);
+    }
+    Ok(())
 }
 
 /// Encode an AdaComp/LS packet (ternary values, bin-relative indices).
-/// `idx` must be strictly increasing; every `val` must be 0 or +/- scale.
-pub fn encode_adacomp(layer: usize, n: usize, lt: usize, scale: f32, idx: &[u32], val: &[f32]) -> Vec<u8> {
-    assert_eq!(idx.len(), val.len());
-    let nbins = n.div_ceil(lt.max(1));
+/// `idx` must be strictly increasing and below `n`; every `val` must be 0
+/// or +/- scale. Fails fast on header overflow or malformed indices.
+pub fn encode_adacomp(
+    layer: usize,
+    n: usize,
+    lt: usize,
+    scale: f32,
+    idx: &[u32],
+    val: &[f32],
+) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    encode_adacomp_into(layer, n, lt, scale, idx, val, &mut out)?;
+    Ok(out)
+}
+
+fn encode_adacomp_into(
+    layer: usize,
+    n: usize,
+    lt: usize,
+    scale: f32,
+    idx: &[u32],
+    val: &[f32],
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    if idx.len() != val.len() {
+        bail!("idx/val length mismatch ({} vs {})", idx.len(), val.len());
+    }
+    if lt == 0 {
+        bail!("adacomp bin length must be >= 1");
+    }
     let bits = slot_bits(lt);
-    let mut w = Writer::new();
-    header(&mut w, SCHEME_ADACOMP, layer, n, lt, scale);
+    if bits == 32 && lt > 1 << 30 {
+        bail!("bin length {lt} overflows the 30-bit slot index field");
+    }
+    check_sparse_idx(idx, n)?;
+    header_checked(out, SCHEME_ADACOMP, layer, n, lt, scale)?;
+    let nbins = n.div_ceil(lt);
     let mut k = 0usize; // cursor into idx/val
     for b in 0..nbins {
         let end = (((b + 1) * lt).min(n)) as u32;
@@ -175,14 +288,13 @@ pub fn encode_adacomp(layer: usize, n: usize, lt: usize, scale: f32, idx: &[u32]
         while k < idx.len() && idx[k] < end {
             k += 1;
         }
+        // strictly-increasing indices below n imply count <= lt and
+        // rel < lt, so the casts below cannot truncate
         let count = k - start;
         match bits {
-            8 => {
-                debug_assert!(count <= u8::MAX as usize);
-                w.u8(count as u8);
-            }
-            16 => w.u16(count as u16),
-            _ => w.u32(count as u32),
+            8 => out.push(count as u8),
+            16 => put_u16(out, count as u16),
+            _ => put_u32(out, count as u32),
         }
         for j in start..k {
             let rel = idx[j] - (b * lt) as u32;
@@ -194,21 +306,319 @@ pub fn encode_adacomp(layer: usize, n: usize, lt: usize, scale: f32, idx: &[u32]
                 2
             };
             match bits {
-                8 => {
-                    debug_assert!(rel < 64);
-                    w.u8(((rel << 2) | code) as u8);
-                }
-                16 => w.u16(((rel << 2) | code) as u16),
-                _ => w.u32((rel << 2) | code),
+                8 => out.push(((rel << 2) | code) as u8),
+                16 => put_u16(out, ((rel << 2) | code) as u16),
+                _ => put_u32(out, (rel << 2) | code),
             }
         }
     }
     debug_assert_eq!(k, idx.len());
-    w.buf
+    Ok(())
 }
 
-/// Decode an AdaComp/LS packet back into a `Packet`.
+/// Encode a sparse sign packet (dryden / strom): indices + sign bit, with
+/// +/- reconstruction values in the payload head. Fails fast on indices
+/// that would collide with the sign bit (idx >= 2^31).
+pub fn encode_sparse_sign(
+    layer: usize,
+    n: usize,
+    pos: f32,
+    neg: f32,
+    idx: &[u32],
+    is_neg: impl Fn(usize) -> bool,
+) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    header_checked(&mut out, SCHEME_SPARSE_SIGN, layer, n, 0, 0.0)?;
+    put_u32(&mut out, idx.len() as u32);
+    put_f32(&mut out, pos);
+    put_f32(&mut out, neg);
+    for (j, &i) in idx.iter().enumerate() {
+        if i >= 1 << 31 {
+            bail!("sparse index {i} collides with the sign bit (>= 2^31)");
+        }
+        let sign = if is_neg(j) { 1u32 << 31 } else { 0 };
+        put_u32(&mut out, i | sign);
+    }
+    Ok(out)
+}
+
+/// Encode a dense 1-bit packet (onebit): sign bitmap + two means.
+pub fn encode_onebit(layer: usize, signs_neg: &[bool], pos: f32, neg: f32) -> Result<Vec<u8>> {
+    let n = signs_neg.len();
+    let mut out = Vec::new();
+    header_checked(&mut out, SCHEME_ONEBIT, layer, n, 0, 0.0)?;
+    put_f32(&mut out, pos);
+    put_f32(&mut out, neg);
+    let mut byte = 0u8;
+    for (i, &isneg) in signs_neg.iter().enumerate() {
+        if isneg {
+            byte |= 1 << (i % 8);
+        }
+        if i % 8 == 7 {
+            out.push(byte);
+            byte = 0;
+        }
+    }
+    if n % 8 != 0 {
+        out.push(byte);
+    }
+    Ok(out)
+}
+
+/// Encode a dense 2-bit ternary packet (terngrad).
+pub fn encode_ternary_dense(
+    layer: usize,
+    n: usize,
+    scale: f32,
+    codes: impl Iterator<Item = Tern>,
+) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    header_checked(&mut out, SCHEME_TERNARY_DENSE, layer, n, 0, scale)?;
+    let mut byte = 0u8;
+    let mut i = 0usize;
+    for t in codes {
+        byte |= t.code() << ((i % 4) * 2);
+        if i % 4 == 3 {
+            out.push(byte);
+            byte = 0;
+        }
+        i += 1;
+    }
+    if i != n {
+        bail!("ternary code count {i} != layer length {n}");
+    }
+    if n % 4 != 0 {
+        out.push(byte);
+    }
+    Ok(out)
+}
+
+/// Encode a dense f32 packet (identity baseline).
+pub fn encode_dense_f32(layer: usize, vals: &[f32]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    encode_dense_f32_into(layer, vals, &mut out)?;
+    Ok(out)
+}
+
+fn encode_dense_f32_into(layer: usize, vals: &[f32], out: &mut Vec<u8>) -> Result<()> {
+    header_checked(out, SCHEME_DENSE_F32, layer, vals.len(), 0, 0.0)?;
+    for &v in vals {
+        put_f32(out, v);
+    }
+    Ok(())
+}
+
+/// Bitwise ternary classification: `Some(scale)` when every value is +0.0,
+/// `+scale`, or `-scale` for one shared magnitude bit pattern. -0.0 has no
+/// ternary code (decode would resurrect it as +0.0), so it rejects — the
+/// caller falls through to a bit-exact form.
+fn uniform_ternary_scale(val: &[f32]) -> Option<f32> {
+    let mut mag: u32 = 0; // shared |scale| bits; 0 until a nonzero is seen
+    for &v in val {
+        let bits = v.to_bits();
+        if bits == 0 {
+            continue; // +0.0 -> Tern::Zero
+        }
+        let m = bits & 0x7fff_ffff;
+        if m == 0 {
+            return None; // -0.0
+        }
+        if mag == 0 {
+            mag = m;
+        } else if mag != m {
+            return None;
+        }
+    }
+    Some(f32::from_bits(mag))
+}
+
+/// Bitwise two-value classification: `Some((a, b))` when at most two
+/// distinct f32 bit patterns occur (`a` = first seen, `b` = second; both
+/// default forward so empty/uniform inputs still encode).
+fn two_distinct_bits(val: &[f32]) -> Option<(f32, f32)> {
+    let mut a: Option<u32> = None;
+    let mut b: Option<u32> = None;
+    for &v in val {
+        let bits = v.to_bits();
+        if Some(bits) == a || Some(bits) == b {
+            continue;
+        }
+        if a.is_none() {
+            a = Some(bits);
+        } else if b.is_none() {
+            b = Some(bits);
+        } else {
+            return None;
+        }
+    }
+    let a = a.unwrap_or(0);
+    let b = b.unwrap_or(a);
+    Some((f32::from_bits(a), f32::from_bits(b)))
+}
+
+fn tern_of_bits(bits: u32) -> Tern {
+    if bits == 0 {
+        Tern::Zero
+    } else if bits & 0x8000_0000 == 0 {
+        Tern::Pos
+    } else {
+        Tern::Neg
+    }
+}
+
+/// Append the 2-bit ternary code stream for `val` (bitwise sign/zero codes).
+fn put_tern_codes(val: &[f32], out: &mut Vec<u8>) {
+    let mut byte = 0u8;
+    for (i, &v) in val.iter().enumerate() {
+        byte |= tern_of_bits(v.to_bits()).code() << ((i % 4) * 2);
+        if i % 4 == 3 {
+            out.push(byte);
+            byte = 0;
+        }
+    }
+    if val.len() % 4 != 0 {
+        out.push(byte);
+    }
+}
+
+/// ONEBIT with the bitmap derived bitwise from `vals` (bit 1 = value `b`).
+fn encode_onebit_bits_into(
+    layer: usize,
+    vals: &[f32],
+    a: f32,
+    b: f32,
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    header_checked(out, SCHEME_ONEBIT, layer, vals.len(), 0, 0.0)?;
+    put_f32(out, a);
+    put_f32(out, b);
+    let a_bits = a.to_bits();
+    let mut byte = 0u8;
+    for (i, &v) in vals.iter().enumerate() {
+        if v.to_bits() != a_bits {
+            byte |= 1 << (i % 8);
+        }
+        if i % 8 == 7 {
+            out.push(byte);
+            byte = 0;
+        }
+    }
+    if vals.len() % 8 != 0 {
+        out.push(byte);
+    }
+    Ok(())
+}
+
+/// Append the smallest self-describing wire form of `p` to `out`.
+///
+/// Selection is by **bitwise** value classification, never by scheme name,
+/// so decode(encode(p)) reproduces `idx`/`val` bit-exactly for any packet:
+///
+/// - dense: two-value → v1 ONEBIT, ternary → v1 TERNARY_DENSE, else v1
+///   DENSE_F32 (dense measured bytes == the analytic `*_wire_len`s);
+/// - sparse: ternary → v2 ternary, two-value → v2 two-value, else v2
+///   sparse f32 (when both apply the smaller wins — ternary pays 2
+///   bits/element, two-value 1 bit/element plus an 8-byte value head).
+///
+/// This is the learner's publish-time hot path: `out` is the bucket
+/// cell's pooled frame buffer, so steady state allocates nothing.
+pub fn encode_packet_into(p: &Packet, out: &mut Vec<u8>) -> Result<()> {
+    if p.is_dense() {
+        let two = two_distinct_bits(&p.val);
+        let tern = uniform_ternary_scale(&p.val);
+        let one_extra = 8 + p.n.div_ceil(8);
+        let tern_extra = p.n.div_ceil(4);
+        if let Some(scale) = tern {
+            if two.is_none() || tern_extra <= one_extra {
+                header_checked(out, SCHEME_TERNARY_DENSE, p.layer, p.n, 0, scale)?;
+                put_tern_codes(&p.val, out);
+                return Ok(());
+            }
+        }
+        if let Some((a, b)) = two {
+            return encode_onebit_bits_into(p.layer, &p.val, a, b, out);
+        }
+        return encode_dense_f32_into(p.layer, &p.val, out);
+    }
+    if p.idx.len() != p.val.len() {
+        bail!("sparse packet idx/val length mismatch");
+    }
+    check_sparse_idx(&p.idx, p.n)?;
+    let c = p.idx.len();
+    let two = two_distinct_bits(&p.val);
+    let tern = uniform_ternary_scale(&p.val);
+    let tern_extra = c.div_ceil(4);
+    let two_extra = 8 + c.div_ceil(8);
+    if let Some(scale) = tern {
+        if two.is_none() || tern_extra <= two_extra {
+            header_checked(out, SCHEME_ADACOMP_V2, p.layer, p.n, 0, scale)?;
+            put_u32(out, c as u32);
+            vbyte::encode_into(&p.idx, out);
+            put_tern_codes(&p.val, out);
+            return Ok(());
+        }
+    }
+    if let Some((a, b)) = two {
+        header_checked(out, SCHEME_SPARSE_SIGN_V2, p.layer, p.n, 0, 0.0)?;
+        put_u32(out, c as u32);
+        put_f32(out, a);
+        put_f32(out, b);
+        vbyte::encode_into(&p.idx, out);
+        let a_bits = a.to_bits();
+        let mut byte = 0u8;
+        for (i, &v) in p.val.iter().enumerate() {
+            if v.to_bits() != a_bits {
+                byte |= 1 << (i % 8);
+            }
+            if i % 8 == 7 {
+                out.push(byte);
+                byte = 0;
+            }
+        }
+        if c % 8 != 0 {
+            out.push(byte);
+        }
+        return Ok(());
+    }
+    header_checked(out, SCHEME_SPARSE_F32_V2, p.layer, p.n, 0, 0.0)?;
+    put_u32(out, c as u32);
+    vbyte::encode_into(&p.idx, out);
+    for &v in &p.val {
+        put_f32(out, v);
+    }
+    Ok(())
+}
+
+/// [`encode_packet_into`] into a fresh buffer (tests / benches).
+pub fn encode_packet(p: &Packet) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    encode_packet_into(p, &mut out)?;
+    Ok(out)
+}
+
+/// Decode any per-layer wire format back into a `Packet`.
 pub fn decode(bytes: &[u8]) -> Result<Packet> {
+    let mut idx = Vec::new();
+    let mut val = Vec::new();
+    let (layer, n) = decode_into(bytes, &mut idx, &mut val)?;
+    Ok(Packet {
+        layer,
+        n,
+        idx,
+        val,
+        wire_bytes: bytes.len(),
+        paper_bits: 0, // accounting is the encoder's job
+    })
+}
+
+/// Decode any per-layer wire format into caller-owned buffers (cleared
+/// first — capacity is reused, the exchange hot path allocates nothing in
+/// steady state). Returns `(layer, n)`. Every branch rejects counts whose
+/// implied payload exceeds the buffer *before* reserving memory, so a
+/// corrupt length field errors instead of allocating.
+pub fn decode_into(bytes: &[u8], idx: &mut Vec<u32>, val: &mut Vec<f32>) -> Result<(usize, usize)> {
+    idx.clear();
+    val.clear();
     let mut r = Reader { b: bytes, i: 0 };
     let scheme = r.u8()?;
     let _pad = r.u8()?;
@@ -220,8 +630,10 @@ pub fn decode(bytes: &[u8]) -> Result<Packet> {
         SCHEME_ADACOMP => {
             let nbins = n.div_ceil(lt.max(1));
             let bits = slot_bits(lt);
-            let mut idx = Vec::new();
-            let mut val = Vec::new();
+            // every bin carries at least its count field
+            if r.remaining() / (bits / 8) < nbins {
+                bail!("wire underrun (adacomp bin counts)");
+            }
             for b in 0..nbins {
                 let count = match bits {
                     8 => r.u8()? as usize,
@@ -240,159 +652,195 @@ pub fn decode(bytes: &[u8]) -> Result<Packet> {
                     val.push(Tern::from_code(code).apply(scale));
                 }
             }
-            Ok(Packet {
-                layer,
-                n,
-                idx,
-                val,
-                wire_bytes: bytes.len(),
-                paper_bits: 0, // accounting is the encoder's job
-            })
         }
         SCHEME_SPARSE_SIGN => {
             let count = r.u32()? as usize;
             let pos = r.f32()?;
             let neg = r.f32()?;
-            let mut idx = Vec::with_capacity(count);
-            let mut val = Vec::with_capacity(count);
+            if r.remaining() / 4 < count {
+                bail!("wire underrun (sparse-sign count {count})");
+            }
+            idx.reserve(count);
+            val.reserve(count);
             for _ in 0..count {
                 let e = r.u32()?;
                 idx.push(e & 0x7fff_ffff);
                 val.push(if e >> 31 == 0 { pos } else { neg });
             }
-            Ok(Packet { layer, n, idx, val, wire_bytes: bytes.len(), paper_bits: 0 })
         }
         SCHEME_ONEBIT => {
             let pos = r.f32()?;
             let neg = r.f32()?;
-            let mut val = Vec::with_capacity(n);
+            if r.remaining() < n.div_ceil(8) {
+                bail!("wire underrun (onebit bitmap for n {n})");
+            }
+            val.reserve(n);
+            let mut byte = 0u8;
             for i in 0..n {
                 if i % 8 == 0 {
-                    r.u8()?;
+                    byte = r.u8()?;
                 }
-                let byte = r.b[r.i - 1];
                 let bit = (byte >> (i % 8)) & 1;
                 val.push(if bit == 0 { pos } else { neg });
             }
-            Ok(Packet { layer, n, idx: Vec::new(), val, wire_bytes: bytes.len(), paper_bits: 0 })
         }
         SCHEME_TERNARY_DENSE => {
-            let mut val = Vec::with_capacity(n);
+            if r.remaining() < n.div_ceil(4) {
+                bail!("wire underrun (ternary codes for n {n})");
+            }
+            val.reserve(n);
+            let mut byte = 0u8;
             for i in 0..n {
                 if i % 4 == 0 {
-                    r.u8()?;
+                    byte = r.u8()?;
                 }
-                let byte = r.b[r.i - 1];
                 let code = (byte >> ((i % 4) * 2)) & 3;
                 val.push(Tern::from_code(code).apply(scale));
             }
-            Ok(Packet { layer, n, idx: Vec::new(), val, wire_bytes: bytes.len(), paper_bits: 0 })
         }
         SCHEME_DENSE_F32 => {
-            let mut val = Vec::with_capacity(n);
+            if r.remaining() / 4 < n {
+                bail!("wire underrun (dense f32 for n {n})");
+            }
+            val.reserve(n);
             for _ in 0..n {
                 val.push(r.f32()?);
             }
-            Ok(Packet { layer, n, idx: Vec::new(), val, wire_bytes: bytes.len(), paper_bits: 0 })
+        }
+        SCHEME_ADACOMP_V2 => {
+            let count = decode_v2_idx(&mut r, n, idx)?;
+            if r.remaining() < count.div_ceil(4) {
+                bail!("wire underrun (v2 ternary codes)");
+            }
+            val.reserve(count);
+            let mut byte = 0u8;
+            for i in 0..count {
+                if i % 4 == 0 {
+                    byte = r.u8()?;
+                }
+                let code = (byte >> ((i % 4) * 2)) & 3;
+                val.push(Tern::from_code(code).apply(scale));
+            }
+        }
+        SCHEME_SPARSE_SIGN_V2 => {
+            let count = r.u32()? as usize;
+            if count > n {
+                bail!("sparse count {count} exceeds layer length {n}");
+            }
+            let a = r.f32()?;
+            let b = r.f32()?;
+            let used = vbyte::decode_into(count, &r.b[r.i..], idx)?;
+            r.i += used;
+            if idx.iter().any(|&i| i as usize >= n) {
+                bail!("decoded sparse index out of range for layer length {n}");
+            }
+            if r.remaining() < count.div_ceil(8) {
+                bail!("wire underrun (v2 two-value bitmap)");
+            }
+            val.reserve(count);
+            let mut byte = 0u8;
+            for i in 0..count {
+                if i % 8 == 0 {
+                    byte = r.u8()?;
+                }
+                val.push(if (byte >> (i % 8)) & 1 == 0 { a } else { b });
+            }
+        }
+        SCHEME_SPARSE_F32_V2 => {
+            let count = decode_v2_idx(&mut r, n, idx)?;
+            if r.remaining() / 4 < count {
+                bail!("wire underrun (v2 sparse f32)");
+            }
+            val.reserve(count);
+            for _ in 0..count {
+                val.push(r.f32()?);
+            }
         }
         other => bail!("unknown wire scheme {other}"),
     }
+    Ok((layer, n))
 }
 
-/// Encode a sparse sign packet (dryden / strom): indices + sign bit, with
-/// +/- reconstruction values in the payload head.
-pub fn encode_sparse_sign(
-    layer: usize,
-    n: usize,
-    pos: f32,
-    neg: f32,
-    idx: &[u32],
-    is_neg: impl Fn(usize) -> bool,
-) -> Vec<u8> {
-    let mut w = Writer::new();
-    header(&mut w, SCHEME_SPARSE_SIGN, layer, n, 0, 0.0);
-    w.u32(idx.len() as u32);
-    w.f32(pos);
-    w.f32(neg);
-    for (j, &i) in idx.iter().enumerate() {
-        let sign = if is_neg(j) { 1u32 << 31 } else { 0 };
-        w.u32(i | sign);
+/// Shared v2 prologue: count u32 + delta-vbyte index stream, bounds-checked
+/// against the layer length.
+fn decode_v2_idx(r: &mut Reader<'_>, n: usize, idx: &mut Vec<u32>) -> Result<usize> {
+    let count = r.u32()? as usize;
+    if count > n {
+        bail!("sparse count {count} exceeds layer length {n}");
     }
-    w.buf
-}
-
-/// Encode a dense 1-bit packet (onebit): sign bitmap + two means.
-pub fn encode_onebit(layer: usize, signs_neg: &[bool], pos: f32, neg: f32) -> Vec<u8> {
-    let n = signs_neg.len();
-    let mut w = Writer::new();
-    header(&mut w, SCHEME_ONEBIT, layer, n, 0, 0.0);
-    w.f32(pos);
-    w.f32(neg);
-    let mut byte = 0u8;
-    for (i, &isneg) in signs_neg.iter().enumerate() {
-        if isneg {
-            byte |= 1 << (i % 8);
-        }
-        if i % 8 == 7 {
-            w.u8(byte);
-            byte = 0;
-        }
+    let used = vbyte::decode_into(count, &r.b[r.i..], idx)?;
+    r.i += used;
+    if idx.iter().any(|&i| i as usize >= n) {
+        bail!("decoded sparse index out of range for layer length {n}");
     }
-    if n % 8 != 0 {
-        w.u8(byte);
-    }
-    w.buf
-}
-
-/// Encode a dense 2-bit ternary packet (terngrad).
-pub fn encode_ternary_dense(layer: usize, n: usize, scale: f32, codes: impl Iterator<Item = Tern>) -> Vec<u8> {
-    let mut w = Writer::new();
-    header(&mut w, SCHEME_TERNARY_DENSE, layer, n, 0, scale);
-    let mut byte = 0u8;
-    let mut i = 0usize;
-    for t in codes {
-        byte |= t.code() << ((i % 4) * 2);
-        if i % 4 == 3 {
-            w.u8(byte);
-            byte = 0;
-        }
-        i += 1;
-    }
-    assert_eq!(i, n);
-    if n % 4 != 0 {
-        w.u8(byte);
-    }
-    w.buf
-}
-
-/// Encode a dense f32 packet (identity baseline).
-pub fn encode_dense_f32(layer: usize, vals: &[f32]) -> Vec<u8> {
-    let mut w = Writer::new();
-    header(&mut w, SCHEME_DENSE_F32, layer, vals.len(), 0, 0.0);
-    for &v in vals {
-        w.f32(v);
-    }
-    w.buf
+    Ok(count)
 }
 
 /// Encode a bucket frame: the per-layer sub-messages of one reduce-plan
 /// bucket coalesced into a single wire message.
 pub fn encode_bucket_frame(bucket: usize, parts: &[Vec<u8>]) -> Vec<u8> {
     assert!(bucket <= u16::MAX as usize, "bucket id {bucket} overflows the frame header");
-    let mut w = Writer::new();
-    w.u8(BUCKET_TAG);
-    w.u8(0);
-    w.u16(bucket as u16);
-    w.u32(parts.len() as u32);
+    let mut out = Vec::new();
+    out.push(BUCKET_TAG);
+    out.push(0);
+    put_u16(&mut out, bucket as u16);
+    put_u32(&mut out, parts.len() as u32);
     for p in parts {
-        w.u32(p.len() as u32);
-        w.buf.extend_from_slice(p);
+        put_u32(&mut out, p.len() as u32);
+        out.extend_from_slice(p);
     }
-    w.buf
+    out
+}
+
+/// Encode a completed bucket's cell slots into `out` (cleared first — this
+/// is the learner's publish-time frame buffer, reused every step). Each
+/// packet goes through [`encode_packet_into`], so the frame length is the
+/// *measured* wire cost the fabric will charge for this bucket message.
+pub fn encode_bucket_frame_packets_into(
+    bucket: usize,
+    slots: &[Option<Packet>],
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    out.clear();
+    if bucket > u16::MAX as usize {
+        bail!("bucket id {bucket} overflows the frame header");
+    }
+    out.push(BUCKET_TAG);
+    out.push(0);
+    put_u16(out, bucket as u16);
+    put_u32(out, slots.len() as u32);
+    for s in slots {
+        let p = s
+            .as_ref()
+            .ok_or_else(|| anyhow!("bucket frame encode: missing packet"))?;
+        let at = out.len();
+        put_u32(out, 0); // length backfilled after the sub-message encodes
+        encode_packet_into(p, out)?;
+        let len = out.len() - at - 4;
+        out[at..at + 4].copy_from_slice(&(len as u32).to_le_bytes());
+    }
+    Ok(())
 }
 
 /// Decode a bucket frame back into (bucket id, per-layer packets).
 pub fn decode_bucket_frame(bytes: &[u8]) -> Result<(usize, Vec<Packet>)> {
+    let mut pool = BufPool::default();
+    let mut out = Vec::new();
+    let bucket = decode_bucket_frame_into(bytes, &mut pool, &mut out)?;
+    Ok((bucket, out))
+}
+
+/// Decode a bucket frame, appending one packet per sub-message to `out`
+/// with `idx`/`val` drawn from `pool` (the exchange hot path — steady
+/// state allocates nothing). Each decoded packet's `wire_bytes` is its
+/// measured sub-message length, so a topology summing them plus
+/// [`bucket_wire_len`] framing charges exactly `bytes.len()`. Returns the
+/// frame's bucket id.
+pub fn decode_bucket_frame_into(
+    bytes: &[u8],
+    pool: &mut BufPool,
+    out: &mut Vec<Packet>,
+) -> Result<usize> {
     let mut r = Reader { b: bytes, i: 0 };
     let tag = r.u8()?;
     if tag != BUCKET_TAG {
@@ -403,31 +851,54 @@ pub fn decode_bucket_frame(bytes: &[u8]) -> Result<(usize, Vec<Packet>)> {
     let count = r.u32()? as usize;
     // every sub-message needs at least its u32 length prefix — reject a
     // lying count before trusting it with an allocation
-    if count > (bytes.len() - r.i) / 4 {
+    if count > r.remaining() / 4 {
         bail!("wire underrun in bucket frame (count {count})");
     }
-    let mut packets = Vec::with_capacity(count);
     for _ in 0..count {
         let len = r.u32()? as usize;
         if r.i + len > r.b.len() {
             bail!("wire underrun in bucket frame");
         }
-        packets.push(decode(&r.b[r.i..r.i + len])?);
+        let (mut idx, mut val) = pool.take();
+        let (layer, n) = decode_into(&r.b[r.i..r.i + len], &mut idx, &mut val)?;
+        out.push(Packet {
+            layer,
+            n,
+            idx,
+            val,
+            wire_bytes: len,
+            paper_bits: 0,
+        });
         r.i += len;
     }
-    Ok((bucket, packets))
+    Ok(bucket)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn bits_of(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn sparse_packet(n: usize, idx: Vec<u32>, val: Vec<f32>) -> Packet {
+        Packet {
+            layer: 1,
+            n,
+            idx,
+            val,
+            wire_bytes: 0,
+            paper_bits: 0,
+        }
+    }
+
     #[test]
     fn adacomp_roundtrip_8bit() {
         // lt=10 < 64 -> 8-bit slots
         let idx = vec![0u32, 3, 9, 10, 25];
         let val = vec![0.5, -0.5, 0.5, 0.0, -0.5];
-        let bytes = encode_adacomp(2, 30, 10, 0.5, &idx, &val);
+        let bytes = encode_adacomp(2, 30, 10, 0.5, &idx, &val).unwrap();
         let p = decode(&bytes).unwrap();
         assert_eq!(p.layer, 2);
         assert_eq!(p.n, 30);
@@ -441,7 +912,7 @@ mod tests {
     fn adacomp_roundtrip_16bit() {
         let idx = vec![5u32, 499, 500, 1200];
         let val = vec![1.5, -1.5, 1.5, 1.5];
-        let bytes = encode_adacomp(0, 1300, 500, 1.5, &idx, &val);
+        let bytes = encode_adacomp(0, 1300, 500, 1.5, &idx, &val).unwrap();
         let p = decode(&bytes).unwrap();
         assert_eq!(p.idx, idx);
         assert_eq!(p.val, val);
@@ -452,7 +923,7 @@ mod tests {
     fn adacomp_roundtrip_wide() {
         let idx = vec![20000u32];
         let val = vec![-0.25];
-        let bytes = encode_adacomp(1, 40000, 20000, 0.25, &idx, &val);
+        let bytes = encode_adacomp(1, 40000, 20000, 0.25, &idx, &val).unwrap();
         let p = decode(&bytes).unwrap();
         assert_eq!(p.idx, idx);
         assert_eq!(p.val, val);
@@ -460,7 +931,7 @@ mod tests {
 
     #[test]
     fn adacomp_empty() {
-        let bytes = encode_adacomp(0, 100, 10, 0.0, &[], &[]);
+        let bytes = encode_adacomp(0, 100, 10, 0.0, &[], &[]).unwrap();
         let p = decode(&bytes).unwrap();
         assert!(p.idx.is_empty());
         assert_eq!(p.n, 100);
@@ -469,7 +940,7 @@ mod tests {
     #[test]
     fn sparse_sign_roundtrip() {
         let idx = vec![1u32, 7, 1000];
-        let bytes = encode_sparse_sign(3, 2000, 0.2, -0.3, &idx, |j| j == 1);
+        let bytes = encode_sparse_sign(3, 2000, 0.2, -0.3, &idx, |j| j == 1).unwrap();
         let p = decode(&bytes).unwrap();
         assert_eq!(p.idx, idx);
         assert_eq!(p.val, vec![0.2, -0.3, 0.2]);
@@ -478,7 +949,7 @@ mod tests {
     #[test]
     fn onebit_roundtrip() {
         let signs: Vec<bool> = (0..19).map(|i| i % 3 == 0).collect();
-        let bytes = encode_onebit(0, &signs, 0.5, -0.25);
+        let bytes = encode_onebit(0, &signs, 0.5, -0.25).unwrap();
         let p = decode(&bytes).unwrap();
         assert_eq!(p.val.len(), 19);
         for (i, &v) in p.val.iter().enumerate() {
@@ -490,7 +961,7 @@ mod tests {
     #[test]
     fn ternary_dense_roundtrip() {
         let codes = [Tern::Pos, Tern::Zero, Tern::Neg, Tern::Pos, Tern::Zero];
-        let bytes = encode_ternary_dense(0, 5, 2.0, codes.iter().copied());
+        let bytes = encode_ternary_dense(0, 5, 2.0, codes.iter().copied()).unwrap();
         let p = decode(&bytes).unwrap();
         assert_eq!(p.val, vec![2.0, 0.0, -2.0, 2.0, 0.0]);
         assert_eq!(bytes.len(), 16 + 2);
@@ -499,7 +970,7 @@ mod tests {
     #[test]
     fn dense_f32_roundtrip() {
         let vals = vec![1.0, -2.5, 3.25];
-        let bytes = encode_dense_f32(4, &vals);
+        let bytes = encode_dense_f32(4, &vals).unwrap();
         let p = decode(&bytes).unwrap();
         assert_eq!(p.val, vals);
         assert_eq!(p.layer, 4);
@@ -511,6 +982,79 @@ mod tests {
         assert!(decode(&[99; 32]).is_err());
     }
 
+    /// Build a raw header by hand (the only way to exercise lying counts —
+    /// the checked encoders refuse to produce them).
+    fn raw_header(scheme: u8, n: u32, lt: u32) -> Vec<u8> {
+        let mut b = vec![scheme, 0, 0, 0];
+        b.extend_from_slice(&n.to_le_bytes());
+        b.extend_from_slice(&lt.to_le_bytes());
+        b.extend_from_slice(&1.0f32.to_le_bytes());
+        b
+    }
+
+    #[test]
+    fn decode_rejects_lying_counts_before_allocating() {
+        // each header claims a huge element count with a near-empty payload;
+        // decode must error out without reserving that much memory
+        let mut onebit = raw_header(SCHEME_ONEBIT, u32::MAX, 0);
+        onebit.extend_from_slice(&[0; 9]); // pos/neg + one bitmap byte
+        assert!(decode(&onebit).is_err());
+
+        let mut tern = raw_header(SCHEME_TERNARY_DENSE, u32::MAX, 0);
+        tern.push(0);
+        assert!(decode(&tern).is_err());
+
+        let mut dense = raw_header(SCHEME_DENSE_F32, u32::MAX, 0);
+        dense.extend_from_slice(&[0; 8]);
+        assert!(decode(&dense).is_err());
+
+        let mut sign = raw_header(SCHEME_SPARSE_SIGN, 100, 0);
+        sign.extend_from_slice(&u32::MAX.to_le_bytes()); // lying count
+        sign.extend_from_slice(&[0; 12]);
+        assert!(decode(&sign).is_err());
+
+        let mut ada = raw_header(SCHEME_ADACOMP, u32::MAX, 1); // ~4e9 bins
+        ada.extend_from_slice(&[0; 4]);
+        assert!(decode(&ada).is_err());
+
+        let mut v2 = raw_header(SCHEME_ADACOMP_V2, 100, 0);
+        v2.extend_from_slice(&u32::MAX.to_le_bytes()); // count > n
+        assert!(decode(&v2).is_err());
+    }
+
+    #[test]
+    fn encoders_reject_header_overflow() {
+        // layer id silently truncated to u16 before this guard existed
+        assert!(encode_dense_f32(70_000, &[1.0]).is_err());
+        assert!(encode_onebit(70_000, &[true], 0.5, -0.5).is_err());
+        assert!(encode_adacomp(70_000, 10, 10, 0.5, &[0], &[0.5]).is_err());
+        assert!(encode_sparse_sign(70_000, 10, 0.5, -0.5, &[0], |_| false).is_err());
+        assert!(encode_ternary_dense(70_000, 1, 1.0, [Tern::Pos].into_iter()).is_err());
+    }
+
+    #[test]
+    fn adacomp_encode_validates_indices() {
+        // non-increasing
+        assert!(encode_adacomp(0, 30, 10, 0.5, &[5, 5], &[0.5, 0.5]).is_err());
+        assert!(encode_adacomp(0, 30, 10, 0.5, &[9, 3], &[0.5, 0.5]).is_err());
+        // out of range
+        assert!(encode_adacomp(0, 30, 10, 0.5, &[30], &[0.5]).is_err());
+        // idx/val mismatch
+        assert!(encode_adacomp(0, 30, 10, 0.5, &[1, 2], &[0.5]).is_err());
+        // degenerate bin length
+        assert!(encode_adacomp(0, 30, 0, 0.5, &[], &[]).is_err());
+    }
+
+    #[test]
+    fn sparse_sign_rejects_sign_bit_collision() {
+        // idx >= 2^31 would silently alias the sign bit
+        assert!(encode_sparse_sign(0, usize::MAX, 0.5, -0.5, &[1 << 31], |_| false).is_err());
+        let ok = encode_sparse_sign(0, usize::MAX, 0.5, -0.5, &[(1 << 31) - 1], |_| true).unwrap();
+        let p = decode(&ok).unwrap();
+        assert_eq!(p.idx, vec![(1 << 31) - 1]);
+        assert_eq!(p.val, vec![-0.5]);
+    }
+
     #[test]
     fn lens_match_encoders() {
         // adacomp, all three slot widths
@@ -520,20 +1064,119 @@ mod tests {
             (40000, 20000, vec![20000], vec![-0.25]),
             (100, 10, vec![], vec![]),
         ] {
-            let bytes = encode_adacomp(0, n, lt, 0.5, &idx, &val);
+            let bytes = encode_adacomp(0, n, lt, 0.5, &idx, &val).unwrap();
             assert_eq!(bytes.len(), adacomp_wire_len(n, lt, idx.len()), "n={n} lt={lt}");
         }
         let idx = vec![1u32, 7, 1000];
         assert_eq!(
-            encode_sparse_sign(3, 2000, 0.2, -0.3, &idx, |j| j == 1).len(),
+            encode_sparse_sign(3, 2000, 0.2, -0.3, &idx, |j| j == 1).unwrap().len(),
             sparse_sign_wire_len(idx.len())
         );
         for n in [1usize, 8, 19, 64] {
             let signs: Vec<bool> = (0..n).map(|i| i % 3 == 0).collect();
-            assert_eq!(encode_onebit(0, &signs, 0.5, -0.25).len(), onebit_wire_len(n));
+            assert_eq!(encode_onebit(0, &signs, 0.5, -0.25).unwrap().len(), onebit_wire_len(n));
             let codes = (0..n).map(|i| if i % 2 == 0 { Tern::Pos } else { Tern::Zero });
-            assert_eq!(encode_ternary_dense(0, n, 1.0, codes).len(), ternary_dense_wire_len(n));
-            assert_eq!(encode_dense_f32(0, &vec![1.0; n]).len(), dense_f32_wire_len(n));
+            assert_eq!(
+                encode_ternary_dense(0, n, 1.0, codes).unwrap().len(),
+                ternary_dense_wire_len(n)
+            );
+            assert_eq!(encode_dense_f32(0, &vec![1.0; n]).unwrap().len(), dense_f32_wire_len(n));
+        }
+    }
+
+    #[test]
+    fn v2_lens_match_encoders() {
+        // ternary sparse (has a zero value, so two-value can't apply)
+        let p = sparse_packet(4000, vec![2, 700, 701, 1500, 3999], vec![0.5, -0.5, 0.0, 0.5, -0.5]);
+        let bytes = encode_packet(&p).unwrap();
+        assert_eq!(bytes[0], SCHEME_ADACOMP_V2);
+        assert_eq!(bytes.len(), v2_ternary_wire_len(&p.idx));
+
+        // two distinct non-ternary values
+        let p = sparse_packet(4000, vec![5, 9, 2000], vec![0.25, -0.75, 0.25]);
+        let bytes = encode_packet(&p).unwrap();
+        assert_eq!(bytes[0], SCHEME_SPARSE_SIGN_V2);
+        assert_eq!(bytes.len(), v2_two_value_wire_len(&p.idx));
+
+        // arbitrary values fall through to sparse f32
+        let p = sparse_packet(4000, vec![5, 9, 2000], vec![0.25, -0.75, 1.5]);
+        let bytes = encode_packet(&p).unwrap();
+        assert_eq!(bytes[0], SCHEME_SPARSE_F32_V2);
+        assert_eq!(bytes.len(), v2_sparse_f32_wire_len(&p.idx));
+    }
+
+    #[test]
+    fn packet_roundtrips_bitwise_per_classification() {
+        let cases = vec![
+            // ternary sparse (with a literal zero)
+            sparse_packet(4000, vec![2, 700, 701, 1500], vec![0.5, -0.5, 0.0, 0.5]),
+            // two-value sparse, values that aren't +/- pairs
+            sparse_packet(10_000, vec![1, 5000, 9999], vec![0.1, 0.7, 0.1]),
+            // arbitrary sparse f32 (3+ distinct values)
+            sparse_packet(100, vec![0, 50, 99], vec![1.0, -2.0, 3.5]),
+            // -0.0 cannot be ternary: falls to two-value, still bit-exact
+            sparse_packet(100, vec![3, 4], vec![-0.0, 0.5]),
+            // NaN payloads survive bitwise
+            sparse_packet(100, vec![3, 4, 7], vec![f32::NAN, 0.5, -1.5]),
+            // empty sparse packet
+            sparse_packet(100, vec![], vec![]),
+            // dense arbitrary
+            Packet::dense(3, vec![1.0, -2.5, 3.25, 0.0]),
+            // dense two-value
+            Packet::dense(3, vec![0.5, -0.25, 0.5, 0.5, -0.25]),
+            // dense ternary
+            Packet::dense(3, vec![0.75, 0.0, -0.75, 0.0]),
+        ];
+        for p in cases {
+            let bytes = encode_packet(&p).unwrap();
+            let q = decode(&bytes).unwrap();
+            assert_eq!(q.layer, p.layer);
+            assert_eq!(q.n, p.n);
+            assert_eq!(q.idx, p.idx, "idx mismatch (scheme {})", bytes[0]);
+            assert_eq!(bits_of(&q.val), bits_of(&p.val), "val bits mismatch (scheme {})", bytes[0]);
+            assert_eq!(q.wire_bytes, bytes.len());
+        }
+    }
+
+    #[test]
+    fn dense_packet_measured_equals_analytic() {
+        // the dense schemes keep their v1 forms, so the engine's measured
+        // bytes match the compressors' analytic wire_bytes exactly
+        let tern = Packet::dense(0, vec![0.5, 0.0, -0.5, 0.5, 0.0, 0.5, -0.5]);
+        assert_eq!(encode_packet(&tern).unwrap().len(), ternary_dense_wire_len(7));
+        let one: Vec<f32> = (0..100).map(|i| if i % 3 == 0 { 0.2 } else { -0.4 }).collect();
+        assert_eq!(encode_packet(&Packet::dense(0, one)).unwrap().len(), onebit_wire_len(100));
+        let raw: Vec<f32> = (0..33).map(|i| i as f32 * 0.37 - 5.0).collect();
+        assert_eq!(encode_packet(&Packet::dense(0, raw)).unwrap().len(), dense_f32_wire_len(33));
+    }
+
+    #[test]
+    fn v2_shrinks_adacomp_indices_in_16bit_regime() {
+        // fc-style layer: lt=500 -> 16-bit slots; ~0.4% density
+        let n = 100_000usize;
+        let lt = 500usize;
+        let idx: Vec<u32> = (0..n as u32).step_by(250).collect();
+        let val: Vec<f32> = idx.iter().map(|&i| if i % 500 == 0 { 0.5 } else { -0.5 }).collect();
+        let v1 = encode_adacomp(0, n, lt, 0.5, &idx, &val).unwrap();
+        let p = sparse_packet(n, idx, val);
+        let v2 = encode_packet(&p).unwrap();
+        assert!(
+            v2.len() < v1.len(),
+            "v2 ({}) must beat v1 ({}) in the 16-bit slot regime",
+            v2.len(),
+            v1.len()
+        );
+        let q = decode(&v2).unwrap();
+        assert_eq!(q.idx, p.idx);
+        assert_eq!(q.val, p.val);
+    }
+
+    #[test]
+    fn v2_truncation_errors_not_panics() {
+        let p = sparse_packet(4000, vec![2, 700, 701, 1500], vec![0.5, -0.5, 0.0, 0.5]);
+        let bytes = encode_packet(&p).unwrap();
+        for cut in 0..bytes.len() {
+            assert!(decode(&bytes[..cut]).is_err(), "cut {cut}");
         }
     }
 
@@ -542,9 +1185,9 @@ mod tests {
         // one bucket coalescing an adacomp layer, a tiny dense bias, and a
         // sparse-sign layer — the decoded packets must match each sub-format
         let parts = vec![
-            encode_adacomp(3, 30, 10, 0.5, &[0, 9, 25], &[0.5, -0.5, 0.5]),
-            encode_dense_f32(4, &[1.0, -2.0]),
-            encode_sparse_sign(5, 100, 0.2, -0.3, &[7, 40], |j| j == 0),
+            encode_adacomp(3, 30, 10, 0.5, &[0, 9, 25], &[0.5, -0.5, 0.5]).unwrap(),
+            encode_dense_f32(4, &[1.0, -2.0]).unwrap(),
+            encode_sparse_sign(5, 100, 0.2, -0.3, &[7, 40], |j| j == 0).unwrap(),
         ];
         let bytes = encode_bucket_frame(2, &parts);
         let payload: usize = parts.iter().map(|p| p.len()).sum();
@@ -561,13 +1204,49 @@ mod tests {
     }
 
     #[test]
+    fn bucket_frame_from_slots_measures_exactly() {
+        // the publish-time encoder must agree byte-for-byte with framing
+        // per-packet encodes, and decoded wire_bytes must sum (with the
+        // frame overhead) to the real frame length — the measured-bytes
+        // contract the fabric charge relies on
+        let slots = vec![
+            Some(sparse_packet(4000, vec![2, 700, 1500], vec![0.5, -0.5, 0.5])),
+            Some(Packet::dense(2, vec![1.0, -2.0, 0.25])),
+        ];
+        let mut frame = Vec::new();
+        encode_bucket_frame_packets_into(7, &slots, &mut frame).unwrap();
+        let parts: Vec<Vec<u8>> = slots
+            .iter()
+            .map(|s| encode_packet(s.as_ref().unwrap()).unwrap())
+            .collect();
+        assert_eq!(frame, encode_bucket_frame(7, &parts));
+
+        let mut pool = BufPool::default();
+        let mut out = Vec::new();
+        let bucket = decode_bucket_frame_into(&frame, &mut pool, &mut out).unwrap();
+        assert_eq!(bucket, 7);
+        assert_eq!(out.len(), 2);
+        let payload: usize = out.iter().map(|p| p.wire_bytes).sum();
+        assert_eq!(bucket_wire_len(out.len(), payload), frame.len());
+        for (p, s) in out.iter().zip(slots.iter()) {
+            let s = s.as_ref().unwrap();
+            assert_eq!(p.idx, s.idx);
+            assert_eq!(bits_of(&p.val), bits_of(&s.val));
+        }
+
+        // a missing slot is a caller bug surfaced as an error, not a panic
+        let holey = vec![Some(Packet::dense(0, vec![1.0])), None];
+        assert!(encode_bucket_frame_packets_into(0, &holey, &mut frame).is_err());
+    }
+
+    #[test]
     fn bucket_frame_rejects_garbage() {
         assert!(decode_bucket_frame(&[1, 2, 3]).is_err());
         // right tag, truncated payload
-        let good = encode_bucket_frame(0, &[encode_dense_f32(0, &[1.0])]);
+        let good = encode_bucket_frame(0, &[encode_dense_f32(0, &[1.0]).unwrap()]);
         assert!(decode_bucket_frame(&good[..good.len() - 2]).is_err());
         // a per-layer packet is not a bucket frame
-        assert!(decode_bucket_frame(&encode_dense_f32(0, &[1.0])).is_err());
+        assert!(decode_bucket_frame(&encode_dense_f32(0, &[1.0]).unwrap()).is_err());
         // a lying sub-message count must error, not allocate count capacity
         let bomb = [BUCKET_TAG, 0, 0, 0, 0xff, 0xff, 0xff, 0xff];
         assert!(decode_bucket_frame(&bomb).is_err());

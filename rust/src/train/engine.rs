@@ -720,12 +720,18 @@ fn tally_packet(
     comp_all.add(p);
 }
 
-/// Take one ready bucket out of every learner's slot cell (learner-id
-/// order — the determinism contract), fold its packets into the
-/// compression stats, reduce it over the topology at the given timeline
-/// placement, and hand the spent packets back for recycling when the slot
-/// comes around again. Allocation-free in steady state (`gather` reuses
-/// its per-learner vecs).
+/// Exchange one ready bucket over the **wire**: for every learner (in
+/// learner-id order — the determinism contract) fold the bucket's packed
+/// packets into the compression stats, then decode the learner's serialized
+/// bucket frame (built at publish time; `learner::publish`) into `gather`
+/// through the pooled wire buffers, and reduce the *decoded* packets over
+/// the topology. Each decoded packet's `wire_bytes` is its measured
+/// sub-message length, so the fabric round is charged exactly the frame's
+/// real byte count — not the analytic estimate. The decoded values are
+/// bit-identical to the packed ones (wire.rs classification contract), so
+/// reduction results don't change; the originals stay in their slots for
+/// the learner to recycle next step. Allocation-free in steady state
+/// (`gather` reuses its per-learner vecs, `wire_pool` the idx/val buffers).
 #[allow(clippy::too_many_arguments)]
 fn exchange_one_bucket(
     fleet: &Fleet,
@@ -734,6 +740,7 @@ fn exchange_one_bucket(
     layer_lens: &[usize],
     bucket: &Bucket,
     gather: &mut [Vec<Packet>],
+    wire_pool: &mut compress::BufPool,
     sched: RoundSched,
     topo: &mut dyn Topology,
     fabric: &mut Fabric,
@@ -744,21 +751,19 @@ fn exchange_one_bucket(
 ) -> crate::comm::RoundCost {
     let bi = bucket.id;
     for (l, ring) in fleet.cells.iter().enumerate() {
-        let mut cell = ring[slot][bi].lock();
-        for s in cell.slots.iter_mut() {
-            gather[l].push(s.take().expect("ready bucket is missing a packet"));
-        }
-    }
-    for packets in gather.iter() {
-        for p in packets {
+        let cell = ring[slot][bi].lock();
+        for s in cell.slots.iter() {
+            let p = s.as_ref().expect("ready bucket is missing a packet");
             tally_packet(layout, p, comp_conv, comp_fc, comp_all);
         }
+        let fbi = compress::wire::decode_bucket_frame_into(&cell.frame, wire_pool, &mut gather[l])
+            .expect("engine-encoded bucket frame must decode");
+        assert_eq!(fbi, bi, "bucket frame id mismatch");
     }
     let cost = topo.exchange_bucket_into(bucket, &*gather, layer_lens, sched, fabric, reduced);
-    for (l, ring) in fleet.cells.iter().enumerate() {
-        let mut cell = ring[slot][bi].lock();
-        for (s, p) in cell.slots.iter_mut().zip(gather[l].drain(..)) {
-            *s = Some(p);
+    for g in gather.iter_mut() {
+        for p in g.drain(..) {
+            wire_pool.put(p.idx, p.val);
         }
     }
     cost
@@ -1070,6 +1075,9 @@ fn run_loop(
         let cap = fleet.plan.max_bucket_layers();
         gather = (0..n).map(|_| Vec::with_capacity(cap)).collect();
     }
+    // idx/val buffers for decoding bucket frames on the exchange path —
+    // grows to (learners x max bucket layers) pairs, then never allocates
+    let mut wire_pool = compress::BufPool::default();
     let mut done_flags = vec![false; nb];
     let mut port_end = vec![0.0f64; topo.ports()];
     // Windowed-timeline state: per-learner availability/start times and
@@ -1213,6 +1221,7 @@ fn run_loop(
                             &layer_lens,
                             bucket,
                             &mut gather,
+                            &mut wire_pool,
                             sched,
                             topo.as_mut(),
                             &mut fabric,
@@ -1286,6 +1295,7 @@ fn run_loop(
                             &layer_lens,
                             bucket,
                             &mut gather,
+                            &mut wire_pool,
                             sched,
                             topo.as_mut(),
                             &mut fabric,

@@ -18,7 +18,7 @@ use std::sync::{Mutex, MutexGuard};
 use anyhow::Result;
 
 use crate::comm::ReducePlan;
-use crate::compress::{self, Compressor, Packet};
+use crate::compress::{self, wire, Compressor, Packet};
 use crate::data::{draw_batch_into, Dataset, Shard, Split};
 use crate::models::Layout;
 use crate::runtime::{Batch, Executor};
@@ -39,6 +39,12 @@ pub struct BucketSlots {
     pub slots: Vec<Option<Packet>>,
     /// Slots filled this step; the bucket is complete at `slots.len()`.
     pub filled: usize,
+    /// The bucket's serialized wire frame, encoded by the learner the
+    /// moment the last slot lands (still under the cell lock, before the
+    /// bucket-ready callback). The engine decodes this — not the in-memory
+    /// packets — so the fabric charges the *measured* frame length. Reused
+    /// every step; never allocates in steady state.
+    pub frame: Vec<u8>,
 }
 
 impl BucketCell {
@@ -46,6 +52,7 @@ impl BucketCell {
         BucketCell(Mutex::new(BucketSlots {
             slots: (0..num_layers).map(|_| None).collect(),
             filled: 0,
+            frame: Vec::new(),
         }))
     }
 
@@ -305,7 +312,10 @@ impl Learner {
 }
 
 /// Publish one packed layer into its bucket cell slot; fires `on_bucket`
-/// when the bucket's last slot lands. The cell lock is dropped before the
+/// when the bucket's last slot lands. Completing a bucket also serializes
+/// its wire frame into the cell's reusable frame buffer (this learner's
+/// contribution as it would cross the fabric — the engine decodes the frame
+/// and charges its measured length). The cell lock is dropped before the
 /// callback (the engine's notification path takes its own locks).
 fn publish(
     plan: &ReducePlan,
@@ -320,7 +330,13 @@ fn publish(
         debug_assert!(cell.slots[pos].is_none(), "layer {li} packed twice");
         cell.slots[pos] = Some(p);
         cell.filled += 1;
-        cell.filled == cell.slots.len()
+        let done = cell.filled == cell.slots.len();
+        if done {
+            let BucketSlots { slots, frame, .. } = &mut *cell;
+            wire::encode_bucket_frame_packets_into(bi, slots, frame)
+                .expect("bucket frame encode");
+        }
+        done
     };
     if done {
         on_bucket(bi);
@@ -455,6 +471,17 @@ mod tests {
             let cell = cells[0].lock();
             assert_eq!(cell.filled, layout.num_layers());
             assert!(cell.slots.iter().all(|s| s.is_some()));
+            // publish serialized the completed bucket's wire frame; it must
+            // decode back to exactly the packets sitting in the slots
+            let (bi, decoded) = wire::decode_bucket_frame(&cell.frame).unwrap();
+            assert_eq!(bi, 0);
+            assert_eq!(decoded.len(), layout.num_layers());
+            for (d, s) in decoded.iter().zip(cell.slots.iter()) {
+                let s = s.as_ref().unwrap();
+                assert_eq!(d.layer, s.layer);
+                assert_eq!(d.idx, s.idx);
+                assert_eq!(d.val, s.val);
+            }
         }
     }
 

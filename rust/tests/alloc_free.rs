@@ -2,9 +2,9 @@
 //!
 //! A counting global allocator wraps `System`; after a warmup round, a
 //! steady-state `exchange_into` (every topology), the bucketed
-//! cell→exchange→hand-back loop (the engine's streamed scheduler shape),
-//! and a steady-state pack→exchange→recycle loop must perform **zero**
-//! heap allocations.
+//! frame-encode→decode→exchange loop (the engine's streamed scheduler
+//! shape, including the real wire serialization), and a steady-state
+//! pack→exchange→recycle loop must perform **zero** heap allocations.
 //!
 //! NOTE: exactly one #[test] lives in this binary — the default test harness
 //! runs tests concurrently in one process, and a second test's allocations
@@ -41,9 +41,9 @@ fn allocs() -> usize {
 }
 
 use adacomp::comm::{topology, Fabric, LinkModel, Reduced, ReducePlan, RoundSched, Topology};
-use adacomp::compress::{self, Config, Kind, Packet};
+use adacomp::compress::{self, wire, Config, Kind, Packet};
 use adacomp::models::{LayerKind, Layout};
-use adacomp::train::learner::{cell_ring_for_plan, cells_for_plan, BucketCell};
+use adacomp::train::learner::{cell_ring_for_plan, cells_for_plan, BucketCell, BucketSlots};
 use adacomp::util::rng::Pcg32;
 
 /// Every topology the hot path must keep allocation-free (4 learners).
@@ -106,11 +106,13 @@ fn steady_state_exchange_and_pack_are_allocation_free() {
         assert_eq!(fabric.stats.rounds, 53);
     }
 
-    // --- bucketed cell -> exchange -> hand-back: the streamed scheduler's
-    // hot path. The engine takes each learner's bucket message out of its
-    // per-(learner, bucket) cell, reduces the bucket over the topology
-    // (`exchange_bucket_into`), and puts the packets back for next-step
-    // recycling. Steady state must not allocate.
+    // --- bucketed encode -> decode -> exchange: the streamed scheduler's
+    // hot path. Each learner's completed bucket is serialized into the
+    // cell's reusable frame buffer (the publish step), the engine decodes
+    // the frame into its gather scratch through a pooled BufPool, reduces
+    // the decoded packets over the topology (`exchange_bucket_into`), and
+    // drains the gather buffers back to the pool. Originals stay in the
+    // cell slots. Steady state must not allocate.
     {
         // threshold 12000: bias+conv1 coalesce, conv2 and fc stand alone
         let plan = ReducePlan::build(&layout, 12000, 2);
@@ -130,6 +132,7 @@ fn steady_state_exchange_and_pack_are_allocation_free() {
             }
             let mut gather: Vec<Vec<Packet>> =
                 (0..4).map(|_| Vec::with_capacity(lens.len())).collect();
+            let mut wire_pool = compress::BufPool::default();
             let mut streamed_round = |topo: &mut Box<dyn Topology>,
                                       fabric: &mut Fabric,
                                       reduced: &mut Reduced,
@@ -137,9 +140,13 @@ fn steady_state_exchange_and_pack_are_allocation_free() {
                 for bucket in &plan.buckets {
                     for (l, row) in cells.iter().enumerate() {
                         let mut cell = row[bucket.id].lock();
-                        for slot in cell.slots.iter_mut() {
-                            gather[l].push(slot.take().unwrap());
-                        }
+                        let BucketSlots { slots, frame, .. } = &mut *cell;
+                        wire::encode_bucket_frame_packets_into(bucket.id, slots, frame)
+                            .unwrap();
+                        let fbi =
+                            wire::decode_bucket_frame_into(frame, &mut wire_pool, &mut gather[l])
+                                .unwrap();
+                        assert_eq!(fbi, bucket.id);
                     }
                     topo.exchange_bucket_into(
                         bucket,
@@ -149,15 +156,16 @@ fn steady_state_exchange_and_pack_are_allocation_free() {
                         fabric,
                         reduced,
                     );
-                    for (l, row) in cells.iter().enumerate() {
-                        let mut cell = row[bucket.id].lock();
-                        for (slot, p) in cell.slots.iter_mut().zip(gather[l].drain(..)) {
-                            *slot = Some(p);
+                    for g in gather.iter_mut() {
+                        for p in g.drain(..) {
+                            wire_pool.put(p.idx, p.val);
                         }
                     }
                 }
             };
-            // warmup sizes topology scratch (union bitsets, up/down vectors)
+            // warmup sizes topology scratch (union bitsets, up/down vectors),
+            // frame buffers, the decode pool, and the vbyte/simd one-time
+            // initialization (shuffle tables, env probe)
             for _ in 0..3 {
                 streamed_round(&mut topo, &mut fabric, &mut reduced, &mut gather);
             }
@@ -216,6 +224,7 @@ fn steady_state_exchange_and_pack_are_allocation_free() {
         let mut reduced = Reduced::new(&lens);
         let mut gather: Vec<Vec<Packet>> =
             (0..4).map(|_| Vec::with_capacity(lens.len())).collect();
+        let mut wire_pool = compress::BufPool::default();
         let mut port_end = vec![0.0f64; 2];
 
         let mut windowed_step = |step: usize,
@@ -246,15 +255,20 @@ fn steady_state_exchange_and_pack_are_allocation_free() {
                     cell.filled += 1;
                 }
             }
-            // engine phase: exchange each bucket at its ready time, hand
-            // the packets back for the slot's next occupancy
+            // engine phase: serialize each bucket into its cell's frame
+            // (publish), decode through the pooled buffers, exchange at the
+            // bucket's ready time, then return the decode buffers to the
+            // pool. Originals stay in the slots for next-occupancy recycle.
             let ready_s = step as f64 * 1e-3;
             for bucket in &plan.buckets {
                 for (l, ring) in rings.iter().enumerate() {
                     let mut cell = ring[slot][bucket.id].lock();
-                    for s in cell.slots.iter_mut() {
-                        gather[l].push(s.take().unwrap());
-                    }
+                    let BucketSlots { slots, frame, .. } = &mut *cell;
+                    wire::encode_bucket_frame_packets_into(bucket.id, slots, frame).unwrap();
+                    let fbi =
+                        wire::decode_bucket_frame_into(frame, &mut wire_pool, &mut gather[l])
+                            .unwrap();
+                    assert_eq!(fbi, bucket.id);
                 }
                 let cost = topo.exchange_bucket_into(
                     bucket,
@@ -268,10 +282,9 @@ fn steady_state_exchange_and_pack_are_allocation_free() {
                     reduced,
                 );
                 port_end[bucket.port] = cost.end_s;
-                for (l, ring) in rings.iter().enumerate() {
-                    let mut cell = ring[slot][bucket.id].lock();
-                    for (s, p) in cell.slots.iter_mut().zip(gather[l].drain(..)) {
-                        *s = Some(p);
+                for g in gather.iter_mut() {
+                    for p in g.drain(..) {
+                        wire_pool.put(p.idx, p.val);
                     }
                 }
             }

@@ -82,7 +82,7 @@ fn p2_wire_roundtrip_random_packets() {
                 });
             }
         }
-        let bytes = wire::encode_adacomp(3, n, lt, scale, &idx, &val);
+        let bytes = wire::encode_adacomp(3, n, lt, scale, &idx, &val).unwrap();
         let p = wire::decode(&bytes).unwrap();
         assert_eq!(p.layer, 3, "seed {seed}");
         assert_eq!(p.n, n);

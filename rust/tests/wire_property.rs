@@ -1,0 +1,315 @@
+//! Seeded randomized property tests for the wire formats: every scheme x
+//! slot width x the v2 delta-vbyte sparse forms. Random packets must
+//! round-trip bit-exactly, random truncation points must error (never
+//! panic, never allocate absurdly), and the SIMD vbyte kernel must produce
+//! byte-identical streams to the scalar reference on the same inputs.
+//!
+//! Run with `ADACOMP_NO_SIMD=1` to force the scalar fallback through the
+//! same assertions (CI does both).
+
+use adacomp::compress::{vbyte, wire, Packet};
+use adacomp::util::rng::Pcg32;
+
+/// Random strictly-increasing index set over [0, n) with ~`density`
+/// fill, plus values drawn by `mkval(rng)`.
+fn random_sparse(
+    rng: &mut Pcg32,
+    n: usize,
+    density: f32,
+    mut mkval: impl FnMut(&mut Pcg32) -> f32,
+) -> (Vec<u32>, Vec<f32>) {
+    let mut idx = Vec::new();
+    let mut val = Vec::new();
+    for i in 0..n {
+        if rng.uniform() < density {
+            idx.push(i as u32);
+            val.push(mkval(rng));
+        }
+    }
+    (idx, val)
+}
+
+fn sparse_packet(n: usize, idx: Vec<u32>, val: Vec<f32>) -> Packet {
+    Packet {
+        layer: 7,
+        n,
+        idx,
+        val,
+        wire_bytes: 0,
+        paper_bits: 0,
+    }
+}
+
+fn bits_of(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn distinct_bits(v: &[f32]) -> usize {
+    let mut b = bits_of(v);
+    b.sort_unstable();
+    b.dedup();
+    b.len()
+}
+
+fn assert_packet_roundtrip(p: &Packet, ctx: &str) -> Vec<u8> {
+    let bytes = wire::encode_packet(p).expect(ctx);
+    let q = wire::decode(&bytes).expect(ctx);
+    assert_eq!(q.layer, p.layer, "{ctx}");
+    assert_eq!(q.n, p.n, "{ctx}");
+    assert_eq!(q.idx, p.idx, "{ctx}");
+    assert_eq!(bits_of(&q.val), bits_of(&p.val), "{ctx}");
+    assert_eq!(q.wire_bytes, bytes.len(), "{ctx}");
+    bytes
+}
+
+#[test]
+fn wire_v1_adacomp_random_roundtrip_all_slot_widths() {
+    // lt spans the 8-, 16- and 32-bit slot regimes
+    for (seed, lt) in [(1u64, 10usize), (2, 63), (3, 64), (4, 500), (5, 16384), (6, 20000)] {
+        let mut rng = Pcg32::new(seed, 70);
+        let nbins = 1 + rng.below(12) as usize;
+        let n = lt * nbins - rng.below(lt.min(40) as u32) as usize;
+        let scale = rng.range(1e-5, 4.0);
+        let (idx, val) = random_sparse(&mut rng, n, 0.05, |r| match r.below(3) {
+            0 => scale,
+            1 => -scale,
+            _ => 0.0,
+        });
+        let bytes = wire::encode_adacomp(7, n, lt, scale, &idx, &val).unwrap();
+        assert_eq!(bytes.len(), wire::adacomp_wire_len(n, lt, idx.len()), "lt {lt}");
+        let q = wire::decode(&bytes).unwrap();
+        assert_eq!(q.idx, idx, "lt {lt}");
+        assert_eq!(bits_of(&q.val), bits_of(&val), "lt {lt}");
+        // truncations error, never panic: exhaustive over the header
+        // region, sampled over the (large) slot stream
+        for cut in 0..bytes.len().min(64) {
+            assert!(wire::decode(&bytes[..cut]).is_err(), "lt {lt} cut {cut}");
+        }
+        for _ in 0..300 {
+            let cut = rng.below(bytes.len() as u32) as usize;
+            assert!(wire::decode(&bytes[..cut]).is_err(), "lt {lt} cut {cut}");
+        }
+    }
+}
+
+#[test]
+fn wire_v1_sparse_sign_random_roundtrip() {
+    for seed in 0..8u64 {
+        let mut rng = Pcg32::new(seed, 71);
+        let n = 100 + rng.below(5000) as usize;
+        let pos = rng.range(1e-4, 2.0);
+        let neg = -rng.range(1e-4, 2.0);
+        let (idx, _) = random_sparse(&mut rng, n, 0.03, |_| 0.0);
+        let signs: Vec<bool> = (0..idx.len()).map(|_| rng.uniform() < 0.5).collect();
+        let bytes = wire::encode_sparse_sign(9, n, pos, neg, &idx, |j| signs[j]).unwrap();
+        assert_eq!(bytes.len(), wire::sparse_sign_wire_len(idx.len()));
+        let q = wire::decode(&bytes).unwrap();
+        assert_eq!(q.idx, idx);
+        for (j, &v) in q.val.iter().enumerate() {
+            assert_eq!(v.to_bits(), if signs[j] { neg } else { pos }.to_bits());
+        }
+        for cut in 0..bytes.len() {
+            assert!(wire::decode(&bytes[..cut]).is_err(), "seed {seed} cut {cut}");
+        }
+    }
+}
+
+#[test]
+fn wire_v1_dense_random_roundtrips() {
+    for seed in 0..6u64 {
+        let mut rng = Pcg32::new(seed, 72);
+        let n = 1 + rng.below(700) as usize;
+
+        // onebit: two arbitrary levels
+        let pos = rng.range(0.01, 1.0);
+        let neg = -rng.range(0.01, 1.0);
+        let signs: Vec<bool> = (0..n).map(|_| rng.uniform() < 0.4).collect();
+        let bytes = wire::encode_onebit(1, &signs, pos, neg).unwrap();
+        assert_eq!(bytes.len(), wire::onebit_wire_len(n));
+        let q = wire::decode(&bytes).unwrap();
+        for (j, &v) in q.val.iter().enumerate() {
+            assert_eq!(v.to_bits(), if signs[j] { neg } else { pos }.to_bits());
+        }
+
+        // dense f32: arbitrary bit patterns (including negatives/zeros)
+        let vals: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let bytes = wire::encode_dense_f32(2, &vals).unwrap();
+        assert_eq!(bytes.len(), wire::dense_f32_wire_len(n));
+        let q = wire::decode(&bytes).unwrap();
+        assert_eq!(bits_of(&q.val), bits_of(&vals));
+        for cut in 0..bytes.len() {
+            assert!(wire::decode(&bytes[..cut]).is_err(), "seed {seed} cut {cut}");
+        }
+    }
+}
+
+#[test]
+fn wire_v2_random_roundtrip_every_classification() {
+    for seed in 0..10u64 {
+        let mut rng = Pcg32::new(seed, 73);
+        let n = 500 + rng.below(20_000) as usize;
+        let scale = rng.range(1e-5, 3.0);
+
+        // ternary: +scale / -scale / 0.0 force the ternary form whenever
+        // all three patterns actually land in the draw
+        let (idx, val) = random_sparse(&mut rng, n, 0.02, |r| match r.below(3) {
+            0 => scale,
+            1 => -scale,
+            _ => 0.0,
+        });
+        let three = distinct_bits(&val) == 3;
+        let p = sparse_packet(n, idx, val);
+        let bytes = assert_packet_roundtrip(&p, "v2 ternary");
+        if three {
+            assert_eq!(bytes[0], wire::SCHEME_ADACOMP_V2, "seed {seed}");
+        }
+
+        // two distinct non-mirror values (not ternary-representable)
+        let a = rng.range(0.01, 1.0);
+        let b = -rng.range(1.1, 2.0);
+        let (idx, val) =
+            random_sparse(&mut rng, n, 0.02, |r| if r.uniform() < 0.5 { a } else { b });
+        let both = distinct_bits(&val) == 2;
+        let p = sparse_packet(n, idx, val);
+        let bytes = assert_packet_roundtrip(&p, "v2 two-value");
+        if both {
+            assert_eq!(bytes[0], wire::SCHEME_SPARSE_SIGN_V2, "seed {seed}");
+        }
+
+        // arbitrary f32 payload (fallback), with NaN and -0.0 sprinkled in
+        let (idx, val) = random_sparse(&mut rng, n, 0.02, |r| match r.below(8) {
+            0 => f32::NAN,
+            1 => -0.0,
+            _ => r.normal(),
+        });
+        let p = sparse_packet(n, idx, val);
+        let bytes = assert_packet_roundtrip(&p, "v2 f32");
+
+        // truncation on the last (f32) variant exercises the vbyte
+        // truncation path plus every v2 payload guard
+        for cut in 0..bytes.len() {
+            assert!(wire::decode(&bytes[..cut]).is_err(), "seed {seed} cut {cut}");
+        }
+    }
+}
+
+#[test]
+fn wire_v2_dense_random_roundtrips() {
+    for seed in 0..6u64 {
+        let mut rng = Pcg32::new(seed, 74);
+        let n = 1 + rng.below(900) as usize;
+        let scale = rng.range(1e-4, 2.0);
+
+        // dense ternary values (classified to TERNARY_DENSE or ONEBIT by
+        // size; either way the roundtrip must be bit-exact)
+        let val: Vec<f32> = (0..n)
+            .map(|_| match rng.below(3) {
+                0 => scale,
+                1 => -scale,
+                _ => 0.0,
+            })
+            .collect();
+        assert_packet_roundtrip(&Packet::dense(3, val), "dense ternary");
+
+        // dense two-value
+        let a = rng.range(0.01, 1.0);
+        let b = -rng.range(1.1, 2.0);
+        let val: Vec<f32> = (0..n)
+            .map(|i| if (i + seed as usize) % 3 == 0 { a } else { b })
+            .collect();
+        assert_packet_roundtrip(&Packet::dense(3, val), "dense two-value");
+
+        // dense arbitrary -> v1 DENSE_F32
+        let val: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        assert_packet_roundtrip(&Packet::dense(3, val), "dense f32");
+    }
+}
+
+#[test]
+fn wire_bucket_frames_random_roundtrip_and_truncation() {
+    for seed in 0..5u64 {
+        let mut rng = Pcg32::new(seed, 75);
+        let nlayers = 1 + rng.below(6) as usize;
+        let mut slots = Vec::new();
+        for li in 0..nlayers {
+            let n = 10 + rng.below(2000) as usize;
+            let scale = rng.range(1e-4, 2.0);
+            let (idx, val) = random_sparse(&mut rng, n, 0.05, |r| match r.below(3) {
+                0 => scale,
+                1 => -scale,
+                _ => 0.0,
+            });
+            let mut p = sparse_packet(n, idx, val);
+            p.layer = li;
+            slots.push(Some(p));
+        }
+        let mut frame = Vec::new();
+        wire::encode_bucket_frame_packets_into(seed as usize, &slots, &mut frame).unwrap();
+        let (bi, decoded) = wire::decode_bucket_frame(&frame).unwrap();
+        assert_eq!(bi, seed as usize);
+        assert_eq!(decoded.len(), nlayers);
+        let payload: usize = decoded.iter().map(|p| p.wire_bytes).sum();
+        assert_eq!(wire::bucket_wire_len(nlayers, payload), frame.len());
+        for (d, s) in decoded.iter().zip(slots.iter()) {
+            let s = s.as_ref().unwrap();
+            assert_eq!(d.layer, s.layer);
+            assert_eq!(d.idx, s.idx);
+            assert_eq!(bits_of(&d.val), bits_of(&s.val));
+        }
+        // random truncation points error, never panic
+        for _ in 0..200 {
+            let cut = rng.below(frame.len() as u32) as usize;
+            assert!(wire::decode_bucket_frame(&frame[..cut]).is_err(), "cut {cut}");
+        }
+    }
+}
+
+#[test]
+fn vbyte_simd_and_scalar_bit_identical_on_random_streams() {
+    // dispatch path (SIMD where available, scalar under ADACOMP_NO_SIMD)
+    // vs the forced-scalar reference: identical bytes, identical decodes,
+    // across gap distributions covering all four varint widths
+    for seed in 0..12u64 {
+        let mut rng = Pcg32::new(seed, 76);
+        let count = rng.below(3000) as usize;
+        let max_shift = 1 + rng.below(25); // gap magnitude regime per stream
+        let mut idx = Vec::with_capacity(count);
+        let mut cur = 0u64;
+        for _ in 0..count {
+            let gap = 1 + rng.below(1u32 << rng.below(max_shift).min(24)) as u64;
+            cur = (cur + gap).min(u32::MAX as u64);
+            idx.push(cur as u32);
+            if cur == u32::MAX as u64 {
+                break;
+            }
+        }
+        let mut fast = Vec::new();
+        let mut slow = Vec::new();
+        vbyte::encode_into(&idx, &mut fast);
+        vbyte::encode_scalar_into(&idx, &mut slow);
+        assert_eq!(fast, slow, "seed {seed}");
+        assert_eq!(fast.len(), vbyte::encoded_len(&idx), "seed {seed}");
+
+        let mut out_fast = Vec::new();
+        let mut out_slow = Vec::new();
+        let used_f = vbyte::decode_into(idx.len(), &fast, &mut out_fast).unwrap();
+        let used_s = vbyte::decode_scalar_into(idx.len(), &fast, &mut out_slow).unwrap();
+        assert_eq!(out_fast, idx, "seed {seed}");
+        assert_eq!(out_slow, idx, "seed {seed}");
+        assert_eq!(used_f, used_s);
+        assert_eq!(used_f, fast.len());
+
+        // truncations error on both paths
+        if !fast.is_empty() {
+            for _ in 0..50 {
+                let cut = rng.below(fast.len() as u32) as usize;
+                out_fast.clear();
+                out_slow.clear();
+                assert!(vbyte::decode_into(idx.len(), &fast[..cut], &mut out_fast).is_err());
+                assert!(
+                    vbyte::decode_scalar_into(idx.len(), &fast[..cut], &mut out_slow).is_err()
+                );
+            }
+        }
+    }
+}
