@@ -1,0 +1,299 @@
+//! Compute-kernel micro-benchmarks: the packed GEMM vs the retired naive
+//! matmul, and the vectorized AdaComp bin kernels vs their scalar mirrors.
+//!
+//! GEMM rows cover the model shapes the native executor actually runs
+//! (mnist_dnn fc layers, cifar_cnn im2col panels, char_lstm gate/head
+//! matmuls). For each row we time:
+//!
+//! - `packed` — `tensor::gemm::matmul` as dispatched (AVX2+FMA when the CPU
+//!   has it and `ADACOMP_NO_SIMD` is unset),
+//! - `scalar` — the same packed kernel with the scalar microkernel forced
+//!   (the bit-identical portability lane; `f32::mul_add` per lane),
+//! - `naive` — a local copy of the retired pre-packing ikj loops (with
+//!   their data-dependent `if av == 0.0` skip), kept here as baseline only.
+//!
+//! When the SIMD path is live, every model-shape row asserts the packed
+//! kernel strictly beats the retired naive loops, and the SIMD AdaComp
+//! pass-1b/pass-2 kernels strictly beat their scalar mirrors — the
+//! regression gate the CI smoke enforces by running this bench. Results
+//! land in `BENCH_kernels.json`.
+//!
+//!   cargo bench --bench bench_kernels [-- --fast]
+
+use adacomp::compress::select;
+use adacomp::tensor::gemm::{self, GemmScratch};
+use adacomp::util::json::{self, Json};
+use adacomp::util::rng::Pcg32;
+use adacomp::util::timer::{fmt_ns, time_n, Stats};
+
+/// The retired naive ikj matmul (what `tensor::ops` shipped before the
+/// packed kernel) — benchmark baseline only, not a production path.
+fn naive_matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    c.fill(0.0);
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cj, &bj) in crow.iter_mut().zip(brow.iter()) {
+                *cj += av * bj;
+            }
+        }
+    }
+}
+
+fn gemm_row(model: &str, op: &str, m: usize, k: usize, n: usize, iters: usize) -> Json {
+    let mut rng = Pcg32::seeded(1 + (m * 31 + k * 7 + n) as u64);
+    let a = rng.normal_vec(m * k, 1.0);
+    let b = rng.normal_vec(k * n, 1.0);
+    let mut s = GemmScratch::default();
+
+    let mut c_packed = vec![0.0f32; m * n];
+    let packed = Stats::from(&time_n(
+        || {
+            gemm::matmul(&mut s, &a, &b, &mut c_packed, m, k, n, false);
+            std::hint::black_box(c_packed[0]);
+        },
+        2,
+        iters,
+    ));
+    let mut c_scalar = vec![0.0f32; m * n];
+    let scalar = Stats::from(&time_n(
+        || {
+            gemm::gemm_with(true, &mut s, &a, k, 1, &b, n, 1, &mut c_scalar, m, k, n, false);
+            std::hint::black_box(c_scalar[0]);
+        },
+        2,
+        iters,
+    ));
+    let mut c_naive = vec![0.0f32; m * n];
+    let naive = Stats::from(&time_n(
+        || {
+            naive_matmul(&a, &b, &mut c_naive, m, k, n);
+            std::hint::black_box(c_naive[0]);
+        },
+        2,
+        iters,
+    ));
+
+    // correctness on the benched buffers: packed == forced-scalar bitwise,
+    // and both agree with the naive loops numerically
+    assert_eq!(
+        c_packed.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        c_scalar.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "{model}/{op}: dispatch and forced-scalar GEMM must be bit-identical"
+    );
+    for (i, (p, nv)) in c_packed.iter().zip(c_naive.iter()).enumerate() {
+        assert!(
+            (p - nv).abs() <= 1e-3 * nv.abs().max(1.0),
+            "{model}/{op}[{i}]: packed {p} vs naive {nv}"
+        );
+    }
+
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let gflops = |st: &Stats| st.throughput(flops) / 1e9;
+    let speedup = naive.median_ns / packed.median_ns;
+    if gemm::simd_enabled() {
+        assert!(
+            packed.median_ns < naive.median_ns,
+            "{model}/{op} ({m}x{k}x{n}): packed {} must beat retired naive {}",
+            fmt_ns(packed.median_ns),
+            fmt_ns(naive.median_ns)
+        );
+    }
+    println!(
+        "{:<10} {:<6} {:>5}x{:>4}x{:>4} {:>10} {:>8.2} {:>8.2} {:>8.2} {:>7.2}x",
+        model,
+        op,
+        m,
+        k,
+        n,
+        fmt_ns(packed.median_ns),
+        gflops(&packed),
+        gflops(&scalar),
+        gflops(&naive),
+        speedup
+    );
+    json::obj(vec![
+        ("model", json::s(model)),
+        ("op", json::s(op)),
+        ("m", json::num(m as f64)),
+        ("k", json::num(k as f64)),
+        ("n", json::num(n as f64)),
+        ("packed_gflops", json::num(gflops(&packed))),
+        ("scalar_gflops", json::num(gflops(&scalar))),
+        ("naive_gflops", json::num(gflops(&naive))),
+        ("speedup_vs_naive", json::num(speedup)),
+    ])
+}
+
+/// One AdaComp layer's pass-1b + pass-2 over warm residues: SIMD dispatch vs
+/// the forced-scalar mirror, outputs asserted bit-identical.
+fn pack_pass(
+    work: &mut [f32],
+    dw: &[f32],
+    lt: usize,
+    scalar: bool,
+    idx: &mut Vec<u32>,
+    val: &mut Vec<f32>,
+) {
+    idx.clear();
+    val.clear();
+    for (b, (rb, db)) in work.chunks_mut(lt).zip(dw.chunks(lt)).enumerate() {
+        let gm = if scalar {
+            select::bin_absmax_scalar(rb)
+        } else {
+            select::bin_absmax(rb)
+        };
+        if gm <= 0.0 {
+            continue;
+        }
+        let base = (b * lt) as u32;
+        if scalar {
+            select::select_bin_scalar_into(rb, db, gm, gm, 1.0, base, idx, val);
+        } else {
+            select::select_bin_into(rb, db, gm, gm, 1.0, base, idx, val);
+        }
+    }
+}
+
+fn pack_row(n: usize, lt: usize, iters: usize) -> Json {
+    let mut rng = Pcg32::seeded(7);
+    let r0 = rng.normal_vec(n, 1.0);
+    let dw = rng.normal_vec(n, 0.5);
+    let mut work = r0.clone();
+    let (mut idx, mut val) = (Vec::new(), Vec::new());
+
+    let simd = Stats::from(&time_n(
+        || {
+            work.copy_from_slice(&r0);
+            pack_pass(&mut work, &dw, lt, false, &mut idx, &mut val);
+            std::hint::black_box(idx.len());
+        },
+        2,
+        iters,
+    ));
+    let work_simd = work.clone();
+    let (idx_simd, val_simd) = (idx.clone(), val.clone());
+
+    let scalar = Stats::from(&time_n(
+        || {
+            work.copy_from_slice(&r0);
+            pack_pass(&mut work, &dw, lt, true, &mut idx, &mut val);
+            std::hint::black_box(idx.len());
+        },
+        2,
+        iters,
+    ));
+    assert_eq!(idx_simd, idx, "pack select: SIMD and scalar indices must match");
+    assert_eq!(
+        val_simd.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        val.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "pack select: SIMD and scalar values must be bit-identical"
+    );
+    assert_eq!(
+        work_simd.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        work.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "pack select: SIMD and scalar residue updates must be bit-identical"
+    );
+
+    let ns_elem = |st: &Stats| st.median_ns / n as f64;
+    let speedup = scalar.median_ns / simd.median_ns;
+    if select::simd_enabled() {
+        assert!(
+            simd.median_ns < scalar.median_ns,
+            "pack (n={n}, L_T={lt}): SIMD {} must beat scalar {}",
+            fmt_ns(simd.median_ns),
+            fmt_ns(scalar.median_ns)
+        );
+    }
+    println!(
+        "pack n={:<9} L_T={:<5} simd {:>7.3} ns/elem  scalar {:>7.3} ns/elem  {:>5.2}x  sent {}",
+        n,
+        lt,
+        ns_elem(&simd),
+        ns_elem(&scalar),
+        speedup,
+        idx.len()
+    );
+    json::obj(vec![
+        ("n", json::num(n as f64)),
+        ("lt", json::num(lt as f64)),
+        ("sent", json::num(idx.len() as f64)),
+        ("simd_ns_per_elem", json::num(ns_elem(&simd))),
+        ("scalar_ns_per_elem", json::num(ns_elem(&scalar))),
+        ("speedup", json::num(speedup)),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let simd = gemm::simd_enabled();
+
+    println!(
+        "# packed GEMM vs retired naive loops (simd={simd}, select_simd={})",
+        select::simd_enabled()
+    );
+    println!(
+        "{:<10} {:<6} {:>15} {:>10} {:>8} {:>8} {:>8} {:>8}",
+        "model", "op", "m x k x n", "packed", "GF/s", "scal", "naive", "vs naive"
+    );
+    // the GEMM shapes the native models actually run (batch 32 dense / 8 conv)
+    let rows: &[(&str, &str, usize, usize, usize)] = &[
+        ("mnist_dnn", "fc1", 32, 784, 300),
+        ("mnist_dnn", "fc2", 32, 300, 100),
+        ("mnist_dnn", "fc3", 32, 100, 10),
+        ("cifar_cnn", "conv1", 8 * 32 * 32, 75, 32),
+        ("cifar_cnn", "conv2", 8 * 16 * 16, 800, 32),
+        ("cifar_cnn", "conv3", 8 * 8 * 8, 800, 64),
+        ("char_lstm", "x@wx", 32, 32, 256),
+        ("char_lstm", "h@wh", 32, 64, 256),
+        ("char_lstm", "head", 512, 64, 67),
+    ];
+    let mut gemm_rows = Vec::new();
+    for &(model, op, m, k, n) in rows {
+        let work = m * k * n;
+        let iters = if fast {
+            3
+        } else if work > 10_000_000 {
+            10
+        } else {
+            40
+        };
+        gemm_rows.push(gemm_row(model, op, m, k, n, iters));
+    }
+
+    println!("\n# adacomp bin kernels: SIMD dispatch vs scalar mirror");
+    let pack_shapes: &[(usize, usize)] = if fast {
+        &[(25_600, 50)]
+    } else {
+        &[(25_600, 50), (1_048_576, 50), (1_048_576, 500)]
+    };
+    let mut pack_rows = Vec::new();
+    for &(n, lt) in pack_shapes {
+        let iters = if fast {
+            5
+        } else if n > 500_000 {
+            20
+        } else {
+            100
+        };
+        pack_rows.push(pack_row(n, lt, iters));
+    }
+
+    let doc = json::obj(vec![
+        ("simd_enabled", Json::Bool(simd)),
+        ("select_simd_enabled", Json::Bool(select::simd_enabled())),
+        ("gemm", json::arr(gemm_rows)),
+        ("pack", json::arr(pack_rows)),
+    ]);
+    std::fs::write("BENCH_kernels.json", doc.to_string())?;
+    println!(
+        "\nwrote BENCH_kernels.json (packed-vs-naive GEMM per model shape, \
+         SIMD-vs-scalar adacomp bin kernels)"
+    );
+    Ok(())
+}

@@ -69,33 +69,23 @@ impl Compressor for AdaComp {
             *ri += di;
         }
 
-        // Pass 1b: per-bin max |G|. chunks() handles the ragged last bin.
+        // Pass 1b: per-bin max |G| (8-lane AVX2 or the scalar unroll —
+        // bit-identical either way; see compress::select). chunks() handles
+        // the ragged last bin.
         self.gmax.clear();
         self.gmax.reserve(nbins);
         for bin in r.chunks(lt) {
-            // 4-lane unrolled abs-max: breaks the reduction dependency chain
-            // so LLVM vectorizes (plain fold(max) stays scalar).
-            let mut m = [0.0f32; 4];
-            let (quads, tail) = bin.split_at(bin.len() & !3);
-            for q in quads.chunks_exact(4) {
-                m[0] = m[0].max(q[0].abs());
-                m[1] = m[1].max(q[1].abs());
-                m[2] = m[2].max(q[2].abs());
-                m[3] = m[3].max(q[3].abs());
-            }
-            let mut mm = m[0].max(m[1]).max(m[2].max(m[3]));
-            for &x in tail {
-                mm = mm.max(x.abs());
-            }
-            self.gmax.push(mm);
+            self.gmax.push(super::select::bin_absmax(bin));
         }
 
         // Layer quantization scale: mean of per-bin maxima (all >= 0).
         let scale = self.gmax.iter().sum::<f32>() / nbins as f32;
 
-        // Pass 2: soft-threshold select + ternarize + residue update.
-        // Selection is sparse (a few per bin), so the loop is compare-heavy:
-        // keep the common path (no send) branch-minimal. Output goes straight
+        // Pass 2: soft-threshold select + ternarize + residue update
+        // (compress::select — AVX2 compare+movemask prefilter with a scalar
+        // hit drain, or the bit-identical scalar loop). Selection is sparse
+        // (a few per bin), so the vector path turns the compare-heavy
+        // no-send common case into one 8-wide test. Output goes straight
         // into recycled packet buffers (no staging copy, no steady-state
         // allocation).
         let (mut idx, mut val) = self.pool.take();
@@ -107,24 +97,7 @@ impl Compressor for AdaComp {
             }
             let q = if self.per_bin_scale { gm } else { scale };
             let base = (b * lt) as u32;
-            for (j, (ri, &di)) in rb.iter_mut().zip(db.iter()).enumerate() {
-                let g = *ri;
-                // NB: not mul_add — without the fma target-feature that
-                // lowers to a libm call and costs 5x the whole loop.
-                let h = g + c1 * di;
-                if h.abs() >= gm {
-                    let sent = if g > 0.0 {
-                        q
-                    } else if g < 0.0 {
-                        -q
-                    } else {
-                        0.0
-                    };
-                    idx.push(base + j as u32);
-                    val.push(sent);
-                    *ri = g - sent;
-                }
-            }
+            super::select::select_bin_into(rb, db, gm, q, c1, base, &mut idx, &mut val);
         }
 
         // wire cost is analytic (== encode_adacomp length, pinned by

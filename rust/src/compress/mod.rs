@@ -32,6 +32,7 @@ pub mod mixed;
 pub mod onebit;
 pub mod quantize;
 pub mod residue;
+pub mod select;
 pub mod strom;
 pub mod terngrad;
 pub mod vbyte;

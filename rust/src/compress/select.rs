@@ -1,0 +1,279 @@
+//! Vectorized AdaComp bin kernels — the per-bin abs-max scan (pass 1b) and
+//! the soft-threshold select (pass 2) behind `adacomp::pack_layer`.
+//!
+//! Same dispatch discipline as `tensor::gemm` / `compress::vbyte`: a runtime
+//! AVX2 path (honoring `ADACOMP_NO_SIMD=1`) and a scalar mirror that is
+//! **bit-identical** by construction:
+//!
+//! * abs-max — `max` over non-negative finite values is order-insensitive,
+//!   so the 8-lane reduction and the scalar 4-lane unroll produce the same
+//!   bits no matter how the reduction tree is shaped.
+//! * select — both paths compute `h = g + c1 * d` as one IEEE-754 multiply
+//!   then one add per lane (deliberately NOT fused: the scalar reference —
+//!   and the golden vectors pinned by rust/tests/golden.rs — use mul+add,
+//!   and `_mm256_mul_ps`/`_mm256_add_ps` are the exact per-lane mirror).
+//!   The threshold compare uses sign-stripped bits (`|h| >= gmax`) in both.
+//!
+//! The vector path is a *prefilter*: 8 lanes are compared at once and the
+//! (rare) hits are emitted by a scalar drain of the movemask, so the common
+//! no-send path never branches per element. Emission order stays ascending
+//! within the bin — packet indices remain strictly increasing.
+
+use std::sync::OnceLock;
+
+/// True when the AVX2 select/scan path is in use (x86_64 + runtime AVX2,
+/// `ADACOMP_NO_SIMD` unset/empty). Independent of the GEMM gate: selection
+/// needs AVX2 only (no FMA — the kernel is mul+add by contract).
+pub fn simd_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        let forced_off = std::env::var_os("ADACOMP_NO_SIMD")
+            .map(|v| !v.is_empty())
+            .unwrap_or(false);
+        if forced_off {
+            return false;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            std::is_x86_feature_detected!("avx2")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
+/// Per-bin max |x| (pass 1b). Returns 0.0 for an empty bin.
+#[inline]
+pub fn bin_absmax(bin: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() && bin.len() >= 8 {
+        // SAFETY: AVX2 detected at runtime; reads stay within `bin`.
+        return unsafe { bin_absmax_avx2(bin) };
+    }
+    bin_absmax_scalar(bin)
+}
+
+/// Scalar abs-max: 4-lane unrolled to break the reduction dependency chain
+/// (LLVM autovectorizes the quads). Bit-identical to the AVX2 reduction —
+/// max over the non-negative |x| values is order-insensitive.
+pub fn bin_absmax_scalar(bin: &[f32]) -> f32 {
+    let mut m = [0.0f32; 4];
+    let (quads, tail) = bin.split_at(bin.len() & !3);
+    for q in quads.chunks_exact(4) {
+        m[0] = m[0].max(q[0].abs());
+        m[1] = m[1].max(q[1].abs());
+        m[2] = m[2].max(q[2].abs());
+        m[3] = m[3].max(q[3].abs());
+    }
+    let mut mm = m[0].max(m[1]).max(m[2].max(m[3]));
+    for &x in tail {
+        mm = mm.max(x.abs());
+    }
+    mm
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn bin_absmax_avx2(bin: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let abs_mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+    let mut acc = _mm256_setzero_ps();
+    let n8 = bin.len() & !7;
+    let p = bin.as_ptr();
+    for i in (0..n8).step_by(8) {
+        let v = _mm256_and_ps(_mm256_loadu_ps(p.add(i)), abs_mask);
+        acc = _mm256_max_ps(acc, v);
+    }
+    // horizontal max of the 8 lanes
+    let hi = _mm256_extractf128_ps(acc, 1);
+    let m4 = _mm_max_ps(_mm256_castps256_ps128(acc), hi);
+    let m2 = _mm_max_ps(m4, _mm_movehl_ps(m4, m4));
+    let m1 = _mm_max_ss(m2, _mm_shuffle_ps(m2, m2, 1));
+    let mut mm = _mm_cvtss_f32(m1);
+    for &x in &bin[n8..] {
+        mm = mm.max(x.abs());
+    }
+    mm
+}
+
+/// Pass 2 for one bin: soft-threshold select, ternarize, residue update.
+///
+/// For each element j of the bin: `h = g + c1 * d` (g = folded residue
+/// `rb[j]`, d = raw gradient `db[j]`); where `|h| >= gm`, emit
+/// `(base + j, sign(g) * q)` and set `rb[j] = g - sent`. Emission order is
+/// ascending j. Callers guarantee `gm > 0` (all-zero bins are skipped).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn select_bin_into(
+    rb: &mut [f32],
+    db: &[f32],
+    gm: f32,
+    q: f32,
+    c1: f32,
+    base: u32,
+    idx: &mut Vec<u32>,
+    val: &mut Vec<f32>,
+) {
+    debug_assert_eq!(rb.len(), db.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() && rb.len() >= 8 {
+        // SAFETY: AVX2 detected at runtime; loads/stores stay within rb/db.
+        unsafe { select_bin_avx2(rb, db, gm, q, c1, base, idx, val) };
+        return;
+    }
+    select_bin_scalar_into(rb, db, gm, q, c1, base, idx, val);
+}
+
+/// Scalar reference for [`select_bin_into`] — the exact semantics of the
+/// original pack loop (and of `python/compile/kernels/ref.py`); the AVX2
+/// path must match it bit-for-bit (rust/tests/kernel_equivalence.rs).
+#[allow(clippy::too_many_arguments)]
+pub fn select_bin_scalar_into(
+    rb: &mut [f32],
+    db: &[f32],
+    gm: f32,
+    q: f32,
+    c1: f32,
+    base: u32,
+    idx: &mut Vec<u32>,
+    val: &mut Vec<f32>,
+) {
+    for (j, (ri, &di)) in rb.iter_mut().zip(db.iter()).enumerate() {
+        let g = *ri;
+        // NB: not mul_add — the contract is one multiply then one add (and
+        // without the fma target-feature mul_add is a libm call anyway).
+        let h = g + c1 * di;
+        if h.abs() >= gm {
+            let sent = if g > 0.0 {
+                q
+            } else if g < 0.0 {
+                -q
+            } else {
+                0.0
+            };
+            idx.push(base + j as u32);
+            val.push(sent);
+            *ri = g - sent;
+        }
+    }
+}
+
+/// AVX2 prefilter: compare 8 thresholds at once, drain hits scalar-side.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn select_bin_avx2(
+    rb: &mut [f32],
+    db: &[f32],
+    gm: f32,
+    q: f32,
+    c1: f32,
+    base: u32,
+    idx: &mut Vec<u32>,
+    val: &mut Vec<f32>,
+) {
+    use std::arch::x86_64::*;
+    let abs_mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+    let gmv = _mm256_set1_ps(gm);
+    let c1v = _mm256_set1_ps(c1);
+    let n = rb.len();
+    let n8 = n & !7;
+    // one mutable pointer serves both the vector loads and the hit
+    // write-backs (a fresh `rb[j]` access would invalidate it)
+    let rp = rb.as_mut_ptr();
+    let dp = db.as_ptr();
+    for i in (0..n8).step_by(8) {
+        let g = _mm256_loadu_ps(rp.add(i));
+        let d = _mm256_loadu_ps(dp.add(i));
+        // h = g + c1 * d — mul then add, the scalar reference's exact ops
+        let h = _mm256_add_ps(g, _mm256_mul_ps(c1v, d));
+        let habs = _mm256_and_ps(h, abs_mask);
+        let hit = _mm256_cmp_ps::<_CMP_GE_OQ>(habs, gmv);
+        let mut mask = _mm256_movemask_ps(hit) as u32;
+        while mask != 0 {
+            let lane = mask.trailing_zeros() as usize;
+            mask &= mask - 1;
+            let j = i + lane;
+            let gj = *rp.add(j);
+            let sent = if gj > 0.0 {
+                q
+            } else if gj < 0.0 {
+                -q
+            } else {
+                0.0
+            };
+            idx.push(base + j as u32);
+            val.push(sent);
+            *rp.add(j) = gj - sent;
+        }
+    }
+    select_bin_scalar_into(
+        &mut rb[n8..],
+        &db[n8..],
+        gm,
+        q,
+        c1,
+        base + n8 as u32,
+        idx,
+        val,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn absmax_scalar_matches_plain_fold() {
+        let mut rng = Pcg32::seeded(1);
+        for n in [0usize, 1, 3, 7, 8, 13, 64, 100] {
+            let v = rng.normal_vec(n, 1.0);
+            let want = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            assert_eq!(bin_absmax_scalar(&v).to_bits(), want.to_bits(), "n={n}");
+            assert_eq!(bin_absmax(&v).to_bits(), want.to_bits(), "n={n} dispatch");
+        }
+    }
+
+    #[test]
+    fn select_scalar_semantics() {
+        // residue [2, -2, 0.1, 0], dw 0, gm 1, q 0.5: first two selected
+        let mut rb = vec![2.0f32, -2.0, 0.1, 0.0];
+        let db = vec![0.0f32; 4];
+        let (mut idx, mut val) = (Vec::new(), Vec::new());
+        select_bin_scalar_into(&mut rb, &db, 1.0, 0.5, 1.0, 100, &mut idx, &mut val);
+        assert_eq!(idx, vec![100, 101]);
+        assert_eq!(val, vec![0.5, -0.5]);
+        assert_eq!(rb, vec![1.5, -1.5, 0.1, 0.0]);
+    }
+
+    #[test]
+    fn dispatch_matches_scalar_bitwise() {
+        // whatever path dispatch picks must equal the scalar reference
+        let mut rng = Pcg32::seeded(2);
+        for n in [1usize, 7, 8, 9, 31, 64, 257] {
+            let r0 = rng.normal_vec(n, 1.0);
+            let db = rng.normal_vec(n, 1.0);
+            let gm = bin_absmax(&r0.iter().zip(&db).map(|(a, b)| a + b).collect::<Vec<_>>());
+            let mut ra = r0.clone();
+            let (mut ia, mut va) = (Vec::new(), Vec::new());
+            select_bin_into(&mut ra, &db, gm, 0.25, 1.0, 7, &mut ia, &mut va);
+            let mut rs = r0.clone();
+            let (mut is_, mut vs) = (Vec::new(), Vec::new());
+            select_bin_scalar_into(&mut rs, &db, gm, 0.25, 1.0, 7, &mut is_, &mut vs);
+            assert_eq!(ia, is_, "n={n}");
+            assert_eq!(
+                va.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                vs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "n={n}"
+            );
+            assert_eq!(
+                ra.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                rs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "n={n}"
+            );
+        }
+    }
+}

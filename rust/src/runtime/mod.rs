@@ -123,6 +123,25 @@ pub trait Executor {
         let _ = on_ready;
         self.step(params, batch)
     }
+
+    /// [`step_streamed`](Self::step_streamed) writing the flat gradient into
+    /// a caller-owned buffer instead of returning a fresh `Vec` — the
+    /// engine's steady-state entry point: a learner passes its reusable
+    /// grads buffer every step, so backends that implement this natively
+    /// (`NativeNet`) allocate nothing per step. The default delegates to
+    /// `step_streamed` and moves the result, so every backend supports the
+    /// API (with the allocation the legacy path always paid).
+    fn step_streamed_into(
+        &mut self,
+        params: &[f32],
+        batch: &Batch,
+        grads: &mut Vec<f32>,
+        on_ready: &mut GradReady<'_>,
+    ) -> anyhow::Result<f32> {
+        let out = self.step_streamed(params, batch, on_ready)?;
+        *grads = out.grads;
+        Ok(out.loss)
+    }
 }
 
 /// Provisions executors for the engine — one per learner when the backend

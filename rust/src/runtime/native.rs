@@ -93,6 +93,16 @@ impl Executor for NativeMlp {
         self.net.step_streamed(params, batch, on_ready)
     }
 
+    fn step_streamed_into(
+        &mut self,
+        params: &[f32],
+        batch: &Batch,
+        grads: &mut Vec<f32>,
+        on_ready: &mut GradReady<'_>,
+    ) -> Result<f32> {
+        self.net.step_streamed_into(params, batch, grads, on_ready)
+    }
+
     fn eval(&mut self, params: &[f32], batch: &Batch) -> Result<EvalOut> {
         self.net.eval(params, batch)
     }

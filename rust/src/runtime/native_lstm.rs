@@ -170,6 +170,19 @@ impl Executor for NativeCharLstm {
         self.net.step_streamed(params, batch, on_ready)
     }
 
+    fn step_streamed_into(
+        &mut self,
+        params: &[f32],
+        batch: &Batch,
+        grads: &mut Vec<f32>,
+        on_ready: &mut GradReady<'_>,
+    ) -> Result<f32> {
+        self.check_batch(batch)?;
+        let seq_len = batch.x_i32.len() / batch.batch_size;
+        self.net.set_in_elems(seq_len);
+        self.net.step_streamed_into(params, batch, grads, on_ready)
+    }
+
     fn eval(&mut self, params: &[f32], batch: &Batch) -> Result<EvalOut> {
         self.check_batch(batch)?;
         let seq_len = batch.x_i32.len() / batch.batch_size;

@@ -36,7 +36,7 @@ use anyhow::{bail, Result};
 
 use super::{Batch, EvalOut, Executor, ExecutorFactory, GradReady, StepOut};
 use crate::models::{LayerKind, Layout};
-use crate::tensor::{conv, embed, lstm, ops};
+use crate::tensor::{conv, embed, gemm, lstm, ops, KernelScratch};
 
 /// An activation flowing between layers: dense f32 for most of the graph,
 /// i32 token ids feeding an [`Embedding`] front layer.
@@ -102,8 +102,18 @@ pub trait Layer: Send + Sync {
     }
 
     /// Compute `y` from `x`, stashing whatever `backward` needs in `tape`.
-    /// `p` is this layer's contiguous parameter slice (spec order).
-    fn forward(&self, p: &[f32], x: Act<'_>, bsz: usize, tape: &mut Tape, y: &mut Vec<f32>);
+    /// `p` is this layer's contiguous parameter slice (spec order). `ks` is
+    /// the net's shared kernel scratch arena (GEMM packing pool + reusable
+    /// gather/cotangent buffers); stateless layers ignore it.
+    fn forward(
+        &self,
+        p: &[f32],
+        x: Act<'_>,
+        bsz: usize,
+        tape: &mut Tape,
+        ks: &mut KernelScratch,
+        y: &mut Vec<f32>,
+    );
 
     /// Accumulate parameter gradients into `g` (zeroed by the net once per
     /// step) and, when `dx` is given, fill the input gradient. `x`/`y` are
@@ -117,6 +127,7 @@ pub trait Layer: Send + Sync {
         tape: &mut Tape,
         dy: &[f32],
         bsz: usize,
+        ks: &mut KernelScratch,
         g: &mut [f32],
         dx: Option<&mut Vec<f32>>,
     );
@@ -160,14 +171,22 @@ impl Layer for Fc {
         in_len / self.in_dim * self.out_dim
     }
 
-    fn forward(&self, p: &[f32], x: Act<'_>, _bsz: usize, _tape: &mut Tape, y: &mut Vec<f32>) {
+    fn forward(
+        &self,
+        p: &[f32],
+        x: Act<'_>,
+        _bsz: usize,
+        _tape: &mut Tape,
+        ks: &mut KernelScratch,
+        y: &mut Vec<f32>,
+    ) {
         let x = x.f32s();
         let (a, b) = (self.in_dim, self.out_dim);
         let rows = x.len() / a;
         let (w, bias) = p.split_at(a * b);
         y.clear();
         y.resize(rows * b, 0.0);
-        ops::matmul(x, w, y, rows, a, b, false);
+        gemm::matmul(&mut ks.gemm, x, w, y, rows, a, b, false);
         for r in 0..rows {
             for j in 0..b {
                 y[r * b + j] += bias[j];
@@ -183,6 +202,7 @@ impl Layer for Fc {
         _tape: &mut Tape,
         dy: &[f32],
         _bsz: usize,
+        ks: &mut KernelScratch,
         g: &mut [f32],
         dx: Option<&mut Vec<f32>>,
     ) {
@@ -192,7 +212,7 @@ impl Layer for Fc {
         let (w, _) = p.split_at(a * b);
         let (gw, gb) = g.split_at_mut(a * b);
         // dW = x^T @ dy   (x: [rows, a], dy: [rows, b])
-        ops::matmul_at_b(x, dy, gw, a, rows, b);
+        gemm::matmul_at_b(&mut ks.gemm, x, dy, gw, a, rows, b, false);
         for r in 0..rows {
             for j in 0..b {
                 gb[j] += dy[r * b + j];
@@ -201,7 +221,7 @@ impl Layer for Fc {
         if let Some(dx) = dx {
             dx.clear();
             dx.resize(rows * a, 0.0);
-            ops::matmul_a_bt(dy, w, dx, rows, b, a);
+            gemm::matmul_a_bt(&mut ks.gemm, dy, w, dx, rows, b, a);
         }
     }
 }
@@ -218,7 +238,15 @@ impl Layer for Relu {
         in_len
     }
 
-    fn forward(&self, _p: &[f32], x: Act<'_>, _bsz: usize, _tape: &mut Tape, y: &mut Vec<f32>) {
+    fn forward(
+        &self,
+        _p: &[f32],
+        x: Act<'_>,
+        _bsz: usize,
+        _tape: &mut Tape,
+        _ks: &mut KernelScratch,
+        y: &mut Vec<f32>,
+    ) {
         let x = x.f32s();
         y.clear();
         y.extend_from_slice(x);
@@ -233,6 +261,7 @@ impl Layer for Relu {
         _tape: &mut Tape,
         dy: &[f32],
         _bsz: usize,
+        _ks: &mut KernelScratch,
         _g: &mut [f32],
         dx: Option<&mut Vec<f32>>,
     ) {
@@ -273,14 +302,22 @@ impl Layer for Conv5x5Same {
         in_len / self.cin * self.cout
     }
 
-    fn forward(&self, p: &[f32], x: Act<'_>, bsz: usize, tape: &mut Tape, y: &mut Vec<f32>) {
+    fn forward(
+        &self,
+        p: &[f32],
+        x: Act<'_>,
+        bsz: usize,
+        tape: &mut Tape,
+        ks: &mut KernelScratch,
+        y: &mut Vec<f32>,
+    ) {
         let x = x.f32s();
         assert_eq!(x.len(), bsz * self.h * self.w * self.cin);
         let (wgt, bias) = p.split_at(CONV_K * CONV_K * self.cin * self.cout);
         tape.ensure_f(1);
         conv::conv2d_same(
             x, wgt, bias, bsz, self.h, self.w, self.cin, CONV_K, CONV_K, self.cout,
-            &mut tape.f[0], y,
+            &mut tape.f[0], &mut ks.gemm, y,
         );
     }
 
@@ -292,6 +329,7 @@ impl Layer for Conv5x5Same {
         tape: &mut Tape,
         dy: &[f32],
         bsz: usize,
+        ks: &mut KernelScratch,
         g: &mut [f32],
         dx: Option<&mut Vec<f32>>,
     ) {
@@ -306,7 +344,7 @@ impl Layer for Conv5x5Same {
         });
         conv::conv2d_same_bwd(
             x, wgt, dy, bsz, self.h, self.w, self.cin, CONV_K, CONV_K, self.cout,
-            &mut tape.f[0], gw, gb, dx_slice,
+            &mut tape.f[0], &mut ks.gemm, &mut ks.dcols, gw, gb, dx_slice,
         );
     }
 }
@@ -328,7 +366,15 @@ impl Layer for MaxPool2 {
         in_len / 4
     }
 
-    fn forward(&self, _p: &[f32], x: Act<'_>, bsz: usize, tape: &mut Tape, y: &mut Vec<f32>) {
+    fn forward(
+        &self,
+        _p: &[f32],
+        x: Act<'_>,
+        bsz: usize,
+        tape: &mut Tape,
+        _ks: &mut KernelScratch,
+        y: &mut Vec<f32>,
+    ) {
         let x = x.f32s();
         assert_eq!(x.len(), bsz * self.h * self.w * self.c);
         tape.ensure_u(1);
@@ -343,6 +389,7 @@ impl Layer for MaxPool2 {
         tape: &mut Tape,
         dy: &[f32],
         bsz: usize,
+        _ks: &mut KernelScratch,
         _g: &mut [f32],
         dx: Option<&mut Vec<f32>>,
     ) {
@@ -375,7 +422,15 @@ impl Layer for Embedding {
         true
     }
 
-    fn forward(&self, p: &[f32], x: Act<'_>, _bsz: usize, _tape: &mut Tape, y: &mut Vec<f32>) {
+    fn forward(
+        &self,
+        p: &[f32],
+        x: Act<'_>,
+        _bsz: usize,
+        _tape: &mut Tape,
+        _ks: &mut KernelScratch,
+        y: &mut Vec<f32>,
+    ) {
         embed::gather(p, x.ids(), self.dim, y);
     }
 
@@ -387,6 +442,7 @@ impl Layer for Embedding {
         _tape: &mut Tape,
         dy: &[f32],
         _bsz: usize,
+        _ks: &mut KernelScratch,
         g: &mut [f32],
         dx: Option<&mut Vec<f32>>,
     ) {
@@ -427,7 +483,15 @@ impl Layer for Lstm {
         in_len / self.in_dim * self.hidden
     }
 
-    fn forward(&self, p: &[f32], x: Act<'_>, bsz: usize, tape: &mut Tape, y: &mut Vec<f32>) {
+    fn forward(
+        &self,
+        p: &[f32],
+        x: Act<'_>,
+        bsz: usize,
+        tape: &mut Tape,
+        ks: &mut KernelScratch,
+        y: &mut Vec<f32>,
+    ) {
         let x = x.f32s();
         let (i, h) = (self.in_dim, self.hidden);
         assert_eq!(x.len() % (bsz * i), 0, "lstm '{}' input length", self.name);
@@ -438,7 +502,7 @@ impl Layer for Lstm {
         let (gates, rest) = tape.f.split_at_mut(1);
         let (c, tanh_c) = rest.split_at_mut(1);
         lstm::forward(
-            x, wx, wh, bias, bsz, t_len, i, h, &mut gates[0], &mut c[0], &mut tanh_c[0], y,
+            x, wx, wh, bias, bsz, t_len, i, h, ks, &mut gates[0], &mut c[0], &mut tanh_c[0], y,
         );
     }
 
@@ -450,6 +514,7 @@ impl Layer for Lstm {
         tape: &mut Tape,
         dy: &[f32],
         bsz: usize,
+        ks: &mut KernelScratch,
         g: &mut [f32],
         dx: Option<&mut Vec<f32>>,
     ) {
@@ -466,8 +531,8 @@ impl Layer for Lstm {
             d.as_mut_slice()
         });
         lstm::backward(
-            x, wx, wh, &tape.f[0], &tape.f[1], &tape.f[2], y, dy, bsz, t_len, i, h, gwx, gwh,
-            gb, dx_slice,
+            x, wx, wh, &tape.f[0], &tape.f[1], &tape.f[2], y, dy, bsz, t_len, i, h, ks, gwx,
+            gwh, gb, dx_slice,
         );
     }
 }
@@ -506,6 +571,14 @@ pub struct NativeNet {
     // Per-instance forward storage (reused across steps).
     acts: Vec<Vec<f32>>,
     tapes: Vec<Tape>,
+    /// Kernel scratch arena shared by every layer (GEMM packing pool,
+    /// conv/LSTM gather and cotangent buffers). Clone-resets to empty.
+    scratch: KernelScratch,
+    // Persistent backward buffers: the dy/dx ping-pong pair (swapped per
+    // layer, never reallocated in steady state). `bwd_a` doubles as the
+    // dlogits / eval-scratch head buffer.
+    bwd_a: Vec<f32>,
+    bwd_b: Vec<f32>,
 }
 
 impl NativeNet {
@@ -557,6 +630,9 @@ impl NativeNet {
             eval_batch,
             acts: vec![Vec::new(); n],
             tapes: vec![Tape::default(); n],
+            scratch: KernelScratch::default(),
+            bwd_a: Vec::new(),
+            bwd_b: Vec::new(),
         }
     }
 
@@ -612,7 +688,14 @@ impl NativeNet {
                 Act::I32(v) => v.len(),
             };
             let (off, len) = self.spans[li];
-            self.layers[li].forward(&params[off..off + len], x, bsz, &mut self.tapes[li], y);
+            self.layers[li].forward(
+                &params[off..off + len],
+                x,
+                bsz,
+                &mut self.tapes[li],
+                &mut self.scratch,
+                y,
+            );
             debug_assert_eq!(
                 y.len(),
                 self.layers[li].out_len(x_len),
@@ -646,25 +729,55 @@ impl Executor for NativeNet {
         true
     }
 
-    /// The streamed step path: the backward walk fires `on_ready` the
-    /// moment a graph layer's parameter-gradient spans are final — reverse
-    /// graph order, so the head's layout layers arrive first and the input
-    /// layers last. `step` is this with a no-op callback, so the two paths
-    /// are bit-identical by construction.
     fn step_streamed(
         &mut self,
         params: &[f32],
         batch: &Batch,
         on_ready: &mut GradReady<'_>,
     ) -> Result<StepOut> {
+        let mut grads = Vec::new();
+        let loss = self.step_streamed_into(params, batch, &mut grads, on_ready)?;
+        Ok(StepOut { loss, grads })
+    }
+
+    /// The streamed step core: the backward walk fires `on_ready` the
+    /// moment a graph layer's parameter-gradient spans are final — reverse
+    /// graph order, so the head's layout layers arrive first and the input
+    /// layers last. `step`/`step_streamed` are this with a no-op callback /
+    /// a fresh grads vec, so all paths are bit-identical by construction.
+    ///
+    /// Gradients land in the caller's `grads` buffer; together with the
+    /// persistent dy/dx ping-pong pair and the kernel scratch arena this
+    /// makes a steady-state step allocation-free (rust/tests/alloc_free.rs).
+    fn step_streamed_into(
+        &mut self,
+        params: &[f32],
+        batch: &Batch,
+        grads: &mut Vec<f32>,
+        on_ready: &mut GradReady<'_>,
+    ) -> Result<f32> {
         let bsz = batch.batch_size;
         self.forward_all(params, batch)?;
-        let (logits, classes) = self.logits_and_classes(batch)?;
-        let mut dlogits = vec![0.0f32; logits.len()];
-        let loss = ops::softmax_xent(logits, &batch.y, classes, &mut dlogits);
+        // Take the ping-pong pair out of self so layer calls can borrow
+        // acts/tapes/scratch mutably alongside them (restored below).
+        let mut dy = std::mem::take(&mut self.bwd_a);
+        let mut dx = std::mem::take(&mut self.bwd_b);
+        let loss = {
+            let (logits, classes) = match self.logits_and_classes(batch) {
+                Ok(v) => v,
+                Err(e) => {
+                    self.bwd_a = dy;
+                    self.bwd_b = dx;
+                    return Err(e);
+                }
+            };
+            dy.clear();
+            dy.resize(logits.len(), 0.0);
+            ops::softmax_xent(logits, &batch.y, classes, &mut dy)
+        };
 
-        let mut grads = vec![0.0f32; self.layout.total];
-        let mut dy = dlogits;
+        grads.clear();
+        grads.resize(self.layout.total, 0.0);
         for li in (0..self.layers.len()).rev() {
             let (off, len) = self.spans[li];
             let x = if li == 0 {
@@ -672,7 +785,7 @@ impl Executor for NativeNet {
             } else {
                 Act::F32(&self.acts[li - 1])
             };
-            let mut dx = if li > 0 { Some(Vec::new()) } else { None };
+            let want_dx = li > 0;
             self.layers[li].backward(
                 &params[off..off + len],
                 x,
@@ -680,30 +793,45 @@ impl Executor for NativeNet {
                 &mut self.tapes[li],
                 &dy,
                 bsz,
+                &mut self.scratch,
                 &mut grads[off..off + len],
-                dx.as_mut(),
+                if want_dx { Some(&mut dx) } else { None },
             );
             let (ti, cnt) = self.lranges[li];
             if cnt > 0 {
-                on_ready(ti..ti + cnt, &grads);
+                on_ready(ti..ti + cnt, grads);
             }
-            if let Some(d) = dx {
-                dy = d;
+            if want_dx {
+                std::mem::swap(&mut dy, &mut dx);
             }
         }
-        Ok(StepOut { loss, grads })
+        self.bwd_a = dy;
+        self.bwd_b = dx;
+        Ok(loss)
     }
 
     fn eval(&mut self, params: &[f32], batch: &Batch) -> Result<EvalOut> {
         self.forward_all(params, batch)?;
-        let (logits, classes) = self.logits_and_classes(batch)?;
-        let mut scratch = vec![0.0f32; logits.len()];
-        let loss = ops::softmax_xent(logits, &batch.y, classes, &mut scratch);
-        let ncorrect = ops::count_correct(logits, &batch.y, classes) as f32;
-        Ok(EvalOut {
-            loss_sum_weighted: loss,
-            ncorrect,
-        })
+        let mut scratch = std::mem::take(&mut self.bwd_a);
+        let out = {
+            let (logits, classes) = match self.logits_and_classes(batch) {
+                Ok(v) => v,
+                Err(e) => {
+                    self.bwd_a = scratch;
+                    return Err(e);
+                }
+            };
+            scratch.clear();
+            scratch.resize(logits.len(), 0.0);
+            let loss = ops::softmax_xent(logits, &batch.y, classes, &mut scratch);
+            let ncorrect = ops::count_correct(logits, &batch.y, classes) as f32;
+            EvalOut {
+                loss_sum_weighted: loss,
+                ncorrect,
+            }
+        };
+        self.bwd_a = scratch;
+        Ok(out)
     }
 
     fn step_batch_sizes(&self) -> Vec<usize> {

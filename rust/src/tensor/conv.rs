@@ -85,7 +85,7 @@ pub fn col2im_same(
 }
 
 /// SAME stride-1 conv forward. w: [kh, kw, cin, cout] (HWIO, row-major).
-/// Returns y [b,h,w,cout]; `cols` is scratch reused across calls.
+/// Returns y [b,h,w,cout]; `cols` and `gs` are scratch reused across calls.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_same(
     x: &[f32],
@@ -99,6 +99,7 @@ pub fn conv2d_same(
     kw: usize,
     cout: usize,
     cols: &mut Vec<f32>,
+    gs: &mut super::gemm::GemmScratch,
     y: &mut Vec<f32>,
 ) {
     im2col_same(x, b, h, w_, cin, kh, kw, cols);
@@ -106,7 +107,7 @@ pub fn conv2d_same(
     let k = kh * kw * cin;
     y.clear();
     y.resize(rows * cout, 0.0);
-    super::ops::matmul(cols, wgt, y, rows, k, cout, false);
+    super::gemm::matmul(gs, cols, wgt, y, rows, k, cout, false);
     for r in 0..rows {
         for c in 0..cout {
             y[r * cout + c] += bias[c];
@@ -116,6 +117,8 @@ pub fn conv2d_same(
 
 /// Backward of SAME stride-1 conv.
 /// dy: [b,h,w,cout]; fills dw [kh*kw*cin*cout], db [cout], dx [b,h,w,cin].
+/// `cols`, `gs` and `dcols` are caller-pooled scratch (no per-call
+/// allocation in steady state).
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_same_bwd(
     x: &[f32],
@@ -129,6 +132,8 @@ pub fn conv2d_same_bwd(
     kw: usize,
     cout: usize,
     cols: &mut Vec<f32>,
+    gs: &mut super::gemm::GemmScratch,
+    dcols: &mut Vec<f32>,
     dw: &mut [f32],
     db: &mut [f32],
     dx: Option<&mut [f32]>,
@@ -137,7 +142,7 @@ pub fn conv2d_same_bwd(
     let k = kh * kw * cin;
     im2col_same(x, b, h, w_, cin, kh, kw, cols);
     // dW = cols^T @ dy  (cols [rows,k], dy [rows,cout])
-    super::ops::matmul_at_b(cols, dy, dw, k, rows, cout);
+    super::gemm::matmul_at_b(gs, cols, dy, dw, k, rows, cout, false);
     db.iter_mut().for_each(|v| *v = 0.0);
     for r in 0..rows {
         for c in 0..cout {
@@ -146,9 +151,10 @@ pub fn conv2d_same_bwd(
     }
     if let Some(dx) = dx {
         // dcols = dy @ W^T  (W [k,cout] row-major -> W^T is [cout,k])
-        let mut dcols = vec![0.0f32; rows * k];
-        super::ops::matmul_a_bt(dy, wgt, &mut dcols, rows, cout, k);
-        col2im_same(&dcols, b, h, w_, cin, kh, kw, dx);
+        dcols.clear();
+        dcols.resize(rows * k, 0.0);
+        super::gemm::matmul_a_bt(gs, dy, wgt, dcols, rows, cout, k);
+        col2im_same(dcols, b, h, w_, cin, kh, kw, dx);
     }
 }
 
@@ -256,8 +262,9 @@ mod tests {
         let wgt = rng.normal_vec(kh * kw * cin * cout, 0.5);
         let bias = rng.normal_vec(cout, 0.1);
         let mut cols = Vec::new();
+        let mut gs = super::super::gemm::GemmScratch::default();
         let mut y = Vec::new();
-        conv2d_same(&x, &wgt, &bias, b, h, w_, cin, kh, kw, cout, &mut cols, &mut y);
+        conv2d_same(&x, &wgt, &bias, b, h, w_, cin, kh, kw, cout, &mut cols, &mut gs, &mut y);
         let want = conv_naive(&x, &wgt, &bias, b, h, w_, cin, kh, kw, cout);
         for (a, b) in y.iter().zip(want.iter()) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
@@ -275,16 +282,20 @@ mod tests {
         let m = rng.normal_vec(b * h * w_ * cout, 1.0);
         let loss = |x: &[f32], wgt: &[f32]| -> f32 {
             let mut cols = Vec::new();
+            let mut gs = super::super::gemm::GemmScratch::default();
             let mut y = Vec::new();
-            conv2d_same(x, wgt, &bias, b, h, w_, cin, kh, kw, cout, &mut cols, &mut y);
+            conv2d_same(x, wgt, &bias, b, h, w_, cin, kh, kw, cout, &mut cols, &mut gs, &mut y);
             y.iter().zip(m.iter()).map(|(a, b)| a * b).sum()
         };
         let mut cols = Vec::new();
+        let mut gs = super::super::gemm::GemmScratch::default();
+        let mut dcols = Vec::new();
         let mut dw = vec![0.0; wgt.len()];
         let mut db = vec![0.0; cout];
         let mut dx = vec![0.0; x.len()];
         conv2d_same_bwd(
-            &x, &wgt, &m, b, h, w_, cin, kh, kw, cout, &mut cols, &mut dw, &mut db, Some(&mut dx),
+            &x, &wgt, &m, b, h, w_, cin, kh, kw, cout, &mut cols, &mut gs, &mut dcols, &mut dw,
+            &mut db, Some(&mut dx),
         );
         let eps = 1e-3;
         for idx in [0usize, 7, wgt.len() - 1] {

@@ -1,0 +1,537 @@
+//! Packed, cache-blocked f32 GEMM — the compute kernel behind every matmul
+//! in the native executor (DESIGN.md §Compute kernels).
+//!
+//! BLIS-style 5-loop blocking: the operand matrices are copied into packed
+//! panels (`GemmScratch`, pooled across calls — zero steady-state
+//! allocation) and the innermost tile is a register-resident MR x NR
+//! microkernel. Two microkernel implementations sit behind one runtime
+//! dispatch, per the vbyte.rs precedent:
+//!
+//! * AVX2+FMA (x86_64, detected at runtime via `is_x86_feature_detected!`,
+//!   forced off by `ADACOMP_NO_SIMD=1`): 12 ymm accumulators (6 rows x two
+//!   8-lane halves), one `vfmadd` per accumulator per k.
+//! * scalar fallback: the *same* packing, tiling and accumulation order,
+//!   with each lane's fused multiply-add done by `f32::mul_add` (correctly
+//!   rounded, IEEE-754 `fusedMultiplyAdd` — exactly what the hardware FMA
+//!   computes per lane).
+//!
+//! Because both paths execute identical FP operations in identical order on
+//! identically packed data, their outputs are **bit-identical** — the
+//! determinism contract (bit-equal across thread counts, exchange modes and
+//! ISA paths) holds by construction, pinned by
+//! rust/tests/kernel_equivalence.rs. The trade-off is also the vbyte one:
+//! without the compile-time `fma` target feature `f32::mul_add` lowers to a
+//! libm call, so the scalar lane is the correctness/portability path, not a
+//! fast path.
+//!
+//! All three matmul layouts (`A@B`, `Aᵀ@B`, `A@Bᵀ`) route through one
+//! strided driver — transposition is just a (row-stride, col-stride) choice
+//! at packing time, so no variant pays a materialized transpose. Inner
+//! loops are branch-free in the data (no `if av == 0.0` skips — the old
+//! naive kernels' input-dependent timing is gone with them).
+
+use std::sync::OnceLock;
+
+/// Microkernel tile height (rows of C per tile).
+pub const MR: usize = 6;
+/// Microkernel tile width (cols of C per tile) — two 8-lane ymm halves.
+pub const NR: usize = 16;
+/// k-blocking: one packed A panel strip (MC x KC) stays L2-resident.
+const KC: usize = 256;
+/// m-blocking: rows of A packed per strip.
+const MC: usize = 96;
+/// n-blocking: cap on the packed B panel width.
+const NC: usize = 1024;
+
+/// Pooled packing buffers for one executor. Grows to the high-water block
+/// size on first use, then every later call reuses the capacity — the
+/// steady-state GEMM is allocation-free (rust/tests/alloc_free.rs).
+#[derive(Debug, Default, Clone)]
+pub struct GemmScratch {
+    a_pack: Vec<f32>,
+    b_pack: Vec<f32>,
+}
+
+/// True when the AVX2+FMA microkernel is in use: compiled for x86_64, the
+/// CPU reports both features, and `ADACOMP_NO_SIMD` is unset/empty. Cached
+/// after the first call (which reads the environment once).
+pub fn simd_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        let forced_off = std::env::var_os("ADACOMP_NO_SIMD")
+            .map(|v| !v.is_empty())
+            .unwrap_or(false);
+        if forced_off {
+            return false;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
+/// C[m,n] = A[m,k] @ B[k,n]  (+= if `accumulate`). Both row-major.
+pub fn matmul(
+    s: &mut GemmScratch,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    gemm_with(!simd_enabled(), s, a, k, 1, b, n, 1, c, m, k, n, accumulate);
+}
+
+/// C[m,n] = Aᵀ @ B  (+= if `accumulate`), A stored row-major as [k, m].
+pub fn matmul_at_b(
+    s: &mut GemmScratch,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+) {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    gemm_with(!simd_enabled(), s, a, 1, m, b, n, 1, c, m, k, n, accumulate);
+}
+
+/// C[m,n] = A @ Bᵀ, B stored row-major as [n, k]. Overwrites C.
+pub fn matmul_a_bt(
+    s: &mut GemmScratch,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    gemm_with(!simd_enabled(), s, a, k, 1, b, 1, k, c, m, k, n, false);
+}
+
+/// The strided driver: C[m,n] (row-major) = op(A) @ op(B), where element
+/// (i, p) of the effective A is `a[i * rs_a + p * cs_a]` and element (p, j)
+/// of the effective B is `b[p * rs_b + j * cs_b]`.
+///
+/// `force_scalar` pins the scalar microkernel regardless of CPU features —
+/// the cross-comparison entry point for tests and benches (the public
+/// wrappers pass `!simd_enabled()`).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with(
+    force_scalar: bool,
+    s: &mut GemmScratch,
+    a: &[f32],
+    rs_a: usize,
+    cs_a: usize,
+    b: &[f32],
+    rs_b: usize,
+    cs_b: usize,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+) {
+    assert_eq!(c.len(), m * n, "C length must be m*n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !accumulate {
+            c.iter_mut().for_each(|x| *x = 0.0);
+        }
+        return;
+    }
+    debug_assert!((m - 1) * rs_a + (k - 1) * cs_a < a.len(), "A view out of bounds");
+    debug_assert!((k - 1) * rs_b + (n - 1) * cs_b < b.len(), "B view out of bounds");
+    let simd = !force_scalar && simd_enabled();
+
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        let nb_panels = nc.div_ceil(NR);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            ensure_len(&mut s.b_pack, nb_panels * kc * NR);
+            pack_b(&mut s.b_pack, b, rs_b, cs_b, jc, nc, pc, kc);
+            // The first k-panel honors `accumulate`; every later panel adds
+            // onto the partial products already in C.
+            let acc_into = accumulate || pc > 0;
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                let ma_panels = mc.div_ceil(MR);
+                ensure_len(&mut s.a_pack, ma_panels * kc * MR);
+                pack_a(&mut s.a_pack, a, rs_a, cs_a, ic, mc, pc, kc);
+                for jp in 0..nb_panels {
+                    let col0 = jc + jp * NR;
+                    let nr_eff = NR.min(nc - jp * NR);
+                    let bp = &s.b_pack[jp * kc * NR..][..kc * NR];
+                    for ip in 0..ma_panels {
+                        let row0 = ic + ip * MR;
+                        let mr_eff = MR.min(mc - ip * MR);
+                        let ap = &s.a_pack[ip * kc * MR..][..kc * MR];
+                        micro_dispatch(
+                            simd,
+                            kc,
+                            ap,
+                            bp,
+                            c,
+                            row0 * n + col0,
+                            n,
+                            mr_eff,
+                            nr_eff,
+                            acc_into,
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn ensure_len(v: &mut Vec<f32>, n: usize) {
+    if v.len() < n {
+        v.resize(n, 0.0);
+    }
+}
+
+/// Pack an `mc x kc` block of the effective A into MR-row micro-panels:
+/// panel `ip` holds k-major groups of MR consecutive row values, rows past
+/// `mc` zero-padded. Padding rows multiply into lanes whose results are
+/// never written back, so it is FP-neutral.
+fn pack_a(dst: &mut [f32], a: &[f32], rs: usize, cs: usize, ic: usize, mc: usize, pc: usize, kc: usize) {
+    for ip in 0..mc.div_ceil(MR) {
+        let base = ip * MR;
+        let pbase = ip * kc * MR;
+        for p in 0..kc {
+            let col = (pc + p) * cs;
+            let d = pbase + p * MR;
+            for r in 0..MR {
+                let row = base + r;
+                dst[d + r] = if row < mc { a[(ic + row) * rs + col] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack a `kc x nc` block of the effective B into NR-column micro-panels:
+/// panel `jp` holds k-major groups of NR consecutive column values, columns
+/// past `nc` zero-padded (FP-neutral, as with A).
+fn pack_b(dst: &mut [f32], b: &[f32], rs: usize, cs: usize, jc: usize, nc: usize, pc: usize, kc: usize) {
+    for jp in 0..nc.div_ceil(NR) {
+        let base = jp * NR;
+        let pbase = jp * kc * NR;
+        for p in 0..kc {
+            let row = (pc + p) * rs;
+            let d = pbase + p * NR;
+            for j in 0..NR {
+                let col = base + j;
+                dst[d + j] = if col < nc { b[row + (jc + col) * cs] } else { 0.0 };
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_dispatch(
+    simd: bool,
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    c: &mut [f32],
+    coff: usize,
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+    acc_into: bool,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if simd {
+        debug_assert!(coff + (mr_eff - 1) * ldc + nr_eff <= c.len());
+        // SAFETY: `simd` implies AVX2+FMA were detected at runtime; `ap`/`bp`
+        // hold kc full micro-panels; writes touch only the mr_eff x nr_eff
+        // valid tile region, in bounds per the assert above.
+        unsafe {
+            mk_avx2(
+                kc,
+                ap.as_ptr(),
+                bp.as_ptr(),
+                c.as_mut_ptr().add(coff),
+                ldc,
+                mr_eff,
+                nr_eff,
+                acc_into,
+            );
+        }
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = simd;
+    mk_scalar(kc, ap, bp, c, coff, ldc, mr_eff, nr_eff, acc_into);
+}
+
+/// Scalar microkernel: the exact FP-operation mirror of [`mk_avx2`]. Each
+/// accumulator lane performs one correctly-rounded fused multiply-add per k
+/// (`f32::mul_add` == per-lane `vfmadd`), and the write-out does the same
+/// single add (or overwrite) the vector path does — so the two paths agree
+/// bit-for-bit on every output.
+#[allow(clippy::too_many_arguments)]
+fn mk_scalar(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    c: &mut [f32],
+    coff: usize,
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+    acc_into: bool,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let av = &ap[p * MR..p * MR + MR];
+        let bv = &bp[p * NR..p * NR + NR];
+        for (accr, &ar) in acc.iter_mut().zip(av) {
+            for (al, &bl) in accr.iter_mut().zip(bv) {
+                *al = ar.mul_add(bl, *al);
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate().take(mr_eff) {
+        let row = &mut c[coff + r * ldc..coff + r * ldc + nr_eff];
+        if acc_into {
+            for (dst, &v) in row.iter_mut().zip(accr.iter()) {
+                *dst += v;
+            }
+        } else {
+            row.copy_from_slice(&accr[..nr_eff]);
+        }
+    }
+}
+
+/// AVX2+FMA microkernel: 6x16 tile in 12 ymm accumulators. `c` points at
+/// the tile's top-left element; partial tiles spill to a stack tile and
+/// copy back only the valid region.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn mk_avx2(
+    kc: usize,
+    ap: *const f32,
+    bp: *const f32,
+    c: *mut f32,
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+    acc_into: bool,
+) {
+    use std::arch::x86_64::*;
+    let mut acc = [_mm256_setzero_ps(); 2 * MR];
+    for p in 0..kc {
+        let b0 = _mm256_loadu_ps(bp.add(p * NR));
+        let b1 = _mm256_loadu_ps(bp.add(p * NR + 8));
+        for r in 0..MR {
+            let av = _mm256_set1_ps(*ap.add(p * MR + r));
+            acc[2 * r] = _mm256_fmadd_ps(av, b0, acc[2 * r]);
+            acc[2 * r + 1] = _mm256_fmadd_ps(av, b1, acc[2 * r + 1]);
+        }
+    }
+    if mr_eff == MR && nr_eff == NR {
+        for r in 0..MR {
+            let pr = c.add(r * ldc);
+            let (mut v0, mut v1) = (acc[2 * r], acc[2 * r + 1]);
+            if acc_into {
+                v0 = _mm256_add_ps(_mm256_loadu_ps(pr), v0);
+                v1 = _mm256_add_ps(_mm256_loadu_ps(pr.add(8)), v1);
+            }
+            _mm256_storeu_ps(pr, v0);
+            _mm256_storeu_ps(pr.add(8), v1);
+        }
+    } else {
+        let mut tile = [0.0f32; MR * NR];
+        for r in 0..MR {
+            _mm256_storeu_ps(tile.as_mut_ptr().add(r * NR), acc[2 * r]);
+            _mm256_storeu_ps(tile.as_mut_ptr().add(r * NR + 8), acc[2 * r + 1]);
+        }
+        for r in 0..mr_eff {
+            for j in 0..nr_eff {
+                let dst = c.add(r * ldc + j);
+                let v = tile[r * NR + j];
+                if acc_into {
+                    *dst += v;
+                } else {
+                    *dst = v;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// f64 reference, plain ijk — the correctness oracle.
+    fn naive_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f64; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p] as f64;
+                for j in 0..n {
+                    c[i * n + j] += av * b[p * n + j] as f64;
+                }
+            }
+        }
+        c.iter().map(|&x| x as f32).collect()
+    }
+
+    fn close(got: &[f32], want: &[f32], tol: f32) {
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!((g - w).abs() <= tol * w.abs().max(1.0), "[{i}] {g} vs {w}");
+        }
+    }
+
+    fn fill(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Pcg32::seeded(seed);
+        rng.normal_vec(n, 1.0)
+    }
+
+    #[test]
+    fn matmul_small_identity() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [1.0, 0.0, 0.0, 1.0];
+        let mut c = [0.0; 4];
+        let mut s = GemmScratch::default();
+        matmul(&mut s, &a, &b, &mut c, 2, 2, 2, false);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn ragged_shapes_match_reference() {
+        let mut s = GemmScratch::default();
+        // shapes chosen to hit partial MR, partial NR, multi-KC and multi-MC
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (5, 3, 17),
+            (6, 300, 16),
+            (7, 257, 33),
+            (97, 64, 10),
+            (130, 520, 19),
+        ] {
+            let a = fill(m * k, 1 + m as u64);
+            let b = fill(k * n, 2 + n as u64);
+            let mut c = vec![0.0; m * n];
+            matmul(&mut s, &a, &b, &mut c, m, k, n, false);
+            close(&c, &naive_ref(&a, &b, m, k, n), 1e-4);
+        }
+    }
+
+    #[test]
+    fn accumulate_adds_onto_existing() {
+        let (m, k, n) = (9usize, 37usize, 21usize);
+        let a = fill(m * k, 3);
+        let b = fill(k * n, 4);
+        let init = fill(m * n, 5);
+        let mut s = GemmScratch::default();
+        let mut c = init.clone();
+        matmul(&mut s, &a, &b, &mut c, m, k, n, true);
+        let mut want = naive_ref(&a, &b, m, k, n);
+        for (w, i) in want.iter_mut().zip(init.iter()) {
+            *w += i;
+        }
+        close(&c, &want, 1e-4);
+    }
+
+    #[test]
+    fn transposes_agree_with_plain() {
+        let (m, k, n) = (13usize, 29usize, 18usize);
+        let a = fill(m * k, 6);
+        let b = fill(k * n, 7);
+        let mut s = GemmScratch::default();
+        let mut c = vec![0.0; m * n];
+        matmul(&mut s, &a, &b, &mut c, m, k, n, false);
+
+        // A^T stored as [k, m]
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for p in 0..k {
+                at[p * m + i] = a[i * k + p];
+            }
+        }
+        let mut c2 = vec![0.0; m * n];
+        matmul_at_b(&mut s, &at, &b, &mut c2, m, k, n, false);
+        // same packed values, same accumulation order -> bitwise equal
+        assert_eq!(c, c2);
+
+        // B^T stored as [n, k]
+        let mut bt = vec![0.0; n * k];
+        for p in 0..k {
+            for j in 0..n {
+                bt[j * k + p] = b[p * n + j];
+            }
+        }
+        let mut c3 = vec![0.0; m * n];
+        matmul_a_bt(&mut s, &a, &bt, &mut c3, m, k, n);
+        assert_eq!(c, c3);
+    }
+
+    #[test]
+    fn at_b_accumulate_matches_two_rounds() {
+        let (m, k, n) = (11usize, 8usize, 40usize);
+        let at = fill(k * m, 8);
+        let b = fill(k * n, 9);
+        let mut s = GemmScratch::default();
+        let mut once = vec![0.0; m * n];
+        matmul_at_b(&mut s, &at, &b, &mut once, m, k, n, false);
+        let mut acc = once.clone();
+        matmul_at_b(&mut s, &at, &b, &mut acc, m, k, n, true);
+        close(
+            &acc,
+            &once.iter().map(|v| 2.0 * v).collect::<Vec<_>>(),
+            1e-5,
+        );
+    }
+
+    #[test]
+    fn k_zero_zeroes_or_preserves() {
+        let mut s = GemmScratch::default();
+        let mut c = vec![7.0f32; 6];
+        matmul(&mut s, &[], &[], &mut c, 2, 0, 3, false);
+        assert!(c.iter().all(|&v| v == 0.0));
+        let mut c = vec![7.0f32; 6];
+        matmul(&mut s, &[], &[], &mut c, 2, 0, 3, true);
+        assert!(c.iter().all(|&v| v == 7.0));
+    }
+
+    #[test]
+    fn forced_scalar_is_bit_identical_to_dispatch() {
+        // the detailed sweep lives in tests/kernel_equivalence.rs; this is
+        // the in-module smoke for one ragged multi-panel shape
+        let (m, k, n) = (23usize, 301usize, 41usize);
+        let a = fill(m * k, 10);
+        let b = fill(k * n, 11);
+        let mut s = GemmScratch::default();
+        let mut auto_c = vec![0.0; m * n];
+        matmul(&mut s, &a, &b, &mut auto_c, m, k, n, false);
+        let mut scalar_c = vec![0.0; m * n];
+        gemm_with(true, &mut s, &a, k, 1, &b, n, 1, &mut scalar_c, m, k, n, false);
+        let ab: Vec<u32> = auto_c.iter().map(|v| v.to_bits()).collect();
+        let sb: Vec<u32> = scalar_c.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ab, sb);
+    }
+}

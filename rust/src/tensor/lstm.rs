@@ -13,11 +13,13 @@
 //! gates plus `c_t`/`tanh(c_t)` time-major (`[T, B, ·]`) so the backward can
 //! run BPTT without recomputing the nonlinearities. All *output* buffer
 //! arguments are resized by the kernel, so callers reuse them across steps
-//! (the layer tape does); small per-call gather/scratch buffers (`xt`, `z`,
-//! `dz`, ...) are allocated internally — correctness-first, same policy as
-//! the conv kernels, and outside the engine's zero-alloc exchange contract.
+//! (the layer tape does); the per-timestep gather/cotangent buffers (`xt`,
+//! `z`, `dz`, ...) live in the caller's [`KernelScratch`] arena, so a
+//! steady-state step allocates nothing (rust/tests/alloc_free.rs).
 
-use super::ops::{self, sigmoid};
+use super::gemm;
+use super::ops::sigmoid;
+use super::KernelScratch;
 
 /// Forward over the whole sequence.
 ///
@@ -35,6 +37,7 @@ pub fn forward(
     t_len: usize,
     in_dim: usize,
     hidden: usize,
+    ks: &mut KernelScratch,
     gates: &mut Vec<f32>,
     c: &mut Vec<f32>,
     tanh_c: &mut Vec<f32>,
@@ -54,18 +57,31 @@ pub fn forward(
     y.clear();
     y.resize(bsz * t_len * h, 0.0);
 
-    let mut xt = vec![0.0f32; bsz * in_dim];
-    let mut z = vec![0.0f32; bsz * h4];
-    let mut h_prev = vec![0.0f32; bsz * h];
-    let mut c_prev = vec![0.0f32; bsz * h];
+    // disjoint-field borrows out of the arena (gemm scratch + gathers)
+    let KernelScratch {
+        gemm: gs,
+        xt,
+        z,
+        h_prev,
+        c_prev,
+        ..
+    } = ks;
+    xt.clear();
+    xt.resize(bsz * in_dim, 0.0);
+    z.clear();
+    z.resize(bsz * h4, 0.0);
+    h_prev.clear();
+    h_prev.resize(bsz * h, 0.0);
+    c_prev.clear();
+    c_prev.resize(bsz * h, 0.0);
 
     for t in 0..t_len {
         for b in 0..bsz {
             let src = (b * t_len + t) * in_dim;
             xt[b * in_dim..(b + 1) * in_dim].copy_from_slice(&x[src..src + in_dim]);
         }
-        ops::matmul(&xt, wx, &mut z, bsz, in_dim, h4, false);
-        ops::matmul(&h_prev, wh, &mut z, bsz, h, h4, true);
+        gemm::matmul(gs, xt, wx, z, bsz, in_dim, h4, false);
+        gemm::matmul(gs, h_prev, wh, z, bsz, h, h4, true);
 
         let gt = &mut gates[t * bsz * h4..(t + 1) * bsz * h4];
         let ct = &mut c[t * bsz * h..(t + 1) * bsz * h];
@@ -112,6 +128,7 @@ pub fn backward(
     t_len: usize,
     in_dim: usize,
     hidden: usize,
+    ks: &mut KernelScratch,
     gwx: &mut [f32],
     gwh: &mut [f32],
     gb: &mut [f32],
@@ -126,13 +143,29 @@ pub fn backward(
         assert_eq!(d.len(), bsz * t_len * in_dim);
     }
 
-    let mut dz = vec![0.0f32; bsz * h4];
-    let mut dh_next = vec![0.0f32; bsz * h];
-    let mut dc_next = vec![0.0f32; bsz * h];
-    let mut xt = vec![0.0f32; bsz * in_dim];
-    let mut h_prev = vec![0.0f32; bsz * h];
-    let mut dxt = vec![0.0f32; bsz * in_dim];
-    let mut gw_scratch = vec![0.0f32; in_dim.max(h) * h4];
+    let KernelScratch {
+        gemm: gs,
+        xt,
+        h_prev,
+        dz,
+        dh_next,
+        dc_next,
+        dxt,
+        ..
+    } = ks;
+    // clear + zero-fill resets carried state from the previous call
+    dz.clear();
+    dz.resize(bsz * h4, 0.0);
+    dh_next.clear();
+    dh_next.resize(bsz * h, 0.0);
+    dc_next.clear();
+    dc_next.resize(bsz * h, 0.0);
+    xt.clear();
+    xt.resize(bsz * in_dim, 0.0);
+    h_prev.clear();
+    h_prev.resize(bsz * h, 0.0);
+    dxt.clear();
+    dxt.resize(bsz * in_dim, 0.0);
 
     for t in (0..t_len).rev() {
         let gt = &gates[t * bsz * h4..(t + 1) * bsz * h4];
@@ -175,17 +208,16 @@ pub fn backward(
                 h_prev[b * h..(b + 1) * h].iter_mut().for_each(|v| *v = 0.0);
             }
         }
-        let gs = &mut gw_scratch[..in_dim * h4];
-        ops::matmul_at_b(&xt, &dz, gs, in_dim, bsz, h4);
-        ops::axpy(1.0, gs, gwx);
-        let gs = &mut gw_scratch[..h * h4];
-        ops::matmul_at_b(&h_prev, &dz, gs, h, bsz, h4);
-        ops::axpy(1.0, gs, gwh);
+        // per-t weight-gradient panels accumulate straight into gwx/gwh
+        // (the packed kernel sums each tile in registers, then adds once —
+        // no staging scratch, no extra axpy pass)
+        gemm::matmul_at_b(gs, xt, dz, gwx, in_dim, bsz, h4, true);
+        gemm::matmul_at_b(gs, h_prev, dz, gwh, h, bsz, h4, true);
         // dh_{t-1} += nothing else reaches it besides dz @ wh^T (dy[t-1] is
         // added at the top of the next iteration)
-        ops::matmul_a_bt(&dz, wh, &mut dh_next, bsz, h4, h);
+        gemm::matmul_a_bt(gs, dz, wh, dh_next, bsz, h4, h);
         if let Some(d) = dx.as_deref_mut() {
-            ops::matmul_a_bt(&dz, wx, &mut dxt, bsz, h4, in_dim);
+            gemm::matmul_a_bt(gs, dz, wx, dxt, bsz, h4, in_dim);
             for b in 0..bsz {
                 let dst = (b * t_len + t) * in_dim;
                 d[dst..dst + in_dim].copy_from_slice(&dxt[b * in_dim..(b + 1) * in_dim]);
@@ -209,8 +241,9 @@ mod tests {
         i: usize,
         h: usize,
     ) -> f32 {
+        let mut ks = KernelScratch::default();
         let (mut g, mut c, mut tc, mut y) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-        forward(x, wx, wh, b, bsz, t, i, h, &mut g, &mut c, &mut tc, &mut y);
+        forward(x, wx, wh, b, bsz, t, i, h, &mut ks, &mut g, &mut c, &mut tc, &mut y);
         // simple scalar loss: sum of squares / 2 -> dy = y
         y.iter().map(|v| 0.5 * v * v).sum()
     }
@@ -225,16 +258,17 @@ mod tests {
         let mut bias = vec![0.0f32; 4 * h];
         bias[h..2 * h].iter_mut().for_each(|v| *v = 1.0);
 
+        let mut ks = KernelScratch::default();
         let (mut g, mut c, mut tc, mut y) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-        forward(&x, &wx, &wh, &bias, bsz, t, i, h, &mut g, &mut c, &mut tc, &mut y);
+        forward(&x, &wx, &wh, &bias, bsz, t, i, h, &mut ks, &mut g, &mut c, &mut tc, &mut y);
         let dy = y.clone(); // d(sum y^2/2)/dy = y
         let mut gwx = vec![0.0f32; wx.len()];
         let mut gwh = vec![0.0f32; wh.len()];
         let mut gb = vec![0.0f32; bias.len()];
         let mut dx = vec![0.0f32; x.len()];
         backward(
-            &x, &wx, &wh, &g, &c, &tc, &y, &dy, bsz, t, i, h, &mut gwx, &mut gwh, &mut gb,
-            Some(&mut dx),
+            &x, &wx, &wh, &g, &c, &tc, &y, &dy, bsz, t, i, h, &mut ks, &mut gwx, &mut gwh,
+            &mut gb, Some(&mut dx),
         );
 
         let eps = 1e-2f32;
@@ -303,8 +337,9 @@ mod tests {
         let wx = vec![0.0f32; i * 4 * h];
         let wh = vec![0.0f32; h * 4 * h];
         let bias = vec![0.0f32; 4 * h];
+        let mut ks = KernelScratch::default();
         let (mut g, mut c, mut tc, mut y) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-        forward(&x, &wx, &wh, &bias, bsz, t, i, h, &mut g, &mut c, &mut tc, &mut y);
+        forward(&x, &wx, &wh, &bias, bsz, t, i, h, &mut ks, &mut g, &mut c, &mut tc, &mut y);
         assert!(y.iter().all(|&v| v == 0.0));
         assert!(c.iter().all(|&v| v == 0.0));
     }

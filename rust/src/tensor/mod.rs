@@ -8,8 +8,41 @@
 
 pub mod conv;
 pub mod embed;
+pub mod gemm;
 pub mod lstm;
 pub mod ops;
+
+/// Per-executor kernel scratch arena (DESIGN.md §Compute kernels): the GEMM
+/// packing pool plus every gather/cotangent buffer the conv and LSTM
+/// kernels previously allocated per call. One instance lives in each
+/// `NativeNet`; buffers grow to their high-water size during the first step
+/// and are reused thereafter, so a full forward+backward step is
+/// allocation-free in steady state (rust/tests/alloc_free.rs).
+#[derive(Debug, Default)]
+pub struct KernelScratch {
+    /// Packed GEMM panels (shared by every matmul the executor runs).
+    pub gemm: gemm::GemmScratch,
+    /// conv backward: dcols = dy @ Wᵀ before the col2im scatter.
+    pub dcols: Vec<f32>,
+    // LSTM forward: per-timestep gathers and the pre-activation gate block.
+    pub xt: Vec<f32>,
+    pub z: Vec<f32>,
+    pub h_prev: Vec<f32>,
+    pub c_prev: Vec<f32>,
+    // LSTM backward (BPTT): gate cotangents and carried h/c gradients.
+    pub dz: Vec<f32>,
+    pub dh_next: Vec<f32>,
+    pub dc_next: Vec<f32>,
+    pub dxt: Vec<f32>,
+}
+
+impl Clone for KernelScratch {
+    /// Scratch carries no cross-call state — cloning an executor must not
+    /// duplicate high-water buffers, so a clone starts empty.
+    fn clone(&self) -> KernelScratch {
+        KernelScratch::default()
+    }
+}
 
 /// Dense f32 tensor, row-major.
 #[derive(Debug, Clone, PartialEq)]

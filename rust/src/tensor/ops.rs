@@ -32,64 +32,12 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     s
 }
 
-/// C[m,n] = A[m,k] @ B[k,n]  (+= if `accumulate`)
-pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, accumulate: bool) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    if !accumulate {
-        c.iter_mut().for_each(|x| *x = 0.0);
-    }
-    // ikj loop order: streams B and C rows, vectorizes the inner j loop.
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                *cv += av * bv;
-            }
-        }
-    }
-}
-
-/// C[m,n] = A^T[k,m] @ B[k,n]   (A stored row-major as [k, m])
-pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    assert_eq!(a.len(), k * m);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    c.iter_mut().for_each(|x| *x = 0.0);
-    for p in 0..k {
-        let arow = &a[p * m..(p + 1) * m];
-        let brow = &b[p * n..(p + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c[i * n..(i + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                *cv += av * bv;
-            }
-        }
-    }
-}
-
-/// C[m,n] = A[m,k] @ B^T[n,k]   (B stored row-major as [n, k])
-pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), n * k);
-    assert_eq!(c.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (j, cv) in crow.iter_mut().enumerate() {
-            *cv = dot(arow, &b[j * k..(j + 1) * k]);
-        }
-    }
-}
+// The naive ikj matmul kernels that used to live here (with their
+// data-dependent `if av == 0.0` skips) are retired: every matmul variant now
+// routes through the packed, register-tiled GEMM in `tensor::gemm` —
+// branch-free inner loops, runtime AVX2+FMA dispatch, bit-identical scalar
+// fallback. See DESIGN.md §Compute kernels; bench_kernels pins the speedup
+// against a copy of the retired loops.
 
 /// In-place ReLU; returns nothing. Pair with `relu_grad`.
 #[inline]
@@ -170,54 +118,6 @@ pub fn count_correct(logits: &[f32], labels: &[i32], c: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn matmul_small() {
-        // [[1,2],[3,4]] @ [[1,0],[0,1]] = same
-        let a = [1.0, 2.0, 3.0, 4.0];
-        let b = [1.0, 0.0, 0.0, 1.0];
-        let mut c = [0.0; 4];
-        matmul(&a, &b, &mut c, 2, 2, 2, false);
-        assert_eq!(c, a);
-    }
-
-    #[test]
-    fn matmul_transposes_agree() {
-        // random-ish small case, cross-check all three variants
-        let m = 3;
-        let k = 4;
-        let n = 2;
-        let a: Vec<f32> = (0..m * k).map(|i| (i as f32) * 0.3 - 1.0).collect();
-        let b: Vec<f32> = (0..k * n).map(|i| (i as f32) * 0.7 - 2.0).collect();
-        let mut c = vec![0.0; m * n];
-        matmul(&a, &b, &mut c, m, k, n, false);
-
-        // A^T stored as [k, m]
-        let mut at = vec![0.0; k * m];
-        for i in 0..m {
-            for p in 0..k {
-                at[p * m + i] = a[i * k + p];
-            }
-        }
-        let mut c2 = vec![0.0; m * n];
-        matmul_at_b(&at, &b, &mut c2, m, k, n);
-        for (x, y) in c.iter().zip(c2.iter()) {
-            assert!((x - y).abs() < 1e-5);
-        }
-
-        // B^T stored as [n, k]
-        let mut bt = vec![0.0; n * k];
-        for p in 0..k {
-            for j in 0..n {
-                bt[j * k + p] = b[p * n + j];
-            }
-        }
-        let mut c3 = vec![0.0; m * n];
-        matmul_a_bt(&a, &bt, &mut c3, m, k, n);
-        for (x, y) in c.iter().zip(c3.iter()) {
-            assert!((x - y).abs() < 1e-5);
-        }
-    }
 
     #[test]
     fn dot_matches_naive() {

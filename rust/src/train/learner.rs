@@ -202,9 +202,8 @@ impl Learner {
         slots: &mut Vec<Packet>,
     ) -> Result<()> {
         self.next_batch(dataset);
-        let out = exec.step(params, &self.batch)?;
-        self.loss = out.loss;
-        self.grads = out.grads;
+        self.loss =
+            exec.step_streamed_into(params, &self.batch, &mut self.grads, &mut |_, _| {})?;
         self.pack_into(layout, slots);
         Ok(())
     }
@@ -267,18 +266,16 @@ impl Learner {
         }
         self.next_batch(dataset);
         let streams = exec.streams();
-        let out = {
+        self.loss = {
             let comp = &mut self.compressor;
             let batch = &self.batch;
-            exec.step_streamed(params, batch, &mut |layers, grads| {
+            exec.step_streamed_into(params, batch, &mut self.grads, &mut |layers, grads| {
                 for li in layers {
                     let p = comp.pack_layer(li, layout.view(li, grads));
                     publish(plan, cells, li, p, on_bucket);
                 }
             })?
         };
-        self.loss = out.loss;
-        self.grads = out.grads;
         if !streams {
             for li in 0..layout.num_layers() {
                 let p = self.compressor.pack_layer(li, layout.view(li, &self.grads));

@@ -1,10 +1,13 @@
-//! Zero-allocation guarantee for the exchange/reduce hot path.
+//! Zero-allocation guarantee for the compute + exchange/reduce hot path.
 //!
 //! A counting global allocator wraps `System`; after a warmup round, a
 //! steady-state `exchange_into` (every topology), the bucketed
 //! frame-encode→decode→exchange loop (the engine's streamed scheduler
-//! shape, including the real wire serialization), and a steady-state
-//! pack→exchange→recycle loop must perform **zero** heap allocations.
+//! shape, including the real wire serialization), a steady-state
+//! pack→exchange→recycle loop, and a full forward+backward
+//! `step_streamed_into` (mnist_cnn's im2col conv stack and char_lstm's
+//! recurrent graph — the executors with the most scratch) must perform
+//! **zero** heap allocations.
 //!
 //! NOTE: exactly one #[test] lives in this binary — the default test harness
 //! runs tests concurrently in one process, and a second test's allocations
@@ -43,6 +46,7 @@ fn allocs() -> usize {
 use adacomp::comm::{topology, Fabric, LinkModel, Reduced, ReducePlan, RoundSched, Topology};
 use adacomp::compress::{self, wire, Config, Kind, Packet};
 use adacomp::models::{LayerKind, Layout};
+use adacomp::runtime::Batch;
 use adacomp::train::learner::{cell_ring_for_plan, cells_for_plan, BucketCell, BucketSlots};
 use adacomp::util::rng::Pcg32;
 
@@ -383,4 +387,53 @@ fn steady_state_exchange_and_pack_are_allocation_free() {
         0,
         "steady-state pack+exchange+recycle must not allocate"
     );
+
+    // --- full fwd/bwd step: the compute hot path. step_streamed_into
+    // writes into a caller-owned grads buffer; the conv im2col/dcols
+    // buffers, the packed-GEMM panels, the LSTM gate scratch, and the
+    // backward dy/dx ping-pong all live in the executor's KernelScratch
+    // arena, so after warmup a whole training step allocates nothing.
+    // mnist_cnn (two im2col conv stages) and char_lstm (recurrent graph,
+    // 50 timesteps) carry the most scratch of the native models.
+    for model in ["mnist_cnn", "char_lstm"] {
+        let spec = adacomp::harness::native_spec(model, 11, 8).unwrap();
+        let mut exec = spec.factory.build_worker().unwrap();
+        let bsz = 8usize;
+        let mut rng = Pcg32::seeded(77);
+        let batch = if spec.x_is_int {
+            let x: Vec<i32> = (0..bsz * spec.x_elems)
+                .map(|_| rng.below(spec.num_classes as u32) as i32)
+                .collect();
+            let y: Vec<i32> = (0..bsz * spec.y_elems)
+                .map(|_| rng.below(spec.num_classes as u32) as i32)
+                .collect();
+            Batch::i32(x, y, bsz)
+        } else {
+            let x = rng.normal_vec(bsz * spec.x_elems, 1.0);
+            let y: Vec<i32> = (0..bsz * spec.y_elems)
+                .map(|_| rng.below(spec.num_classes as u32) as i32)
+                .collect();
+            Batch::f32(x, y, bsz)
+        };
+        let mut grads = Vec::new();
+        // warmup: activations/tapes/scratch grow to this batch shape, the
+        // grads buffer reaches layout.total, simd gates probe the env
+        for _ in 0..3 {
+            exec.step_streamed_into(&spec.init, &batch, &mut grads, &mut |_, _| {})
+                .unwrap();
+        }
+        let before = allocs();
+        for _ in 0..10 {
+            let loss = exec
+                .step_streamed_into(&spec.init, &batch, &mut grads, &mut |_, _| {})
+                .unwrap();
+            assert!(loss.is_finite());
+        }
+        let after = allocs();
+        assert_eq!(
+            after - before,
+            0,
+            "{model}: steady-state fwd/bwd step_streamed_into must not allocate"
+        );
+    }
 }

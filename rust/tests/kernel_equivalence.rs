@@ -1,0 +1,170 @@
+//! SIMD/scalar bit-equality sweep for the compute kernels (hand-rolled
+//! property style, seeded PCG32 — same discipline as tests/property.rs).
+//!
+//! The contract under test (DESIGN.md §Compute kernels): the AVX2+FMA GEMM
+//! microkernel and the AVX2 AdaComp bin kernels must produce *bit-identical*
+//! results to their scalar mirrors, because both execute the same packing,
+//! tiling, accumulation order and per-lane arithmetic. This is what lets one
+//! golden-vector set and one determinism story cover every machine,
+//! SIMD or not (`ADACOMP_NO_SIMD=1` reruns this whole file on the scalar
+//! path, where the equalities hold trivially).
+//!
+//!   K1  gemm dispatch == forced scalar, bitwise, over random (m, k, n)
+//!       including ragged micro/cache-tile edges, for all three layout
+//!       variants (A@B, Aᵀ@B, A@Bᵀ) and accumulate on/off
+//!   K2  gemm matches an f64 oracle within accumulation tolerance
+//!   K3  adacomp select dispatch == scalar, bitwise, over random residue
+//!       states (indices, values, and updated residues)
+//!   K4  bin_absmax dispatch == scalar == plain fold, bitwise
+
+use adacomp::compress::select;
+use adacomp::tensor::gemm::{self, GemmScratch};
+use adacomp::util::rng::Pcg32;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Random shapes biased toward the tiling edges: exact multiples of the
+/// MR=6 / NR=16 microkernel and KC=256 / MC=96 cache blocks, plus their
+/// off-by-one raggeds, plus fully random small shapes.
+fn shapes(rng: &mut Pcg32) -> Vec<(usize, usize, usize)> {
+    let mut out = vec![
+        (1, 1, 1),
+        (6, 256, 16),
+        (5, 255, 15),
+        (7, 257, 17),
+        (12, 256, 32),
+        (96, 256, 48),
+        (97, 300, 49),
+        (130, 520, 19),
+        (32, 784, 300),
+    ];
+    for _ in 0..12 {
+        out.push((
+            1 + rng.below(100) as usize,
+            1 + rng.below(300) as usize,
+            1 + rng.below(120) as usize,
+        ));
+    }
+    out
+}
+
+#[test]
+fn k1_k2_gemm_dispatch_bitwise_equals_scalar_all_layouts() {
+    let mut rng = Pcg32::seeded(11);
+    for (m, k, n) in shapes(&mut rng) {
+        let a = rng.normal_vec(m * k, 1.0); // row-major [m,k]
+        let at = transpose(&a, m, k); // [k,m] — Aᵀ storage
+        let b = rng.normal_vec(k * n, 1.0); // row-major [k,n]
+        let bt = transpose(&b, k, n); // [n,k] — Bᵀ storage
+        let c0 = rng.normal_vec(m * n, 1.0);
+        let mut s = GemmScratch::default();
+
+        for accumulate in [false, true] {
+            // A@B
+            let mut cd = c0.clone();
+            gemm::matmul(&mut s, &a, &b, &mut cd, m, k, n, accumulate);
+            let mut cs = c0.clone();
+            gemm::gemm_with(true, &mut s, &a, k, 1, &b, n, 1, &mut cs, m, k, n, accumulate);
+            assert_eq!(bits(&cd), bits(&cs), "A@B {m}x{k}x{n} acc={accumulate}");
+            oracle_check(&a, &b, &c0, &cd, m, k, n, accumulate);
+
+            // Aᵀ@B (A stored [k,m])
+            let mut cd = c0.clone();
+            gemm::matmul_at_b(&mut s, &at, &b, &mut cd, m, k, n, accumulate);
+            let mut cs = c0.clone();
+            gemm::gemm_with(true, &mut s, &at, 1, m, &b, n, 1, &mut cs, m, k, n, accumulate);
+            assert_eq!(bits(&cd), bits(&cs), "At@B {m}x{k}x{n} acc={accumulate}");
+            oracle_check(&a, &b, &c0, &cd, m, k, n, accumulate);
+        }
+
+        // A@Bᵀ (B stored [n,k]; overwrite-only by design)
+        let mut cd = c0.clone();
+        gemm::matmul_a_bt(&mut s, &a, &bt, &mut cd, m, k, n);
+        let mut cs = c0.clone();
+        gemm::gemm_with(true, &mut s, &a, k, 1, &bt, 1, k, &mut cs, m, k, n, false);
+        assert_eq!(bits(&cd), bits(&cs), "A@Bt {m}x{k}x{n}");
+        oracle_check(&a, &b, &c0, &cd, m, k, n, false);
+    }
+}
+
+fn transpose(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut t = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            t[c * rows + r] = x[r * cols + c];
+        }
+    }
+    t
+}
+
+/// K2: compare against an f64 accumulation of the same product.
+#[allow(clippy::too_many_arguments)]
+fn oracle_check(
+    a: &[f32],
+    b: &[f32],
+    c0: &[f32],
+    got: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = if accumulate { c0[i * n + j] as f64 } else { 0.0 };
+            for p in 0..k {
+                acc += a[i * k + p] as f64 * b[p * n + j] as f64;
+            }
+            let g = got[i * n + j] as f64;
+            let tol = 1e-4 * acc.abs().max(1.0);
+            assert!(
+                (g - acc).abs() <= tol,
+                "oracle {m}x{k}x{n}[{i},{j}]: got {g}, want {acc}"
+            );
+        }
+    }
+}
+
+#[test]
+fn k3_select_dispatch_bitwise_equals_scalar_random_states() {
+    let mut rng = Pcg32::seeded(23);
+    for trial in 0..200 {
+        let n = 1 + rng.below(400) as usize;
+        let r0 = rng.normal_vec(n, 1.0);
+        let db = rng.normal_vec(n, 0.7);
+        // gm drawn from the data so hit rates range from dense to empty
+        let gm = select::bin_absmax(&r0) * (0.2 + 0.2 * rng.below(8) as f32);
+        if gm <= 0.0 {
+            continue;
+        }
+        let (q, c1) = (0.5, 1.0);
+        let base = rng.below(1 << 20);
+
+        let mut rd = r0.clone();
+        let (mut id, mut vd) = (Vec::new(), Vec::new());
+        select::select_bin_into(&mut rd, &db, gm, q, c1, base, &mut id, &mut vd);
+
+        let mut rs = r0.clone();
+        let (mut is_, mut vs) = (Vec::new(), Vec::new());
+        select::select_bin_scalar_into(&mut rs, &db, gm, q, c1, base, &mut is_, &mut vs);
+
+        assert_eq!(id, is_, "trial {trial} n={n}: indices");
+        assert_eq!(bits(&vd), bits(&vs), "trial {trial} n={n}: values");
+        assert_eq!(bits(&rd), bits(&rs), "trial {trial} n={n}: residues");
+        // indices strictly ascending — the wire encoder's delta precondition
+        assert!(id.windows(2).all(|w| w[0] < w[1]), "trial {trial}: order");
+    }
+}
+
+#[test]
+fn k4_absmax_dispatch_bitwise_equals_scalar_and_fold() {
+    let mut rng = Pcg32::seeded(31);
+    for n in [0usize, 1, 5, 7, 8, 9, 15, 16, 17, 63, 64, 100, 1000] {
+        let v = rng.normal_vec(n, 2.0);
+        let fold = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert_eq!(select::bin_absmax(&v).to_bits(), fold.to_bits(), "n={n}");
+        assert_eq!(select::bin_absmax_scalar(&v).to_bits(), fold.to_bits(), "n={n}");
+    }
+}
