@@ -12,6 +12,12 @@
 //! - `naive` — a local copy of the retired pre-packing ikj loops (with
 //!   their data-dependent `if av == 0.0` skip), kept here as baseline only.
 //!
+//! A second sweep times the same packed GEMM at kernel-thread budgets of
+//! 1 vs 4 (`gemm_with_threads` over the shared compute pool) on every
+//! model shape above the parallel gate, asserting bit-identical outputs
+//! always and a strict 4-thread speedup at the large shapes when the
+//! machine has >= 4 hardware threads.
+//!
 //! When the SIMD path is live, every model-shape row asserts the packed
 //! kernel strictly beats the retired naive loops, and the SIMD AdaComp
 //! pass-1b/pass-2 kernels strictly beat their scalar mirrors — the
@@ -127,6 +133,80 @@ fn gemm_row(model: &str, op: &str, m: usize, k: usize, n: usize, iters: usize) -
         ("scalar_gflops", json::num(gflops(&scalar))),
         ("naive_gflops", json::num(gflops(&naive))),
         ("speedup_vs_naive", json::num(speedup)),
+    ])
+}
+
+/// Kernel-threads sweep: the same packed GEMM at an explicit budget of 1 vs
+/// 4 over the shared compute pool, outputs asserted bit-identical. The
+/// strict speedup gate fires only where it can physically hold: >= 4
+/// hardware threads and a shape big enough (>= 10 MFlop) that the fork-join
+/// handoff is noise against the tile work.
+fn par_row(model: &str, op: &str, m: usize, k: usize, n: usize, iters: usize, cores: usize) -> Json {
+    let mut rng = Pcg32::seeded(5 + (m * 17 + k * 3 + n) as u64);
+    let a = rng.normal_vec(m * k, 1.0);
+    let b = rng.normal_vec(k * n, 1.0);
+    let mut s = GemmScratch::default();
+
+    let mut c1 = vec![0.0f32; m * n];
+    let t1 = Stats::from(&time_n(
+        || {
+            gemm::gemm_with_threads(false, 1, &mut s, &a, k, 1, &b, n, 1, &mut c1, m, k, n, false);
+            std::hint::black_box(c1[0]);
+        },
+        2,
+        iters,
+    ));
+    let mut c4 = vec![0.0f32; m * n];
+    let t4 = Stats::from(&time_n(
+        || {
+            gemm::gemm_with_threads(false, 4, &mut s, &a, k, 1, &b, n, 1, &mut c4, m, k, n, false);
+            std::hint::black_box(c4[0]);
+        },
+        2,
+        iters,
+    ));
+
+    // determinism contract on the benched buffers: any budget, same bits
+    assert_eq!(
+        c1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        c4.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "{model}/{op}: 1-thread and 4-thread GEMM must be bit-identical"
+    );
+
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let speedup = t1.median_ns / t4.median_ns;
+    let gated = cores >= 4 && flops >= 10e6;
+    if gated {
+        assert!(
+            t4.median_ns < t1.median_ns,
+            "{model}/{op} ({m}x{k}x{n}): 4 kernel threads {} must beat 1 {}",
+            fmt_ns(t4.median_ns),
+            fmt_ns(t1.median_ns)
+        );
+    }
+    let gflops = |st: &Stats| st.throughput(flops) / 1e9;
+    println!(
+        "{:<10} {:<6} {:>5}x{:>4}x{:>4} 1T {:>10} 4T {:>10} {:>5.2}x{}",
+        model,
+        op,
+        m,
+        k,
+        n,
+        fmt_ns(t1.median_ns),
+        fmt_ns(t4.median_ns),
+        speedup,
+        if gated { "  [gated]" } else { "" }
+    );
+    json::obj(vec![
+        ("model", json::s(model)),
+        ("op", json::s(op)),
+        ("m", json::num(m as f64)),
+        ("k", json::num(k as f64)),
+        ("n", json::num(n as f64)),
+        ("threads1_gflops", json::num(gflops(&t1))),
+        ("threads4_gflops", json::num(gflops(&t4))),
+        ("speedup_4_vs_1", json::num(speedup)),
+        ("asserted", Json::Bool(gated)),
     ])
 }
 
@@ -266,6 +346,30 @@ fn main() -> anyhow::Result<()> {
         gemm_rows.push(gemm_row(model, op, m, k, n, iters));
     }
 
+    // kernel-threads sweep over the model shapes that cross the parallel
+    // gate (2mkn >= MIN_PAR_FLOPS); the strict 4-vs-1 speedup assertion
+    // fires at the large shapes when the machine has >= 4 hardware threads
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    println!(
+        "\n# parallel packed GEMM: kernel-threads 1 vs 4 over the compute pool \
+         (cores={cores})"
+    );
+    let mut par_rows = Vec::new();
+    for &(model, op, m, k, n) in rows {
+        if 2 * (m as u64) * (k as u64) * (n as u64) < gemm::MIN_PAR_FLOPS {
+            continue; // below the gate the kernel stays serial by design
+        }
+        let work = m * k * n;
+        let iters = if fast {
+            3
+        } else if work > 10_000_000 {
+            10
+        } else {
+            40
+        };
+        par_rows.push(par_row(model, op, m, k, n, iters, cores));
+    }
+
     println!("\n# adacomp bin kernels: SIMD dispatch vs scalar mirror");
     let pack_shapes: &[(usize, usize)] = if fast {
         &[(25_600, 50)]
@@ -287,13 +391,15 @@ fn main() -> anyhow::Result<()> {
     let doc = json::obj(vec![
         ("simd_enabled", Json::Bool(simd)),
         ("select_simd_enabled", Json::Bool(select::simd_enabled())),
+        ("cores", json::num(cores as f64)),
         ("gemm", json::arr(gemm_rows)),
+        ("gemm_parallel", json::arr(par_rows)),
         ("pack", json::arr(pack_rows)),
     ]);
     std::fs::write("BENCH_kernels.json", doc.to_string())?;
     println!(
         "\nwrote BENCH_kernels.json (packed-vs-naive GEMM per model shape, \
-         SIMD-vs-scalar adacomp bin kernels)"
+         kernel-threads 1-vs-4 sweep, SIMD-vs-scalar adacomp bin kernels)"
     );
     Ok(())
 }

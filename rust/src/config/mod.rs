@@ -21,7 +21,7 @@ pub fn from_json(v: &Json) -> Result<TrainConfig> {
         "steps_per_epoch", "lr", "lr_schedule", "optimizer", "momentum",
         "topology", "seed", "clip_norm", "divergence_loss", "compression",
         "link", "threads", "exchange", "bucket_bytes", "staleness", "jitter",
-        "churn", "mtbf",
+        "churn", "mtbf", "kernel_threads",
     ];
     for k in obj.keys() {
         if !KNOWN.contains(&k.as_str()) {
@@ -122,6 +122,22 @@ pub fn from_json(v: &Json) -> Result<TrainConfig> {
     }
     if let Some(t) = v.get("threads").as_usize() {
         cfg.threads = t;
+    }
+    // intra-GEMM core budget: fail at load time with the valid range (the
+    // staleness pattern) — 0 = auto (threads / active learners)
+    if v.get("kernel_threads") != &Json::Null {
+        let n = v
+            .get("kernel_threads")
+            .as_f64()
+            .context("'kernel_threads' must be a number")?;
+        if n < 0.0 || n.fract() != 0.0 {
+            bail!(
+                "kernel_threads {n} out of range (valid: integer 0 <= N <= {}; 0 = auto budget)",
+                crate::tensor::parallel::MAX_KERNEL_THREADS
+            );
+        }
+        crate::train::validate_kernel_threads(n as usize)?;
+        cfg.kernel_threads = n as usize;
     }
     if let Some(lr) = v.get("lr").as_f64() {
         cfg.lr = LrSchedule::Constant(lr as f32);
@@ -277,6 +293,7 @@ pub fn to_json(cfg: &TrainConfig) -> Json {
         ("seed", json::num(cfg.seed as f64)),
         ("clip_norm", json::num(cfg.clip_norm as f64)),
         ("threads", json::num(cfg.threads as f64)),
+        ("kernel_threads", json::num(cfg.kernel_threads as f64)),
         ("lr_schedule", lr),
         ("compression", comp),
     ])
@@ -423,6 +440,33 @@ mod tests {
         let cfg = from_json(&v).unwrap();
         assert_eq!(cfg.staleness, 0);
         assert_eq!(cfg.link.jitter, 0.0);
+    }
+
+    #[test]
+    fn kernel_threads_roundtrip_and_validate() {
+        // satellite: the intra-GEMM core budget loads, roundtrips, and
+        // fails fast with the valid range in the error (staleness pattern)
+        let v = Json::from_str_slice(
+            r#"{"model": "m", "learners": 4, "threads": 2, "kernel_threads": 4}"#,
+        )
+        .unwrap();
+        let cfg = from_json(&v).unwrap();
+        assert_eq!(cfg.kernel_threads, 4);
+        let back = from_json(&to_json(&cfg)).unwrap();
+        assert_eq!(back.kernel_threads, 4);
+        for (spec, needle) in [
+            (r#"{"model": "m", "kernel_threads": -1}"#, "0 <= N <= 64"),
+            (r#"{"model": "m", "kernel_threads": 65}"#, "0 <= N <= 64"),
+            (r#"{"model": "m", "kernel_threads": 2.5}"#, "0 <= N <= 64"),
+            (r#"{"model": "m", "kernel_threads": "four"}"#, "must be a number"),
+        ] {
+            let v = Json::from_str_slice(spec).unwrap();
+            let err = format!("{:#}", from_json(&v).unwrap_err());
+            assert!(err.contains(needle), "{spec}: {err}");
+        }
+        // default: auto budget
+        let v = Json::from_str_slice(r#"{"model": "m"}"#).unwrap();
+        assert_eq!(from_json(&v).unwrap().kernel_threads, 0);
     }
 
     #[test]

@@ -486,6 +486,29 @@ impl Workload {
             })?,
         };
         crate::train::validate_window(staleness, jitter)?;
+        // intra-GEMM core budget (hand-parsed like --staleness so a
+        // negative N or junk fails with the valid range)
+        let kernel_threads = match args.get("kernel-threads") {
+            None => 0usize,
+            Some(v) => {
+                let n: i64 = v.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "--kernel-threads '{v}' is not an integer (valid: 0 <= N <= {}; \
+                         0 = auto budget)",
+                        crate::tensor::parallel::MAX_KERNEL_THREADS
+                    )
+                })?;
+                if n < 0 {
+                    bail!(
+                        "kernel-threads {n} out of range (valid: 0 <= N <= {}; \
+                         0 = auto budget)",
+                        crate::tensor::parallel::MAX_KERNEL_THREADS
+                    );
+                }
+                n as usize
+            }
+        };
+        crate::train::validate_kernel_threads(kernel_threads)?;
         // elastic-fleet knobs: the churn schedule parses (or fails with the
         // valid event forms) here, not at step N mid-run; mtbf hand-parsed
         // like --staleness so junk fails with the valid range
@@ -533,6 +556,7 @@ impl Workload {
             staleness,
             churn,
             mtbf,
+            kernel_threads,
         };
 
         let mut init_params = match init_native {
@@ -792,6 +816,47 @@ mod tests {
             );
             let err = format!("{:#}", Workload::from_args(&args, "mnist_dnn").unwrap_err());
             assert!(err.contains(needle), "{flag} {val}: {err}");
+        }
+    }
+
+    #[test]
+    fn kernel_threads_cli_validates_at_parse_time() {
+        // satellite: the intra-GEMM core budget fails fast with the valid
+        // range in the error (the --staleness pattern), and wires through
+        // to TrainConfig when in range
+        let ok = Args::parse_from(
+            [
+                "--model", "mnist_dnn", "--backend", "native", "--learners", "2",
+                "--kernel-threads", "4",
+            ]
+            .map(String::from),
+            &[],
+        );
+        let w = Workload::from_args(&ok, "mnist_dnn").unwrap();
+        assert_eq!(w.cfg.kernel_threads, 4);
+        // default: 0 = auto budget (threads / active learners)
+        let none = Args::parse_from(
+            ["--model", "mnist_dnn", "--backend", "native"].map(String::from),
+            &[],
+        );
+        let w = Workload::from_args(&none, "mnist_dnn").unwrap();
+        assert_eq!(w.cfg.kernel_threads, 0);
+
+        for (val, needle) in [
+            ("-1", "0 <= N <= 64"),
+            ("65", "0 <= N <= 64"),
+            ("four", "0 <= N <= 64"),
+        ] {
+            let args = Args::parse_from(
+                [
+                    "--model", "mnist_dnn", "--backend", "native",
+                    "--kernel-threads", val,
+                ]
+                .map(String::from),
+                &[],
+            );
+            let err = format!("{:#}", Workload::from_args(&args, "mnist_dnn").unwrap_err());
+            assert!(err.contains(needle), "--kernel-threads {val}: {err}");
         }
     }
 

@@ -282,6 +282,13 @@ USAGE:
                 [--threads T]   (0 = auto; learner phase fan-out over the
                                  persistent worker pool, results are
                                  bit-identical for every thread count)
+                [--kernel-threads N]
+                                (intra-GEMM tile fan-out per learner over
+                                 the shared compute pool, 0 <= N <= 64.
+                                 0 = auto budget max(1, threads /
+                                 active learners), re-derived when the
+                                 elastic fleet churns. Bit-identical
+                                 results at every value)
                 [--exchange streamed|barrier]
                                 (streamed = overlap per-layer pack/exchange
                                  with the remaining backward, the default;

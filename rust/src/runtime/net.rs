@@ -24,6 +24,13 @@
 //! Determinism: layers call the same `tensor::` kernels in the same order
 //! as the old monoliths did, so refactored models are bit-identical to
 //! their pre-graph implementations (pinned by rust/tests/engine_native.rs).
+//!
+//! Thread budget: the GEMMs under every layer read the process-wide
+//! intra-kernel budget (`tensor::parallel::kernel_threads()`, set by the
+//! engine as `threads / active_learners` and re-derived at membership
+//! epochs) and fan macro-tiles over the shared compute pool. No plumbing
+//! reaches this module — and results are bit-identical at every budget, so
+//! executors stay oblivious to how many helper threads served them.
 
 // `Layer::backward` legitimately carries the whole (params, activations,
 // tape, cotangents, grads) context — a context struct would just rename
@@ -973,6 +980,46 @@ mod tests {
         let plain = net.step(&params, &batch).unwrap();
         assert_eq!(plain.loss.to_bits(), out.loss.to_bits());
         assert_eq!(plain.grads, out.grads);
+    }
+
+    #[test]
+    fn streamed_step_is_bit_identical_across_kernel_thread_budgets() {
+        use crate::tensor::parallel;
+        // fc1's forward GEMM (64x256 @ 256x128) crosses gemm::MIN_PAR_FLOPS,
+        // so the parallel tile grid is actually exercised, not gated off
+        let mut net = NativeNet::new(
+            "test_wide",
+            vec![
+                Arc::new(Fc::new("fc1", 256, 128)),
+                Arc::new(Relu),
+                Arc::new(Fc::new("fc2", 128, 10)),
+            ],
+            256,
+            4,
+        );
+        let mut rng = Pcg32::seeded(11);
+        let params = rng.normal_vec(net.layout().total, 0.2);
+        let bsz = 64usize;
+        let x = rng.normal_vec(bsz * 256, 1.0);
+        let y: Vec<i32> = (0..bsz).map(|i| (i % 10) as i32).collect();
+        let batch = Batch::f32(x, y, bsz);
+        let mut base: Option<(u32, Vec<u32>)> = None;
+        for t in [1usize, 2, 4] {
+            parallel::set_kernel_threads(t);
+            let mut grads = Vec::new();
+            let loss = net
+                .step_streamed_into(&params, &batch, &mut grads, &mut |_, _| {})
+                .unwrap();
+            let gbits: Vec<u32> = grads.iter().map(|g| g.to_bits()).collect();
+            match &base {
+                None => base = Some((loss.to_bits(), gbits)),
+                Some((lb, gb)) => {
+                    assert_eq!(loss.to_bits(), *lb, "kernel_threads={t}");
+                    assert_eq!(&gbits, gb, "kernel_threads={t}");
+                }
+            }
+        }
+        parallel::set_kernel_threads(1);
     }
 
     #[test]

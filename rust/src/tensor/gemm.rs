@@ -29,8 +29,26 @@
 //! at packing time, so no variant pays a materialized transpose. Inner
 //! loops are branch-free in the data (no `if av == 0.0` skips — the old
 //! naive kernels' input-dependent timing is gone with them).
+//!
+//! **Within-learner parallelism.** Above the microkernel, the macro loops
+//! fan out over the shared compute pool (`tensor::parallel`): C is cut
+//! into a static grid of (MC row-block × NR-panel column-chunk) units, and
+//! each unit is packed and accumulated end-to-end by exactly one pool slot
+//! — its own KC loop, in ascending-`pc` order, into its own scratch shard.
+//! Per C element the accumulation is therefore the *same* fmadd chain the
+//! single-threaded kernel runs (the KC partition of k never changes, and
+//! the jc/ic split never touches FP order), so results are bit-identical
+//! at every thread count — the same contract as SIMD-vs-scalar, pinned by
+//! rust/tests/kernel_equivalence.rs. The public wrappers read the global
+//! core budget (`parallel::kernel_threads()`, derived by the engine from
+//! `threads / active_learners` and re-derived at membership epochs);
+//! `gemm_with_threads` pins an explicit count for tests and benches. Small
+//! products (under [`MIN_PAR_FLOPS`]) stay serial — the fork-join handoff
+//! would cost more than it buys.
 
 use std::sync::OnceLock;
+
+use crate::tensor::parallel;
 
 /// Microkernel tile height (rows of C per tile).
 pub const MR: usize = 6;
@@ -42,14 +60,36 @@ const KC: usize = 256;
 const MC: usize = 96;
 /// n-blocking: cap on the packed B panel width.
 const NC: usize = 1024;
+/// Products below this flop count (2·m·k·n) always run serially: the
+/// fork-join handoff (~µs) would dominate the kernel itself. Deterministic
+/// in the shape, so the serial/parallel decision is too.
+pub const MIN_PAR_FLOPS: u64 = 4_000_000;
 
-/// Pooled packing buffers for one executor. Grows to the high-water block
-/// size on first use, then every later call reuses the capacity — the
-/// steady-state GEMM is allocation-free (rust/tests/alloc_free.rs).
+/// One pool slot's packing buffers (an A micro-panel block and a B
+/// micro-panel chunk). Grows to the high-water block size on first use.
 #[derive(Debug, Default, Clone)]
-pub struct GemmScratch {
+struct PackBufs {
     a_pack: Vec<f32>,
     b_pack: Vec<f32>,
+}
+
+/// Pooled packing buffers for one executor, sharded by pool slot: shard 0
+/// serves the serial path, shard `w` is owned exclusively by slot `w` of a
+/// parallel invocation — no cross-worker contention, no locking. Shards
+/// grow to their high-water block size on first use, then every later call
+/// reuses the capacity — the steady-state GEMM is allocation-free
+/// (rust/tests/alloc_free.rs).
+#[derive(Debug, Default, Clone)]
+pub struct GemmScratch {
+    shards: Vec<PackBufs>,
+}
+
+impl GemmScratch {
+    fn ensure_shards(&mut self, n: usize) {
+        if self.shards.len() < n {
+            self.shards.resize_with(n, PackBufs::default);
+        }
+    }
 }
 
 /// True when the AVX2+FMA microkernel is in use: compiled for x86_64, the
@@ -128,10 +168,51 @@ pub fn matmul_a_bt(
 ///
 /// `force_scalar` pins the scalar microkernel regardless of CPU features —
 /// the cross-comparison entry point for tests and benches (the public
-/// wrappers pass `!simd_enabled()`).
+/// wrappers pass `!simd_enabled()`). The thread count comes from the
+/// global core budget; results are identical at every value.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_with(
     force_scalar: bool,
+    s: &mut GemmScratch,
+    a: &[f32],
+    rs_a: usize,
+    cs_a: usize,
+    b: &[f32],
+    rs_b: usize,
+    cs_b: usize,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+) {
+    gemm_with_threads(
+        force_scalar,
+        parallel::kernel_threads(),
+        s,
+        a,
+        rs_a,
+        cs_a,
+        b,
+        rs_b,
+        cs_b,
+        c,
+        m,
+        k,
+        n,
+        accumulate,
+    );
+}
+
+/// [`gemm_with`] at an explicit kernel-thread count — the entry point for
+/// the parallel-equivalence tests and the bench's 1-vs-N sweep. `threads`
+/// caps the pool slots used; the C-tile grid, per-unit KC order, and hence
+/// every FP operation per C element are independent of it, so the output
+/// is bit-identical for every value (including 1).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with_threads(
+    force_scalar: bool,
+    threads: usize,
     s: &mut GemmScratch,
     a: &[f32],
     rs_a: usize,
@@ -158,43 +239,174 @@ pub fn gemm_with(
     debug_assert!((m - 1) * rs_a + (k - 1) * cs_a < a.len(), "A view out of bounds");
     debug_assert!((k - 1) * rs_b + (n - 1) * cs_b < b.len(), "B view out of bounds");
     let simd = !force_scalar && simd_enabled();
+    let c_len = c.len();
+    let cp = SendPtr(c.as_mut_ptr());
 
-    for jc in (0..n).step_by(NC) {
-        let nc = NC.min(n - jc);
-        let nb_panels = nc.div_ceil(NR);
-        for pc in (0..k).step_by(KC) {
-            let kc = KC.min(k - pc);
-            ensure_len(&mut s.b_pack, nb_panels * kc * NR);
-            pack_b(&mut s.b_pack, b, rs_b, cs_b, jc, nc, pc, kc);
-            // The first k-panel honors `accumulate`; every later panel adds
-            // onto the partial products already in C.
-            let acc_into = accumulate || pc > 0;
-            for ic in (0..m).step_by(MC) {
-                let mc = MC.min(m - ic);
-                let ma_panels = mc.div_ceil(MR);
-                ensure_len(&mut s.a_pack, ma_panels * kc * MR);
-                pack_a(&mut s.a_pack, a, rs_a, cs_a, ic, mc, pc, kc);
-                for jp in 0..nb_panels {
-                    let col0 = jc + jp * NR;
-                    let nr_eff = NR.min(nc - jp * NR);
-                    let bp = &s.b_pack[jp * kc * NR..][..kc * NR];
-                    for ip in 0..ma_panels {
-                        let row0 = ic + ip * MR;
-                        let mr_eff = MR.min(mc - ip * MR);
-                        let ap = &s.a_pack[ip * kc * MR..][..kc * MR];
-                        micro_dispatch(
-                            simd,
-                            kc,
-                            ap,
-                            bp,
-                            c,
-                            row0 * n + col0,
-                            n,
-                            mr_eff,
-                            nr_eff,
-                            acc_into,
-                        );
-                    }
+    if let Some(grid) = Grid::plan(m, k, n, threads) {
+        s.ensure_shards(grid.nslots);
+        let shards = ShardsPtr(s.shards.as_mut_ptr());
+        parallel::parallel_for(grid.nslots, &|slot| {
+            // SAFETY: shard `slot` is owned exclusively by this slot for
+            // the duration of the call (ensure_shards sized the vec), and
+            // the units assigned to a slot write disjoint C tiles — the
+            // grid partitions C, and each unit is run by exactly one slot.
+            let bufs = unsafe { &mut *shards.0.add(slot) };
+            for u in grid.units_for(slot) {
+                let (i0, i1, j0, j1) = grid.unit(u);
+                run_span(
+                    simd, bufs, a, rs_a, cs_a, b, rs_b, cs_b, cp, c_len, n, i0, i1, k, j0,
+                    j1, accumulate,
+                );
+            }
+        });
+    } else {
+        // Serial: one slot walks the NC column chunks in order — the exact
+        // macro-loop order the pre-parallel kernel ran.
+        s.ensure_shards(1);
+        let bufs = &mut s.shards[0];
+        for jc in (0..n).step_by(NC) {
+            let j1 = n.min(jc + NC);
+            run_span(
+                simd, bufs, a, rs_a, cs_a, b, rs_b, cs_b, cp, c_len, n, 0, m, k, jc, j1,
+                accumulate,
+            );
+        }
+    }
+}
+
+/// Raw C base pointer, shared across pool slots. Sound because the unit
+/// grid hands every C tile to exactly one slot (static ownership).
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Raw pointer to the scratch-shard array; slot `w` touches only shard `w`.
+#[derive(Clone, Copy)]
+struct ShardsPtr(*mut PackBufs);
+unsafe impl Send for ShardsPtr {}
+unsafe impl Sync for ShardsPtr {}
+
+/// The static C-tile partition for one parallel GEMM: a `row_blocks x
+/// col_chunks` grid of units, row blocks MC-aligned and column chunks
+/// NR-panel-aligned (capped at NC wide, so packed-B shards stay bounded).
+/// Unit boundaries depend only on (m, n, threads) — never on data — and
+/// every unit runs its full KC loop privately, so any assignment of units
+/// to slots yields bit-identical C.
+struct Grid {
+    col_chunks: usize,
+    chunk_cols: usize,
+    units: usize,
+    nslots: usize,
+    m: usize,
+    n: usize,
+}
+
+impl Grid {
+    fn plan(m: usize, k: usize, n: usize, threads: usize) -> Option<Grid> {
+        if threads <= 1 {
+            return None;
+        }
+        if 2 * (m as u64) * (k as u64) * (n as u64) < MIN_PAR_FLOPS {
+            return None;
+        }
+        let row_blocks = m.div_ceil(MC);
+        let n_panels = n.div_ceil(NR);
+        // start from the chunking the serial kernel uses (NC-wide), then
+        // split columns finer until the grid has at least `threads` units
+        // (real model shapes are often a single NC x MC macro-tile)
+        let mut col_chunks = n_panels.div_ceil(NC / NR);
+        while row_blocks * col_chunks < threads && col_chunks < n_panels {
+            col_chunks += 1;
+        }
+        let chunk_panels = n_panels.div_ceil(col_chunks);
+        let col_chunks = n_panels.div_ceil(chunk_panels);
+        let units = row_blocks * col_chunks;
+        if units <= 1 {
+            return None;
+        }
+        Some(Grid {
+            col_chunks,
+            chunk_cols: chunk_panels * NR,
+            units,
+            nslots: threads.min(units),
+            m,
+            n,
+        })
+    }
+
+    /// Unit `u`'s C tile: rows `[i0, i1)`, cols `[j0, j1)`.
+    fn unit(&self, u: usize) -> (usize, usize, usize, usize) {
+        let (rb, cc) = (u / self.col_chunks, u % self.col_chunks);
+        let i0 = rb * MC;
+        let j0 = cc * self.chunk_cols;
+        (i0, self.m.min(i0 + MC), j0, self.n.min(j0 + self.chunk_cols))
+    }
+
+    /// Slot `w`'s contiguous unit range — the static ownership map.
+    fn units_for(&self, slot: usize) -> std::ops::Range<usize> {
+        let (q, r) = (self.units / self.nslots, self.units % self.nslots);
+        let start = slot * q + slot.min(r);
+        start..start + q + usize::from(slot < r)
+    }
+}
+
+/// One C span (rows `[i0, i1)` x cols `[j0, j1)`): the full blocked KC loop
+/// over that region, packing into this slot's private `bufs`. The serial
+/// kernel is exactly this with `[0, m) x [jc, jc+NC)` spans in ascending
+/// `jc` order; parallel units are `[MC block) x [NR-panel chunk)` spans.
+/// Per C element the FP operations and their order are identical either
+/// way, which is the whole bit-identity argument.
+#[allow(clippy::too_many_arguments)]
+fn run_span(
+    simd: bool,
+    bufs: &mut PackBufs,
+    a: &[f32],
+    rs_a: usize,
+    cs_a: usize,
+    b: &[f32],
+    rs_b: usize,
+    cs_b: usize,
+    c: SendPtr,
+    c_len: usize,
+    ldc: usize,
+    i0: usize,
+    i1: usize,
+    k: usize,
+    j0: usize,
+    j1: usize,
+    accumulate: bool,
+) {
+    let nc = j1 - j0;
+    let nb_panels = nc.div_ceil(NR);
+    for pc in (0..k).step_by(KC) {
+        let kc = KC.min(k - pc);
+        ensure_len(&mut bufs.b_pack, nb_panels * kc * NR);
+        pack_b(&mut bufs.b_pack, b, rs_b, cs_b, j0, nc, pc, kc);
+        // The first k-panel honors `accumulate`; every later panel adds
+        // onto the partial products already in C.
+        let acc_into = accumulate || pc > 0;
+        for ic in (i0..i1).step_by(MC) {
+            let mc = MC.min(i1 - ic);
+            let ma_panels = mc.div_ceil(MR);
+            ensure_len(&mut bufs.a_pack, ma_panels * kc * MR);
+            pack_a(&mut bufs.a_pack, a, rs_a, cs_a, ic, mc, pc, kc);
+            for jp in 0..nb_panels {
+                let col0 = j0 + jp * NR;
+                let nr_eff = NR.min(nc - jp * NR);
+                let bp = &bufs.b_pack[jp * kc * NR..][..kc * NR];
+                for ip in 0..ma_panels {
+                    let row0 = ic + ip * MR;
+                    let mr_eff = MR.min(mc - ip * MR);
+                    let ap = &bufs.a_pack[ip * kc * MR..][..kc * MR];
+                    debug_assert!(
+                        row0 * ldc + col0 + (mr_eff - 1) * ldc + nr_eff <= c_len,
+                        "C tile out of bounds"
+                    );
+                    // SAFETY: the tile [row0.., col0..] is in bounds (assert
+                    // above) and owned exclusively by this span.
+                    let tile = unsafe { c.0.add(row0 * ldc + col0) };
+                    micro_dispatch(simd, kc, ap, bp, tile, ldc, mr_eff, nr_eff, acc_into);
                 }
             }
         }
@@ -208,16 +420,38 @@ fn ensure_len(v: &mut Vec<f32>, n: usize) {
     }
 }
 
+/// Software-prefetch the source strip starting at `p` into L1. Value- and
+/// order-neutral by definition — a prefetch never changes architectural
+/// state — so the determinism contract is untouched. No-op off x86_64.
+#[inline(always)]
+fn prefetch(p: *const f32) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: prefetch has no architectural effect and may not fault; the
+    // callers pass in-bounds addresses anyway.
+    unsafe {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch::<_MM_HINT_T0>(p as *const i8);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = p;
+}
+
 /// Pack an `mc x kc` block of the effective A into MR-row micro-panels:
 /// panel `ip` holds k-major groups of MR consecutive row values, rows past
 /// `mc` zero-padded. Padding rows multiply into lanes whose results are
-/// never written back, so it is FP-neutral.
+/// never written back, so it is FP-neutral. While copying depth `p`, the
+/// next depth's source strip is prefetched — A's k-stride walk is the
+/// cache-hostile access of the two packs (`cs` is the matrix row length
+/// for the plain layout).
 fn pack_a(dst: &mut [f32], a: &[f32], rs: usize, cs: usize, ic: usize, mc: usize, pc: usize, kc: usize) {
     for ip in 0..mc.div_ceil(MR) {
         let base = ip * MR;
         let pbase = ip * kc * MR;
         for p in 0..kc {
             let col = (pc + p) * cs;
+            if p + 1 < kc {
+                prefetch(unsafe { a.as_ptr().add((ic + base) * rs + col + cs) });
+            }
             let d = pbase + p * MR;
             for r in 0..MR {
                 let row = base + r;
@@ -229,13 +463,17 @@ fn pack_a(dst: &mut [f32], a: &[f32], rs: usize, cs: usize, ic: usize, mc: usize
 
 /// Pack a `kc x nc` block of the effective B into NR-column micro-panels:
 /// panel `jp` holds k-major groups of NR consecutive column values, columns
-/// past `nc` zero-padded (FP-neutral, as with A).
+/// past `nc` zero-padded (FP-neutral, as with A). Prefetches the next
+/// depth's source strip while copying the current one.
 fn pack_b(dst: &mut [f32], b: &[f32], rs: usize, cs: usize, jc: usize, nc: usize, pc: usize, kc: usize) {
     for jp in 0..nc.div_ceil(NR) {
         let base = jp * NR;
         let pbase = jp * kc * NR;
         for p in 0..kc {
             let row = (pc + p) * rs;
+            if p + 1 < kc {
+                prefetch(unsafe { b.as_ptr().add(row + rs + (jc + base) * cs) });
+            }
             let d = pbase + p * NR;
             for j in 0..NR {
                 let col = base + j;
@@ -245,6 +483,11 @@ fn pack_b(dst: &mut [f32], b: &[f32], rs: usize, cs: usize, jc: usize, nc: usize
     }
 }
 
+/// Dispatch one micro-tile. `c` points at the tile's top-left element; the
+/// caller (the span runner) owns the `mr_eff x nr_eff` region exclusively
+/// and has bounds-checked it — raw pointers here because concurrent spans
+/// legally interleave within one C allocation (disjoint tiles), which a
+/// shared `&mut [f32]` could not express.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn micro_dispatch(
@@ -252,8 +495,7 @@ fn micro_dispatch(
     kc: usize,
     ap: &[f32],
     bp: &[f32],
-    c: &mut [f32],
-    coff: usize,
+    c: *mut f32,
     ldc: usize,
     mr_eff: usize,
     nr_eff: usize,
@@ -261,27 +503,17 @@ fn micro_dispatch(
 ) {
     #[cfg(target_arch = "x86_64")]
     if simd {
-        debug_assert!(coff + (mr_eff - 1) * ldc + nr_eff <= c.len());
         // SAFETY: `simd` implies AVX2+FMA were detected at runtime; `ap`/`bp`
         // hold kc full micro-panels; writes touch only the mr_eff x nr_eff
-        // valid tile region, in bounds per the assert above.
+        // valid tile region, in bounds and exclusively owned per the caller.
         unsafe {
-            mk_avx2(
-                kc,
-                ap.as_ptr(),
-                bp.as_ptr(),
-                c.as_mut_ptr().add(coff),
-                ldc,
-                mr_eff,
-                nr_eff,
-                acc_into,
-            );
+            mk_avx2(kc, ap.as_ptr(), bp.as_ptr(), c, ldc, mr_eff, nr_eff, acc_into);
         }
         return;
     }
     #[cfg(not(target_arch = "x86_64"))]
     let _ = simd;
-    mk_scalar(kc, ap, bp, c, coff, ldc, mr_eff, nr_eff, acc_into);
+    mk_scalar(kc, ap, bp, c, ldc, mr_eff, nr_eff, acc_into);
 }
 
 /// Scalar microkernel: the exact FP-operation mirror of [`mk_avx2`]. Each
@@ -294,8 +526,7 @@ fn mk_scalar(
     kc: usize,
     ap: &[f32],
     bp: &[f32],
-    c: &mut [f32],
-    coff: usize,
+    c: *mut f32,
     ldc: usize,
     mr_eff: usize,
     nr_eff: usize,
@@ -312,7 +543,10 @@ fn mk_scalar(
         }
     }
     for (r, accr) in acc.iter().enumerate().take(mr_eff) {
-        let row = &mut c[coff + r * ldc..coff + r * ldc + nr_eff];
+        // SAFETY: each tile row segment is in bounds and exclusively owned
+        // by this tile (see micro_dispatch) — rows of concurrent tiles
+        // never overlap, so the short-lived &mut slices are unique.
+        let row = unsafe { std::slice::from_raw_parts_mut(c.add(r * ldc), nr_eff) };
         if acc_into {
             for (dst, &v) in row.iter_mut().zip(accr.iter()) {
                 *dst += v;

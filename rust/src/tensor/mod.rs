@@ -11,6 +11,7 @@ pub mod embed;
 pub mod gemm;
 pub mod lstm;
 pub mod ops;
+pub mod parallel;
 
 /// Per-executor kernel scratch arena (DESIGN.md §Compute kernels): the GEMM
 /// packing pool plus every gather/cotangent buffer the conv and LSTM

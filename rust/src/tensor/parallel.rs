@@ -1,0 +1,312 @@
+//! Shared compute pool for within-learner kernel parallelism (DESIGN.md
+//! §Compute kernels).
+//!
+//! The engine already fans out *across* learners (`train/pool.rs`); this
+//! module is the tier below it — a process-wide pool of helper threads that
+//! one kernel invocation (a single GEMM) can fan its macro-tiles across.
+//! Two pieces live here:
+//!
+//! * **The core budget.** A single global `kernel_threads` knob, read by
+//!   the public `tensor::gemm` wrappers on every call. The engine derives
+//!   it as `max(1, total_thread_budget / active_learners)` (so intra-GEMM
+//!   parallelism composes with the across-learner pool instead of
+//!   oversubscribing) and re-derives it at every membership epoch when the
+//!   elastic fleet grows or shrinks. `--kernel-threads N > 0` pins it.
+//!   Because the parallel GEMM is bit-identical at every thread count (see
+//!   `tensor/gemm.rs`), a stale or concurrently-updated budget can only
+//!   ever change speed, never results.
+//!
+//! * **`parallel_for`.** Deterministic fork-join over `nslots` slots: the
+//!   caller runs slot 0 inline, slots `1..nslots` are queued to the shared
+//!   pool, and the caller helps drain the queue until its own slots have
+//!   all completed. Helper threads are spawned lazily (first use), parked
+//!   on a condvar when idle, and shared by every concurrently-running
+//!   learner — the pool never holds more than [`MAX_KERNEL_THREADS`]
+//!   helpers. Steady-state invocations are allocation-free: the task queue
+//!   reuses its capacity and the job descriptor lives on the caller's
+//!   stack (rust/tests/alloc_free.rs pins this through the GEMM path).
+//!
+//! Safety model: a job's closure reference is lifetime-erased so it can
+//! sit in the shared queue, which is sound because `parallel_for` does not
+//! return (or unwind) until every queued slot has finished — completion is
+//! counted under the pool mutex, so the caller's stack frame outlives all
+//! uses. Worker-side panics are caught, flagged on the job, and re-raised
+//! on the caller's thread.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Upper bound on `--kernel-threads` (and on pool helper threads): a wider
+/// request is a config typo, not a machine.
+pub const MAX_KERNEL_THREADS: usize = 64;
+
+/// The process-wide intra-kernel thread budget. 1 (the default) keeps every
+/// kernel serial; the engine raises it per [`derive_budget`] at run start
+/// and at membership epochs. Reads are racy on purpose — the budget is a
+/// performance hint, and results are bit-identical at any value.
+static KERNEL_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the global kernel-thread budget (clamped to `1..=MAX_KERNEL_THREADS`).
+pub fn set_kernel_threads(n: usize) {
+    KERNEL_THREADS.store(n.clamp(1, MAX_KERNEL_THREADS), Ordering::Relaxed);
+}
+
+/// The current kernel-thread budget (>= 1).
+pub fn kernel_threads() -> usize {
+    KERNEL_THREADS.load(Ordering::Relaxed).max(1)
+}
+
+/// The auto core-budget rule (`--kernel-threads 0`): split the run's total
+/// thread budget evenly over the live learners, never below 1. The engine
+/// calls this at run start with the configured fleet size and again at
+/// every membership epoch with the post-event size.
+pub fn derive_budget(total_threads: usize, active_learners: usize) -> usize {
+    (total_threads / active_learners.max(1)).max(1)
+}
+
+/// One queued slot of a fork-join job.
+struct Task {
+    job: *const Job,
+    slot: usize,
+}
+// SAFETY: the raw job pointer crosses into pool threads, but the pointee
+// (on the submitting caller's stack) outlives every task — `parallel_for`
+// blocks until `pending` hits zero, and the final decrement happens under
+// the pool mutex before the caller can observe completion.
+unsafe impl Send for Task {}
+
+/// A fork-join job: the slot closure plus completion bookkeeping. Lives on
+/// the caller's stack for the duration of one `parallel_for`.
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    /// Slots not yet finished; decremented only under the pool mutex.
+    pending: AtomicUsize,
+    /// Set when any slot's closure panicked on a pool thread.
+    panicked: AtomicBool,
+}
+
+struct PoolState {
+    queue: VecDeque<Task>,
+    workers: usize,
+}
+
+struct Pool {
+    inner: Mutex<PoolState>,
+    /// Workers park here when the queue is empty.
+    work: Condvar,
+    /// Callers park here while their job's slots are in flight elsewhere.
+    done: Condvar,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        inner: Mutex::new(PoolState {
+            queue: VecDeque::new(),
+            workers: 0,
+        }),
+        work: Condvar::new(),
+        done: Condvar::new(),
+    })
+}
+
+/// Run one task body, trapping panics so a worker thread never dies with a
+/// job's `pending` count stranded above zero.
+fn run_task(task: &Task) {
+    // SAFETY: see `Task` — the job outlives every queued task.
+    let job = unsafe { &*task.job };
+    if catch_unwind(AssertUnwindSafe(|| (job.f)(task.slot))).is_err() {
+        job.panicked.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Mark one task finished. Must be called with the pool mutex held: the
+/// lock orders the closure's memory effects before any caller that
+/// observes `pending == 0`, and keeps the job alive until after the final
+/// decrement (the caller frees it only once it reacquires the lock).
+fn finish_task(pool: &Pool, task: &Task) {
+    // SAFETY: the pool mutex is held, so the submitting caller cannot have
+    // observed completion yet — the job pointer is still live.
+    let job = unsafe { &*task.job };
+    if job.pending.fetch_sub(1, Ordering::Relaxed) == 1 {
+        pool.done.notify_all();
+    }
+}
+
+fn spawn_worker(pool: &'static Pool) {
+    std::thread::Builder::new()
+        .name("adacomp-kernel".into())
+        .spawn(move || {
+            let mut st = pool.inner.lock().unwrap();
+            loop {
+                if let Some(task) = st.queue.pop_front() {
+                    drop(st);
+                    run_task(&task);
+                    st = pool.inner.lock().unwrap();
+                    finish_task(pool, &task);
+                } else {
+                    st = pool.work.wait(st).unwrap();
+                }
+            }
+        })
+        .expect("spawn compute-pool worker");
+}
+
+/// Fork-join over `nslots` slots: `f(0)` runs on the calling thread,
+/// `f(1..nslots)` on the shared pool, and the call returns only when every
+/// slot has completed. The slot partition is the caller's responsibility —
+/// slots must touch disjoint output regions. Panics in any slot re-raise
+/// on the caller's thread after all slots have drained.
+pub fn parallel_for(nslots: usize, f: &(dyn Fn(usize) + Sync)) {
+    if nslots <= 1 {
+        f(0);
+        return;
+    }
+    let pool = pool();
+    // SAFETY: lifetime erasure only — the job (and thus this reference) is
+    // dropped before `parallel_for` returns, and every queued use finishes
+    // before that (counted under the pool mutex).
+    let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+        std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+    };
+    let job = Job {
+        f: f_static,
+        pending: AtomicUsize::new(nslots - 1),
+        panicked: AtomicBool::new(false),
+    };
+    {
+        let mut st = pool.inner.lock().unwrap();
+        for slot in 1..nslots {
+            st.queue.push_back(Task { job: &job, slot });
+        }
+        // lazy provisioning: enough helpers for what is queued right now,
+        // shared across every concurrent caller, hard-capped
+        let want = st.queue.len().min(MAX_KERNEL_THREADS);
+        while st.workers < want {
+            st.workers += 1;
+            spawn_worker(pool);
+        }
+    }
+    pool.work.notify_all();
+
+    // Slot 0 inline. A panic here must not unwind past live queued tasks,
+    // so trap it and re-raise after the join below.
+    let local = catch_unwind(AssertUnwindSafe(|| f(0)));
+
+    // Join: help drain the queue (our own slots or another caller's — both
+    // keep the pool making progress) until this job's slots are done.
+    let mut st = pool.inner.lock().unwrap();
+    while job.pending.load(Ordering::Relaxed) > 0 {
+        if let Some(task) = st.queue.pop_front() {
+            drop(st);
+            run_task(&task);
+            st = pool.inner.lock().unwrap();
+            finish_task(pool, &task);
+        } else {
+            st = pool.done.wait(st).unwrap();
+        }
+    }
+    drop(st);
+
+    if let Err(payload) = local {
+        resume_unwind(payload);
+    }
+    if job.panicked.load(Ordering::Relaxed) {
+        panic!("compute-pool slot panicked (see worker thread output)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn budget_clamps_and_derives() {
+        set_kernel_threads(0);
+        assert_eq!(kernel_threads(), 1);
+        set_kernel_threads(4);
+        assert_eq!(kernel_threads(), 4);
+        set_kernel_threads(10_000);
+        assert_eq!(kernel_threads(), MAX_KERNEL_THREADS);
+        set_kernel_threads(1); // restore the serial default for other tests
+
+        assert_eq!(derive_budget(8, 2), 4);
+        assert_eq!(derive_budget(8, 3), 2);
+        assert_eq!(derive_budget(2, 8), 1);
+        assert_eq!(derive_budget(0, 0), 1);
+    }
+
+    #[test]
+    fn parallel_for_runs_every_slot_exactly_once() {
+        for nslots in [1usize, 2, 3, 8, 17] {
+            let hits: Vec<AtomicU32> = (0..nslots).map(|_| AtomicU32::new(0)).collect();
+            parallel_for(nslots, &|slot| {
+                hits[slot].fetch_add(1, Ordering::Relaxed);
+            });
+            for (s, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "nslots={nslots} slot={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_for_disjoint_writes_land() {
+        // each slot fills its own stripe of a shared buffer through a raw
+        // pointer — the gemm tile-ownership pattern in miniature
+        struct SendPtr(*mut u64);
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        let (nslots, per) = (6usize, 1000usize);
+        let mut out = vec![0u64; nslots * per];
+        let p = SendPtr(out.as_mut_ptr());
+        parallel_for(nslots, &|slot| {
+            for i in 0..per {
+                // SAFETY: stripes are disjoint per slot
+                unsafe { *p.0.add(slot * per + i) = (slot * per + i) as u64 };
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn nested_callers_share_the_pool() {
+        // concurrent parallel_for calls from independent threads (the
+        // multi-learner shape) must all complete without deadlock
+        let total = AtomicU32::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        parallel_for(4, &|_slot| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 4);
+    }
+
+    #[test]
+    fn slot_panic_surfaces_on_caller() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            parallel_for(4, &|slot| {
+                if slot == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "pool-slot panic must re-raise on the caller");
+        // and the pool must still be serviceable afterwards
+        let n = AtomicU32::new(0);
+        parallel_for(4, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 4);
+    }
+}

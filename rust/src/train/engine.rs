@@ -159,6 +159,40 @@ pub fn validate_window(staleness: usize, jitter: f64) -> Result<()> {
     LinkModel::validate_jitter(jitter)
 }
 
+/// Fail fast on an out-of-range `--kernel-threads`, with the valid range in
+/// the error — same contract as [`validate_window`]: config JSON, the
+/// CLI/harness, and the engine itself all validate through here.
+pub fn validate_kernel_threads(kernel_threads: usize) -> Result<()> {
+    if kernel_threads > crate::tensor::parallel::MAX_KERNEL_THREADS {
+        bail!(
+            "kernel-threads {kernel_threads} out of range (valid: 0 <= N <= {}; \
+             0 = auto budget threads / active learners)",
+            crate::tensor::parallel::MAX_KERNEL_THREADS
+        );
+    }
+    Ok(())
+}
+
+/// The intra-GEMM core budget for a fleet of `active_learners` live
+/// learners: `cfg.kernel_threads` when pinned (> 0), else the auto rule
+/// `max(1, total_thread_budget / active_learners)` — the run's total thread
+/// budget (`cfg.threads`, or every hardware thread when 0) split evenly
+/// over the live learners so intra-kernel parallelism never oversubscribes
+/// the across-learner pool. Re-derived at every membership epoch; because
+/// the parallel GEMM is bit-identical at any thread count, the budget only
+/// ever changes speed.
+pub fn kernel_thread_budget(cfg: &TrainConfig, active_learners: usize) -> usize {
+    if cfg.kernel_threads > 0 {
+        return cfg.kernel_threads;
+    }
+    let total = if cfg.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        cfg.threads
+    };
+    crate::tensor::parallel::derive_budget(total, active_learners)
+}
+
 /// Everything that defines one training run.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -228,6 +262,12 @@ pub struct TrainConfig {
     /// membership schedule before the run starts, so an MTBF run is exactly
     /// as reproducible as a scripted one.
     pub mtbf: u64,
+    /// Intra-GEMM kernel threads per learner (`--kernel-threads`): 0 = auto
+    /// budget `max(1, threads / active_learners)`, re-derived at membership
+    /// epochs as the elastic fleet grows or shrinks; N > 0 pins the budget.
+    /// Results are bit-identical at every value (see `tensor::gemm`) — the
+    /// knob only moves speed.
+    pub kernel_threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -256,6 +296,7 @@ impl Default for TrainConfig {
             staleness: 0,
             churn: String::new(),
             mtbf: 0,
+            kernel_threads: 0,
         }
     }
 }
@@ -596,6 +637,7 @@ impl<'a> Engine<'a> {
         // fails with the valid list, not a mid-run panic.
         let mode = ExchangeMode::parse(&cfg.exchange)?;
         validate_window(cfg.staleness, cfg.link.jitter)?;
+        validate_kernel_threads(cfg.kernel_threads)?;
         super::churn::parse(&cfg.churn)?;
         let optimizer = optim::build(&cfg.optimizer, init_params.len(), cfg.momentum)
             .ok_or_else(|| {
@@ -607,6 +649,9 @@ impl<'a> Engine<'a> {
         let topo = topology::build(&cfg.topology, cfg.n_learners)?;
         let threads = self.resolve_threads(cfg);
         let parallel = threads > 1;
+        // Core budget for intra-GEMM parallelism: set once for the starting
+        // fleet, re-derived inside run_loop at every membership epoch.
+        crate::tensor::parallel::set_kernel_threads(kernel_thread_budget(cfg, cfg.n_learners));
         let window = cfg.staleness + 1;
 
         // The run's reduce plan: bucket coalescing + port partition, built
@@ -1139,6 +1184,11 @@ fn run_loop(
                     topo = new_topo;
                     n = change.n_after;
                     inv_learners = 1.0f32 / n as f32;
+                    // Re-derive the intra-GEMM core budget for the new fleet
+                    // size: helpers freed by a shrink (or claimed by a
+                    // growth) rebalance across the survivors. Budget changes
+                    // never change results (bit-identical at any count).
+                    crate::tensor::parallel::set_kernel_threads(kernel_thread_budget(cfg, n));
                     change.drain_stall_s = drain_stall;
                     let resume = sync_s + change.rebuild_s;
                     {

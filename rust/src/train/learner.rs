@@ -12,6 +12,13 @@
 //! results to the sequential loop (the only cross-learner operations —
 //! loss accounting and the packet reduce — happen on the engine thread in
 //! learner-id order; see DESIGN.md §Threading, §Topologies).
+//!
+//! Below the learner, each GEMM may additionally fan its macro-tiles over
+//! the shared compute pool (`tensor::parallel`): concurrent learners share
+//! one pool of helper threads under the engine-derived core budget
+//! (`threads / active_learners`), and because the parallel kernel is
+//! bit-identical at every thread count, this never perturbs the
+//! determinism contract above.
 
 use std::sync::{Mutex, MutexGuard};
 

@@ -7,4 +7,7 @@ pub mod eval;
 pub mod learner;
 pub mod pool;
 
-pub use engine::{validate_window, Engine, ExchangeMode, TrainConfig, MAX_STALENESS};
+pub use engine::{
+    kernel_thread_budget, validate_kernel_threads, validate_window, Engine, ExchangeMode,
+    TrainConfig, MAX_STALENESS,
+};

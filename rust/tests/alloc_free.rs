@@ -395,6 +395,13 @@ fn steady_state_exchange_and_pack_are_allocation_free() {
     // arena, so after warmup a whole training step allocates nothing.
     // mnist_cnn (two im2col conv stages) and char_lstm (recurrent graph,
     // 50 timesteps) carry the most scratch of the native models.
+    //
+    // Run with a kernel-thread budget of 2 so the parallel GEMM path is the
+    // one measured: the conv im2col GEMMs cross MIN_PAR_FLOPS and fan out
+    // over the compute pool. Pool helpers spawn and the task queue +
+    // scratch shards reach capacity during warmup; steady state must then
+    // stay at zero even with tiles crossing threads.
+    adacomp::tensor::parallel::set_kernel_threads(2);
     for model in ["mnist_cnn", "char_lstm"] {
         let spec = adacomp::harness::native_spec(model, 11, 8).unwrap();
         let mut exec = spec.factory.build_worker().unwrap();

@@ -422,6 +422,54 @@ fn window_knobs_validated_by_engine() {
         let err = engine.run(&cfg, &params).unwrap_err().to_string();
         assert!(err.contains(needle), "K={staleness} j={jitter}: {err}");
     }
+    // the core-budget knob validates through the same backstop
+    let mut cfg = base_cfg(Kind::None, 1);
+    cfg.epochs = 1;
+    cfg.steps_per_epoch = 1;
+    cfg.kernel_threads = 99;
+    let mut engine = Engine::new(&exe, &ds, &layout);
+    let err = engine.run(&cfg, &params).unwrap_err().to_string();
+    assert!(err.contains("0 <= N <= 64"), "{err}");
+}
+
+#[test]
+fn kernel_threads_bit_identical_across_budgets_and_modes() {
+    // acceptance: engine results (losses, test errors, wire bytes) are
+    // bit-identical across kernel_threads in {1, 2, 4} and across exchange
+    // modes. The model is sized so fc1's forward GEMM (64x128 @ 128x512)
+    // crosses gemm::MIN_PAR_FLOPS — the parallel tile grid genuinely runs.
+    let ds = GaussianMixture::new(3, 128, 4, 400, 100, 0.6);
+    let exe = NativeMlp::new(&[128, 512, 4], 50);
+    let params = exe.init_params(11);
+    let layout = exe.layout().clone();
+    let run = |kernel_threads: usize, exchange: &str| {
+        let mut cfg = base_cfg(Kind::AdaComp, 2);
+        cfg.epochs = 2;
+        cfg.steps_per_epoch = 4;
+        cfg.batch_per_learner = 64;
+        cfg.threads = 2;
+        cfg.exchange = exchange.into();
+        cfg.kernel_threads = kernel_threads;
+        let mut engine = Engine::new(&exe, &ds, &layout);
+        engine.run(&cfg, &params).expect("run")
+    };
+    let reference = run(1, "streamed");
+    assert!(!reference.diverged);
+    for exchange in ["streamed", "barrier"] {
+        for kt in [1usize, 2, 4] {
+            let r = run(kt, exchange);
+            assert_epochs_bitwise(
+                &reference,
+                &r,
+                &format!("kernel_threads={kt} exchange={exchange}"),
+            );
+            assert_eq!(r.fabric.bytes_up, reference.fabric.bytes_up, "{exchange}/{kt}");
+            assert_eq!(
+                r.fabric.bytes_down, reference.fabric.bytes_down,
+                "{exchange}/{kt}"
+            );
+        }
+    }
 }
 
 #[test]

@@ -16,6 +16,10 @@
 //!   K3  adacomp select dispatch == scalar, bitwise, over random residue
 //!       states (indices, values, and updated residues)
 //!   K4  bin_absmax dispatch == scalar == plain fold, bitwise
+//!   K5  parallel gemm == single-threaded gemm, bitwise, over the same
+//!       layout x accumulate grid at kernel_threads in {1, 2, 4} — both
+//!       microkernels — including shapes big enough to cross the
+//!       MIN_PAR_FLOPS gate and actually fan out over the compute pool
 
 use adacomp::compress::select;
 use adacomp::tensor::gemm::{self, GemmScratch};
@@ -123,6 +127,55 @@ fn oracle_check(
                 (g - acc).abs() <= tol,
                 "oracle {m}x{k}x{n}[{i},{j}]: got {g}, want {acc}"
             );
+        }
+    }
+}
+
+#[test]
+fn k5_parallel_gemm_bitwise_equals_single_thread_all_layouts() {
+    let mut rng = Pcg32::seeded(47);
+    // the tile-edge shapes from `shapes()` (all below the MIN_PAR_FLOPS
+    // gate — they pin the gate itself) plus shapes that genuinely cross it:
+    // multi-MC x multi-NR-panel grids with ragged edges
+    let mut all = shapes(&mut rng);
+    all.extend([(192, 512, 128), (193, 513, 129), (96, 700, 64), (100, 640, 33)]);
+    for (m, k, n) in all {
+        let a = rng.normal_vec(m * k, 1.0); // row-major [m,k]
+        let at = transpose(&a, m, k); // [k,m] — Aᵀ storage
+        let b = rng.normal_vec(k * n, 1.0); // row-major [k,n]
+        let bt = transpose(&b, k, n); // [n,k] — Bᵀ storage
+        let c0 = rng.normal_vec(m * n, 1.0);
+        let mut s = GemmScratch::default();
+
+        for force_scalar in [false, true] {
+            for accumulate in [false, true] {
+                // layouts: (rs_a, cs_a, rs_b, cs_b) for A@B, Aᵀ@B, A@Bᵀ
+                for (tag, av, bv, strides) in [
+                    ("A@B", &a, &b, (k, 1, n, 1)),
+                    ("At@B", &at, &b, (1, m, n, 1)),
+                    ("A@Bt", &a, &bt, (k, 1, 1usize, k)),
+                ] {
+                    let (rs_a, cs_a, rs_b, cs_b) = strides;
+                    let mut c1 = c0.clone();
+                    gemm::gemm_with_threads(
+                        force_scalar, 1, &mut s, av, rs_a, cs_a, bv, rs_b, cs_b, &mut c1,
+                        m, k, n, accumulate,
+                    );
+                    for threads in [2usize, 4] {
+                        let mut ct = c0.clone();
+                        gemm::gemm_with_threads(
+                            force_scalar, threads, &mut s, av, rs_a, cs_a, bv, rs_b, cs_b,
+                            &mut ct, m, k, n, accumulate,
+                        );
+                        assert_eq!(
+                            bits(&c1),
+                            bits(&ct),
+                            "{tag} {m}x{k}x{n} acc={accumulate} \
+                             scalar={force_scalar} threads={threads}"
+                        );
+                    }
+                }
+            }
         }
     }
 }
