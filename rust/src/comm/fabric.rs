@@ -179,6 +179,12 @@ pub struct FabricStats {
     pub handover_l1: f64,
     /// Membership timeline: one entry per applied churn event.
     pub membership: Vec<MembershipChange>,
+    /// Control-plane timeline: one entry per knob re-tune applied by the
+    /// adaptive controller (`--controller on`) at an epoch boundary.
+    pub control: Vec<ControlDecision>,
+    /// Total controller re-tunes (== `control.len()`, kept as a scalar so
+    /// summaries don't have to walk the timeline).
+    pub control_retunes: u64,
 }
 
 /// One applied membership event (fail / join / leave) and its recovery
@@ -206,6 +212,35 @@ pub struct MembershipChange {
     pub lost_l1: f64,
     /// Residual L1 mass handed over by this event (leave only; 0 otherwise).
     pub handover_l1: f64,
+    /// Bucket-coalescing threshold (dense wire bytes) the post-event plan
+    /// was rebuilt with: the *live* value — re-derived from the link model
+    /// and the post-event topology's ports when `--bucket-bytes 0` (auto),
+    /// or the controller-tuned value when the controller owns the knob.
+    pub threshold_bytes: usize,
+    /// Bucket count of the rebuilt plan (observable proof the rebuild used
+    /// the recomputed threshold, not the run-start one).
+    pub n_buckets: usize,
+}
+
+/// One knob re-tune applied by the adaptive controller at an epoch
+/// boundary, recorded by [`Fabric::record_decision`]. Decisions are a pure
+/// function of the epoch's deterministic measurements (see
+/// `train::control`), so this timeline is bit-identical across thread
+/// counts and exchange modes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlDecision {
+    /// Epoch whose measurements produced this decision (the new value takes
+    /// effect from epoch + 1).
+    pub epoch: usize,
+    /// Knob name: `"staleness"`, `"bucket_bytes"`, or `"lt:<layer>"`.
+    pub knob: String,
+    /// Value before the re-tune.
+    pub old: f64,
+    /// Value after the re-tune.
+    pub new: f64,
+    /// Human-readable signal that tripped the rule (threshold crossings
+    /// included, for the decision timeline in RunRecord).
+    pub signal: String,
 }
 
 impl FabricStats {
@@ -354,6 +389,13 @@ impl Fabric {
         self.stats.membership.push(change);
     }
 
+    /// Record one applied controller re-tune: appends it to the decision
+    /// timeline and bumps the run total.
+    pub fn record_decision(&mut self, decision: ControlDecision) {
+        self.stats.control_retunes += 1;
+        self.stats.control.push(decision);
+    }
+
     pub fn reset(&mut self) {
         self.stats = FabricStats::default();
     }
@@ -436,6 +478,8 @@ mod tests {
             drain_stall_s: 2e-3,
             lost_l1: 5.0,
             handover_l1: 0.0,
+            threshold_bytes: 31250,
+            n_buckets: 2,
         });
         f.record_membership(MembershipChange {
             step: 40,
@@ -448,6 +492,8 @@ mod tests {
             drain_stall_s: 0.0,
             lost_l1: 0.0,
             handover_l1: 3.5,
+            threshold_bytes: 62500,
+            n_buckets: 1,
         });
         assert_eq!(f.stats.membership.len(), 2);
         assert!((f.stats.rebuild_s - 2e-3).abs() < 1e-12);
@@ -456,8 +502,40 @@ mod tests {
         assert!((f.stats.handover_l1 - 3.5).abs() < 1e-12);
         assert_eq!(f.stats.membership[0].kind, "fail");
         assert_eq!(f.stats.membership[1].n_after, 2);
+        // the rebuilt plan's live threshold + bucket count ride along
+        assert_eq!(f.stats.membership[0].threshold_bytes, 31250);
+        assert_eq!(f.stats.membership[1].threshold_bytes, 62500);
+        assert_eq!(f.stats.membership[1].n_buckets, 1);
         f.reset();
         assert!(f.stats.membership.is_empty());
+    }
+
+    #[test]
+    fn control_decisions_accumulate_timeline_and_totals() {
+        let mut f = Fabric::new(LinkModel::default());
+        assert_eq!(f.stats.control_retunes, 0);
+        f.record_decision(ControlDecision {
+            epoch: 0,
+            knob: "staleness".into(),
+            old: 0.0,
+            new: 1.0,
+            signal: "straggler_excess=0.21>0.10".into(),
+        });
+        f.record_decision(ControlDecision {
+            epoch: 1,
+            knob: "lt:3".into(),
+            old: 50.0,
+            new: 100.0,
+            signal: "comm_share=0.40 vs elems_share=0.10".into(),
+        });
+        assert_eq!(f.stats.control.len(), 2);
+        assert_eq!(f.stats.control_retunes, 2);
+        assert_eq!(f.stats.control[0].knob, "staleness");
+        assert_eq!(f.stats.control[1].knob, "lt:3");
+        assert_eq!(f.stats.control[1].new, 100.0);
+        f.reset();
+        assert!(f.stats.control.is_empty());
+        assert_eq!(f.stats.control_retunes, 0);
     }
 
     #[test]

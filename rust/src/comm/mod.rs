@@ -5,6 +5,6 @@ pub mod fabric;
 pub mod plan;
 pub mod topology;
 
-pub use fabric::{Fabric, FabricStats, LinkModel, MembershipChange};
+pub use fabric::{ControlDecision, Fabric, FabricStats, LinkModel, MembershipChange};
 pub use plan::{Bucket, ReducePlan};
 pub use topology::{HierPs, ParamServer, Reduced, Ring, RoundCost, RoundSched, Topology};

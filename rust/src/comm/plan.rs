@@ -1,7 +1,10 @@
 //! The reduce plan: how a model's layers become wire messages.
 //!
-//! Built **once per run** from the model [`Layout`], the plan answers two
-//! questions the exchange path used to hard-code:
+//! Built from the model [`Layout`] at run start — and **rebuilt** under the
+//! fleet write lock whenever the fleet or the knobs change (membership
+//! epochs re-derive the auto threshold for the post-event topology; the
+//! adaptive controller re-tunes `threshold_bytes` at epoch boundaries) —
+//! the plan answers two questions the exchange path used to hard-code:
 //!
 //! 1. **Bucketing** — which layers share a wire message. PR 3's per-layer
 //!    timeline showed tiny layers (biases) paying one full per-message
@@ -118,6 +121,18 @@ impl ReducePlan {
     /// wins; above it streaming granularity matters more than latency.
     pub fn auto_threshold(link: &LinkModel) -> usize {
         ((link.latency_s * link.bandwidth_bps) as usize).max(1)
+    }
+
+    /// Ports-aware auto threshold: α·β scaled down by the topology's port
+    /// count. A sharded fabric (`ps:<S>`) only reaches its concurrency when
+    /// the plan yields at least S buckets, so the more ports the fleet
+    /// exposes, the finer the auto plan should slice. Single-port
+    /// topologies (`ring`, `ps`, `hier:<G>`) get exactly
+    /// [`auto_threshold`](Self::auto_threshold). This is what the engine
+    /// derives `--bucket-bytes 0` from — including at membership epochs,
+    /// where a topology fallback can change the port count mid-run.
+    pub fn auto_threshold_for(link: &LinkModel, ports: usize) -> usize {
+        (Self::auto_threshold(link) / ports.max(1)).max(1)
     }
 
     /// Build the plan: walk layers in reverse order, coalescing consecutive
@@ -338,6 +353,24 @@ mod tests {
             ..LinkModel::default()
         };
         assert_eq!(ReducePlan::auto_threshold(&tiny), 1);
+    }
+
+    #[test]
+    fn ports_aware_auto_threshold_scales_down_with_ports() {
+        let link = LinkModel::default();
+        // single-port topologies: unchanged α·β
+        assert_eq!(ReducePlan::auto_threshold_for(&link, 1), 31250);
+        // S ports slice S× finer (so the auto plan can feed all ports)
+        assert_eq!(ReducePlan::auto_threshold_for(&link, 2), 15625);
+        assert_eq!(ReducePlan::auto_threshold_for(&link, 4), 7812);
+        // degenerate inputs clamp instead of dividing by zero / hitting 0
+        assert_eq!(ReducePlan::auto_threshold_for(&link, 0), 31250);
+        let tiny = LinkModel {
+            latency_s: 0.0,
+            bandwidth_bps: 1e9,
+            ..LinkModel::default()
+        };
+        assert_eq!(ReducePlan::auto_threshold_for(&tiny, 8), 1);
     }
 
     #[test]

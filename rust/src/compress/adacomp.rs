@@ -126,6 +126,10 @@ impl Compressor for AdaComp {
         self.residues.reset();
     }
 
+    fn set_layer_lt(&mut self, layer: usize, lt: usize) {
+        self.lts[layer] = lt.max(1);
+    }
+
     fn recycle(&mut self, spent: Packet) {
         self.pool.put(spent.idx, spent.val);
     }
@@ -282,5 +286,29 @@ mod tests {
         let c = AdaComp::new(&Config::default(), &layout);
         assert_eq!(c.lt(0), 50);
         assert_eq!(c.lt(1), 500);
+    }
+
+    #[test]
+    fn set_layer_lt_retunes_in_place_and_keeps_residue() {
+        // the controller's apply path: a live L_T change redefines the bin
+        // structure for later steps without touching the residue store
+        let layout = Layout::from_specs(&[("w", &[100], LayerKind::Conv)]);
+        let cfg = Config {
+            lt_override: 10,
+            ..Config::with_kind(Kind::AdaComp)
+        };
+        let mut c = AdaComp::new(&cfg, &layout);
+        let mut rng = Pcg32::seeded(9);
+        let dw = rng.normal_vec(100, 1.0);
+        c.pack_layer(0, &dw);
+        let residue_before = c.residue(0).to_vec();
+        c.set_layer_lt(0, 50);
+        assert_eq!(c.lt(0), 50);
+        assert_eq!(c.residue(0), residue_before.as_slice());
+        // a 0 clamps to 1 (per-element bins), never panics downstream
+        c.set_layer_lt(0, 0);
+        assert_eq!(c.lt(0), 1);
+        let p = c.pack_layer(0, &dw);
+        assert!(p.sent() > 0);
     }
 }

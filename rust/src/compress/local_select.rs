@@ -99,6 +99,10 @@ impl Compressor for LocalSelect {
         self.residues.reset();
     }
 
+    fn set_layer_lt(&mut self, layer: usize, lt: usize) {
+        self.lts[layer] = lt.max(1);
+    }
+
     fn recycle(&mut self, spent: Packet) {
         self.pool.put(spent.idx, spent.val);
     }

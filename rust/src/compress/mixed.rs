@@ -65,6 +65,14 @@ impl Compressor for Mixed {
         self.other.reset();
     }
 
+    fn set_layer_lt(&mut self, layer: usize, lt: usize) {
+        if self.is_conv[layer] {
+            self.conv.set_layer_lt(layer, lt);
+        } else {
+            self.other.set_layer_lt(layer, lt);
+        }
+    }
+
     fn recycle(&mut self, spent: Packet) {
         if self.is_conv[spent.layer] {
             self.conv.recycle(spent);

@@ -178,6 +178,12 @@ pub trait Compressor: Send {
     /// Drop all state (new training run).
     fn reset(&mut self);
 
+    /// Re-tune one layer's bin size L_T in place (the adaptive controller's
+    /// per-layer apply path, at a drained epoch boundary). Residues are
+    /// kept: error feedback is robust to a changed selection granularity.
+    /// Default no-op — schemes without an L_T notion ignore it.
+    fn set_layer_lt(&mut self, _layer: usize, _lt: usize) {}
+
     /// Hand a spent packet's `idx`/`val` vectors back for reuse by later
     /// `pack_layer` calls (zero-alloc steady state). Callers that drop
     /// packets instead of recycling them lose nothing but the capacity.
@@ -233,6 +239,13 @@ impl Kind {
             Kind::None => "none",
         }
     }
+
+    /// Whether the scheme has a per-layer bin size L_T the adaptive
+    /// controller can re-tune ([`Compressor::set_layer_lt`] is a no-op for
+    /// every other scheme).
+    pub fn has_lt(&self) -> bool {
+        matches!(self, Kind::AdaComp | Kind::LocalSelect)
+    }
 }
 
 /// Per-scheme knobs; unused fields are ignored by other schemes.
@@ -241,8 +254,13 @@ pub struct Config {
     pub kind: Kind,
     /// AdaComp / LS: bin length for conv layers (paper default 50).
     pub lt_conv: usize,
-    /// AdaComp / LS: bin length for fc/lstm/embed layers (paper default 500).
+    /// AdaComp / LS: bin length for fc layers (paper default 500); also the
+    /// lstm/embed default when their own overrides are 0.
     pub lt_fc: usize,
+    /// AdaComp / LS: bin length for lstm layers; 0 = inherit `lt_fc`.
+    pub lt_lstm: usize,
+    /// AdaComp / LS: bin length for embedding layers; 0 = inherit `lt_fc`.
+    pub lt_embed: usize,
     /// AdaComp: override L_T for *all* layers (Fig 4 sweeps this); 0 = per-kind.
     pub lt_override: usize,
     /// AdaComp: soft-threshold scale factor (paper studied 1.5-3.0, chose 2).
@@ -266,6 +284,8 @@ impl Default for Config {
             kind: Kind::AdaComp,
             lt_conv: 50,
             lt_fc: 500,
+            lt_lstm: 0,
+            lt_embed: 0,
             lt_override: 0,
             scale_factor: 2.0,
             topk_fraction: 0.003,
@@ -295,12 +315,67 @@ impl Config {
         if self.lt_override > 0 {
             return self.lt_override;
         }
+        let inherit = |own: usize| if own > 0 { own } else { self.lt_fc };
         match kind {
             crate::models::LayerKind::Conv => self.lt_conv,
-            crate::models::LayerKind::Fc
-            | crate::models::LayerKind::Lstm
-            | crate::models::LayerKind::Embed => self.lt_fc,
+            crate::models::LayerKind::Fc => self.lt_fc,
+            crate::models::LayerKind::Lstm => inherit(self.lt_lstm),
+            crate::models::LayerKind::Embed => inherit(self.lt_embed),
         }
+    }
+
+    /// Parse an `--lt` / config `"lt"` spec into this config, failing fast
+    /// with the valid forms on anything malformed (the `--churn` /
+    /// `--topology` error-message precedent). Two forms:
+    ///
+    /// * a plain integer `L` — one L_T for every layer (`lt_override`),
+    /// * a per-kind list `conv=64,fc=500[,lstm=N][,embed=N]` — each entry
+    ///   sets that layer kind's bin size; omitted lstm/embed inherit fc.
+    ///
+    /// Values must be in `1..=100_000` (the controller's absolute band).
+    pub fn parse_lt_spec(&mut self, spec: &str) -> anyhow::Result<()> {
+        const VALID: &str =
+            "valid: an integer L (all layers), or a per-kind list conv=64,fc=500[,lstm=N][,embed=N]";
+        const LT_RANGE: std::ops::RangeInclusive<usize> = 1..=100_000;
+        let spec = spec.trim();
+        if spec.is_empty() {
+            anyhow::bail!("empty --lt spec ({VALID})");
+        }
+        let parse_val = |kind: &str, v: &str| -> anyhow::Result<usize> {
+            let lt: usize = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad L_T '{v}' for '{kind}' in --lt spec ({VALID})"))?;
+            if !LT_RANGE.contains(&lt) {
+                anyhow::bail!(
+                    "L_T {lt} for '{kind}' out of range (valid: {}..={})",
+                    LT_RANGE.start(),
+                    LT_RANGE.end()
+                );
+            }
+            Ok(lt)
+        };
+        if !spec.contains('=') {
+            self.lt_override = parse_val("all layers", spec)?;
+            return Ok(());
+        }
+        for entry in spec.split(',') {
+            let (kind, v) = entry.trim().split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("bad --lt entry '{entry}' ({VALID})")
+            })?;
+            let lt = parse_val(kind, v)?;
+            match kind {
+                "conv" => self.lt_conv = lt,
+                "fc" => self.lt_fc = lt,
+                "lstm" => self.lt_lstm = lt,
+                "embed" => self.lt_embed = lt,
+                other => anyhow::bail!(
+                    "unknown layer kind '{other}' in --lt spec (valid kinds: conv, fc, lstm, embed)"
+                ),
+            }
+        }
+        // a per-kind list overrides any previous all-layer override
+        self.lt_override = 0;
+        Ok(())
     }
 }
 
@@ -354,6 +429,51 @@ mod tests {
             assert_eq!(Kind::parse(k.name()), Some(k));
         }
         assert_eq!(Kind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn lt_spec_parses_both_forms() {
+        use crate::models::LayerKind;
+        // plain integer: one override for every layer
+        let mut cfg = Config::default();
+        cfg.parse_lt_spec("64").unwrap();
+        assert_eq!(cfg.lt_override, 64);
+        for k in [LayerKind::Conv, LayerKind::Fc, LayerKind::Lstm, LayerKind::Embed] {
+            assert_eq!(cfg.lt_for(k), 64);
+        }
+        // per-kind list: sets each kind, clears the override
+        cfg.parse_lt_spec("conv=32, fc=400,lstm=250").unwrap();
+        assert_eq!(cfg.lt_override, 0);
+        assert_eq!(cfg.lt_for(LayerKind::Conv), 32);
+        assert_eq!(cfg.lt_for(LayerKind::Fc), 400);
+        assert_eq!(cfg.lt_for(LayerKind::Lstm), 250);
+        // omitted embed inherits fc
+        assert_eq!(cfg.lt_for(LayerKind::Embed), 400);
+        cfg.parse_lt_spec("embed=120").unwrap();
+        assert_eq!(cfg.lt_for(LayerKind::Embed), 120);
+    }
+
+    #[test]
+    fn lt_spec_fails_fast_with_valid_forms() {
+        let mut cfg = Config::default();
+        for bad in ["", "conv", "conv=", "conv=abc", "12abc", "=64"] {
+            let err = cfg.parse_lt_spec(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("valid:") || err.contains("valid kinds:"),
+                "{bad}: {err}"
+            );
+        }
+        // unknown kinds name the valid ones
+        let err = cfg.parse_lt_spec("pool=64").unwrap_err().to_string();
+        assert!(err.contains("valid kinds: conv, fc, lstm, embed"), "{err}");
+        // out-of-range values name the range
+        for bad in ["0", "conv=0", "fc=100001"] {
+            let err = cfg.parse_lt_spec(bad).unwrap_err().to_string();
+            assert!(err.contains("1..=100000"), "{bad}: {err}");
+        }
+        // a failed parse leaves the config untouched where possible
+        assert_eq!(cfg.lt_conv, 50);
+        assert_eq!(cfg.lt_fc, 500);
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub fn from_json(v: &Json) -> Result<TrainConfig> {
         "steps_per_epoch", "lr", "lr_schedule", "optimizer", "momentum",
         "topology", "seed", "clip_norm", "divergence_loss", "compression",
         "link", "threads", "exchange", "bucket_bytes", "staleness", "jitter",
-        "churn", "mtbf", "kernel_threads",
+        "churn", "mtbf", "kernel_threads", "controller",
     ];
     for k in obj.keys() {
         if !KNOWN.contains(&k.as_str()) {
@@ -139,6 +139,11 @@ pub fn from_json(v: &Json) -> Result<TrainConfig> {
         crate::train::validate_kernel_threads(n as usize)?;
         cfg.kernel_threads = n as usize;
     }
+    // adaptive control plane: validated by name at load time (off | on)
+    if let Some(c) = v.get("controller").as_str() {
+        crate::train::control::parse_mode(c)?;
+        cfg.controller = c.to_string();
+    }
     if let Some(lr) = v.get("lr").as_f64() {
         cfg.lr = LrSchedule::Constant(lr as f32);
     }
@@ -209,8 +214,27 @@ fn compression_from(v: &Json) -> Result<compress::Config> {
     if let Some(x) = v.get("lt_fc").as_usize() {
         c.lt_fc = x;
     }
-    if let Some(x) = v.get("lt").as_usize() {
-        c.lt_override = x;
+    if let Some(x) = v.get("lt_lstm").as_usize() {
+        c.lt_lstm = x;
+    }
+    if let Some(x) = v.get("lt_embed").as_usize() {
+        c.lt_embed = x;
+    }
+    // "lt": a plain integer (all-layer override, the Fig 4 sweep form) or a
+    // per-kind spec string "conv=64,fc=500[,lstm=N][,embed=N]" — both
+    // validated through the same parser the CLI uses, so errors match
+    let lt = v.get("lt");
+    if lt != &Json::Null {
+        if let Some(x) = lt.as_usize() {
+            c.lt_override = x;
+        } else if let Some(s) = lt.as_str() {
+            c.parse_lt_spec(s)?;
+        } else {
+            bail!(
+                "'lt' must be an integer or a per-kind spec string \
+                 (conv=64,fc=500[,lstm=N][,embed=N])"
+            );
+        }
     }
     if let Some(x) = v.get("scale_factor").as_f64() {
         c.scale_factor = x as f32;
@@ -267,6 +291,8 @@ pub fn to_json(cfg: &TrainConfig) -> Json {
         ("scheme", json::s(cfg.compression.kind.name())),
         ("lt_conv", json::num(cfg.compression.lt_conv as f64)),
         ("lt_fc", json::num(cfg.compression.lt_fc as f64)),
+        ("lt_lstm", json::num(cfg.compression.lt_lstm as f64)),
+        ("lt_embed", json::num(cfg.compression.lt_embed as f64)),
         ("lt", json::num(cfg.compression.lt_override as f64)),
         ("scale_factor", json::num(cfg.compression.scale_factor as f64)),
         ("topk_fraction", json::num(cfg.compression.topk_fraction)),
@@ -294,6 +320,7 @@ pub fn to_json(cfg: &TrainConfig) -> Json {
         ("clip_norm", json::num(cfg.clip_norm as f64)),
         ("threads", json::num(cfg.threads as f64)),
         ("kernel_threads", json::num(cfg.kernel_threads as f64)),
+        ("controller", json::s(&cfg.controller)),
         ("lr_schedule", lr),
         ("compression", comp),
     ])
@@ -440,6 +467,67 @@ mod tests {
         let cfg = from_json(&v).unwrap();
         assert_eq!(cfg.staleness, 0);
         assert_eq!(cfg.link.jitter, 0.0);
+    }
+
+    #[test]
+    fn controller_key_roundtrips_and_validates() {
+        let v = Json::from_str_slice(r#"{"model": "m", "controller": "on"}"#).unwrap();
+        let cfg = from_json(&v).unwrap();
+        assert_eq!(cfg.controller, "on");
+        let back = from_json(&to_json(&cfg)).unwrap();
+        assert_eq!(back.controller, "on");
+        // default stays off (bit-identical legacy engine path)
+        let v = Json::from_str_slice(r#"{"model": "m"}"#).unwrap();
+        assert_eq!(from_json(&v).unwrap().controller, "off");
+        let bad = Json::from_str_slice(r#"{"model": "m", "controller": "auto"}"#).unwrap();
+        let err = format!("{:#}", from_json(&bad).unwrap_err());
+        assert!(err.contains("valid: off, on"), "{err}");
+    }
+
+    #[test]
+    fn lt_key_accepts_int_or_per_kind_spec() {
+        // plain integer: the classic all-layer override
+        let v = Json::from_str_slice(
+            r#"{"model": "m", "compression": {"scheme": "adacomp", "lt": 200}}"#,
+        )
+        .unwrap();
+        assert_eq!(from_json(&v).unwrap().compression.lt_override, 200);
+        // per-kind spec string routes through the CLI parser
+        let v = Json::from_str_slice(
+            r#"{"model": "m",
+                "compression": {"scheme": "adacomp", "lt": "conv=64,fc=500,lstm=250"}}"#,
+        )
+        .unwrap();
+        let cfg = from_json(&v).unwrap();
+        assert_eq!(cfg.compression.lt_conv, 64);
+        assert_eq!(cfg.compression.lt_fc, 500);
+        assert_eq!(cfg.compression.lt_lstm, 250);
+        assert_eq!(cfg.compression.lt_override, 0);
+        // per-kind values survive serialization via the lt_* keys
+        let back = from_json(&to_json(&cfg)).unwrap();
+        assert_eq!(back.compression.lt_conv, 64);
+        assert_eq!(back.compression.lt_fc, 500);
+        assert_eq!(back.compression.lt_lstm, 250);
+        // explicit lt_lstm / lt_embed keys load too
+        let v = Json::from_str_slice(
+            r#"{"model": "m",
+                "compression": {"scheme": "adacomp", "lt_lstm": 80, "lt_embed": 90}}"#,
+        )
+        .unwrap();
+        let cfg = from_json(&v).unwrap();
+        assert_eq!(cfg.compression.lt_lstm, 80);
+        assert_eq!(cfg.compression.lt_embed, 90);
+        // malformed specs fail fast with the valid-form list
+        for (spec, needle) in [
+            (r#"{"model": "m", "compression": {"lt": "conv=64,disk=9"}}"#, "valid kinds"),
+            (r#"{"model": "m", "compression": {"lt": "conv=0"}}"#, "out of range"),
+            (r#"{"model": "m", "compression": {"lt": "conv"}}"#, "bad L_T"),
+            (r#"{"model": "m", "compression": {"lt": true}}"#, "per-kind spec string"),
+        ] {
+            let v = Json::from_str_slice(spec).unwrap();
+            let err = format!("{:#}", from_json(&v).unwrap_err());
+            assert!(err.contains(needle), "{spec}: {err}");
+        }
     }
 
     #[test]

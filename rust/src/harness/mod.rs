@@ -327,9 +327,11 @@ pub struct Workload {
 
 impl Workload {
     /// Build from CLI args: common flags are --model --backend --epochs
-    /// --learners --batch --train --test --scheme --lt --lt-conv --lt-fc
-    /// --optimizer --lr --topology (ring | ps | ps:S | hier:G)
-    /// --bucket-bytes --seed --seq-len --artifacts --churn --mtbf.
+    /// --learners --batch --train --test --scheme --lt (integer or
+    /// conv=64,fc=500[,lstm=N][,embed=N]) --lt-conv --lt-fc --lt-lstm
+    /// --lt-embed --optimizer --lr --topology (ring | ps | ps:S | hier:G)
+    /// --bucket-bytes --seed --seq-len --artifacts --churn --mtbf
+    /// --controller (off | on).
     pub fn from_args(args: &Args, default_model: &str) -> Result<Workload> {
         Workload::from_args_with_backend(args, default_model, None)
     }
@@ -441,7 +443,15 @@ impl Workload {
         }
         comp.lt_conv = args.usize_or("lt-conv", comp.lt_conv);
         comp.lt_fc = args.usize_or("lt-fc", comp.lt_fc);
-        comp.lt_override = args.usize_or("lt", 0);
+        comp.lt_lstm = args.usize_or("lt-lstm", comp.lt_lstm);
+        comp.lt_embed = args.usize_or("lt-embed", comp.lt_embed);
+        // --lt: a plain integer overrides every layer (the Fig 4 sweep
+        // form); a per-kind list conv=64,fc=500[,lstm=N][,embed=N] sets
+        // kinds individually. Parsed here so malformed specs fail at the
+        // prompt with the valid forms, like --churn and --topology.
+        if let Some(s) = args.get("lt") {
+            comp.parse_lt_spec(s)?;
+        }
         comp.topk_fraction = args.f32_or("topk", comp.topk_fraction as f32) as f64;
         comp.strom_tau = args.f32_or("tau", comp.strom_tau);
         if args.flag("per-bin-scale") {
@@ -523,6 +533,9 @@ impl Workload {
                 )
             })?,
         };
+        // adaptive control plane: mode validated by name at parse time
+        let controller = args.str_or("controller", "off");
+        crate::train::control::parse_mode(&controller)?;
         let batch = args.usize_or("batch", d.batch / learners.max(1)).max(1);
         let lr = match args.get("lr") {
             Some(v) => LrSchedule::Constant(v.parse()?),
@@ -557,6 +570,7 @@ impl Workload {
             churn,
             mtbf,
             kernel_threads,
+            controller,
         };
 
         let mut init_params = match init_native {
@@ -900,6 +914,84 @@ mod tests {
             let err = format!("{:#}", Workload::from_args(&args, "mnist_dnn").unwrap_err());
             assert!(err.contains(needle), "{flag} {val}: {err}");
         }
+    }
+
+    #[test]
+    fn lt_spec_cli_validates_at_parse_time() {
+        // satellite: --lt takes a plain integer (all-layer override) or a
+        // per-kind list, and malformed specs fail with the valid forms
+        let ok = Args::parse_from(
+            [
+                "--model", "mnist_dnn", "--backend", "native",
+                "--lt", "conv=64,fc=500,embed=32",
+            ]
+            .map(String::from),
+            &[],
+        );
+        let w = Workload::from_args(&ok, "mnist_dnn").unwrap();
+        assert_eq!(w.cfg.compression.lt_conv, 64);
+        assert_eq!(w.cfg.compression.lt_fc, 500);
+        assert_eq!(w.cfg.compression.lt_embed, 32);
+        assert_eq!(w.cfg.compression.lt_override, 0);
+        let plain = Args::parse_from(
+            ["--model", "mnist_dnn", "--backend", "native", "--lt", "200"].map(String::from),
+            &[],
+        );
+        let w = Workload::from_args(&plain, "mnist_dnn").unwrap();
+        assert_eq!(w.cfg.compression.lt_override, 200);
+        // dedicated per-kind flags still work alongside
+        let kinds = Args::parse_from(
+            [
+                "--model", "mnist_dnn", "--backend", "native",
+                "--lt-lstm", "80", "--lt-embed", "90",
+            ]
+            .map(String::from),
+            &[],
+        );
+        let w = Workload::from_args(&kinds, "mnist_dnn").unwrap();
+        assert_eq!(w.cfg.compression.lt_lstm, 80);
+        assert_eq!(w.cfg.compression.lt_embed, 90);
+
+        for (val, needle) in [
+            ("conv=64,disk=9", "valid kinds: conv, fc, lstm, embed"),
+            ("conv=0", "out of range"),
+            ("conv=64,", "bad --lt entry"),
+            ("fc=big", "bad L_T"),
+        ] {
+            let args = Args::parse_from(
+                ["--model", "mnist_dnn", "--backend", "native", "--lt", val]
+                    .map(String::from),
+                &[],
+            );
+            let err = format!("{:#}", Workload::from_args(&args, "mnist_dnn").unwrap_err());
+            assert!(err.contains(needle), "--lt {val}: {err}");
+        }
+    }
+
+    #[test]
+    fn controller_cli_validates_at_parse_time() {
+        // satellite: the control-plane mode fails fast with the valid
+        // list, wires through when named, and defaults to off
+        let ok = Args::parse_from(
+            ["--model", "mnist_dnn", "--backend", "native", "--controller", "on"]
+                .map(String::from),
+            &[],
+        );
+        let w = Workload::from_args(&ok, "mnist_dnn").unwrap();
+        assert_eq!(w.cfg.controller, "on");
+        let none = Args::parse_from(
+            ["--model", "mnist_dnn", "--backend", "native"].map(String::from),
+            &[],
+        );
+        let w = Workload::from_args(&none, "mnist_dnn").unwrap();
+        assert_eq!(w.cfg.controller, "off");
+        let bad = Args::parse_from(
+            ["--model", "mnist_dnn", "--backend", "native", "--controller", "auto"]
+                .map(String::from),
+            &[],
+        );
+        let err = format!("{:#}", Workload::from_args(&bad, "mnist_dnn").unwrap_err());
+        assert!(err.contains("valid: off, on"), "{err}");
     }
 
     #[test]

@@ -98,6 +98,20 @@ pub fn epoch_line(r: &RunRecord) -> String {
     )
 }
 
+/// One-line adaptive-control summary, `None` when the controller never
+/// re-tuned a knob (the static-engine case prints nothing extra).
+pub fn control_line(r: &RunRecord) -> Option<String> {
+    let c = &r.fabric.control;
+    if c.is_empty() {
+        return None;
+    }
+    let mut s = format!("controller: {} retunes |", r.fabric.control_retunes);
+    for d in c {
+        s.push_str(&format!(" e{} {} {}->{}", d.epoch, d.knob, d.old, d.new));
+    }
+    Some(s)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,5 +133,32 @@ mod tests {
     fn row_arity_checked() {
         let mut t = Table::new(&["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn control_line_summarizes_decisions() {
+        let mut r = RunRecord {
+            name: "t".into(),
+            model: "m".into(),
+            scheme: "adacomp".into(),
+            learners: 2,
+            batch_per_learner: 8,
+            optimizer: "sgd".into(),
+            epochs: Vec::new(),
+            diverged: false,
+            fabric: Default::default(),
+        };
+        assert!(control_line(&r).is_none());
+        r.fabric.control.push(crate::comm::ControlDecision {
+            epoch: 1,
+            knob: "staleness".into(),
+            old: 1.0,
+            new: 2.0,
+            signal: "straggler_excess=0.21>0.1".into(),
+        });
+        r.fabric.control_retunes = 1;
+        let line = control_line(&r).unwrap();
+        assert!(line.contains("1 retunes"), "{line}");
+        assert!(line.contains("e1 staleness 1->2"), "{line}");
     }
 }

@@ -112,6 +112,9 @@ fn cmd_train(args: &Args) -> i32 {
                 };
                 println!("{}", report::epoch_line(&partial));
             }
+            if let Some(line) = report::control_line(&rec) {
+                println!("{line}");
+            }
             println!(
                 "final: test-err {:.2}%  mean rate (wire) {:.1}x  (paper) {:.1}x  diverged: {}",
                 rec.final_test_error(),
@@ -263,7 +266,12 @@ fn print_help() {
 
 USAGE:
   adacomp train [--model M] [--scheme S] [--learners N] [--batch B]
-                [--epochs E] [--lt L] [--optimizer sgd|adam|rmsprop]
+                [--epochs E] [--optimizer sgd|adam|rmsprop]
+                [--lt SPEC]     (sparsifier bin size L_T: a plain integer
+                                 sets every layer; a per-kind list
+                                 conv=64,fc=500[,lstm=N][,embed=N] tunes
+                                 kinds individually. Also --lt-conv /
+                                 --lt-fc / --lt-lstm / --lt-embed)
                 [--topology ring|ps|ps:S|hier:G]
                                 (ps:S = S independent shard servers, reduce-
                                  plan buckets partitioned across them;
@@ -321,6 +329,16 @@ USAGE:
                                  learner fails with probability 1/STEPS,
                                  drawn from a seeded generator so runs
                                  reproduce. 0 = off, composes with --churn)
+                [--controller off|on]
+                                (adaptive control plane: at each epoch
+                                 boundary a deterministic feedback rule
+                                 re-tunes the staleness window, the bucket
+                                 coalescing threshold, and per-layer L_T
+                                 from that epoch's measurements. off =
+                                 default, bit-identical to the static
+                                 engine; on is bit-deterministic at every
+                                 thread count and exchange mode, decisions
+                                 land in the run record)
   adacomp inspect [--artifacts DIR]
   adacomp schemes
 

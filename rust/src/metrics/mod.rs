@@ -214,6 +214,27 @@ impl RunRecord {
                                         ("drain_stall_s", json::num(m.drain_stall_s)),
                                         ("lost_l1", json::num(m.lost_l1)),
                                         ("handover_l1", json::num(m.handover_l1)),
+                                        ("threshold_bytes", json::num(m.threshold_bytes as f64)),
+                                        ("n_buckets", json::num(m.n_buckets as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("control_retunes", json::num(self.fabric.control_retunes as f64)),
+                    (
+                        "control",
+                        json::arr(
+                            self.fabric
+                                .control
+                                .iter()
+                                .map(|d| {
+                                    json::obj(vec![
+                                        ("epoch", json::num(d.epoch as f64)),
+                                        ("knob", json::s(&d.knob)),
+                                        ("old", json::num(d.old)),
+                                        ("new", json::num(d.new)),
+                                        ("signal", json::s(&d.signal)),
                                     ])
                                 })
                                 .collect(),
@@ -325,6 +346,8 @@ mod tests {
             drain_stall_s: 2e-3,
             lost_l1: 0.0,
             handover_l1: 4.25,
+            threshold_bytes: 31250,
+            n_buckets: 2,
         });
         r.fabric.handover_l1 = 4.25;
         let j = r.to_json().to_string();
@@ -335,6 +358,46 @@ mod tests {
         assert_eq!(ms.len(), 1);
         assert_eq!(ms[0].get("kind").as_str(), Some("leave"));
         assert_eq!(ms[0].get("n_after").as_f64(), Some(1.0));
+        assert_eq!(ms[0].get("threshold_bytes").as_f64(), Some(31250.0));
+        assert_eq!(ms[0].get("n_buckets").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn run_record_json_carries_control_decision_timeline() {
+        // the adaptive controller's per-epoch decisions land in the fabric
+        // object: a knob trajectory a plotting script can replay
+        let mut r = rec();
+        r.fabric.control.push(crate::comm::ControlDecision {
+            epoch: 1,
+            knob: "staleness".into(),
+            old: 1.0,
+            new: 2.0,
+            signal: "straggler_excess=0.210>0.1".into(),
+        });
+        r.fabric.control.push(crate::comm::ControlDecision {
+            epoch: 2,
+            knob: "lt:0".into(),
+            old: 50.0,
+            new: 100.0,
+            signal: "comm_share=0.40 vs elems_share=0.10 (hot)".into(),
+        });
+        r.fabric.control_retunes = 2;
+        let j = r.to_json().to_string();
+        let v = Json::from_str_slice(&j).unwrap();
+        let fab = v.get("fabric");
+        assert_eq!(fab.get("control_retunes").as_f64(), Some(2.0));
+        let ds = fab.get("control").as_arr().unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds[0].get("knob").as_str(), Some("staleness"));
+        assert_eq!(ds[0].get("old").as_f64(), Some(1.0));
+        assert_eq!(ds[0].get("new").as_f64(), Some(2.0));
+        assert!(ds[0]
+            .get("signal")
+            .as_str()
+            .unwrap()
+            .contains("straggler_excess"));
+        assert_eq!(ds[1].get("knob").as_str(), Some("lt:0"));
+        assert_eq!(ds[1].get("epoch").as_f64(), Some(2.0));
     }
 
     #[test]

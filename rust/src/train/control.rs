@@ -1,0 +1,550 @@
+//! Adaptive control plane: epoch-boundary re-tuning of the run knobs.
+//!
+//! Every run-level knob used to be static for the whole run — per-layer
+//! AdaComp bin size L_T, the bucket-coalescing threshold `--bucket-bytes`,
+//! the staleness window `--staleness K` — each hand-picked per scenario.
+//! With `--controller on` a deterministic feedback controller re-tunes all
+//! three at epoch boundaries from the epoch's measurements, L-GreCo-style
+//! for the per-layer rates (PAPERS.md: "L-GreCo: Layerwise-Adaptive
+//! Gradient Compression"):
+//!
+//! * **staleness** — widen the window only while stragglers dominate
+//!   (the seeded jitter model's max-over-learners excess per step), shrink
+//!   back once they don't. Bounded by the allocated window headroom
+//!   ([`staleness_cap`]): the engine allocates the param-version ring once
+//!   at run start, so the live K can move without reallocating history.
+//! * **bucket_bytes** — split buckets while topology ports sit idle
+//!   (`n_buckets < ports`), coalesce while the mean on-wire bucket frame
+//!   is too small to amortize its per-message latency (below half the
+//!   link's α·β break-even).
+//! * **per-layer L_T** — raise a layer's bin size (compress harder) while
+//!   its share of wire bytes dwarfs its share of backward compute (element
+//!   count as the deterministic compute proxy), lower it when the layer is
+//!   communication-cold. Clamped to a multiplicative band around the
+//!   starting point so the controller can explore but not run away.
+//!
+//! **Determinism contract.** Decisions are a pure function of
+//! ([`EpochSignals`], current [`Knobs`]) — and every signal folded into
+//! `EpochSignals` is itself deterministic: wire bytes come from the
+//! serialized packet frames (bit-identical across thread counts and
+//! exchange modes), straggler pressure from the seeded
+//! [`LinkModel::compute_mult`] draws, bucket/port counts from the plan.
+//! Wall-clock measurements (`stall_per_step_s`, `crit_share`, measured
+//! comm tails) are *reported* in FabricStats but deliberately never feed a
+//! decision: they are the same quantities the signals above project
+//! deterministically (jitter excess ⇒ stall pressure, frame bytes vs α·β
+//! ⇒ per-port comm tail), and consuming the measured versions would make
+//! knob trajectories differ run to run. Hysteresis bands, bounded ×2 / ±1
+//! step sizes, and clamps to the validated ranges keep the trajectory
+//! stable; the decision timeline lands in
+//! [`FabricStats::control`](crate::comm::fabric::FabricStats::control).
+//!
+//! The *apply* path reuses the membership-epoch machinery: at an epoch
+//! boundary the window is already drained to the frontier (workers park at
+//! the epoch limit), so the engine can swap K in the pool gate, push L_T
+//! into the learners' compressors, and rebuild the `ReducePlan`/cell rings
+//! under the fleet write lock exactly as a churn event would.
+
+use crate::comm::fabric::{ControlDecision, LinkModel};
+use crate::comm::plan::ReducePlan;
+use crate::compress::wire::dense_f32_wire_len;
+use crate::models::Layout;
+
+/// Valid `--controller` modes (the `topology::build` fail-fast pattern).
+pub const MODES: &[&str] = &["off", "on"];
+
+/// Parse + validate a controller mode; `Ok(true)` means the controller is
+/// on. Config JSON, CLI/harness, and the engine all validate through here.
+pub fn parse_mode(mode: &str) -> anyhow::Result<bool> {
+    match mode {
+        "off" => Ok(false),
+        "on" => Ok(true),
+        other => anyhow::bail!("unknown controller mode '{other}' (valid: off, on)"),
+    }
+}
+
+/// Allocated staleness headroom for a controller-managed run: the live K
+/// may widen up to this bound without reallocating the param-version ring.
+/// Twice the starting K with at least two slots of headroom, capped at the
+/// engine-wide [`MAX_STALENESS`](crate::train::engine::MAX_STALENESS).
+pub fn staleness_cap(k0: usize) -> usize {
+    crate::train::engine::MAX_STALENESS.min((2 * k0).max(k0 + 2))
+}
+
+/// The controller's live operating point — the three knobs it owns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Knobs {
+    /// Staleness window bound K (live; ≤ the run's allocated cap).
+    pub staleness: usize,
+    /// Bucket-coalescing threshold in dense wire bytes.
+    pub bucket_bytes: usize,
+    /// Per-layer AdaComp bin size L_T. Empty when the active compression
+    /// scheme has no L_T notion (the L_T rule is skipped).
+    pub lts: Vec<usize>,
+}
+
+/// Deterministic measurements folded over one epoch — the controller's
+/// only inputs (see the module docs for why wall-clock measurements are
+/// excluded).
+#[derive(Debug, Clone)]
+pub struct EpochSignals {
+    /// Steps folded this epoch.
+    pub steps: u64,
+    /// Fleet size at the last folded step.
+    pub learners: usize,
+    /// Σ over steps of `max_l mult − mean_l mult` from the seeded jitter
+    /// draws: the deterministic projection of straggler stall pressure.
+    pub jitter_excess: f64,
+    /// Per-layer serialized wire bytes this epoch (summed over learners,
+    /// steps, and directions charged to the learner's packet).
+    pub layer_bytes: Vec<u64>,
+    /// Bucket count of the plan in force at the epoch boundary.
+    pub n_buckets: usize,
+    /// Topology ports in force at the epoch boundary.
+    pub ports: usize,
+}
+
+impl EpochSignals {
+    pub fn new(num_layers: usize) -> EpochSignals {
+        EpochSignals {
+            steps: 0,
+            learners: 0,
+            jitter_excess: 0.0,
+            layer_bytes: vec![0; num_layers],
+            n_buckets: 0,
+            ports: 0,
+        }
+    }
+
+    /// Zero the accumulators for the next epoch.
+    pub fn reset(&mut self) {
+        self.steps = 0;
+        self.jitter_excess = 0.0;
+        self.layer_bytes.iter_mut().for_each(|b| *b = 0);
+    }
+
+    /// Fold one step's per-learner jitter multipliers.
+    pub fn note_step(&mut self, mults: &[f64]) {
+        if mults.is_empty() {
+            return;
+        }
+        let max = mults.iter().cloned().fold(f64::MIN, f64::max);
+        let mean = mults.iter().sum::<f64>() / mults.len() as f64;
+        self.jitter_excess += max - mean;
+        self.learners = mults.len();
+        self.steps += 1;
+    }
+
+    /// Fold one serialized packet's wire bytes onto its layer.
+    #[inline]
+    pub fn note_packet(&mut self, layer: usize, wire_bytes: usize) {
+        self.layer_bytes[layer] += wire_bytes as u64;
+    }
+
+    /// Mean straggler excess per step (0 with jitter off).
+    pub fn straggler_excess(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.jitter_excess / self.steps as f64
+        }
+    }
+
+    /// Mean on-wire bucket frame payload this epoch, bytes.
+    pub fn mean_frame_bytes(&self) -> f64 {
+        let frames = self.steps * self.learners.max(1) as u64 * self.n_buckets.max(1) as u64;
+        if frames == 0 {
+            0.0
+        } else {
+            self.layer_bytes.iter().sum::<u64>() as f64 / frames as f64
+        }
+    }
+}
+
+/// Hysteresis band for the staleness rule: widen above, narrow below,
+/// hold in between.
+const WIDEN_EXCESS: f64 = 0.10;
+const NARROW_EXCESS: f64 = 0.04;
+/// Coalesce while the mean frame fills less than this fraction of α·β.
+const COALESCE_FILL: f64 = 0.5;
+/// L_T rule band: a layer is comm-hot above, comm-cold below (its wire
+/// share relative to its compute-proxy share).
+const LT_HOT_RATIO: f64 = 2.0;
+const LT_COLD_RATIO: f64 = 0.5;
+/// A layer must carry at least this wire share before it is worth
+/// compressing harder (don't churn L_T on noise-sized layers).
+const LT_MIN_SHARE: f64 = 0.05;
+/// Absolute L_T ceiling (matches the CLI/config validated range).
+pub const LT_ABS_MAX: usize = 100_000;
+/// Multiplicative exploration band around each layer's starting L_T.
+const LT_BAND: usize = 8;
+
+/// The deterministic feedback controller. Construction captures the
+/// clamp ranges (from the starting knobs, the layout, and the link);
+/// [`retune`](Controller::retune) is a pure function of
+/// (epoch signals, current knobs).
+#[derive(Debug, Clone)]
+pub struct Controller {
+    /// Hard cap on the live staleness window (allocation bound).
+    k_cap: usize,
+    /// α·β for the run's link: the latency-amortization break-even.
+    auto_bytes: usize,
+    /// Largest useful threshold: whole-model dense wire bytes (one bucket).
+    thr_max: usize,
+    /// Per-layer L_T clamp band.
+    lt_lo: Vec<usize>,
+    lt_hi: Vec<usize>,
+    /// Per-layer element counts: the deterministic backward-compute proxy.
+    layer_elems: Vec<usize>,
+}
+
+impl Controller {
+    pub fn new(layout: &Layout, knobs: &Knobs, k_cap: usize, link: &LinkModel) -> Controller {
+        let lt_lo = knobs.lts.iter().map(|&l| (l / LT_BAND).max(1)).collect();
+        let lt_hi = knobs
+            .lts
+            .iter()
+            .map(|&l| (l.saturating_mul(LT_BAND)).min(LT_ABS_MAX).max(l))
+            .collect();
+        let layer_elems = layout.layer_lens();
+        let thr_max = layer_elems
+            .iter()
+            .map(|&len| dense_f32_wire_len(len))
+            .sum::<usize>()
+            .max(1);
+        Controller {
+            k_cap,
+            auto_bytes: ReducePlan::auto_threshold(link),
+            thr_max,
+            lt_lo,
+            lt_hi,
+            layer_elems,
+        }
+    }
+
+    /// Re-tune the knobs from one epoch's measurements. Mutates `knobs` to
+    /// the new operating point and returns the applied decisions (empty =
+    /// every rule held). Pure: identical (signals, knobs) in ⇒ identical
+    /// decisions and knobs out.
+    pub fn retune(
+        &self,
+        epoch: usize,
+        sig: &EpochSignals,
+        knobs: &mut Knobs,
+    ) -> Vec<ControlDecision> {
+        let mut out = Vec::new();
+        if sig.steps == 0 {
+            return out;
+        }
+
+        // 1. Staleness window ← straggler pressure (±1 per epoch).
+        let excess = sig.straggler_excess();
+        if excess > WIDEN_EXCESS && knobs.staleness < self.k_cap {
+            let new = knobs.staleness + 1;
+            out.push(decision(
+                epoch,
+                "staleness",
+                knobs.staleness as f64,
+                new as f64,
+                format!("straggler_excess={excess:.3}>{WIDEN_EXCESS}"),
+            ));
+            knobs.staleness = new;
+        } else if excess < NARROW_EXCESS && knobs.staleness > 0 {
+            let new = knobs.staleness - 1;
+            out.push(decision(
+                epoch,
+                "staleness",
+                knobs.staleness as f64,
+                new as f64,
+                format!("straggler_excess={excess:.3}<{NARROW_EXCESS}"),
+            ));
+            knobs.staleness = new;
+        }
+
+        // 2. Bucket threshold ← port occupancy, then latency fill (×2 / ÷2
+        // per epoch). Splitting to feed idle ports takes priority over
+        // coalescing for latency; coalescing never drops below port count.
+        let mean = sig.mean_frame_bytes();
+        if sig.n_buckets < sig.ports && knobs.bucket_bytes > 1 {
+            let new = (knobs.bucket_bytes / 2).max(1);
+            out.push(decision(
+                epoch,
+                "bucket_bytes",
+                knobs.bucket_bytes as f64,
+                new as f64,
+                format!("n_buckets={}<ports={}", sig.n_buckets, sig.ports),
+            ));
+            knobs.bucket_bytes = new;
+        } else if sig.n_buckets > sig.ports.max(1)
+            && mean < COALESCE_FILL * self.auto_bytes as f64
+            && knobs.bucket_bytes < self.thr_max
+        {
+            let new = knobs.bucket_bytes.saturating_mul(2).min(self.thr_max);
+            out.push(decision(
+                epoch,
+                "bucket_bytes",
+                knobs.bucket_bytes as f64,
+                new as f64,
+                format!(
+                    "mean_frame={mean:.0}B<{:.0}B (α·β fill)",
+                    COALESCE_FILL * self.auto_bytes as f64
+                ),
+            ));
+            knobs.bucket_bytes = new;
+        }
+
+        // 3. Per-layer L_T ← wire share vs compute-proxy share (×2 / ÷2
+        // per layer per epoch, clamped to the exploration band).
+        let total_bytes: u64 = sig.layer_bytes.iter().sum();
+        let total_elems: usize = self.layer_elems.iter().sum();
+        if total_bytes > 0
+            && total_elems > 0
+            && knobs.lts.len() == self.layer_elems.len()
+            && sig.layer_bytes.len() == self.layer_elems.len()
+        {
+            for l in 0..knobs.lts.len() {
+                let comm = sig.layer_bytes[l] as f64 / total_bytes as f64;
+                let elems = self.layer_elems[l] as f64 / total_elems as f64;
+                let lt = knobs.lts[l];
+                if comm > LT_HOT_RATIO * elems && comm > LT_MIN_SHARE && lt < self.lt_hi[l] {
+                    let new = lt.saturating_mul(2).min(self.lt_hi[l]);
+                    out.push(decision(
+                        epoch,
+                        &format!("lt:{l}"),
+                        lt as f64,
+                        new as f64,
+                        format!("comm_share={comm:.3} vs elems_share={elems:.3} (hot)"),
+                    ));
+                    knobs.lts[l] = new;
+                } else if comm < LT_COLD_RATIO * elems && lt > self.lt_lo[l] {
+                    let new = (lt / 2).max(self.lt_lo[l]);
+                    out.push(decision(
+                        epoch,
+                        &format!("lt:{l}"),
+                        lt as f64,
+                        new as f64,
+                        format!("comm_share={comm:.3} vs elems_share={elems:.3} (cold)"),
+                    ));
+                    knobs.lts[l] = new;
+                }
+            }
+        }
+        out
+    }
+}
+
+fn decision(epoch: usize, knob: &str, old: f64, new: f64, signal: String) -> ControlDecision {
+    ControlDecision {
+        epoch,
+        knob: knob.to_string(),
+        old,
+        new,
+        signal,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::LayerKind;
+
+    fn layout() -> Layout {
+        Layout::from_specs(&[
+            ("w1", &[2000], LayerKind::Fc),
+            ("b1", &[20], LayerKind::Fc),
+            ("w2", &[1500], LayerKind::Fc),
+            ("b2", &[10], LayerKind::Fc),
+        ])
+    }
+
+    fn knobs() -> Knobs {
+        Knobs {
+            staleness: 1,
+            bucket_bytes: 4096,
+            lts: vec![50, 50, 50, 50],
+        }
+    }
+
+    fn quiet_signals() -> EpochSignals {
+        // an epoch with no straggler pressure, balanced layers, and frames
+        // big enough to amortize latency: every rule holds
+        let mut sig = EpochSignals::new(4);
+        sig.steps = 10;
+        sig.learners = 4;
+        sig.jitter_excess = 10.0 * 0.06; // inside the [0.04, 0.10] band
+        sig.n_buckets = 2;
+        sig.ports = 1;
+        // shares proportional to element counts (scaled ×100 bytes/elem so
+        // mean_frame clears the coalesce band)
+        sig.layer_bytes = vec![200_000, 2_000, 150_000, 1_000];
+        sig
+    }
+
+    #[test]
+    fn mode_parse_validates_with_valid_list() {
+        assert!(!parse_mode("off").unwrap());
+        assert!(parse_mode("on").unwrap());
+        for bad in ["ON", "auto", ""] {
+            let err = parse_mode(bad).unwrap_err().to_string();
+            assert!(err.contains("valid: off, on"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn staleness_cap_bounds() {
+        assert_eq!(staleness_cap(0), 2);
+        assert_eq!(staleness_cap(1), 3);
+        assert_eq!(staleness_cap(2), 4);
+        assert_eq!(staleness_cap(4), 8);
+        // capped at MAX_STALENESS
+        assert_eq!(staleness_cap(12), crate::train::engine::MAX_STALENESS);
+    }
+
+    #[test]
+    fn hysteresis_band_holds_every_rule() {
+        let layout = layout();
+        let mut k = knobs();
+        let ctrl = Controller::new(&layout, &k, 4, &LinkModel::default());
+        let sig = quiet_signals();
+        let before = k.clone();
+        assert!(ctrl.retune(0, &sig, &mut k).is_empty());
+        assert_eq!(k, before);
+        // an empty epoch (no steps folded) never decides anything
+        let mut empty = EpochSignals::new(4);
+        empty.n_buckets = 1;
+        empty.ports = 4; // would trip the split rule if steps > 0
+        assert!(ctrl.retune(1, &empty, &mut k).is_empty());
+    }
+
+    #[test]
+    fn staleness_widens_narrows_and_clamps() {
+        let layout = layout();
+        let mut k = knobs();
+        let ctrl = Controller::new(&layout, &k, 2, &LinkModel::default());
+        let mut sig = quiet_signals();
+        // heavy straggler pressure: widen +1 per epoch up to the cap
+        sig.jitter_excess = sig.steps as f64 * 0.3;
+        let d = ctrl.retune(0, &sig, &mut k);
+        assert_eq!(k.staleness, 2);
+        assert_eq!(d[0].knob, "staleness");
+        assert!(d[0].signal.contains("straggler_excess"), "{}", d[0].signal);
+        // at the cap: hold
+        assert!(ctrl
+            .retune(1, &sig, &mut k)
+            .iter()
+            .all(|d| d.knob != "staleness"));
+        // pressure gone: narrow back one per epoch, clamp at 0
+        sig.jitter_excess = 0.0;
+        for want in [1usize, 0, 0] {
+            ctrl.retune(2, &sig, &mut k);
+            assert_eq!(k.staleness, want);
+        }
+    }
+
+    #[test]
+    fn bucket_rule_splits_for_idle_ports_and_coalesces_small_frames() {
+        let layout = layout();
+        let mut k = knobs();
+        let ctrl = Controller::new(&layout, &k, 4, &LinkModel::default());
+        // idle ports: 2 buckets on a 4-port fabric -> halve the threshold
+        let mut sig = quiet_signals();
+        sig.ports = 4;
+        let d = ctrl.retune(0, &sig, &mut k);
+        assert_eq!(k.bucket_bytes, 2048);
+        assert!(d.iter().any(|d| d.knob == "bucket_bytes"
+            && d.signal.contains("n_buckets=2<ports=4")));
+        // latency-starved frames on a saturated fabric -> double it
+        let mut sig = quiet_signals();
+        sig.layer_bytes = vec![4000, 40, 3000, 20]; // mean frame ~88B << α·β/2
+        let d = ctrl.retune(1, &sig, &mut k);
+        assert_eq!(k.bucket_bytes, 4096);
+        assert!(d.iter().any(|d| d.knob == "bucket_bytes"
+            && d.signal.contains("α·β fill")));
+        // never coalesces past the whole-model dense size
+        let mut big = Knobs {
+            bucket_bytes: usize::MAX / 4,
+            ..knobs()
+        };
+        let before = big.bucket_bytes;
+        ctrl.retune(2, &sig, &mut big);
+        assert!(big.bucket_bytes <= before, "clamped at whole-model bytes");
+        // never splits below 1, and never coalesces below the port count
+        let mut sig = quiet_signals();
+        sig.n_buckets = 1;
+        sig.ports = 1;
+        sig.layer_bytes = vec![40, 4, 30, 2];
+        let before = k.clone();
+        assert!(ctrl
+            .retune(3, &sig, &mut k)
+            .iter()
+            .all(|d| d.knob != "bucket_bytes"));
+        assert_eq!(k.bucket_bytes, before.bucket_bytes);
+    }
+
+    #[test]
+    fn lt_adapts_per_layer_within_the_band() {
+        let layout = layout();
+        let mut k = knobs();
+        let ctrl = Controller::new(&layout, &k, 4, &LinkModel::default());
+        // layer 1 (tiny bias) carries half the wire bytes: comm-hot, its
+        // L_T doubles; layer 0 (big weight) is comm-cold, its L_T halves
+        let mut sig = quiet_signals();
+        sig.layer_bytes = vec![10_000, 200_000, 150_000, 40_000];
+        let d = ctrl.retune(0, &sig, &mut k);
+        assert_eq!(k.lts, vec![25, 100, 50, 50]);
+        assert!(d.iter().any(|d| d.knob == "lt:1" && d.signal.contains("hot")));
+        assert!(d.iter().any(|d| d.knob == "lt:0" && d.signal.contains("cold")));
+        // repeated pressure saturates at the 8x band, never beyond
+        for e in 1..12 {
+            ctrl.retune(e, &sig, &mut k);
+        }
+        assert_eq!(k.lts[1], 400); // 50 * 8
+        assert_eq!(k.lts[0], 6); // 50 / 8
+        // schemes without L_T (empty table): rule skipped entirely
+        let mut none = Knobs {
+            lts: Vec::new(),
+            ..knobs()
+        };
+        assert!(ctrl
+            .retune(0, &sig, &mut none)
+            .iter()
+            .all(|d| !d.knob.starts_with("lt:")));
+    }
+
+    #[test]
+    fn retune_is_a_pure_function_of_its_inputs() {
+        let layout = layout();
+        let ctrl = Controller::new(&layout, &knobs(), 4, &LinkModel::default());
+        let mut sig = quiet_signals();
+        sig.jitter_excess = sig.steps as f64 * 0.2;
+        sig.layer_bytes = vec![10_000, 200_000, 150_000, 40_000];
+        let (mut a, mut b) = (knobs(), knobs());
+        let da = ctrl.retune(3, &sig, &mut a);
+        let db = ctrl.retune(3, &sig, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(da, db);
+        assert!(!da.is_empty());
+    }
+
+    #[test]
+    fn signals_fold_steps_and_packets() {
+        let mut sig = EpochSignals::new(2);
+        sig.note_step(&[1.0, 1.3, 1.1]);
+        sig.note_step(&[1.2, 1.0, 1.1]);
+        assert_eq!(sig.steps, 2);
+        assert_eq!(sig.learners, 3);
+        // per-step max − mean, summed
+        let expect = (1.3 - (1.0 + 1.3 + 1.1) / 3.0) + (1.2 - (1.2 + 1.0 + 1.1) / 3.0);
+        assert!((sig.jitter_excess - expect).abs() < 1e-12);
+        sig.note_packet(0, 100);
+        sig.note_packet(1, 50);
+        sig.note_packet(0, 25);
+        assert_eq!(sig.layer_bytes, vec![125, 50]);
+        sig.n_buckets = 1;
+        // 2 steps * 3 learners * 1 bucket = 6 frames, 175 bytes total
+        assert!((sig.mean_frame_bytes() - 175.0 / 6.0).abs() < 1e-12);
+        sig.reset();
+        assert_eq!(sig.steps, 0);
+        assert_eq!(sig.layer_bytes, vec![0, 0]);
+    }
+}

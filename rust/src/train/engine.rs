@@ -33,7 +33,8 @@
 //! `θ_{v+K+1}` only after every step that reads `θ_v` has finished.
 //!
 //! **Reduce plan** (DESIGN.md §Topologies). The engine builds a
-//! [`ReducePlan`] once per run from the model layout: tiny layers (biases)
+//! [`ReducePlan`] from the model layout (rebuilt at membership epochs and
+//! adaptive-controller re-tunes): tiny layers (biases)
 //! coalesce into buckets — one wire message per bucket, one latency charge
 //! per bucket — and each bucket maps onto a **port** of the topology
 //! (`ps:<S>` exposes S shard ports). The engine exchanges a bucket's round
@@ -268,6 +269,15 @@ pub struct TrainConfig {
     /// Results are bit-identical at every value (see `tensor::gemm`) — the
     /// knob only moves speed.
     pub kernel_threads: usize,
+    /// Adaptive control plane (`--controller on|off`, default "off"): with
+    /// it on, a deterministic feedback controller re-tunes the staleness
+    /// window, the bucket-coalescing threshold, and the per-layer AdaComp
+    /// L_T at every epoch boundary from that epoch's deterministic
+    /// measurements (see [`super::control`]). "off" is bit-identical to an
+    /// engine without the controller; "on" is itself bit-deterministic
+    /// across thread counts and exchange modes (the decisions consume only
+    /// deterministic signals).
+    pub controller: String,
 }
 
 impl Default for TrainConfig {
@@ -297,6 +307,7 @@ impl Default for TrainConfig {
             churn: String::new(),
             mtbf: 0,
             kernel_threads: 0,
+            controller: "off".into(),
         }
     }
 }
@@ -320,10 +331,10 @@ pub struct Engine<'a> {
 /// and every worker is parked in `wait_runnable` (the pool's open limit is
 /// capped at the next event step, so no worker can be mid-step).
 struct Fleet {
-    /// The fleet's reduce plan: bucket coalescing + port mapping. Bucket
-    /// structure depends only on layout + threshold, so a churn rebuild
-    /// with the same threshold keeps `Shared::n_buckets` invariant — only
-    /// the bucket→port mapping changes with the topology.
+    /// The fleet's reduce plan: bucket coalescing + port mapping. Rebuilt
+    /// (with `pub_ns` and the cell rings, which it sizes) at membership
+    /// epochs and controller re-tunes; the bucket count may change with
+    /// the live threshold and port count, up to `Shared::bucket_stride`.
     plan: ReducePlan,
     learners: Vec<Mutex<Learner>>,
     /// Per-(learner, step-slot, bucket) packet hand-off cells:
@@ -357,15 +368,26 @@ struct Shared<'a> {
     /// for the slot being overwritten (dead by the window invariant).
     /// Deliberately *outside* the fleet — central weights survive churn.
     hist: Vec<RwLock<Vec<f32>>>,
-    /// Window size `K + 1` (number of step slots / param versions).
+    /// Allocated window size (number of step slots / param versions). With
+    /// the controller off this is exactly `K + 1`; with it on the ring is
+    /// allocated once at [`control::staleness_cap`]` + 1` so the live K can
+    /// widen without reallocating history.
     window: usize,
-    /// The staleness bound `K` (step `t` reads `θ_{max(0, t−K)}`).
-    staleness: usize,
-    /// Bucket count — invariant across churn rebuilds (same layout, same
-    /// coalescing threshold).
-    n_buckets: usize,
-    /// `ready[slot * n_buckets + b]`: learners that completed bucket `b`
-    /// of the slot's in-flight step.
+    /// The *live* staleness bound `K` (step `t` reads `θ_{max(0, t−K)}`).
+    /// Re-tuned by the adaptive controller at drained epoch boundaries
+    /// (every worker parked at the epoch frontier); always ≤ `window − 1`,
+    /// so the param-version ring invariant holds at any live value. The
+    /// pool-gate mutex ([`PoolCtl::set_staleness`]) orders the store before
+    /// any worker can start a step under the new bound, so Relaxed loads
+    /// suffice.
+    staleness: AtomicUsize,
+    /// Row stride of `ready`: an upper bound on the bucket count of any
+    /// plan the run can rebuild (one bucket per layer — coalescing only
+    /// merges). The *live* bucket count is `fleet.plan.num_buckets()`,
+    /// which controller re-tunes may change between epochs.
+    bucket_stride: usize,
+    /// `ready[slot * bucket_stride + b]`: learners that completed bucket
+    /// `b` of the slot's in-flight step.
     ready: Vec<AtomicUsize>,
     /// `finished[slot]`: learners fully done with the slot's step (loss and
     /// compute span published).
@@ -461,9 +483,10 @@ fn worker_loop(shared: &Shared<'_>, ctl: &PoolCtl, widx: usize, nworkers: usize)
 
 impl Shared<'_> {
     /// Param version step `t` reads: `θ_{max(0, t−K)}` — the freshest
-    /// version the window deterministically guarantees to exist.
+    /// version the window deterministically guarantees to exist, at the
+    /// *live* staleness bound.
     fn params_version(&self, step: usize) -> usize {
-        step.saturating_sub(self.staleness)
+        step.saturating_sub(self.staleness.load(Ordering::Relaxed))
     }
 
     /// One full learner step for learner `i` at global step `step`: read
@@ -522,8 +545,9 @@ impl Shared<'_> {
     /// learner wakes the engine.
     fn bucket_packed(&self, fleet: &Fleet, l: usize, slot: usize, bi: usize, t0: &Instant) {
         let ns = (t0.elapsed().as_nanos() as u64).max(1);
-        fleet.pub_ns[(l * self.window + slot) * self.n_buckets + bi].store(ns, Ordering::Relaxed);
-        let c = self.ready[slot * self.n_buckets + bi].fetch_add(1, Ordering::Release) + 1;
+        let nb = fleet.plan.num_buckets();
+        fleet.pub_ns[(l * self.window + slot) * nb + bi].store(ns, Ordering::Relaxed);
+        let c = self.ready[slot * self.bucket_stride + bi].fetch_add(1, Ordering::Release) + 1;
         if c == fleet.learners.len() {
             self.event.bump();
         }
@@ -542,9 +566,9 @@ impl Shared<'_> {
         jmult: &[f64],
     ) -> f64 {
         let mut r = 0.0f64;
+        let nb = fleet.plan.num_buckets();
         for (l, (&s, &jm)) in start.iter().zip(jmult.iter()).enumerate() {
-            let ns = fleet.pub_ns[(l * self.window + slot) * self.n_buckets + bi]
-                .load(Ordering::Relaxed);
+            let ns = fleet.pub_ns[(l * self.window + slot) * nb + bi].load(Ordering::Relaxed);
             r = r.max(s + ns as f64 * 1e-9 * jm);
         }
         r
@@ -638,6 +662,7 @@ impl<'a> Engine<'a> {
         let mode = ExchangeMode::parse(&cfg.exchange)?;
         validate_window(cfg.staleness, cfg.link.jitter)?;
         validate_kernel_threads(cfg.kernel_threads)?;
+        let controller_on = super::control::parse_mode(&cfg.controller)?;
         super::churn::parse(&cfg.churn)?;
         let optimizer = optim::build(&cfg.optimizer, init_params.len(), cfg.momentum)
             .ok_or_else(|| {
@@ -652,17 +677,33 @@ impl<'a> Engine<'a> {
         // Core budget for intra-GEMM parallelism: set once for the starting
         // fleet, re-derived inside run_loop at every membership epoch.
         crate::tensor::parallel::set_kernel_threads(kernel_thread_budget(cfg, cfg.n_learners));
-        let window = cfg.staleness + 1;
+        // Allocated window: exactly K + 1 with the controller off (the
+        // classic ring — bit-identical to an engine without a controller),
+        // or the staleness cap's worth of headroom with it on, so the live
+        // K can widen mid-run without reallocating param history or cell
+        // rings. The window size itself never changes results — only the
+        // live K decides which θ version a step reads.
+        let window = if controller_on {
+            super::control::staleness_cap(cfg.staleness) + 1
+        } else {
+            cfg.staleness + 1
+        };
 
         // The run's reduce plan: bucket coalescing + port partition, built
-        // once from the layout (DESIGN.md §Topologies).
+        // from the layout (DESIGN.md §Topologies) — and rebuilt at
+        // membership epochs and controller re-tunes. The auto threshold is
+        // ports-aware so a sharded-PS fabric starts with enough buckets to
+        // feed every shard port.
         let threshold = if cfg.bucket_bytes == 0 {
-            ReducePlan::auto_threshold(&cfg.link)
+            ReducePlan::auto_threshold_for(&cfg.link, topo.ports())
         } else {
             cfg.bucket_bytes
         };
         let plan = ReducePlan::build(layout, threshold, topo.ports());
         let num_buckets = plan.num_buckets();
+        // `ready` row stride: one bucket per layer is the most any rebuilt
+        // plan can ever need (coalescing only merges layers).
+        let bucket_stride = layout.num_layers();
 
         let local = factory.build_local()?;
         let learners = (0..cfg.n_learners)
@@ -703,9 +744,9 @@ impl<'a> Engine<'a> {
             }),
             hist: (0..window).map(|_| RwLock::new(init_params.to_vec())).collect(),
             window,
-            staleness: cfg.staleness,
-            n_buckets: num_buckets,
-            ready: (0..window * num_buckets).map(|_| AtomicUsize::new(0)).collect(),
+            staleness: AtomicUsize::new(cfg.staleness),
+            bucket_stride,
+            ready: (0..window * bucket_stride).map(|_| AtomicUsize::new(0)).collect(),
             finished: (0..window).map(|_| AtomicUsize::new(0)).collect(),
             event: ReadyEvent::default(),
         };
@@ -793,6 +834,7 @@ fn exchange_one_bucket(
     comp_conv: &mut CompStat,
     comp_fc: &mut CompStat,
     comp_all: &mut CompStat,
+    sig: &mut super::control::EpochSignals,
 ) -> crate::comm::RoundCost {
     let bi = bucket.id;
     for (l, ring) in fleet.cells.iter().enumerate() {
@@ -804,6 +846,12 @@ fn exchange_one_bucket(
         let fbi = compress::wire::decode_bucket_frame_into(&cell.frame, wire_pool, &mut gather[l])
             .expect("engine-encoded bucket frame must decode");
         assert_eq!(fbi, bi, "bucket frame id mismatch");
+        // controller signal: each decoded packet's measured sub-message
+        // bytes onto its layer (deterministic — the serialized frame is
+        // bit-identical across thread counts and exchange modes)
+        for p in gather[l].iter() {
+            sig.note_packet(p.layer, p.wire_bytes);
+        }
     }
     let cost = topo.exchange_bucket_into(bucket, &*gather, layer_lens, sched, fabric, reduced);
     for g in gather.iter_mut() {
@@ -818,9 +866,12 @@ fn exchange_one_bucket(
 /// parked at the pool's open limit; the staleness window is drained).
 /// Returns the rebuilt topology plus the event's timeline entry (the
 /// caller fills in `drain_stall_s`), or `None` when the event had to be
-/// skipped. The bucket structure is churn-invariant (same layout, same
-/// threshold) — only the bucket→port mapping and the per-learner rings are
-/// rebuilt.
+/// skipped. With `rederive_auto` (auto `--bucket-bytes 0` and no
+/// controller owning the knob) the coalescing threshold is re-derived from
+/// the *post-event* topology's port count — a fleet that degraded from
+/// `ps:4` to `ps` coarsens its plan to match, and a re-grown one splits
+/// again; the threshold actually used is reported in the returned
+/// [`MembershipChange`] and becomes the caller's live value.
 #[allow(clippy::too_many_arguments)]
 fn apply_membership_event(
     cfg: &TrainConfig,
@@ -829,6 +880,7 @@ fn apply_membership_event(
     factory: &dyn ExecutorFactory,
     parallel: bool,
     threshold: usize,
+    rederive_auto: bool,
     epoch: usize,
     ev: churn::Event,
     optimizer: &mut dyn Optimizer,
@@ -960,14 +1012,18 @@ fn apply_membership_event(
         );
     }
     let topo = topology::build(&effective, new_n)?;
+    // An auto threshold tracks the *live* port count: a degraded topology
+    // (fewer shard ports) coarsens the plan back toward the single-port
+    // rule, a re-grown one refines it again. Fixed `--bucket-bytes` and
+    // controller-owned thresholds pass through unchanged.
+    let threshold = if rederive_auto {
+        ReducePlan::auto_threshold_for(&cfg.link, topo.ports())
+    } else {
+        threshold
+    };
     fleet.plan = ReducePlan::build(layout, threshold, topo.ports());
-    debug_assert_eq!(
-        fleet.plan.num_buckets(),
-        shared.n_buckets,
-        "bucket structure must be churn-invariant"
-    );
     let window = shared.window;
-    let nb = shared.n_buckets;
+    let nb = fleet.plan.num_buckets();
     fleet.cells = (0..new_n)
         .map(|_| cell_ring_for_plan(&fleet.plan, window))
         .collect();
@@ -994,6 +1050,8 @@ fn apply_membership_event(
             drain_stall_s: 0.0,
             lost_l1,
             handover_l1,
+            threshold_bytes: threshold,
+            n_buckets: nb,
         },
     )))
 }
@@ -1041,9 +1099,13 @@ fn run_loop(
     mut hook: Option<&mut EpochHook<'_>>,
 ) -> Result<(RunRecord, usize)> {
     let mut n = cfg.n_learners;
-    let nb = shared.n_buckets;
+    let stride = shared.bucket_stride;
     let w = shared.window;
-    let k = shared.staleness;
+    // The *live* staleness bound: starts at the configured K, re-tuned by
+    // the controller at epoch boundaries (always ≤ w − 1, the allocation
+    // bound — `control::staleness_cap` with the controller on, K itself
+    // with it off).
+    let mut k = cfg.staleness;
     let layer_lens = layout.layer_lens();
     let mut inv_learners = 1.0f32 / n as f32;
     let streamed = mode == ExchangeMode::Streamed;
@@ -1060,11 +1122,40 @@ fn run_loop(
     // (scripted --churn events merged with the precomputed --mtbf draws) so
     // the pool's open limits — and therefore the window-drain points — are
     // identical at every thread count and exchange mode.
-    let threshold = if cfg.bucket_bytes == 0 {
-        ReducePlan::auto_threshold(&cfg.link)
+    // The *live* coalescing threshold: seeded like run_full's (ports-aware
+    // auto rule when --bucket-bytes 0), then owned by the controller when
+    // it is on — controller-tuned values survive membership rebuilds.
+    let mut threshold = if cfg.bucket_bytes == 0 {
+        ReducePlan::auto_threshold_for(&cfg.link, topo.ports())
     } else {
         cfg.bucket_bytes
     };
+    // Adaptive control plane (--controller on): deterministic epoch-
+    // boundary re-tuning of K / threshold / per-layer L_T from the epoch's
+    // deterministic signals (see super::control). Signals are folded
+    // unconditionally (a handful of adds per step); decisions only happen
+    // with the controller on.
+    let controller_on = super::control::parse_mode(&cfg.controller)?;
+    let mut knobs = super::control::Knobs {
+        staleness: k,
+        bucket_bytes: threshold,
+        lts: if cfg.compression.kind.has_lt()
+            || cfg.compression.kind_conv.is_some_and(|kc| kc.has_lt())
+        {
+            layout.layers.iter().map(|l| cfg.compression.lt_for(l.kind).max(1)).collect()
+        } else {
+            Vec::new()
+        },
+    };
+    let ctrl = controller_on.then(|| {
+        super::control::Controller::new(
+            layout,
+            &knobs,
+            super::control::staleness_cap(cfg.staleness),
+            &cfg.link,
+        )
+    });
+    let mut sig = super::control::EpochSignals::new(layout.num_layers());
     let events: Vec<churn::Event> =
         churn::schedule(&cfg.churn, cfg.mtbf, cfg.seed, total_steps)?
             .into_iter()
@@ -1123,17 +1214,22 @@ fn run_loop(
     // idx/val buffers for decoding bucket frames on the exchange path —
     // grows to (learners x max bucket layers) pairs, then never allocates
     let mut wire_pool = compress::BufPool::default();
-    let mut done_flags = vec![false; nb];
+    // Sized to the stride bound so per-step resizes to the live plan's
+    // bucket count never allocate.
+    let mut done_flags = Vec::with_capacity(stride);
     let mut port_end = vec![0.0f64; topo.ports()];
     // Windowed-timeline state: per-learner availability/start times and
     // jitter draws for the step in flight, plus the ring of applied-update
-    // frontier times (apply_ring[s % (K+2)] = when update s landed; steps
-    // t−K−1..t are alive at once).
+    // frontier times (apply_ring[s % ring_cap] = when update s landed;
+    // steps t−K−1..t are alive at once, and ring_cap = w + 1 ≥ K + 2 at
+    // any live K the controller can set — with the controller off it is
+    // exactly the classic K + 2).
+    let ring_cap = w + 1;
     let mut avail = vec![0.0f64; n];
     let mut start = vec![0.0f64; n];
     let mut jmult = vec![1.0f64; n];
     let mut stalls = vec![0.0f64; n];
-    let mut apply_ring = vec![0.0f64; k + 2];
+    let mut apply_ring = vec![0.0f64; ring_cap];
     let mut t = 0usize; // global step index (continuous across epochs)
     let mut cur_slot = 0usize; // param-ring slot of the newest version
 
@@ -1166,7 +1262,7 @@ fn run_loop(
                 next_event += 1;
                 // drain accounting: every learner syncs to the frontier
                 let sync_s = avail.iter().fold(
-                    if t > 0 { apply_ring[(t - 1) % (k + 2)] } else { 0.0 },
+                    if t > 0 { apply_ring[(t - 1) % ring_cap] } else { 0.0 },
                     |a, &b| a.max(b),
                 );
                 let drain_stall: f64 = avail.iter().map(|&a| sync_s - a).sum();
@@ -1177,12 +1273,16 @@ fn run_loop(
                     factory,
                     pool.is_some(),
                     threshold,
+                    // an auto threshold is re-derived for the post-event
+                    // topology unless the controller owns the knob
+                    cfg.bucket_bytes == 0 && !controller_on,
                     epoch,
                     ev,
                     optimizer.as_mut(),
                 )? {
                     topo = new_topo;
                     n = change.n_after;
+                    threshold = change.threshold_bytes;
                     inv_learners = 1.0f32 / n as f32;
                     // Re-derive the intra-GEMM core budget for the new fleet
                     // size: helpers freed by a shrink (or claimed by a
@@ -1208,6 +1308,14 @@ fn run_loop(
                     jmult.resize(n, 1.0);
                     stalls.resize(n, 0.0);
                     fabric.record_membership(change);
+                    // joiners were built from the *config's* compression —
+                    // re-push the controller's live per-layer L_T so the
+                    // whole fleet packs with one operating point (workers
+                    // are still parked; the pool reopens below)
+                    if controller_on && !knobs.lts.is_empty() {
+                        let fleet = shared.fleet.read().unwrap();
+                        push_lts(&fleet, &knobs.lts);
+                    }
                 }
                 if let Some(ctl) = pool {
                     ctl.open(open_limit(next_event, epoch_limit));
@@ -1216,6 +1324,9 @@ fn run_loop(
 
             let slot = t % w;
             let fleet = shared.fleet.read().unwrap();
+            // live bucket count: controller re-tunes (and auto-threshold
+            // re-derivations at membership epochs) may have rebuilt the plan
+            let nb = fleet.plan.num_buckets();
 
             // Sequential fallback: drive every learner through the shared
             // local executor for this step (same per-learner order of
@@ -1227,14 +1338,16 @@ fn run_loop(
             }
 
             // --- step entry: jitter draws + window-stall accounting ------
-            let frontier = if t > k { apply_ring[(t - k - 1) % (k + 2)] } else { 0.0 };
+            let frontier = if t > k { apply_ring[(t - k - 1) % ring_cap] } else { 0.0 };
             for l in 0..n {
                 jmult[l] = cfg.link.compute_mult(cfg.seed, l, t as u64);
                 let s = avail[l].max(frontier);
                 stalls[l] = s - avail[l];
                 start[l] = s;
             }
-            done_flags.iter_mut().for_each(|d| *d = false);
+            sig.note_step(&jmult[..n]);
+            done_flags.clear();
+            done_flags.resize(nb, false);
             let mut comm_serial = 0.0f64;
             let mut step_comm_end = 0.0f64;
 
@@ -1256,7 +1369,7 @@ fn run_loop(
                     let mut progressed = false;
                     for (bi, bucket) in fleet.plan.buckets.iter().enumerate() {
                         if done_flags[bi]
-                            || shared.ready[slot * nb + bi].load(Ordering::Acquire) != n
+                            || shared.ready[slot * stride + bi].load(Ordering::Acquire) != n
                         {
                             continue;
                         }
@@ -1279,6 +1392,7 @@ fn run_loop(
                             &mut comp_conv,
                             &mut comp_fc,
                             &mut comp_all,
+                            &mut sig,
                         );
                         comm_serial += cost.comm_s;
                         // rounds on one port serialize; disjoint ports
@@ -1353,6 +1467,7 @@ fn run_loop(
                             &mut comp_conv,
                             &mut comp_fc,
                             &mut comp_all,
+                            &mut sig,
                         );
                         comm_serial += cost.comm_s;
                         cursor = cost.end_s;
@@ -1394,9 +1509,9 @@ fn run_loop(
                 }
             }
             if !record.diverged || streamed {
-                let prev_apply = if t > 0 { apply_ring[(t - 1) % (k + 2)] } else { 0.0 };
+                let prev_apply = if t > 0 { apply_ring[(t - 1) % ring_cap] } else { 0.0 };
                 let apply_t = prev_apply.max(step_comm_end).max(crit_end);
-                apply_ring[t % (k + 2)] = apply_t;
+                apply_ring[t % ring_cap] = apply_t;
                 fabric.record_step(compute_span, comm_serial, apply_t - prev_apply, dense_round_s);
                 fabric.record_stall(&stalls, crit);
             }
@@ -1471,7 +1586,7 @@ fn run_loop(
             // publish the applied update (the PoolCtl mutex orders the
             // resets before any worker can re-enter the slot)
             for b in 0..nb {
-                shared.ready[slot * nb + b].store(0, Ordering::Relaxed);
+                shared.ready[slot * stride + b].store(0, Ordering::Relaxed);
             }
             shared.finished[slot].store(0, Ordering::Relaxed);
             t += 1;
@@ -1495,10 +1610,81 @@ fn run_loop(
             layout, epoch, loss_sum, nloss, err, tloss, lr, comp_conv, comp_fc, comp_all, &l0,
             cfg, sw.secs(),
         ));
+        drop(l0);
+        drop(fleet);
+
+        // --- adaptive control plane: epoch-boundary re-tune --------------
+        // The window is already drained to the frontier (workers park at
+        // the epoch limit), so this is the same safe apply point a
+        // membership epoch uses: swap K in the pool gate, rebuild the
+        // plan/cell rings under the fleet write lock, push L_T into the
+        // parked learners' compressors. The re-tune charges nothing to the
+        // simulated timeline — it models a control decision piggybacked on
+        // the epoch-boundary synchronization that already exists.
+        if let Some(ctrl) = &ctrl {
+            {
+                let fleet = shared.fleet.read().unwrap();
+                sig.n_buckets = fleet.plan.num_buckets();
+            }
+            sig.ports = topo.ports();
+            let decisions = ctrl.retune(epoch, &sig, &mut knobs);
+            let (mut replan, mut relts) = (false, false);
+            for d in decisions {
+                match d.knob.as_str() {
+                    "staleness" => {
+                        k = knobs.staleness;
+                        shared.staleness.store(k, Ordering::Relaxed);
+                        if let Some(ctl) = pool {
+                            ctl.set_staleness(k);
+                        }
+                    }
+                    "bucket_bytes" => replan = true,
+                    _ => relts = true, // "lt:<layer>"
+                }
+                fabric.record_decision(d);
+            }
+            if replan || relts {
+                threshold = knobs.bucket_bytes;
+                let mut fleet = shared.fleet.write().unwrap();
+                if replan {
+                    fleet.plan = ReducePlan::build(layout, threshold, topo.ports());
+                    let new_nb = fleet.plan.num_buckets();
+                    let nn = fleet.learners.len();
+                    fleet.cells =
+                        (0..nn).map(|_| cell_ring_for_plan(&fleet.plan, w)).collect();
+                    fleet.pub_ns =
+                        (0..nn * w * new_nb).map(|_| AtomicU64::new(0)).collect();
+                    for r in &shared.ready {
+                        r.store(0, Ordering::Relaxed);
+                    }
+                    dense_round_s = fleet.plan.dense_round_s(&layer_lens, n, &cfg.link);
+                    let cap = fleet.plan.max_bucket_layers();
+                    for g in gather.iter_mut() {
+                        g.reserve(cap);
+                    }
+                }
+                if relts {
+                    push_lts(&fleet, &knobs.lts);
+                }
+            }
+        }
+        sig.reset();
     }
 
     record.fabric = fabric.stats.clone();
     Ok((record, cur_slot))
+}
+
+/// Push the controller's live per-layer L_T table into every learner's
+/// compressor (drained boundary only: workers parked, learner mutexes
+/// free). No-op per layer for schemes without an L_T notion.
+fn push_lts(fleet: &Fleet, lts: &[usize]) {
+    for lm in &fleet.learners {
+        let mut l = lm.lock().unwrap();
+        for (li, &lt) in lts.iter().enumerate() {
+            l.compressor.set_layer_lt(li, lt);
+        }
+    }
 }
 
 #[allow(clippy::too_many_arguments)]

@@ -2,11 +2,13 @@
 
 pub mod checkpoint;
 pub mod churn;
+pub mod control;
 pub mod engine;
 pub mod eval;
 pub mod learner;
 pub mod pool;
 
+pub use control::{Controller, EpochSignals, Knobs};
 pub use engine::{
     kernel_thread_budget, validate_kernel_threads, validate_window, Engine, ExchangeMode,
     TrainConfig, MAX_STALENESS,

@@ -39,6 +39,11 @@ struct CtlState {
     applied: u64,
     /// One past the last step workers may start (the epoch frontier).
     limit: u64,
+    /// The live window bound K: a worker may start step `s` once `s − K`
+    /// updates are applied (step `s` reads param version θ_{s−K}). The
+    /// adaptive controller may re-tune it at drained epoch boundaries via
+    /// [`PoolCtl::set_staleness`].
+    staleness: u64,
     shutdown: bool,
     /// First worker error of the run (formatted — the engine re-wraps it;
     /// `anyhow::Error` is not `Clone`).
@@ -47,9 +52,6 @@ struct CtlState {
 
 /// Staleness-window gate between the engine and its pool workers.
 pub struct PoolCtl {
-    /// The window bound K: a worker may start step `s` once `s − K`
-    /// updates are applied (step `s` reads param version θ_{s−K}).
-    staleness: u64,
     state: Mutex<CtlState>,
     go: Condvar,
     /// Lock-free mirror of `failed.is_some()`. The engine polls
@@ -64,10 +66,10 @@ pub struct PoolCtl {
 impl PoolCtl {
     pub fn new(staleness: usize) -> PoolCtl {
         PoolCtl {
-            staleness: staleness as u64,
             state: Mutex::new(CtlState {
                 applied: 0,
                 limit: 0,
+                staleness: staleness as u64,
                 shutdown: false,
                 failed: None,
             }),
@@ -85,7 +87,7 @@ impl PoolCtl {
             if st.shutdown || st.failed.is_some() {
                 return false;
             }
-            if s < st.limit && s <= st.applied + self.staleness {
+            if s < st.limit && s <= st.applied + st.staleness {
                 return true;
             }
             st = self.go.wait(st).unwrap();
@@ -105,6 +107,16 @@ impl PoolCtl {
     pub fn applied(&self, applied: u64) {
         let mut st = self.state.lock().unwrap();
         st.applied = applied;
+        self.go.notify_all();
+    }
+
+    /// Engine: re-tune the live window bound K (adaptive controller, at a
+    /// drained epoch boundary — every worker is parked at the epoch
+    /// frontier, so no in-flight step observes the old bound). Widening
+    /// wakes workers whose next step just entered the window.
+    pub fn set_staleness(&self, staleness: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.staleness = staleness as u64;
         self.go.notify_all();
     }
 
@@ -212,6 +224,41 @@ mod tests {
                 assert_eq!(started.load(Ordering::SeqCst), t);
                 ctl.applied(t);
             }
+            ctl.shutdown();
+        });
+    }
+
+    #[test]
+    fn set_staleness_retunes_the_live_window() {
+        // start synchronous (K = 0), widen to K = 2 mid-run: parked
+        // workers wake into the wider window; narrowing re-gates.
+        let ctl = PoolCtl::new(0);
+        let started = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            let (c, started) = (&ctl, &started);
+            scope.spawn(move || {
+                let mut s = 0u64;
+                while c.wait_runnable(s) {
+                    started.store(s + 1, Ordering::SeqCst);
+                    s += 1;
+                }
+            });
+            ctl.open(10);
+            // K = 0: only step 0 may start
+            assert!(eventually(|| started.load(Ordering::SeqCst) == 1));
+            std::thread::sleep(Duration::from_millis(5));
+            assert_eq!(started.load(Ordering::SeqCst), 1);
+            // widen: steps 1 and 2 enter the window without a new update
+            ctl.set_staleness(2);
+            assert!(eventually(|| started.load(Ordering::SeqCst) == 3));
+            std::thread::sleep(Duration::from_millis(5));
+            assert_eq!(started.load(Ordering::SeqCst), 3);
+            // narrow back: the next update releases exactly one step again
+            ctl.set_staleness(1);
+            ctl.applied(2);
+            assert!(eventually(|| started.load(Ordering::SeqCst) == 4));
+            std::thread::sleep(Duration::from_millis(5));
+            assert_eq!(started.load(Ordering::SeqCst), 4);
             ctl.shutdown();
         });
     }

@@ -1058,3 +1058,146 @@ fn native_cnn_engine_with_adacomp() {
     assert!(last.comp_conv.elements > 0);
     assert!(last.comp_conv.rate_paper() > 10.0);
 }
+
+/// Adaptive-control-plane runs: the staleness/jitter matrix plus the
+/// controller mode, short epochs so multiple retune boundaries land.
+fn train_ctrl(
+    threads: usize,
+    exchange: &str,
+    controller: &str,
+    staleness: usize,
+    jitter: f64,
+    epochs: usize,
+) -> adacomp::metrics::RunRecord {
+    let ds = GaussianMixture::new(3, 16, 4, 800, 200, 0.6);
+    let exe = NativeMlp::new(&[16, 32, 4], 50);
+    let params = exe.init_params(11);
+    let layout = exe.layout().clone();
+    let mut cfg = base_cfg(Kind::AdaComp, 4);
+    cfg.epochs = epochs;
+    cfg.steps_per_epoch = 12;
+    cfg.threads = threads;
+    cfg.exchange = exchange.into();
+    cfg.staleness = staleness;
+    cfg.link.jitter = jitter;
+    cfg.controller = controller.into();
+    let mut engine = Engine::new(&exe, &ds, &layout);
+    engine.run(&cfg, &params).expect("run")
+}
+
+#[test]
+fn controller_deterministic_across_threads_and_modes() {
+    // ISSUE 10 acceptance: with the controller on, the same seed + jitter
+    // gives a bit-identical knob trajectory AND final params across
+    // {1, 4} threads x {streamed, barrier} — the controller consumes only
+    // deterministic projections (seeded jitter draws, serialized wire
+    // bytes, plan shape), never wall-clock.
+    let reference = train_ctrl(1, "streamed", "on", 2, 0.3, 3);
+    assert!(!reference.diverged);
+    assert!(
+        !reference.fabric.control.is_empty(),
+        "jitter 0.3 over a multi-bucket compressed run must trigger retunes"
+    );
+    assert_eq!(
+        reference.fabric.control_retunes as usize,
+        reference.fabric.control.len()
+    );
+    for exchange in ["streamed", "barrier"] {
+        for threads in [1usize, 4] {
+            let r = train_ctrl(threads, exchange, "on", 2, 0.3, 3);
+            assert_epochs_bitwise(&reference, &r, &format!("controller {exchange}/t{threads}"));
+            assert_eq!(
+                reference.fabric.control, r.fabric.control,
+                "decision timeline must be identical ({exchange}/t{threads})"
+            );
+            assert_eq!(reference.fabric.bytes_up, r.fabric.bytes_up);
+            assert_eq!(reference.fabric.bytes_down, r.fabric.bytes_down);
+        }
+    }
+}
+
+#[test]
+fn controller_off_is_inert() {
+    // the default mode records nothing and matches the static engine
+    // (same knobs, same helper path) bit for bit
+    let off = train_ctrl(4, "streamed", "off", 2, 0.3, 2);
+    assert!(off.fabric.control.is_empty());
+    assert_eq!(off.fabric.control_retunes, 0);
+    let legacy = train_window(Kind::AdaComp, 4, "ring", "streamed", 2, 0.3);
+    assert_epochs_bitwise(&off, &legacy, "controller off vs static engine");
+    assert_eq!(off.fabric.bytes_up, legacy.fabric.bytes_up);
+}
+
+#[test]
+fn controller_on_without_signals_matches_off_bitwise() {
+    // every rule holds when there is nothing to react to: jitter 0 (no
+    // straggler pressure), K = 0 (nothing to narrow), a dense scheme (no
+    // L_T notion), and a single bucket on a single-port ring (no bucket
+    // move) — so `on` applies zero decisions and the trajectory is
+    // bit-identical to `off`
+    let run = |controller: &str| {
+        let ds = GaussianMixture::new(3, 16, 4, 800, 200, 0.6);
+        let exe = NativeMlp::new(&[16, 32, 4], 50);
+        let params = exe.init_params(11);
+        let layout = exe.layout().clone();
+        let mut cfg = base_cfg(Kind::None, 4);
+        cfg.epochs = 2;
+        cfg.steps_per_epoch = 12;
+        cfg.threads = 4;
+        cfg.bucket_bytes = 1_000_000; // whole model in one bucket
+        cfg.controller = controller.into();
+        let mut engine = Engine::new(&exe, &ds, &layout);
+        engine.run(&cfg, &params).expect("run")
+    };
+    let on = run("on");
+    let off = run("off");
+    assert!(on.fabric.control.is_empty(), "no signal may fire a rule");
+    assert_eq!(on.fabric.control_retunes, 0);
+    assert_epochs_bitwise(&on, &off, "controller on-without-signals vs off");
+    assert_eq!(on.fabric.bytes_up, off.fabric.bytes_up);
+}
+
+#[test]
+fn membership_epoch_rederives_auto_bucket_threshold() {
+    // ISSUE 10 satellite bugfix: with `--bucket-bytes 0` the coalescing
+    // threshold is α·β scaled by the topology's ports — so when a
+    // membership event degrades ps:4 (ports 4) to ps:2 (ports 2), the
+    // rebuilt plan must use the threshold re-derived for the NEW port
+    // count, not the stale pre-churn value.
+    use adacomp::comm::ReducePlan;
+    let link = LinkModel {
+        latency_s: 4.12e-6,
+        bandwidth_bps: 1e9, // α·β = 4120 dense wire bytes
+        ..Default::default()
+    };
+    let ds = GaussianMixture::new(3, 16, 4, 800, 200, 0.6);
+    let exe = NativeMlp::new(&[16, 32, 4], 50);
+    let params = exe.init_params(11);
+    let layout = exe.layout().clone();
+    let mut cfg = base_cfg(Kind::AdaComp, 4);
+    cfg.epochs = 2;
+    cfg.steps_per_epoch = 12;
+    cfg.threads = 4;
+    cfg.topology = "ps:4".into();
+    cfg.bucket_bytes = 0; // auto threshold
+    cfg.link = link.clone();
+    cfg.churn = "fail@12:2".into();
+    let mut engine = Engine::new(&exe, &ds, &layout);
+    let rec = engine.run(&cfg, &params).expect("run");
+    assert!(!rec.diverged);
+    assert_eq!(rec.fabric.membership.len(), 1);
+    let m = &rec.fabric.membership[0];
+    assert!(m.degraded, "ps:4 over 2 learners must degrade");
+    assert_eq!(m.topology, "ps:2");
+    // the recorded post-churn plan reflects the recomputed threshold …
+    let thr2 = ReducePlan::auto_threshold_for(&link, 2);
+    assert_eq!(m.threshold_bytes, thr2, "threshold must be re-derived for 2 ports");
+    assert_ne!(
+        thr2,
+        ReducePlan::auto_threshold_for(&link, 4),
+        "the pre- and post-churn auto thresholds must actually differ"
+    );
+    // … and the recorded bucket count is the plan built at that threshold
+    let expect = ReducePlan::build(&layout, thr2, 2).num_buckets();
+    assert_eq!(m.n_buckets, expect, "plan must be rebuilt at the new threshold");
+}
